@@ -1,0 +1,89 @@
+//! Domain example: 1-D density landscape — KDE vs SD-KDE vs truth.
+//!
+//! Renders the trimodal benchmark mixture as an ASCII landscape and shows
+//! how the score-debiased estimator sharpens the modes that vanilla KDE
+//! (Silverman bandwidth) oversmooths — the statistical story behind the
+//! paper's Figs. 2/3, visible with the naked eye.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example density_landscape
+//! ```
+
+use flash_sdkde::config::Config;
+use flash_sdkde::coordinator::Coordinator;
+use flash_sdkde::data::mixture::mix1d;
+use flash_sdkde::estimator::EstimatorKind;
+use flash_sdkde::util::rng::Pcg64;
+
+const COLS: usize = 72;
+const LO: f32 = -5.0;
+const HI: f32 = 9.0;
+
+fn sparkline(values: &[f64], peak: f64) -> String {
+    const LEVELS: &[char] = &[' ', '.', ':', '-', '=', '+', '*', '#', '%', '@'];
+    values
+        .iter()
+        .map(|&v| {
+            let t = (v / peak).clamp(0.0, 1.0);
+            LEVELS[(t * (LEVELS.len() - 1) as f64).round() as usize]
+        })
+        .collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = Config::default();
+    cfg.artifacts_dir = std::env::var("FLASH_SDKDE_ARTIFACTS")
+        .unwrap_or_else(|_| "artifacts".to_string())
+        .into();
+    let coordinator = Coordinator::start(cfg)?;
+
+    let mix = mix1d();
+    let mut rng = Pcg64::seeded(5);
+    let n = 900;
+    let train = mix.sample(n, &mut rng);
+
+    // Fit both estimators on identical data with the *same* bandwidth
+    // (Silverman), so the visible difference is purely the score debiasing.
+    // (The SD-rate rule h ~ n^{-1/(d+8)} pays off asymptotically, but at
+    // n=900 on a sharply trimodal density the leading-order correction
+    // can't recover from that much smoothing — see EXPERIMENTS.md.)
+    let info = coordinator.fit("kde", EstimatorKind::Kde, 1, train.clone(), None, None, None)?;
+    coordinator.fit("sdkde", EstimatorKind::SdKde, 1, train, Some(info.h), None, None)?;
+
+    // Evaluate on a grid.
+    let grid: Vec<f32> = (0..COLS)
+        .map(|i| LO + (HI - LO) * i as f32 / (COLS - 1) as f32)
+        .collect();
+    let kde = coordinator.eval("kde", grid.clone())?;
+    let sdkde = coordinator.eval("sdkde", grid.clone())?;
+    let truth: Vec<f64> = grid.iter().map(|&x| mix.pdf1(&[x])).collect();
+
+    let kde_v: Vec<f64> = kde.densities.iter().map(|&v| v as f64).collect();
+    let sd_v: Vec<f64> = sdkde.densities.iter().map(|&v| v as f64).collect();
+    let peak = truth
+        .iter()
+        .chain(&kde_v)
+        .chain(&sd_v)
+        .fold(0.0f64, |a, &b| a.max(b));
+
+    println!("x in [{LO}, {HI}], n_train = {n}\n");
+    println!("truth  |{}|", sparkline(&truth, peak));
+    println!("kde    |{}|", sparkline(&kde_v, peak));
+    println!("sd-kde |{}|", sparkline(&sd_v, peak));
+
+    // Quantify: SD-KDE must be closer to the truth in MSE on the grid.
+    let mse = |est: &[f64]| -> f64 {
+        est.iter()
+            .zip(&truth)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            / truth.len() as f64
+    };
+    let mse_kde = mse(&kde_v);
+    let mse_sd = mse(&sd_v);
+    println!("\ngrid MSE: kde={mse_kde:.3e}  sd-kde={mse_sd:.3e}  (improvement {:.2}x)",
+        mse_kde / mse_sd);
+    anyhow::ensure!(mse_sd < mse_kde, "SD-KDE should beat KDE here");
+    println!("density_landscape OK");
+    Ok(())
+}

@@ -1,0 +1,77 @@
+//! Quickstart: fit an SD-KDE model in-process and query densities.
+//!
+//! ```bash
+//! make artifacts            # once
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Walks the full public API surface: config -> coordinator -> fit -> eval,
+//! then cross-checks the served densities against the native Rust oracle.
+
+use flash_sdkde::config::Config;
+use flash_sdkde::coordinator::Coordinator;
+use flash_sdkde::data::mixture::by_dim;
+use flash_sdkde::estimator::{native, EstimatorKind};
+use flash_sdkde::util::rng::Pcg64;
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = Config::default();
+    cfg.artifacts_dir = std::env::var("FLASH_SDKDE_ARTIFACTS")
+        .unwrap_or_else(|_| "artifacts".to_string())
+        .into();
+
+    println!("booting coordinator (artifacts: {})...", cfg.artifacts_dir.display());
+    let coordinator = Coordinator::start(cfg)?;
+
+    // 1. Draw training data from the 16-D benchmark mixture.
+    let d = 16;
+    let mix = by_dim(d);
+    let mut rng = Pcg64::seeded(7);
+    let n = 1000;
+    let train = mix.sample(n, &mut rng);
+
+    // 2. Fit: SD-KDE debiases the samples with the empirical score
+    //    (the paper's expensive pass, served by the flash fit artifact).
+    let info = coordinator.fit(
+        "quickstart",
+        EstimatorKind::SdKde,
+        d,
+        train.clone(),
+        None, // bandwidth: SD-KDE rate rule
+        None, // score bandwidth: h/sqrt(2)
+        None, // variant: config default (flash)
+    )?;
+    println!(
+        "fitted model {:?}: n={} bucket={} h={:.4} in {:.1}ms",
+        info.model, info.n, info.bucket_n, info.h, info.fit_ms
+    );
+
+    // 3. Evaluate densities at fresh query points.
+    let k = 16;
+    let queries = mix.sample(k, &mut rng);
+    let result = coordinator.eval("quickstart", queries.clone())?;
+    println!("\n  density      true pdf");
+    let truth = mix.pdf(&queries);
+    for (est, tru) in result.densities.iter().zip(&truth) {
+        println!("  {est:.6e}  {tru:.6e}");
+    }
+    println!(
+        "\nserved in {:.2}ms exec (+{:.2}ms queue), batch size {}",
+        result.exec_ms, result.queue_ms, result.batch_size
+    );
+
+    // 4. Cross-check against the native oracle (same formulas, f64).
+    let w = vec![1.0f32; n];
+    let h_s = info.h / std::f64::consts::SQRT_2;
+    let oracle = native::sdkde(&train, &w, &queries, d, info.h, h_s);
+    let max_rel = result
+        .densities
+        .iter()
+        .zip(&oracle)
+        .map(|(&a, &b)| ((a as f64 - b) / b).abs())
+        .fold(0.0f64, f64::max);
+    println!("max relative deviation vs native oracle: {max_rel:.2e}");
+    anyhow::ensure!(max_rel < 1e-3, "served densities diverge from oracle");
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,155 @@
+//! End-to-end serving driver (the DESIGN.md §7 E2E experiment).
+//!
+//! Boots the full stack — coordinator, dispatcher, TCP server — fits an
+//! SD-KDE model over the 16-D benchmark mixture, then drives an open-loop
+//! Poisson workload from concurrent TCP clients and reports throughput,
+//! latency percentiles, batching behaviour and numerical correctness
+//! against the native oracle.  Results are recorded in EXPERIMENTS.md §E2E.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve_queries
+//! ```
+
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use flash_sdkde::config::Config;
+use flash_sdkde::coordinator::server::{Client, Server};
+use flash_sdkde::coordinator::Coordinator;
+use flash_sdkde::data::mixture::by_dim;
+use flash_sdkde::data::workload::{generate, TraceSpec};
+use flash_sdkde::estimator::{native, EstimatorKind};
+use flash_sdkde::util::rng::Pcg64;
+use flash_sdkde::util::stats::Summary;
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = Config::default();
+    cfg.artifacts_dir = std::env::var("FLASH_SDKDE_ARTIFACTS")
+        .unwrap_or_else(|_| "artifacts".to_string())
+        .into();
+    cfg.batch_wait_ms = 2;
+    cfg.port = 0; // ephemeral
+
+    // --- boot ---------------------------------------------------------
+    let coordinator = Coordinator::start(cfg.clone())?;
+    let mut server = Server::start(coordinator, &cfg.host, 0)?;
+    let addr = server.local_addr();
+    println!("server on {addr}");
+
+    // --- fit over TCP ---------------------------------------------------
+    let d = 16;
+    let n_train = 2000;
+    let mix = by_dim(d);
+    let mut rng = Pcg64::seeded(2026);
+    let train = mix.sample(n_train, &mut rng);
+
+    let mut admin = Client::connect(addr)?;
+    admin.ping()?;
+    let t0 = Instant::now();
+    let info = admin.fit(
+        "serving-demo",
+        EstimatorKind::SdKde,
+        d,
+        train.clone(),
+        None,
+        None,
+        None,
+    )?;
+    println!(
+        "fit: n={} bucket={} h={:.4} ({:.0}ms over TCP, {:.0}ms total)",
+        info.n,
+        info.bucket_n,
+        info.h,
+        info.fit_ms,
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+
+    // --- workload -------------------------------------------------------
+    let clients = 4;
+    let spec = TraceSpec {
+        requests: 200,
+        min_k: 1,
+        max_k: 24,
+        rate: Some(400.0), // aggregate target: clients share the trace
+    };
+    let trace = Arc::new(generate(&mix, &spec, &mut rng));
+    println!(
+        "driving {} requests ({} clients, Poisson {} req/s, k in [{}, {}])",
+        spec.requests, clients, spec.rate.unwrap(), spec.min_k, spec.max_k
+    );
+
+    let latencies: Arc<Mutex<Vec<f64>>> = Arc::new(Mutex::new(Vec::new()));
+    let batch_sizes: Arc<Mutex<Vec<f64>>> = Arc::new(Mutex::new(Vec::new()));
+    let errors: Arc<Mutex<Vec<f64>>> = Arc::new(Mutex::new(Vec::new()));
+
+    // Precompute the debiased training set once so the per-request oracle
+    // check is a cheap O(n) KDE sweep, not an O(n^2) score pass.
+    let w_all = vec![1.0f32; n_train];
+    let h_s = info.h / std::f64::consts::SQRT_2;
+    let x_sd = Arc::new(native::debias(&train, &w_all, d, info.h, h_s));
+
+    // Each client handles trace indices i ≡ c (mod clients), honouring
+    // the shared arrival clock (open loop).
+    let wall_start = Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            let trace = Arc::clone(&trace);
+            let latencies = Arc::clone(&latencies);
+            let batch_sizes = Arc::clone(&batch_sizes);
+            let errors = Arc::clone(&errors);
+            let x_sd = Arc::clone(&x_sd);
+            let h = info.h;
+            std::thread::spawn(move || -> anyhow::Result<()> {
+                let mut client = Client::connect(addr)?;
+                let w = vec![1.0f32; x_sd.len() / 16];
+                for req in trace.iter().skip(c).step_by(clients) {
+                    // Open-loop pacing against the shared clock.
+                    let target = Duration::from_secs_f64(req.arrival_s);
+                    if let Some(sleep) = target.checked_sub(wall_start.elapsed()) {
+                        std::thread::sleep(sleep);
+                    }
+                    let sent = Instant::now();
+                    let res = client.eval("serving-demo", 16, req.points.clone())?;
+                    latencies
+                        .lock()
+                        .expect("mutex")
+                        .push(sent.elapsed().as_secs_f64() * 1e3);
+                    batch_sizes.lock().expect("mutex").push(res.batch_size as f64);
+                    // Numerics spot-check on the first point of each reply:
+                    // KDE over the precomputed debiased set == SD-KDE.
+                    let oracle =
+                        native::kde(&x_sd, &w, &req.points[..16], 16, h)[0];
+                    let rel = ((res.densities[0] as f64 - oracle) / oracle).abs();
+                    errors.lock().expect("mutex").push(rel);
+                }
+                Ok(())
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("client thread")?;
+    }
+    let wall = wall_start.elapsed().as_secs_f64();
+
+    // --- report ----------------------------------------------------------
+    let lat = Summary::of(&latencies.lock().expect("mutex"));
+    let bs = Summary::of(&batch_sizes.lock().expect("mutex"));
+    let err = Summary::of(&errors.lock().expect("mutex"));
+    let served = lat.count;
+    println!("\n=== serving report ===");
+    println!("requests served : {served} in {wall:.2}s  ({:.1} req/s)", served as f64 / wall);
+    println!(
+        "latency ms      : p50={:.2} p95={:.2} p99={:.2} max={:.2}",
+        lat.median, lat.p95, lat.p99, lat.max
+    );
+    println!("mean batch size : {:.2} (max {:.0})", bs.mean, bs.max);
+    println!("max rel error   : {:.2e} vs native oracle", err.max);
+    let stats = admin.stats()?;
+    println!("server stats    : {}", flash_sdkde::util::json::to_string(&stats));
+
+    anyhow::ensure!(err.max < 1e-3, "serving numerics diverged");
+    anyhow::ensure!(served == spec.requests, "dropped requests");
+    server.shutdown();
+    println!("serve_queries OK");
+    Ok(())
+}

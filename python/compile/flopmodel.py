@@ -1,0 +1,111 @@
+"""Paper §4.1 + Appendix A FLOP / bytes / arithmetic-intensity models.
+
+Mirrored in Rust (``analysis::flops``) — python/tests cross-check the
+specific constants quoted in the paper (81.5 k^2 FLOPs and 1.13 k^2 bytes
+for d=16; 17.75 k^2 FLOPs for d=1) so both implementations stay pinned to
+the published model.
+
+Conventions follow the paper exactly:
+  * one exp costs 8 FLOP-equivalents (A6000 SFU:FP32 ratio 128:16),
+  * n_test = n_train / 8 unless stated,
+  * tile-byte model uses the paper's best launch (BLOCK_M=64, BLOCK_N=1024).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+EXP_FLOPS = 8.0  # SFU-costed exponential, paper §3
+
+# Paper's best launch parameters for the byte model (§4.1).
+PAPER_BLOCK_M = 64
+PAPER_BLOCK_N = 1024
+
+
+@dataclasses.dataclass(frozen=True)
+class FlopEstimate:
+    flops: float
+    bytes: float
+
+    @property
+    def intensity(self) -> float:
+        return self.flops / self.bytes
+
+
+def sdkde_flops_d(k: float, d: int, n_test: float | None = None) -> float:
+    """Total FLOPs for the d-dimensional SD-KDE pipeline (§4.1).
+
+    Stage 1: score Gram  G = X X^T            -> 2 d k^2
+    Stage 2: numerator   T = Phi X            -> 2 d k^2 + 4 k^2 + 8 k^2
+    Stage 3: final KDE on debiased data       -> 2 d k m + 4 k m + 8 k m
+    """
+    m = k / 8.0 if n_test is None else float(n_test)
+    gram = 2.0 * d * k * k
+    numer = 2.0 * d * k * k + 4.0 * k * k + EXP_FLOPS * k * k
+    final = 2.0 * d * k * m + 4.0 * k * m + EXP_FLOPS * k * m
+    return gram + numer + final
+
+
+def sdkde_bytes_d(
+    k: float,
+    d: int,
+    block_m: int = PAPER_BLOCK_M,
+    block_n: int = PAPER_BLOCK_N,
+) -> float:
+    """GDDR traffic of the tiled score pass, paper's tile-byte model (§4.1).
+
+    Per tile: load the [BM, d] output-row block once, stream the [BN, d]
+    train block, write the [BM]-pdf partial and the [BM, d] weighted sums:
+      4 (BM d + BN d + BM + BM d) bytes,
+    times (k / BM)(k / BN) tiles.
+    """
+    per_tile = 4.0 * (2.0 * block_m * d + block_n * d + block_m)
+    tiles = (k / block_m) * (k / block_n)
+    return per_tile * tiles
+
+
+def sdkde_estimate_d(k: float, d: int) -> FlopEstimate:
+    """Combined §4.1 estimate; for d=16 reproduces ~81.5 k^2 / ~1.13 k^2."""
+    return FlopEstimate(flops=sdkde_flops_d(k, d), bytes=sdkde_bytes_d(k, d))
+
+
+def machine_balance_flops_per_byte(
+    peak_tflops: float = 155.0, bandwidth_gbs: float = 770.0
+) -> float:
+    """A6000 Tensor-Core machine balance (~200 flops/byte, §4.1)."""
+    return peak_tflops * 1e12 / (bandwidth_gbs * 1e9)
+
+
+# ---------------------------------------------------------------------------
+# Appendix A: the 1-D model.
+# ---------------------------------------------------------------------------
+
+C1_SCORE_PAIR = 16.0  # one exp (8) + ~eight scalar ops per (train, train) pair
+C2_KDE_PAIR = 14.0    # one exp (8) + ~six scalar ops per (train, test) pair
+
+
+def sdkde_flops_1d(k: float, n_test: float | None = None) -> float:
+    """Appendix A total: ~16 k^2 + 14 k m  (=17.75 k^2 at m = k/8)."""
+    m = k / 8.0 if n_test is None else float(n_test)
+    return C1_SCORE_PAIR * k * k + C2_KDE_PAIR * k * m
+
+
+def sdkde_bytes_1d(k: float, n_test: float | None = None) -> float:
+    """Appendix A traffic: one read of train/test, one write of outputs.
+
+    At m=k/8 and 4-byte floats this is ~5k bytes: 4k (train) + 0.5k (test)
+    + 0.5k (out).
+    """
+    m = k / 8.0 if n_test is None else float(n_test)
+    return 4.0 * (k + m) + 4.0 * m
+
+
+def sdkde_estimate_1d(k: float) -> FlopEstimate:
+    return FlopEstimate(flops=sdkde_flops_1d(k), bytes=sdkde_bytes_1d(k))
+
+
+def utilization(flops: float, runtime_s: float, peak_flops: float) -> float:
+    """Fraction of peak sustained given the model FLOPs and a measured time."""
+    if runtime_s <= 0.0 or peak_flops <= 0.0:
+        raise ValueError("runtime and peak must be positive")
+    return flops / runtime_s / peak_flops

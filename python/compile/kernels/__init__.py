@@ -1,0 +1,27 @@
+"""Flash-SD-KDE L1 Pallas kernels (build-time only; never on request path).
+
+Exports the streaming tiled kernels (flash KDE, flash score, fused Laplace)
+and their pure-jnp oracles.  See DESIGN.md §2 for how the BlockSpec tiling
+maps the paper's Triton/Tensor-Core formulation onto the TPU model.
+"""
+
+from .common import TileConfig, DEFAULT_BLOCK_M, DEFAULT_BLOCK_N
+from .kde import kde, kde_raw, kde_with_tiles
+from .laplace import laplace_fused, laplace_nonfused
+from .score import debias, score, score_at, score_sums, score_sums_at
+
+__all__ = [
+    "TileConfig",
+    "DEFAULT_BLOCK_M",
+    "DEFAULT_BLOCK_N",
+    "kde",
+    "kde_raw",
+    "kde_with_tiles",
+    "laplace_fused",
+    "laplace_nonfused",
+    "debias",
+    "score",
+    "score_at",
+    "score_sums",
+    "score_sums_at",
+]

@@ -1,0 +1,162 @@
+"""Shared tiling/padding utilities for the Flash-SD-KDE Pallas kernels.
+
+The paper (§4, §6.2) tiles every pairwise interaction into BLOCK_M x BLOCK_N
+tiles streamed through the matrix unit with streaming accumulation, so the
+full n_train x n_train / n_train x n_test interaction matrices are never
+materialized.  These helpers centralize the tile-size policy, the grid
+construction, and the scalar-operand plumbing shared by the KDE, score and
+Laplace kernels.
+
+All kernels run under ``interpret=True``: real-TPU lowering emits Mosaic
+custom-calls the CPU PJRT plugin cannot execute.  The BlockSpec structure is
+still the real deliverable — it is the TPU analogue of the paper's Triton
+launch parameters (see DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax.numpy as jnp
+
+# Default tile sizes.  The paper's best configuration on the A6000 was
+# BLOCK_M=64, BLOCK_N=1024 (§6.2); on the MXU the natural tiles are
+# multiples of (8, 128) for f32.  The perf pass re-tuned these from the
+# §6.2 BlockSpec sweep (EXPERIMENTS.md §Perf): (256, 512) minimizes grid
+# steps (the dominant interpret/CPU overhead and, on a real TPU, the
+# per-step DMA issue cost) while staying ~67 KiB of VMEM — far below the
+# ~16 MiB/core budget.  Small problems clamp to power-of-two tiles.
+DEFAULT_BLOCK_M = 256
+DEFAULT_BLOCK_N = 512
+
+# Dimensions we officially support (paper focuses on d=16; d=1 appendix).
+SUPPORTED_DIMS = (1, 2, 4, 8, 16, 32)
+
+
+@dataclasses.dataclass(frozen=True)
+class TileConfig:
+    """Tile configuration for a pairwise kernel.
+
+    ``block_m`` tiles the *output* rows (queries for KDE, train points for
+    the score), ``block_n`` tiles the reduction dimension (train points).
+    The paper sweeps BLOCK_M in {32..256} and BLOCK_N in {32..1024}; the
+    ablation bench sweeps the same space here.
+    """
+
+    block_m: int = DEFAULT_BLOCK_M
+    block_n: int = DEFAULT_BLOCK_N
+
+    def __post_init__(self):
+        if self.block_m <= 0 or self.block_n <= 0:
+            raise ValueError(f"tile sizes must be positive, got {self}")
+
+    def clamp(self, m: int, n: int) -> "TileConfig":
+        """Shrink tiles to the problem size so tiny problems still lower.
+
+        Clamped sizes are floored to powers of two so that any two tile
+        extents divide a common power-of-two padding target (score kernels
+        pad one array for both the output-row and reduction-row roles).
+        """
+        return TileConfig(
+            block_m=_pow2_floor(min(self.block_m, m)),
+            block_n=_pow2_floor(min(self.block_n, n)),
+        )
+
+    def grid(self, m: int, n: int) -> tuple[int, int]:
+        """Grid dimensions (output tiles, reduction tiles).
+
+        Both extents must divide exactly; callers pad first (pad_rows).
+        """
+        if m % self.block_m != 0:
+            raise ValueError(f"m={m} not divisible by block_m={self.block_m}")
+        if n % self.block_n != 0:
+            raise ValueError(f"n={n} not divisible by block_n={self.block_n}")
+        return (m // self.block_m, n // self.block_n)
+
+    def vmem_bytes(self, d: int) -> int:
+        """Estimated VMEM working set per grid step, bytes (f32).
+
+        Mirrors the paper's tile-byte model (§4.1): one query block
+        [BM, d], one streamed train block [BN, d] (+ weights [BN]), and the
+        accumulator [BM, d+1].  Used by the analysis layer to bound block
+        sizes against the ~16 MiB/core VMEM budget.
+        """
+        return 4 * (
+            self.block_m * d          # output-row block
+            + self.block_n * d        # streamed train block
+            + self.block_n            # train weights
+            + self.block_m * (d + 1)  # accumulator (numer + denom / pdf)
+        )
+
+
+def _pow2_floor(x: int) -> int:
+    """Largest power of two <= x (x >= 1)."""
+    if x < 1:
+        raise ValueError(f"tile extent must be >= 1, got {x}")
+    return 1 << (x.bit_length() - 1)
+
+
+def round_up(x: int, multiple: int) -> int:
+    """Smallest multiple of ``multiple`` that is >= x."""
+    if multiple <= 0:
+        raise ValueError(f"multiple must be positive, got {multiple}")
+    return ((x + multiple - 1) // multiple) * multiple
+
+
+def pad_rows(arr, target_rows: int, value: float = 0.0):
+    """Pad a [n, ...] array with constant rows up to target_rows."""
+    n = arr.shape[0]
+    if n > target_rows:
+        raise ValueError(f"cannot pad {n} rows down to {target_rows}")
+    if n == target_rows:
+        return arr
+    pad_width = [(0, target_rows - n)] + [(0, 0)] * (arr.ndim - 1)
+    return jnp.pad(arr, pad_width, constant_values=value)
+
+
+def pick_tiles(
+    m: int, n: int, cfg: TileConfig | None = None, d: int | None = None
+) -> TileConfig:
+    """Resolve a tile config for an (m output rows, n reduction rows) problem.
+
+    Shrinks the default tiles for small problems and validates divisibility
+    after the caller pads with :func:`padded_sizes`.  When no explicit config
+    is given the default is dimension-aware (perf pass, EXPERIMENTS.md §Perf):
+    in 1-D the elementwise tile work dominates and a smaller output block
+    wins; in high-d the matmul amortizes a taller block.
+    """
+    if cfg is None:
+        cfg = TileConfig(128, 512) if d == 1 else TileConfig()
+    return cfg.clamp(m, n)
+
+
+def padded_sizes(m: int, n: int, cfg: TileConfig) -> tuple[int, int]:
+    """Row counts after padding so the grid divides exactly."""
+    return round_up(m, cfg.block_m), round_up(n, cfg.block_n)
+
+
+def gaussian_log_norm(d: int):
+    """log of the Gaussian normalizer (2*pi)^{d/2}; h^d handled separately."""
+    return 0.5 * d * math.log(2.0 * math.pi)
+
+
+def normalizer(h, d: int):
+    """1 / ((2*pi)^{d/2} h^d) as a traced jnp expression (h is a tracer)."""
+    return jnp.exp(-gaussian_log_norm(d)) / (h ** d)
+
+
+def validate_pairwise_args(x, w, y, *, d_axis: int = 1) -> None:
+    """Shape sanity checks shared by kernel wrappers (raises ValueError)."""
+    if x.ndim != 2:
+        raise ValueError(f"X must be [n, d], got shape {x.shape}")
+    if y.ndim != 2:
+        raise ValueError(f"Y must be [m, d], got shape {y.shape}")
+    if x.shape[d_axis] != y.shape[d_axis]:
+        raise ValueError(
+            f"dimension mismatch: X has d={x.shape[d_axis]}, Y has d={y.shape[d_axis]}"
+        )
+    if w.ndim != 1 or w.shape[0] != x.shape[0]:
+        raise ValueError(
+            f"weights must be [n={x.shape[0]}], got shape {w.shape}"
+        )

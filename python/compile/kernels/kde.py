@@ -1,0 +1,118 @@
+"""L1 flash KDE kernel: streaming, tiled, GEMM-formulated Gaussian KDE.
+
+This is the paper's final-stage kernel (§4, "G_KDE = X^SD Y^T"): the
+pairwise interaction between queries and (debiased) training points is
+computed tile-by-tile as
+
+    ||y_i - x_j||^2 = ||y_i||^2 + ||x_j||^2 - 2 <y_i, x_j>
+
+where the inner-product term is a [BM, d] x [d, BN] matmul that maps onto
+the matrix unit (Tensor Cores in the paper, the MXU here).  Each grid step
+loads one query block and one train block into VMEM, accumulates the
+weighted kernel-sum into the output block, and never materializes the full
+[m, n] matrix — the paper's "streaming accumulation".
+
+The kernel returns the *raw* weighted sum  sum_j w_j phi(y_i, x_j); the
+Gaussian normalization 1/(count h^d (2pi)^{d/2}) is a per-row scalar applied
+by the wrapper so it fuses into the XLA epilogue.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import (
+    TileConfig,
+    normalizer,
+    pad_rows,
+    padded_sizes,
+    pick_tiles,
+    validate_pairwise_args,
+)
+
+
+def _kde_kernel(y_ref, x_ref, w_ref, h_ref, o_ref):
+    """One [BM, BN] tile: o[i] += sum_j w_j exp(-||y_i - x_j||^2 / 2h^2)."""
+    j = pl.program_id(1)
+
+    y = y_ref[...]                                   # [BM, d]   query block
+    x = x_ref[...]                                   # [BN, d]   train block
+    w = w_ref[...]                                   # [BN]
+    h = h_ref[0, 0]
+
+    # GEMM-form squared distances (the Tensor-Core/MXU-mapped part).
+    y2 = jnp.sum(y * y, axis=1, keepdims=True)       # [BM, 1]
+    x2 = jnp.sum(x * x, axis=1, keepdims=True)       # [BN, 1]
+    cross = jax.lax.dot_general(
+        y, x,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                # [BM, BN]
+    d2 = jnp.maximum(y2 + x2.T - 2.0 * cross, 0.0)
+
+    phi = jnp.exp(-d2 / (2.0 * h * h)) * w[None, :]  # [BM, BN]
+    partial = jnp.sum(phi, axis=1)                   # [BM]
+
+    # Streaming accumulation across the reduction grid dimension.
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += partial
+
+
+def kde_raw(x, w, y, h, *, tiles: TileConfig | None = None):
+    """Unnormalized flash KDE sums, [m].
+
+    Args:
+      x: [n, d] train points (rows with w=0 are padding and must be finite).
+      w: [n] 0/1 validity weights.
+      y: [m, d] query points.
+      h: scalar bandwidth (traced — one artifact serves all bandwidths).
+      tiles: optional tile override (ablation bench sweeps this).
+    """
+    validate_pairwise_args(x, w, y)
+    m, n = y.shape[0], x.shape[0]
+    cfg = pick_tiles(m, n, tiles, d=x.shape[1])
+    mp, np_ = padded_sizes(m, n, cfg)
+
+    y_p = pad_rows(y, mp)
+    x_p = pad_rows(x, np_)
+    w_p = pad_rows(w, np_)                # padded train rows get weight 0
+    h_arr = jnp.asarray(h, jnp.float32).reshape(1, 1)
+
+    d = x.shape[1]
+    grid = cfg.grid(mp, np_)
+    out = pl.pallas_call(
+        _kde_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((cfg.block_m, d), lambda i, j: (i, 0)),   # Y
+            pl.BlockSpec((cfg.block_n, d), lambda i, j: (j, 0)),   # X
+            pl.BlockSpec((cfg.block_n,), lambda i, j: (j,)),       # w
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),             # h
+        ],
+        out_specs=pl.BlockSpec((cfg.block_m,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((mp,), jnp.float32),
+        interpret=True,
+    )(y_p, x_p, w_p, h_arr)
+    return out[:m]
+
+
+def kde(x, w, y, h, *, tiles: TileConfig | None = None):
+    """Normalized flash KDE density estimate at Y, [m]."""
+    validate_pairwise_args(x, w, y)
+    d = x.shape[1]
+    count = jnp.sum(w)
+    return kde_raw(x, w, y, h, tiles=tiles) * normalizer(h, d) / count
+
+
+# Convenience partial for sweeps: kde with a fixed tile configuration.
+def kde_with_tiles(block_m: int, block_n: int):
+    """Returns a kde() closure pinned to a (BLOCK_M, BLOCK_N) tiling."""
+    cfg = TileConfig(block_m=block_m, block_n=block_n)
+    return functools.partial(kde, tiles=cfg)

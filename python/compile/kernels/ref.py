@@ -1,0 +1,118 @@
+"""Pure-jnp oracles for every Flash-SD-KDE kernel.
+
+These are the correctness ground truth: simple, obviously-correct
+implementations that materialize the full pairwise interaction matrices.
+Every Pallas kernel and every fused pipeline is `assert_allclose`-checked
+against these in python/tests/, and the Rust native estimators mirror the
+same formulas (DESIGN.md §6).
+
+Conventions (shared across the whole stack):
+  X : [n, d]  training points         w : [n] 0/1 validity weights
+  Y : [m, d]  query points            h : evaluation bandwidth
+  h_s : score bandwidth (default h/sqrt(2), the heat-semigroup t' = t/2)
+  count = sum(w) is the effective sample size used for normalization.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+from .common import gaussian_log_norm
+
+
+def sq_dists(a, b):
+    """Pairwise squared Euclidean distances, [len(a), len(b)].
+
+    Uses the GEMM form ||a||^2 + ||b||^2 - 2 a.b^T (the paper's eq. in §4),
+    clamped at zero against fp cancellation.
+    """
+    a2 = jnp.sum(a * a, axis=1, keepdims=True)          # [na, 1]
+    b2 = jnp.sum(b * b, axis=1, keepdims=True).T        # [1, nb]
+    d2 = a2 + b2 - 2.0 * (a @ b.T)
+    return jnp.maximum(d2, 0.0)
+
+
+def gaussian_matrix(a, b, h):
+    """phi_ij = exp(-||a_i - b_j||^2 / (2 h^2)), [na, nb]."""
+    return jnp.exp(-sq_dists(a, b) / (2.0 * h * h))
+
+
+def kde_ref(x, w, y, h):
+    """Weighted Gaussian KDE of X evaluated at Y. Returns [m].
+
+    p(y) = 1/(count * h^d * (2pi)^{d/2}) * sum_i w_i phi(y, x_i)
+    """
+    d = x.shape[1]
+    count = jnp.sum(w)
+    phi = gaussian_matrix(y, x, h)                      # [m, n]
+    raw = phi @ w                                       # [m]
+    norm = jnp.exp(-gaussian_log_norm(d)) / (h ** d)
+    return raw * norm / count
+
+
+def score_ref(x, w, h_s):
+    """Empirical KDE score at each training point. Returns [n, d].
+
+    s(x_i) = (sum_j w_j phi_ij x_j - x_i sum_j w_j phi_ij)
+             / (h_s^2 sum_j w_j phi_ij)
+    which is the identity-decomposed form of
+    sum_j -(x_i - x_j) phi_ij / (h_s^2 sum_j phi_ij)   (paper §1, §4).
+    """
+    phi = gaussian_matrix(x, x, h_s) * w[None, :]       # [n, n]
+    denom = jnp.sum(phi, axis=1, keepdims=True)         # [n, 1]
+    numer = phi @ x                                     # [n, d]  (T = Phi X)
+    return (numer - x * denom) / (h_s * h_s * denom)
+
+
+def score_at_ref(x, w, y, h_s):
+    """Score of the weighted KDE of X evaluated at query rows Y, [m, d]."""
+    phi = gaussian_matrix(y, x, h_s) * w[None, :]       # [m, n]
+    denom = jnp.maximum(jnp.sum(phi, axis=1, keepdims=True), 1e-30)
+    numer = phi @ x                                     # [m, d]
+    return (numer - y * denom) / (h_s * h_s * denom)
+
+
+def debias_ref(x, w, h, h_s=None):
+    """Debiased samples X^SD = X + (h^2/2) * score(X). Returns [n, d]."""
+    if h_s is None:
+        h_s = h / math.sqrt(2.0)
+    return x + 0.5 * h * h * score_ref(x, w, h_s)
+
+
+def sdkde_ref(x, w, y, h, h_s=None):
+    """Full SD-KDE: debias X then evaluate a vanilla KDE at Y. Returns [m]."""
+    return kde_ref(debias_ref(x, w, h, h_s), w, y, h)
+
+
+def laplace_factor(d2, h, d):
+    """Laplace correction factor (1 + d/2 - ||u||^2 / (2 h^2))."""
+    return 1.0 + 0.5 * d - d2 / (2.0 * h * h)
+
+
+def laplace_ref(x, w, y, h):
+    """Laplace-corrected KDE (paper §5). Returns [m]; may be negative.
+
+    p_LC(y) = 1/(count h^d (2pi)^{d/2})
+              * sum_i w_i phi(y, x_i) (1 + d/2 - ||y - x_i||^2/(2h^2))
+    """
+    d = x.shape[1]
+    count = jnp.sum(w)
+    d2 = sq_dists(y, x)                                 # [m, n]
+    phi = jnp.exp(-d2 / (2.0 * h * h))
+    corrected = phi * laplace_factor(d2, h, d)
+    raw = corrected @ w
+    norm = jnp.exp(-gaussian_log_norm(d)) / (h ** d)
+    return raw * norm / count
+
+
+def negative_mass_ref(pdf_values, true_pdf_values):
+    """Importance-sampled integrated negative mass: E_p[max(0,-p_hat)/p].
+
+    Diagnostic for the signed Laplace estimator (paper §6.1): samples are
+    drawn from the true density p, so 1/p weights turn the mean into the
+    integral of the negative part.
+    """
+    neg = jnp.maximum(0.0, -pdf_values)
+    return jnp.mean(neg / true_pdf_values)

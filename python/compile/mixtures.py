@@ -1,0 +1,101 @@
+"""Gaussian-mixture benchmark densities (build-time twin of rust data::mixture).
+
+The paper evaluates on "a simple 16-D Gaussian mixture" (§6) and a 1-D
+mixture-of-Gaussians oracle benchmark (Fig. 3).  We fix two canonical
+mixtures, shared *by parameter value* with the Rust data layer so oracle
+densities agree across the stack:
+
+  * ``mix1d``  — trimodal 1-D mixture (well-separated + one broad mode).
+  * ``mix16d`` — 4-component 16-D mixture with isotropic components placed
+    on a simplex-like frame, spread wide enough that debiasing matters.
+
+Components are isotropic (covariance sigma^2 I) so the true pdf is cheap to
+evaluate in any dimension.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Mixture:
+    """Isotropic Gaussian mixture: weights[k], means[k, d], sigmas[k]."""
+
+    weights: tuple
+    means: tuple          # tuple of tuples, k x d
+    sigmas: tuple
+
+    @property
+    def d(self) -> int:
+        return len(self.means[0])
+
+    @property
+    def k(self) -> int:
+        return len(self.weights)
+
+    def sample(self, n: int, seed: int) -> np.ndarray:
+        """Draw n samples, [n, d] float32, deterministic in seed."""
+        rng = np.random.default_rng(seed)
+        comp = rng.choice(self.k, size=n, p=np.asarray(self.weights))
+        means = np.asarray(self.means)[comp]                     # [n, d]
+        sig = np.asarray(self.sigmas)[comp][:, None]             # [n, 1]
+        return (means + sig * rng.standard_normal((n, self.d))).astype(
+            np.float32
+        )
+
+    def pdf(self, x: np.ndarray) -> np.ndarray:
+        """True density at x ([m, d]), float64 for metric stability."""
+        x = np.asarray(x, np.float64)
+        out = np.zeros(x.shape[0])
+        for wk, mu, sig in zip(self.weights, self.means, self.sigmas):
+            diff = x - np.asarray(mu)
+            d2 = np.sum(diff * diff, axis=1)
+            norm = (2.0 * math.pi) ** (self.d / 2.0) * sig ** self.d
+            out += wk * np.exp(-d2 / (2.0 * sig * sig)) / norm
+        return out
+
+
+def mix1d() -> Mixture:
+    """Trimodal 1-D benchmark mixture (two sharp modes + one broad)."""
+    return Mixture(
+        weights=(0.45, 0.35, 0.20),
+        means=((-2.0,), (1.5,), (5.0,)),
+        sigmas=(0.6, 0.4, 1.2),
+    )
+
+
+def _frame_means(d: int, k: int, radius: float) -> tuple:
+    """k well-separated means on +/- coordinate axes of R^d."""
+    means = []
+    for i in range(k):
+        mu = [0.0] * d
+        mu[i % d] = radius if (i // d) % 2 == 0 else -radius
+        means.append(tuple(mu))
+    return tuple(means)
+
+
+def mix16d() -> Mixture:
+    """4-component 16-D benchmark mixture (paper's high-d setting)."""
+    return Mixture(
+        weights=(0.4, 0.3, 0.2, 0.1),
+        means=_frame_means(16, 4, 3.0),
+        sigmas=(1.0, 0.8, 1.2, 0.9),
+    )
+
+
+def by_dim(d: int) -> Mixture:
+    """Canonical benchmark mixture for dimension d."""
+    if d == 1:
+        return mix1d()
+    if d == 16:
+        return mix16d()
+    # Generic fallback used by shape-sweep tests: 2 components.
+    return Mixture(
+        weights=(0.6, 0.4),
+        means=(tuple([1.5] * d), tuple([-1.5] * d)),
+        sigmas=(1.0, 0.7),
+    )

@@ -1,0 +1,236 @@
+"""L2 JAX pipelines: the compute graphs the Rust coordinator executes.
+
+Each pipeline is a pure jax function over traced arrays; ``aot.py`` lowers
+one HLO artifact per (pipeline, variant, d, shape-bucket).  Bandwidths and
+weights are runtime inputs, so a single artifact serves any bandwidth and
+any actual sample count <= the bucket (padding rows carry w=0).
+
+Variants (DESIGN.md §3 maps these to the paper's baselines):
+
+  flash   — L1 Pallas streaming kernels (the paper's contribution).
+  gemm    — pure-jnp GEMM formulation that *materializes* the full Gram
+            matrix (the "SD-KDE (Torch)" strong baseline).
+  stream  — lax.map over query/train row blocks, no materialization but no
+            explicit tile/matrix-unit mapping (the PyKeOps analogue).
+  naive   — broadcasted [m, n, d] difference tensor, no GEMM decomposition
+            (the scalar-formulation "scikit-learn" analogue; small shapes
+            only — its memory footprint is the point).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import TileConfig, kde as kde_flash
+from .kernels import laplace_fused as laplace_flash_fused
+from .kernels import laplace_nonfused as laplace_flash_nonfused
+from .kernels import debias as debias_flash
+from .kernels import score_at as score_at_flash
+from .kernels import ref
+from .kernels.common import gaussian_log_norm
+
+VARIANTS = ("flash", "gemm", "stream", "naive")
+
+# Row-block width for the stream (KeOps-like) variants.
+STREAM_BLOCK = 128
+
+
+def _norm(h, d, count):
+    return jnp.exp(-gaussian_log_norm(d)) / (h ** d) / count
+
+
+# ---------------------------------------------------------------------------
+# KDE evaluation pipelines: (x, w, y, h) -> pdf [m]
+# ---------------------------------------------------------------------------
+
+def kde_gemm(x, w, y, h):
+    """Materializing GEMM-form KDE (the Torch-style strong baseline)."""
+    return ref.kde_ref(x, w, y, h)
+
+
+def kde_naive(x, w, y, h):
+    """Broadcasted elementwise KDE: materializes [m, n, d] differences."""
+    d = x.shape[1]
+    diff = y[:, None, :] - x[None, :, :]              # [m, n, d]
+    d2 = jnp.sum(diff * diff, axis=2)                 # [m, n]
+    phi = jnp.exp(-d2 / (2.0 * h * h))
+    return (phi @ w) * _norm(h, d, jnp.sum(w))
+
+
+def kde_stream(x, w, y, h):
+    """Streaming row-block KDE without tile/MXU mapping (KeOps analogue).
+
+    lax.map walks query blocks; each step reduces against the full train
+    set with jnp ops.  Memory stays O(block * n) like a LazyTensor
+    reduction, but XLA sees narrow GEMMs instead of the tiled formulation.
+    """
+    m, d = y.shape
+    block = min(STREAM_BLOCK, m)
+    if m % block != 0:
+        raise ValueError(f"stream variant needs block | m (m={m}, block={block})")
+    yb = y.reshape(m // block, block, d)
+
+    def step(yblk):
+        d2 = ref.sq_dists(yblk, x)
+        phi = jnp.exp(-d2 / (2.0 * h * h))
+        return phi @ w
+
+    raw = jax.lax.map(step, yb).reshape(m)
+    return raw * _norm(h, d, jnp.sum(w))
+
+
+def kde_pipeline(variant: str):
+    """KDE eval pipeline for a variant: (x, w, y, h) -> pdf."""
+    return {
+        "flash": lambda x, w, y, h: kde_flash(x, w, y, h),
+        "gemm": kde_gemm,
+        "stream": kde_stream,
+        "naive": kde_naive,
+    }[variant]
+
+
+# ---------------------------------------------------------------------------
+# SD-KDE fit pipelines: (x, w, h, h_s) -> x_sd [n, d]
+# ---------------------------------------------------------------------------
+
+def sdkde_fit_gemm(x, w, h, h_s):
+    """Materializing score + shift (Torch-style)."""
+    return x + (0.5 * h * h * ref.score_ref(x, w, h_s)) * w[:, None]
+
+
+def sdkde_fit_stream(x, w, h, h_s):
+    """Streaming score: lax.map over train row blocks (KeOps analogue)."""
+    n, d = x.shape
+    block = min(STREAM_BLOCK, n)
+    if n % block != 0:
+        raise ValueError(f"stream variant needs block | n (n={n}, block={block})")
+    xb = x.reshape(n // block, block, d)
+
+    def step(xblk):
+        phi = jnp.exp(-ref.sq_dists(xblk, x) / (2.0 * h_s * h_s)) * w[None, :]
+        denom = jnp.sum(phi, axis=1, keepdims=True)
+        numer = phi @ x
+        return (numer - xblk * denom) / (h_s * h_s * denom)
+
+    s = jax.lax.map(step, xb).reshape(n, d)
+    return x + (0.5 * h * h * s) * w[:, None]
+
+
+def sdkde_fit_pipeline(variant: str):
+    """Fit (score + shift) pipeline: (x, w, h, h_s) -> x_sd."""
+    return {
+        "flash": lambda x, w, h, h_s: debias_flash(x, w, h, h_s),
+        "gemm": sdkde_fit_gemm,
+        "stream": sdkde_fit_stream,
+    }[variant]
+
+
+# ---------------------------------------------------------------------------
+# End-to-end SD-KDE: (x, w, y, h, h_s) -> pdf [m]
+# ---------------------------------------------------------------------------
+
+def sdkde_e2e_pipeline(variant: str):
+    """Full SD-KDE (fit then eval) in one artifact, for single-shot benches."""
+    fit = sdkde_fit_pipeline(variant)
+    ev = kde_pipeline(variant)
+
+    def run(x, w, y, h, h_s):
+        return ev(fit(x, w, h, h_s), w, y, h)
+
+    return run
+
+
+# ---------------------------------------------------------------------------
+# Laplace-corrected KDE: (x, w, y, h) -> pdf [m] (signed)
+# ---------------------------------------------------------------------------
+
+def laplace_gemm(x, w, y, h):
+    return ref.laplace_ref(x, w, y, h)
+
+
+def laplace_pipeline(variant: str):
+    """Laplace-corrected pipelines; 'flash' vs 'nonfused' measures Fig. 4."""
+    return {
+        "flash": lambda x, w, y, h: laplace_flash_fused(x, w, y, h),
+        "nonfused": lambda x, w, y, h: laplace_flash_nonfused(x, w, y, h),
+        "gemm": laplace_gemm,
+    }[variant]
+
+
+# ---------------------------------------------------------------------------
+# Score (gradient) serving: (x, w, y, h_score) -> s [m, d]
+#
+# The gradient of the fitted log-density at arbitrary query points —
+# the extension feature behind the Langevin-sampling example.  The flash
+# variant reuses the paper's streaming score kernel with query rows as the
+# output blocks; gemm materializes [m, n] (baseline).
+# ---------------------------------------------------------------------------
+
+def score_eval_gemm(x, w, y, h_s):
+    return ref.score_at_ref(x, w, y, h_s)
+
+
+def score_eval_pipeline(variant: str):
+    """Gradient-serving pipeline: (x, w, y, h_score) -> grad [m, d]."""
+    return {
+        "flash": lambda x, w, y, h_s: score_at_flash(x, w, y, h_s),
+        "gemm": score_eval_gemm,
+    }[variant]
+
+
+# ---------------------------------------------------------------------------
+# Pipeline registry used by aot.py and the tests.
+# ---------------------------------------------------------------------------
+
+def pipeline_signature(pipeline: str, n: int, m: int, d: int):
+    """(input specs, variant->callable) for a pipeline family at a bucket.
+
+    Input specs are (name, shape) pairs; all dtypes are f32.  The order here
+    is the wire order the Rust engine uses — keep in sync with
+    rust/src/runtime/engine.rs.
+    """
+    if pipeline == "kde":
+        return (
+            [("x", (n, d)), ("w", (n,)), ("y", (m, d)), ("h", ())],
+            kde_pipeline,
+        )
+    if pipeline == "sdkde_fit":
+        return (
+            [("x", (n, d)), ("w", (n,)), ("h", ()), ("h_score", ())],
+            sdkde_fit_pipeline,
+        )
+    if pipeline == "sdkde_e2e":
+        return (
+            [("x", (n, d)), ("w", (n,)), ("y", (m, d)), ("h", ()), ("h_score", ())],
+            sdkde_e2e_pipeline,
+        )
+    if pipeline == "laplace":
+        return (
+            [("x", (n, d)), ("w", (n,)), ("y", (m, d)), ("h", ())],
+            laplace_pipeline,
+        )
+    if pipeline == "score_eval":
+        return (
+            [("x", (n, d)), ("w", (n,)), ("y", (m, d)), ("h_score", ())],
+            score_eval_pipeline,
+        )
+    raise ValueError(f"unknown pipeline {pipeline!r}")
+
+
+def build_fn(pipeline: str, variant: str, n: int, m: int, d: int,
+             tiles: TileConfig | None = None):
+    """Concrete callable + input names + ShapeDtypeStructs for lowering."""
+    specs, factory = pipeline_signature(pipeline, n, m, d)
+    fn = factory(variant)
+    if tiles is not None:
+        # Tile-pinned flash pipelines for the §6.2 block-sweep ablation.
+        if pipeline == "sdkde_fit" and variant == "flash":
+            fn = lambda x, w, h, h_s: debias_flash(x, w, h, h_s, tiles=tiles)
+        elif pipeline == "kde" and variant == "flash":
+            fn = lambda x, w, y, h: kde_flash(x, w, y, h, tiles=tiles)
+        else:
+            raise ValueError("tile override only supported for flash kde/fit")
+    shapes = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in specs]
+    names = [nm for nm, _ in specs]
+    return fn, names, shapes

@@ -1,0 +1,28 @@
+"""Shared fixtures for the Flash-SD-KDE python test suite."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(1234)
+
+
+def make_problem(rng, n, m, d, h=0.8, spread=2.0):
+    """Random (x, w, y, h) problem with full weights, f32."""
+    x = jnp.asarray(rng.normal(scale=spread, size=(n, d)), jnp.float32)
+    y = jnp.asarray(rng.normal(scale=spread, size=(m, d)), jnp.float32)
+    w = jnp.ones(n, jnp.float32)
+    return x, w, y, jnp.float32(h)
+
+
+@pytest.fixture
+def problem_16d(rng):
+    return make_problem(rng, n=192, m=56, d=16)
+
+
+@pytest.fixture
+def problem_1d(rng):
+    return make_problem(rng, n=300, m=44, d=1, h=0.35)

@@ -1,0 +1,112 @@
+"""AOT driver tests: plan, manifest schema, freshness, HLO round-trip."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+
+
+def test_plan_quick_subset_of_full():
+    quick = {aot.entry_filename(e) for e in aot.plan_entries(quick=True)}
+    full = {aot.entry_filename(e) for e in aot.plan_entries(quick=False)}
+    assert quick <= full
+    assert len(quick) < len(full)
+
+
+def test_plan_filenames_unique():
+    entries = aot.plan_entries(quick=False, sweep=True)
+    names = [aot.entry_filename(e) for e in entries]
+    assert len(names) == len(set(names))
+
+
+def test_plan_covers_every_paper_experiment():
+    entries = aot.plan_entries(quick=False, sweep=True)
+    key = {(e["pipeline"], e["variant"], e["d"]) for e in entries}
+    # Fig. 1 / Fig. 6: e2e flash vs gemm in both dims.
+    assert ("sdkde_e2e", "flash", 16) in key
+    assert ("sdkde_e2e", "gemm", 16) in key
+    assert ("sdkde_e2e", "flash", 1) in key
+    # Table 1: stream (KeOps analogue) variants.
+    assert ("kde", "stream", 16) in key
+    assert ("sdkde_e2e", "stream", 16) in key
+    # Fig. 4: fused vs non-fused Laplace in 1-D.
+    assert ("laplace", "flash", 1) in key
+    assert ("laplace", "nonfused", 1) in key
+    # §6.2 sweep artifacts carry tile overrides.
+    assert any(e["tiles"] for e in entries)
+
+
+def test_plan_serving_buckets_present():
+    entries = aot.plan_entries(quick=False, sweep=False)
+    ms = {e["m"] for e in entries if e["pipeline"] == "kde"
+          and e["variant"] == "flash" and e["d"] == 16}
+    for m in aot.SERVING_M:
+        assert m in ms
+
+
+def test_naive_capped():
+    entries = aot.plan_entries(quick=False, sweep=False)
+    naive_n = [e["n"] for e in entries if e["variant"] == "naive"]
+    assert naive_n and max(naive_n) <= aot.NAIVE_MAX_N
+
+
+def test_entry_filename_encodes_tiles():
+    e = {"pipeline": "sdkde_fit", "variant": "flash", "d": 16, "n": 2048,
+         "m": 256, "tiles": [64, 512]}
+    assert aot.entry_filename(e) == (
+        "sdkde_fit__flash__d16__n2048__m256__bm64__bn512.hlo.txt"
+    )
+
+
+def test_digest_changes_with_plan():
+    a = aot.plan_digest(aot.plan_entries(quick=True))
+    b = aot.plan_digest(aot.plan_entries(quick=False))
+    assert a != b
+
+
+def test_lower_entry_produces_parseable_hlo():
+    e = {"pipeline": "kde", "variant": "gemm", "d": 2, "n": 64, "m": 8,
+         "tiles": None}
+    text, inputs, outputs = aot.lower_entry(e)
+    assert "ENTRY" in text and "HloModule" in text
+    assert [i["name"] for i in inputs] == ["x", "w", "y", "h"]
+    assert inputs[0]["shape"] == [64, 2]
+    assert outputs == [{"shape": [8]}]
+
+
+def test_build_artifacts_writes_and_skips(tmp_path, monkeypatch, capsys):
+    # Shrink the quick plan to two tiny entries to keep this test fast.
+    tiny = [
+        {"pipeline": "kde", "variant": "gemm", "d": 1, "n": 32, "m": 8,
+         "tiles": None},
+        {"pipeline": "laplace", "variant": "gemm", "d": 1, "n": 32, "m": 8,
+         "tiles": None},
+    ]
+    monkeypatch.setattr(aot, "plan_entries", lambda quick, sweep: tiny)
+    out = str(tmp_path)
+    man = aot.build_artifacts(out, quick=True, sweep=False)
+    assert len(man["entries"]) == 2
+    for e in man["entries"]:
+        assert os.path.exists(os.path.join(out, e["file"]))
+    with open(os.path.join(out, "manifest.json")) as f:
+        loaded = json.load(f)
+    assert loaded["digest"] == man["digest"]
+
+    # Second build must be a freshness no-op.
+    capsys.readouterr()
+    aot.build_artifacts(out, quick=True, sweep=False)
+    assert "up to date" in capsys.readouterr().out
+
+
+def test_build_artifacts_rebuilds_on_missing_file(tmp_path, monkeypatch):
+    tiny = [{"pipeline": "kde", "variant": "gemm", "d": 1, "n": 32, "m": 8,
+             "tiles": None}]
+    monkeypatch.setattr(aot, "plan_entries", lambda quick, sweep: tiny)
+    out = str(tmp_path)
+    man = aot.build_artifacts(out, quick=True, sweep=False, verbose=False)
+    target = os.path.join(out, man["entries"][0]["file"])
+    os.remove(target)
+    aot.build_artifacts(out, quick=True, sweep=False, verbose=False)
+    assert os.path.exists(target)

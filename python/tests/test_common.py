@@ -1,0 +1,112 @@
+"""Tile-math unit tests for kernels/common.py (pure python, no tracing)."""
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import common
+
+
+def test_pow2_floor():
+    assert common._pow2_floor(1) == 1
+    assert common._pow2_floor(2) == 2
+    assert common._pow2_floor(3) == 2
+    assert common._pow2_floor(64) == 64
+    assert common._pow2_floor(1000) == 512
+    with pytest.raises(ValueError):
+        common._pow2_floor(0)
+
+
+def test_round_up():
+    assert common.round_up(0, 8) == 0
+    assert common.round_up(1, 8) == 8
+    assert common.round_up(8, 8) == 8
+    assert common.round_up(9, 8) == 16
+    with pytest.raises(ValueError):
+        common.round_up(4, 0)
+
+
+def test_tile_config_validation():
+    with pytest.raises(ValueError):
+        common.TileConfig(0, 8)
+    with pytest.raises(ValueError):
+        common.TileConfig(8, -1)
+
+
+def test_clamp_produces_pow2_tiles():
+    cfg = common.TileConfig(64, 256).clamp(100, 100)
+    assert cfg.block_m == 64
+    assert cfg.block_n == 64
+    cfg = common.TileConfig(256, 512).clamp(33, 1000)
+    assert cfg.block_m == 32
+    assert cfg.block_n == 512
+
+
+def test_grid_divisibility_enforced():
+    cfg = common.TileConfig(8, 16)
+    assert cfg.grid(16, 32) == (2, 2)
+    with pytest.raises(ValueError):
+        cfg.grid(17, 32)
+    with pytest.raises(ValueError):
+        cfg.grid(16, 33)
+
+
+def test_padded_sizes_are_divisible():
+    cfg = common.TileConfig(8, 32)
+    mp, np_ = common.padded_sizes(13, 70, cfg)
+    assert mp % 8 == 0 and np_ % 32 == 0
+    assert mp >= 13 and np_ >= 70
+    # Exact sizes don't grow.
+    assert common.padded_sizes(16, 64, cfg) == (16, 64)
+
+
+def test_pick_tiles_dimension_aware_default():
+    # 1-D default is shorter in BM than the high-d default (perf pass).
+    one_d = common.pick_tiles(10_000, 10_000, None, d=1)
+    high_d = common.pick_tiles(10_000, 10_000, None, d=16)
+    assert one_d.block_m < high_d.block_m
+    # Explicit config wins over the d heuristic.
+    explicit = common.pick_tiles(10_000, 10_000, common.TileConfig(8, 8), d=1)
+    assert (explicit.block_m, explicit.block_n) == (8, 8)
+
+
+def test_vmem_bytes_model():
+    cfg = common.TileConfig(64, 1024)
+    d = 16
+    # 4 * (BM*d + BN*d + BN + BM*(d+1)) bytes.
+    want = 4 * (64 * 16 + 1024 * 16 + 1024 + 64 * 17)
+    assert cfg.vmem_bytes(d) == want
+    # The paper-scale config stays far below a 16 MiB VMEM budget.
+    assert cfg.vmem_bytes(16) < 16 * 1024 * 1024 / 10
+
+
+def test_pad_rows():
+    x = jnp.ones((3, 2), jnp.float32)
+    p = common.pad_rows(x, 5, value=7.0)
+    assert p.shape == (5, 2)
+    np.testing.assert_array_equal(np.asarray(p[3:]), np.full((2, 2), 7.0))
+    assert common.pad_rows(x, 3) is x
+    with pytest.raises(ValueError):
+        common.pad_rows(x, 2)
+
+
+def test_normalizer_matches_closed_form():
+    h, d = 0.7, 3
+    got = float(common.normalizer(jnp.float32(h), d))
+    want = 1.0 / ((2 * math.pi) ** (d / 2) * h**d)
+    assert got == pytest.approx(want, rel=1e-5)
+
+
+def test_validate_pairwise_args_messages():
+    x = jnp.zeros((4, 2))
+    w = jnp.zeros((4,))
+    y = jnp.zeros((3, 2))
+    common.validate_pairwise_args(x, w, y)  # ok
+    with pytest.raises(ValueError, match="dimension mismatch"):
+        common.validate_pairwise_args(x, w, jnp.zeros((3, 5)))
+    with pytest.raises(ValueError, match="weights"):
+        common.validate_pairwise_args(x, jnp.zeros((5,)), y)
+    with pytest.raises(ValueError, match="Y must be"):
+        common.validate_pairwise_args(x, w, jnp.zeros((3,)))

@@ -1,0 +1,90 @@
+"""Pin the FLOP/byte model to the constants the paper quotes (§4.1, App. A)."""
+
+import pytest
+
+from compile import flopmodel as fm
+
+
+def test_d16_flops_constant():
+    # FLOPs_16(k) ~ 81.5 k^2 (paper §4.1).
+    k = 32768.0
+    coeff = fm.sdkde_flops_d(k, 16) / (k * k)
+    assert coeff == pytest.approx(81.5, abs=0.5)
+
+
+def test_d16_flops_order_of_magnitude():
+    # "on the order of 10^11 FLOPs for k = 32k" (§4.1).
+    total = fm.sdkde_flops_d(32768.0, 16)
+    assert 5e10 < total < 5e11
+
+
+def test_d16_bytes_per_tile():
+    # Paper: ~7.4e4 bytes per (64, 1024) tile at d=16.
+    per_tile = 4.0 * (2 * 64 * 16 + 1024 * 16 + 64)
+    assert per_tile == pytest.approx(7.4e4, rel=0.05)
+
+
+def test_d16_bytes_constant():
+    # Bytes_16(k) ~ 1.13 k^2 with the paper's launch parameters.
+    k = 32768.0
+    coeff = fm.sdkde_bytes_d(k, 16) / (k * k)
+    assert coeff == pytest.approx(1.13, abs=0.03)
+
+
+def test_d16_intensity():
+    # I_16 ~ 72 flops/byte (§4.1).
+    est = fm.sdkde_estimate_d(32768.0, 16)
+    assert est.intensity == pytest.approx(72.0, abs=3.0)
+
+
+def test_machine_balance():
+    # A6000: 155 TFLOP/s TC peak / 770 GB/s ~ 200 flops/byte.
+    assert fm.machine_balance_flops_per_byte() == pytest.approx(200.0, abs=5.0)
+
+
+def test_compute_bound_regime():
+    # The kernel's intensity must sit between the FP32 roof (~50) and the
+    # tensor-core roof (~200): the straddling the paper describes.
+    est = fm.sdkde_estimate_d(32768.0, 16)
+    assert 50.0 < est.intensity < 200.0
+
+
+def test_1d_flops_constant():
+    # FLOPs(k) ~ 17.75 k^2 (App. A).
+    k = 32768.0
+    coeff = fm.sdkde_flops_1d(k) / (k * k)
+    assert coeff == pytest.approx(17.75, abs=0.01)
+
+
+def test_1d_flops_order_of_magnitude():
+    # "on the order of 2e10 flops" for k=32k (App. A).
+    assert fm.sdkde_flops_1d(32768.0) == pytest.approx(2e10, rel=0.1)
+
+
+def test_1d_intensity_scaling():
+    # I(k) ~ 3.55 k flops/byte (App. A).
+    k = 65536.0
+    est = fm.sdkde_estimate_1d(k)
+    assert est.intensity / k == pytest.approx(3.55, abs=0.15)
+
+
+def test_flops_monotone_in_d():
+    k = 1024.0
+    vals = [fm.sdkde_flops_d(k, d) for d in (1, 4, 16, 32)]
+    assert vals == sorted(vals)
+
+
+def test_utilization():
+    # 1e12 flops in 0.1 s on a 100 TFLOP/s machine = 10% utilization.
+    assert fm.utilization(1e12, 0.1, 1e14) == pytest.approx(0.10)
+    with pytest.raises(ValueError):
+        fm.utilization(1.0, 0.0, 1.0)
+
+
+def test_explicit_n_test_override():
+    k = 1000.0
+    default = fm.sdkde_flops_d(k, 16)
+    explicit = fm.sdkde_flops_d(k, 16, n_test=k / 8.0)
+    assert default == explicit
+    bigger = fm.sdkde_flops_d(k, 16, n_test=k)
+    assert bigger > default

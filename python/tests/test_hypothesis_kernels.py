@@ -1,0 +1,123 @@
+"""Hypothesis sweeps: kernels vs oracles over random shapes and bandwidths.
+
+These are the property-based half of the L1 test plan: any (n, m, d, h,
+tile config, mask) within the supported envelope must agree with the
+pure-jnp oracle to fp32 tolerance.
+"""
+
+import math
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import TileConfig, debias, kde, laplace_fused, score
+from compile.kernels import ref
+
+# Modest deadline-free profile: pallas interpret tracing is slow per example.
+COMMON = dict(max_examples=20, deadline=None)
+
+
+def _data(n, m, d, seed, scale):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(scale=scale, size=(n, d)), jnp.float32)
+    y = jnp.asarray(rng.normal(scale=scale, size=(m, d)), jnp.float32)
+    return x, y
+
+
+shape_strategy = st.tuples(
+    st.integers(min_value=3, max_value=300),   # n
+    st.integers(min_value=1, max_value=80),    # m
+    st.sampled_from([1, 2, 3, 4, 8, 16]),      # d
+    st.integers(min_value=0, max_value=2**31), # seed
+    st.floats(min_value=0.15, max_value=2.5),  # h
+)
+
+
+@given(shape_strategy)
+@settings(**COMMON)
+def test_kde_matches_ref(params):
+    n, m, d, seed, h = params
+    x, y = _data(n, m, d, seed, scale=1.5)
+    w = jnp.ones(n, jnp.float32)
+    got = np.asarray(kde(x, w, y, jnp.float32(h)))
+    want = np.asarray(ref.kde_ref(x, w, y, jnp.float32(h)))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-8)
+
+
+@given(shape_strategy)
+@settings(**COMMON)
+def test_laplace_matches_ref(params):
+    n, m, d, seed, h = params
+    x, y = _data(n, m, d, seed, scale=1.5)
+    w = jnp.ones(n, jnp.float32)
+    got = np.asarray(laplace_fused(x, w, y, jnp.float32(h)))
+    want = np.asarray(ref.laplace_ref(x, w, y, jnp.float32(h)))
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=1e-7)
+
+
+@given(
+    st.integers(min_value=4, max_value=200),
+    st.sampled_from([1, 2, 4, 16]),
+    st.integers(min_value=0, max_value=2**31),
+    st.floats(min_value=0.3, max_value=1.5),
+)
+@settings(**COMMON)
+def test_score_matches_ref(n, d, seed, h_s):
+    x, _ = _data(n, 1, d, seed, scale=1.0)
+    w = jnp.ones(n, jnp.float32)
+    got = np.asarray(score(x, w, jnp.float32(h_s)))
+    want = np.asarray(ref.score_ref(x, w, jnp.float32(h_s)))
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=5e-5)
+
+
+@given(
+    st.integers(min_value=2, max_value=150),   # keep
+    st.integers(min_value=0, max_value=60),    # extra padding rows
+    st.integers(min_value=0, max_value=2**31),
+)
+@settings(**COMMON)
+def test_mask_extension_invariant(keep, pad, seed):
+    # Appending w=0 rows never changes the result: the bucketing contract.
+    n, m, d = keep + pad, 9, 3
+    x, y = _data(n, m, d, seed, scale=1.2)
+    w = jnp.asarray(
+        np.concatenate([np.ones(keep), np.zeros(pad)]), jnp.float32
+    )
+    h = jnp.float32(0.7)
+    got = np.asarray(kde(x, w, y, h))
+    want = np.asarray(kde(x[:keep], jnp.ones(keep, jnp.float32), y, h))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-8)
+
+
+@given(
+    st.sampled_from([8, 16, 32, 64, 128]),
+    st.sampled_from([8, 16, 32, 64, 128, 256]),
+    st.integers(min_value=0, max_value=2**31),
+)
+@settings(**COMMON)
+def test_tile_sweep_invariant(bm, bn, seed):
+    # The §6.2 ablation sweeps tiles for speed; results must be identical.
+    x, y = _data(130, 25, 4, seed, scale=1.0)
+    w = jnp.ones(130, jnp.float32)
+    h = jnp.float32(0.8)
+    got = np.asarray(kde(x, w, y, h, tiles=TileConfig(bm, bn)))
+    want = np.asarray(ref.kde_ref(x, w, y, h))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-8)
+
+
+@given(
+    st.integers(min_value=10, max_value=120),
+    st.integers(min_value=0, max_value=2**31),
+    st.floats(min_value=0.3, max_value=1.2),
+)
+@settings(**COMMON)
+def test_debias_preserves_shape_and_finiteness(n, seed, h):
+    x, _ = _data(n, 1, 2, seed, scale=1.0)
+    w = jnp.ones(n, jnp.float32)
+    out = np.asarray(debias(x, w, jnp.float32(h)))
+    assert out.shape == (n, 2)
+    assert np.isfinite(out).all()
+    # Debiased samples stay near the originals: shift is O(h^2 * score).
+    want = np.asarray(ref.debias_ref(x, w, jnp.float32(h)))
+    np.testing.assert_allclose(out, want, rtol=2e-3, atol=5e-5)

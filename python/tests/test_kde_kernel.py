@@ -1,0 +1,106 @@
+"""Flash KDE Pallas kernel vs the pure-jnp oracle."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile.kernels import TileConfig, kde, kde_raw, kde_with_tiles
+from compile.kernels import ref
+from .conftest import make_problem
+
+
+def test_matches_ref_16d(problem_16d):
+    x, w, y, h = problem_16d
+    np.testing.assert_allclose(
+        np.asarray(kde(x, w, y, h)),
+        np.asarray(ref.kde_ref(x, w, y, h)),
+        rtol=3e-5, atol=1e-8,
+    )
+
+
+def test_matches_ref_1d(problem_1d):
+    x, w, y, h = problem_1d
+    np.testing.assert_allclose(
+        np.asarray(kde(x, w, y, h)),
+        np.asarray(ref.kde_ref(x, w, y, h)),
+        rtol=3e-5, atol=1e-8,
+    )
+
+
+@pytest.mark.parametrize("n,m", [(64, 64), (65, 17), (256, 32), (300, 100),
+                                 (1000, 125), (31, 7)])
+def test_non_divisible_shapes(rng, n, m):
+    # Padding must make any (n, m) pair exact, not just tile multiples.
+    x, w, y, h = make_problem(rng, n, m, d=4)
+    np.testing.assert_allclose(
+        np.asarray(kde(x, w, y, h)),
+        np.asarray(ref.kde_ref(x, w, y, h)),
+        rtol=3e-5, atol=1e-8,
+    )
+
+
+@pytest.mark.parametrize("bm,bn", [(8, 8), (16, 64), (64, 256), (128, 32)])
+def test_tile_config_is_pure_implementation_detail(rng, bm, bn):
+    # Fig. 4's point in miniature: tiling changes runtime, never the result.
+    x, w, y, h = make_problem(rng, 200, 48, d=8)
+    base = np.asarray(ref.kde_ref(x, w, y, h))
+    got = np.asarray(kde(x, w, y, h, tiles=TileConfig(bm, bn)))
+    np.testing.assert_allclose(got, base, rtol=3e-5, atol=1e-8)
+
+
+def test_kde_with_tiles_closure(rng):
+    x, w, y, h = make_problem(rng, 128, 32, d=2)
+    f = kde_with_tiles(16, 32)
+    np.testing.assert_allclose(
+        np.asarray(f(x, w, y, h)),
+        np.asarray(ref.kde_ref(x, w, y, h)),
+        rtol=3e-5,
+    )
+
+
+def test_masked_rows_are_exactly_ignored(rng):
+    x, w, y, h = make_problem(rng, 160, 24, d=6)
+    keep = 97
+    w_mask = jnp.asarray(
+        np.concatenate([np.ones(keep), np.zeros(160 - keep)]), jnp.float32
+    )
+    got = np.asarray(kde(x, w_mask, y, h))
+    want = np.asarray(ref.kde_ref(x[:keep], jnp.ones(keep, jnp.float32), y, h))
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=1e-8)
+
+
+def test_raw_vs_normalized_relationship(rng):
+    x, w, y, h = make_problem(rng, 96, 16, d=3)
+    raw = np.asarray(kde_raw(x, w, y, h))
+    full = np.asarray(kde(x, w, y, h))
+    d = 3
+    norm = (2 * np.pi) ** (-d / 2) / float(h) ** d / float(jnp.sum(w))
+    np.testing.assert_allclose(full, raw * norm, rtol=1e-6)
+
+
+def test_bandwidth_is_runtime_input(rng):
+    # The same kernel must serve multiple bandwidths (artifact reuse).
+    x, w, y, _ = make_problem(rng, 80, 16, d=2)
+    for h in (0.2, 0.7, 1.9):
+        np.testing.assert_allclose(
+            np.asarray(kde(x, w, y, jnp.float32(h))),
+            np.asarray(ref.kde_ref(x, w, y, jnp.float32(h))),
+            rtol=3e-5, atol=1e-8,
+        )
+
+
+def test_output_is_nonnegative_and_finite(problem_16d):
+    x, w, y, h = problem_16d
+    out = np.asarray(kde(x, w, y, h))
+    assert np.isfinite(out).all()
+    assert (out >= 0.0).all()
+
+
+def test_rejects_bad_shapes(rng):
+    x, w, y, h = make_problem(rng, 32, 8, d=4)
+    with pytest.raises(ValueError, match="dimension mismatch"):
+        kde(x, w, jnp.zeros((8, 5), jnp.float32), h)
+    with pytest.raises(ValueError, match="weights"):
+        kde(x, jnp.ones(31, jnp.float32), y, h)
+    with pytest.raises(ValueError, match=r"X must be \[n, d\]"):
+        kde(jnp.zeros((4,), jnp.float32), w, y, h)

@@ -1,0 +1,80 @@
+"""Fused / non-fused Laplace-corrected KDE kernels vs the oracle."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile.kernels import TileConfig, laplace_fused, laplace_nonfused
+from compile.kernels import ref
+from .conftest import make_problem
+
+
+def test_fused_matches_ref_16d(problem_16d):
+    x, w, y, h = problem_16d
+    np.testing.assert_allclose(
+        np.asarray(laplace_fused(x, w, y, h)),
+        np.asarray(ref.laplace_ref(x, w, y, h)),
+        rtol=5e-4, atol=1e-8,
+    )
+
+
+def test_nonfused_matches_ref_16d(problem_16d):
+    x, w, y, h = problem_16d
+    np.testing.assert_allclose(
+        np.asarray(laplace_nonfused(x, w, y, h)),
+        np.asarray(ref.laplace_ref(x, w, y, h)),
+        rtol=5e-4, atol=1e-8,
+    )
+
+
+def test_fusion_is_estimator_invariant(problem_1d):
+    # Fig. 2's observation: the fused curve overlaps the non-fused one —
+    # fusion is an implementation optimization, not an estimator change.
+    x, w, y, h = problem_1d
+    np.testing.assert_allclose(
+        np.asarray(laplace_fused(x, w, y, h)),
+        np.asarray(laplace_nonfused(x, w, y, h)),
+        rtol=1e-5, atol=1e-9,
+    )
+
+
+@pytest.mark.parametrize("n,m,d", [(70, 20, 1), (128, 16, 4), (200, 55, 16)])
+def test_shapes_sweep(rng, n, m, d):
+    x, w, y, h = make_problem(rng, n, m, d)
+    np.testing.assert_allclose(
+        np.asarray(laplace_fused(x, w, y, h)),
+        np.asarray(ref.laplace_ref(x, w, y, h)),
+        rtol=5e-4, atol=1e-7,
+    )
+
+
+def test_masking(rng):
+    x, w, y, h = make_problem(rng, 144, 24, d=2)
+    keep = 101
+    w_mask = jnp.asarray(
+        np.concatenate([np.ones(keep), np.zeros(144 - keep)]), jnp.float32
+    )
+    got = np.asarray(laplace_fused(x, w_mask, y, h))
+    want = np.asarray(
+        ref.laplace_ref(x[:keep], jnp.ones(keep, jnp.float32), y, h)
+    )
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=1e-8)
+
+
+def test_signed_tail_goes_negative(rng):
+    # Far queries sit in the negative lobe of the 4th-order kernel: the
+    # estimator must actually produce negative values there (§5 caveat).
+    x = jnp.zeros((16, 1), jnp.float32)
+    w = jnp.ones(16, jnp.float32)
+    y = jnp.asarray([[2.5]], jnp.float32)  # ||u||/h = 2.5 > sqrt(2 + d)
+    h = jnp.float32(1.0)
+    val = float(laplace_fused(x, w, y, h)[0])
+    assert val < 0.0
+
+
+def test_tiles_invariant(rng):
+    x, w, y, h = make_problem(rng, 160, 40, d=8)
+    base = np.asarray(ref.laplace_ref(x, w, y, h))
+    for bm, bn in [(8, 32), (32, 128), (64, 64)]:
+        got = np.asarray(laplace_fused(x, w, y, h, tiles=TileConfig(bm, bn)))
+        np.testing.assert_allclose(got, base, rtol=5e-4, atol=1e-8)

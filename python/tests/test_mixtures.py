@@ -1,0 +1,65 @@
+"""Benchmark mixture tests: pdf correctness, sampling, determinism."""
+
+import numpy as np
+import pytest
+
+from compile import mixtures
+
+
+@pytest.mark.parametrize("mix", [mixtures.mix1d(), mixtures.mix16d(),
+                                 mixtures.by_dim(4)])
+def test_weights_normalized(mix):
+    assert sum(mix.weights) == pytest.approx(1.0)
+    assert len(mix.means) == mix.k == len(mix.sigmas)
+
+
+def test_pdf_integrates_to_one_1d():
+    mix = mixtures.mix1d()
+    grid = np.linspace(-15, 15, 20001).reshape(-1, 1)
+    pdf = mix.pdf(grid)
+    assert np.trapezoid(pdf, grid[:, 0]) == pytest.approx(1.0, abs=1e-4)
+
+
+def test_sampling_deterministic():
+    mix = mixtures.mix16d()
+    a = mix.sample(100, seed=7)
+    b = mix.sample(100, seed=7)
+    np.testing.assert_array_equal(a, b)
+    c = mix.sample(100, seed=8)
+    assert not np.array_equal(a, c)
+
+
+def test_sample_shape_and_dtype():
+    mix = mixtures.mix16d()
+    s = mix.sample(64, seed=0)
+    assert s.shape == (64, 16) and s.dtype == np.float32
+
+
+def test_sample_mean_matches_mixture_mean():
+    mix = mixtures.mix1d()
+    s = mix.sample(200_000, seed=3)
+    want = sum(w * m[0] for w, m in zip(mix.weights, mix.means))
+    assert s.mean() == pytest.approx(want, abs=0.02)
+
+
+def test_sample_density_agreement():
+    # Histogram of a large 1-D sample should track the analytic pdf.
+    mix = mixtures.mix1d()
+    s = mix.sample(100_000, seed=11)[:, 0]
+    hist, edges = np.histogram(s, bins=80, range=(-6, 9), density=True)
+    centers = 0.5 * (edges[:-1] + edges[1:])
+    pdf = mix.pdf(centers.reshape(-1, 1))
+    assert np.mean(np.abs(hist - pdf)) < 0.01
+
+
+def test_pdf_positive_and_finite_16d():
+    mix = mixtures.mix16d()
+    s = mix.sample(500, seed=5)
+    p = mix.pdf(s)
+    assert np.isfinite(p).all() and (p > 0).all()
+
+
+def test_by_dim_dispatch():
+    assert mixtures.by_dim(1).d == 1
+    assert mixtures.by_dim(16).d == 16
+    assert mixtures.by_dim(7).d == 7

@@ -1,0 +1,159 @@
+"""Oracle self-consistency: the pure-jnp references must be right first.
+
+Everything else in the stack (Pallas kernels, Rust natives, runtime
+round-trips) is validated against ref.py, so these tests pin ref.py to
+closed-form ground truth where it exists.
+"""
+
+import math
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile.kernels import ref
+
+
+def test_sq_dists_matches_bruteforce(rng):
+    a = jnp.asarray(rng.normal(size=(17, 5)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(9, 5)), jnp.float32)
+    got = np.asarray(ref.sq_dists(a, b))
+    want = np.sum(
+        (np.asarray(a)[:, None, :] - np.asarray(b)[None, :, :]) ** 2, axis=2
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_sq_dists_nonnegative_on_duplicates():
+    # Cancellation in ||a||^2+||b||^2-2ab^T can go slightly negative; the
+    # clamp must hold even for identical points at large magnitude.
+    a = jnp.full((4, 8), 1000.0, jnp.float32)
+    d2 = np.asarray(ref.sq_dists(a, a))
+    assert (d2 >= 0.0).all()
+
+
+def test_kde_single_point_matches_gaussian_pdf():
+    # KDE of one sample is exactly the kernel: closed-form check.
+    x = jnp.zeros((1, 2), jnp.float32)
+    w = jnp.ones(1, jnp.float32)
+    y = jnp.asarray([[0.3, -0.4]], jnp.float32)  # ||y||^2 = 0.25
+    h = 0.7
+    got = float(ref.kde_ref(x, w, y, jnp.float32(h))[0])
+    want = math.exp(-0.25 / (2 * h * h)) / ((2 * math.pi) * h * h)
+    assert got == pytest.approx(want, rel=1e-5)
+
+
+def test_kde_integrates_to_one_1d(rng):
+    # Trapezoid integral over a wide grid ~ 1 for a compactly-spread sample.
+    x = jnp.asarray(rng.normal(size=(50, 1)), jnp.float32)
+    w = jnp.ones(50, jnp.float32)
+    grid = jnp.linspace(-10.0, 10.0, 4001).reshape(-1, 1).astype(jnp.float32)
+    pdf = np.asarray(ref.kde_ref(x, w, grid, jnp.float32(0.4)))
+    integral = np.trapezoid(pdf, np.asarray(grid[:, 0]))
+    assert integral == pytest.approx(1.0, abs=1e-3)
+
+
+def test_laplace_integrates_to_one_1d(rng):
+    # The Laplace-corrected kernel is a 4th-order kernel: still integrates
+    # to 1 (the correction term integrates to 0).
+    x = jnp.asarray(rng.normal(size=(50, 1)), jnp.float32)
+    w = jnp.ones(50, jnp.float32)
+    grid = jnp.linspace(-12.0, 12.0, 6001).reshape(-1, 1).astype(jnp.float32)
+    pdf = np.asarray(ref.laplace_ref(x, w, grid, jnp.float32(0.4)))
+    integral = np.trapezoid(pdf, np.asarray(grid[:, 0]))
+    assert integral == pytest.approx(1.0, abs=1e-3)
+
+
+def test_score_matches_autodiff_gradient(rng):
+    # The empirical score must equal grad(log p_hat) of the same-bandwidth
+    # KDE evaluated at the sample points.  Autodiff is the ground truth.
+    import jax
+
+    x = jnp.asarray(rng.normal(size=(40, 3)), jnp.float32)
+    w = jnp.ones(40, jnp.float32)
+    h_s = jnp.float32(0.9)
+
+    def log_pdf(pt):
+        return jnp.log(ref.kde_ref(x, w, pt.reshape(1, -1), h_s)[0])
+
+    want = np.stack([np.asarray(jax.grad(log_pdf)(x[i])) for i in range(10)])
+    got = np.asarray(ref.score_ref(x, w, h_s))[:10]
+    np.testing.assert_allclose(got, want, rtol=5e-3, atol=5e-4)
+
+
+def test_score_of_exact_gaussian_kernel_center():
+    # Single training point at mu: score at any x is -(x - mu)/h_s^2.
+    mu = jnp.asarray([[1.0, -2.0]], jnp.float32)
+    w = jnp.ones(1, jnp.float32)
+    h_s = 0.6
+    got = np.asarray(ref.score_ref(mu, w, jnp.float32(h_s)))
+    # At the sample itself the score is 0 (x == mu).
+    np.testing.assert_allclose(got, np.zeros((1, 2)), atol=1e-6)
+
+
+def test_debias_default_uses_hs_h_over_sqrt2(rng):
+    x = jnp.asarray(rng.normal(size=(30, 2)), jnp.float32)
+    w = jnp.ones(30, jnp.float32)
+    h = jnp.float32(0.8)
+    auto = np.asarray(ref.debias_ref(x, w, h))
+    manual = np.asarray(ref.debias_ref(x, w, h, h / math.sqrt(2.0)))
+    np.testing.assert_allclose(auto, manual, rtol=1e-6)
+
+
+def test_laplace_factor_sign_structure():
+    # Factor is positive near zero distance and negative far away: the
+    # signed-tail behaviour §5 warns about.
+    h, d = 1.0, 4
+    near = float(ref.laplace_factor(jnp.float32(0.0), h, d))
+    far = float(ref.laplace_factor(jnp.float32(100.0), h, d))
+    assert near == pytest.approx(1.0 + d / 2.0)
+    assert far < 0.0
+
+
+def test_laplace_reduces_bias_vs_kde_on_smooth_density(rng):
+    # On a standard normal with a moderately large bandwidth the
+    # leading-order bias dominates; the corrected estimator must be closer
+    # to the true density on average (the paper's whole point).
+    n = 4000
+    x = jnp.asarray(rng.normal(size=(n, 1)), jnp.float32)
+    w = jnp.ones(n, jnp.float32)
+    h = jnp.float32(0.45)
+    grid = jnp.linspace(-3.0, 3.0, 241).reshape(-1, 1).astype(jnp.float32)
+    true = np.exp(-np.asarray(grid[:, 0]) ** 2 / 2) / math.sqrt(2 * math.pi)
+    err_kde = np.mean((np.asarray(ref.kde_ref(x, w, grid, h)) - true) ** 2)
+    err_lc = np.mean((np.asarray(ref.laplace_ref(x, w, grid, h)) - true) ** 2)
+    assert err_lc < err_kde
+
+
+def test_sdkde_reduces_bias_vs_kde_on_smooth_density(rng):
+    n = 4000
+    x = jnp.asarray(rng.normal(size=(n, 1)), jnp.float32)
+    w = jnp.ones(n, jnp.float32)
+    h = jnp.float32(0.45)
+    grid = jnp.linspace(-3.0, 3.0, 241).reshape(-1, 1).astype(jnp.float32)
+    true = np.exp(-np.asarray(grid[:, 0]) ** 2 / 2) / math.sqrt(2 * math.pi)
+    err_kde = np.mean((np.asarray(ref.kde_ref(x, w, grid, h)) - true) ** 2)
+    err_sd = np.mean((np.asarray(ref.sdkde_ref(x, w, grid, h)) - true) ** 2)
+    assert err_sd < err_kde
+
+
+def test_sdkde_preserves_nonnegativity(rng):
+    # SD-KDE is a KDE of shifted samples: nonnegative by construction,
+    # unlike the Laplace correction.
+    x = jnp.asarray(rng.normal(size=(100, 1)), jnp.float32)
+    w = jnp.ones(100, jnp.float32)
+    grid = jnp.linspace(-8.0, 8.0, 501).reshape(-1, 1).astype(jnp.float32)
+    pdf = np.asarray(ref.sdkde_ref(x, w, grid, jnp.float32(0.3)))
+    assert (pdf >= 0.0).all()
+
+
+def test_negative_mass_zero_for_nonnegative_estimator():
+    pdf = jnp.asarray([0.1, 0.0, 0.5], jnp.float32)
+    true = jnp.asarray([0.2, 0.2, 0.2], jnp.float32)
+    assert float(ref.negative_mass_ref(pdf, true)) == 0.0
+
+
+def test_negative_mass_positive_for_signed_estimator():
+    pdf = jnp.asarray([0.1, -0.05, 0.5], jnp.float32)
+    true = jnp.asarray([0.2, 0.2, 0.2], jnp.float32)
+    assert float(ref.negative_mass_ref(pdf, true)) > 0.0

@@ -1,0 +1,87 @@
+"""Gradient-serving kernel (score at arbitrary queries) vs oracles."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.kernels import TileConfig, score, score_at
+from compile.kernels import ref
+from compile.model import build_fn, score_eval_pipeline
+from .conftest import make_problem
+
+
+def test_matches_ref(rng):
+    x, w, y, h = make_problem(rng, 180, 40, d=8)
+    np.testing.assert_allclose(
+        np.asarray(score_at(x, w, y, h)),
+        np.asarray(ref.score_at_ref(x, w, y, h)),
+        rtol=5e-4, atol=1e-5,
+    )
+
+
+def test_self_queries_reduce_to_train_score(rng):
+    # score_at(X, X) must equal the train-train score (self-term included).
+    x, w, _, h = make_problem(rng, 120, 1, d=3)
+    np.testing.assert_allclose(
+        np.asarray(score_at(x, w, x, h)),
+        np.asarray(score(x, w, h)),
+        rtol=1e-5, atol=1e-7,
+    )
+
+
+def test_matches_autodiff_gradient(rng):
+    # The served gradient IS grad log p_hat: autodiff is ground truth.
+    x, w, y, h = make_problem(rng, 60, 6, d=2)
+
+    def log_pdf(pt):
+        return jnp.log(ref.kde_ref(x, w, pt.reshape(1, -1), h)[0])
+
+    want = np.stack([np.asarray(jax.grad(log_pdf)(y[i])) for i in range(6)])
+    got = np.asarray(score_at(x, w, y, h))
+    np.testing.assert_allclose(got, want, rtol=5e-3, atol=1e-4)
+
+
+def test_far_query_guarded(rng):
+    # Queries far outside the data: denominator underflows; the guarded
+    # division must return finite values, not NaN/inf.
+    x, w, _, h = make_problem(rng, 50, 1, d=2, h=0.3)
+    y_far = jnp.full((3, 2), 1e4, jnp.float32)
+    out = np.asarray(score_at(x, w, y_far, h))
+    assert np.isfinite(out).all()
+
+
+def test_masking(rng):
+    x, w, y, h = make_problem(rng, 140, 20, d=4)
+    keep = 93
+    w_mask = jnp.asarray(
+        np.concatenate([np.ones(keep), np.zeros(140 - keep)]), jnp.float32
+    )
+    got = np.asarray(score_at(x, w_mask, y, h))
+    want = np.asarray(
+        ref.score_at_ref(x[:keep], jnp.ones(keep, jnp.float32), y, h)
+    )
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=1e-5)
+
+
+def test_tiles_invariant(rng):
+    x, w, y, h = make_problem(rng, 100, 30, d=2)
+    base = np.asarray(ref.score_at_ref(x, w, y, h))
+    for bm, bn in [(8, 32), (64, 64)]:
+        got = np.asarray(score_at(x, w, y, h, tiles=TileConfig(bm, bn)))
+        np.testing.assert_allclose(got, base, rtol=5e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("variant", ["flash", "gemm"])
+def test_pipeline_variants_agree(rng, variant):
+    x, w, y, h = make_problem(rng, 128, 32, d=4)
+    got = np.asarray(score_eval_pipeline(variant)(x, w, y, h))
+    want = np.asarray(ref.score_at_ref(x, w, y, h))
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=1e-5)
+
+
+def test_lowering_and_signature():
+    fn, names, shapes = build_fn("score_eval", "flash", 256, 64, 16)
+    assert names == ["x", "w", "y", "h_score"]
+    lowered = jax.jit(fn).lower(*shapes)
+    assert "func" in str(lowered.compiler_ir("stablehlo"))

@@ -1,0 +1,116 @@
+"""Flash score kernel (the paper's dominant cost) vs the oracle."""
+
+import math
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile.kernels import TileConfig, debias, score, score_sums
+from compile.kernels import ref
+from .conftest import make_problem
+
+
+def test_score_matches_ref_16d(problem_16d):
+    x, w, _, h = problem_16d
+    h_s = h / math.sqrt(2.0)
+    np.testing.assert_allclose(
+        np.asarray(score(x, w, h_s)),
+        np.asarray(ref.score_ref(x, w, h_s)),
+        rtol=5e-4, atol=1e-5,
+    )
+
+
+def test_score_matches_ref_1d(problem_1d):
+    x, w, _, h = problem_1d
+    np.testing.assert_allclose(
+        np.asarray(score(x, w, h)),
+        np.asarray(ref.score_ref(x, w, h)),
+        rtol=5e-4, atol=1e-5,
+    )
+
+
+def test_score_sums_decomposition(rng):
+    # denom/numer are exactly the Phi row-sum and T = Phi X rows (§4).
+    x, w, _, h = make_problem(rng, 150, 1, d=5)
+    denom, numer = score_sums(x, w, h)
+    phi = np.asarray(ref.gaussian_matrix(x, x, h)) * np.asarray(w)[None, :]
+    np.testing.assert_allclose(np.asarray(denom), phi.sum(1), rtol=2e-5)
+    np.testing.assert_allclose(
+        np.asarray(numer), phi @ np.asarray(x), rtol=2e-5, atol=1e-5
+    )
+
+
+@pytest.mark.parametrize("n", [33, 64, 100, 257, 512])
+def test_non_divisible_sizes(rng, n):
+    x, w, _, h = make_problem(rng, n, 1, d=3)
+    np.testing.assert_allclose(
+        np.asarray(score(x, w, h)),
+        np.asarray(ref.score_ref(x, w, h)),
+        rtol=5e-4, atol=1e-5,
+    )
+
+
+@pytest.mark.parametrize("bm,bn", [(8, 16), (32, 32), (64, 128)])
+def test_tiles_do_not_change_score(rng, bm, bn):
+    x, w, _, h = make_problem(rng, 140, 1, d=4)
+    np.testing.assert_allclose(
+        np.asarray(score(x, w, h, tiles=TileConfig(bm, bn))),
+        np.asarray(ref.score_ref(x, w, h)),
+        rtol=5e-4, atol=1e-5,
+    )
+
+
+def test_debias_matches_ref(problem_16d):
+    x, w, _, h = problem_16d
+    np.testing.assert_allclose(
+        np.asarray(debias(x, w, h)),
+        np.asarray(ref.debias_ref(x, w, h)),
+        rtol=5e-4, atol=1e-5,
+    )
+
+
+def test_debias_explicit_score_bandwidth(rng):
+    x, w, _, h = make_problem(rng, 90, 1, d=2)
+    h_s = jnp.float32(0.5)
+    np.testing.assert_allclose(
+        np.asarray(debias(x, w, h, h_s)),
+        np.asarray(ref.debias_ref(x, w, h, h_s)),
+        rtol=5e-4, atol=1e-5,
+    )
+
+
+def test_debias_masked_rows_pass_through(rng):
+    # Padding rows (w=0) must come out of the fit unchanged so the eval
+    # kernels downstream see finite, inert values.
+    x, w, _, h = make_problem(rng, 128, 1, d=4)
+    keep = 70
+    w_mask = jnp.asarray(
+        np.concatenate([np.ones(keep), np.zeros(128 - keep)]), jnp.float32
+    )
+    out = np.asarray(debias(x, w_mask, h))
+    np.testing.assert_array_equal(out[keep:], np.asarray(x)[keep:])
+    # Valid rows must match a trimmed unmasked fit.
+    want = np.asarray(
+        debias(x[:keep], jnp.ones(keep, jnp.float32), h)
+    )
+    np.testing.assert_allclose(out[:keep], want, rtol=5e-4, atol=1e-5)
+
+
+def test_debias_shift_shrinks_with_bandwidth(rng):
+    # The shift is O(h^2): halving h must shrink the mean shift ~4x on a
+    # smooth sample (loose factor accounts for the score's own h-dependence).
+    x, w, _, _ = make_problem(rng, 400, 1, d=1, spread=1.0)
+    shift_big = np.abs(np.asarray(debias(x, w, jnp.float32(0.4))) - np.asarray(x)).mean()
+    shift_small = np.abs(np.asarray(debias(x, w, jnp.float32(0.2))) - np.asarray(x)).mean()
+    assert shift_small < shift_big / 2.0
+
+
+def test_score_points_toward_density_mode(rng):
+    # For a unimodal sample the score field must point toward the mode:
+    # negative correlation between position and score.
+    x, w, _, _ = make_problem(rng, 600, 1, d=1, spread=1.0)
+    s = np.asarray(score(x, w, jnp.float32(0.35)))[:, 0]
+    pos = np.asarray(x)[:, 0]
+    corr = np.corrcoef(pos, s)[0, 1]
+    assert corr < -0.8

@@ -1,0 +1,138 @@
+//! `cargo bench --bench coordinator_micro` — L3 microbenchmarks.
+//!
+//! The paper's contribution is the kernel reformulation; the coordinator is
+//! our serving wrapper, so this bench verifies L3 is *not* the bottleneck
+//! (DESIGN.md §8: "L3 should not be the bottleneck unless the paper's
+//! contribution is the coordinator").  Measures:
+//!
+//!  * bounded-queue push/pop throughput (the admission path)
+//!  * latency-histogram record cost (per-request metrics overhead)
+//!  * end-to-end in-process eval latency and dynamic-batching behaviour
+//!    under concurrent clients, against the smallest artifact bucket.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use flash_sdkde::bench_harness::{black_box, Table};
+use flash_sdkde::config::Config;
+use flash_sdkde::coordinator::metrics::LatencyHistogram;
+use flash_sdkde::coordinator::scheduler::BoundedQueue;
+use flash_sdkde::coordinator::Coordinator;
+use flash_sdkde::data::mixture::by_dim;
+use flash_sdkde::estimator::EstimatorKind;
+use flash_sdkde::util::rng::Pcg64;
+
+fn bench_queue(table: &mut Table) {
+    let q: BoundedQueue<u64> = BoundedQueue::new(1024);
+    let ops = 1_000_000u64;
+    let start = Instant::now();
+    for i in 0..ops {
+        q.push(i).expect("capacity");
+        black_box(q.pop_timeout(Duration::from_millis(1)).expect("item"));
+    }
+    let per_op_ns = start.elapsed().as_nanos() as f64 / ops as f64 / 2.0;
+    table.row(vec![
+        "queue push+pop".into(),
+        format!("{per_op_ns:.0} ns/op"),
+        format!("{:.2} Mops/s", 1e3 / per_op_ns),
+    ]);
+}
+
+fn bench_histogram(table: &mut Table) {
+    let h = LatencyHistogram::new();
+    let ops = 1_000_000u64;
+    let start = Instant::now();
+    for i in 0..ops {
+        h.record(Duration::from_micros(i % 1000));
+    }
+    let per_op_ns = start.elapsed().as_nanos() as f64 / ops as f64;
+    table.row(vec![
+        "histogram record".into(),
+        format!("{per_op_ns:.0} ns/op"),
+        format!("{:.2} Mops/s", 1e3 / per_op_ns),
+    ]);
+}
+
+fn bench_eval_path(table: &mut Table, artifacts: &str) -> anyhow::Result<()> {
+    let mut cfg = Config::default();
+    cfg.artifacts_dir = artifacts.into();
+    cfg.batch_wait_ms = 1;
+    let coordinator = Arc::new(Coordinator::start(cfg)?);
+
+    // Fit the smallest 16-D model.
+    let mix = by_dim(16);
+    let mut rng = Pcg64::seeded(1);
+    let n = 400;
+    coordinator.fit(
+        "micro",
+        EstimatorKind::SdKde,
+        16,
+        mix.sample(n, &mut rng),
+        None,
+        None,
+        None,
+    )?;
+
+    // Single-client eval latency (k=8 queries), post-warmup.
+    let queries = mix.sample(8, &mut rng);
+    coordinator.eval("micro", queries.clone())?;
+    let iters = 50;
+    let start = Instant::now();
+    for _ in 0..iters {
+        black_box(coordinator.eval("micro", queries.clone())?);
+    }
+    let per_eval_ms = start.elapsed().as_secs_f64() * 1e3 / iters as f64;
+    table.row(vec![
+        "eval e2e (k=8, 1 client)".into(),
+        format!("{per_eval_ms:.3} ms"),
+        format!("{:.0} req/s", 1e3 / per_eval_ms),
+    ]);
+
+    // Concurrent clients: batching should lift throughput per execution.
+    let clients = 8;
+    let per_client = 25;
+    let start = Instant::now();
+    let threads: Vec<_> = (0..clients)
+        .map(|c| {
+            let coord = Arc::clone(&coordinator);
+            let mix = mix.clone();
+            std::thread::spawn(move || {
+                let mut rng = Pcg64::new(99, c as u64);
+                for _ in 0..per_client {
+                    let q = mix.sample(8, &mut rng);
+                    coord.eval("micro", q).expect("eval");
+                }
+            })
+        })
+        .collect();
+    for t in threads {
+        t.join().expect("client thread");
+    }
+    let total = (clients * per_client) as f64;
+    let wall = start.elapsed().as_secs_f64();
+    table.row(vec![
+        format!("eval e2e (k=8, {clients} clients)"),
+        format!("{:.3} ms/req", wall * 1e3 / total),
+        format!("{:.0} req/s", total / wall),
+    ]);
+    table.row(vec![
+        "mean batch size under load".into(),
+        format!("{:.2}", coordinator.metrics().mean_batch_size()),
+        "-".into(),
+    ]);
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = std::env::var("FLASH_SDKDE_ARTIFACTS")
+        .unwrap_or_else(|_| "artifacts".to_string());
+    let mut table = Table::new(
+        "Coordinator microbenchmarks (L3 must not bottleneck)",
+        &["path", "cost", "rate"],
+    );
+    bench_queue(&mut table);
+    bench_histogram(&mut table);
+    bench_eval_path(&mut table, &artifacts)?;
+    table.emit("coordinator_micro");
+    Ok(())
+}

@@ -1,0 +1,16 @@
+//! `cargo bench --bench fig7_utilization_1d` — regenerates the paper's fig7 series.
+//! Thin wrapper over `bench_harness::experiments` (harness = false; the
+//! offline registry has no criterion — see DESIGN.md §3).
+
+use flash_sdkde::bench_harness::{experiments::Ctx, run_experiment, RunSpec};
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = std::env::var("FLASH_SDKDE_ARTIFACTS")
+        .unwrap_or_else(|_| "artifacts".to_string());
+    let mut ctx = Ctx::new(std::path::Path::new(&artifacts))?;
+    if let Ok(iters) = std::env::var("FLASH_SDKDE_BENCH_ITERS") {
+        ctx.spec = RunSpec::new(1, iters.parse()?);
+    }
+    run_experiment(&mut ctx, "fig7")?.emit("fig7");
+    Ok(())
+}

@@ -1,0 +1,168 @@
+//! Paper §4.1 + Appendix A FLOP / bytes / arithmetic-intensity models.
+//!
+//! The Rust twin of `python/compile/flopmodel.py` (both sides pin the
+//! paper's quoted constants in their test suites).  The utilization benches
+//! (Fig. 5, Fig. 7) divide these model FLOPs by measured runtimes.
+
+/// One exp costs 8 FLOP-equivalents (A6000 SFU:FP32 ratio 128:16, §3).
+pub const EXP_FLOPS: f64 = 8.0;
+
+/// Paper's best launch parameters, used by the tile-byte model (§4.1).
+pub const PAPER_BLOCK_M: usize = 64;
+pub const PAPER_BLOCK_N: usize = 1024;
+
+/// A6000 peaks used for the paper-scale roofline (§3, §4.1).
+pub const A6000_TC_PEAK_FLOPS: f64 = 155.0e12;
+pub const A6000_FP32_PEAK_FLOPS: f64 = 40.0e12;
+pub const A6000_BANDWIDTH_BPS: f64 = 770.0e9;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FlopEstimate {
+    pub flops: f64,
+    pub bytes: f64,
+}
+
+impl FlopEstimate {
+    pub fn intensity(&self) -> f64 {
+        self.flops / self.bytes
+    }
+}
+
+/// Total FLOPs for the d-dimensional SD-KDE pipeline (§4.1):
+/// score Gram (2dk²) + numerator (2dk² + 4k² + 8k²) + final KDE
+/// (2dkm + 4km + 8km), with m defaulting to k/8.
+pub fn sdkde_flops_d(k: f64, d: usize, n_test: Option<f64>) -> f64 {
+    let m = n_test.unwrap_or(k / 8.0);
+    let d = d as f64;
+    let gram = 2.0 * d * k * k;
+    let numer = 2.0 * d * k * k + 4.0 * k * k + EXP_FLOPS * k * k;
+    let eval = 2.0 * d * k * m + 4.0 * k * m + EXP_FLOPS * k * m;
+    gram + numer + eval
+}
+
+/// GDDR traffic of the tiled score pass (§4.1 tile-byte model):
+/// 4(2·BM·d + BN·d + BM) bytes per tile × (k/BM)(k/BN) tiles.
+pub fn sdkde_bytes_d(k: f64, d: usize, block_m: usize, block_n: usize) -> f64 {
+    let d = d as f64;
+    let per_tile =
+        4.0 * (2.0 * block_m as f64 * d + block_n as f64 * d + block_m as f64);
+    let tiles = (k / block_m as f64) * (k / block_n as f64);
+    per_tile * tiles
+}
+
+/// Combined §4.1 estimate with the paper's launch parameters.
+pub fn sdkde_estimate_d(k: f64, d: usize) -> FlopEstimate {
+    FlopEstimate {
+        flops: sdkde_flops_d(k, d, None),
+        bytes: sdkde_bytes_d(k, d, PAPER_BLOCK_M, PAPER_BLOCK_N),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Appendix A: the 1-D model.
+// ---------------------------------------------------------------------------
+
+/// ~16 flops per (train, train) pair: one exp + ~8 scalar ops.
+pub const C1_SCORE_PAIR: f64 = 16.0;
+/// ~14 flops per (train, test) pair: one exp + ~6 scalar ops.
+pub const C2_KDE_PAIR: f64 = 14.0;
+
+/// Appendix A total: 16 k² + 14 k·m (= 17.75 k² at m = k/8).
+pub fn sdkde_flops_1d(k: f64, n_test: Option<f64>) -> f64 {
+    let m = n_test.unwrap_or(k / 8.0);
+    C1_SCORE_PAIR * k * k + C2_KDE_PAIR * k * m
+}
+
+/// Appendix A traffic: one read of train/test, one write of outputs (~5k
+/// bytes at m = k/8).
+pub fn sdkde_bytes_1d(k: f64, n_test: Option<f64>) -> f64 {
+    let m = n_test.unwrap_or(k / 8.0);
+    4.0 * (k + m) + 4.0 * m
+}
+
+pub fn sdkde_estimate_1d(k: f64) -> FlopEstimate {
+    FlopEstimate { flops: sdkde_flops_1d(k, None), bytes: sdkde_bytes_1d(k, None) }
+}
+
+/// Model FLOPs for a *plain* KDE evaluation (no score pass): distances,
+/// exp and accumulate over k·m pairs.  Used by serving-throughput math.
+pub fn kde_flops(k: f64, m: f64, d: usize) -> f64 {
+    2.0 * d as f64 * k * m + 4.0 * k * m + EXP_FLOPS * k * m
+}
+
+/// Fraction of a peak sustained by `flops` of work in `runtime_s`.
+pub fn utilization(flops: f64, runtime_s: f64, peak_flops: f64) -> f64 {
+    assert!(runtime_s > 0.0 && peak_flops > 0.0);
+    flops / runtime_s / peak_flops
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn d16_flops_constant_81_5() {
+        let k = 32768.0;
+        let coeff = sdkde_flops_d(k, 16, None) / (k * k);
+        assert!((coeff - 81.5).abs() < 0.5, "coeff={coeff}");
+    }
+
+    #[test]
+    fn d16_bytes_constant_1_13() {
+        let k = 32768.0;
+        let coeff = sdkde_bytes_d(k, 16, PAPER_BLOCK_M, PAPER_BLOCK_N) / (k * k);
+        assert!((coeff - 1.13).abs() < 0.03, "coeff={coeff}");
+    }
+
+    #[test]
+    fn d16_intensity_72() {
+        let i = sdkde_estimate_d(32768.0, 16).intensity();
+        assert!((i - 72.0).abs() < 3.0, "i={i}");
+    }
+
+    #[test]
+    fn machine_balance_200() {
+        let balance = A6000_TC_PEAK_FLOPS / A6000_BANDWIDTH_BPS;
+        assert!((balance - 200.0).abs() < 5.0, "balance={balance}");
+    }
+
+    #[test]
+    fn intensity_straddles_fp32_and_tc_roofs() {
+        let i = sdkde_estimate_d(32768.0, 16).intensity();
+        let fp32_roof = A6000_FP32_PEAK_FLOPS / A6000_BANDWIDTH_BPS; // ~52
+        let tc_roof = A6000_TC_PEAK_FLOPS / A6000_BANDWIDTH_BPS; // ~201
+        assert!(i > fp32_roof && i < tc_roof, "i={i}");
+    }
+
+    #[test]
+    fn one_d_flops_constant_17_75() {
+        let k = 32768.0;
+        let coeff = sdkde_flops_1d(k, None) / (k * k);
+        assert!((coeff - 17.75).abs() < 1e-9, "coeff={coeff}");
+    }
+
+    #[test]
+    fn one_d_flops_order_2e10_at_32k() {
+        let f = sdkde_flops_1d(32768.0, None);
+        assert!((f - 2e10).abs() / 2e10 < 0.1, "f={f}");
+    }
+
+    #[test]
+    fn one_d_intensity_scales_3_55_k() {
+        let k = 65536.0;
+        let i = sdkde_estimate_1d(k).intensity();
+        assert!((i / k - 3.55).abs() < 0.15, "i/k={}", i / k);
+    }
+
+    #[test]
+    fn utilization_math() {
+        assert!((utilization(1e12, 0.1, 1e14) - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kde_flops_linear_in_m() {
+        let a = kde_flops(1000.0, 100.0, 16);
+        let b = kde_flops(1000.0, 200.0, 16);
+        assert!((b / a - 2.0).abs() < 1e-12);
+    }
+}

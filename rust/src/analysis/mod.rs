@@ -1,0 +1,16 @@
+//! Analysis layer: the paper's performance models and accuracy metrics.
+//!
+//! * `flops` — §4.1 + App. A FLOP/byte/intensity models (python twin:
+//!   `compile/flopmodel.py`).
+//! * `roofline` — machine models (A6000, TPU-like, this CPU testbed) and
+//!   attainable-performance math for the utilization figures.
+//! * `error_metrics` — importance-sampled MISE/MIAE/negative-mass for the
+//!   oracle benchmarks (Figs. 2/3).
+
+pub mod error_metrics;
+pub mod flops;
+pub mod roofline;
+
+pub use error_metrics::{band, oracle_error, ErrorBand, OracleError};
+pub use flops::FlopEstimate;
+pub use roofline::{MachineModel, UtilizationRow};

@@ -1,0 +1,173 @@
+//! Roofline analysis (Williams et al.): machine models and attainable-
+//! performance calculations for both the paper's A6000 and this testbed.
+//!
+//! The paper argues its kernel sits between the FP32 roof (~50 flops/byte)
+//! and the Tensor-Core roof (~200 flops/byte); the Fig. 5/7 utilization
+//! benches reproduce the same analysis on the CPU machine model, and
+//! DESIGN.md §8 uses `MachineModel::tpu_v4_like()` to estimate real-TPU
+//! performance of the Pallas kernels from their VMEM/MXU structure.
+
+use super::flops::{self, FlopEstimate};
+
+/// A two-roof machine: matrix-engine peak, scalar peak, memory bandwidth.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MachineModel {
+    pub name: &'static str,
+    /// Matrix-unit peak (Tensor Core / MXU), FLOP/s.
+    pub matrix_peak: f64,
+    /// Scalar/vector FP32 peak, FLOP/s.
+    pub scalar_peak: f64,
+    /// Main-memory bandwidth, bytes/s.
+    pub bandwidth: f64,
+}
+
+impl MachineModel {
+    /// The paper's RTX A6000 (§3).
+    pub fn a6000() -> Self {
+        MachineModel {
+            name: "RTX A6000",
+            matrix_peak: flops::A6000_TC_PEAK_FLOPS,
+            scalar_peak: flops::A6000_FP32_PEAK_FLOPS,
+            bandwidth: flops::A6000_BANDWIDTH_BPS,
+        }
+    }
+
+    /// A TPU-v4-like core: 275 TFLOP/s bf16 MXU, ~30 TFLOP/s VPU-ish
+    /// scalar, 1.2 TB/s HBM.  Used for the DESIGN.md §8 estimates of the
+    /// Pallas kernels on real hardware.
+    pub fn tpu_v4_like() -> Self {
+        MachineModel {
+            name: "TPU-v4-like",
+            matrix_peak: 275.0e12,
+            scalar_peak: 30.0e12,
+            bandwidth: 1.2e12,
+        }
+    }
+
+    /// This testbed: one EPYC-class core driving XLA-CPU.  Peaks are
+    /// order-of-magnitude calibration values (measured GEMM throughput of
+    /// XLA CPU on this box lands near 5e10 FLOP/s single-core); used only
+    /// to contextualize measured utilizations, never to claim them.
+    pub fn cpu_testbed() -> Self {
+        MachineModel {
+            name: "CPU testbed (1 core)",
+            matrix_peak: 5.0e10,
+            scalar_peak: 1.0e10,
+            bandwidth: 2.0e10,
+        }
+    }
+
+    /// Machine balance against the matrix roof, flops/byte.
+    pub fn matrix_balance(&self) -> f64 {
+        self.matrix_peak / self.bandwidth
+    }
+
+    /// Machine balance against the scalar roof, flops/byte.
+    pub fn scalar_balance(&self) -> f64 {
+        self.scalar_peak / self.bandwidth
+    }
+
+    /// Attainable FLOP/s at a given arithmetic intensity (classic roofline
+    /// min(peak, intensity * bandwidth)) against the matrix roof.
+    pub fn attainable(&self, intensity: f64) -> f64 {
+        (intensity * self.bandwidth).min(self.matrix_peak)
+    }
+
+    /// Roofline-predicted runtime for a work estimate.
+    pub fn predicted_runtime_s(&self, est: &FlopEstimate) -> f64 {
+        let compute = est.flops / self.matrix_peak;
+        let memory = est.bytes / self.bandwidth;
+        compute.max(memory)
+    }
+
+    /// Is a kernel with this intensity compute-bound on this machine?
+    pub fn compute_bound(&self, intensity: f64) -> bool {
+        intensity >= self.matrix_balance()
+    }
+}
+
+/// Utilization report row produced by the Fig. 5 / Fig. 7 benches.
+#[derive(Debug, Clone, PartialEq)]
+pub struct UtilizationRow {
+    pub n_train: usize,
+    pub runtime_ms: f64,
+    pub model_flops: f64,
+    /// Fraction of the machine's matrix peak sustained.
+    pub utilization: f64,
+}
+
+pub fn utilization_row(
+    machine: &MachineModel,
+    n_train: usize,
+    model_flops: f64,
+    runtime_s: f64,
+) -> UtilizationRow {
+    UtilizationRow {
+        n_train,
+        runtime_ms: runtime_s * 1e3,
+        model_flops,
+        utilization: flops::utilization(model_flops, runtime_s, machine.matrix_peak),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn a6000_balances_match_paper() {
+        let m = MachineModel::a6000();
+        assert!((m.matrix_balance() - 200.0).abs() < 5.0);
+        assert!((m.scalar_balance() - 52.0).abs() < 3.0);
+    }
+
+    #[test]
+    fn paper_kernel_is_compute_bound_relative_to_scalar_roof() {
+        // §4.1: 72 flops/byte is above the FP32 roof (~52) but below the
+        // TC roof (~200) — "straddles these two limits".
+        let m = MachineModel::a6000();
+        let i = flops::sdkde_estimate_d(32768.0, 16).intensity();
+        assert!(i > m.scalar_balance());
+        assert!(!m.compute_bound(i)); // not above the *matrix* roof
+    }
+
+    #[test]
+    fn attainable_clips_at_peak() {
+        let m = MachineModel::a6000();
+        assert_eq!(m.attainable(1e6), m.matrix_peak);
+        let low = m.attainable(1.0);
+        assert!((low - m.bandwidth).abs() / m.bandwidth < 1e-12);
+    }
+
+    #[test]
+    fn predicted_runtime_takes_max_of_roofs() {
+        let m = MachineModel {
+            name: "toy",
+            matrix_peak: 100.0,
+            scalar_peak: 10.0,
+            bandwidth: 10.0,
+        };
+        // 1000 flops / 100 = 10 s compute; 10 bytes / 10 = 1 s memory.
+        let est = FlopEstimate { flops: 1000.0, bytes: 10.0 };
+        assert!((m.predicted_runtime_s(&est) - 10.0).abs() < 1e-12);
+        // Memory-bound case.
+        let est = FlopEstimate { flops: 10.0, bytes: 1000.0 };
+        assert!((m.predicted_runtime_s(&est) - 100.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn utilization_row_math() {
+        let m = MachineModel { name: "toy", matrix_peak: 1e9, scalar_peak: 1e8, bandwidth: 1e9 };
+        let row = utilization_row(&m, 1024, 1e6, 0.01);
+        assert_eq!(row.n_train, 1024);
+        assert!((row.runtime_ms - 10.0).abs() < 1e-9);
+        // 1e6 flops / 0.01 s = 1e8 FLOP/s = 10% of 1e9.
+        assert!((row.utilization - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tpu_model_sane() {
+        let t = MachineModel::tpu_v4_like();
+        assert!(t.matrix_balance() > 200.0); // HBM-era balance
+    }
+}

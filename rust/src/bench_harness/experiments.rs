@@ -1,0 +1,542 @@
+//! Experiment definitions: one function per paper table/figure.
+//!
+//! Each experiment returns a `Table` whose rows mirror the series the
+//! paper reports (DESIGN.md §5 experiment index).  Absolute times here are
+//! single-core CPU-PJRT numbers; the claims under reproduction are the
+//! *orderings, scaling exponents and crossovers* — EXPERIMENTS.md places
+//! them next to the paper's GPU numbers.
+//!
+//! The experiments drive `ExecutableStore` directly (single-threaded, no
+//! queueing noise); the coordinator micro-bench exercises the L3 path.
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::analysis::{flops, oracle_error, roofline::MachineModel};
+use crate::data::mixture::{by_dim, Mixture};
+use crate::estimator::{bandwidth, native};
+use crate::runtime::{ArtifactEntry, ExecutableStore, HostTensor, Manifest};
+use crate::util::rng::Pcg64;
+use crate::util::stats;
+
+use super::report::{fmt_err, fmt_ms, fmt_speedup, Table};
+use super::runner::{black_box, measure, Measurement, RunSpec};
+
+/// Shared experiment context.
+pub struct Ctx {
+    pub store: ExecutableStore,
+    pub spec: RunSpec,
+    /// Override the default n-sweep (from `--sizes`).
+    pub sizes_16d: Vec<usize>,
+    pub sizes_1d: Vec<usize>,
+    /// Run the slow native baseline up to this n (it is O(n² d) scalar).
+    pub naive_max_n: usize,
+    pub seeds: u64,
+}
+
+impl Ctx {
+    pub fn new(artifacts_dir: &std::path::Path) -> Result<Ctx> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        Ok(Ctx {
+            store: ExecutableStore::open(manifest)?,
+            spec: RunSpec::default(),
+            sizes_16d: vec![512, 1024, 2048, 4096, 8192],
+            sizes_1d: vec![1024, 4096, 16384],
+            naive_max_n: 2048,
+            seeds: 3,
+        })
+    }
+
+    /// Keep only sweep sizes that actually have artifacts.
+    fn present_sizes(&self, d: usize, pipeline: &str, variant: &str) -> Vec<usize> {
+        let all = if d == 1 { &self.sizes_1d } else { &self.sizes_16d };
+        all.iter()
+            .copied()
+            .filter(|&n| {
+                self.store
+                    .manifest()
+                    .find(pipeline, variant, d, n, n / 8)
+                    .is_some()
+            })
+            .collect()
+    }
+}
+
+/// Benchmark problem data at one (n, m, d) from the canonical mixture.
+pub struct Problem {
+    pub x: HostTensor,
+    pub w: HostTensor,
+    pub y: HostTensor,
+    pub h: f64,
+    pub h_score: f64,
+    pub truth_y: Vec<f64>,
+    pub mix: Mixture,
+}
+
+pub fn problem(n: usize, m: usize, d: usize, seed: u64) -> Problem {
+    let mix = by_dim(d);
+    let mut rng = Pcg64::new(seed, 77);
+    let xs = mix.sample(n, &mut rng);
+    let ys = mix.sample(m, &mut rng);
+    let h = bandwidth::sdkde_rate(&xs, n, d);
+    let h_score = bandwidth::score_bandwidth(h);
+    let truth_y = mix.pdf(&ys);
+    Problem {
+        x: HostTensor::matrix(n, d, xs).expect("shape"),
+        w: HostTensor::full(vec![n], 1.0),
+        y: HostTensor::matrix(m, d, ys).expect("shape"),
+        h,
+        h_score,
+        truth_y,
+        mix,
+    }
+}
+
+/// Build the input vector for a pipeline in wire order (see model.py).
+pub fn inputs_for(pipeline: &str, p: &Problem) -> Vec<HostTensor> {
+    let h = HostTensor::scalar(p.h as f32);
+    let hs = HostTensor::scalar(p.h_score as f32);
+    match pipeline {
+        "kde" | "laplace" => vec![p.x.clone(), p.w.clone(), p.y.clone(), h],
+        "sdkde_fit" => vec![p.x.clone(), p.w.clone(), h, hs],
+        "sdkde_e2e" => vec![p.x.clone(), p.w.clone(), p.y.clone(), h, hs],
+        other => panic!("unknown pipeline {other}"),
+    }
+}
+
+/// Time one artifact end-to-end (inputs pre-built, outputs black-boxed).
+fn time_artifact(
+    ctx: &mut Ctx,
+    entry: &ArtifactEntry,
+    inputs: &[HostTensor],
+    label: &str,
+) -> Result<Measurement> {
+    // Compile outside the timed region (serving steady-state behaviour).
+    ctx.store.warm(entry)?;
+    let spec = ctx.spec;
+    let store = &mut ctx.store;
+    let mut failure = None;
+    let meas = measure(label, spec, || match store.execute(entry, inputs) {
+        Ok(out) => {
+            black_box(out.outputs);
+        }
+        Err(e) => failure = Some(e),
+    });
+    if let Some(e) = failure {
+        return Err(e);
+    }
+    Ok(meas)
+}
+
+/// Run an artifact once and return the first output's data.
+fn run_artifact(
+    ctx: &mut Ctx,
+    entry: &ArtifactEntry,
+    inputs: &[HostTensor],
+) -> Result<Vec<f32>> {
+    let out = ctx.store.execute(entry, inputs)?;
+    Ok(out
+        .outputs
+        .into_iter()
+        .next()
+        .ok_or_else(|| anyhow!("no output"))?
+        .into_data())
+}
+
+fn find_entry(
+    ctx: &Ctx,
+    pipeline: &str,
+    variant: &str,
+    d: usize,
+    n: usize,
+    m: usize,
+) -> Result<ArtifactEntry> {
+    ctx.store
+        .manifest()
+        .find(pipeline, variant, d, n, m)
+        .cloned()
+        .with_context(|| format!("artifact {pipeline}/{variant} d={d} n={n} m={m} missing — rerun `make artifacts`"))
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 1 — 16-D runtime comparison (sklearn / Torch SD-KDE / Flash-SD-KDE).
+// ---------------------------------------------------------------------------
+
+pub fn fig1_runtime_16d(ctx: &mut Ctx) -> Result<Table> {
+    runtime_comparison(ctx, 16, "fig1",
+        "Fig.1 — 16-D SD-KDE runtime (ms), n_test = n/8")
+}
+
+/// Shared by Fig. 1 (d=16) and Fig. 6 (d=1).
+fn runtime_comparison(ctx: &mut Ctx, d: usize, id: &str, title: &str) -> Result<Table> {
+    let sizes = ctx.present_sizes(d, "sdkde_e2e", "flash");
+    let mut table = Table::new(
+        title,
+        &["n_train", "native naive", "SD-KDE (gemm)", "Flash-SD-KDE",
+          "speedup vs naive", "speedup vs gemm"],
+    );
+    table.note("native naive = scalar-loop Rust (scikit-learn analogue); \
+                gemm = materializing XLA baseline (Torch analogue)");
+    for n in sizes {
+        let m = n / 8;
+        let p = problem(n, m, d, 42);
+
+        // Native scalar baseline (capped: it is the slow one by design).
+        let naive_ms = if n <= ctx.naive_max_n {
+            let x = p.x.data().to_vec();
+            let w = p.w.data().to_vec();
+            let y = p.y.data().to_vec();
+            let (h, hs) = (p.h, p.h_score);
+            let meas = measure("naive", RunSpec::new(0, 1), || {
+                black_box(native::sdkde(&x, &w, &y, d, h, hs));
+            });
+            Some(meas.mean_ms())
+        } else {
+            None
+        };
+
+        let gemm = find_entry(ctx, "sdkde_e2e", "gemm", d, n, m)?;
+        let gemm_ms = time_artifact(ctx, &gemm, &inputs_for("sdkde_e2e", &p), "gemm")?
+            .mean_ms();
+        let flash = find_entry(ctx, "sdkde_e2e", "flash", d, n, m)?;
+        let flash_ms =
+            time_artifact(ctx, &flash, &inputs_for("sdkde_e2e", &p), "flash")?
+                .mean_ms();
+
+        table.row(vec![
+            n.to_string(),
+            naive_ms.map(fmt_ms).unwrap_or_else(|| "-".into()),
+            fmt_ms(gemm_ms),
+            fmt_ms(flash_ms),
+            naive_ms
+                .map(|nv| fmt_speedup(nv / flash_ms))
+                .unwrap_or_else(|| "-".into()),
+            fmt_speedup(gemm_ms / flash_ms),
+        ]);
+    }
+    let mut t = table;
+    t.notes.push(format!("iters={} warmup={}", ctx.spec.iters, ctx.spec.warmup));
+    let _ = id;
+    Ok(t)
+}
+
+// ---------------------------------------------------------------------------
+// Table 1 — comparison against the streaming (PyKeOps-analogue) baseline.
+// ---------------------------------------------------------------------------
+
+pub fn table1_keops(ctx: &mut Ctx) -> Result<Table> {
+    let d = 16;
+    // Paper: n=32k, m=4k; scaled to the largest artifact bucket present.
+    let n = *ctx
+        .present_sizes(d, "sdkde_e2e", "stream")
+        .last()
+        .ok_or_else(|| anyhow!("no stream artifacts"))?;
+    let m = n / 8;
+    let p = problem(n, m, d, 7);
+
+    let mut rows: Vec<(String, f64)> = Vec::new();
+    let flash = find_entry(ctx, "sdkde_e2e", "flash", d, n, m)?;
+    let flash_ms =
+        time_artifact(ctx, &flash, &inputs_for("sdkde_e2e", &p), "flash")?.mean_ms();
+    rows.push(("16-D Flash-SD-KDE".into(), flash_ms));
+
+    let kde_stream = find_entry(ctx, "kde", "stream", d, n, m)?;
+    rows.push((
+        "KeOps-style 16-D KDE (stream)".into(),
+        time_artifact(ctx, &kde_stream, &inputs_for("kde", &p), "kde-stream")?
+            .mean_ms(),
+    ));
+    let sd_stream = find_entry(ctx, "sdkde_e2e", "stream", d, n, m)?;
+    rows.push((
+        "KeOps-style 16-D SD-KDE (stream)".into(),
+        time_artifact(ctx, &sd_stream, &inputs_for("sdkde_e2e", &p), "sd-stream")?
+            .mean_ms(),
+    ));
+
+    let mut table = Table::new(
+        &format!("Table 1 — vs streaming baseline @ n={n}, m={m}"),
+        &["method", "runtime (ms)", "rel. to Flash-SD-KDE"],
+    );
+    table.note("paper: 2.11ms / 3.33ms (1.57x) / 16.91ms (7.99x) at n=32k on A6000");
+    for (name, ms) in &rows {
+        table.row(vec![name.clone(), fmt_ms(*ms), fmt_speedup(ms / flash_ms)]);
+    }
+    Ok(table)
+}
+
+// ---------------------------------------------------------------------------
+// Figs. 2/3 — oracle MISE/MIAE sweeps.
+// ---------------------------------------------------------------------------
+
+pub fn fig2_oracle_16d(ctx: &mut Ctx) -> Result<Table> {
+    oracle_sweep(ctx, 16, "Fig.2 — 16-D oracle error (MISE / MIAE)")
+}
+
+pub fn fig3_oracle_1d(ctx: &mut Ctx) -> Result<Table> {
+    oracle_sweep(ctx, 1, "Fig.3 — 1-D oracle error (MISE / MIAE)")
+}
+
+/// Oracle bandwidth grid per dimension.  Each estimator gets its *own*
+/// oracle-tuned h (the paper's oracle-benchmark setting: the true density
+/// is available, so each estimator is shown at its best) — bandwidth is a
+/// runtime scalar input, so the whole grid reuses one compiled artifact.
+fn h_grid(d: usize) -> Vec<f64> {
+    let (lo, hi, steps) = if d == 1 { (0.04, 1.0, 10) } else { (0.4, 3.0, 8) };
+    let ratio: f64 = (hi / lo as f64).powf(1.0 / (steps - 1) as f64);
+    (0..steps).map(|i| lo * ratio.powi(i as i32)).collect()
+}
+
+/// Build pipeline inputs at an explicit bandwidth (h_score = h/sqrt(2)).
+fn inputs_at_h(pipeline: &str, p: &Problem, h: f64) -> Vec<HostTensor> {
+    let h_t = HostTensor::scalar(h as f32);
+    let hs_t = HostTensor::scalar((h / std::f64::consts::SQRT_2) as f32);
+    match pipeline {
+        "kde" | "laplace" => vec![p.x.clone(), p.w.clone(), p.y.clone(), h_t],
+        "sdkde_e2e" => vec![p.x.clone(), p.w.clone(), p.y.clone(), h_t, hs_t],
+        other => panic!("unexpected pipeline {other}"),
+    }
+}
+
+fn oracle_sweep(ctx: &mut Ctx, d: usize, title: &str) -> Result<Table> {
+    let sizes = ctx.present_sizes(d, "sdkde_e2e", "flash");
+    let estimators: [(&str, &str, &str); 4] = [
+        ("KDE", "kde", "flash"),
+        ("Flash-Laplace-KDE", "laplace", "flash"),
+        ("Laplace (non-fused)", "laplace", "nonfused"),
+        ("Flash-SD-KDE", "sdkde_e2e", "flash"),
+    ];
+    let mut table = Table::new(
+        title,
+        &["n_train", "estimator", "h*", "MISE", "MIAE", "neg.mass"],
+    );
+    table.note("signed-density errors, importance-sampled at n/8 mixture \
+                draws; mean over seeds; h* oracle-tuned per estimator on \
+                seed 0 (MISE-minimizing over a log grid)");
+    for n in sizes {
+        let m = n / 8;
+        for (label, pipeline, variant) in estimators {
+            let entry = find_entry(ctx, pipeline, variant, d, n, m)?;
+
+            // Oracle bandwidth selection on the tuning seed.
+            let tune = problem(n, m, d, 1000);
+            let mut best = (f64::INFINITY, tune.h);
+            for h in h_grid(d) {
+                let dens = run_artifact(ctx, &entry, &inputs_at_h(pipeline, &tune, h))?;
+                let est: Vec<f64> = dens.iter().map(|&v| v as f64).collect();
+                let err = oracle_error(&est, &tune.truth_y);
+                if err.mise < best.0 {
+                    best = (err.mise, h);
+                }
+            }
+            let h_star = best.1;
+
+            // Measure over fresh seeds at the tuned bandwidth.
+            let mut mises = Vec::new();
+            let mut miaes = Vec::new();
+            let mut negs = Vec::new();
+            for seed in 0..ctx.seeds {
+                let p = problem(n, m, d, 2000 + seed);
+                let dens =
+                    run_artifact(ctx, &entry, &inputs_at_h(pipeline, &p, h_star))?;
+                let est: Vec<f64> = dens.iter().map(|&v| v as f64).collect();
+                let err = oracle_error(&est, &p.truth_y);
+                mises.push(err.mise);
+                miaes.push(err.miae);
+                negs.push(err.negative_mass);
+            }
+            table.row(vec![
+                n.to_string(),
+                label.to_string(),
+                format!("{h_star:.3}"),
+                fmt_err(stats::mean(&mises)),
+                fmt_err(stats::mean(&miaes)),
+                fmt_err(stats::mean(&negs)),
+            ]);
+        }
+    }
+    Ok(table)
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 4 — fused vs non-fused Laplace runtime (1-D) + speedups.
+// ---------------------------------------------------------------------------
+
+pub fn fig4_fusion_1d(ctx: &mut Ctx) -> Result<Table> {
+    let d = 1;
+    let sizes = ctx.present_sizes(d, "laplace", "flash");
+    let mut table = Table::new(
+        "Fig.4 — Laplace fusion runtime (1-D)",
+        &["n_train", "fused (ms)", "non-fused (ms)", "fusion speedup",
+          "SD-KDE/Laplace ratio"],
+    );
+    for n in sizes {
+        let m = n / 8;
+        let p = problem(n, m, d, 11);
+        let fused = find_entry(ctx, "laplace", "flash", d, n, m)?;
+        let fused_ms =
+            time_artifact(ctx, &fused, &inputs_for("laplace", &p), "fused")?.mean_ms();
+        let nonfused = find_entry(ctx, "laplace", "nonfused", d, n, m)?;
+        let nonfused_ms =
+            time_artifact(ctx, &nonfused, &inputs_for("laplace", &p), "nonfused")?
+                .mean_ms();
+        let sdkde = find_entry(ctx, "sdkde_e2e", "flash", d, n, m)?;
+        let sdkde_ms =
+            time_artifact(ctx, &sdkde, &inputs_for("sdkde_e2e", &p), "sdkde")?
+                .mean_ms();
+        table.row(vec![
+            n.to_string(),
+            fmt_ms(fused_ms),
+            fmt_ms(nonfused_ms),
+            fmt_speedup(nonfused_ms / fused_ms),
+            fmt_speedup(sdkde_ms / fused_ms),
+        ]);
+    }
+    Ok(table)
+}
+
+// ---------------------------------------------------------------------------
+// Figs. 5/7 — utilization from the flop model + measured runtimes.
+// ---------------------------------------------------------------------------
+
+pub fn fig5_utilization_16d(ctx: &mut Ctx) -> Result<Table> {
+    utilization_sweep(ctx, 16, "Fig.5 — 16-D utilization (flop model / measured)")
+}
+
+pub fn fig7_utilization_1d(ctx: &mut Ctx) -> Result<Table> {
+    utilization_sweep(ctx, 1, "Fig.7 — 1-D utilization, flash vs gemm")
+}
+
+fn utilization_sweep(ctx: &mut Ctx, d: usize, title: &str) -> Result<Table> {
+    let machine = MachineModel::cpu_testbed();
+    let sizes = ctx.present_sizes(d, "sdkde_e2e", "flash");
+    let mut table = Table::new(
+        title,
+        &["n_train", "variant", "runtime (ms)", "model GFLOPs",
+          "util (testbed)", "util (A6000-scale)"],
+    );
+    table.note(&format!(
+        "testbed peak {:.0e} FLOP/s; A6000-scale column = what the same \
+         FLOPs/runtime ratio would mean against the paper's 155 TFLOP/s peak \
+         (context only)",
+        machine.matrix_peak
+    ));
+    for n in sizes {
+        let m = n / 8;
+        let p = problem(n, m, d, 23);
+        let model_flops = if d == 1 {
+            flops::sdkde_flops_1d(n as f64, Some(m as f64))
+        } else {
+            flops::sdkde_flops_d(n as f64, d, Some(m as f64))
+        };
+        for variant in ["flash", "gemm"] {
+            let entry = find_entry(ctx, "sdkde_e2e", variant, d, n, m)?;
+            let ms = time_artifact(ctx, &entry, &inputs_for("sdkde_e2e", &p), variant)?
+                .mean_ms();
+            let s = ms / 1e3;
+            table.row(vec![
+                n.to_string(),
+                variant.to_string(),
+                fmt_ms(ms),
+                format!("{:.2}", model_flops / 1e9),
+                format!("{:.2}%", 100.0 * flops::utilization(model_flops, s, machine.matrix_peak)),
+                format!("{:.4}%", 100.0 * flops::utilization(model_flops, s, flops::A6000_TC_PEAK_FLOPS)),
+            ]);
+        }
+    }
+    Ok(table)
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 6 — 1-D runtime comparison (appendix sweep).
+// ---------------------------------------------------------------------------
+
+pub fn fig6_runtime_1d(ctx: &mut Ctx) -> Result<Table> {
+    runtime_comparison(ctx, 1, "fig6",
+        "Fig.6 — 1-D SD-KDE runtime (ms), n_test = n/8")
+}
+
+// ---------------------------------------------------------------------------
+// §6.2 — launch-parameter (BLOCK_M x BLOCK_N) sweep ablation.
+// ---------------------------------------------------------------------------
+
+pub fn ablation_blocksweep(ctx: &mut Ctx) -> Result<Table> {
+    let entries: Vec<ArtifactEntry> = ctx
+        .store
+        .manifest()
+        .sweep_entries()
+        .into_iter()
+        .cloned()
+        .collect();
+    if entries.is_empty() {
+        return Err(anyhow!("no sweep artifacts (build without --quick/--no-sweep)"));
+    }
+    let mut table = Table::new(
+        "§6.2 — BlockSpec tile sweep (sdkde_fit, d=16)",
+        &["BLOCK_M", "BLOCK_N", "runtime (ms)", "VMEM est (KiB)", "vs best"],
+    );
+    table.note("paper swept BLOCK_M/BLOCK_N/num_warps/num_stages on Triton; \
+                here the BlockSpec pair is the TPU analogue (DESIGN.md §2)");
+    let mut results = Vec::new();
+    for entry in &entries {
+        let p = problem(entry.n, entry.m, entry.d, 5);
+        let ms = time_artifact(ctx, entry, &inputs_for("sdkde_fit", &p), "sweep")?
+            .mean_ms();
+        let (bm, bn) = entry.tiles.expect("sweep entries carry tiles");
+        // VMEM estimate mirrors python common.TileConfig.vmem_bytes.
+        let vmem = 4 * (bm * entry.d + bn * entry.d + bn + bm * (entry.d + 1));
+        results.push((bm, bn, ms, vmem));
+    }
+    let best = results
+        .iter()
+        .map(|r| r.2)
+        .fold(f64::INFINITY, f64::min);
+    results.sort_by(|a, b| a.2.partial_cmp(&b.2).expect("no NaN"));
+    for (bm, bn, ms, vmem) in results {
+        table.row(vec![
+            bm.to_string(),
+            bn.to_string(),
+            fmt_ms(ms),
+            format!("{:.1}", vmem as f64 / 1024.0),
+            fmt_speedup(ms / best),
+        ]);
+    }
+    Ok(table)
+}
+
+// ---------------------------------------------------------------------------
+// Headline scale: biggest run + power-law extrapolation to the paper's 1M.
+// ---------------------------------------------------------------------------
+
+pub fn headline_scale(ctx: &mut Ctx) -> Result<Table> {
+    let d = 16;
+    let sizes = ctx.present_sizes(d, "sdkde_e2e", "flash");
+    let mut ns = Vec::new();
+    let mut times = Vec::new();
+    let mut table = Table::new(
+        "Headline — Flash-SD-KDE scaling and 1M-point extrapolation",
+        &["n_train", "n_test", "runtime (ms)"],
+    );
+    for &n in &sizes {
+        let m = n / 8;
+        let p = problem(n, m, d, 3);
+        let entry = find_entry(ctx, "sdkde_e2e", "flash", d, n, m)?;
+        let ms = time_artifact(ctx, &entry, &inputs_for("sdkde_e2e", &p), "flash")?
+            .mean_ms();
+        ns.push(n as f64);
+        times.push(ms);
+        table.row(vec![n.to_string(), m.to_string(), fmt_ms(ms)]);
+    }
+    if ns.len() >= 2 {
+        let (c, pexp) = stats::power_law_fit(&ns, &times);
+        let n1m: f64 = 1_048_576.0;
+        let extrapolated_ms = c * n1m.powf(pexp);
+        table.note(&format!(
+            "power-law fit: t(n) = {c:.3e} * n^{pexp:.3} ms (expected exponent ~2)"
+        ));
+        table.note(&format!(
+            "extrapolated 1M-train/131k-query runtime on this CPU testbed: {:.1} s \
+             (paper: 2.3 s on an A6000)",
+            extrapolated_ms / 1e3
+        ));
+    }
+    Ok(table)
+}

@@ -1,0 +1,40 @@
+//! Bench harness: measurement runner, table reporter and the experiment
+//! suite regenerating every table/figure in the paper (DESIGN.md §5).
+//!
+//! `cargo bench` targets under `rust/benches/` are thin wrappers over
+//! `experiments::*`; the `flash-sdkde bench --experiment <id>` CLI reaches
+//! the same functions.
+
+pub mod experiments;
+pub mod report;
+pub mod runner;
+
+pub use report::Table;
+pub use runner::{black_box, measure, Measurement, RunSpec};
+
+use anyhow::Result;
+
+/// Experiment ids addressable from the CLI and bench targets.
+pub const EXPERIMENTS: &[&str] = &[
+    "fig1", "table1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7",
+    "blocksweep", "headline",
+];
+
+/// Dispatch one experiment by id.
+pub fn run_experiment(ctx: &mut experiments::Ctx, id: &str) -> Result<Table> {
+    match id {
+        "fig1" => experiments::fig1_runtime_16d(ctx),
+        "table1" => experiments::table1_keops(ctx),
+        "fig2" => experiments::fig2_oracle_16d(ctx),
+        "fig3" => experiments::fig3_oracle_1d(ctx),
+        "fig4" => experiments::fig4_fusion_1d(ctx),
+        "fig5" => experiments::fig5_utilization_16d(ctx),
+        "fig6" => experiments::fig6_runtime_1d(ctx),
+        "fig7" => experiments::fig7_utilization_1d(ctx),
+        "blocksweep" => experiments::ablation_blocksweep(ctx),
+        "headline" => experiments::headline_scale(ctx),
+        other => Err(anyhow::anyhow!(
+            "unknown experiment {other:?}; available: {EXPERIMENTS:?}"
+        )),
+    }
+}

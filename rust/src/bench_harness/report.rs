@@ -1,0 +1,179 @@
+//! Experiment reporting: aligned console tables (the paper's rows/series)
+//! plus CSV dumps under `target/bench_results/` for EXPERIMENTS.md.
+
+use std::fmt::Write as _;
+use std::path::PathBuf;
+
+/// A rendered experiment table.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    pub notes: Vec<String>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            notes: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn note(&mut self, note: &str) {
+        self.notes.push(note.to_string());
+    }
+
+    /// Aligned plain-text rendering.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "\n=== {} ===", self.title);
+        let line = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}", w = w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let _ = writeln!(out, "{}", line(&self.headers, &widths));
+        let _ = writeln!(
+            out,
+            "{}",
+            widths
+                .iter()
+                .map(|w| "-".repeat(*w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        );
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", line(row, &widths));
+        }
+        for note in &self.notes {
+            let _ = writeln!(out, "note: {note}");
+        }
+        out
+    }
+
+    /// CSV rendering (headers + rows; notes become # comments).
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| -> String {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = String::new();
+        for note in &self.notes {
+            let _ = writeln!(out, "# {note}");
+        }
+        let _ = writeln!(
+            out,
+            "{}",
+            self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(",")
+        );
+        for row in &self.rows {
+            let _ = writeln!(
+                out,
+                "{}",
+                row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(",")
+            );
+        }
+        out
+    }
+
+    /// Print to stdout and persist CSV under `target/bench_results/<id>.csv`.
+    pub fn emit(&self, id: &str) {
+        print!("{}", self.render());
+        let dir = PathBuf::from("target/bench_results");
+        if std::fs::create_dir_all(&dir).is_ok() {
+            let path = dir.join(format!("{id}.csv"));
+            if let Err(e) = std::fs::write(&path, self.to_csv()) {
+                eprintln!("warning: could not write {}: {e}", path.display());
+            } else {
+                println!("(csv: {})", path.display());
+            }
+        }
+    }
+}
+
+/// Milliseconds with sensible precision for bench tables.
+pub fn fmt_ms(ms: f64) -> String {
+    if ms >= 100.0 {
+        format!("{ms:.0}")
+    } else if ms >= 1.0 {
+        format!("{ms:.2}")
+    } else {
+        format!("{ms:.3}")
+    }
+}
+
+/// Speedup ratio, "12.3x".
+pub fn fmt_speedup(ratio: f64) -> String {
+    format!("{ratio:.2}x")
+}
+
+/// Scientific-ish error formatting for MISE/MIAE columns.
+pub fn fmt_err(e: f64) -> String {
+    format!("{e:.3e}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_aligns_columns() {
+        let mut t = Table::new("demo", &["n", "runtime"]);
+        t.row(vec!["512".into(), "1.5".into()]);
+        t.row(vec!["131072".into(), "123.4".into()]);
+        let r = t.render();
+        assert!(r.contains("=== demo ==="));
+        // Both rows end aligned on the right.
+        let lines: Vec<&str> = r.lines().collect();
+        assert_eq!(lines[2].len(), lines[4].len());
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn arity_checked() {
+        let mut t = Table::new("demo", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn csv_escapes() {
+        let mut t = Table::new("demo", &["name", "v"]);
+        t.row(vec!["a,b".into(), "q\"q".into()]);
+        t.note("hello");
+        let csv = t.to_csv();
+        assert!(csv.contains("# hello"));
+        assert!(csv.contains("\"a,b\""));
+        assert!(csv.contains("\"q\"\"q\""));
+    }
+
+    #[test]
+    fn formatting_helpers() {
+        assert_eq!(fmt_ms(0.1234), "0.123");
+        assert_eq!(fmt_ms(12.345), "12.35");
+        assert_eq!(fmt_ms(1234.6), "1235");
+        assert_eq!(fmt_speedup(47.0), "47.00x");
+        assert!(fmt_err(0.000123).contains('e'));
+    }
+}

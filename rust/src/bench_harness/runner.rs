@@ -1,0 +1,100 @@
+//! Measurement core (criterion is unavailable offline; this provides the
+//! subset the experiment suite needs: warmup, repeated timed runs, and
+//! robust summaries).
+
+use std::time::Instant;
+
+use crate::util::stats::Summary;
+
+/// Benchmark knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct RunSpec {
+    pub warmup: usize,
+    pub iters: usize,
+}
+
+impl Default for RunSpec {
+    fn default() -> Self {
+        RunSpec { warmup: 1, iters: 3 }
+    }
+}
+
+impl RunSpec {
+    pub fn new(warmup: usize, iters: usize) -> Self {
+        assert!(iters >= 1, "need at least one measured iteration");
+        RunSpec { warmup, iters }
+    }
+}
+
+/// One benchmark measurement in seconds.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub seconds: Summary,
+}
+
+impl Measurement {
+    pub fn mean_ms(&self) -> f64 {
+        self.seconds.mean * 1e3
+    }
+
+    pub fn min_ms(&self) -> f64 {
+        self.seconds.min * 1e3
+    }
+}
+
+/// Run `f` with warmup and return a summary of wall times.
+///
+/// `f` must perform the complete operation each call (the runner adds no
+/// per-iteration sync; XLA executions are synchronous already).
+pub fn measure<F: FnMut()>(name: &str, spec: RunSpec, mut f: F) -> Measurement {
+    for _ in 0..spec.warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(spec.iters);
+    for _ in 0..spec.iters {
+        let start = Instant::now();
+        f();
+        samples.push(start.elapsed().as_secs_f64());
+    }
+    Measurement { name: name.to_string(), seconds: Summary::of(&samples) }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    // std::hint::black_box is stable since 1.66.
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_runs_warmup_plus_iters() {
+        let mut calls = 0usize;
+        let m = measure("t", RunSpec::new(2, 5), || {
+            calls += 1;
+        });
+        assert_eq!(calls, 7);
+        assert_eq!(m.seconds.count, 5);
+        assert_eq!(m.name, "t");
+    }
+
+    #[test]
+    fn measure_times_are_sane() {
+        let m = measure("sleep", RunSpec::new(0, 2), || {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        });
+        assert!(m.mean_ms() >= 5.0, "mean={}", m.mean_ms());
+        assert!(m.mean_ms() < 500.0);
+        assert!(m.min_ms() <= m.mean_ms());
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one")]
+    fn zero_iters_rejected() {
+        RunSpec::new(1, 0);
+    }
+}

@@ -1,0 +1,231 @@
+//! Typed configuration for the coordinator, engine and bench harness.
+//!
+//! Config is layered: compiled-in defaults < JSON config file < CLI
+//! overrides.  The schema is deliberately flat — every field maps to one
+//! operational knob, documented inline.  See `configs/*.json` for examples.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{self, Value};
+
+/// Everything the server/engine needs to run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Config {
+    /// Directory holding `manifest.json` + `*.hlo.txt` (built by
+    /// `make artifacts`).
+    pub artifacts_dir: PathBuf,
+    /// TCP bind address for `serve`.
+    pub host: String,
+    pub port: u16,
+    /// Bounded request-queue depth; beyond this the server sheds load
+    /// (backpressure, DESIGN.md coordinator section).
+    pub queue_depth: usize,
+    /// Dynamic batcher: max time a request may wait for co-batching.
+    pub batch_wait_ms: u64,
+    /// Dynamic batcher: preferred query bucket (must exist in artifacts).
+    pub batch_max_queries: usize,
+    /// Default evaluation pipeline variant served ("flash", "gemm", ...).
+    pub default_variant: String,
+    /// Maximum number of fitted models kept resident.
+    pub registry_capacity: usize,
+    /// Engine worker threads (each owns a PJRT client).
+    pub engine_workers: usize,
+    /// Warm the executable cache at startup for these dims.
+    pub warm_dims: Vec<usize>,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            artifacts_dir: PathBuf::from("artifacts"),
+            host: "127.0.0.1".to_string(),
+            port: 7474,
+            queue_depth: 256,
+            batch_wait_ms: 2,
+            batch_max_queries: 256,
+            default_variant: "flash".to_string(),
+            registry_capacity: 64,
+            engine_workers: 1,
+            warm_dims: vec![],
+        }
+    }
+}
+
+impl Config {
+    /// Load from a JSON file, layered over defaults.
+    pub fn from_file(path: &Path) -> Result<Config, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("cannot read config {}: {e}", path.display()))?;
+        let value = json::parse(&text)
+            .map_err(|e| format!("config {}: {e}", path.display()))?;
+        Self::from_json(&value)
+    }
+
+    /// Build from a parsed JSON object (unknown keys rejected: typos in
+    /// operational config must fail loudly, not silently default).
+    pub fn from_json(v: &Value) -> Result<Config, String> {
+        let obj = v
+            .as_object()
+            .ok_or_else(|| "config root must be an object".to_string())?;
+        let known = [
+            "artifacts_dir", "host", "port", "queue_depth", "batch_wait_ms",
+            "batch_max_queries", "default_variant", "registry_capacity",
+            "engine_workers", "warm_dims",
+        ];
+        for key in obj.keys() {
+            if !known.contains(&key.as_str()) {
+                return Err(format!("unknown config key {key:?}"));
+            }
+        }
+
+        let mut cfg = Config::default();
+        if let Some(x) = obj.get("artifacts_dir") {
+            cfg.artifacts_dir = PathBuf::from(
+                x.as_str().ok_or("artifacts_dir must be a string")?,
+            );
+        }
+        if let Some(x) = obj.get("host") {
+            cfg.host = x.as_str().ok_or("host must be a string")?.to_string();
+        }
+        if let Some(x) = obj.get("port") {
+            let p = x.as_usize().ok_or("port must be an integer")?;
+            cfg.port = u16::try_from(p).map_err(|_| "port out of range")?;
+        }
+        if let Some(x) = obj.get("queue_depth") {
+            cfg.queue_depth = x.as_usize().ok_or("queue_depth must be an integer")?;
+        }
+        if let Some(x) = obj.get("batch_wait_ms") {
+            cfg.batch_wait_ms =
+                x.as_usize().ok_or("batch_wait_ms must be an integer")? as u64;
+        }
+        if let Some(x) = obj.get("batch_max_queries") {
+            cfg.batch_max_queries =
+                x.as_usize().ok_or("batch_max_queries must be an integer")?;
+        }
+        if let Some(x) = obj.get("default_variant") {
+            cfg.default_variant =
+                x.as_str().ok_or("default_variant must be a string")?.to_string();
+        }
+        if let Some(x) = obj.get("registry_capacity") {
+            cfg.registry_capacity =
+                x.as_usize().ok_or("registry_capacity must be an integer")?;
+        }
+        if let Some(x) = obj.get("engine_workers") {
+            cfg.engine_workers =
+                x.as_usize().ok_or("engine_workers must be an integer")?;
+        }
+        if let Some(x) = obj.get("warm_dims") {
+            let arr = x.as_array().ok_or("warm_dims must be an array")?;
+            cfg.warm_dims = arr
+                .iter()
+                .map(|v| v.as_usize().ok_or("warm_dims entries must be integers"))
+                .collect::<Result<Vec<_>, _>>()?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Sanity constraints shared by file and CLI construction.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.queue_depth == 0 {
+            return Err("queue_depth must be >= 1".to_string());
+        }
+        if self.batch_max_queries == 0 {
+            return Err("batch_max_queries must be >= 1".to_string());
+        }
+        if self.engine_workers == 0 {
+            return Err("engine_workers must be >= 1".to_string());
+        }
+        if self.registry_capacity == 0 {
+            return Err("registry_capacity must be >= 1".to_string());
+        }
+        const VARIANTS: [&str; 4] = ["flash", "gemm", "stream", "naive"];
+        if !VARIANTS.contains(&self.default_variant.as_str()) {
+            return Err(format!(
+                "default_variant must be one of {VARIANTS:?}, got {:?}",
+                self.default_variant
+            ));
+        }
+        Ok(())
+    }
+
+    /// Render as JSON (used by `flash-sdkde info --dump-config`).
+    pub fn to_json(&self) -> Value {
+        Value::object(vec![
+            ("artifacts_dir", Value::from(self.artifacts_dir.display().to_string())),
+            ("host", Value::from(self.host.as_str())),
+            ("port", Value::from(self.port as usize)),
+            ("queue_depth", Value::from(self.queue_depth)),
+            ("batch_wait_ms", Value::from(self.batch_wait_ms as usize)),
+            ("batch_max_queries", Value::from(self.batch_max_queries)),
+            ("default_variant", Value::from(self.default_variant.as_str())),
+            ("registry_capacity", Value::from(self.registry_capacity)),
+            ("engine_workers", Value::from(self.engine_workers)),
+            (
+                "warm_dims",
+                Value::Array(self.warm_dims.iter().map(|&d| Value::from(d)).collect()),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        Config::default().validate().unwrap();
+    }
+
+    #[test]
+    fn from_json_overrides_layer_over_defaults() {
+        let v = json::parse(
+            r#"{"port": 9000, "default_variant": "gemm", "warm_dims": [1, 16]}"#,
+        )
+        .unwrap();
+        let cfg = Config::from_json(&v).unwrap();
+        assert_eq!(cfg.port, 9000);
+        assert_eq!(cfg.default_variant, "gemm");
+        assert_eq!(cfg.warm_dims, vec![1, 16]);
+        // Untouched fields keep defaults.
+        assert_eq!(cfg.queue_depth, Config::default().queue_depth);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let v = json::parse(r#"{"prot": 9000}"#).unwrap();
+        let err = Config::from_json(&v).unwrap_err();
+        assert!(err.contains("prot"), "{err}");
+    }
+
+    #[test]
+    fn bad_types_rejected() {
+        for bad in [
+            r#"{"port": "nine"}"#,
+            r#"{"queue_depth": 1.5}"#,
+            r#"{"warm_dims": [1, "x"]}"#,
+            r#"{"port": 70000}"#,
+        ] {
+            let v = json::parse(bad).unwrap();
+            assert!(Config::from_json(&v).is_err(), "accepted {bad}");
+        }
+    }
+
+    #[test]
+    fn semantic_validation() {
+        let v = json::parse(r#"{"queue_depth": 0}"#).unwrap();
+        assert!(Config::from_json(&v).is_err());
+        let v = json::parse(r#"{"default_variant": "turbo"}"#).unwrap();
+        assert!(Config::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let mut cfg = Config::default();
+        cfg.port = 1234;
+        cfg.warm_dims = vec![16];
+        let back = Config::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(cfg, back);
+    }
+}

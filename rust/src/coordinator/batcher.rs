@@ -1,0 +1,166 @@
+//! Dynamic batching policy: pure, property-testable planning logic.
+//!
+//! The dispatcher coalesces eval requests for the *same fitted model* into
+//! one artifact execution (queries are concatenated along the query axis —
+//! exactly the paper's n_test dimension, which is embarrassingly parallel).
+//! This module owns the arithmetic: query budgets, row chunking against
+//! the available m-buckets, and scatter of batched densities back to the
+//! per-request replies.
+
+/// Greedy query-budget admission: given per-request query counts in FIFO
+/// order, return how many leading requests fit within `budget` rows.
+/// The head request is always admitted (oversized heads are row-chunked
+/// downstream) — a request can never starve because it is too big.
+pub fn admit_by_budget(ks: &[usize], budget: usize) -> usize {
+    if ks.is_empty() {
+        return 0;
+    }
+    let mut used = ks[0];
+    let mut admitted = 1;
+    for &k in &ks[1..] {
+        if used + k > budget {
+            break;
+        }
+        used += k;
+        admitted += 1;
+    }
+    admitted
+}
+
+/// Split `total` query rows into contiguous chunks of at most `max_rows`.
+pub fn chunk_rows(total: usize, max_rows: usize) -> Vec<(usize, usize)> {
+    assert!(max_rows >= 1, "max_rows must be >= 1");
+    assert!(total >= 1, "no rows to chunk");
+    let mut out = Vec::with_capacity(total.div_ceil(max_rows));
+    let mut start = 0;
+    while start < total {
+        let end = (start + max_rows).min(total);
+        out.push((start, end));
+        start = end;
+    }
+    out
+}
+
+/// Pick the tightest m-bucket covering `rows` from a sorted bucket list;
+/// falls back to the largest bucket (the caller chunks in that case).
+pub fn pick_m_bucket(m_buckets: &[usize], rows: usize) -> Option<usize> {
+    if m_buckets.is_empty() {
+        return None;
+    }
+    m_buckets
+        .iter()
+        .copied()
+        .filter(|&m| m >= rows)
+        .min()
+        .or_else(|| m_buckets.iter().copied().max())
+}
+
+/// Scatter a concatenated density vector back to per-request slices.
+pub fn scatter(densities: &[f32], ks: &[usize]) -> Vec<Vec<f32>> {
+    let total: usize = ks.iter().sum();
+    assert_eq!(densities.len(), total, "density length mismatch");
+    let mut out = Vec::with_capacity(ks.len());
+    let mut offset = 0;
+    for &k in ks {
+        out.push(densities[offset..offset + k].to_vec());
+        offset += k;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, ensure};
+
+    #[test]
+    fn admit_respects_budget() {
+        assert_eq!(admit_by_budget(&[10, 10, 10], 25), 2);
+        assert_eq!(admit_by_budget(&[10, 10, 10], 30), 3);
+        assert_eq!(admit_by_budget(&[10, 10, 10], 9), 1); // oversized head
+        assert_eq!(admit_by_budget(&[], 100), 0);
+        assert_eq!(admit_by_budget(&[5], 100), 1);
+    }
+
+    #[test]
+    fn chunks_cover_exactly_once() {
+        assert_eq!(chunk_rows(10, 4), vec![(0, 4), (4, 8), (8, 10)]);
+        assert_eq!(chunk_rows(4, 4), vec![(0, 4)]);
+        assert_eq!(chunk_rows(3, 8), vec![(0, 3)]);
+    }
+
+    #[test]
+    fn bucket_pick_prefers_tight_fit() {
+        let buckets = [64, 128, 256];
+        assert_eq!(pick_m_bucket(&buckets, 10), Some(64));
+        assert_eq!(pick_m_bucket(&buckets, 64), Some(64));
+        assert_eq!(pick_m_bucket(&buckets, 65), Some(128));
+        assert_eq!(pick_m_bucket(&buckets, 1000), Some(256)); // chunk later
+        assert_eq!(pick_m_bucket(&[], 5), None);
+    }
+
+    #[test]
+    fn scatter_round_trips() {
+        let dens: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        let parts = scatter(&dens, &[3, 1, 6]);
+        assert_eq!(parts[0], vec![0.0, 1.0, 2.0]);
+        assert_eq!(parts[1], vec![3.0]);
+        assert_eq!(parts[2].len(), 6);
+    }
+
+    // ---- property tests -------------------------------------------------
+
+    #[test]
+    fn prop_admission_never_exceeds_budget_except_head() {
+        check("admission budget", 300, |rng| {
+            let n = 1 + rng.below(20) as usize;
+            let ks: Vec<usize> =
+                (0..n).map(|_| 1 + rng.below(100) as usize).collect();
+            let budget = 1 + rng.below(200) as usize;
+            let admitted = admit_by_budget(&ks, budget);
+            ensure(admitted >= 1, "head always admitted")?;
+            ensure(admitted <= ks.len(), "bounded by queue")?;
+            let used: usize = ks[..admitted].iter().sum();
+            if admitted > 1 {
+                ensure(used <= budget, "tail within budget")?;
+            }
+            // Maximality: the next request must not have fit.
+            if admitted < ks.len() {
+                ensure(used + ks[admitted] > budget, "greedy maximal")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_chunks_partition_rows() {
+        check("chunk partition", 300, |rng| {
+            let total = 1 + rng.below(5000) as usize;
+            let max = 1 + rng.below(512) as usize;
+            let chunks = chunk_rows(total, max);
+            ensure(chunks[0].0 == 0, "starts at zero")?;
+            ensure(chunks.last().unwrap().1 == total, "ends at total")?;
+            for pair in chunks.windows(2) {
+                ensure(pair[0].1 == pair[1].0, "contiguous")?;
+            }
+            for &(s, e) in &chunks {
+                ensure(e > s && e - s <= max, "sized")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_scatter_preserves_every_density() {
+        check("scatter preserves", 200, |rng| {
+            let n = 1 + rng.below(10) as usize;
+            let ks: Vec<usize> =
+                (0..n).map(|_| 1 + rng.below(50) as usize).collect();
+            let total: usize = ks.iter().sum();
+            let dens: Vec<f32> = (0..total).map(|i| i as f32).collect();
+            let parts = scatter(&dens, &ks);
+            let flat: Vec<f32> = parts.concat();
+            ensure(flat == dens, "concatenation identity")
+        });
+    }
+}

@@ -1,0 +1,242 @@
+//! Serving metrics: lock-free counters and a log-bucketed latency
+//! histogram (an HdrHistogram-lite suitable for p50/p95/p99 reporting).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use crate::util::json::Value;
+
+/// Log2-bucketed latency histogram, 1µs .. ~1h range.
+///
+/// Bucket i covers [2^i, 2^{i+1}) microseconds; recording and reading are
+/// wait-free atomics so the hot path never takes a lock.  Quantiles are
+/// bucket-resolution approximations (±50% of the value, which is fine for
+/// serving dashboards; exact latencies go to the bench harness instead).
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    buckets: [AtomicU64; Self::NUM_BUCKETS],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub const NUM_BUCKETS: usize = 32;
+
+    pub fn new() -> Self {
+        LatencyHistogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+
+    fn bucket_of(us: u64) -> usize {
+        // 0..=1 µs -> bucket 0; cap the top bucket.
+        let idx = 64 - us.max(1).leading_zeros() as usize - 1;
+        idx.min(Self::NUM_BUCKETS - 1)
+    }
+
+    pub fn record(&self, d: Duration) {
+        let us = d.as_micros().min(u128::from(u64::MAX)) as u64;
+        self.buckets[Self::bucket_of(us)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> Duration {
+        let c = self.count();
+        if c == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_micros(self.sum_us.load(Ordering::Relaxed) / c)
+    }
+
+    pub fn max(&self) -> Duration {
+        Duration::from_micros(self.max_us.load(Ordering::Relaxed))
+    }
+
+    /// Approximate quantile (upper edge of the covering bucket).
+    pub fn quantile(&self, q: f64) -> Duration {
+        assert!((0.0..=1.0).contains(&q));
+        let total = self.count();
+        if total == 0 {
+            return Duration::ZERO;
+        }
+        let target = ((total as f64) * q).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return Duration::from_micros(1u64 << (i + 1));
+            }
+        }
+        self.max()
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::object(vec![
+            ("count", Value::from(self.count())),
+            ("mean_us", Value::from(self.mean().as_micros() as u64)),
+            ("p50_us", Value::from(self.quantile(0.50).as_micros() as u64)),
+            ("p95_us", Value::from(self.quantile(0.95).as_micros() as u64)),
+            ("p99_us", Value::from(self.quantile(0.99).as_micros() as u64)),
+            ("max_us", Value::from(self.max().as_micros() as u64)),
+        ])
+    }
+}
+
+/// Coordinator-wide counters (one instance, shared via Arc).
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub fit_requests: AtomicU64,
+    pub eval_requests: AtomicU64,
+    pub eval_points: AtomicU64,
+    pub errors: AtomicU64,
+    /// Requests shed by queue backpressure.
+    pub rejected: AtomicU64,
+    /// Number of executed batches and total co-batched requests, for
+    /// mean-batch-size reporting.
+    pub batches: AtomicU64,
+    pub batched_requests: AtomicU64,
+    pub queue_wait: LatencyHistogram,
+    pub exec_latency: LatencyHistogram,
+    pub e2e_latency: LatencyHistogram,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn inc(counter: &AtomicU64) {
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(counter: &AtomicU64, v: u64) {
+        counter.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            return 0.0;
+        }
+        self.batched_requests.load(Ordering::Relaxed) as f64 / b as f64
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::object(vec![
+            ("fit_requests", Value::from(self.fit_requests.load(Ordering::Relaxed))),
+            ("eval_requests", Value::from(self.eval_requests.load(Ordering::Relaxed))),
+            ("eval_points", Value::from(self.eval_points.load(Ordering::Relaxed))),
+            ("errors", Value::from(self.errors.load(Ordering::Relaxed))),
+            ("rejected", Value::from(self.rejected.load(Ordering::Relaxed))),
+            ("batches", Value::from(self.batches.load(Ordering::Relaxed))),
+            ("mean_batch_size", Value::Number(self.mean_batch_size())),
+            ("queue_wait", self.queue_wait.to_json()),
+            ("exec_latency", self.exec_latency.to_json()),
+            ("e2e_latency", self.e2e_latency.to_json()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_mapping() {
+        assert_eq!(LatencyHistogram::bucket_of(0), 0);
+        assert_eq!(LatencyHistogram::bucket_of(1), 0);
+        assert_eq!(LatencyHistogram::bucket_of(2), 1);
+        assert_eq!(LatencyHistogram::bucket_of(3), 1);
+        assert_eq!(LatencyHistogram::bucket_of(1024), 10);
+        assert_eq!(LatencyHistogram::bucket_of(u64::MAX), 31);
+    }
+
+    #[test]
+    fn quantiles_bound_recorded_values() {
+        let h = LatencyHistogram::new();
+        for ms in [1u64, 2, 3, 4, 100] {
+            h.record(Duration::from_millis(ms));
+        }
+        assert_eq!(h.count(), 5);
+        // p50 upper bound must be >= 2ms and well below 100ms.
+        let p50 = h.quantile(0.5);
+        assert!(p50 >= Duration::from_millis(2), "{p50:?}");
+        assert!(p50 <= Duration::from_millis(8), "{p50:?}");
+        // p99 must cover the 100ms outlier (within a 2x bucket).
+        let p99 = h.quantile(0.99);
+        assert!(p99 >= Duration::from_millis(100), "{p99:?}");
+        assert_eq!(h.max(), Duration::from_millis(100));
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.quantile(0.99), Duration::ZERO);
+        assert_eq!(h.mean(), Duration::ZERO);
+    }
+
+    #[test]
+    fn mean_tracks_sum() {
+        let h = LatencyHistogram::new();
+        h.record(Duration::from_micros(100));
+        h.record(Duration::from_micros(300));
+        assert_eq!(h.mean(), Duration::from_micros(200));
+    }
+
+    #[test]
+    fn metrics_batch_accounting() {
+        let m = Metrics::new();
+        Metrics::inc(&m.batches);
+        Metrics::add(&m.batched_requests, 3);
+        Metrics::inc(&m.batches);
+        Metrics::add(&m.batched_requests, 1);
+        assert!((m.mean_batch_size() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_has_all_fields() {
+        let m = Metrics::new();
+        m.e2e_latency.record(Duration::from_millis(5));
+        let j = m.to_json();
+        for k in ["fit_requests", "eval_requests", "rejected", "batches",
+                  "queue_wait", "exec_latency", "e2e_latency"] {
+            assert!(j.get(k).is_some(), "missing {k}");
+        }
+        assert!(j.get("e2e_latency").unwrap().get("p99_us").is_some());
+    }
+
+    #[test]
+    fn histogram_concurrent_recording() {
+        let h = std::sync::Arc::new(LatencyHistogram::new());
+        let threads: Vec<_> = (0..4)
+            .map(|_| {
+                let h = h.clone();
+                std::thread::spawn(move || {
+                    for i in 0..1000u64 {
+                        h.record(Duration::from_micros(i % 50 + 1));
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(h.count(), 4000);
+    }
+}

@@ -1,0 +1,600 @@
+//! L3 coordinator: the serving system around the AOT-compiled estimators.
+//!
+//! Request flow (DESIGN.md §1):
+//!
+//! ```text
+//! client ── fit ──────────────► Coordinator::fit ──► Engine (score+shift)
+//!                                  │                     │
+//!                                  └──► Registry ◄───────┘ (debiased set)
+//!
+//! client ── eval ─► BoundedQueue ─► dispatcher thread ─► dynamic batch
+//!     ▲   (backpressure)              (same-model coalescing)  │
+//!     └────────────── densities ◄── scatter ◄── Engine ◄───────┘
+//! ```
+//!
+//! The fit pass is the paper's expensive O(n²d) score computation
+//! ("prefill"); eval batches are O(n·m·d) KDE sweeps ("decode").  Fitted
+//! models live in a bounded LRU registry padded to their artifact bucket,
+//! so the eval hot path does no padding or copying of training data.
+
+pub mod batcher;
+pub mod metrics;
+pub mod protocol;
+pub mod registry;
+pub mod scheduler;
+pub mod server;
+
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::Config;
+use crate::estimator::{bandwidth, EstimatorKind};
+use crate::runtime::{ArtifactEntry, Engine, HostTensor, Manifest};
+use crate::util::json::Value;
+use crate::{log_debug, log_info, log_warn};
+
+use metrics::Metrics;
+use registry::{FittedModel, Registry};
+use scheduler::{BoundedQueue, PopTimeout, PushError};
+
+/// Result of an eval request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EvalResult {
+    pub densities: Vec<f32>,
+    pub queue_ms: f64,
+    pub exec_ms: f64,
+    /// Number of requests co-batched into the execution that served this one.
+    pub batch_size: usize,
+}
+
+/// Result of a fit request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FitInfo {
+    pub model: String,
+    pub n: usize,
+    pub d: usize,
+    pub h: f64,
+    pub bucket_n: usize,
+    pub fit_ms: f64,
+}
+
+/// One queued eval request.
+struct EvalJob {
+    model: Arc<FittedModel>,
+    points: Vec<f32>,
+    k: usize,
+    enqueued: Instant,
+    reply: Sender<Result<EvalResult, String>>,
+}
+
+/// The coordinator: owns the engine, registry, queue and dispatcher.
+pub struct Coordinator {
+    cfg: Config,
+    engine: Engine,
+    registry: Arc<Registry>,
+    metrics: Arc<Metrics>,
+    queue: Arc<BoundedQueue<EvalJob>>,
+    dispatcher: Option<JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Boot: load the manifest, start engine workers, spawn the dispatcher.
+    pub fn start(cfg: Config) -> Result<Coordinator> {
+        let manifest = Manifest::load(&cfg.artifacts_dir)?;
+        let engine = Engine::start(manifest, cfg.engine_workers)?;
+        Self::with_engine(cfg, engine)
+    }
+
+    /// Boot over an existing engine (tests inject small manifests).
+    pub fn with_engine(cfg: Config, engine: Engine) -> Result<Coordinator> {
+        cfg.validate().map_err(|e| anyhow!(e))?;
+        let registry = Arc::new(Registry::new(cfg.registry_capacity));
+        let metrics = Arc::new(Metrics::new());
+        let queue = Arc::new(BoundedQueue::new(cfg.queue_depth));
+
+        // Optional startup warming: pre-compile serving buckets.
+        for &d in &cfg.warm_dims {
+            let entries: Vec<ArtifactEntry> = engine
+                .manifest()
+                .entries
+                .iter()
+                .filter(|e| e.d == d && e.tiles.is_none())
+                .cloned()
+                .collect();
+            if !entries.is_empty() {
+                let t = engine.warm(entries)?;
+                log_info!("coord", "warmed d={d} executables in {t:?}");
+            }
+        }
+
+        let dispatcher = {
+            let queue = Arc::clone(&queue);
+            let metrics = Arc::clone(&metrics);
+            let engine = engine.clone();
+            let cfg = cfg.clone();
+            std::thread::Builder::new()
+                .name("dispatcher".into())
+                .spawn(move || dispatcher_loop(cfg, engine, queue, metrics))
+                .context("spawning dispatcher")?
+        };
+
+        Ok(Coordinator {
+            cfg,
+            engine,
+            registry,
+            metrics,
+            queue,
+            dispatcher: Some(dispatcher),
+        })
+    }
+
+    pub fn config(&self) -> &Config {
+        &self.cfg
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        self.engine.manifest()
+    }
+
+    /// Fit a model: compute bandwidths, pad to the train bucket, run the
+    /// score+shift pass for SD-KDE, store in the registry.
+    #[allow(clippy::too_many_arguments)]
+    pub fn fit(
+        &self,
+        name: &str,
+        kind: EstimatorKind,
+        d: usize,
+        points: Vec<f32>,
+        h_override: Option<f64>,
+        h_score_override: Option<f64>,
+        variant_override: Option<&str>,
+    ) -> Result<FitInfo> {
+        Metrics::inc(&self.metrics.fit_requests);
+        let start = Instant::now();
+        if d == 0 || points.is_empty() || points.len() % d != 0 {
+            bail!("points must be a non-empty [n, {d}] row-major buffer");
+        }
+        let n = points.len() / d;
+        if n < 2 {
+            bail!("need at least 2 training points, got {n}");
+        }
+        let variant = variant_override
+            .unwrap_or(&self.cfg.default_variant)
+            .to_string();
+
+        // The train bucket must exist for the eval pipeline (and the fit
+        // pipeline too, for SD-KDE).  Checked before bandwidth selection so
+        // capacity errors surface with the actionable message.
+        let manifest = self.engine.manifest();
+        let eval_pipeline = kind.eval_pipeline();
+        let mut ns: Vec<usize> = manifest
+            .buckets(eval_pipeline, &variant, d)
+            .iter()
+            .map(|&(bn, _)| bn)
+            .collect();
+        if kind.needs_fit() {
+            let fit_ns: Vec<usize> = manifest
+                .buckets("sdkde_fit", &variant, d)
+                .iter()
+                .map(|&(bn, _)| bn)
+                .collect();
+            ns.retain(|bn| fit_ns.contains(bn));
+        }
+        ns.sort_unstable();
+        ns.dedup();
+        let bucket_n = *ns.iter().find(|&&bn| bn >= n).ok_or_else(|| {
+            anyhow!(
+                "no train bucket >= {n} for {eval_pipeline}/{variant} d={d} \
+                 (available: {ns:?})"
+            )
+        })?;
+
+        // Bandwidths: rule-of-thumb unless overridden.
+        let h = match h_override {
+            Some(h) => h,
+            None => match kind {
+                EstimatorKind::SdKde => bandwidth::sdkde_rate(&points, n, d),
+                _ => bandwidth::silverman(&points, n, d),
+            },
+        };
+        if !(h > 0.0) {
+            bail!("bandwidth must be positive (got {h}; degenerate data?)");
+        }
+        let h_score = h_score_override.unwrap_or_else(|| bandwidth::score_bandwidth(h));
+
+        // Pad to the bucket.
+        let x = HostTensor::matrix(n, d, points)?.pad_rows(bucket_n, 0.0)?;
+        let mut w = HostTensor::zeros(vec![bucket_n]);
+        w.data_mut()[..n].fill(1.0);
+
+        let x = Arc::new(x);
+        let w = Arc::new(w);
+
+        // SD-KDE: run the score+shift artifact; others store raw samples.
+        let x_fitted = if kind.needs_fit() {
+            let entry = manifest
+                .select_bucket("sdkde_fit", &variant, d, bucket_n, 0)
+                .filter(|e| e.n == bucket_n)
+                .ok_or_else(|| anyhow!("missing sdkde_fit bucket n={bucket_n}"))?
+                .clone();
+            let out = self.engine.execute(
+                &entry,
+                vec![
+                    Arc::clone(&x),
+                    Arc::clone(&w),
+                    Arc::new(HostTensor::scalar(h as f32)),
+                    Arc::new(HostTensor::scalar(h_score as f32)),
+                ],
+            )?;
+            Arc::new(
+                out.outputs
+                    .into_iter()
+                    .next()
+                    .ok_or_else(|| anyhow!("fit returned no output"))?,
+            )
+        } else {
+            x
+        };
+
+        // Warm the eval executables for this model's bucket so the first
+        // query pays no compile spike (fit is the "prefill" phase anyway —
+        // perf pass, EXPERIMENTS.md §Perf/L3).
+        let eval_entries: Vec<ArtifactEntry> = manifest
+            .entries
+            .iter()
+            .filter(|e| {
+                e.pipeline == eval_pipeline
+                    && e.variant == variant
+                    && e.d == d
+                    && e.n == bucket_n
+                    && e.tiles.is_none()
+            })
+            .cloned()
+            .collect();
+        if let Err(e) = self.engine.warm(eval_entries) {
+            log_warn!("coord", "eval warmup failed (continuing): {e:#}");
+        }
+
+        let fit_ms = start.elapsed().as_secs_f64() * 1e3;
+        let model = FittedModel {
+            name: name.to_string(),
+            kind,
+            variant,
+            d,
+            n,
+            bucket_n,
+            x: x_fitted,
+            w,
+            h,
+            h_score,
+            fit_ms,
+        };
+        if let Some(evicted) = self.registry.insert(model) {
+            log_warn!("coord", "registry full: evicted model {evicted:?}");
+        }
+        log_info!(
+            "coord",
+            "fitted {name:?} kind={} n={n} d={d} bucket={bucket_n} h={h:.4} ({fit_ms:.1}ms)",
+            kind.as_str()
+        );
+        Ok(FitInfo { model: name.to_string(), n, d, h, bucket_n, fit_ms })
+    }
+
+    /// Evaluate densities at `points` ([k, d] row-major) under a fitted
+    /// model.  Blocks until the dispatcher serves the request.
+    pub fn eval(&self, model_name: &str, points: Vec<f32>) -> Result<EvalResult> {
+        Metrics::inc(&self.metrics.eval_requests);
+        let model = self
+            .registry
+            .get(model_name)
+            .ok_or_else(|| anyhow!("unknown model {model_name:?}"))?;
+        if points.is_empty() || points.len() % model.d != 0 {
+            Metrics::inc(&self.metrics.errors);
+            bail!(
+                "points must be a non-empty [k, {}] row-major buffer",
+                model.d
+            );
+        }
+        let k = points.len() / model.d;
+        Metrics::add(&self.metrics.eval_points, k as u64);
+
+        let (reply, rx) = channel();
+        let job = EvalJob { model, points, k, enqueued: Instant::now(), reply };
+        match self.queue.push(job) {
+            Ok(()) => {}
+            Err((_, PushError::Full)) => {
+                Metrics::inc(&self.metrics.rejected);
+                bail!("server overloaded: eval queue full (backpressure)");
+            }
+            Err((_, PushError::Closed)) => bail!("coordinator shutting down"),
+        }
+        let result = rx
+            .recv()
+            .map_err(|_| anyhow!("dispatcher dropped request"))?
+            .map_err(|e| anyhow!(e))?;
+        self.metrics
+            .e2e_latency
+            .record(Duration::from_secs_f64(
+                (result.queue_ms + result.exec_ms) / 1e3,
+            ));
+        Ok(result)
+    }
+
+    /// Gradient of the fitted log-density at `points` ([k, d] row-major):
+    /// ∇ log p̂(y), served from the streaming score artifacts.  Returns a
+    /// flat [k, d] buffer.  Lower-QPS companion endpoint to `eval` (used by
+    /// samplers, e.g. the Langevin example); executed directly rather than
+    /// through the dynamic batcher.
+    pub fn grad(&self, model_name: &str, points: Vec<f32>) -> Result<Vec<f32>> {
+        let model = self
+            .registry
+            .get(model_name)
+            .ok_or_else(|| anyhow!("unknown model {model_name:?}"))?;
+        if points.is_empty() || points.len() % model.d != 0 {
+            bail!("points must be a non-empty [k, {}] buffer", model.d);
+        }
+        let d = model.d;
+        let k = points.len() / d;
+        let manifest = self.engine.manifest();
+        // Gradient artifacts ship in flash (+gemm) only; serve flash
+        // regardless of the model's eval variant.
+        let m_buckets: Vec<usize> = manifest
+            .buckets("score_eval", "flash", d)
+            .iter()
+            .filter(|&&(bn, _)| bn == model.bucket_n)
+            .map(|&(_, m)| m)
+            .collect();
+        if m_buckets.is_empty() {
+            bail!("no score_eval buckets for d={d} n={}", model.bucket_n);
+        }
+        let max_m = *m_buckets.iter().max().expect("non-empty");
+
+        let mut grads = vec![0.0f32; k * d];
+        for (start, end) in batcher::chunk_rows(k, max_m) {
+            let rows = end - start;
+            let m_bucket =
+                batcher::pick_m_bucket(&m_buckets, rows).expect("non-empty");
+            let entry = manifest
+                .find("score_eval", "flash", d, model.bucket_n, m_bucket)
+                .ok_or_else(|| anyhow!("score_eval bucket vanished"))?
+                .clone();
+            let mut y = Vec::with_capacity(m_bucket * d);
+            y.extend_from_slice(&points[start * d..end * d]);
+            y.resize(m_bucket * d, 0.0);
+            let inputs = vec![
+                Arc::clone(&model.x),
+                Arc::clone(&model.w),
+                Arc::new(HostTensor::matrix(m_bucket, d, y)?),
+                // Score of the *fitted* density: bandwidth h.
+                Arc::new(HostTensor::scalar(model.h as f32)),
+            ];
+            let out = self.engine.execute(&entry, inputs)?;
+            let g = out
+                .outputs
+                .into_iter()
+                .next()
+                .ok_or_else(|| anyhow!("grad returned no output"))?;
+            grads[start * d..end * d].copy_from_slice(&g.data()[..rows * d]);
+        }
+        Ok(grads)
+    }
+
+    /// Stats document served by `{"op":"stats"}` and the CLI.
+    pub fn stats_json(&self) -> Value {
+        let (store_stats, cached) = self
+            .engine
+            .stats()
+            .unwrap_or((Default::default(), 0));
+        Value::object(vec![
+            ("metrics", self.metrics.to_json()),
+            (
+                "registry",
+                Value::object(vec![
+                    ("models", Value::from(self.registry.len())),
+                    ("evictions", Value::from(self.registry.evictions())),
+                ]),
+            ),
+            (
+                "engine",
+                Value::object(vec![
+                    ("compiles", Value::from(store_stats.compiles)),
+                    ("cache_hits", Value::from(store_stats.hits)),
+                    ("executions", Value::from(store_stats.executions)),
+                    ("cached_executables", Value::from(cached)),
+                    (
+                        "compile_time_ms",
+                        Value::Number(store_stats.compile_time.as_secs_f64() * 1e3),
+                    ),
+                ]),
+            ),
+            ("queue_depth", Value::from(self.queue.len())),
+        ])
+    }
+
+    /// Graceful shutdown: drain the queue, stop the dispatcher.
+    pub fn shutdown(&mut self) {
+        self.queue.close();
+        if let Some(handle) = self.dispatcher.take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dispatcher: the batching event loop.
+// ---------------------------------------------------------------------------
+
+fn dispatcher_loop(
+    cfg: Config,
+    engine: Engine,
+    queue: Arc<BoundedQueue<EvalJob>>,
+    metrics: Arc<Metrics>,
+) {
+    log_info!("dispatch", "dispatcher up (batch budget {} queries, wait {}ms)",
+        cfg.batch_max_queries, cfg.batch_wait_ms);
+    loop {
+        let head = match queue.pop_timeout(Duration::from_millis(100)) {
+            Ok(job) => job,
+            Err(PopTimeout::TimedOut) => continue,
+            Err(PopTimeout::Closed) => break,
+        };
+
+        // Co-batching window: give followers a brief chance to arrive.
+        if cfg.batch_wait_ms > 0 && queue.is_empty() {
+            std::thread::sleep(Duration::from_millis(cfg.batch_wait_ms));
+        }
+
+        // Same-model coalescing under the query budget.
+        let mut budget = cfg.batch_max_queries.saturating_sub(head.k);
+        let head_model = Arc::clone(&head.model);
+        let followers = queue.drain_matching(usize::MAX, |j| {
+            if Arc::ptr_eq(&j.model, &head_model) && j.k <= budget {
+                budget -= j.k;
+                true
+            } else {
+                false
+            }
+        });
+        let mut batch = vec![head];
+        batch.extend(followers);
+
+        Metrics::inc(&metrics.batches);
+        Metrics::add(&metrics.batched_requests, batch.len() as u64);
+        execute_batch(&engine, &metrics, batch);
+    }
+    log_info!("dispatch", "dispatcher down");
+}
+
+fn execute_batch(engine: &Engine, metrics: &Metrics, batch: Vec<EvalJob>) {
+    let model = Arc::clone(&batch[0].model);
+    let batch_size = batch.len();
+    let queue_wait = batch
+        .iter()
+        .map(|j| j.enqueued.elapsed())
+        .max()
+        .unwrap_or_default();
+    metrics.queue_wait.record(queue_wait);
+
+    let result = run_model_eval(engine, &model, &batch);
+    let exec_start_ms = match &result {
+        Ok((_, exec_ms)) => *exec_ms,
+        Err(_) => 0.0,
+    };
+
+    match result {
+        Ok((densities, exec_ms)) => {
+            let ks: Vec<usize> = batch.iter().map(|j| j.k).collect();
+            let parts = batcher::scatter(&densities, &ks);
+            for (job, dens) in batch.into_iter().zip(parts) {
+                let queue_ms = job.enqueued.elapsed().as_secs_f64() * 1e3 - exec_ms;
+                let _ = job.reply.send(Ok(EvalResult {
+                    densities: dens,
+                    queue_ms: queue_ms.max(0.0),
+                    exec_ms,
+                    batch_size,
+                }));
+            }
+            metrics
+                .exec_latency
+                .record(Duration::from_secs_f64(exec_start_ms / 1e3));
+        }
+        Err(e) => {
+            Metrics::inc(&metrics.errors);
+            let msg = format!("batch execution failed: {e:#}");
+            log_warn!("dispatch", "{msg}");
+            for job in batch {
+                let _ = job.reply.send(Err(msg.clone()));
+            }
+        }
+    }
+}
+
+/// Run one batched evaluation: concatenate queries, chunk against the
+/// available m-buckets, execute, concatenate densities.
+fn run_model_eval(
+    engine: &Engine,
+    model: &FittedModel,
+    batch: &[EvalJob],
+) -> Result<(Vec<f32>, f64)> {
+    let d = model.d;
+    let total_k: usize = batch.iter().map(|j| j.k).sum();
+    let mut all_points = Vec::with_capacity(total_k * d);
+    for job in batch {
+        all_points.extend_from_slice(&job.points);
+    }
+
+    let pipeline = model.kind.eval_pipeline();
+    let manifest = engine.manifest();
+    let m_buckets: Vec<usize> = manifest
+        .buckets(pipeline, &model.variant, d)
+        .iter()
+        .filter(|&&(bn, _)| bn == model.bucket_n)
+        .map(|&(_, m)| m)
+        .collect();
+    if m_buckets.is_empty() {
+        bail!(
+            "no eval buckets for {pipeline}/{} d={d} n={}",
+            model.variant,
+            model.bucket_n
+        );
+    }
+    let max_m = *m_buckets.iter().max().expect("non-empty");
+
+    let mut densities = vec![0.0f32; total_k];
+    let mut exec_ms = 0.0f64;
+    for (start, end) in batcher::chunk_rows(total_k, max_m) {
+        let rows = end - start;
+        let m_bucket = batcher::pick_m_bucket(&m_buckets, rows)
+            .expect("non-empty bucket list");
+        let entry = manifest
+            .find(pipeline, &model.variant, d, model.bucket_n, m_bucket)
+            .ok_or_else(|| anyhow!("bucket disappeared from manifest"))?
+            .clone();
+
+        // Pad the query chunk to the bucket.
+        let mut y = Vec::with_capacity(m_bucket * d);
+        y.extend_from_slice(&all_points[start * d..end * d]);
+        y.resize(m_bucket * d, 0.0);
+        let y = HostTensor::matrix(m_bucket, d, y)?;
+
+        // Resident tensors cross by Arc (no copy on the hot path).
+        let inputs = vec![
+            Arc::clone(&model.x),
+            Arc::clone(&model.w),
+            Arc::new(y),
+            Arc::new(HostTensor::scalar(model.h as f32)),
+        ];
+        let out = engine.execute(&entry, inputs)?;
+        exec_ms += out.timings.total().as_secs_f64() * 1e3;
+        let pdf = out
+            .outputs
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("eval returned no output"))?;
+        densities[start..end].copy_from_slice(&pdf.data()[..rows]);
+        log_debug!(
+            "dispatch",
+            "chunk [{start}, {end}) via m={m_bucket}: {}",
+            out.timings.render()
+        );
+    }
+    Ok((densities, exec_ms))
+}

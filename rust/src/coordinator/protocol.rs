@@ -1,0 +1,525 @@
+//! Wire protocol: newline-delimited JSON over TCP (and the in-process
+//! equivalent types).
+//!
+//! Requests:
+//!   {"op":"ping"}
+//!   {"op":"fit","model":"m1","estimator":"sdkde","d":16,
+//!    "points":[[...],[...]], "h":0.5?, "h_score":0.35?, "variant":"flash"?}
+//!   {"op":"eval","model":"m1","points":[[...],...]}
+//!   {"op":"models"} | {"op":"stats"} | {"op":"delete","model":"m1"}
+//!
+//! Responses mirror the request kinds; every response carries "ok":bool.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::estimator::EstimatorKind;
+use crate::util::json::{self, Value};
+
+/// Parsed client request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    Ping,
+    Fit {
+        model: String,
+        estimator: EstimatorKind,
+        d: usize,
+        /// Row-major [n, d].
+        points: Vec<f32>,
+        n: usize,
+        /// Bandwidth override; None = rule-of-thumb (Silverman for KDE,
+        /// SD-rate for SD-KDE).
+        h: Option<f64>,
+        h_score: Option<f64>,
+        variant: Option<String>,
+    },
+    Eval {
+        model: String,
+        /// Row-major [k, d].
+        points: Vec<f32>,
+        k: usize,
+    },
+    Models,
+    Stats,
+    Delete {
+        model: String,
+    },
+    /// Gradient of the fitted log-density at query points.
+    Grad {
+        model: String,
+        /// Row-major [k, d].
+        points: Vec<f32>,
+        k: usize,
+    },
+}
+
+/// Server response.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    Pong,
+    FitOk {
+        model: String,
+        n: usize,
+        d: usize,
+        h: f64,
+        bucket_n: usize,
+        fit_ms: f64,
+    },
+    EvalOk {
+        densities: Vec<f32>,
+        queue_ms: f64,
+        exec_ms: f64,
+        batch_size: usize,
+    },
+    Models {
+        names: Vec<String>,
+    },
+    Stats {
+        body: Value,
+    },
+    Deleted {
+        model: String,
+        existed: bool,
+    },
+    GradOk {
+        /// Row-major [k, d].
+        gradients: Vec<f32>,
+        d: usize,
+    },
+    Error {
+        message: String,
+    },
+}
+
+/// Flatten `[[f,f],[f,f],...]` into row-major f32; returns (data, rows).
+fn parse_points(v: &Value, d: usize) -> Result<(Vec<f32>, usize)> {
+    let rows = v
+        .as_array()
+        .ok_or_else(|| anyhow!("'points' must be an array of rows"))?;
+    if rows.is_empty() {
+        bail!("'points' must not be empty");
+    }
+    let mut data = Vec::with_capacity(rows.len() * d);
+    for (i, row) in rows.iter().enumerate() {
+        let vals = row
+            .as_array()
+            .ok_or_else(|| anyhow!("points[{i}] must be an array"))?;
+        if vals.len() != d {
+            bail!("points[{i}] has {} coords, expected d={d}", vals.len());
+        }
+        for x in vals {
+            let f = x
+                .as_f64()
+                .ok_or_else(|| anyhow!("points[{i}] has a non-number"))?;
+            if !f.is_finite() {
+                bail!("points[{i}] has a non-finite coordinate");
+            }
+            data.push(f as f32);
+        }
+    }
+    Ok((data, rows.len()))
+}
+
+fn points_to_json(points: &[f32], d: usize) -> Value {
+    Value::Array(
+        points
+            .chunks_exact(d)
+            .map(Value::from_f32_slice)
+            .collect(),
+    )
+}
+
+impl Request {
+    /// Parse one wire line.
+    pub fn parse(line: &str) -> Result<Request> {
+        let v = json::parse(line).map_err(|e| anyhow!("bad json: {e}"))?;
+        let op = v
+            .get("op")
+            .and_then(Value::as_str)
+            .ok_or_else(|| anyhow!("missing 'op'"))?;
+        match op {
+            "ping" => Ok(Request::Ping),
+            "models" => Ok(Request::Models),
+            "stats" => Ok(Request::Stats),
+            "delete" => Ok(Request::Delete { model: req_model(&v)? }),
+            "fit" => {
+                let estimator = v
+                    .get("estimator")
+                    .and_then(Value::as_str)
+                    .unwrap_or("kde");
+                let estimator = EstimatorKind::parse(estimator)
+                    .ok_or_else(|| anyhow!("unknown estimator {estimator:?}"))?;
+                let d = v
+                    .get("d")
+                    .and_then(Value::as_usize)
+                    .ok_or_else(|| anyhow!("missing integer 'd'"))?;
+                if d == 0 {
+                    bail!("d must be >= 1");
+                }
+                let (points, n) = parse_points(
+                    v.get("points").ok_or_else(|| anyhow!("missing 'points'"))?,
+                    d,
+                )?;
+                let h = v.get("h").and_then(Value::as_f64);
+                if let Some(h) = h {
+                    if !(h > 0.0) {
+                        bail!("h must be positive");
+                    }
+                }
+                let h_score = v.get("h_score").and_then(Value::as_f64);
+                let variant = v
+                    .get("variant")
+                    .and_then(Value::as_str)
+                    .map(str::to_string);
+                Ok(Request::Fit {
+                    model: req_model(&v)?,
+                    estimator,
+                    d,
+                    points,
+                    n,
+                    h,
+                    h_score,
+                    variant,
+                })
+            }
+            "grad" | "eval" => {
+                let is_grad = op == "grad";
+                let model = req_model(&v)?;
+                // d is implied by the fitted model; rows are validated
+                // against it server-side.  Wire rows must be rectangular.
+                let rows = v
+                    .get("points")
+                    .and_then(Value::as_array)
+                    .ok_or_else(|| anyhow!("missing 'points' array"))?;
+                if rows.is_empty() {
+                    bail!("'points' must not be empty");
+                }
+                let d = rows[0]
+                    .as_array()
+                    .ok_or_else(|| anyhow!("points[0] must be an array"))?
+                    .len();
+                if d == 0 {
+                    bail!("points rows must be non-empty");
+                }
+                let (points, k) = parse_points(v.get("points").unwrap(), d)?;
+                if is_grad {
+                    Ok(Request::Grad { model, points, k })
+                } else {
+                    Ok(Request::Eval { model, points, k })
+                }
+            }
+            other => bail!("unknown op {other:?}"),
+        }
+    }
+
+    /// Render to a wire line (client side).
+    pub fn to_line(&self, d_hint: usize) -> String {
+        let v = match self {
+            Request::Ping => Value::object(vec![("op", "ping".into())]),
+            Request::Models => Value::object(vec![("op", "models".into())]),
+            Request::Stats => Value::object(vec![("op", "stats".into())]),
+            Request::Delete { model } => Value::object(vec![
+                ("op", "delete".into()),
+                ("model", model.as_str().into()),
+            ]),
+            Request::Fit {
+                model,
+                estimator,
+                d,
+                points,
+                h,
+                h_score,
+                variant,
+                ..
+            } => {
+                let mut fields = vec![
+                    ("op", Value::from("fit")),
+                    ("model", model.as_str().into()),
+                    ("estimator", estimator.as_str().into()),
+                    ("d", Value::from(*d)),
+                    ("points", points_to_json(points, *d)),
+                ];
+                if let Some(h) = h {
+                    fields.push(("h", Value::Number(*h)));
+                }
+                if let Some(hs) = h_score {
+                    fields.push(("h_score", Value::Number(*hs)));
+                }
+                if let Some(variant) = variant {
+                    fields.push(("variant", variant.as_str().into()));
+                }
+                Value::object(fields)
+            }
+            Request::Eval { model, points, .. } => Value::object(vec![
+                ("op", "eval".into()),
+                ("model", model.as_str().into()),
+                ("points", points_to_json(points, d_hint)),
+            ]),
+            Request::Grad { model, points, .. } => Value::object(vec![
+                ("op", "grad".into()),
+                ("model", model.as_str().into()),
+                ("points", points_to_json(points, d_hint)),
+            ]),
+        };
+        json::to_string(&v)
+    }
+}
+
+fn req_model(v: &Value) -> Result<String> {
+    v.get("model")
+        .and_then(Value::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| anyhow!("missing 'model'"))
+}
+
+impl Response {
+    pub fn to_line(&self) -> String {
+        let v = match self {
+            Response::Pong => Value::object(vec![
+                ("ok", true.into()),
+                ("op", "pong".into()),
+            ]),
+            Response::FitOk { model, n, d, h, bucket_n, fit_ms } => {
+                Value::object(vec![
+                    ("ok", true.into()),
+                    ("op", "fit".into()),
+                    ("model", model.as_str().into()),
+                    ("n", Value::from(*n)),
+                    ("d", Value::from(*d)),
+                    ("h", Value::Number(*h)),
+                    ("bucket_n", Value::from(*bucket_n)),
+                    ("fit_ms", Value::Number(*fit_ms)),
+                ])
+            }
+            Response::EvalOk { densities, queue_ms, exec_ms, batch_size } => {
+                Value::object(vec![
+                    ("ok", true.into()),
+                    ("op", "eval".into()),
+                    ("densities", Value::from_f32_slice(densities)),
+                    ("queue_ms", Value::Number(*queue_ms)),
+                    ("exec_ms", Value::Number(*exec_ms)),
+                    ("batch_size", Value::from(*batch_size)),
+                ])
+            }
+            Response::Models { names } => Value::object(vec![
+                ("ok", true.into()),
+                ("op", "models".into()),
+                (
+                    "names",
+                    Value::Array(
+                        names.iter().map(|n| Value::from(n.as_str())).collect(),
+                    ),
+                ),
+            ]),
+            Response::Stats { body } => Value::object(vec![
+                ("ok", true.into()),
+                ("op", "stats".into()),
+                ("stats", body.clone()),
+            ]),
+            Response::Deleted { model, existed } => Value::object(vec![
+                ("ok", true.into()),
+                ("op", "delete".into()),
+                ("model", model.as_str().into()),
+                ("existed", (*existed).into()),
+            ]),
+            Response::GradOk { gradients, d } => Value::object(vec![
+                ("ok", true.into()),
+                ("op", "grad".into()),
+                ("d", Value::from(*d)),
+                ("gradients", points_to_json(gradients, *d)),
+            ]),
+            Response::Error { message } => Value::object(vec![
+                ("ok", false.into()),
+                ("error", message.as_str().into()),
+            ]),
+        };
+        json::to_string(&v)
+    }
+
+    /// Parse one wire line (client side).
+    pub fn parse(line: &str) -> Result<Response> {
+        let v = json::parse(line).map_err(|e| anyhow!("bad json: {e}"))?;
+        let ok = v
+            .get("ok")
+            .and_then(Value::as_bool)
+            .ok_or_else(|| anyhow!("missing 'ok'"))?;
+        if !ok {
+            let message = v
+                .get("error")
+                .and_then(Value::as_str)
+                .unwrap_or("unknown error")
+                .to_string();
+            return Ok(Response::Error { message });
+        }
+        match v.get("op").and_then(Value::as_str) {
+            Some("pong") => Ok(Response::Pong),
+            Some("fit") => Ok(Response::FitOk {
+                model: req_model(&v)?,
+                n: field_usize(&v, "n")?,
+                d: field_usize(&v, "d")?,
+                h: field_f64(&v, "h")?,
+                bucket_n: field_usize(&v, "bucket_n")?,
+                fit_ms: field_f64(&v, "fit_ms")?,
+            }),
+            Some("eval") => Ok(Response::EvalOk {
+                densities: v
+                    .get("densities")
+                    .ok_or_else(|| anyhow!("missing densities"))?
+                    .to_f32_vec()
+                    .map_err(|e| anyhow!("{e}"))?,
+                queue_ms: field_f64(&v, "queue_ms")?,
+                exec_ms: field_f64(&v, "exec_ms")?,
+                batch_size: field_usize(&v, "batch_size")?,
+            }),
+            Some("models") => {
+                let names = v
+                    .get("names")
+                    .and_then(Value::as_array)
+                    .ok_or_else(|| anyhow!("missing names"))?
+                    .iter()
+                    .map(|n| {
+                        n.as_str()
+                            .map(str::to_string)
+                            .ok_or_else(|| anyhow!("bad name"))
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                Ok(Response::Models { names })
+            }
+            Some("stats") => Ok(Response::Stats {
+                body: v.get("stats").cloned().unwrap_or(Value::Null),
+            }),
+            Some("grad") => {
+                let d = field_usize(&v, "d")?;
+                let rows = v
+                    .get("gradients")
+                    .and_then(Value::as_array)
+                    .ok_or_else(|| anyhow!("missing gradients"))?;
+                let mut gradients = Vec::with_capacity(rows.len() * d);
+                for row in rows {
+                    gradients.extend(
+                        row.to_f32_vec().map_err(|e| anyhow!("{e}"))?,
+                    );
+                }
+                Ok(Response::GradOk { gradients, d })
+            }
+            Some("delete") => Ok(Response::Deleted {
+                model: req_model(&v)?,
+                existed: v
+                    .get("existed")
+                    .and_then(Value::as_bool)
+                    .unwrap_or(false),
+            }),
+            other => bail!("unknown response op {other:?}"),
+        }
+    }
+}
+
+fn field_usize(v: &Value, k: &str) -> Result<usize> {
+    v.get(k)
+        .and_then(Value::as_usize)
+        .ok_or_else(|| anyhow!("missing integer '{k}'"))
+}
+
+fn field_f64(v: &Value, k: &str) -> Result<f64> {
+    v.get(k)
+        .and_then(Value::as_f64)
+        .ok_or_else(|| anyhow!("missing number '{k}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fit_request_round_trip() {
+        let req = Request::Fit {
+            model: "m1".into(),
+            estimator: EstimatorKind::SdKde,
+            d: 2,
+            points: vec![1.0, 2.0, 3.0, 4.0],
+            n: 2,
+            h: Some(0.5),
+            h_score: None,
+            variant: Some("flash".into()),
+        };
+        let line = req.to_line(2);
+        let back = Request::parse(&line).unwrap();
+        assert_eq!(req, back);
+    }
+
+    #[test]
+    fn eval_request_round_trip() {
+        let req = Request::Eval {
+            model: "m1".into(),
+            points: vec![0.5, -1.5, 2.0, 0.0],
+            k: 2,
+        };
+        let back = Request::parse(&req.to_line(2)).unwrap();
+        assert_eq!(req, back);
+    }
+
+    #[test]
+    fn simple_ops_round_trip() {
+        for req in [Request::Ping, Request::Models, Request::Stats,
+                    Request::Delete { model: "x".into() }] {
+            assert_eq!(Request::parse(&req.to_line(0)).unwrap(), req);
+        }
+    }
+
+    #[test]
+    fn rejects_malformed_requests() {
+        for bad in [
+            "{",
+            r#"{"op":"warp"}"#,
+            r#"{"op":"fit","model":"m"}"#,
+            r#"{"op":"fit","model":"m","d":2,"points":[[1]]}"#,
+            r#"{"op":"fit","model":"m","d":0,"points":[[1]]}"#,
+            r#"{"op":"fit","model":"m","d":1,"points":[]}"#,
+            r#"{"op":"fit","model":"m","d":1,"points":[["x"]]}"#,
+            r#"{"op":"fit","model":"m","d":1,"points":[[1]],"h":-1}"#,
+            r#"{"op":"eval","model":"m"}"#,
+            r#"{"op":"eval","model":"m","points":[[1],[1,2]]}"#,
+            r#"{"op":"fit","model":"m","estimator":"magic","d":1,"points":[[1]]}"#,
+        ] {
+            assert!(Request::parse(bad).is_err(), "accepted: {bad}");
+        }
+    }
+
+    #[test]
+    fn responses_round_trip() {
+        let cases = vec![
+            Response::Pong,
+            Response::FitOk {
+                model: "m".into(),
+                n: 100,
+                d: 16,
+                h: 0.42,
+                bucket_n: 512,
+                fit_ms: 12.5,
+            },
+            Response::EvalOk {
+                densities: vec![0.1, 0.0, 3.25],
+                queue_ms: 0.5,
+                exec_ms: 2.0,
+                batch_size: 3,
+            },
+            Response::Models { names: vec!["a".into(), "b".into()] },
+            Response::Deleted { model: "m".into(), existed: true },
+            Response::Error { message: "boom".into() },
+        ];
+        for r in cases {
+            let back = Response::parse(&r.to_line()).unwrap();
+            assert_eq!(r, back);
+        }
+    }
+
+    #[test]
+    fn wire_lines_are_single_line() {
+        let r = Response::EvalOk {
+            densities: vec![1.0; 10],
+            queue_ms: 0.0,
+            exec_ms: 0.0,
+            batch_size: 1,
+        };
+        assert!(!r.to_line().contains('\n'));
+    }
+}

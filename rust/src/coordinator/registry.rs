@@ -1,0 +1,214 @@
+//! Fitted-model registry: the coordinator's resident state.
+//!
+//! A fitted model is the (possibly debiased) training set padded to its
+//! artifact bucket, plus bandwidths and metadata.  The registry is the
+//! serving analogue of a KV-cache manager: bounded capacity with
+//! least-recently-used eviction, shared read-mostly access.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+use crate::estimator::EstimatorKind;
+use crate::runtime::HostTensor;
+
+/// An immutable fitted model (shared via Arc; eval never copies it).
+#[derive(Debug)]
+pub struct FittedModel {
+    pub name: String,
+    pub kind: EstimatorKind,
+    /// Artifact variant the model was fitted with and will be served with.
+    pub variant: String,
+    pub d: usize,
+    /// Actual sample count (<= bucket_n).
+    pub n: usize,
+    /// Train bucket the tensors are padded to.
+    pub bucket_n: usize,
+    /// [bucket_n, d] train points — debiased for SD-KDE, raw otherwise.
+    /// Arc-shared: the eval hot path hands these to the engine without
+    /// copying the (potentially multi-MB) resident training set.
+    pub x: Arc<HostTensor>,
+    /// [bucket_n] validity weights (Arc for the same reason).
+    pub w: Arc<HostTensor>,
+    /// Evaluation bandwidth.
+    pub h: f64,
+    /// Score bandwidth used at fit time (SD-KDE only; informational).
+    pub h_score: f64,
+    /// Wall time of the fit pass, for reporting.
+    pub fit_ms: f64,
+}
+
+struct Slot {
+    model: Arc<FittedModel>,
+    last_used: u64,
+}
+
+/// Bounded LRU registry.
+pub struct Registry {
+    slots: RwLock<HashMap<String, Slot>>,
+    capacity: usize,
+    clock: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl Registry {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity >= 1);
+        Registry {
+            slots: RwLock::new(HashMap::new()),
+            capacity,
+            clock: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    fn tick(&self) -> u64 {
+        self.clock.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Insert (or replace) a model; evicts the least-recently-used entry
+    /// when at capacity.  Returns the evicted model name, if any.
+    pub fn insert(&self, model: FittedModel) -> Option<String> {
+        let mut slots = self.slots.write().expect("registry poisoned");
+        let name = model.name.clone();
+        let stamp = self.tick();
+        let mut evicted = None;
+        if !slots.contains_key(&name) && slots.len() >= self.capacity {
+            if let Some(victim) = slots
+                .iter()
+                .min_by_key(|(_, s)| s.last_used)
+                .map(|(k, _)| k.clone())
+            {
+                slots.remove(&victim);
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+                evicted = Some(victim);
+            }
+        }
+        slots.insert(name, Slot { model: Arc::new(model), last_used: stamp });
+        evicted
+    }
+
+    /// Fetch a model and bump its LRU stamp.
+    pub fn get(&self, name: &str) -> Option<Arc<FittedModel>> {
+        let mut slots = self.slots.write().expect("registry poisoned");
+        let stamp = self.tick();
+        slots.get_mut(name).map(|slot| {
+            slot.last_used = stamp;
+            Arc::clone(&slot.model)
+        })
+    }
+
+    /// Read-only peek without LRU side effects (used by stats).
+    pub fn peek(&self, name: &str) -> Option<Arc<FittedModel>> {
+        self.slots
+            .read()
+            .expect("registry poisoned")
+            .get(name)
+            .map(|s| Arc::clone(&s.model))
+    }
+
+    pub fn remove(&self, name: &str) -> bool {
+        self.slots
+            .write()
+            .expect("registry poisoned")
+            .remove(name)
+            .is_some()
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        let mut names: Vec<String> = self
+            .slots
+            .read()
+            .expect("registry poisoned")
+            .keys()
+            .cloned()
+            .collect();
+        names.sort();
+        names
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.read().expect("registry poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model(name: &str) -> FittedModel {
+        FittedModel {
+            name: name.to_string(),
+            kind: EstimatorKind::Kde,
+            variant: "flash".into(),
+            d: 1,
+            n: 4,
+            bucket_n: 8,
+            x: Arc::new(HostTensor::zeros(vec![8, 1])),
+            w: Arc::new(HostTensor::zeros(vec![8])),
+            h: 0.5,
+            h_score: 0.35,
+            fit_ms: 1.0,
+        }
+    }
+
+    #[test]
+    fn insert_get_remove() {
+        let r = Registry::new(4);
+        assert!(r.insert(model("a")).is_none());
+        assert!(r.get("a").is_some());
+        assert!(r.get("b").is_none());
+        assert!(r.remove("a"));
+        assert!(!r.remove("a"));
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn lru_eviction_order() {
+        let r = Registry::new(2);
+        r.insert(model("a"));
+        r.insert(model("b"));
+        // Touch "a" so "b" becomes the LRU victim.
+        r.get("a");
+        let evicted = r.insert(model("c"));
+        assert_eq!(evicted.as_deref(), Some("b"));
+        assert_eq!(r.names(), vec!["a", "c"]);
+        assert_eq!(r.evictions(), 1);
+    }
+
+    #[test]
+    fn replacing_does_not_evict() {
+        let r = Registry::new(2);
+        r.insert(model("a"));
+        r.insert(model("b"));
+        assert!(r.insert(model("a")).is_none());
+        assert_eq!(r.len(), 2);
+    }
+
+    #[test]
+    fn peek_does_not_bump_lru() {
+        let r = Registry::new(2);
+        r.insert(model("a"));
+        r.insert(model("b"));
+        r.peek("a"); // no LRU bump: "a" stays oldest
+        let evicted = r.insert(model("c"));
+        assert_eq!(evicted.as_deref(), Some("a"));
+    }
+
+    #[test]
+    fn names_sorted() {
+        let r = Registry::new(8);
+        for n in ["zeta", "alpha", "mid"] {
+            r.insert(model(n));
+        }
+        assert_eq!(r.names(), vec!["alpha", "mid", "zeta"]);
+    }
+}

@@ -1,0 +1,219 @@
+//! Bounded request queue with backpressure — the admission-control half of
+//! the coordinator (the paper's serving framing: the fit/score pass is the
+//! expensive "prefill", eval batches are cheap "decodes"; a bounded queue
+//! keeps tail latency sane when eval load spikes).
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Why a pop returned nothing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PopTimeout {
+    TimedOut,
+    Closed,
+}
+
+/// Push failure: queue full (backpressure) or closed (shutdown).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PushError {
+    Full,
+    Closed,
+}
+
+struct Inner<T> {
+    queue: VecDeque<T>,
+    closed: bool,
+}
+
+/// MPMC bounded FIFO with condvar wakeups and a drain-matching primitive
+/// used by the dynamic batcher.
+pub struct BoundedQueue<T> {
+    inner: Mutex<Inner<T>>,
+    not_empty: Condvar,
+    capacity: usize,
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity >= 1);
+        BoundedQueue {
+            inner: Mutex::new(Inner { queue: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            capacity,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("queue poisoned").queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Non-blocking push; `Err(Full)` is the backpressure signal the server
+    /// converts into a shed-load error response.
+    pub fn push(&self, item: T) -> Result<(), (T, PushError)> {
+        let mut inner = self.inner.lock().expect("queue poisoned");
+        if inner.closed {
+            return Err((item, PushError::Closed));
+        }
+        if inner.queue.len() >= self.capacity {
+            return Err((item, PushError::Full));
+        }
+        inner.queue.push_back(item);
+        drop(inner);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking pop with timeout.
+    pub fn pop_timeout(&self, timeout: Duration) -> Result<T, PopTimeout> {
+        let deadline = Instant::now() + timeout;
+        let mut inner = self.inner.lock().expect("queue poisoned");
+        loop {
+            if let Some(item) = inner.queue.pop_front() {
+                return Ok(item);
+            }
+            if inner.closed {
+                return Err(PopTimeout::Closed);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(PopTimeout::TimedOut);
+            }
+            let (guard, _res) = self
+                .not_empty
+                .wait_timeout(inner, deadline - now)
+                .expect("queue poisoned");
+            inner = guard;
+        }
+    }
+
+    /// Remove and return up to `max` queued items matching `pred`,
+    /// preserving FIFO order among matches and leaving non-matches queued
+    /// in order.  This is the batcher's same-model coalescing primitive.
+    pub fn drain_matching<F>(&self, max: usize, mut pred: F) -> Vec<T>
+    where
+        F: FnMut(&T) -> bool,
+    {
+        let mut inner = self.inner.lock().expect("queue poisoned");
+        let mut matched = Vec::new();
+        let mut kept = VecDeque::with_capacity(inner.queue.len());
+        while let Some(item) = inner.queue.pop_front() {
+            if matched.len() < max && pred(&item) {
+                matched.push(item);
+            } else {
+                kept.push_back(item);
+            }
+        }
+        inner.queue = kept;
+        matched
+    }
+
+    /// Close the queue: pending items remain poppable, pushes fail, and
+    /// blocked poppers wake with `Closed` once drained.
+    pub fn close(&self) {
+        self.inner.lock().expect("queue poisoned").closed = true;
+        self.not_empty.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().expect("queue poisoned").closed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_order() {
+        let q = BoundedQueue::new(8);
+        for i in 0..5 {
+            q.push(i).unwrap();
+        }
+        for i in 0..5 {
+            assert_eq!(q.pop_timeout(Duration::from_millis(10)).unwrap(), i);
+        }
+    }
+
+    #[test]
+    fn backpressure_full() {
+        let q = BoundedQueue::new(2);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        let (item, err) = q.push(3).unwrap_err();
+        assert_eq!(item, 3);
+        assert_eq!(err, PushError::Full);
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn pop_timeout_on_empty() {
+        let q: BoundedQueue<u32> = BoundedQueue::new(2);
+        let start = Instant::now();
+        let err = q.pop_timeout(Duration::from_millis(20)).unwrap_err();
+        assert_eq!(err, PopTimeout::TimedOut);
+        assert!(start.elapsed() >= Duration::from_millis(20));
+    }
+
+    #[test]
+    fn close_drains_then_reports_closed() {
+        let q = BoundedQueue::new(4);
+        q.push(1).unwrap();
+        q.close();
+        assert_eq!(q.push(2).unwrap_err().1, PushError::Closed);
+        assert_eq!(q.pop_timeout(Duration::from_millis(5)).unwrap(), 1);
+        assert_eq!(
+            q.pop_timeout(Duration::from_millis(5)).unwrap_err(),
+            PopTimeout::Closed
+        );
+    }
+
+    #[test]
+    fn drain_matching_preserves_order_and_capacity() {
+        let q = BoundedQueue::new(16);
+        for i in 0..10 {
+            q.push(i).unwrap();
+        }
+        // Take up to 3 even numbers.
+        let evens = q.drain_matching(3, |x| x % 2 == 0);
+        assert_eq!(evens, vec![0, 2, 4]);
+        // The rest stay in order: odds and the un-drained evens.
+        let mut rest = Vec::new();
+        while let Ok(v) = q.pop_timeout(Duration::from_millis(1)) {
+            rest.push(v);
+        }
+        assert_eq!(rest, vec![1, 3, 5, 6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn cross_thread_handoff() {
+        let q = Arc::new(BoundedQueue::new(4));
+        let q2 = q.clone();
+        let producer = std::thread::spawn(move || {
+            for i in 0..100 {
+                loop {
+                    match q2.push(i) {
+                        Ok(()) => break,
+                        Err((_, PushError::Full)) => std::thread::yield_now(),
+                        Err((_, PushError::Closed)) => panic!("closed"),
+                    }
+                }
+            }
+        });
+        let mut got = Vec::new();
+        while got.len() < 100 {
+            got.push(q.pop_timeout(Duration::from_secs(1)).unwrap());
+        }
+        producer.join().unwrap();
+        assert_eq!(got, (0..100).collect::<Vec<_>>());
+    }
+}

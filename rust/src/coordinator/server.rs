@@ -1,0 +1,335 @@
+//! TCP front-end: newline-delimited JSON over `std::net`, one thread per
+//! connection (the request path inside each connection is the coordinator's
+//! queue + dispatcher, so connection threads only parse/serialize).
+//!
+//! Also provides `Client`, the matching blocking client used by the
+//! examples, the CLI and the integration tests.
+
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::protocol::{Request, Response};
+use super::Coordinator;
+use crate::{log_info, log_warn};
+
+/// A running TCP server bound to a local address.
+pub struct Server {
+    coordinator: Arc<Coordinator>,
+    local_addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind and start accepting.  Use port 0 for an ephemeral port (tests).
+    pub fn start(coordinator: Coordinator, host: &str, port: u16) -> Result<Server> {
+        let listener = TcpListener::bind((host, port))
+            .with_context(|| format!("binding {host}:{port}"))?;
+        let local_addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let coordinator = Arc::new(coordinator);
+
+        let accept_thread = {
+            let coordinator = Arc::clone(&coordinator);
+            let stop = Arc::clone(&stop);
+            std::thread::Builder::new()
+                .name("acceptor".into())
+                .spawn(move || accept_loop(listener, coordinator, stop))
+                .context("spawning acceptor")?
+        };
+        log_info!("server", "listening on {local_addr}");
+        Ok(Server { coordinator, local_addr, stop, accept_thread: Some(accept_thread) })
+    }
+
+    pub fn local_addr(&self) -> std::net::SocketAddr {
+        self.local_addr
+    }
+
+    pub fn coordinator(&self) -> &Coordinator {
+        &self.coordinator
+    }
+
+    /// Stop accepting and join the acceptor (open connections finish their
+    /// in-flight request and then see EOF-ish errors).
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    coordinator: Arc<Coordinator>,
+    stop: Arc<AtomicBool>,
+) {
+    let mut conn_threads: Vec<JoinHandle<()>> = Vec::new();
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                log_info!("server", "connection from {peer}");
+                let coordinator = Arc::clone(&coordinator);
+                let stop = Arc::clone(&stop);
+                match std::thread::Builder::new()
+                    .name(format!("conn-{peer}"))
+                    .spawn(move || {
+                        if let Err(e) = connection_loop(stream, &coordinator, &stop) {
+                            log_warn!("server", "connection {peer}: {e:#}");
+                        }
+                    }) {
+                    Ok(t) => conn_threads.push(t),
+                    Err(e) => log_warn!("server", "spawn failed: {e}"),
+                }
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(e) => {
+                log_warn!("server", "accept error: {e}");
+                break;
+            }
+        }
+        conn_threads.retain(|t| !t.is_finished());
+    }
+    for t in conn_threads {
+        let _ = t.join();
+    }
+    log_info!("server", "acceptor down");
+}
+
+fn connection_loop(
+    stream: TcpStream,
+    coordinator: &Coordinator,
+    stop: &AtomicBool,
+) -> Result<()> {
+    stream.set_read_timeout(Some(Duration::from_millis(200)))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    let mut line = String::new();
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            return Ok(());
+        }
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => return Ok(()), // client closed
+            Ok(_) => {}
+            Err(ref e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue;
+            }
+            Err(e) => return Err(e.into()),
+        }
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let response = handle_line(coordinator, trimmed);
+        writer.write_all(response.to_line().as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+    }
+}
+
+/// One request -> one response (shared by TCP and any future transport).
+pub fn handle_line(coordinator: &Coordinator, line: &str) -> Response {
+    let request = match Request::parse(line) {
+        Ok(r) => r,
+        Err(e) => return Response::Error { message: format!("{e:#}") },
+    };
+    handle_request(coordinator, request)
+}
+
+pub fn handle_request(coordinator: &Coordinator, request: Request) -> Response {
+    match request {
+        Request::Ping => Response::Pong,
+        Request::Models => Response::Models { names: coordinator.registry().names() },
+        Request::Stats => Response::Stats { body: coordinator.stats_json() },
+        Request::Delete { model } => {
+            let existed = coordinator.registry().remove(&model);
+            Response::Deleted { model, existed }
+        }
+        Request::Fit { model, estimator, d, points, h, h_score, variant, .. } => {
+            match coordinator.fit(
+                &model,
+                estimator,
+                d,
+                points,
+                h,
+                h_score,
+                variant.as_deref(),
+            ) {
+                Ok(info) => Response::FitOk {
+                    model: info.model,
+                    n: info.n,
+                    d: info.d,
+                    h: info.h,
+                    bucket_n: info.bucket_n,
+                    fit_ms: info.fit_ms,
+                },
+                Err(e) => Response::Error { message: format!("{e:#}") },
+            }
+        }
+        Request::Grad { model, points, .. } => {
+            match coordinator.registry().get(&model) {
+                None => Response::Error {
+                    message: format!("unknown model {model:?}"),
+                },
+                Some(m) => match coordinator.grad(&model, points) {
+                    Ok(gradients) => Response::GradOk { gradients, d: m.d },
+                    Err(e) => Response::Error { message: format!("{e:#}") },
+                },
+            }
+        }
+        Request::Eval { model, points, .. } => {
+            match coordinator.eval(&model, points) {
+                Ok(r) => Response::EvalOk {
+                    densities: r.densities,
+                    queue_ms: r.queue_ms,
+                    exec_ms: r.exec_ms,
+                    batch_size: r.batch_size,
+                },
+                Err(e) => Response::Error { message: format!("{e:#}") },
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Blocking client.
+// ---------------------------------------------------------------------------
+
+/// Line-protocol client for examples, CLI and tests.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+}
+
+impl Client {
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> Result<Client> {
+        let stream = TcpStream::connect(addr).context("connecting")?;
+        stream.set_nodelay(true)?;
+        Ok(Client {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: BufWriter::new(stream),
+        })
+    }
+
+    fn round_trip(&mut self, line: &str) -> Result<Response> {
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        let mut response = String::new();
+        let n = self.reader.read_line(&mut response)?;
+        if n == 0 {
+            return Err(anyhow!("server closed connection"));
+        }
+        Response::parse(response.trim())
+    }
+
+    pub fn ping(&mut self) -> Result<()> {
+        match self.round_trip(&Request::Ping.to_line(0))? {
+            Response::Pong => Ok(()),
+            other => Err(anyhow!("unexpected response {other:?}")),
+        }
+    }
+
+    /// Fit a model from row-major [n, d] points.
+    #[allow(clippy::too_many_arguments)]
+    pub fn fit(
+        &mut self,
+        model: &str,
+        estimator: crate::estimator::EstimatorKind,
+        d: usize,
+        points: Vec<f32>,
+        h: Option<f64>,
+        h_score: Option<f64>,
+        variant: Option<String>,
+    ) -> Result<super::FitInfo> {
+        let n = points.len() / d;
+        let req = Request::Fit {
+            model: model.into(),
+            estimator,
+            d,
+            points,
+            n,
+            h,
+            h_score,
+            variant,
+        };
+        match self.round_trip(&req.to_line(d))? {
+            Response::FitOk { model, n, d, h, bucket_n, fit_ms } => {
+                Ok(super::FitInfo { model, n, d, h, bucket_n, fit_ms })
+            }
+            Response::Error { message } => Err(anyhow!(message)),
+            other => Err(anyhow!("unexpected response {other:?}")),
+        }
+    }
+
+    /// Evaluate densities at row-major [k, d] points.
+    pub fn eval(
+        &mut self,
+        model: &str,
+        d: usize,
+        points: Vec<f32>,
+    ) -> Result<super::EvalResult> {
+        let k = points.len() / d;
+        let req = Request::Eval { model: model.into(), points, k };
+        match self.round_trip(&req.to_line(d))? {
+            Response::EvalOk { densities, queue_ms, exec_ms, batch_size } => {
+                Ok(super::EvalResult { densities, queue_ms, exec_ms, batch_size })
+            }
+            Response::Error { message } => Err(anyhow!(message)),
+            other => Err(anyhow!("unexpected response {other:?}")),
+        }
+    }
+
+    /// Gradient of the fitted log-density at row-major [k, d] points.
+    pub fn grad(&mut self, model: &str, d: usize, points: Vec<f32>) -> Result<Vec<f32>> {
+        let k = points.len() / d;
+        let req = Request::Grad { model: model.into(), points, k };
+        match self.round_trip(&req.to_line(d))? {
+            Response::GradOk { gradients, .. } => Ok(gradients),
+            Response::Error { message } => Err(anyhow!(message)),
+            other => Err(anyhow!("unexpected response {other:?}")),
+        }
+    }
+
+    pub fn models(&mut self) -> Result<Vec<String>> {
+        match self.round_trip(&Request::Models.to_line(0))? {
+            Response::Models { names } => Ok(names),
+            other => Err(anyhow!("unexpected response {other:?}")),
+        }
+    }
+
+    pub fn stats(&mut self) -> Result<crate::util::json::Value> {
+        match self.round_trip(&Request::Stats.to_line(0))? {
+            Response::Stats { body } => Ok(body),
+            other => Err(anyhow!("unexpected response {other:?}")),
+        }
+    }
+
+    pub fn delete(&mut self, model: &str) -> Result<bool> {
+        let req = Request::Delete { model: model.into() };
+        match self.round_trip(&req.to_line(0))? {
+            Response::Deleted { existed, .. } => Ok(existed),
+            other => Err(anyhow!("unexpected response {other:?}")),
+        }
+    }
+}

@@ -1,0 +1,184 @@
+//! Gaussian-mixture benchmark densities — the Rust twin of
+//! `python/compile/mixtures.py`.
+//!
+//! The component parameters are kept numerically identical to the python
+//! module so the oracle pdfs agree across the stack (sampling streams
+//! differ — each side uses its own PRNG — but the *distribution* is the
+//! same, which is what the MISE/MIAE benches need).
+
+use crate::util::rng::Pcg64;
+
+/// Isotropic Gaussian mixture.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mixture {
+    pub weights: Vec<f64>,
+    /// [k][d] component means.
+    pub means: Vec<Vec<f64>>,
+    pub sigmas: Vec<f64>,
+}
+
+impl Mixture {
+    pub fn d(&self) -> usize {
+        self.means[0].len()
+    }
+
+    pub fn k(&self) -> usize {
+        self.weights.len()
+    }
+
+    /// Draw `n` samples as a row-major [n, d] f32 buffer.
+    pub fn sample(&self, n: usize, rng: &mut Pcg64) -> Vec<f32> {
+        let d = self.d();
+        let mut out = Vec::with_capacity(n * d);
+        for _ in 0..n {
+            let comp = rng.categorical(&self.weights);
+            let mu = &self.means[comp];
+            let sigma = self.sigmas[comp];
+            for j in 0..d {
+                out.push(rng.normal_scaled(mu[j], sigma) as f32);
+            }
+        }
+        out
+    }
+
+    /// True density at one point.
+    pub fn pdf1(&self, x: &[f32]) -> f64 {
+        let d = self.d();
+        debug_assert_eq!(x.len(), d);
+        let mut total = 0.0f64;
+        for ((w, mu), sigma) in
+            self.weights.iter().zip(&self.means).zip(&self.sigmas)
+        {
+            let mut d2 = 0.0f64;
+            for j in 0..d {
+                let diff = x[j] as f64 - mu[j];
+                d2 += diff * diff;
+            }
+            let norm = (std::f64::consts::TAU).powf(d as f64 / 2.0)
+                * sigma.powi(d as i32);
+            total += w * (-d2 / (2.0 * sigma * sigma)).exp() / norm;
+        }
+        total
+    }
+
+    /// True density over a row-major [m, d] buffer.
+    pub fn pdf(&self, x: &[f32]) -> Vec<f64> {
+        let d = self.d();
+        assert_eq!(x.len() % d, 0);
+        x.chunks_exact(d).map(|row| self.pdf1(row)).collect()
+    }
+}
+
+/// Trimodal 1-D benchmark mixture (= python `mixtures.mix1d`).
+pub fn mix1d() -> Mixture {
+    Mixture {
+        weights: vec![0.45, 0.35, 0.20],
+        means: vec![vec![-2.0], vec![1.5], vec![5.0]],
+        sigmas: vec![0.6, 0.4, 1.2],
+    }
+}
+
+/// 4-component 16-D benchmark mixture (= python `mixtures.mix16d`).
+pub fn mix16d() -> Mixture {
+    let mut means = Vec::new();
+    for i in 0..4 {
+        let mut mu = vec![0.0f64; 16];
+        mu[i % 16] = if (i / 16) % 2 == 0 { 3.0 } else { -3.0 };
+        means.push(mu);
+    }
+    Mixture {
+        weights: vec![0.4, 0.3, 0.2, 0.1],
+        means,
+        sigmas: vec![1.0, 0.8, 1.2, 0.9],
+    }
+}
+
+/// Canonical benchmark mixture per dimension (= python `mixtures.by_dim`).
+pub fn by_dim(d: usize) -> Mixture {
+    match d {
+        1 => mix1d(),
+        16 => mix16d(),
+        _ => Mixture {
+            weights: vec![0.6, 0.4],
+            means: vec![vec![1.5; d], vec![-1.5; d]],
+            sigmas: vec![1.0, 0.7],
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parameters_match_python_twins() {
+        // Pin the exact values; test_parity in python asserts the same.
+        let m = mix1d();
+        assert_eq!(m.weights, vec![0.45, 0.35, 0.20]);
+        assert_eq!(m.means, vec![vec![-2.0], vec![1.5], vec![5.0]]);
+        assert_eq!(m.sigmas, vec![0.6, 0.4, 1.2]);
+        let m = mix16d();
+        assert_eq!(m.d(), 16);
+        assert_eq!(m.k(), 4);
+        assert_eq!(m.means[2][2], 3.0);
+        assert_eq!(m.means[1][1], 3.0);
+    }
+
+    #[test]
+    fn pdf_integrates_to_one_1d() {
+        let m = mix1d();
+        let lo = -15.0;
+        let hi = 15.0;
+        let steps = 20000;
+        let dx = (hi - lo) / steps as f64;
+        let mut integral = 0.0;
+        for i in 0..=steps {
+            let x = (lo + i as f64 * dx) as f32;
+            let w = if i == 0 || i == steps { 0.5 } else { 1.0 };
+            integral += w * m.pdf1(&[x]) * dx;
+        }
+        assert!((integral - 1.0).abs() < 1e-4, "integral={integral}");
+    }
+
+    #[test]
+    fn sample_moments_match() {
+        let m = mix1d();
+        let mut rng = Pcg64::seeded(42);
+        let n = 100_000;
+        let s = m.sample(n, &mut rng);
+        let mean: f64 = s.iter().map(|&v| v as f64).sum::<f64>() / n as f64;
+        let want: f64 = m
+            .weights
+            .iter()
+            .zip(&m.means)
+            .map(|(w, mu)| w * mu[0])
+            .sum();
+        assert!((mean - want).abs() < 0.02, "mean={mean} want={want}");
+    }
+
+    #[test]
+    fn sample_shape_16d() {
+        let m = mix16d();
+        let mut rng = Pcg64::seeded(1);
+        let s = m.sample(50, &mut rng);
+        assert_eq!(s.len(), 50 * 16);
+        let p = m.pdf(&s);
+        assert_eq!(p.len(), 50);
+        assert!(p.iter().all(|&v| v > 0.0 && v.is_finite()));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let m = by_dim(4);
+        let a = m.sample(32, &mut Pcg64::seeded(9));
+        let b = m.sample(32, &mut Pcg64::seeded(9));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn by_dim_generic_fallback() {
+        let m = by_dim(7);
+        assert_eq!(m.d(), 7);
+        assert_eq!(m.k(), 2);
+    }
+}

@@ -1,0 +1,7 @@
+//! Data layer: benchmark densities and serving workload traces.
+
+pub mod mixture;
+pub mod workload;
+
+pub use mixture::{by_dim, mix16d, mix1d, Mixture};
+pub use workload::{generate, QueryRequest, TraceSpec};

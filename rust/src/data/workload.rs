@@ -1,0 +1,116 @@
+//! Workload traces for the serving benches and the E2E example.
+//!
+//! Generates query-request streams against a fitted model: closed-loop
+//! (back-to-back) or open-loop with Poisson arrivals at a target rate —
+//! the standard pair of load models for serving-system evaluation.
+
+use crate::util::rng::Pcg64;
+
+use super::mixture::Mixture;
+
+/// One density-evaluation request in a trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QueryRequest {
+    /// Offset from trace start at which the request arrives.
+    pub arrival_s: f64,
+    /// Row-major [k, d] query points.
+    pub points: Vec<f32>,
+    /// Number of query points.
+    pub k: usize,
+}
+
+/// Trace shape knobs.
+#[derive(Debug, Clone)]
+pub struct TraceSpec {
+    /// Number of requests.
+    pub requests: usize,
+    /// Points per request: uniform in [min_k, max_k].
+    pub min_k: usize,
+    pub max_k: usize,
+    /// Open-loop arrival rate (requests/s); `None` = closed loop
+    /// (all arrivals at t=0, issued back-to-back by the driver).
+    pub rate: Option<f64>,
+}
+
+impl Default for TraceSpec {
+    fn default() -> Self {
+        TraceSpec { requests: 64, min_k: 1, max_k: 32, rate: None }
+    }
+}
+
+/// Generate a trace with query points drawn from the benchmark mixture
+/// (realistic: clients ask about regions where data actually lives).
+pub fn generate(mix: &Mixture, spec: &TraceSpec, rng: &mut Pcg64) -> Vec<QueryRequest> {
+    assert!(spec.min_k >= 1 && spec.min_k <= spec.max_k, "bad k range");
+    let mut t = 0.0f64;
+    (0..spec.requests)
+        .map(|_| {
+            let k = spec.min_k
+                + rng.below((spec.max_k - spec.min_k + 1) as u64) as usize;
+            let points = mix.sample(k, rng);
+            let arrival_s = match spec.rate {
+                Some(rate) => {
+                    t += rng.exponential(rate);
+                    t
+                }
+                None => 0.0,
+            };
+            QueryRequest { arrival_s, points, k }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::mixture::by_dim;
+
+    #[test]
+    fn closed_loop_arrivals_at_zero() {
+        let mix = by_dim(2);
+        let mut rng = Pcg64::seeded(1);
+        let spec = TraceSpec { requests: 20, min_k: 2, max_k: 5, rate: None };
+        let trace = generate(&mix, &spec, &mut rng);
+        assert_eq!(trace.len(), 20);
+        assert!(trace.iter().all(|r| r.arrival_s == 0.0));
+        assert!(trace.iter().all(|r| (2..=5).contains(&r.k)));
+        assert!(trace.iter().all(|r| r.points.len() == r.k * 2));
+    }
+
+    #[test]
+    fn open_loop_arrivals_monotone_and_rate_matched() {
+        let mix = by_dim(1);
+        let mut rng = Pcg64::seeded(2);
+        let rate = 50.0;
+        let spec = TraceSpec {
+            requests: 2000,
+            min_k: 1,
+            max_k: 1,
+            rate: Some(rate),
+        };
+        let trace = generate(&mix, &spec, &mut rng);
+        for pair in trace.windows(2) {
+            assert!(pair[1].arrival_s >= pair[0].arrival_s);
+        }
+        let span = trace.last().unwrap().arrival_s;
+        let measured = trace.len() as f64 / span;
+        assert!((measured - rate).abs() / rate < 0.1, "rate={measured}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mix = by_dim(3);
+        let spec = TraceSpec::default();
+        let a = generate(&mix, &spec, &mut Pcg64::seeded(7));
+        let b = generate(&mix, &spec, &mut Pcg64::seeded(7));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    #[should_panic(expected = "bad k range")]
+    fn rejects_inverted_k_range() {
+        let mix = by_dim(1);
+        let spec = TraceSpec { requests: 1, min_k: 5, max_k: 2, rate: None };
+        generate(&mix, &spec, &mut Pcg64::seeded(0));
+    }
+}

@@ -1,0 +1,99 @@
+//! Bandwidth selection rules.
+//!
+//! * `silverman` — the classical rule of thumb the paper's KDE baseline is
+//!   tuned with: h = sigma * (4 / (n (d + 2)))^{1/(d+4)}.
+//! * `sdkde_rate` — the SD-KDE-optimal scaling h ∝ n^{-1/(d+8)} (the
+//!   improved AMISE exponent O(n^{-8/(d+8)}) comes from this schedule).
+//! * `score_bandwidth` — the heat-semigroup score bandwidth t' = t/2, i.e.
+//!   h_s = h / sqrt(2) (paper §5).
+
+/// Pooled standard deviation across dimensions (the isotropic-kernel scale).
+pub fn pooled_std(x: &[f32], n: usize, d: usize) -> f64 {
+    assert_eq!(x.len(), n * d, "x must be [n, d] row-major");
+    assert!(n > 1, "need at least two samples");
+    let mut total_var = 0.0f64;
+    for j in 0..d {
+        let mut sum = 0.0f64;
+        let mut sum2 = 0.0f64;
+        for i in 0..n {
+            let v = x[i * d + j] as f64;
+            sum += v;
+            sum2 += v * v;
+        }
+        let mean = sum / n as f64;
+        total_var += (sum2 / n as f64 - mean * mean).max(0.0);
+    }
+    (total_var / d as f64).sqrt()
+}
+
+/// Silverman's rule of thumb in d dimensions.
+pub fn silverman(x: &[f32], n: usize, d: usize) -> f64 {
+    let sigma = pooled_std(x, n, d);
+    let factor = (4.0 / ((d as f64 + 2.0) * n as f64)).powf(1.0 / (d as f64 + 4.0));
+    sigma * factor
+}
+
+/// SD-KDE-rate bandwidth: same plug-in scale, improved exponent.
+pub fn sdkde_rate(x: &[f32], n: usize, d: usize) -> f64 {
+    let sigma = pooled_std(x, n, d);
+    let factor = (4.0 / ((d as f64 + 2.0) * n as f64)).powf(1.0 / (d as f64 + 8.0));
+    sigma * factor
+}
+
+/// Score-estimation bandwidth t' = t/2 => h_s = h / sqrt(2).
+pub fn score_bandwidth(h: f64) -> f64 {
+    h / std::f64::consts::SQRT_2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn gaussian_sample(n: usize, d: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg64::seeded(seed);
+        rng.normal_vec_f32(n * d)
+    }
+
+    #[test]
+    fn pooled_std_of_standard_normal_is_one() {
+        let n = 20_000;
+        let x = gaussian_sample(n, 3, 1);
+        let s = pooled_std(&x, n, 3);
+        assert!((s - 1.0).abs() < 0.03, "s={s}");
+    }
+
+    #[test]
+    fn silverman_shrinks_with_n() {
+        let x = gaussian_sample(4096, 1, 2);
+        let h_small = silverman(&x[..512], 512, 1);
+        let h_big = silverman(&x, 4096, 1);
+        assert!(h_big < h_small);
+        // 1-D Silverman on a standard normal ~ 1.06 n^{-1/5}: sanity band.
+        let expect = (4.0 / 3.0f64).powf(0.2) * (4096f64).powf(-0.2);
+        assert!((h_big - expect).abs() / expect < 0.1, "h={h_big} expect~{expect}");
+    }
+
+    #[test]
+    fn sdkde_rate_decays_slower_than_silverman() {
+        // n^{-1/(d+8)} decays slower than n^{-1/(d+4)}: for large n the
+        // SD-KDE bandwidth is *larger* (it can afford more smoothing).
+        let x = gaussian_sample(8192, 1, 3);
+        let h_silverman = silverman(&x, 8192, 1);
+        let h_sd = sdkde_rate(&x, 8192, 1);
+        assert!(h_sd > h_silverman);
+    }
+
+    #[test]
+    fn score_bandwidth_halves_t() {
+        let h = 0.8;
+        let hs = score_bandwidth(h);
+        assert!((hs * hs - h * h / 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least two samples")]
+    fn rejects_single_sample() {
+        pooled_std(&[1.0], 1, 1);
+    }
+}

@@ -1,0 +1,135 @@
+//! Estimator layer: shared estimator/variant vocabulary, bandwidth rules,
+//! and the native Rust scalar baselines/oracles.
+
+pub mod bandwidth;
+pub mod native;
+
+use std::fmt;
+
+/// Which density estimator a request/bench asks for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum EstimatorKind {
+    /// Vanilla Gaussian KDE.
+    Kde,
+    /// Score-debiased KDE (fit = score+shift, eval = KDE on debiased set).
+    SdKde,
+    /// Laplace-corrected KDE (signed, no score pass).
+    Laplace,
+}
+
+impl EstimatorKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "kde" => Some(Self::Kde),
+            "sdkde" | "sd-kde" | "sd_kde" => Some(Self::SdKde),
+            "laplace" | "laplace-kde" | "flash-laplace" => Some(Self::Laplace),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Self::Kde => "kde",
+            Self::SdKde => "sdkde",
+            Self::Laplace => "laplace",
+        }
+    }
+
+    /// The artifact pipeline evaluating a *fitted* model of this kind.
+    /// SD-KDE evaluates a plain KDE over debiased samples.
+    pub fn eval_pipeline(&self) -> &'static str {
+        match self {
+            Self::Kde | Self::SdKde => "kde",
+            Self::Laplace => "laplace",
+        }
+    }
+
+    /// Whether fitting requires the score pass.
+    pub fn needs_fit(&self) -> bool {
+        matches!(self, Self::SdKde)
+    }
+}
+
+impl fmt::Display for EstimatorKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Execution variant (maps 1:1 to artifact variants; DESIGN.md §3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Variant {
+    /// Pallas streaming tiles (the paper's contribution).
+    Flash,
+    /// Materializing GEMM baseline ("SD-KDE (Torch)").
+    Gemm,
+    /// Row-block streaming baseline (PyKeOps analogue).
+    Stream,
+    /// Broadcasted elementwise baseline (small shapes only).
+    Naive,
+    /// Non-fused Laplace (second pass recomputes distances); only valid
+    /// for the laplace pipeline.
+    NonFused,
+}
+
+impl Variant {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "flash" => Some(Self::Flash),
+            "gemm" => Some(Self::Gemm),
+            "stream" => Some(Self::Stream),
+            "naive" => Some(Self::Naive),
+            "nonfused" | "non-fused" => Some(Self::NonFused),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Self::Flash => "flash",
+            Self::Gemm => "gemm",
+            Self::Stream => "stream",
+            Self::Naive => "naive",
+            Self::NonFused => "nonfused",
+        }
+    }
+}
+
+impl fmt::Display for Variant {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parse_round_trip() {
+        for k in [EstimatorKind::Kde, EstimatorKind::SdKde, EstimatorKind::Laplace] {
+            assert_eq!(EstimatorKind::parse(k.as_str()), Some(k));
+        }
+        assert_eq!(EstimatorKind::parse("SD-KDE"), Some(EstimatorKind::SdKde));
+        assert_eq!(EstimatorKind::parse("bogus"), None);
+    }
+
+    #[test]
+    fn variant_parse_round_trip() {
+        for v in [Variant::Flash, Variant::Gemm, Variant::Stream,
+                  Variant::Naive, Variant::NonFused] {
+            assert_eq!(Variant::parse(v.as_str()), Some(v));
+        }
+        assert_eq!(Variant::parse("non-fused"), Some(Variant::NonFused));
+        assert_eq!(Variant::parse("turbo"), None);
+    }
+
+    #[test]
+    fn eval_pipeline_mapping() {
+        assert_eq!(EstimatorKind::Kde.eval_pipeline(), "kde");
+        assert_eq!(EstimatorKind::SdKde.eval_pipeline(), "kde");
+        assert_eq!(EstimatorKind::Laplace.eval_pipeline(), "laplace");
+        assert!(EstimatorKind::SdKde.needs_fit());
+        assert!(!EstimatorKind::Kde.needs_fit());
+    }
+}

@@ -1,0 +1,27 @@
+//! # flash-sdkde
+//!
+//! Full-system reproduction of *Flash-SD-KDE: Accelerating SD-KDE with
+//! Tensor Cores* as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L1** — Pallas streaming kernels (python, build time): tiled
+//!   GEMM-form score / KDE / Laplace kernels, `python/compile/kernels/`.
+//! * **L2** — JAX pipelines lowered AOT to HLO text artifacts,
+//!   `python/compile/model.py` + `aot.py`.
+//! * **L3** — this crate: a density-estimation serving coordinator that
+//!   loads the artifacts via PJRT and owns the entire request path
+//!   (routing, dynamic batching, model registry, backpressure, metrics).
+//!
+//! Python never runs at request time; after `make artifacts` the binary is
+//! self-contained.  See DESIGN.md for the architecture and the experiment
+//! index, EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod analysis;
+pub mod bench_harness;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod estimator;
+pub mod runtime;
+pub mod util;
+
+pub use config::Config;

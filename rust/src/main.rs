@@ -1,0 +1,291 @@
+//! flash-sdkde CLI: launcher for the serving coordinator, the benchmark
+//! suite and operational tooling.
+//!
+//! Commands:
+//!   serve  — boot the coordinator + TCP server from a config file
+//!   bench  — regenerate a paper table/figure (DESIGN.md §5)
+//!   info   — inspect artifacts/manifest + engine platform
+//!   fit    — client: fit a model on a running server from a CSV-ish file
+//!   eval   — client: evaluate points under a fitted model
+//!   stats  — client: dump server stats JSON
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use flash_sdkde::bench_harness::{self, experiments::Ctx, RunSpec};
+use flash_sdkde::config::Config;
+use flash_sdkde::coordinator::server::{Client, Server};
+use flash_sdkde::coordinator::Coordinator;
+use flash_sdkde::estimator::EstimatorKind;
+use flash_sdkde::runtime::Manifest;
+use flash_sdkde::util::cli::{self, Command, OptSpec};
+use flash_sdkde::util::json;
+
+fn commands() -> Vec<Command> {
+    vec![
+        Command {
+            name: "serve",
+            about: "start the density-estimation server",
+            opts: vec![
+                OptSpec::opt("config", "JSON config file (configs/serve.json)"),
+                OptSpec::opt("artifacts", "artifact directory override"),
+                OptSpec::opt("port", "TCP port override"),
+                OptSpec::opt("host", "bind host override"),
+                OptSpec::flag("once", "exit after binding (smoke test)"),
+            ],
+        },
+        Command {
+            name: "bench",
+            about: "regenerate a paper table/figure",
+            opts: vec![
+                OptSpec::opt_required("experiment",
+                    "fig1|table1|fig2|fig3|fig4|fig5|fig6|fig7|blocksweep|headline|all"),
+                OptSpec::opt_default("artifacts", "artifact directory", "artifacts"),
+                OptSpec::opt_default("iters", "measured iterations", "3"),
+                OptSpec::opt_default("warmup", "warmup iterations", "1"),
+                OptSpec::opt("sizes", "override n sweep (comma list)"),
+                OptSpec::opt("seeds", "seeds for oracle sweeps"),
+                OptSpec::opt("naive-max-n", "cap for the scalar baseline"),
+            ],
+        },
+        Command {
+            name: "info",
+            about: "inspect the artifact manifest",
+            opts: vec![
+                OptSpec::opt_default("artifacts", "artifact directory", "artifacts"),
+                OptSpec::flag("dump-config", "print the default config JSON"),
+            ],
+        },
+        Command {
+            name: "fit",
+            about: "client: fit a model on a running server",
+            opts: vec![
+                OptSpec::opt_default("addr", "server address", "127.0.0.1:7474"),
+                OptSpec::opt_required("model", "model name"),
+                OptSpec::opt_required("data", "whitespace/comma separated point file"),
+                OptSpec::opt_required("d", "dimension"),
+                OptSpec::opt_default("estimator", "kde|sdkde|laplace", "sdkde"),
+                OptSpec::opt("h", "bandwidth override"),
+            ],
+        },
+        Command {
+            name: "eval",
+            about: "client: evaluate densities under a fitted model",
+            opts: vec![
+                OptSpec::opt_default("addr", "server address", "127.0.0.1:7474"),
+                OptSpec::opt_required("model", "model name"),
+                OptSpec::opt_required("data", "whitespace/comma separated point file"),
+                OptSpec::opt_required("d", "dimension"),
+            ],
+        },
+        Command {
+            name: "stats",
+            about: "client: dump server stats",
+            opts: vec![OptSpec::opt_default("addr", "server address", "127.0.0.1:7474")],
+        },
+    ]
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    std::process::exit(match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    });
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let cmds = commands();
+    let program = "flash-sdkde";
+    let about = "Flash-SD-KDE serving coordinator (rust + JAX + Pallas, AOT via PJRT)";
+    let Some(cmd_name) = args.get(1) else {
+        print!("{}", cli::overview_text(program, about, &cmds));
+        return Ok(());
+    };
+    if cmd_name == "--help" || cmd_name == "-h" || cmd_name == "help" {
+        print!("{}", cli::overview_text(program, about, &cmds));
+        return Ok(());
+    }
+    let cmd = cmds
+        .iter()
+        .find(|c| c.name == cmd_name.as_str())
+        .ok_or_else(|| anyhow!("unknown command {cmd_name:?} (see --help)"))?;
+    let rest = &args[2..];
+    if rest.iter().any(|a| a == "--help" || a == "-h") {
+        print!("{}", cli::help_text(program, cmd));
+        return Ok(());
+    }
+    let parsed = cli::parse_args(cmd, rest).map_err(|e| anyhow!(e))?;
+
+    match cmd.name {
+        "serve" => cmd_serve(&parsed),
+        "bench" => cmd_bench(&parsed),
+        "info" => cmd_info(&parsed),
+        "fit" => cmd_fit(&parsed),
+        "eval" => cmd_eval(&parsed),
+        "stats" => cmd_stats(&parsed),
+        _ => unreachable!(),
+    }
+}
+
+fn cmd_serve(p: &cli::Parsed) -> Result<()> {
+    let mut cfg = match p.get("config") {
+        Some(path) => Config::from_file(Path::new(path)).map_err(|e| anyhow!(e))?,
+        None => Config::default(),
+    };
+    if let Some(dir) = p.get("artifacts") {
+        cfg.artifacts_dir = PathBuf::from(dir);
+    }
+    if let Some(port) = p.get_usize("port").map_err(|e| anyhow!(e))? {
+        cfg.port = u16::try_from(port).map_err(|_| anyhow!("port out of range"))?;
+    }
+    if let Some(host) = p.get("host") {
+        cfg.host = host.to_string();
+    }
+    cfg.validate().map_err(|e| anyhow!(e))?;
+
+    let coordinator = Coordinator::start(cfg.clone())?;
+    let mut server = Server::start(coordinator, &cfg.host, cfg.port)?;
+    println!("flash-sdkde serving on {}", server.local_addr());
+    if p.flag("once") {
+        server.shutdown();
+        return Ok(());
+    }
+    // Serve until killed.
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_bench(p: &cli::Parsed) -> Result<()> {
+    let artifacts = PathBuf::from(p.get_string("artifacts", "artifacts"));
+    let mut ctx = Ctx::new(&artifacts)?;
+    ctx.spec = RunSpec::new(
+        p.get_usize("warmup").map_err(|e| anyhow!(e))?.unwrap_or(1),
+        p.get_usize("iters").map_err(|e| anyhow!(e))?.unwrap_or(3),
+    );
+    if let Some(sizes) = p.get_usize_list("sizes").map_err(|e| anyhow!(e))? {
+        ctx.sizes_16d = sizes.clone();
+        ctx.sizes_1d = sizes;
+    }
+    if let Some(seeds) = p.get_usize("seeds").map_err(|e| anyhow!(e))? {
+        ctx.seeds = seeds as u64;
+    }
+    if let Some(cap) = p.get_usize("naive-max-n").map_err(|e| anyhow!(e))? {
+        ctx.naive_max_n = cap;
+    }
+
+    let which = p.get("experiment").expect("required");
+    let ids: Vec<&str> = if which == "all" {
+        bench_harness::EXPERIMENTS.to_vec()
+    } else {
+        vec![which]
+    };
+    for id in ids {
+        let table = bench_harness::run_experiment(&mut ctx, id)?;
+        table.emit(id);
+    }
+    Ok(())
+}
+
+fn cmd_info(p: &cli::Parsed) -> Result<()> {
+    if p.flag("dump-config") {
+        println!("{}", json::to_string(&Config::default().to_json()));
+        return Ok(());
+    }
+    let dir = PathBuf::from(p.get_string("artifacts", "artifacts"));
+    let manifest = Manifest::load(&dir)?;
+    println!("artifacts: {} entries (digest {})",
+        manifest.entries.len(),
+        &manifest.digest.get(..12).unwrap_or(&manifest.digest));
+    for d in manifest.dims() {
+        for pipeline in ["kde", "sdkde_fit", "sdkde_e2e", "laplace"] {
+            for variant in ["flash", "gemm", "stream", "naive", "nonfused"] {
+                let buckets = manifest.buckets(pipeline, variant, d);
+                if !buckets.is_empty() {
+                    println!("  d={d:<3} {pipeline:<10} {variant:<9} buckets {buckets:?}");
+                }
+            }
+        }
+    }
+    let sweep = manifest.sweep_entries();
+    if !sweep.is_empty() {
+        println!("  tile-sweep artifacts: {}", sweep.len());
+    }
+    Ok(())
+}
+
+fn read_points(path: &str, d: usize) -> Result<Vec<f32>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {path}"))?;
+    let mut out = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        for tok in line.split(|c: char| c == ',' || c.is_whitespace()) {
+            if tok.is_empty() {
+                continue;
+            }
+            out.push(tok.parse::<f32>().with_context(|| {
+                format!("{path}:{}: bad number {tok:?}", lineno + 1)
+            })?);
+        }
+    }
+    if out.is_empty() || out.len() % d != 0 {
+        bail!("{path}: expected a multiple of d={d} values, got {}", out.len());
+    }
+    Ok(out)
+}
+
+fn cmd_fit(p: &cli::Parsed) -> Result<()> {
+    let d = p.get_usize("d").map_err(|e| anyhow!(e))?.expect("required");
+    let points = read_points(p.get("data").expect("required"), d)?;
+    let estimator = EstimatorKind::parse(&p.get_string("estimator", "sdkde"))
+        .ok_or_else(|| anyhow!("bad estimator"))?;
+    let h = p.get_f64("h").map_err(|e| anyhow!(e))?;
+    let mut client = Client::connect(p.get_string("addr", "127.0.0.1:7474"))?;
+    let info = client.fit(
+        p.get("model").expect("required"),
+        estimator,
+        d,
+        points,
+        h,
+        None,
+        None,
+    )?;
+    println!(
+        "fitted {} (n={}, d={}, h={:.5}, bucket={}, {:.1}ms)",
+        info.model, info.n, info.d, info.h, info.bucket_n, info.fit_ms
+    );
+    Ok(())
+}
+
+fn cmd_eval(p: &cli::Parsed) -> Result<()> {
+    let d = p.get_usize("d").map_err(|e| anyhow!(e))?.expect("required");
+    let points = read_points(p.get("data").expect("required"), d)?;
+    let mut client = Client::connect(p.get_string("addr", "127.0.0.1:7474"))?;
+    let result = client.eval(p.get("model").expect("required"), d, points)?;
+    for v in &result.densities {
+        println!("{v}");
+    }
+    eprintln!(
+        "({} densities, queue {:.2}ms, exec {:.2}ms, batch size {})",
+        result.densities.len(),
+        result.queue_ms,
+        result.exec_ms,
+        result.batch_size
+    );
+    Ok(())
+}
+
+fn cmd_stats(p: &cli::Parsed) -> Result<()> {
+    let mut client = Client::connect(p.get_string("addr", "127.0.0.1:7474"))?;
+    println!("{}", json::to_string(&client.stats()?));
+    Ok(())
+}

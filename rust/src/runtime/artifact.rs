@@ -1,0 +1,359 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime.
+//!
+//! `manifest.json` (schema in aot.py's docstring) indexes every lowered HLO
+//! artifact by (pipeline, variant, d, n-bucket, m-bucket, tiles).  This
+//! module parses it into typed records and answers bucket-selection queries
+//! for the coordinator ("smallest bucket that fits n train points and m
+//! queries").
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{self, Value};
+
+/// One tensor signature in an artifact's I/O list.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+/// One lowered artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactEntry {
+    pub pipeline: String,
+    pub variant: String,
+    pub d: usize,
+    /// Train-rows bucket.
+    pub n: usize,
+    /// Query-rows bucket (for fit pipelines this mirrors the plan but is
+    /// unused at execution time).
+    pub m: usize,
+    /// Optional (BLOCK_M, BLOCK_N) tile pin (§6.2 sweep artifacts).
+    pub tiles: Option<(usize, usize)>,
+    /// File name relative to the artifact directory.
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl ArtifactEntry {
+    /// Unique key used by the executable cache.
+    pub fn key(&self) -> String {
+        match self.tiles {
+            Some((bm, bn)) => format!(
+                "{}__{}__d{}__n{}__m{}__bm{}__bn{}",
+                self.pipeline, self.variant, self.d, self.n, self.m, bm, bn
+            ),
+            None => format!(
+                "{}__{}__d{}__n{}__m{}",
+                self.pipeline, self.variant, self.d, self.n, self.m
+            ),
+        }
+    }
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub digest: String,
+    pub entries: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "cannot read {} — run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        let value = json::parse(&text)
+            .map_err(|e| anyhow!("manifest parse error: {e}"))?;
+        Self::from_json(dir, &value)
+    }
+
+    pub fn from_json(dir: &Path, v: &Value) -> Result<Manifest> {
+        let version = v
+            .get("version")
+            .and_then(Value::as_usize)
+            .ok_or_else(|| anyhow!("manifest missing integer 'version'"))?;
+        if version != 1 {
+            bail!("unsupported manifest version {version} (expected 1)");
+        }
+        let digest = v
+            .get("digest")
+            .and_then(Value::as_str)
+            .unwrap_or("")
+            .to_string();
+        let raw_entries = v
+            .get("entries")
+            .and_then(Value::as_array)
+            .ok_or_else(|| anyhow!("manifest missing 'entries' array"))?;
+        let mut entries = Vec::with_capacity(raw_entries.len());
+        for (i, e) in raw_entries.iter().enumerate() {
+            entries.push(
+                parse_entry(e).with_context(|| format!("manifest entry {i}"))?,
+            );
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), digest, entries })
+    }
+
+    /// Absolute path of an entry's HLO file.
+    pub fn path_of(&self, entry: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+
+    /// Exact lookup.
+    pub fn find(
+        &self,
+        pipeline: &str,
+        variant: &str,
+        d: usize,
+        n: usize,
+        m: usize,
+    ) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| {
+            e.pipeline == pipeline
+                && e.variant == variant
+                && e.d == d
+                && e.n == n
+                && e.m == m
+                && e.tiles.is_none()
+        })
+    }
+
+    /// Smallest bucket with `n >= n_need` and `m >= m_need` for a pipeline
+    /// variant and dimension.  This is the coordinator's shape router.
+    pub fn select_bucket(
+        &self,
+        pipeline: &str,
+        variant: &str,
+        d: usize,
+        n_need: usize,
+        m_need: usize,
+    ) -> Option<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .filter(|e| {
+                e.pipeline == pipeline
+                    && e.variant == variant
+                    && e.d == d
+                    && e.tiles.is_none()
+                    && e.n >= n_need
+                    && e.m >= m_need
+            })
+            // Prefer tight n first (quadratic cost), then tight m.
+            .min_by_key(|e| (e.n, e.m))
+    }
+
+    /// All (n, m) buckets available for (pipeline, variant, d), sorted.
+    pub fn buckets(
+        &self,
+        pipeline: &str,
+        variant: &str,
+        d: usize,
+    ) -> Vec<(usize, usize)> {
+        let mut out: Vec<(usize, usize)> = self
+            .entries
+            .iter()
+            .filter(|e| {
+                e.pipeline == pipeline && e.variant == variant && e.d == d
+                    && e.tiles.is_none()
+            })
+            .map(|e| (e.n, e.m))
+            .collect();
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// The §6.2 tile-sweep artifacts.
+    pub fn sweep_entries(&self) -> Vec<&ArtifactEntry> {
+        self.entries.iter().filter(|e| e.tiles.is_some()).collect()
+    }
+
+    /// Dimensions present in the manifest.
+    pub fn dims(&self) -> Vec<usize> {
+        let mut ds: Vec<usize> = self.entries.iter().map(|e| e.d).collect();
+        ds.sort_unstable();
+        ds.dedup();
+        ds
+    }
+}
+
+fn parse_specs(v: Option<&Value>, field: &str) -> Result<Vec<TensorSpec>> {
+    let arr = v
+        .and_then(Value::as_array)
+        .ok_or_else(|| anyhow!("missing '{field}' array"))?;
+    arr.iter()
+        .enumerate()
+        .map(|(i, spec)| {
+            let shape = spec
+                .get("shape")
+                .and_then(Value::as_array)
+                .ok_or_else(|| anyhow!("{field}[{i}] missing shape"))?
+                .iter()
+                .map(|x| x.as_usize().ok_or_else(|| anyhow!("bad shape value")))
+                .collect::<Result<Vec<_>>>()?;
+            let name = spec
+                .get("name")
+                .and_then(Value::as_str)
+                .unwrap_or("")
+                .to_string();
+            Ok(TensorSpec { name, shape })
+        })
+        .collect()
+}
+
+fn parse_entry(e: &Value) -> Result<ArtifactEntry> {
+    let get_str = |k: &str| -> Result<String> {
+        e.get(k)
+            .and_then(Value::as_str)
+            .map(str::to_string)
+            .ok_or_else(|| anyhow!("missing string '{k}'"))
+    };
+    let get_usize = |k: &str| -> Result<usize> {
+        e.get(k)
+            .and_then(Value::as_usize)
+            .ok_or_else(|| anyhow!("missing integer '{k}'"))
+    };
+    let tiles = match e.get("tiles") {
+        None | Some(Value::Null) => None,
+        Some(Value::Array(a)) if a.len() == 2 => {
+            let bm = a[0].as_usize().ok_or_else(|| anyhow!("bad tiles"))?;
+            let bn = a[1].as_usize().ok_or_else(|| anyhow!("bad tiles"))?;
+            Some((bm, bn))
+        }
+        Some(other) => bail!("bad 'tiles' value: {other:?}"),
+    };
+    Ok(ArtifactEntry {
+        pipeline: get_str("pipeline")?,
+        variant: get_str("variant")?,
+        d: get_usize("d")?,
+        n: get_usize("n")?,
+        m: get_usize("m")?,
+        tiles,
+        file: get_str("file")?,
+        inputs: parse_specs(e.get("inputs"), "inputs")?,
+        outputs: parse_specs(e.get("outputs"), "outputs")?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest_json() -> Value {
+        json::parse(
+            r#"{
+          "version": 1,
+          "digest": "abc",
+          "entries": [
+            {"pipeline": "kde", "variant": "flash", "d": 16, "n": 512,
+             "m": 64, "tiles": null, "file": "a.hlo.txt",
+             "inputs": [{"name": "x", "shape": [512, 16]},
+                        {"name": "w", "shape": [512]},
+                        {"name": "y", "shape": [64, 16]},
+                        {"name": "h", "shape": []}],
+             "outputs": [{"shape": [64]}]},
+            {"pipeline": "kde", "variant": "flash", "d": 16, "n": 1024,
+             "m": 128, "tiles": null, "file": "b.hlo.txt",
+             "inputs": [], "outputs": []},
+            {"pipeline": "kde", "variant": "flash", "d": 16, "n": 1024,
+             "m": 64, "tiles": null, "file": "c.hlo.txt",
+             "inputs": [], "outputs": []},
+            {"pipeline": "sdkde_fit", "variant": "flash", "d": 16,
+             "n": 2048, "m": 256, "tiles": [64, 512], "file": "d.hlo.txt",
+             "inputs": [], "outputs": []}
+          ]
+        }"#,
+        )
+        .unwrap()
+    }
+
+    fn manifest() -> Manifest {
+        Manifest::from_json(Path::new("/tmp/art"), &manifest_json()).unwrap()
+    }
+
+    #[test]
+    fn parses_entries_and_specs() {
+        let m = manifest();
+        assert_eq!(m.entries.len(), 4);
+        assert_eq!(m.digest, "abc");
+        let e = &m.entries[0];
+        assert_eq!(e.inputs.len(), 4);
+        assert_eq!(e.inputs[0].name, "x");
+        assert_eq!(e.inputs[0].shape, vec![512, 16]);
+        assert_eq!(e.inputs[3].shape, Vec::<usize>::new());
+        assert_eq!(e.outputs[0].shape, vec![64]);
+        assert_eq!(m.path_of(e), Path::new("/tmp/art/a.hlo.txt"));
+    }
+
+    #[test]
+    fn exact_find_skips_tile_pinned() {
+        let m = manifest();
+        assert!(m.find("kde", "flash", 16, 512, 64).is_some());
+        assert!(m.find("sdkde_fit", "flash", 16, 2048, 256).is_none());
+        assert!(m.find("kde", "gemm", 16, 512, 64).is_none());
+    }
+
+    #[test]
+    fn bucket_selection_prefers_tight_n_then_m() {
+        let m = manifest();
+        // Fits in 512/64 exactly.
+        let e = m.select_bucket("kde", "flash", 16, 300, 60).unwrap();
+        assert_eq!((e.n, e.m), (512, 64));
+        // Needs n > 512 -> 1024; m <= 64 -> the tighter m bucket.
+        let e = m.select_bucket("kde", "flash", 16, 600, 30).unwrap();
+        assert_eq!((e.n, e.m), (1024, 64));
+        // Needs m > 64 -> 1024/128.
+        let e = m.select_bucket("kde", "flash", 16, 600, 100).unwrap();
+        assert_eq!((e.n, e.m), (1024, 128));
+        // Too big for any bucket.
+        assert!(m.select_bucket("kde", "flash", 16, 5000, 64).is_none());
+    }
+
+    #[test]
+    fn buckets_listing() {
+        let m = manifest();
+        assert_eq!(
+            m.buckets("kde", "flash", 16),
+            vec![(512, 64), (1024, 64), (1024, 128)]
+        );
+        assert!(m.buckets("kde", "naive", 16).is_empty());
+    }
+
+    #[test]
+    fn sweep_entries_and_keys() {
+        let m = manifest();
+        let sweep = m.sweep_entries();
+        assert_eq!(sweep.len(), 1);
+        assert_eq!(sweep[0].tiles, Some((64, 512)));
+        assert!(sweep[0].key().ends_with("__bm64__bn512"));
+        assert_eq!(m.entries[0].key(), "kde__flash__d16__n512__m64");
+    }
+
+    #[test]
+    fn rejects_bad_version_and_schema() {
+        let v = json::parse(r#"{"version": 2, "entries": []}"#).unwrap();
+        assert!(Manifest::from_json(Path::new("."), &v).is_err());
+        let v = json::parse(r#"{"version": 1}"#).unwrap();
+        assert!(Manifest::from_json(Path::new("."), &v).is_err());
+        let v = json::parse(
+            r#"{"version": 1, "entries": [{"pipeline": "kde"}]}"#,
+        )
+        .unwrap();
+        assert!(Manifest::from_json(Path::new("."), &v).is_err());
+    }
+
+    #[test]
+    fn dims_listing() {
+        assert_eq!(manifest().dims(), vec![16]);
+    }
+}

@@ -1,0 +1,190 @@
+//! Engine: threaded execution front-end over the `ExecutableStore`.
+//!
+//! PJRT handles are not `Send`, so each engine worker thread owns its own
+//! `ExecutableStore` (client + executable cache) and drains a shared job
+//! queue.  The `Engine` handle is cheap to clone and safe to share across
+//! the coordinator's connection threads — this is the boundary between the
+//! L3 request path and the XLA runtime, analogous to a GPU-stream owner
+//! thread in a serving stack.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::artifact::{ArtifactEntry, Manifest};
+use super::store::{ExecOutput, ExecutableStore, StoreStats};
+use super::tensor::HostTensor;
+use crate::log_info;
+
+/// What to execute: an exact artifact entry (resolved by the caller via the
+/// shared `Manifest`, which is plain data and freely shareable).
+#[derive(Debug, Clone)]
+pub struct ExecRequest {
+    pub entry: ArtifactEntry,
+    /// Arc-shared so registry-resident tensors (the fitted training set)
+    /// cross into the worker without copying (perf pass, EXPERIMENTS.md).
+    pub inputs: Vec<Arc<HostTensor>>,
+}
+
+enum Job {
+    Exec {
+        req: ExecRequest,
+        reply: Sender<Result<ExecOutput>>,
+    },
+    Warm {
+        entries: Vec<ArtifactEntry>,
+        reply: Sender<Result<Duration>>,
+    },
+    Stats {
+        reply: Sender<(StoreStats, usize)>,
+    },
+    Shutdown,
+}
+
+/// Cloneable handle to the engine worker pool.
+#[derive(Clone)]
+pub struct Engine {
+    tx: Sender<Job>,
+    manifest: Arc<Manifest>,
+    /// Held only for its Drop: the last handle shuts the workers down.
+    #[allow(dead_code)]
+    inner: Arc<EngineInner>,
+}
+
+struct EngineInner {
+    tx: Sender<Job>,
+    workers: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl Drop for EngineInner {
+    fn drop(&mut self) {
+        let workers = std::mem::take(&mut *self.workers.lock().expect("poisoned"));
+        for _ in &workers {
+            let _ = self.tx.send(Job::Shutdown);
+        }
+        for w in workers {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Engine {
+    /// Start `workers` threads, each with its own PJRT client.
+    pub fn start(manifest: Manifest, workers: usize) -> Result<Engine> {
+        assert!(workers >= 1, "engine needs at least one worker");
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let manifest = Arc::new(manifest);
+
+        let mut handles = Vec::with_capacity(workers);
+        for worker_id in 0..workers {
+            let rx = Arc::clone(&rx);
+            let manifest = Manifest::clone(&manifest);
+            let (ready_tx, ready_rx) = channel::<Result<()>>();
+            let handle = std::thread::Builder::new()
+                .name(format!("engine-{worker_id}"))
+                .spawn(move || worker_loop(worker_id, manifest, rx, ready_tx))
+                .context("spawning engine worker")?;
+            // Surface client-creation failures at startup, not first use.
+            ready_rx
+                .recv()
+                .map_err(|_| anyhow!("engine worker {worker_id} died during init"))??;
+            handles.push(handle);
+        }
+        let inner = Arc::new(EngineInner {
+            tx: tx.clone(),
+            workers: Mutex::new(handles),
+        });
+        Ok(Engine { tx, manifest, inner })
+    }
+
+    /// The shared artifact manifest (bucket selection happens caller-side).
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Execute an artifact; blocks until the result is ready.
+    pub fn execute(&self, entry: &ArtifactEntry, inputs: Vec<Arc<HostTensor>>) -> Result<ExecOutput> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Job::Exec {
+                req: ExecRequest { entry: entry.clone(), inputs },
+                reply,
+            })
+            .map_err(|_| anyhow!("engine is shut down"))?;
+        rx.recv().map_err(|_| anyhow!("engine worker dropped reply"))?
+    }
+
+    /// Pre-compile entries on one worker; returns total compile time.
+    pub fn warm(&self, entries: Vec<ArtifactEntry>) -> Result<Duration> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Job::Warm { entries, reply })
+            .map_err(|_| anyhow!("engine is shut down"))?;
+        rx.recv().map_err(|_| anyhow!("engine worker dropped reply"))?
+    }
+
+    /// Aggregate store stats from one worker (representative under the
+    /// single-worker default; labelled per-worker in logs otherwise).
+    pub fn stats(&self) -> Result<(StoreStats, usize)> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Job::Stats { reply })
+            .map_err(|_| anyhow!("engine is shut down"))?;
+        rx.recv().map_err(|_| anyhow!("engine worker dropped reply"))
+    }
+}
+
+fn worker_loop(
+    worker_id: usize,
+    manifest: Manifest,
+    rx: Arc<Mutex<Receiver<Job>>>,
+    ready: Sender<Result<()>>,
+) {
+    let mut store = match ExecutableStore::open(manifest) {
+        Ok(s) => {
+            let _ = ready.send(Ok(()));
+            s
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    log_info!("engine", "worker {worker_id} up on {}", store.platform());
+    loop {
+        // Hold the lock only while dequeueing so workers interleave.
+        let job = match rx.lock().expect("engine queue poisoned").recv() {
+            Ok(j) => j,
+            Err(_) => break, // all senders gone
+        };
+        match job {
+            Job::Exec { req, reply } => {
+                let out = store.execute(&req.entry, &req.inputs);
+                let _ = reply.send(out);
+            }
+            Job::Warm { entries, reply } => {
+                let mut total = Duration::default();
+                let mut result = Ok(());
+                for e in &entries {
+                    match store.warm(e) {
+                        Ok(d) => total += d,
+                        Err(err) => {
+                            result = Err(err);
+                            break;
+                        }
+                    }
+                }
+                let _ = reply.send(result.map(|_| total));
+            }
+            Job::Stats { reply } => {
+                let _ = reply.send((store.stats(), store.cached_len()));
+            }
+            Job::Shutdown => break,
+        }
+    }
+    log_info!("engine", "worker {worker_id} down");
+}

@@ -1,0 +1,17 @@
+//! Runtime layer: load and execute AOT-compiled XLA artifacts via PJRT.
+//!
+//! Pipeline: `artifact::Manifest` indexes the HLO text files emitted by
+//! `python/compile/aot.py`; `store::ExecutableStore` lazily compiles them on
+//! a PJRT CPU client; `engine::Engine` runs stores on dedicated worker
+//! threads so the (non-`Send`) PJRT handles never cross threads.
+//! `tensor::HostTensor` is the host-side data currency.
+
+pub mod artifact;
+pub mod engine;
+pub mod store;
+pub mod tensor;
+
+pub use artifact::{ArtifactEntry, Manifest, TensorSpec};
+pub use engine::Engine;
+pub use store::{ExecOutput, ExecutableStore, StoreStats};
+pub use tensor::HostTensor;

@@ -1,0 +1,243 @@
+//! Executable store: lazy-compiling cache of PJRT executables.
+//!
+//! Loads HLO text artifacts (via `HloModuleProto::from_text_file`),
+//! compiles them on the PJRT CPU client on first use, and keeps them keyed
+//! by artifact key.  PJRT handles are not `Send`, so the store is a
+//! single-thread object: the engine worker owns one (coordinator path) and
+//! benches own one directly (lowest-overhead path).
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::artifact::{ArtifactEntry, Manifest};
+use super::tensor::HostTensor;
+use crate::util::timer::PhaseTimer;
+
+/// Result of one artifact execution.
+#[derive(Debug)]
+pub struct ExecOutput {
+    pub outputs: Vec<HostTensor>,
+    /// Phases: "h2d" (literal build), "execute", "d2h" (read-back),
+    /// plus "compile" on a cache miss.
+    pub timings: PhaseTimer,
+}
+
+/// Cache statistics for the info command / metrics endpoint.
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct StoreStats {
+    pub compiles: u64,
+    pub hits: u64,
+    pub executions: u64,
+    pub compile_time: Duration,
+}
+
+pub struct ExecutableStore {
+    client: PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, PjRtLoadedExecutable>,
+    stats: StoreStats,
+}
+
+impl ExecutableStore {
+    /// Open the artifact directory and create a CPU PJRT client.
+    pub fn open(manifest: Manifest) -> Result<Self> {
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(ExecutableStore { client, manifest, cache: HashMap::new(), stats: StoreStats::default() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn stats(&self) -> StoreStats {
+        self.stats
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Number of compiled executables resident.
+    pub fn cached_len(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// Compile (or fetch) the executable for an entry.
+    fn get_or_compile(
+        &mut self,
+        entry: &ArtifactEntry,
+        timer: &mut PhaseTimer,
+    ) -> Result<&PjRtLoadedExecutable> {
+        let key = entry.key();
+        if !self.cache.contains_key(&key) {
+            let path = self.manifest.path_of(entry);
+            let start = Instant::now();
+            let proto = HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", key))?;
+            let elapsed = start.elapsed();
+            timer.add("compile", elapsed);
+            self.stats.compiles += 1;
+            self.stats.compile_time += elapsed;
+            self.cache.insert(key.clone(), exe);
+        } else {
+            self.stats.hits += 1;
+        }
+        Ok(self.cache.get(&key).expect("inserted above"))
+    }
+
+    /// Pre-compile an entry (startup warming).
+    pub fn warm(&mut self, entry: &ArtifactEntry) -> Result<Duration> {
+        let mut timer = PhaseTimer::new();
+        self.get_or_compile(entry, &mut timer)?;
+        Ok(timer.get("compile").unwrap_or_default())
+    }
+
+    /// Execute an artifact with host tensors; validates shapes against the
+    /// manifest signature (the wire-order contract with model.py).
+    ///
+    /// Generic over `Borrow<HostTensor>` so the serving hot path can pass
+    /// `Arc<HostTensor>` (registry-resident training data) without copying.
+    pub fn execute<T: std::borrow::Borrow<HostTensor>>(
+        &mut self,
+        entry: &ArtifactEntry,
+        inputs: &[T],
+    ) -> Result<ExecOutput> {
+        validate_inputs(entry, inputs)?;
+        let mut timer = PhaseTimer::new();
+        // Split borrows: compile first, then execute.
+        self.get_or_compile(entry, &mut timer)?;
+        let exe = self.cache.get(&entry.key()).expect("compiled above");
+
+        let start = Instant::now();
+        let literals: Vec<Literal> = inputs
+            .iter()
+            .map(|t| t.borrow().to_literal())
+            .collect::<Result<_>>()?;
+        timer.add("h2d", start.elapsed());
+
+        let start = Instant::now();
+        let result = exe
+            .execute::<Literal>(&literals)
+            .with_context(|| format!("executing {}", entry.key()))?;
+        timer.add("execute", start.elapsed());
+
+        let start = Instant::now();
+        let root = result
+            .first()
+            .and_then(|r| r.first())
+            .ok_or_else(|| anyhow!("executable returned no outputs"))?
+            .to_literal_sync()
+            .context("fetching output literal")?;
+        // aot.py lowers with return_tuple=True: outputs arrive as a tuple.
+        let parts = root.to_tuple().context("destructuring output tuple")?;
+        let outputs = parts
+            .iter()
+            .map(HostTensor::from_literal)
+            .collect::<Result<Vec<_>>>()?;
+        timer.add("d2h", start.elapsed());
+
+        if outputs.len() != entry.outputs.len() {
+            bail!(
+                "artifact {} returned {} outputs, manifest says {}",
+                entry.key(),
+                outputs.len(),
+                entry.outputs.len()
+            );
+        }
+        self.stats.executions += 1;
+        Ok(ExecOutput { outputs, timings: timer })
+    }
+
+    /// Convenience: exact-bucket execute by coordinates.
+    pub fn execute_exact(
+        &mut self,
+        pipeline: &str,
+        variant: &str,
+        d: usize,
+        n: usize,
+        m: usize,
+        inputs: &[impl std::borrow::Borrow<HostTensor>],
+    ) -> Result<ExecOutput> {
+        let entry = self
+            .manifest
+            .find(pipeline, variant, d, n, m)
+            .ok_or_else(|| {
+                anyhow!("no artifact for {pipeline}/{variant} d={d} n={n} m={m}")
+            })?
+            .clone();
+        self.execute(&entry, inputs)
+    }
+}
+
+fn validate_inputs<T: std::borrow::Borrow<HostTensor>>(
+    entry: &ArtifactEntry,
+    inputs: &[T],
+) -> Result<()> {
+    if inputs.len() != entry.inputs.len() {
+        bail!(
+            "artifact {} expects {} inputs, got {}",
+            entry.key(),
+            entry.inputs.len(),
+            inputs.len()
+        );
+    }
+    for (i, (spec, t)) in entry.inputs.iter().zip(inputs).enumerate() {
+        let t = t.borrow();
+        if spec.shape != t.shape() {
+            bail!(
+                "input {} ({}) of {}: expected shape {:?}, got {:?}",
+                i,
+                spec.name,
+                entry.key(),
+                spec.shape,
+                t.shape()
+            );
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::TensorSpec;
+
+    fn entry() -> ArtifactEntry {
+        ArtifactEntry {
+            pipeline: "kde".into(),
+            variant: "flash".into(),
+            d: 2,
+            n: 4,
+            m: 2,
+            tiles: None,
+            file: "x.hlo.txt".into(),
+            inputs: vec![
+                TensorSpec { name: "x".into(), shape: vec![4, 2] },
+                TensorSpec { name: "h".into(), shape: vec![] },
+            ],
+            outputs: vec![TensorSpec { name: "".into(), shape: vec![2] }],
+        }
+    }
+
+    #[test]
+    fn validate_inputs_checks_arity_and_shapes() {
+        let e = entry();
+        let x = HostTensor::zeros(vec![4, 2]);
+        let h = HostTensor::scalar(0.5);
+        assert!(validate_inputs(&e, &[x.clone(), h.clone()]).is_ok());
+        assert!(validate_inputs(&e, &[x.clone()]).is_err());
+        let bad = HostTensor::zeros(vec![4, 3]);
+        let err = validate_inputs(&e, &[bad, h]).unwrap_err().to_string();
+        assert!(err.contains("input 0 (x)"), "{err}");
+    }
+}

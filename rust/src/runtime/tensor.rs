@@ -1,0 +1,193 @@
+//! Host-side f32 tensors and their conversion to/from `xla::Literal`.
+//!
+//! The whole wire/compute surface of this project is f32 (matching the
+//! paper's TF32/FP32 kernels), so `HostTensor` is deliberately monomorphic:
+//! a shape plus a contiguous row-major `Vec<f32>`.
+
+use anyhow::{bail, Context, Result};
+use xla::{ElementType, Literal};
+
+/// Row-major f32 tensor on the host.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl HostTensor {
+    /// Build from shape + data; validates element count.
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let expect: usize = shape.iter().product();
+        if expect != data.len() {
+            bail!(
+                "shape {:?} wants {} elements, got {}",
+                shape,
+                expect,
+                data.len()
+            );
+        }
+        Ok(HostTensor { shape, data })
+    }
+
+    /// Rank-0 scalar.
+    pub fn scalar(x: f32) -> Self {
+        HostTensor { shape: vec![], data: vec![x] }
+    }
+
+    /// 1-D vector.
+    pub fn vec1(data: Vec<f32>) -> Self {
+        HostTensor { shape: vec![data.len()], data }
+    }
+
+    /// [rows, cols] matrix from a flat row-major buffer.
+    pub fn matrix(rows: usize, cols: usize, data: Vec<f32>) -> Result<Self> {
+        Self::new(vec![rows, cols], data)
+    }
+
+    /// All-zeros tensor of the given shape.
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let len = shape.iter().product();
+        HostTensor { shape, data: vec![0.0; len] }
+    }
+
+    /// Constant-fill tensor.
+    pub fn full(shape: Vec<usize>, value: f32) -> Self {
+        let len = shape.iter().product();
+        HostTensor { shape, data: vec![value; len] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Row view of a rank-2 tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        assert_eq!(self.rank(), 2, "row() needs a rank-2 tensor");
+        let cols = self.shape[1];
+        &self.data[i * cols..(i + 1) * cols]
+    }
+
+    /// Pad with constant rows up to `target_rows` (rank-1/2 only) — the
+    /// host-side mirror of the kernels' bucket padding.
+    pub fn pad_rows(&self, target_rows: usize, value: f32) -> Result<Self> {
+        match self.rank() {
+            1 => {
+                let n = self.shape[0];
+                if n > target_rows {
+                    bail!("cannot pad {n} rows down to {target_rows}");
+                }
+                let mut data = self.data.clone();
+                data.resize(target_rows, value);
+                Ok(HostTensor { shape: vec![target_rows], data })
+            }
+            2 => {
+                let (n, d) = (self.shape[0], self.shape[1]);
+                if n > target_rows {
+                    bail!("cannot pad {n} rows down to {target_rows}");
+                }
+                let mut data = self.data.clone();
+                data.resize(target_rows * d, value);
+                Ok(HostTensor { shape: vec![target_rows, d], data })
+            }
+            r => bail!("pad_rows supports rank 1/2, got rank {r}"),
+        }
+    }
+
+    /// Convert to an XLA literal (copies into XLA-owned memory).
+    pub fn to_literal(&self) -> Result<Literal> {
+        let bytes: &[u8] = unsafe {
+            std::slice::from_raw_parts(
+                self.data.as_ptr() as *const u8,
+                self.data.len() * std::mem::size_of::<f32>(),
+            )
+        };
+        Literal::create_from_shape_and_untyped_data(ElementType::F32, &self.shape, bytes)
+            .context("creating literal")
+    }
+
+    /// Read back from an XLA literal (must be f32).
+    pub fn from_literal(lit: &Literal) -> Result<Self> {
+        let shape = lit.array_shape().context("literal shape")?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = lit.to_vec::<f32>().context("literal data")?;
+        Self::new(dims, data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors_validate() {
+        assert!(HostTensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(HostTensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+        assert_eq!(HostTensor::scalar(2.0).rank(), 0);
+        assert_eq!(HostTensor::vec1(vec![1.0, 2.0]).shape(), &[2]);
+        assert_eq!(HostTensor::zeros(vec![3, 4]).len(), 12);
+        assert_eq!(HostTensor::full(vec![2], 7.0).data(), &[7.0, 7.0]);
+    }
+
+    #[test]
+    fn row_access() {
+        let t = HostTensor::matrix(2, 3, vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        assert_eq!(t.row(0), &[1., 2., 3.]);
+        assert_eq!(t.row(1), &[4., 5., 6.]);
+    }
+
+    #[test]
+    fn pad_rows_vector_and_matrix() {
+        let v = HostTensor::vec1(vec![1.0, 2.0]);
+        let p = v.pad_rows(4, 0.0).unwrap();
+        assert_eq!(p.data(), &[1.0, 2.0, 0.0, 0.0]);
+
+        let m = HostTensor::matrix(2, 2, vec![1., 2., 3., 4.]).unwrap();
+        let p = m.pad_rows(3, 9.0).unwrap();
+        assert_eq!(p.shape(), &[3, 2]);
+        assert_eq!(p.row(2), &[9.0, 9.0]);
+
+        assert!(m.pad_rows(1, 0.0).is_err());
+        assert!(HostTensor::scalar(1.0).pad_rows(2, 0.0).is_err());
+    }
+
+    #[test]
+    fn literal_round_trip() {
+        let t = HostTensor::matrix(2, 3, vec![1., -2., 3.5, 0., 5., -6.]).unwrap();
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn scalar_literal_round_trip() {
+        let t = HostTensor::scalar(0.75);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(back.data(), &[0.75]);
+        assert_eq!(back.rank(), 0);
+    }
+}

@@ -1,0 +1,301 @@
+//! Hand-rolled CLI argument parser (no `clap` in the offline registry).
+//!
+//! Declarative enough for this project's needs: named options with values,
+//! boolean flags, required/optional distinction, typed accessors with clear
+//! error messages, and generated `--help` text per subcommand.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// One option/flag specification.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+    pub required: bool,
+}
+
+impl OptSpec {
+    pub fn flag(name: &'static str, help: &'static str) -> Self {
+        OptSpec { name, help, takes_value: false, default: None, required: false }
+    }
+
+    pub fn opt(name: &'static str, help: &'static str) -> Self {
+        OptSpec { name, help, takes_value: true, default: None, required: false }
+    }
+
+    pub fn opt_default(
+        name: &'static str,
+        help: &'static str,
+        default: &'static str,
+    ) -> Self {
+        OptSpec { name, help, takes_value: true, default: Some(default), required: false }
+    }
+
+    pub fn opt_required(name: &'static str, help: &'static str) -> Self {
+        OptSpec { name, help, takes_value: true, default: None, required: true }
+    }
+}
+
+/// A subcommand: name, description, options.
+#[derive(Debug, Clone)]
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+}
+
+/// Parsed arguments for one subcommand.
+#[derive(Debug, Clone, Default)]
+pub struct Parsed {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Parsed {
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_string(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<Option<usize>, String> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<usize>()
+                .map(Some)
+                .map_err(|_| format!("--{name}: expected an integer, got {s:?}")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<Option<f64>, String> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<f64>()
+                .map(Some)
+                .map_err(|_| format!("--{name}: expected a number, got {s:?}")),
+        }
+    }
+
+    /// Comma-separated integer list (e.g. `--sizes 512,1024,2048`).
+    pub fn get_usize_list(&self, name: &str) -> Result<Option<Vec<usize>>, String> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => s
+                .split(',')
+                .map(|part| {
+                    part.trim().parse::<usize>().map_err(|_| {
+                        format!("--{name}: bad integer {part:?} in list")
+                    })
+                })
+                .collect::<Result<Vec<_>, _>>()
+                .map(Some),
+        }
+    }
+}
+
+/// Parse `args` (everything after the subcommand) against a spec list.
+pub fn parse_args(
+    cmd: &Command,
+    args: &[String],
+) -> Result<Parsed, String> {
+    let mut parsed = Parsed::default();
+    // Seed defaults.
+    for spec in &cmd.opts {
+        if let Some(d) = spec.default {
+            parsed.values.insert(spec.name.to_string(), d.to_string());
+        }
+    }
+
+    let mut i = 0;
+    while i < args.len() {
+        let arg = &args[i];
+        if let Some(name_val) = arg.strip_prefix("--") {
+            // Support both `--name value` and `--name=value`.
+            let (name, inline) = match name_val.split_once('=') {
+                Some((n, v)) => (n, Some(v.to_string())),
+                None => (name_val, None),
+            };
+            let spec = cmd
+                .opts
+                .iter()
+                .find(|s| s.name == name)
+                .ok_or_else(|| format!("unknown option --{name} (see --help)"))?;
+            if spec.takes_value {
+                let value = match inline {
+                    Some(v) => v,
+                    None => {
+                        i += 1;
+                        args.get(i)
+                            .cloned()
+                            .ok_or_else(|| format!("--{name} needs a value"))?
+                    }
+                };
+                parsed.values.insert(name.to_string(), value);
+            } else {
+                if inline.is_some() {
+                    return Err(format!("--{name} does not take a value"));
+                }
+                parsed.flags.push(name.to_string());
+            }
+        } else {
+            parsed.positional.push(arg.clone());
+        }
+        i += 1;
+    }
+
+    for spec in &cmd.opts {
+        if spec.required && !parsed.values.contains_key(spec.name) {
+            return Err(format!("missing required option --{}", spec.name));
+        }
+    }
+    Ok(parsed)
+}
+
+/// Render help text for one subcommand.
+pub fn help_text(program: &str, cmd: &Command) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "{} {} — {}", program, cmd.name, cmd.about);
+    let _ = writeln!(out, "\nOptions:");
+    for spec in &cmd.opts {
+        let value = if spec.takes_value { " <value>" } else { "" };
+        let mut line = format!("  --{}{}", spec.name, value);
+        while line.len() < 30 {
+            line.push(' ');
+        }
+        let _ = write!(out, "{line}{}", spec.help);
+        if let Some(d) = spec.default {
+            let _ = write!(out, " [default: {d}]");
+        }
+        if spec.required {
+            let _ = write!(out, " (required)");
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Render the top-level command list.
+pub fn overview_text(program: &str, about: &str, cmds: &[Command]) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "{program} — {about}\n");
+    let _ = writeln!(out, "Usage: {program} <command> [options]\n");
+    let _ = writeln!(out, "Commands:");
+    for c in cmds {
+        let mut line = format!("  {}", c.name);
+        while line.len() < 14 {
+            line.push(' ');
+        }
+        let _ = writeln!(out, "{line}{}", c.about);
+    }
+    let _ = writeln!(out, "\nRun '{program} <command> --help' for details.");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command {
+            name: "bench",
+            about: "run benches",
+            opts: vec![
+                OptSpec::opt_default("iters", "iterations", "5"),
+                OptSpec::opt("sizes", "comma list"),
+                OptSpec::flag("verbose", "chatty"),
+                OptSpec::opt_required("experiment", "which experiment"),
+            ],
+        }
+    }
+
+    fn parse(args: &[&str]) -> Result<Parsed, String> {
+        let v: Vec<String> = args.iter().map(|s| s.to_string()).collect();
+        parse_args(&cmd(), &v)
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let p = parse(&["--experiment", "fig1"]).unwrap();
+        assert_eq!(p.get("iters"), Some("5"));
+        let p = parse(&["--experiment", "fig1", "--iters", "9"]).unwrap();
+        assert_eq!(p.get_usize("iters").unwrap(), Some(9));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let p = parse(&["--experiment=fig1", "--iters=3"]).unwrap();
+        assert_eq!(p.get("experiment"), Some("fig1"));
+        assert_eq!(p.get("iters"), Some("3"));
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        let p = parse(&["--experiment", "t1", "--verbose", "extra"]).unwrap();
+        assert!(p.flag("verbose"));
+        assert!(!p.flag("quiet"));
+        assert_eq!(p.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn missing_required_rejected() {
+        let err = parse(&["--iters", "2"]).unwrap_err();
+        assert!(err.contains("--experiment"), "{err}");
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        let err = parse(&["--experiment", "x", "--bogus"]).unwrap_err();
+        assert!(err.contains("--bogus"), "{err}");
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        let err = parse(&["--experiment"]).unwrap_err();
+        assert!(err.contains("needs a value"), "{err}");
+    }
+
+    #[test]
+    fn flag_with_value_rejected() {
+        let err = parse(&["--experiment", "x", "--verbose=yes"]).unwrap_err();
+        assert!(err.contains("does not take a value"), "{err}");
+    }
+
+    #[test]
+    fn integer_list() {
+        let p = parse(&["--experiment", "x", "--sizes", "512, 1024,2048"]).unwrap();
+        assert_eq!(
+            p.get_usize_list("sizes").unwrap().unwrap(),
+            vec![512, 1024, 2048]
+        );
+        let p = parse(&["--experiment", "x", "--sizes", "a,b"]).unwrap();
+        assert!(p.get_usize_list("sizes").is_err());
+    }
+
+    #[test]
+    fn bad_number_message_names_option() {
+        let p = parse(&["--experiment", "x", "--iters", "many"]).unwrap();
+        let err = p.get_usize("iters").unwrap_err();
+        assert!(err.contains("--iters"), "{err}");
+    }
+
+    #[test]
+    fn help_lists_everything() {
+        let h = help_text("flash-sdkde", &cmd());
+        for needle in ["--iters", "--sizes", "--verbose", "--experiment",
+                       "default: 5", "(required)"] {
+            assert!(h.contains(needle), "missing {needle} in:\n{h}");
+        }
+    }
+}

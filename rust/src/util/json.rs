@@ -1,0 +1,609 @@
+//! Minimal, dependency-free JSON parser and writer.
+//!
+//! The offline crate registry has no `serde`, so the manifest
+//! (`artifacts/manifest.json`), the config files and the coordinator's wire
+//! protocol all go through this module.  It implements the full JSON value
+//! model (RFC 8259) with the one deliberate restriction that numbers are
+//! represented as `f64` — every schema in this project (shapes, counts,
+//! bandwidths, latencies) fits losslessly below 2^53.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A parsed JSON value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Number(f64),
+    String(String),
+    Array(Vec<Value>),
+    Object(BTreeMap<String, Value>),
+}
+
+impl Value {
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Number(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            Value::Number(n) if *n >= 0.0 && n.fract() == 0.0 => Some(*n as usize),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Number(n) if n.fract() == 0.0 => Some(*n as i64),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::String(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    pub fn as_object(&self) -> Option<&BTreeMap<String, Value>> {
+        match self {
+            Value::Object(o) => Some(o),
+            _ => None,
+        }
+    }
+
+    /// Object field lookup; `None` for non-objects or missing keys.
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.as_object().and_then(|o| o.get(key))
+    }
+
+    pub fn is_null(&self) -> bool {
+        matches!(self, Value::Null)
+    }
+
+    /// Convenience: `{"k": v}` builder used by the protocol layer.
+    pub fn object(fields: Vec<(&str, Value)>) -> Value {
+        Value::Object(
+            fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect(),
+        )
+    }
+
+    /// f32 vector -> JSON array (wire format for tensors).
+    pub fn from_f32_slice(xs: &[f32]) -> Value {
+        Value::Array(xs.iter().map(|&x| Value::Number(x as f64)).collect())
+    }
+
+    /// JSON array -> f32 vector; fails on non-numeric elements.
+    pub fn to_f32_vec(&self) -> Result<Vec<f32>, JsonError> {
+        let arr = self
+            .as_array()
+            .ok_or_else(|| JsonError::new("expected array of numbers"))?;
+        arr.iter()
+            .map(|v| {
+                v.as_f64()
+                    .map(|x| x as f32)
+                    .ok_or_else(|| JsonError::new("expected number"))
+            })
+            .collect()
+    }
+}
+
+impl From<bool> for Value {
+    fn from(b: bool) -> Self {
+        Value::Bool(b)
+    }
+}
+impl From<f64> for Value {
+    fn from(n: f64) -> Self {
+        Value::Number(n)
+    }
+}
+impl From<usize> for Value {
+    fn from(n: usize) -> Self {
+        Value::Number(n as f64)
+    }
+}
+impl From<u64> for Value {
+    fn from(n: u64) -> Self {
+        Value::Number(n as f64)
+    }
+}
+impl From<i64> for Value {
+    fn from(n: i64) -> Self {
+        Value::Number(n as f64)
+    }
+}
+impl From<&str> for Value {
+    fn from(s: &str) -> Self {
+        Value::String(s.to_string())
+    }
+}
+impl From<String> for Value {
+    fn from(s: String) -> Self {
+        Value::String(s)
+    }
+}
+impl From<Vec<Value>> for Value {
+    fn from(a: Vec<Value>) -> Self {
+        Value::Array(a)
+    }
+}
+
+/// Parse / render error with byte offset context.
+#[derive(Debug, Clone)]
+pub struct JsonError {
+    pub message: String,
+    pub offset: usize,
+}
+
+impl JsonError {
+    fn new(msg: &str) -> Self {
+        JsonError { message: msg.to_string(), offset: 0 }
+    }
+    fn at(msg: String, offset: usize) -> Self {
+        JsonError { message: msg, offset }
+    }
+}
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json error at byte {}: {}", self.offset, self.message)
+    }
+}
+
+impl std::error::Error for JsonError {}
+
+/// Parse a complete JSON document (trailing whitespace allowed, trailing
+/// garbage rejected).
+pub fn parse(input: &str) -> Result<Value, JsonError> {
+    let mut p = Parser { bytes: input.as_bytes(), pos: 0 };
+    p.skip_ws();
+    let v = p.parse_value()?;
+    p.skip_ws();
+    if p.pos != p.bytes.len() {
+        return Err(JsonError::at(
+            format!("trailing data after document: {:?}", p.peek_context()),
+            p.pos,
+        ));
+    }
+    Ok(v)
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn peek_context(&self) -> String {
+        let end = (self.pos + 12).min(self.bytes.len());
+        String::from_utf8_lossy(&self.bytes[self.pos..end]).into_owned()
+    }
+
+    fn bump(&mut self) -> Option<u8> {
+        let b = self.peek();
+        if b.is_some() {
+            self.pos += 1;
+        }
+        b
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn expect(&mut self, b: u8) -> Result<(), JsonError> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(JsonError::at(
+                format!("expected {:?}, found {:?}", b as char, self.peek_context()),
+                self.pos,
+            ))
+        }
+    }
+
+    fn parse_value(&mut self) -> Result<Value, JsonError> {
+        self.skip_ws();
+        match self.peek() {
+            Some(b'{') => self.parse_object(),
+            Some(b'[') => self.parse_array(),
+            Some(b'"') => Ok(Value::String(self.parse_string()?)),
+            Some(b't') => self.parse_lit("true", Value::Bool(true)),
+            Some(b'f') => self.parse_lit("false", Value::Bool(false)),
+            Some(b'n') => self.parse_lit("null", Value::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.parse_number(),
+            _ => Err(JsonError::at(
+                format!("unexpected input: {:?}", self.peek_context()),
+                self.pos,
+            )),
+        }
+    }
+
+    fn parse_lit(&mut self, lit: &str, v: Value) -> Result<Value, JsonError> {
+        if self.bytes[self.pos..].starts_with(lit.as_bytes()) {
+            self.pos += lit.len();
+            Ok(v)
+        } else {
+            Err(JsonError::at(format!("invalid literal, expected {lit}"), self.pos))
+        }
+    }
+
+    fn parse_object(&mut self) -> Result<Value, JsonError> {
+        self.expect(b'{')?;
+        let mut map = BTreeMap::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Value::Object(map));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.parse_string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            let value = self.parse_value()?;
+            map.insert(key, value);
+            self.skip_ws();
+            match self.bump() {
+                Some(b',') => continue,
+                Some(b'}') => return Ok(Value::Object(map)),
+                _ => {
+                    return Err(JsonError::at(
+                        "expected ',' or '}' in object".to_string(),
+                        self.pos,
+                    ))
+                }
+            }
+        }
+    }
+
+    fn parse_array(&mut self) -> Result<Value, JsonError> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Value::Array(items));
+        }
+        loop {
+            items.push(self.parse_value()?);
+            self.skip_ws();
+            match self.bump() {
+                Some(b',') => continue,
+                Some(b']') => return Ok(Value::Array(items)),
+                _ => {
+                    return Err(JsonError::at(
+                        "expected ',' or ']' in array".to_string(),
+                        self.pos,
+                    ))
+                }
+            }
+        }
+    }
+
+    fn parse_string(&mut self) -> Result<String, JsonError> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.bump() {
+                None => {
+                    return Err(JsonError::at(
+                        "unterminated string".to_string(),
+                        self.pos,
+                    ))
+                }
+                Some(b'"') => return Ok(out),
+                Some(b'\\') => match self.bump() {
+                    Some(b'"') => out.push('"'),
+                    Some(b'\\') => out.push('\\'),
+                    Some(b'/') => out.push('/'),
+                    Some(b'b') => out.push('\u{0008}'),
+                    Some(b'f') => out.push('\u{000C}'),
+                    Some(b'n') => out.push('\n'),
+                    Some(b'r') => out.push('\r'),
+                    Some(b't') => out.push('\t'),
+                    Some(b'u') => {
+                        let cp = self.parse_hex4()?;
+                        // Surrogate pair handling for completeness.
+                        if (0xD800..0xDC00).contains(&cp) {
+                            self.expect(b'\\')?;
+                            self.expect(b'u')?;
+                            let lo = self.parse_hex4()?;
+                            if !(0xDC00..0xE000).contains(&lo) {
+                                return Err(JsonError::at(
+                                    "invalid low surrogate".to_string(),
+                                    self.pos,
+                                ));
+                            }
+                            let c = 0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00);
+                            out.push(char::from_u32(c).ok_or_else(|| {
+                                JsonError::at("invalid code point".into(), self.pos)
+                            })?);
+                        } else {
+                            out.push(char::from_u32(cp).ok_or_else(|| {
+                                JsonError::at("invalid code point".into(), self.pos)
+                            })?);
+                        }
+                    }
+                    _ => {
+                        return Err(JsonError::at(
+                            "invalid escape".to_string(),
+                            self.pos,
+                        ))
+                    }
+                },
+                Some(c) if c < 0x20 => {
+                    return Err(JsonError::at(
+                        "raw control character in string".to_string(),
+                        self.pos,
+                    ))
+                }
+                Some(c) => {
+                    // Re-assemble UTF-8 multibyte sequences byte-by-byte.
+                    if c < 0x80 {
+                        out.push(c as char);
+                    } else {
+                        let len = match c {
+                            0xC0..=0xDF => 2,
+                            0xE0..=0xEF => 3,
+                            0xF0..=0xF7 => 4,
+                            _ => {
+                                return Err(JsonError::at(
+                                    "invalid utf-8 lead byte".to_string(),
+                                    self.pos,
+                                ))
+                            }
+                        };
+                        let start = self.pos - 1;
+                        let end = start + len;
+                        if end > self.bytes.len() {
+                            return Err(JsonError::at(
+                                "truncated utf-8 sequence".to_string(),
+                                self.pos,
+                            ));
+                        }
+                        let s = std::str::from_utf8(&self.bytes[start..end])
+                            .map_err(|_| {
+                                JsonError::at("invalid utf-8".to_string(), self.pos)
+                            })?;
+                        out.push_str(s);
+                        self.pos = end;
+                    }
+                }
+            }
+        }
+    }
+
+    fn parse_hex4(&mut self) -> Result<u32, JsonError> {
+        let mut v = 0u32;
+        for _ in 0..4 {
+            let c = self.bump().ok_or_else(|| {
+                JsonError::at("truncated \\u escape".to_string(), self.pos)
+            })?;
+            v = v * 16
+                + (c as char).to_digit(16).ok_or_else(|| {
+                    JsonError::at("invalid hex digit".to_string(), self.pos)
+                })?;
+        }
+        Ok(v)
+    }
+
+    fn parse_number(&mut self) -> Result<Value, JsonError> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+            self.pos += 1;
+        }
+        if self.peek() == Some(b'.') {
+            self.pos += 1;
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.pos += 1;
+            }
+        }
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            self.pos += 1;
+            if matches!(self.peek(), Some(b'+' | b'-')) {
+                self.pos += 1;
+            }
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.pos += 1;
+            }
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos])
+            .map_err(|_| JsonError::at("invalid number".to_string(), start))?;
+        text.parse::<f64>()
+            .map(Value::Number)
+            .map_err(|_| JsonError::at(format!("invalid number {text:?}"), start))
+    }
+}
+
+/// Render a value as compact JSON (the wire format).
+pub fn to_string(v: &Value) -> String {
+    let mut out = String::new();
+    write_value(v, &mut out);
+    out
+}
+
+fn write_value(v: &Value, out: &mut String) {
+    match v {
+        Value::Null => out.push_str("null"),
+        Value::Bool(true) => out.push_str("true"),
+        Value::Bool(false) => out.push_str("false"),
+        Value::Number(n) => write_number(*n, out),
+        Value::String(s) => write_string(s, out),
+        Value::Array(items) => {
+            out.push('[');
+            for (i, item) in items.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_value(item, out);
+            }
+            out.push(']');
+        }
+        Value::Object(map) => {
+            out.push('{');
+            for (i, (k, val)) in map.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_string(k, out);
+                out.push(':');
+                write_value(val, out);
+            }
+            out.push('}');
+        }
+    }
+}
+
+fn write_number(n: f64, out: &mut String) {
+    if !n.is_finite() {
+        // JSON has no inf/nan; the protocol layer must not emit them, but a
+        // null is safer than a parse error for diagnostics that overflow.
+        out.push_str("null");
+    } else if n.fract() == 0.0 && n.abs() < 9.007199254740992e15 {
+        out.push_str(&format!("{}", n as i64));
+    } else {
+        // Shortest round-trippable float formatting.
+        out.push_str(&format!("{n:?}"));
+    }
+}
+
+fn write_string(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars() {
+        assert_eq!(parse("null").unwrap(), Value::Null);
+        assert_eq!(parse("true").unwrap(), Value::Bool(true));
+        assert_eq!(parse("false").unwrap(), Value::Bool(false));
+        assert_eq!(parse("42").unwrap(), Value::Number(42.0));
+        assert_eq!(parse("-3.5e2").unwrap(), Value::Number(-350.0));
+        assert_eq!(parse("\"hi\"").unwrap(), Value::String("hi".into()));
+    }
+
+    #[test]
+    fn parses_nested() {
+        let v = parse(r#"{"a": [1, 2, {"b": null}], "c": "x"}"#).unwrap();
+        assert_eq!(v.get("c").unwrap().as_str(), Some("x"));
+        let arr = v.get("a").unwrap().as_array().unwrap();
+        assert_eq!(arr.len(), 3);
+        assert!(arr[2].get("b").unwrap().is_null());
+    }
+
+    #[test]
+    fn parses_escapes_and_unicode() {
+        let v = parse(r#""a\nb\t\"q\" é 😀""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "a\nb\t\"q\" é 😀");
+    }
+
+    #[test]
+    fn parses_raw_utf8() {
+        let v = parse("\"héllo — 16×16\"").unwrap();
+        assert_eq!(v.as_str().unwrap(), "héllo — 16×16");
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("{").is_err());
+        assert!(parse("[1,]").is_err());
+        assert!(parse("1 2").is_err());
+        assert!(parse("{\"a\" 1}").is_err());
+        assert!(parse("\"unterminated").is_err());
+        assert!(parse("tru").is_err());
+    }
+
+    #[test]
+    fn round_trips() {
+        let cases = [
+            r#"{"a":[1,2.5,-3],"b":"x\"y","c":null,"d":true}"#,
+            "[]",
+            "{}",
+            r#"[1e300,-0.001]"#,
+        ];
+        for c in cases {
+            let v = parse(c).unwrap();
+            let v2 = parse(&to_string(&v)).unwrap();
+            assert_eq!(v, v2, "case {c}");
+        }
+    }
+
+    #[test]
+    fn integers_render_without_decimal() {
+        assert_eq!(to_string(&Value::Number(512.0)), "512");
+        assert_eq!(to_string(&Value::Number(0.5)), "0.5");
+    }
+
+    #[test]
+    fn f32_vec_round_trip() {
+        let xs = vec![1.0f32, -2.25, 0.0, 3.5e-8];
+        let v = Value::from_f32_slice(&xs);
+        let back = parse(&to_string(&v)).unwrap().to_f32_vec().unwrap();
+        assert_eq!(xs, back);
+    }
+
+    #[test]
+    fn accessor_types() {
+        let v = parse(r#"{"n": 5, "s": "x", "f": 1.5, "neg": -2}"#).unwrap();
+        assert_eq!(v.get("n").unwrap().as_usize(), Some(5));
+        assert_eq!(v.get("f").unwrap().as_usize(), None);
+        assert_eq!(v.get("neg").unwrap().as_i64(), Some(-2));
+        assert_eq!(v.get("neg").unwrap().as_usize(), None);
+        assert_eq!(v.get("s").unwrap().as_f64(), None);
+        assert!(v.get("missing").is_none());
+    }
+
+    #[test]
+    fn non_finite_numbers_render_null() {
+        assert_eq!(to_string(&Value::Number(f64::NAN)), "null");
+        assert_eq!(to_string(&Value::Number(f64::INFINITY)), "null");
+    }
+}

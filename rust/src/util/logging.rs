@@ -1,0 +1,149 @@
+//! Tiny leveled logger.
+//!
+//! The request path must stay allocation-light, so log calls below the
+//! configured level cost one atomic load.  Level comes from
+//! `FLASH_SDKDE_LOG` (error|warn|info|debug|trace) or `set_level`.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    pub fn parse(s: &str) -> Option<Level> {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            "trace" => Some(Level::Trace),
+            _ => None,
+        }
+    }
+
+    fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(2); // Info
+static INIT: std::sync::Once = std::sync::Once::new();
+static mut START: Option<Instant> = None;
+
+fn start_instant() -> Instant {
+    unsafe {
+        INIT.call_once(|| {
+            START = Some(Instant::now());
+            if let Ok(env) = std::env::var("FLASH_SDKDE_LOG") {
+                if let Some(l) = Level::parse(&env) {
+                    LEVEL.store(l as u8, Ordering::Relaxed);
+                }
+            }
+        });
+        START.expect("initialized above")
+    }
+}
+
+pub fn set_level(level: Level) {
+    start_instant();
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn enabled(level: Level) -> bool {
+    start_instant();
+    level as u8 <= LEVEL.load(Ordering::Relaxed)
+}
+
+pub fn log(level: Level, target: &str, msg: std::fmt::Arguments<'_>) {
+    if !enabled(level) {
+        return;
+    }
+    let elapsed = start_instant().elapsed();
+    eprintln!(
+        "[{:>9.3}s {} {}] {}",
+        elapsed.as_secs_f64(),
+        level.tag(),
+        target,
+        msg
+    );
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Error, $target,
+            format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Warn, $target,
+            format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Info, $target,
+            format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Debug, $target,
+            format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_levels() {
+        assert_eq!(Level::parse("info"), Some(Level::Info));
+        assert_eq!(Level::parse("WARN"), Some(Level::Warn));
+        assert_eq!(Level::parse("warning"), Some(Level::Warn));
+        assert_eq!(Level::parse("nope"), None);
+    }
+
+    #[test]
+    fn level_gating() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Trace);
+        assert!(enabled(Level::Debug));
+        set_level(Level::Info); // restore default for other tests
+    }
+
+    #[test]
+    fn ordering_is_sane() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Debug < Level::Trace);
+    }
+}

@@ -1,0 +1,14 @@
+//! Substrate layer: dependency-free building blocks.
+//!
+//! The offline crate registry ships only `xla` and `anyhow`, so the JSON
+//! codec, PRNG, statistics, CLI parsing, logging, timing and
+//! property-testing substrates every real deployment would pull from
+//! crates.io are implemented here (DESIGN.md §3, crate-substitution table).
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod timer;

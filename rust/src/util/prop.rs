@@ -1,0 +1,212 @@
+//! Property-testing substrate (no `proptest` in the offline registry).
+//!
+//! A seeded randomized check runner with failure reproduction and
+//! greedy size-shrinking for integer-vector inputs.  Used by the batcher,
+//! scheduler, JSON and histogram invariant tests (DESIGN.md §7).
+//!
+//! ```ignore
+//! check("batch never exceeds capacity", 200, |rng| {
+//!     let reqs = gen_requests(rng);
+//!     let batches = batch(&reqs, cap);
+//!     ensure(batches.iter().all(|b| b.len() <= cap), "capacity")
+//! });
+//! ```
+
+use super::rng::Pcg64;
+
+/// Result of one property evaluation.
+pub type PropResult = Result<(), String>;
+
+/// Assert-style helper for property bodies.
+pub fn ensure(cond: bool, msg: &str) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.to_string())
+    }
+}
+
+/// Base seed: override with FLASH_SDKDE_PROP_SEED to replay a failure.
+fn base_seed() -> u64 {
+    std::env::var("FLASH_SDKDE_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xF1A5_4D5E)
+}
+
+/// Run `cases` random evaluations of `prop`; panics with the failing seed.
+pub fn check<F>(name: &str, cases: usize, prop: F)
+where
+    F: Fn(&mut Pcg64) -> PropResult,
+{
+    let seed = base_seed();
+    for case in 0..cases {
+        let mut rng = Pcg64::new(seed, case as u64);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property {name:?} failed on case {case} \
+                 (replay with FLASH_SDKDE_PROP_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Like `check`, but the property consumes a generated `Vec<u64>` and the
+/// runner greedily shrinks a failing vector (halving, then element-wise
+/// truncation) before reporting — small counterexamples read better.
+pub fn check_vec<G, F>(name: &str, cases: usize, generate: G, prop: F)
+where
+    G: Fn(&mut Pcg64) -> Vec<u64>,
+    F: Fn(&[u64]) -> PropResult,
+{
+    let seed = base_seed();
+    for case in 0..cases {
+        let mut rng = Pcg64::new(seed, case as u64);
+        let input = generate(&mut rng);
+        if let Err(msg) = prop(&input) {
+            let (shrunk, shrunk_msg) = shrink(&input, &prop).unwrap_or((input.clone(), msg));
+            panic!(
+                "property {name:?} failed on case {case} \
+                 (replay with FLASH_SDKDE_PROP_SEED={seed}) \
+                 with shrunk input {shrunk:?}: {shrunk_msg}"
+            );
+        }
+    }
+}
+
+/// Greedy shrink: try prefixes, suffix removals and per-element halving
+/// until the property stops failing; returns the smallest failing input.
+fn shrink<F>(input: &[u64], prop: &F) -> Option<(Vec<u64>, String)>
+where
+    F: Fn(&[u64]) -> PropResult,
+{
+    let mut current: Vec<u64> = input.to_vec();
+    let mut last_msg = prop(&current).err()?;
+    loop {
+        let mut improved = false;
+
+        // Halve the vector.
+        if current.len() > 1 {
+            for keep_front in [true, false] {
+                let half = if keep_front {
+                    current[..current.len() / 2].to_vec()
+                } else {
+                    current[current.len() / 2..].to_vec()
+                };
+                if let Err(m) = prop(&half) {
+                    current = half;
+                    last_msg = m;
+                    improved = true;
+                    break;
+                }
+            }
+        }
+        if improved {
+            continue;
+        }
+
+        // Drop single elements.
+        for i in 0..current.len() {
+            if current.len() <= 1 {
+                break;
+            }
+            let mut smaller = current.clone();
+            smaller.remove(i);
+            if let Err(m) = prop(&smaller) {
+                current = smaller;
+                last_msg = m;
+                improved = true;
+                break;
+            }
+        }
+        if improved {
+            continue;
+        }
+
+        // Halve element values.
+        for i in 0..current.len() {
+            if current[i] > 0 {
+                let mut smaller = current.clone();
+                smaller[i] /= 2;
+                if smaller != current {
+                    if let Err(m) = prop(&smaller) {
+                        current = smaller;
+                        last_msg = m;
+                        improved = true;
+                        break;
+                    }
+                }
+            }
+        }
+        if !improved {
+            return Some((current, last_msg));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0usize;
+        let counter = std::cell::Cell::new(0usize);
+        check("always true", 50, |_rng| {
+            counter.set(counter.get() + 1);
+            Ok(())
+        });
+        count += counter.get();
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "always false")]
+    fn failing_property_panics_with_name() {
+        check("always false", 10, |_rng| Err("always false".to_string()));
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let collect = |_: ()| {
+            let out = std::cell::RefCell::new(Vec::new());
+            check("collect", 5, |rng| {
+                out.borrow_mut().push(rng.next_u64());
+                Ok(())
+            });
+            out.into_inner()
+        };
+        assert_eq!(collect(()), collect(()));
+    }
+
+    #[test]
+    #[should_panic(expected = "shrunk input")]
+    fn shrinker_reports_small_counterexample() {
+        // Property: no element is >= 100.  The shrinker should reduce any
+        // failing vector to a single offending element.
+        check_vec(
+            "elements below 100",
+            50,
+            |rng| (0..20).map(|_| rng.below(200)).collect(),
+            |xs| ensure(xs.iter().all(|&x| x < 100), "element >= 100"),
+        );
+    }
+
+    #[test]
+    fn shrink_finds_minimal_vector() {
+        let failing = vec![5u64, 150, 7, 300];
+        let (shrunk, _) = shrink(&failing, &|xs: &[u64]| {
+            ensure(xs.iter().all(|&x| x < 100), "big element")
+        })
+        .unwrap();
+        // Minimal counterexample is a single element >= 100.
+        assert_eq!(shrunk.len(), 1);
+        assert!(shrunk[0] >= 100);
+    }
+
+    #[test]
+    fn ensure_helper() {
+        assert!(ensure(true, "x").is_ok());
+        assert_eq!(ensure(false, "boom").unwrap_err(), "boom");
+    }
+}

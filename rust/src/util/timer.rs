@@ -1,0 +1,96 @@
+//! Wall-clock measurement helpers shared by the engine and bench harness.
+
+use std::time::{Duration, Instant};
+
+/// Measure one invocation of `f`; returns (result, elapsed).
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let start = Instant::now();
+    let out = f();
+    (out, start.elapsed())
+}
+
+/// Scoped phase timer: accumulate named phase durations (fit vs eval vs
+/// host<->device) without allocation on the hot path.
+#[derive(Debug, Default, Clone)]
+pub struct PhaseTimer {
+    phases: Vec<(&'static str, Duration)>,
+}
+
+impl PhaseTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Run `f`, attributing its wall time to `phase`.
+    pub fn record<T>(&mut self, phase: &'static str, f: impl FnOnce() -> T) -> T {
+        let start = Instant::now();
+        let out = f();
+        self.add(phase, start.elapsed());
+        out
+    }
+
+    /// Add a pre-measured duration to a phase.
+    pub fn add(&mut self, phase: &'static str, dur: Duration) {
+        if let Some(slot) = self.phases.iter_mut().find(|(p, _)| *p == phase) {
+            slot.1 += dur;
+        } else {
+            self.phases.push((phase, dur));
+        }
+    }
+
+    pub fn get(&self, phase: &str) -> Option<Duration> {
+        self.phases.iter().find(|(p, _)| *p == phase).map(|(_, d)| *d)
+    }
+
+    pub fn total(&self) -> Duration {
+        self.phases.iter().map(|(_, d)| *d).sum()
+    }
+
+    pub fn phases(&self) -> &[(&'static str, Duration)] {
+        &self.phases
+    }
+
+    /// "fit=12.3ms eval=1.2ms" style rendering for logs.
+    pub fn render(&self) -> String {
+        self.phases
+            .iter()
+            .map(|(p, d)| format!("{p}={:.3}ms", d.as_secs_f64() * 1e3))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_it_returns_result() {
+        let (v, d) = time_it(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(d.as_nanos() > 0);
+    }
+
+    #[test]
+    fn phases_accumulate() {
+        let mut t = PhaseTimer::new();
+        t.add("fit", Duration::from_millis(10));
+        t.add("eval", Duration::from_millis(5));
+        t.add("fit", Duration::from_millis(10));
+        assert_eq!(t.get("fit"), Some(Duration::from_millis(20)));
+        assert_eq!(t.total(), Duration::from_millis(25));
+        assert_eq!(t.phases().len(), 2);
+        assert!(t.render().contains("fit=20.000ms"));
+    }
+
+    #[test]
+    fn record_attributes_time() {
+        let mut t = PhaseTimer::new();
+        let out = t.record("work", || {
+            std::thread::sleep(Duration::from_millis(2));
+            7
+        });
+        assert_eq!(out, 7);
+        assert!(t.get("work").unwrap() >= Duration::from_millis(2));
+    }
+}

@@ -1,0 +1,113 @@
+//! Failure injection: the runtime and coordinator must fail loudly and
+//! recoverably on corrupt artifacts, missing files and bad manifests —
+//! never with a panic or a silent wrong answer.
+
+use std::path::{Path, PathBuf};
+
+use flash_sdkde::runtime::{ExecutableStore, Manifest};
+use flash_sdkde::util::json;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = std::env::var("FLASH_SDKDE_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"));
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+/// Copy the real manifest into a temp dir, optionally corrupting pieces.
+fn temp_artifacts(mutate: impl Fn(&mut String)) -> PathBuf {
+    let src = artifacts_dir().expect("artifacts present");
+    let dir = std::env::temp_dir().join(format!(
+        "flash-sdkde-fi-{}-{:?}",
+        std::process::id(),
+        std::thread::current().id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("mkdir");
+    let mut manifest =
+        std::fs::read_to_string(src.join("manifest.json")).expect("read");
+    mutate(&mut manifest);
+    std::fs::write(dir.join("manifest.json"), manifest).expect("write");
+    dir
+}
+
+#[test]
+fn missing_manifest_yields_actionable_error() {
+    let err = Manifest::load(Path::new("/nonexistent-dir")).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("make artifacts"), "{msg}");
+}
+
+#[test]
+fn corrupt_manifest_json_rejected() {
+    if artifacts_dir().is_none() {
+        eprintln!("SKIP: no artifacts");
+        return;
+    }
+    let dir = temp_artifacts(|m| {
+        m.truncate(m.len() / 2); // torn write
+    });
+    let err = Manifest::load(&dir).unwrap_err();
+    assert!(format!("{err:#}").contains("parse"), "{err:#}");
+}
+
+#[test]
+fn manifest_with_wrong_version_rejected() {
+    if artifacts_dir().is_none() {
+        eprintln!("SKIP: no artifacts");
+        return;
+    }
+    let dir = temp_artifacts(|m| {
+        *m = m.replacen("\"version\": 1", "\"version\": 99", 1);
+    });
+    let err = Manifest::load(&dir).unwrap_err();
+    assert!(format!("{err:#}").contains("version"), "{err:#}");
+}
+
+#[test]
+fn missing_hlo_file_fails_at_compile_not_at_open() {
+    // The store opens lazily; the error must surface on first use of the
+    // affected entry, name the file, and leave the store usable.
+    if artifacts_dir().is_none() {
+        eprintln!("SKIP: no artifacts");
+        return;
+    }
+    let dir = temp_artifacts(|_| {}); // manifest fine, no HLO files copied
+    let manifest = Manifest::load(&dir).expect("manifest loads");
+    let mut store = ExecutableStore::open(manifest).expect("store opens");
+    let entry = store.manifest().entries[0].clone();
+    let err = store.warm(&entry).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("HLO") || msg.contains(&entry.file), "{msg}");
+    // Store still alive: stats callable, second failure identical.
+    assert_eq!(store.stats().compiles, 0);
+    assert!(store.warm(&entry).is_err());
+}
+
+#[test]
+fn garbage_hlo_text_fails_cleanly() {
+    if artifacts_dir().is_none() {
+        eprintln!("SKIP: no artifacts");
+        return;
+    }
+    let dir = temp_artifacts(|_| {});
+    let manifest = Manifest::load(&dir).expect("manifest");
+    let entry = manifest.entries[0].clone();
+    std::fs::write(dir.join(&entry.file), "HloModule corrupted\nnot hlo at all")
+        .expect("write garbage");
+    let mut store = ExecutableStore::open(manifest).expect("store");
+    let err = store.warm(&entry).unwrap_err();
+    // Parse or compile error, never a panic.
+    assert!(!format!("{err:#}").is_empty());
+}
+
+#[test]
+fn manifest_schema_violations_name_the_entry() {
+    let bad = r#"{"version": 1, "entries": [
+        {"pipeline": "kde", "variant": "flash", "d": 1, "n": 8, "m": 2,
+         "file": "x.hlo.txt", "inputs": [{"shape": [8, "oops"]}],
+         "outputs": []}]}"#;
+    let v = json::parse(bad).expect("valid json");
+    let err = Manifest::from_json(Path::new("/tmp"), &v).unwrap_err();
+    assert!(format!("{err:#}").contains("entry 0"), "{err:#}");
+}

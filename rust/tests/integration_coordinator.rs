@@ -1,0 +1,376 @@
+//! Coordinator + server integration: fit/eval over the real engine, the
+//! TCP wire protocol, dynamic batching, backpressure and registry behaviour.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use flash_sdkde::config::Config;
+use flash_sdkde::coordinator::server::{handle_line, Client, Server};
+use flash_sdkde::coordinator::Coordinator;
+use flash_sdkde::data::mixture::by_dim;
+use flash_sdkde::estimator::{native, EstimatorKind};
+use flash_sdkde::util::rng::Pcg64;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = std::env::var("FLASH_SDKDE_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"));
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(dir) => dir,
+            None => {
+                eprintln!("SKIP: no artifacts (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+fn test_config(dir: PathBuf) -> Config {
+    let mut cfg = Config::default();
+    cfg.artifacts_dir = dir;
+    cfg.batch_wait_ms = 1;
+    cfg
+}
+
+fn coordinator() -> Option<Coordinator> {
+    let dir = artifacts_dir()?;
+    Some(Coordinator::start(test_config(dir)).expect("coordinator"))
+}
+
+#[test]
+fn fit_eval_kde_matches_native() {
+    let _dir = require_artifacts!();
+    let coord = coordinator().unwrap();
+    let d = 16;
+    let mix = by_dim(d);
+    let mut rng = Pcg64::seeded(1);
+    let n = 300;
+    let train = mix.sample(n, &mut rng);
+
+    let info = coord
+        .fit("m", EstimatorKind::Kde, d, train.clone(), None, None, None)
+        .expect("fit");
+    assert_eq!(info.n, n);
+    assert!(info.bucket_n >= n);
+    assert!(info.h > 0.0);
+
+    let queries = mix.sample(10, &mut rng);
+    let res = coord.eval("m", queries.clone()).expect("eval");
+    assert_eq!(res.densities.len(), 10);
+
+    let w = vec![1.0f32; n];
+    let want = native::kde(&train, &w, &queries, d, info.h);
+    for (a, b) in res.densities.iter().zip(&want) {
+        let rel = ((*a as f64 - b) / b).abs();
+        assert!(rel < 1e-3, "{a} vs {b}");
+    }
+}
+
+#[test]
+fn fit_eval_sdkde_and_laplace_match_native() {
+    let _dir = require_artifacts!();
+    let coord = coordinator().unwrap();
+    let d = 1;
+    let mix = by_dim(d);
+    let mut rng = Pcg64::seeded(2);
+    let n = 500;
+    let train = mix.sample(n, &mut rng);
+    let queries = mix.sample(12, &mut rng);
+    let w = vec![1.0f32; n];
+
+    // SD-KDE (explicit bandwidth so the oracle sees identical inputs).
+    let h = 0.35;
+    let hs = h / std::f64::consts::SQRT_2;
+    coord
+        .fit("sd", EstimatorKind::SdKde, d, train.clone(), Some(h), Some(hs), None)
+        .expect("fit sdkde");
+    let res = coord.eval("sd", queries.clone()).expect("eval sdkde");
+    let want = native::sdkde(&train, &w, &queries, d, h, hs);
+    for (a, b) in res.densities.iter().zip(&want) {
+        assert!(((*a as f64 - b) / b).abs() < 2e-3, "{a} vs {b}");
+    }
+
+    // Laplace (signed estimator).
+    coord
+        .fit("lc", EstimatorKind::Laplace, d, train.clone(), Some(h), None, None)
+        .expect("fit laplace");
+    let res = coord.eval("lc", queries.clone()).expect("eval laplace");
+    let want = native::laplace(&train, &w, &queries, d, h);
+    for (a, b) in res.densities.iter().zip(&want) {
+        assert!((*a as f64 - b).abs() < 1e-5 + 1e-3 * b.abs(), "{a} vs {b}");
+    }
+}
+
+#[test]
+fn eval_chunks_requests_larger_than_biggest_bucket() {
+    let _dir = require_artifacts!();
+    let coord = coordinator().unwrap();
+    let d = 1;
+    let mix = by_dim(d);
+    let mut rng = Pcg64::seeded(3);
+    let n = 200;
+    let train = mix.sample(n, &mut rng);
+    let info = coord
+        .fit("big", EstimatorKind::Kde, d, train.clone(), None, None, None)
+        .expect("fit");
+
+    // More queries than any m-bucket: the dispatcher must chunk.
+    let k = 700;
+    let queries = mix.sample(k, &mut rng);
+    let res = coord.eval("big", queries.clone()).expect("eval");
+    assert_eq!(res.densities.len(), k);
+    let w = vec![1.0f32; n];
+    let want = native::kde(&train, &w, &queries, d, info.h);
+    for (i, (a, b)) in res.densities.iter().zip(&want).enumerate() {
+        assert!(((*a as f64 - b) / b).abs() < 1e-3, "row {i}: {a} vs {b}");
+    }
+}
+
+#[test]
+fn unknown_model_and_bad_points_error() {
+    let _dir = require_artifacts!();
+    let coord = coordinator().unwrap();
+    assert!(coord.eval("ghost", vec![1.0]).is_err());
+
+    let d = 1;
+    let mix = by_dim(d);
+    let mut rng = Pcg64::seeded(4);
+    coord
+        .fit("m", EstimatorKind::Kde, d, mix.sample(50, &mut rng), None, None, None)
+        .expect("fit");
+    // Empty points rejected.
+    assert!(coord.eval("m", vec![]).is_err());
+    // Oversized fit rejected with a clear message.
+    let huge = coord.fit(
+        "huge",
+        EstimatorKind::Kde,
+        16,
+        vec![0.0; 16 * 100_000],
+        None,
+        None,
+        None,
+    );
+    let err = format!("{:#}", huge.unwrap_err());
+    assert!(err.contains("no train bucket"), "{err}");
+}
+
+#[test]
+fn concurrent_clients_get_batched() {
+    let _dir = require_artifacts!();
+    let coord = Arc::new(Coordinator::start({
+        let mut cfg = test_config(artifacts_dir().unwrap());
+        cfg.batch_wait_ms = 5;
+        cfg
+    })
+    .expect("coordinator"));
+    let d = 1;
+    let mix = by_dim(d);
+    let mut rng = Pcg64::seeded(5);
+    coord
+        .fit("m", EstimatorKind::Kde, d, mix.sample(100, &mut rng), None, None, None)
+        .expect("fit");
+
+    let clients = 6;
+    let per_client = 10;
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            let coord = Arc::clone(&coord);
+            let mix = mix.clone();
+            std::thread::spawn(move || {
+                let mut rng = Pcg64::new(50, c);
+                let mut max_batch = 0usize;
+                for _ in 0..per_client {
+                    let res = coord.eval("m", mix.sample(4, &mut rng)).expect("eval");
+                    max_batch = max_batch.max(res.batch_size);
+                }
+                max_batch
+            })
+        })
+        .collect();
+    let max_batch = handles
+        .into_iter()
+        .map(|h| h.join().unwrap())
+        .max()
+        .unwrap();
+    // With 6 concurrent clients and a 5ms window, at least one execution
+    // must have co-batched >= 2 requests.
+    assert!(max_batch >= 2, "no batching observed (max batch {max_batch})");
+    assert!(coord.metrics().mean_batch_size() >= 1.0);
+}
+
+#[test]
+fn tcp_round_trip_full_protocol() {
+    let _dir = require_artifacts!();
+    let coord = coordinator().unwrap();
+    let mut server = Server::start(coord, "127.0.0.1", 0).expect("server");
+    let addr = server.local_addr();
+
+    let d = 1;
+    let mix = by_dim(d);
+    let mut rng = Pcg64::seeded(6);
+    let train = mix.sample(120, &mut rng);
+    let queries = mix.sample(7, &mut rng);
+
+    let mut client = Client::connect(addr).expect("connect");
+    client.ping().expect("ping");
+    let info = client
+        .fit("wire", EstimatorKind::SdKde, d, train.clone(), None, None, None)
+        .expect("fit");
+    assert_eq!(info.n, 120);
+
+    let res = client.eval("wire", d, queries.clone()).expect("eval");
+    assert_eq!(res.densities.len(), 7);
+
+    // In-process numerics must equal wire numerics.
+    let local = server
+        .coordinator()
+        .eval("wire", queries)
+        .expect("local eval");
+    assert_eq!(res.densities, local.densities);
+
+    assert_eq!(client.models().expect("models"), vec!["wire".to_string()]);
+    let stats = client.stats().expect("stats");
+    assert!(stats.get("metrics").is_some());
+    assert!(client.delete("wire").expect("delete"));
+    assert!(!client.delete("wire").expect("delete"));
+    let err = client.eval("wire", d, vec![0.0]).unwrap_err();
+    assert!(format!("{err:#}").contains("unknown model"), "{err:#}");
+    server.shutdown();
+}
+
+#[test]
+fn malformed_wire_lines_get_error_responses() {
+    let _dir = require_artifacts!();
+    let coord = coordinator().unwrap();
+    for bad in ["not json", "{}", r#"{"op":"fit"}"#, r#"{"op":"nope"}"#] {
+        let resp = handle_line(&coord, bad).to_line();
+        assert!(resp.contains("\"ok\":false"), "{bad} -> {resp}");
+    }
+    // A good line still works after bad ones.
+    let resp = handle_line(&coord, r#"{"op":"ping"}"#).to_line();
+    assert!(resp.contains("\"ok\":true"), "{resp}");
+}
+
+#[test]
+fn registry_eviction_under_capacity_pressure() {
+    let _dir = require_artifacts!();
+    let mut cfg = test_config(artifacts_dir().unwrap());
+    cfg.registry_capacity = 2;
+    let coord = Coordinator::start(cfg).expect("coordinator");
+    let d = 1;
+    let mix = by_dim(d);
+    let mut rng = Pcg64::seeded(7);
+    for name in ["a", "b", "c"] {
+        coord
+            .fit(name, EstimatorKind::Kde, d, mix.sample(40, &mut rng), None, None, None)
+            .expect("fit");
+    }
+    // Capacity 2: "a" was evicted.
+    assert_eq!(coord.registry().len(), 2);
+    assert!(coord.registry().peek("a").is_none());
+    assert!(coord.eval("a", vec![0.0]).is_err());
+    assert!(coord.eval("c", vec![0.0]).is_ok());
+    assert_eq!(coord.registry().evictions(), 1);
+}
+
+#[test]
+fn stats_document_reflects_activity() {
+    let _dir = require_artifacts!();
+    let coord = coordinator().unwrap();
+    let d = 1;
+    let mix = by_dim(d);
+    let mut rng = Pcg64::seeded(8);
+    coord
+        .fit("s", EstimatorKind::Kde, d, mix.sample(64, &mut rng), None, None, None)
+        .expect("fit");
+    for _ in 0..3 {
+        coord.eval("s", mix.sample(4, &mut rng)).expect("eval");
+    }
+    let stats = coord.stats_json();
+    let metrics = stats.get("metrics").expect("metrics");
+    assert_eq!(metrics.get("fit_requests").unwrap().as_usize(), Some(1));
+    assert_eq!(metrics.get("eval_requests").unwrap().as_usize(), Some(3));
+    let engine = stats.get("engine").expect("engine");
+    assert!(engine.get("executions").unwrap().as_usize().unwrap() >= 3);
+}
+
+#[test]
+fn grad_endpoint_matches_native_score() {
+    let _dir = require_artifacts!();
+    let coord = coordinator().unwrap();
+    let d = 1;
+    let mix = by_dim(d);
+    let mut rng = Pcg64::seeded(31);
+    let n = 300;
+    let train = mix.sample(n, &mut rng);
+    let h = 0.4;
+    coord
+        .fit("g", EstimatorKind::Kde, d, train.clone(), Some(h), None, None)
+        .expect("fit");
+
+    let queries = mix.sample(9, &mut rng);
+    let grads = coord.grad("g", queries.clone()).expect("grad");
+    assert_eq!(grads.len(), 9 * d);
+
+    // Native oracle: score of the fitted KDE at bandwidth h.
+    let w = vec![1.0f32; n];
+    let want = native::score_at(&train, &w, &queries, d, h);
+    for (i, (a, b)) in grads.iter().zip(&want).enumerate() {
+        let scale = b.abs().max(0.1);
+        assert!(
+            ((*a as f64 - b) / scale).abs() < 2e-3,
+            "grad {i}: {a} vs {b}"
+        );
+    }
+
+    // Unknown model / empty points rejected.
+    assert!(coord.grad("ghost", vec![0.0]).is_err());
+    assert!(coord.grad("g", vec![]).is_err());
+}
+
+#[test]
+fn grad_over_tcp_round_trip() {
+    let _dir = require_artifacts!();
+    let coord = coordinator().unwrap();
+    let mut server = Server::start(coord, "127.0.0.1", 0).expect("server");
+    let addr = server.local_addr();
+
+    let d = 1;
+    let mix = by_dim(d);
+    let mut rng = Pcg64::seeded(32);
+    let mut client = Client::connect(addr).expect("connect");
+    client
+        .fit("gw", EstimatorKind::Kde, d, mix.sample(100, &mut rng), None, None, None)
+        .expect("fit");
+    let queries = mix.sample(5, &mut rng);
+    let grads = client.grad("gw", d, queries.clone()).expect("grad");
+    assert_eq!(grads.len(), 5);
+    let local = server.coordinator().grad("gw", queries).expect("local");
+    assert_eq!(grads, local);
+    server.shutdown();
+}
+
+#[test]
+fn grad_points_downhill_from_tails() {
+    // Statistical sanity: at points right of every mode the gradient of
+    // log density must be negative (pull back toward the data).
+    let _dir = require_artifacts!();
+    let coord = coordinator().unwrap();
+    let d = 1;
+    let mix = by_dim(d);
+    let mut rng = Pcg64::seeded(33);
+    coord
+        .fit("tail", EstimatorKind::Kde, d, mix.sample(400, &mut rng), None, None, None)
+        .expect("fit");
+    let right_tail = vec![8.5f32, 9.0, 10.0];
+    let grads = coord.grad("tail", right_tail).expect("grad");
+    assert!(grads.iter().all(|&g| g < 0.0), "{grads:?}");
+    let left_tail = vec![-6.0f32, -7.5];
+    let grads = coord.grad("tail", left_tail).expect("grad");
+    assert!(grads.iter().all(|&g| g > 0.0), "{grads:?}");
+}

@@ -1,0 +1,158 @@
+//! Statistical integration tests: the paper's *accuracy* claims at test
+//! scale, cross-implementation parity, and bandwidth-rule behaviour.
+//!
+//! These run on the native Rust estimators (no artifacts needed) so they
+//! exercise the statistical layer even on a fresh checkout.
+
+use flash_sdkde::analysis::{band, oracle_error};
+use flash_sdkde::data::mixture::{by_dim, mix16d, mix1d};
+use flash_sdkde::estimator::{bandwidth, native};
+use flash_sdkde::util::rng::Pcg64;
+
+/// Oracle errors of one estimator on one seeded draw.
+fn errors_for(
+    estimator: &str,
+    n: usize,
+    d: usize,
+    seed: u64,
+) -> flash_sdkde::analysis::OracleError {
+    let mix = by_dim(d);
+    let mut rng = Pcg64::seeded(seed);
+    let x = mix.sample(n, &mut rng);
+    let m = (n / 8).max(32);
+    let y = mix.sample(m, &mut rng);
+    let w = vec![1.0f32; n];
+    let truth = mix.pdf(&y);
+    let h = bandwidth::sdkde_rate(&x, n, d);
+    let est: Vec<f64> = match estimator {
+        "kde" => native::kde(&x, &w, &y, d, h),
+        "sdkde" => native::sdkde(&x, &w, &y, d, h, bandwidth::score_bandwidth(h)),
+        "laplace" => native::laplace(&x, &w, &y, d, h),
+        other => panic!("unknown estimator {other}"),
+    };
+    oracle_error(&est, &truth)
+}
+
+#[test]
+fn sdkde_improves_mise_over_kde_1d() {
+    // Fig. 3's qualitative claim at test scale, averaged over seeds.
+    let seeds: Vec<u64> = (0..4).collect();
+    let kde: Vec<f64> = seeds.iter().map(|&s| errors_for("kde", 2000, 1, s).mise).collect();
+    let sd: Vec<f64> = seeds.iter().map(|&s| errors_for("sdkde", 2000, 1, s).mise).collect();
+    let kde_band = band(&kde);
+    let sd_band = band(&sd);
+    assert!(
+        sd_band.mean < kde_band.mean,
+        "SD-KDE MISE {} !< KDE MISE {}",
+        sd_band.mean,
+        kde_band.mean
+    );
+}
+
+#[test]
+fn laplace_improves_mise_over_kde_1d() {
+    let seeds: Vec<u64> = (0..4).collect();
+    let kde: Vec<f64> = seeds.iter().map(|&s| errors_for("kde", 2000, 1, s).mise).collect();
+    let lc: Vec<f64> = seeds.iter().map(|&s| errors_for("laplace", 2000, 1, s).mise).collect();
+    assert!(band(&lc).mean < band(&kde).mean);
+}
+
+#[test]
+fn mise_decreases_with_n() {
+    // Basic consistency: more data, less error (both estimators).
+    for est in ["kde", "sdkde"] {
+        let small = errors_for(est, 250, 1, 9).mise;
+        let large = errors_for(est, 4000, 1, 9).mise;
+        assert!(large < small, "{est}: {large} !< {small}");
+    }
+}
+
+#[test]
+fn laplace_has_negative_mass_sdkde_does_not() {
+    // §5/§6.1: the Laplace correction is signed; SD-KDE stays nonnegative.
+    let lc = errors_for("laplace", 1500, 1, 11);
+    let sd = errors_for("sdkde", 1500, 1, 11);
+    assert!(lc.negative_mass >= 0.0);
+    assert_eq!(sd.negative_mass, 0.0);
+}
+
+#[test]
+fn sixteen_d_errors_are_finite_and_ordered() {
+    // The 16-D benchmark is harder; just assert sanity + SD-KDE no worse
+    // than 2x KDE (it should generally be better).
+    let kde = errors_for("kde", 1500, 16, 13);
+    let sd = errors_for("sdkde", 1500, 16, 13);
+    assert!(kde.mise.is_finite() && sd.mise.is_finite());
+    assert!(sd.mise < 2.0 * kde.mise);
+}
+
+#[test]
+fn mixture_parameters_match_python_twins() {
+    // Parity pins for the cross-language contract (python test_mixtures
+    // asserts the same numbers).
+    let m = mix1d();
+    assert_eq!(m.weights, vec![0.45, 0.35, 0.20]);
+    assert_eq!(m.means[0], vec![-2.0]);
+    assert_eq!(m.sigmas[2], 1.2);
+    let m = mix16d();
+    assert_eq!(m.weights, vec![0.4, 0.3, 0.2, 0.1]);
+    assert_eq!(m.means[3][3], 3.0);
+    assert_eq!(m.sigmas, vec![1.0, 0.8, 1.2, 0.9]);
+}
+
+#[test]
+fn mixture_pdf_matches_monte_carlo_1d() {
+    // pdf() vs a histogram of its own samples.
+    let mix = mix1d();
+    let mut rng = Pcg64::seeded(21);
+    let n = 200_000;
+    let s = mix.sample(n, &mut rng);
+    let lo = -6.0f32;
+    let hi = 9.0f32;
+    let bins = 60;
+    let mut counts = vec![0usize; bins];
+    for &v in &s {
+        if v >= lo && v < hi {
+            let b = ((v - lo) / (hi - lo) * bins as f32) as usize;
+            counts[b.min(bins - 1)] += 1;
+        }
+    }
+    let width = (hi - lo) / bins as f32;
+    for b in 0..bins {
+        let center = lo + (b as f32 + 0.5) * width;
+        let density = counts[b] as f64 / n as f64 / width as f64;
+        let want = mix.pdf1(&[center]);
+        assert!(
+            (density - want).abs() < 0.01 + 0.1 * want,
+            "bin {b}: {density} vs {want}"
+        );
+    }
+}
+
+#[test]
+fn silverman_matches_textbook_constant_1d() {
+    // h = (4/3)^{1/5} sigma n^{-1/5} for d=1.
+    let mut rng = Pcg64::seeded(31);
+    let n = 50_000;
+    let x: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+    let h = bandwidth::silverman(&x, n, 1);
+    let expect = (4.0f64 / 3.0).powf(0.2) * (n as f64).powf(-0.2);
+    assert!((h - expect).abs() / expect < 0.05, "h={h} expect={expect}");
+}
+
+#[test]
+fn debias_pulls_samples_toward_modes() {
+    // The score shift must move mass toward high-density regions: the
+    // debiased sample variance shrinks for a unimodal density.
+    let mut rng = Pcg64::seeded(41);
+    let n = 2000;
+    let x: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+    let w = vec![1.0f32; n];
+    let h = 0.5;
+    let x_sd = native::debias(&x, &w, 1, h, bandwidth::score_bandwidth(h));
+    let var = |v: &[f32]| -> f64 {
+        let mean = v.iter().map(|&a| a as f64).sum::<f64>() / v.len() as f64;
+        v.iter().map(|&a| (a as f64 - mean).powi(2)).sum::<f64>() / v.len() as f64
+    };
+    assert!(var(&x_sd) < var(&x), "{} !< {}", var(&x_sd), var(&x));
+}

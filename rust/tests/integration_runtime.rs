@@ -1,0 +1,393 @@
+//! Runtime integration: load real artifacts, execute them via PJRT, and
+//! cross-check numerics against the native Rust oracles.
+//!
+//! Requires `make artifacts` (the quick set suffices); tests skip with a
+//! clear message when the manifest is missing so `cargo test` stays usable
+//! on a fresh checkout.
+
+use std::path::PathBuf;
+
+use flash_sdkde::data::mixture::by_dim;
+use flash_sdkde::estimator::{bandwidth, native};
+use flash_sdkde::runtime::{ExecutableStore, HostTensor, Manifest};
+use flash_sdkde::util::rng::Pcg64;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = std::env::var("FLASH_SDKDE_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"));
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(dir) => dir,
+            None => {
+                eprintln!("SKIP: no artifacts (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+struct Fixture {
+    store: ExecutableStore,
+}
+
+impl Fixture {
+    fn open(dir: &std::path::Path) -> Fixture {
+        let manifest = Manifest::load(dir).expect("manifest");
+        Fixture { store: ExecutableStore::open(manifest).expect("store") }
+    }
+
+    /// Smallest (n, m) bucket for a pipeline/variant/d.
+    fn smallest(&self, pipeline: &str, variant: &str, d: usize) -> (usize, usize) {
+        *self
+            .store
+            .manifest()
+            .buckets(pipeline, variant, d)
+            .first()
+            .unwrap_or_else(|| panic!("no buckets for {pipeline}/{variant} d={d}"))
+    }
+}
+
+/// Random padded problem matching a bucket; returns (x, w, y, h, h_s).
+fn padded_problem(
+    bucket_n: usize,
+    bucket_m: usize,
+    d: usize,
+    n_used: usize,
+    m_used: usize,
+    seed: u64,
+) -> (HostTensor, HostTensor, HostTensor, f64, f64) {
+    assert!(n_used <= bucket_n && m_used <= bucket_m);
+    let mix = by_dim(d);
+    let mut rng = Pcg64::seeded(seed);
+    let xs = mix.sample(n_used, &mut rng);
+    let ys = mix.sample(m_used, &mut rng);
+    let h = bandwidth::silverman(&xs, n_used, d);
+    let h_s = bandwidth::score_bandwidth(h);
+
+    let x = HostTensor::matrix(n_used, d, xs)
+        .unwrap()
+        .pad_rows(bucket_n, 0.0)
+        .unwrap();
+    let mut w = HostTensor::zeros(vec![bucket_n]);
+    w.data_mut()[..n_used].fill(1.0);
+    let y = HostTensor::matrix(m_used, d, ys)
+        .unwrap()
+        .pad_rows(bucket_m, 0.0)
+        .unwrap();
+    (x, w, y, h, h_s)
+}
+
+fn rel_err(a: f32, b: f64) -> f64 {
+    ((a as f64 - b) / b.abs().max(1e-30)).abs()
+}
+
+#[test]
+fn kde_flash_matches_native_oracle_16d() {
+    let dir = require_artifacts!();
+    let mut fx = Fixture::open(&dir);
+    let (bn, bm) = fx.smallest("kde", "flash", 16);
+    let n_used = bn - 37; // deliberately not the full bucket: masking path
+    let m_used = bm.min(24);
+    let (x, w, y, h, _hs) = padded_problem(bn, bm, 16, n_used, m_used, 1);
+
+    let entry = fx.store.manifest().find("kde", "flash", 16, bn, bm).unwrap().clone();
+    let out = fx
+        .store
+        .execute(
+            &entry,
+            &[x.clone(), w.clone(), y.clone(), HostTensor::scalar(h as f32)],
+        )
+        .expect("execute");
+    let got = out.outputs[0].data().to_vec();
+
+    let want = native::kde(x.data(), w.data(), y.data(), 16, h);
+    for j in 0..m_used {
+        assert!(
+            rel_err(got[j], want[j]) < 1e-3,
+            "row {j}: {} vs {}",
+            got[j],
+            want[j]
+        );
+    }
+}
+
+#[test]
+fn all_kde_variants_agree_on_the_same_bucket() {
+    let dir = require_artifacts!();
+    let mut fx = Fixture::open(&dir);
+    let d = 16;
+    let (bn, bm) = fx.smallest("kde", "flash", d);
+    let (x, w, y, h, _) = padded_problem(bn, bm, d, bn, bm, 2);
+
+    let mut results = Vec::new();
+    for v in ["flash", "gemm", "stream", "naive"] {
+        if let Some(entry) = fx.store.manifest().find("kde", v, d, bn, bm) {
+            let entry = entry.clone();
+            let out = fx
+                .store
+                .execute(
+                    &entry,
+                    &[x.clone(), w.clone(), y.clone(), HostTensor::scalar(h as f32)],
+                )
+                .expect("execute");
+            results.push((v, out.outputs[0].data().to_vec()));
+        }
+    }
+    assert!(results.len() >= 2, "need at least two variants lowered");
+    let (base_name, base) = &results[0];
+    for (name, data) in &results[1..] {
+        for (i, (a, b)) in base.iter().zip(data).enumerate() {
+            let rel = ((a - b) / a.abs().max(1e-30)).abs() as f64;
+            assert!(rel < 1e-3, "{base_name} vs {name} row {i}: {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn sdkde_fit_then_eval_equals_e2e_artifact() {
+    let dir = require_artifacts!();
+    let mut fx = Fixture::open(&dir);
+    let d = 16;
+    let (bn, bm) = fx.smallest("sdkde_e2e", "flash", d);
+    let (x, w, y, h, hs) = padded_problem(bn, bm, d, bn - 5, bm, 3);
+    let h_t = HostTensor::scalar(h as f32);
+    let hs_t = HostTensor::scalar(hs as f32);
+
+    // e2e in one artifact.
+    let e2e = fx.store.manifest().find("sdkde_e2e", "flash", d, bn, bm).unwrap().clone();
+    let full = fx
+        .store
+        .execute(&e2e, &[x.clone(), w.clone(), y.clone(), h_t.clone(), hs_t.clone()])
+        .expect("e2e");
+
+    // fit then eval (the serving decomposition).
+    let fit = fx.store.manifest().find("sdkde_fit", "flash", d, bn, bm).unwrap().clone();
+    let fitted = fx
+        .store
+        .execute(&fit, &[x.clone(), w.clone(), h_t.clone(), hs_t])
+        .expect("fit");
+    let x_sd = fitted.outputs[0].clone();
+    let eval = fx.store.manifest().find("kde", "flash", d, bn, bm).unwrap().clone();
+    let served = fx
+        .store
+        .execute(&eval, &[x_sd, w.clone(), y.clone(), h_t])
+        .expect("eval");
+
+    for (i, (a, b)) in full.outputs[0]
+        .data()
+        .iter()
+        .zip(served.outputs[0].data())
+        .enumerate()
+    {
+        let rel = ((a - b) / a.abs().max(1e-30)).abs();
+        assert!(rel < 1e-4, "row {i}: {a} vs {b}");
+    }
+}
+
+#[test]
+fn sdkde_flash_matches_native_oracle_1d() {
+    let dir = require_artifacts!();
+    let mut fx = Fixture::open(&dir);
+    let d = 1;
+    let (bn, bm) = fx.smallest("sdkde_e2e", "flash", d);
+    let n_used = bn / 2 + 11;
+    let m_used = bm.min(16);
+    let (x, w, y, h, hs) = padded_problem(bn, bm, d, n_used, m_used, 4);
+
+    let e2e = fx.store.manifest().find("sdkde_e2e", "flash", d, bn, bm).unwrap().clone();
+    let out = fx
+        .store
+        .execute(
+            &e2e,
+            &[
+                x.clone(),
+                w.clone(),
+                y.clone(),
+                HostTensor::scalar(h as f32),
+                HostTensor::scalar(hs as f32),
+            ],
+        )
+        .expect("execute");
+    let got = out.outputs[0].data().to_vec();
+    let want = native::sdkde(x.data(), w.data(), y.data(), d, h, hs);
+    for j in 0..m_used {
+        assert!(
+            rel_err(got[j], want[j]) < 2e-3,
+            "row {j}: {} vs {}",
+            got[j],
+            want[j]
+        );
+    }
+}
+
+#[test]
+fn laplace_fused_and_nonfused_agree_and_match_native() {
+    let dir = require_artifacts!();
+    let mut fx = Fixture::open(&dir);
+    let d = 16;
+    let (bn, bm) = fx.smallest("laplace", "flash", d);
+    let (x, w, y, h, _) = padded_problem(bn, bm, d, bn, bm, 5);
+    let h_t = HostTensor::scalar(h as f32);
+
+    let fused = fx.store.manifest().find("laplace", "flash", d, bn, bm).unwrap().clone();
+    let a = fx
+        .store
+        .execute(&fused, &[x.clone(), w.clone(), y.clone(), h_t.clone()])
+        .expect("fused");
+    let nonfused =
+        fx.store.manifest().find("laplace", "nonfused", d, bn, bm).unwrap().clone();
+    let b = fx
+        .store
+        .execute(&nonfused, &[x.clone(), w.clone(), y.clone(), h_t])
+        .expect("nonfused");
+
+    let native_out = native::laplace(x.data(), w.data(), y.data(), d, h);
+    for i in 0..bm {
+        let fa = a.outputs[0].data()[i];
+        let fb = b.outputs[0].data()[i];
+        assert!(
+            ((fa - fb) / fa.abs().max(1e-6)).abs() < 1e-4,
+            "fusion changed estimator at {i}: {fa} vs {fb}"
+        );
+        // Signed values: compare with absolute + relative slack.
+        let w_ref = native_out[i];
+        assert!(
+            (fa as f64 - w_ref).abs() < 1e-5 + 1e-3 * w_ref.abs(),
+            "native mismatch at {i}: {fa} vs {w_ref}"
+        );
+    }
+}
+
+#[test]
+fn bandwidth_is_a_runtime_input_artifact_reuse() {
+    let dir = require_artifacts!();
+    let mut fx = Fixture::open(&dir);
+    let d = 1;
+    let (bn, bm) = fx.smallest("kde", "flash", d);
+    let (x, w, y, _, _) = padded_problem(bn, bm, d, bn, bm, 6);
+    let entry = fx.store.manifest().find("kde", "flash", d, bn, bm).unwrap().clone();
+
+    let compiles_before = fx.store.stats().compiles;
+    for h in [0.1f64, 0.4, 1.3] {
+        let out = fx
+            .store
+            .execute(
+                &entry,
+                &[x.clone(), w.clone(), y.clone(), HostTensor::scalar(h as f32)],
+            )
+            .expect("execute");
+        let want = native::kde(x.data(), w.data(), y.data(), d, h);
+        for j in 0..bm.min(8) {
+            assert!(rel_err(out.outputs[0].data()[j], want[j]) < 1e-3);
+        }
+    }
+    // One compile served all three bandwidths.
+    assert_eq!(fx.store.stats().compiles, compiles_before + 1);
+}
+
+#[test]
+fn store_rejects_wrong_shapes_and_unknown_entries() {
+    let dir = require_artifacts!();
+    let mut fx = Fixture::open(&dir);
+    let d = 1;
+    let (bn, bm) = fx.smallest("kde", "flash", d);
+    let entry = fx.store.manifest().find("kde", "flash", d, bn, bm).unwrap().clone();
+
+    // Wrong arity.
+    let err = fx.store.execute(&entry, &[HostTensor::scalar(1.0)]).unwrap_err();
+    assert!(format!("{err:#}").contains("expects"), "{err:#}");
+    // Wrong shape.
+    let bad = vec![
+        HostTensor::zeros(vec![bn + 1, d]),
+        HostTensor::zeros(vec![bn]),
+        HostTensor::zeros(vec![bm, d]),
+        HostTensor::scalar(0.5),
+    ];
+    let err = fx.store.execute(&entry, &bad).unwrap_err();
+    assert!(format!("{err:#}").contains("expected shape"), "{err:#}");
+    // Unknown coordinates.
+    assert!(fx
+        .store
+        .execute_exact("kde", "flash", d, bn + 3, bm, &bad)
+        .is_err());
+}
+
+#[test]
+fn tile_sweep_artifacts_are_estimator_invariant() {
+    let dir = require_artifacts!();
+    let mut fx = Fixture::open(&dir);
+    let sweep: Vec<_> = fx
+        .store
+        .manifest()
+        .sweep_entries()
+        .into_iter()
+        .cloned()
+        .collect();
+    if sweep.is_empty() {
+        eprintln!("SKIP: no sweep artifacts (quick build)");
+        return;
+    }
+    let e0 = &sweep[0];
+    let (x, w, _, h, hs) = padded_problem(e0.n, e0.m, e0.d, e0.n, e0.m, 8);
+    let inputs = vec![
+        x,
+        w,
+        HostTensor::scalar(h as f32),
+        HostTensor::scalar(hs as f32),
+    ];
+    let base = fx.store.execute(e0, &inputs).expect("sweep exec").outputs[0]
+        .data()
+        .to_vec();
+    for entry in &sweep[1..] {
+        let out = fx.store.execute(entry, &inputs).expect("sweep exec");
+        for (i, (a, b)) in base.iter().zip(out.outputs[0].data()).enumerate() {
+            let rel = ((a - b) / a.abs().max(1e-30)).abs();
+            assert!(
+                rel < 1e-4,
+                "tiles {:?} changed result at {i}: {a} vs {b}",
+                entry.tiles
+            );
+        }
+    }
+}
+
+#[test]
+fn engine_executes_across_threads() {
+    let dir = require_artifacts!();
+    let manifest = Manifest::load(&dir).expect("manifest");
+    let d = 1;
+    let (bn, bm) = *manifest
+        .buckets("kde", "flash", d)
+        .first()
+        .expect("buckets");
+    let entry = manifest.find("kde", "flash", d, bn, bm).unwrap().clone();
+    let engine = flash_sdkde::runtime::Engine::start(manifest, 1).expect("engine");
+
+    let (x, w, y, h, _) = padded_problem(bn, bm, d, bn, bm, 7);
+    let mut handles = Vec::new();
+    for _ in 0..4 {
+        let engine = engine.clone();
+        let entry = entry.clone();
+        let inputs = vec![
+            std::sync::Arc::new(x.clone()),
+            std::sync::Arc::new(w.clone()),
+            std::sync::Arc::new(y.clone()),
+            std::sync::Arc::new(HostTensor::scalar(h as f32)),
+        ];
+        handles.push(std::thread::spawn(move || {
+            engine.execute(&entry, inputs).expect("execute").outputs[0]
+                .data()
+                .to_vec()
+        }));
+    }
+    let results: Vec<Vec<f32>> =
+        handles.into_iter().map(|h| h.join().unwrap()).collect();
+    for r in &results[1..] {
+        assert_eq!(r, &results[0], "cross-thread results must agree");
+    }
+}

@@ -1,0 +1,405 @@
+//! Property-based invariants over the coordinator substrates (DESIGN.md §7):
+//! queue conservation, batching budgets, JSON fuzz round-trips, histogram
+//! quantile bounds, registry LRU laws, RNG distribution checks.
+//!
+//! Driven by the in-tree `util::prop` runner (seeded, shrinking-lite);
+//! replay failures with FLASH_SDKDE_PROP_SEED=<seed>.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use flash_sdkde::coordinator::batcher;
+use flash_sdkde::coordinator::metrics::LatencyHistogram;
+use flash_sdkde::coordinator::scheduler::BoundedQueue;
+use flash_sdkde::util::json::{self, Value};
+use flash_sdkde::util::prop::{check, ensure};
+use flash_sdkde::util::rng::Pcg64;
+use flash_sdkde::util::stats;
+
+#[test]
+fn prop_queue_conserves_items_under_concurrency() {
+    check("queue conservation", 20, |rng| {
+        let producers = 2 + rng.below(3) as usize;
+        let per_producer = 50 + rng.below(100) as usize;
+        let cap = 4 + rng.below(60) as usize;
+        let q = Arc::new(BoundedQueue::new(cap));
+
+        let mut handles = Vec::new();
+        for p in 0..producers {
+            let q = Arc::clone(&q);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..per_producer {
+                    let item = (p * 1_000_000 + i) as u64;
+                    loop {
+                        match q.push(item) {
+                            Ok(()) => break,
+                            Err(_) => std::thread::yield_now(),
+                        }
+                    }
+                }
+            }));
+        }
+        let total = producers * per_producer;
+        let mut got = Vec::with_capacity(total);
+        while got.len() < total {
+            match q.pop_timeout(Duration::from_secs(2)) {
+                Ok(v) => got.push(v),
+                Err(_) => return Err("pop timed out".to_string()),
+            }
+        }
+        for h in handles {
+            h.join().map_err(|_| "producer panicked".to_string())?;
+        }
+        got.sort_unstable();
+        got.dedup();
+        ensure(got.len() == total, "no item lost or duplicated")?;
+        ensure(q.is_empty(), "queue drained")
+    });
+}
+
+#[test]
+fn prop_queue_never_exceeds_capacity() {
+    check("queue capacity", 50, |rng| {
+        let cap = 1 + rng.below(16) as usize;
+        let q = BoundedQueue::new(cap);
+        let mut accepted = 0usize;
+        for i in 0..cap * 3 {
+            if q.push(i as u64).is_ok() {
+                accepted += 1;
+            }
+            ensure(q.len() <= cap, "len within capacity")?;
+        }
+        ensure(accepted == cap, "exactly cap accepted")
+    });
+}
+
+#[test]
+fn prop_fifo_order_preserved_single_consumer() {
+    check("queue fifo", 50, |rng| {
+        let n = 1 + rng.below(200) as usize;
+        let q = BoundedQueue::new(n);
+        for i in 0..n as u64 {
+            q.push(i).map_err(|_| "push failed".to_string())?;
+        }
+        for i in 0..n as u64 {
+            let v = q
+                .pop_timeout(Duration::from_millis(10))
+                .map_err(|_| "pop failed".to_string())?;
+            ensure(v == i, "fifo order")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_drain_matching_conserves_and_orders() {
+    check("drain matching", 200, |rng| {
+        let n = rng.below(40) as usize;
+        let items: Vec<u64> = (0..n).map(|_| rng.below(10)).collect();
+        let q = BoundedQueue::new(n.max(1));
+        for &it in &items {
+            q.push(it).map_err(|_| "push".to_string())?;
+        }
+        let target = rng.below(10);
+        let max = rng.below(8) as usize;
+        let drained = q.drain_matching(max, |&x| x == target);
+
+        ensure(drained.len() <= max, "drain bounded")?;
+        ensure(drained.iter().all(|&x| x == target), "only matches")?;
+        let mut rest = Vec::new();
+        while let Ok(v) = q.pop_timeout(Duration::from_millis(1)) {
+            rest.push(v);
+        }
+        // Conservation.
+        ensure(drained.len() + rest.len() == items.len(), "conserved")?;
+        // Non-matching relative order preserved.
+        let expect_rest: Vec<u64> = {
+            let mut taken = 0usize;
+            items
+                .iter()
+                .filter(|&&x| {
+                    if x == target && taken < max {
+                        taken += 1;
+                        false
+                    } else {
+                        true
+                    }
+                })
+                .copied()
+                .collect()
+        };
+        ensure(rest == expect_rest, "residual order")
+    });
+}
+
+#[test]
+fn prop_batch_admission_chunks_and_scatter_compose() {
+    // End-to-end batching arithmetic: admit -> chunk -> scatter must hand
+    // every query back to its owner exactly once.
+    check("batch composition", 300, |rng| {
+        let jobs = 1 + rng.below(12) as usize;
+        let ks: Vec<usize> = (0..jobs).map(|_| 1 + rng.below(40) as usize).collect();
+        let budget = 1 + rng.below(128) as usize;
+        let admitted = batcher::admit_by_budget(&ks, budget);
+        let batch_ks = &ks[..admitted];
+        let total: usize = batch_ks.iter().sum();
+
+        let max_m = 1 + rng.below(64) as usize;
+        let chunks = batcher::chunk_rows(total, max_m);
+        let covered: usize = chunks.iter().map(|(s, e)| e - s).sum();
+        ensure(covered == total, "chunks cover batch")?;
+
+        let densities: Vec<f32> = (0..total).map(|i| i as f32).collect();
+        let parts = batcher::scatter(&densities, batch_ks);
+        ensure(parts.len() == admitted, "one reply per job")?;
+        let mut expected = 0usize;
+        for (j, part) in parts.iter().enumerate() {
+            ensure(part.len() == batch_ks[j], "reply length")?;
+            for &v in part {
+                ensure(v == expected as f32, "density routed in order")?;
+                expected += 1;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_json_value_round_trip() {
+    fn gen_value(rng: &mut Pcg64, depth: usize) -> Value {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Value::Null,
+            1 => Value::Bool(rng.below(2) == 0),
+            2 => {
+                // Finite doubles, mix of integers and fractions.
+                if rng.below(2) == 0 {
+                    Value::Number(rng.below(1_000_000) as f64)
+                } else {
+                    Value::Number(rng.normal() * 1e3)
+                }
+            }
+            3 => {
+                let len = rng.below(12) as usize;
+                let s: String = (0..len)
+                    .map(|_| {
+                        let c = rng.below(128) as u8;
+                        if c.is_ascii_graphic() || c == b' ' {
+                            c as char
+                        } else {
+                            '\\'
+                        }
+                    })
+                    .collect();
+                Value::String(s)
+            }
+            4 => {
+                let len = rng.below(5) as usize;
+                Value::Array((0..len).map(|_| gen_value(rng, depth - 1)).collect())
+            }
+            _ => {
+                let len = rng.below(5) as usize;
+                let mut map = BTreeMap::new();
+                for i in 0..len {
+                    map.insert(format!("k{i}"), gen_value(rng, depth - 1));
+                }
+                Value::Object(map)
+            }
+        }
+    }
+    check("json round trip", 300, |rng| {
+        let v = gen_value(rng, 3);
+        let text = json::to_string(&v);
+        let back = json::parse(&text).map_err(|e| format!("reparse: {e}"))?;
+        let text2 = json::to_string(&back);
+        ensure(text == text2, "stable after one round trip")
+    });
+}
+
+#[test]
+fn prop_json_parser_never_panics_on_mutations() {
+    check("json fuzz", 400, |rng| {
+        let base = r#"{"op":"fit","model":"m","d":16,"points":[[1.5,-2]],"h":0.5}"#;
+        let mut bytes = base.as_bytes().to_vec();
+        let mutations = 1 + rng.below(6) as usize;
+        for _ in 0..mutations {
+            let idx = rng.below(bytes.len() as u64) as usize;
+            match rng.below(3) {
+                0 => bytes[idx] = rng.below(128) as u8,
+                1 => {
+                    bytes.remove(idx);
+                    if bytes.is_empty() {
+                        bytes.push(b'x');
+                    }
+                }
+                _ => bytes.insert(idx, rng.below(128) as u8),
+            }
+        }
+        if let Ok(text) = std::str::from_utf8(&bytes) {
+            let _ = json::parse(text); // must not panic; errors are fine
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_histogram_quantiles_bound_true_quantiles() {
+    check("histogram quantile bounds", 100, |rng| {
+        let n = 50 + rng.below(500) as usize;
+        let h = LatencyHistogram::new();
+        let mut samples: Vec<u64> = Vec::with_capacity(n);
+        for _ in 0..n {
+            let us = 1 + rng.below(1_000_000);
+            samples.push(us);
+            h.record(Duration::from_micros(us));
+        }
+        samples.sort_unstable();
+        for q in [0.5, 0.95, 0.99] {
+            let true_q = samples[((n - 1) as f64 * q) as usize];
+            let est = h.quantile(q).as_micros() as u64;
+            // Log2 buckets: estimate is the bucket's upper edge, so it
+            // must be >= the true quantile and within 2x.
+            ensure(est >= true_q, "upper bound")?;
+            ensure(est <= true_q.saturating_mul(2).max(2), "within bucket factor")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_summary_consistency() {
+    check("summary laws", 200, |rng| {
+        let n = 1 + rng.below(200) as usize;
+        let xs: Vec<f64> = (0..n).map(|_| rng.normal() * 10.0).collect();
+        let s = stats::Summary::of(&xs);
+        ensure(s.min <= s.median && s.median <= s.max, "order stats")?;
+        ensure(s.median <= s.p95 + 1e-12 && s.p95 <= s.p99 + 1e-12, "tails")?;
+        ensure(s.mean >= s.min && s.mean <= s.max, "mean bounded")?;
+        ensure(s.std >= 0.0, "nonneg std")
+    });
+}
+
+#[test]
+fn prop_power_law_fit_recovers_known_exponents() {
+    check("power law fit", 100, |rng| {
+        let c = 0.1 + rng.uniform() * 10.0;
+        let p = 0.5 + rng.uniform() * 2.5;
+        let xs: Vec<f64> = (1..8).map(|i| (i * 512) as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|&x| c * x.powf(p)).collect();
+        let (c_hat, p_hat) = stats::power_law_fit(&xs, &ys);
+        ensure((p_hat - p).abs() < 1e-6, "exponent recovered")?;
+        ensure((c_hat - c).abs() / c < 1e-6, "constant recovered")
+    });
+}
+
+#[test]
+fn prop_rng_uniform_bounds_and_below() {
+    check("rng ranges", 100, |rng| {
+        let n = 1 + rng.below(1000);
+        for _ in 0..50 {
+            let u = rng.uniform();
+            ensure((0.0..1.0).contains(&u), "uniform in [0,1)")?;
+            ensure(rng.below(n) < n, "below bound")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_registry_lru_model_based() {
+    // Model-based test: drive the registry with random insert/get/remove
+    // sequences and mirror them in a plain map + LRU list; states must
+    // agree after every operation.
+    use flash_sdkde::coordinator::registry::{FittedModel, Registry};
+    use flash_sdkde::estimator::EstimatorKind;
+    use flash_sdkde::runtime::HostTensor;
+
+    fn model(name: &str) -> FittedModel {
+        FittedModel {
+            name: name.to_string(),
+            kind: EstimatorKind::Kde,
+            variant: "flash".into(),
+            d: 1,
+            n: 2,
+            bucket_n: 4,
+            x: Arc::new(HostTensor::zeros(vec![4, 1])),
+            w: Arc::new(HostTensor::zeros(vec![4])),
+            h: 0.5,
+            h_score: 0.35,
+            fit_ms: 0.0,
+        }
+    }
+
+    check("registry lru model", 100, |rng| {
+        let cap = 1 + rng.below(4) as usize;
+        let registry = Registry::new(cap);
+        // Reference model: Vec<name> in LRU order (front = oldest).
+        let mut lru: Vec<String> = Vec::new();
+        let names = ["a", "b", "c", "d", "e", "f"];
+        for _ in 0..60 {
+            let name = names[rng.below(names.len() as u64) as usize];
+            match rng.below(3) {
+                0 => {
+                    // insert
+                    let evicted = registry.insert(model(name));
+                    if let Some(pos) = lru.iter().position(|n| n == name) {
+                        lru.remove(pos);
+                        ensure(evicted.is_none(), "replace never evicts")?;
+                    } else if lru.len() >= cap {
+                        let victim = lru.remove(0);
+                        ensure(
+                            evicted.as_deref() == Some(victim.as_str()),
+                            "evicts the LRU entry",
+                        )?;
+                    } else {
+                        ensure(evicted.is_none(), "no eviction below cap")?;
+                    }
+                    lru.push(name.to_string());
+                }
+                1 => {
+                    // get (bumps LRU)
+                    let got = registry.get(name).is_some();
+                    let pos = lru.iter().position(|n| n == name);
+                    ensure(got == pos.is_some(), "get presence agrees")?;
+                    if let Some(p) = pos {
+                        let n = lru.remove(p);
+                        lru.push(n);
+                    }
+                }
+                _ => {
+                    // remove
+                    let removed = registry.remove(name);
+                    let pos = lru.iter().position(|n| n == name);
+                    ensure(removed == pos.is_some(), "remove presence agrees")?;
+                    if let Some(p) = pos {
+                        lru.remove(p);
+                    }
+                }
+            }
+            ensure(registry.len() == lru.len(), "sizes agree")?;
+            let mut want = lru.clone();
+            want.sort();
+            ensure(registry.names() == want, "name sets agree")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_config_json_round_trip_fuzz() {
+    use flash_sdkde::config::Config;
+    check("config round trip", 100, |rng| {
+        let mut cfg = Config::default();
+        cfg.port = 1 + rng.below(65000) as u16;
+        cfg.queue_depth = 1 + rng.below(10_000) as usize;
+        cfg.batch_wait_ms = rng.below(100);
+        cfg.batch_max_queries = 1 + rng.below(4096) as usize;
+        cfg.registry_capacity = 1 + rng.below(512) as usize;
+        cfg.engine_workers = 1 + rng.below(8) as usize;
+        cfg.warm_dims = (0..rng.below(4)).map(|_| rng.below(64) as usize).collect();
+        let text = json::to_string(&cfg.to_json());
+        let back = Config::from_json(&json::parse(&text).map_err(|e| e.to_string())?)
+            .map_err(|e| e.to_string())?;
+        ensure(back == cfg, "config round trips")
+    });
+}
