@@ -6,12 +6,16 @@
 //! SD-KDE's bias correction matters here — vanilla KDE oversmooths the
 //! density precisely in the tails where the detection threshold lives.
 //!
+//! Scores are served in log space (`QuerySpec::log_density`, the natural
+//! scale for thresholding 16-D densities that underflow f32 fast), one of
+//! the three output modes of the unified query path.
+//!
 //! ```bash
 //! make artifacts && cargo run --release --example anomaly_detection
 //! ```
 
 use flash_sdkde::config::Config;
-use flash_sdkde::coordinator::Coordinator;
+use flash_sdkde::coordinator::{Coordinator, FitSpec, QuerySpec};
 use flash_sdkde::data::mixture::by_dim;
 use flash_sdkde::estimator::EstimatorKind;
 use flash_sdkde::util::rng::Pcg64;
@@ -30,18 +34,13 @@ fn main() -> anyhow::Result<()> {
     // "Normal" traffic: the benchmark mixture.
     let n = 1500;
     let train = mix.sample(n, &mut rng);
-    let info = coordinator.fit(
-        "normal-traffic",
-        EstimatorKind::SdKde,
-        d,
-        train,
-        None,
-        None,
-        None,
-    )?;
+    let baseline =
+        coordinator.fit("normal-traffic", train, &FitSpec::new(EstimatorKind::SdKde, d))?;
     println!(
         "baseline model: n={} h={:.4} ({}ms fit)",
-        info.n, info.h, info.fit_ms as u64
+        baseline.n(),
+        baseline.h(),
+        baseline.info().fit_ms as u64
     );
 
     // Test stream: 48 normal points + 12 anomalies (far off-manifold).
@@ -60,25 +59,25 @@ fn main() -> anyhow::Result<()> {
         .chain(std::iter::repeat(true).take(12))
         .collect();
 
-    let result = coordinator.eval("normal-traffic", stream)?;
+    let result = coordinator.query(&baseline, QuerySpec::log_density(stream))?;
 
     // Threshold at the 10th percentile of the *normal* calibration scores.
-    let mut calib: Vec<f64> = result.densities[..48]
+    let mut calib: Vec<f64> = result.values[..48]
         .iter()
         .map(|&v| v as f64)
         .collect();
     calib.sort_by(|a, b| a.partial_cmp(b).expect("finite"));
     let threshold = calib[4]; // ~10th percentile of 48
-    println!("threshold (p10 of normal scores): {threshold:.3e}\n");
+    println!("threshold (p10 of normal log-scores): {threshold:.2}\n");
 
-    println!("  idx  density      verdict    truth");
+    println!("  idx  log p̂      verdict    truth");
     let mut tp = 0;
     let mut fp = 0;
     let mut fn_ = 0;
-    for (i, (&dens, &is_anomaly)) in
-        result.densities.iter().zip(&labels).enumerate()
+    for (i, (&score, &is_anomaly)) in
+        result.values.iter().zip(&labels).enumerate()
     {
-        let flagged = (dens as f64) < threshold;
+        let flagged = (score as f64) < threshold;
         match (flagged, is_anomaly) {
             (true, true) => tp += 1,
             (true, false) => fp += 1,
@@ -87,7 +86,7 @@ fn main() -> anyhow::Result<()> {
         }
         if flagged || is_anomaly {
             println!(
-                "  {i:>3}  {dens:.3e}  {}  {}",
+                "  {i:>3}  {score:>8.2}  {}  {}",
                 if flagged { "ANOMALY " } else { "normal  " },
                 if is_anomaly { "anomaly" } else { "normal" }
             );

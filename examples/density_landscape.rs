@@ -10,7 +10,7 @@
 //! ```
 
 use flash_sdkde::config::Config;
-use flash_sdkde::coordinator::Coordinator;
+use flash_sdkde::coordinator::{Coordinator, FitSpec};
 use flash_sdkde::data::mixture::mix1d;
 use flash_sdkde::estimator::EstimatorKind;
 use flash_sdkde::util::rng::Pcg64;
@@ -47,19 +47,24 @@ fn main() -> anyhow::Result<()> {
     // (The SD-rate rule h ~ n^{-1/(d+8)} pays off asymptotically, but at
     // n=900 on a sharply trimodal density the leading-order correction
     // can't recover from that much smoothing — see EXPERIMENTS.md.)
-    let info = coordinator.fit("kde", EstimatorKind::Kde, 1, train.clone(), None, None, None)?;
-    coordinator.fit("sdkde", EstimatorKind::SdKde, 1, train, Some(info.h), None, None)?;
+    let kde_model =
+        coordinator.fit("kde", train.clone(), &FitSpec::new(EstimatorKind::Kde, 1))?;
+    let sd_model = coordinator.fit(
+        "sdkde",
+        train,
+        &FitSpec::new(EstimatorKind::SdKde, 1).bandwidth(kde_model.h()),
+    )?;
 
     // Evaluate on a grid.
     let grid: Vec<f32> = (0..COLS)
         .map(|i| LO + (HI - LO) * i as f32 / (COLS - 1) as f32)
         .collect();
-    let kde = coordinator.eval("kde", grid.clone())?;
-    let sdkde = coordinator.eval("sdkde", grid.clone())?;
+    let kde = coordinator.eval(&kde_model, grid.clone())?;
+    let sdkde = coordinator.eval(&sd_model, grid.clone())?;
     let truth: Vec<f64> = grid.iter().map(|&x| mix.pdf1(&[x])).collect();
 
-    let kde_v: Vec<f64> = kde.densities.iter().map(|&v| v as f64).collect();
-    let sd_v: Vec<f64> = sdkde.densities.iter().map(|&v| v as f64).collect();
+    let kde_v: Vec<f64> = kde.values.iter().map(|&v| v as f64).collect();
+    let sd_v: Vec<f64> = sdkde.values.iter().map(|&v| v as f64).collect();
     let peak = truth
         .iter()
         .chain(&kde_v)

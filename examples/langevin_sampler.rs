@@ -1,23 +1,25 @@
 //! Extension example: Langevin sampling from a *fitted* density.
 //!
 //! The score is the paper's central object; this example shows the served
-//! gradient endpoint (`Coordinator::grad`, the streaming score kernel at
+//! gradient mode (`QuerySpec::grad`, the streaming score kernel at
 //! arbitrary query points) powering unadjusted Langevin dynamics
 //!
 //!     y_{t+1} = y_t + (ε/2) ∇log p̂(y_t) + √ε ξ_t,   ξ_t ~ N(0, I)
 //!
-//! over a KDE fitted to the 1-D trimodal benchmark mixture.  After burn-in
-//! the chain's histogram must match the *fitted density itself* (served by
-//! the eval endpoint) — the two endpoints cross-validate: grad-driven
-//! samples must reproduce eval densities, and score errors would compound
-//! over hundreds of steps.
+//! over a KDE fitted to the 1-D trimodal benchmark mixture.  Gradients
+//! flow through the same bounded queue and dynamic batcher as densities,
+//! so each request reports its co-batch size and shows up in the server
+//! metrics.  After burn-in the chain's histogram must match the *fitted
+//! density itself* (served by the density mode) — the two modes
+//! cross-validate: grad-driven samples must reproduce eval densities, and
+//! score errors would compound over hundreds of steps.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example langevin_sampler
 //! ```
 
 use flash_sdkde::config::Config;
-use flash_sdkde::coordinator::Coordinator;
+use flash_sdkde::coordinator::{Coordinator, FitSpec};
 use flash_sdkde::data::mixture::mix1d;
 use flash_sdkde::estimator::EstimatorKind;
 use flash_sdkde::util::rng::Pcg64;
@@ -34,10 +36,8 @@ fn main() -> anyhow::Result<()> {
     let mut rng = Pcg64::seeded(17);
     let n = 1000;
     let train = mix.sample(n, &mut rng);
-    let info = coordinator.fit(
-        "target", EstimatorKind::Kde, 1, train, None, None, None,
-    )?;
-    println!("fitted target density: n={} h={:.4}", info.n, info.h);
+    let target = coordinator.fit("target", train, &FitSpec::new(EstimatorKind::Kde, 1))?;
+    println!("fitted target density: n={} h={:.4}", target.n(), target.h());
 
     // Langevin dynamics: a population of chains stepped in lock-step so
     // each iteration is ONE batched grad request (the serving win).
@@ -50,7 +50,7 @@ fn main() -> anyhow::Result<()> {
     let mut y: Vec<f32> = mix.sample(chains, &mut rng);
     let mut samples: Vec<f32> = Vec::new();
     for t in 0..steps {
-        let grads = coordinator.grad("target", y.clone())?;
+        let grads = coordinator.grad(&target, y.clone())?.values;
         for (yi, g) in y.iter_mut().zip(&grads) {
             *yi += 0.5 * eps * g + (eps.sqrt()) * rng.normal() as f32;
         }
@@ -58,7 +58,13 @@ fn main() -> anyhow::Result<()> {
             samples.extend_from_slice(&y);
         }
     }
-    println!("collected {} samples from {chains} chains", samples.len());
+    println!(
+        "collected {} samples from {chains} chains \
+         ({} grad requests through the batcher, mean batch {:.2})",
+        samples.len(),
+        steps,
+        coordinator.metrics().mean_batch_size()
+    );
 
     // Compare the chain histogram against the *fitted* density served by
     // the eval endpoint (the chain's actual stationary target, up to the
@@ -77,7 +83,7 @@ fn main() -> anyhow::Result<()> {
     }
     let centers: Vec<f32> =
         (0..bins).map(|b| lo + (b as f32 + 0.5) * width).collect();
-    let fitted = coordinator.eval("target", centers.clone())?.densities;
+    let fitted = coordinator.eval(&target, centers.clone())?.values;
 
     println!("\n  bin center   chain density   fitted p̂   true mixture");
     let mut tv = 0.0f64; // total-variation distance on the grid

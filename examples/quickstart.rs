@@ -5,11 +5,14 @@
 //! cargo run --release --example quickstart
 //! ```
 //!
-//! Walks the full public API surface: config -> coordinator -> fit -> eval,
-//! then cross-checks the served densities against the native Rust oracle.
+//! Walks the full public API surface: config -> coordinator ->
+//! `FitSpec` -> `ModelHandle` -> eval, then cross-checks the served
+//! densities against the native Rust oracle.  The handle carries every
+//! resolved fit parameter — including the score bandwidth — so nothing
+//! has to be re-derived by hand.
 
 use flash_sdkde::config::Config;
-use flash_sdkde::coordinator::Coordinator;
+use flash_sdkde::coordinator::{Coordinator, FitSpec};
 use flash_sdkde::data::mixture::by_dim;
 use flash_sdkde::estimator::{native, EstimatorKind};
 use flash_sdkde::util::rng::Pcg64;
@@ -32,27 +35,27 @@ fn main() -> anyhow::Result<()> {
 
     // 2. Fit: SD-KDE debiases the samples with the empirical score
     //    (the paper's expensive pass, served by the flash fit artifact).
-    let info = coordinator.fit(
-        "quickstart",
-        EstimatorKind::SdKde,
-        d,
-        train.clone(),
-        None, // bandwidth: SD-KDE rate rule
-        None, // score bandwidth: h/sqrt(2)
-        None, // variant: config default (flash)
-    )?;
+    //    No overrides: bandwidths resolve to the SD-rate rule and
+    //    h / sqrt(2), the variant to the config default (flash).
+    let handle =
+        coordinator.fit("quickstart", train.clone(), &FitSpec::new(EstimatorKind::SdKde, d))?;
     println!(
-        "fitted model {:?}: n={} bucket={} h={:.4} in {:.1}ms",
-        info.model, info.n, info.bucket_n, info.h, info.fit_ms
+        "fitted model {:?}: n={} bucket={} h={:.4} h_score={:.4} in {:.1}ms",
+        handle.name(),
+        handle.n(),
+        handle.bucket_n(),
+        handle.h(),
+        handle.h_score(),
+        handle.info().fit_ms
     );
 
     // 3. Evaluate densities at fresh query points.
     let k = 16;
     let queries = mix.sample(k, &mut rng);
-    let result = coordinator.eval("quickstart", queries.clone())?;
+    let result = coordinator.eval(&handle, queries.clone())?;
     println!("\n  density      true pdf");
     let truth = mix.pdf(&queries);
-    for (est, tru) in result.densities.iter().zip(&truth) {
+    for (est, tru) in result.values.iter().zip(&truth) {
         println!("  {est:.6e}  {tru:.6e}");
     }
     println!(
@@ -60,12 +63,12 @@ fn main() -> anyhow::Result<()> {
         result.exec_ms, result.queue_ms, result.batch_size
     );
 
-    // 4. Cross-check against the native oracle (same formulas, f64).
+    // 4. Cross-check against the native oracle (same formulas, f64),
+    //    using the resolved score bandwidth straight off the handle.
     let w = vec![1.0f32; n];
-    let h_s = info.h / std::f64::consts::SQRT_2;
-    let oracle = native::sdkde(&train, &w, &queries, d, info.h, h_s);
+    let oracle = native::sdkde(&train, &w, &queries, d, handle.h(), handle.h_score());
     let max_rel = result
-        .densities
+        .values
         .iter()
         .zip(&oracle)
         .map(|(&a, &b)| ((a as f64 - b) / b).abs())

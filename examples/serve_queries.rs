@@ -1,10 +1,11 @@
 //! End-to-end serving driver (the DESIGN.md §7 E2E experiment).
 //!
 //! Boots the full stack — coordinator, dispatcher, TCP server — fits an
-//! SD-KDE model over the 16-D benchmark mixture, then drives an open-loop
-//! Poisson workload from concurrent TCP clients and reports throughput,
-//! latency percentiles, batching behaviour and numerical correctness
-//! against the native oracle.  Results are recorded in EXPERIMENTS.md §E2E.
+//! SD-KDE model over the 16-D benchmark mixture through the typed
+//! `FitSpec` wire path, then drives an open-loop Poisson workload from
+//! concurrent TCP clients and reports throughput, latency percentiles,
+//! batching behaviour and numerical correctness against the native
+//! oracle.  Results are recorded in EXPERIMENTS.md §E2E.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example serve_queries
@@ -15,7 +16,7 @@ use std::time::{Duration, Instant};
 
 use flash_sdkde::config::Config;
 use flash_sdkde::coordinator::server::{Client, Server};
-use flash_sdkde::coordinator::Coordinator;
+use flash_sdkde::coordinator::{Coordinator, FitSpec};
 use flash_sdkde::data::mixture::by_dim;
 use flash_sdkde::data::workload::{generate, TraceSpec};
 use flash_sdkde::estimator::{native, EstimatorKind};
@@ -44,22 +45,19 @@ fn main() -> anyhow::Result<()> {
     let train = mix.sample(n_train, &mut rng);
 
     let mut admin = Client::connect(addr)?;
-    admin.ping()?;
+    println!("negotiated protocol v{}", admin.protocol_version());
     let t0 = Instant::now();
     let info = admin.fit(
         "serving-demo",
-        EstimatorKind::SdKde,
-        d,
         train.clone(),
-        None,
-        None,
-        None,
+        &FitSpec::new(EstimatorKind::SdKde, d),
     )?;
     println!(
-        "fit: n={} bucket={} h={:.4} ({:.0}ms over TCP, {:.0}ms total)",
+        "fit: n={} bucket={} h={:.4} h_score={:.4} ({:.0}ms over TCP, {:.0}ms total)",
         info.n,
         info.bucket_n,
         info.h,
+        info.h_score,
         info.fit_ms,
         t0.elapsed().as_secs_f64() * 1e3
     );
@@ -83,10 +81,10 @@ fn main() -> anyhow::Result<()> {
     let errors: Arc<Mutex<Vec<f64>>> = Arc::new(Mutex::new(Vec::new()));
 
     // Precompute the debiased training set once so the per-request oracle
-    // check is a cheap O(n) KDE sweep, not an O(n^2) score pass.
+    // check is a cheap O(n) KDE sweep, not an O(n^2) score pass.  The
+    // resolved score bandwidth comes straight off the FitOk reply.
     let w_all = vec![1.0f32; n_train];
-    let h_s = info.h / std::f64::consts::SQRT_2;
-    let x_sd = Arc::new(native::debias(&train, &w_all, d, info.h, h_s));
+    let x_sd = Arc::new(native::debias(&train, &w_all, d, info.h, info.h_score));
 
     // Each client handles trace indices i ≡ c (mod clients), honouring
     // the shared arrival clock (open loop).
@@ -119,7 +117,7 @@ fn main() -> anyhow::Result<()> {
                     // KDE over the precomputed debiased set == SD-KDE.
                     let oracle =
                         native::kde(&x_sd, &w, &req.points[..16], 16, h)[0];
-                    let rel = ((res.densities[0] as f64 - oracle) / oracle).abs();
+                    let rel = ((res.values[0] as f64 - oracle) / oracle).abs();
                     errors.lock().expect("mutex").push(rel);
                 }
                 Ok(())

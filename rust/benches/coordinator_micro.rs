@@ -17,7 +17,7 @@ use flash_sdkde::bench_harness::{black_box, Table};
 use flash_sdkde::config::Config;
 use flash_sdkde::coordinator::metrics::LatencyHistogram;
 use flash_sdkde::coordinator::scheduler::BoundedQueue;
-use flash_sdkde::coordinator::Coordinator;
+use flash_sdkde::coordinator::{Coordinator, FitSpec};
 use flash_sdkde::data::mixture::by_dim;
 use flash_sdkde::estimator::EstimatorKind;
 use flash_sdkde::util::rng::Pcg64;
@@ -63,23 +63,20 @@ fn bench_eval_path(table: &mut Table, artifacts: &str) -> anyhow::Result<()> {
     let mix = by_dim(16);
     let mut rng = Pcg64::seeded(1);
     let n = 400;
-    coordinator.fit(
+    let model = coordinator.fit(
         "micro",
-        EstimatorKind::SdKde,
-        16,
         mix.sample(n, &mut rng),
-        None,
-        None,
-        None,
+        &FitSpec::new(EstimatorKind::SdKde, 16),
     )?;
 
-    // Single-client eval latency (k=8 queries), post-warmup.
+    // Single-client eval latency (k=8 queries), post-warmup.  The handle
+    // skips the registry lookup — this measures the pure queue+batch path.
     let queries = mix.sample(8, &mut rng);
-    coordinator.eval("micro", queries.clone())?;
+    coordinator.eval(&model, queries.clone())?;
     let iters = 50;
     let start = Instant::now();
     for _ in 0..iters {
-        black_box(coordinator.eval("micro", queries.clone())?);
+        black_box(coordinator.eval(&model, queries.clone())?);
     }
     let per_eval_ms = start.elapsed().as_secs_f64() * 1e3 / iters as f64;
     table.row(vec![
@@ -96,11 +93,12 @@ fn bench_eval_path(table: &mut Table, artifacts: &str) -> anyhow::Result<()> {
         .map(|c| {
             let coord = Arc::clone(&coordinator);
             let mix = mix.clone();
+            let model = model.clone();
             std::thread::spawn(move || {
                 let mut rng = Pcg64::new(99, c as u64);
                 for _ in 0..per_client {
                     let q = mix.sample(8, &mut rng);
-                    coord.eval("micro", q).expect("eval");
+                    coord.eval(&model, q).expect("eval");
                 }
             })
         })

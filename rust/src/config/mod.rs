@@ -6,6 +6,7 @@
 
 use std::path::{Path, PathBuf};
 
+use crate::estimator::Variant;
 use crate::util::json::{self, Value};
 
 /// Everything the server/engine needs to run.
@@ -24,8 +25,10 @@ pub struct Config {
     pub batch_wait_ms: u64,
     /// Dynamic batcher: preferred query bucket (must exist in artifacts).
     pub batch_max_queries: usize,
-    /// Default evaluation pipeline variant served ("flash", "gemm", ...).
-    pub default_variant: String,
+    /// Default evaluation pipeline variant served when a `FitSpec` does
+    /// not pin one (typed end-to-end; the JSON file spells it "flash",
+    /// "gemm", "stream" or "naive").
+    pub default_variant: Variant,
     /// Maximum number of fitted models kept resident.
     pub registry_capacity: usize,
     /// Engine worker threads (each owns a PJRT client).
@@ -43,7 +46,7 @@ impl Default for Config {
             queue_depth: 256,
             batch_wait_ms: 2,
             batch_max_queries: 256,
-            default_variant: "flash".to_string(),
+            default_variant: Variant::Flash,
             registry_capacity: 64,
             engine_workers: 1,
             warm_dims: vec![],
@@ -103,8 +106,9 @@ impl Config {
                 x.as_usize().ok_or("batch_max_queries must be an integer")?;
         }
         if let Some(x) = obj.get("default_variant") {
-            cfg.default_variant =
-                x.as_str().ok_or("default_variant must be a string")?.to_string();
+            let name = x.as_str().ok_or("default_variant must be a string")?;
+            cfg.default_variant = Variant::parse(name)
+                .ok_or_else(|| format!("unknown default_variant {name:?}"))?;
         }
         if let Some(x) = obj.get("registry_capacity") {
             cfg.registry_capacity =
@@ -139,12 +143,12 @@ impl Config {
         if self.registry_capacity == 0 {
             return Err("registry_capacity must be >= 1".to_string());
         }
-        const VARIANTS: [&str; 4] = ["flash", "gemm", "stream", "naive"];
-        if !VARIANTS.contains(&self.default_variant.as_str()) {
-            return Err(format!(
-                "default_variant must be one of {VARIANTS:?}, got {:?}",
-                self.default_variant
-            ));
+        if self.default_variant == Variant::NonFused {
+            return Err(
+                "default_variant nonfused is laplace-only; pick flash, gemm, \
+                 stream or naive"
+                    .to_string(),
+            );
         }
         Ok(())
     }
@@ -186,7 +190,7 @@ mod tests {
         .unwrap();
         let cfg = Config::from_json(&v).unwrap();
         assert_eq!(cfg.port, 9000);
-        assert_eq!(cfg.default_variant, "gemm");
+        assert_eq!(cfg.default_variant, Variant::Gemm);
         assert_eq!(cfg.warm_dims, vec![1, 16]);
         // Untouched fields keep defaults.
         assert_eq!(cfg.queue_depth, Config::default().queue_depth);

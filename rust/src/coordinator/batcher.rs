@@ -1,11 +1,12 @@
 //! Dynamic batching policy: pure, property-testable planning logic.
 //!
-//! The dispatcher coalesces eval requests for the *same fitted model* into
-//! one artifact execution (queries are concatenated along the query axis —
-//! exactly the paper's n_test dimension, which is embarrassingly parallel).
-//! This module owns the arithmetic: query budgets, row chunking against
-//! the available m-buckets, and scatter of batched densities back to the
-//! per-request replies.
+//! The dispatcher coalesces queries for the *same fitted model and kernel*
+//! — densities and gradients alike — into one artifact execution (queries
+//! are concatenated along the query axis — exactly the paper's n_test
+//! dimension, which is embarrassingly parallel).  This module owns the
+//! arithmetic: query budgets, row chunking against the available
+//! m-buckets, and scatter of batched outputs back to the per-request
+//! replies (one value per row for densities, `d` per row for gradients).
 
 /// Greedy query-budget admission: given per-request query counts in FIFO
 /// order, return how many leading requests fit within `budget` rows.
@@ -55,17 +56,25 @@ pub fn pick_m_bucket(m_buckets: &[usize], rows: usize) -> Option<usize> {
         .or_else(|| m_buckets.iter().copied().max())
 }
 
-/// Scatter a concatenated density vector back to per-request slices.
-pub fn scatter(densities: &[f32], ks: &[usize]) -> Vec<Vec<f32>> {
-    let total: usize = ks.iter().sum();
-    assert_eq!(densities.len(), total, "density length mismatch");
-    let mut out = Vec::with_capacity(ks.len());
+/// Scatter a concatenated output vector back to per-request slices.
+pub fn scatter(values: &[f32], lens: &[usize]) -> Vec<Vec<f32>> {
+    let total: usize = lens.iter().sum();
+    assert_eq!(values.len(), total, "output length mismatch");
+    let mut out = Vec::with_capacity(lens.len());
     let mut offset = 0;
-    for &k in ks {
-        out.push(densities[offset..offset + k].to_vec());
-        offset += k;
+    for &len in lens {
+        out.push(values[offset..offset + len].to_vec());
+        offset += len;
     }
     out
+}
+
+/// Scatter for a fixed output width per query row (`width = 1` for
+/// densities, `width = d` for gradients): request `i` with `ks[i]` rows
+/// gets back `ks[i] * width` contiguous values.
+pub fn scatter_rows(values: &[f32], ks: &[usize], width: usize) -> Vec<Vec<f32>> {
+    let lens: Vec<usize> = ks.iter().map(|&k| k * width).collect();
+    scatter(values, &lens)
 }
 
 #[cfg(test)]
@@ -106,6 +115,18 @@ mod tests {
         assert_eq!(parts[0], vec![0.0, 1.0, 2.0]);
         assert_eq!(parts[1], vec![3.0]);
         assert_eq!(parts[2].len(), 6);
+    }
+
+    #[test]
+    fn scatter_rows_scales_by_width() {
+        // Two requests of 2 and 1 query rows in a d=3 grad batch.
+        let vals: Vec<f32> = (0..9).map(|i| i as f32).collect();
+        let parts = scatter_rows(&vals, &[2, 1], 3);
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[0], (0..6).map(|i| i as f32).collect::<Vec<_>>());
+        assert_eq!(parts[1], vec![6.0, 7.0, 8.0]);
+        // Width 1 degenerates to plain scatter.
+        assert_eq!(scatter_rows(&vals, &[9], 1), scatter(&vals, &[9]));
     }
 
     // ---- property tests -------------------------------------------------

@@ -103,6 +103,9 @@ impl LatencyHistogram {
 pub struct Metrics {
     pub fit_requests: AtomicU64,
     pub eval_requests: AtomicU64,
+    /// Score-kernel queries (`OutputMode::Grad`) — routed through the same
+    /// queue and batcher as densities, counted separately here.
+    pub grad_requests: AtomicU64,
     pub eval_points: AtomicU64,
     pub errors: AtomicU64,
     /// Requests shed by queue backpressure.
@@ -141,6 +144,7 @@ impl Metrics {
         Value::object(vec![
             ("fit_requests", Value::from(self.fit_requests.load(Ordering::Relaxed))),
             ("eval_requests", Value::from(self.eval_requests.load(Ordering::Relaxed))),
+            ("grad_requests", Value::from(self.grad_requests.load(Ordering::Relaxed))),
             ("eval_points", Value::from(self.eval_points.load(Ordering::Relaxed))),
             ("errors", Value::from(self.errors.load(Ordering::Relaxed))),
             ("rejected", Value::from(self.rejected.load(Ordering::Relaxed))),
@@ -214,8 +218,8 @@ mod tests {
         let m = Metrics::new();
         m.e2e_latency.record(Duration::from_millis(5));
         let j = m.to_json();
-        for k in ["fit_requests", "eval_requests", "rejected", "batches",
-                  "queue_wait", "exec_latency", "e2e_latency"] {
+        for k in ["fit_requests", "eval_requests", "grad_requests", "rejected",
+                  "batches", "queue_wait", "exec_latency", "e2e_latency"] {
             assert!(j.get(k).is_some(), "missing {k}");
         }
         assert!(j.get("e2e_latency").unwrap().get("p99_us").is_some());

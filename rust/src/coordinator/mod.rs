@@ -3,28 +3,40 @@
 //! Request flow (DESIGN.md §1):
 //!
 //! ```text
-//! client ── fit ──────────────► Coordinator::fit ──► Engine (score+shift)
+//! client ── fit(FitSpec) ─────► Coordinator::fit ──► Engine (score+shift)
 //!                                  │                     │
 //!                                  └──► Registry ◄───────┘ (debiased set)
+//!                                            │
+//!                                            ▼
+//! client ── ModelHandle ◄──────────────  resolved h, h_score, bucket
 //!
-//! client ── eval ─► BoundedQueue ─► dispatcher thread ─► dynamic batch
-//!     ▲   (backpressure)              (same-model coalescing)  │
-//!     └────────────── densities ◄── scatter ◄── Engine ◄───────┘
+//! client ── query(QuerySpec) ─► BoundedQueue ─► dispatcher ─► dynamic batch
+//!     ▲      (backpressure)          (same-model, same-kernel    │
+//!     │                               coalescing)                │
+//!     └──── values (density | log-density | grad) ◄── Engine ◄──┘
 //! ```
 //!
+//! The public surface is typed end-to-end (DESIGN.md §2): [`FitSpec`]
+//! replaces positional fit arguments, [`QuerySpec`] unifies eval and grad
+//! under one [`OutputMode`], and [`ModelHandle`] carries the `Arc` of the
+//! fitted model so the hot path never does a stringly-typed registry
+//! lookup.  Every output mode — densities *and* gradients — flows through
+//! the same bounded queue, dynamic batcher and metrics.
+//!
 //! The fit pass is the paper's expensive O(n²d) score computation
-//! ("prefill"); eval batches are O(n·m·d) KDE sweeps ("decode").  Fitted
+//! ("prefill"); query batches are O(n·m·d) sweeps ("decode").  Fitted
 //! models live in a bounded LRU registry padded to their artifact bucket,
-//! so the eval hot path does no padding or copying of training data.
+//! so the query hot path does no padding or copying of training data.
 
 pub mod batcher;
 pub mod metrics;
 pub mod protocol;
 pub mod registry;
+pub mod request;
 pub mod scheduler;
 pub mod server;
 
-use std::sync::mpsc::{channel, Sender};
+use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -32,7 +44,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::config::Config;
-use crate::estimator::{bandwidth, EstimatorKind};
+use crate::estimator::{EstimatorKind, Variant};
 use crate::runtime::{ArtifactEntry, Engine, HostTensor, Manifest};
 use crate::util::json::Value;
 use crate::{log_debug, log_info, log_warn};
@@ -41,34 +53,67 @@ use metrics::Metrics;
 use registry::{FittedModel, Registry};
 use scheduler::{BoundedQueue, PopTimeout, PushError};
 
-/// Result of an eval request.
+pub use request::{FitSpec, ModelHandle, OutputMode, QueryKernel, QuerySpec};
+
+/// Result of a query request (any [`OutputMode`]).
 #[derive(Debug, Clone, PartialEq)]
-pub struct EvalResult {
-    pub densities: Vec<f32>,
+pub struct QueryResult {
+    /// Flat output values: `[k]` for `Density`/`LogDensity`, row-major
+    /// `[k, d]` for `Grad`.
+    pub values: Vec<f32>,
+    pub mode: OutputMode,
     pub queue_ms: f64,
     pub exec_ms: f64,
-    /// Number of requests co-batched into the execution that served this one.
+    /// Number of requests co-batched into the execution that served this
+    /// one (gradients report it exactly like densities).
     pub batch_size: usize,
 }
 
-/// Result of a fit request.
+/// Result of a fit request — the resolved parameters the wire `FitOk`
+/// carries.  `h_score` is exposed so callers never re-derive `h / sqrt(2)`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct FitInfo {
     pub model: String,
+    pub kind: EstimatorKind,
+    pub variant: Variant,
     pub n: usize,
     pub d: usize,
     pub h: f64,
+    pub h_score: f64,
     pub bucket_n: usize,
     pub fit_ms: f64,
 }
 
-/// One queued eval request.
-struct EvalJob {
+/// One queued query (eval or grad — same queue, same batcher).
+struct QueryJob {
     model: Arc<FittedModel>,
     points: Vec<f32>,
     k: usize,
+    mode: OutputMode,
     enqueued: Instant,
-    reply: Sender<Result<EvalResult, String>>,
+    reply: Sender<Result<QueryResult, String>>,
+}
+
+/// In-flight query: returned by [`Coordinator::submit`] so clients can
+/// pipeline requests; [`QueryTicket::wait`] blocks for the reply.
+pub struct QueryTicket {
+    rx: Receiver<Result<QueryResult, String>>,
+    metrics: Arc<Metrics>,
+}
+
+impl QueryTicket {
+    /// Block until the dispatcher serves the request.
+    pub fn wait(self) -> Result<QueryResult> {
+        let result = self
+            .rx
+            .recv()
+            .map_err(|_| anyhow!("dispatcher dropped request"))?
+            .map_err(|e| anyhow!(e))?;
+        self.metrics.e2e_latency.record(Duration::from_secs_f64(
+            (result.queue_ms + result.exec_ms) / 1e3,
+        ));
+        Ok(result)
+    }
 }
 
 /// The coordinator: owns the engine, registry, queue and dispatcher.
@@ -77,7 +122,7 @@ pub struct Coordinator {
     engine: Engine,
     registry: Arc<Registry>,
     metrics: Arc<Metrics>,
-    queue: Arc<BoundedQueue<EvalJob>>,
+    queue: Arc<BoundedQueue<QueryJob>>,
     dispatcher: Option<JoinHandle<()>>,
 }
 
@@ -148,21 +193,20 @@ impl Coordinator {
         self.engine.manifest()
     }
 
-    /// Fit a model: compute bandwidths, pad to the train bucket, run the
-    /// score+shift pass for SD-KDE, store in the registry.
-    #[allow(clippy::too_many_arguments)]
+    /// Fit a model from row-major `[n, spec.d]` training points: resolve
+    /// bandwidths, pad to the train bucket, run the score+shift pass for
+    /// SD-KDE, store in the registry.  Returns a [`ModelHandle`] carrying
+    /// the resolved parameters and the resident model.
     pub fn fit(
         &self,
         name: &str,
-        kind: EstimatorKind,
-        d: usize,
         points: Vec<f32>,
-        h_override: Option<f64>,
-        h_score_override: Option<f64>,
-        variant_override: Option<&str>,
-    ) -> Result<FitInfo> {
+        spec: &FitSpec,
+    ) -> Result<ModelHandle> {
         Metrics::inc(&self.metrics.fit_requests);
         let start = Instant::now();
+        let d = spec.d;
+        let kind = spec.estimator;
         if d == 0 || points.is_empty() || points.len() % d != 0 {
             bail!("points must be a non-empty [n, {d}] row-major buffer");
         }
@@ -170,9 +214,7 @@ impl Coordinator {
         if n < 2 {
             bail!("need at least 2 training points, got {n}");
         }
-        let variant = variant_override
-            .unwrap_or(&self.cfg.default_variant)
-            .to_string();
+        let variant = spec.resolve_variant(self.cfg.default_variant);
 
         // The train bucket must exist for the eval pipeline (and the fit
         // pipeline too, for SD-KDE).  Checked before bandwidth selection so
@@ -180,13 +222,13 @@ impl Coordinator {
         let manifest = self.engine.manifest();
         let eval_pipeline = kind.eval_pipeline();
         let mut ns: Vec<usize> = manifest
-            .buckets(eval_pipeline, &variant, d)
+            .buckets(eval_pipeline, variant.as_str(), d)
             .iter()
             .map(|&(bn, _)| bn)
             .collect();
         if kind.needs_fit() {
             let fit_ns: Vec<usize> = manifest
-                .buckets("sdkde_fit", &variant, d)
+                .buckets("sdkde_fit", variant.as_str(), d)
                 .iter()
                 .map(|&(bn, _)| bn)
                 .collect();
@@ -201,18 +243,15 @@ impl Coordinator {
             )
         })?;
 
-        // Bandwidths: rule-of-thumb unless overridden.
-        let h = match h_override {
-            Some(h) => h,
-            None => match kind {
-                EstimatorKind::SdKde => bandwidth::sdkde_rate(&points, n, d),
-                _ => bandwidth::silverman(&points, n, d),
-            },
-        };
+        // Bandwidths: rule-of-thumb unless overridden (FitSpec resolution).
+        let h = spec.resolve_h(&points, n);
         if !(h > 0.0) {
             bail!("bandwidth must be positive (got {h}; degenerate data?)");
         }
-        let h_score = h_score_override.unwrap_or_else(|| bandwidth::score_bandwidth(h));
+        let h_score = spec.resolve_h_score(h);
+        if !(h_score > 0.0) {
+            bail!("score bandwidth must be positive (got {h_score})");
+        }
 
         // Pad to the bucket.
         let x = HostTensor::matrix(n, d, points)?.pad_rows(bucket_n, 0.0)?;
@@ -225,7 +264,7 @@ impl Coordinator {
         // SD-KDE: run the score+shift artifact; others store raw samples.
         let x_fitted = if kind.needs_fit() {
             let entry = manifest
-                .select_bucket("sdkde_fit", &variant, d, bucket_n, 0)
+                .select_bucket("sdkde_fit", variant.as_str(), d, bucket_n, 0)
                 .filter(|e| e.n == bucket_n)
                 .ok_or_else(|| anyhow!("missing sdkde_fit bucket n={bucket_n}"))?
                 .clone();
@@ -256,7 +295,7 @@ impl Coordinator {
             .iter()
             .filter(|e| {
                 e.pipeline == eval_pipeline
-                    && e.variant == variant
+                    && e.variant == variant.as_str()
                     && e.d == d
                     && e.n == bucket_n
                     && e.tiles.is_none()
@@ -281,7 +320,8 @@ impl Coordinator {
             h_score,
             fit_ms,
         };
-        if let Some(evicted) = self.registry.insert(model) {
+        let model = Arc::new(model);
+        if let Some(evicted) = self.registry.insert_arc(Arc::clone(&model)) {
             log_warn!("coord", "registry full: evicted model {evicted:?}");
         }
         log_info!(
@@ -289,17 +329,30 @@ impl Coordinator {
             "fitted {name:?} kind={} n={n} d={d} bucket={bucket_n} h={h:.4} ({fit_ms:.1}ms)",
             kind.as_str()
         );
-        Ok(FitInfo { model: name.to_string(), n, d, h, bucket_n, fit_ms })
+        Ok(ModelHandle::new(model))
     }
 
-    /// Evaluate densities at `points` ([k, d] row-major) under a fitted
-    /// model.  Blocks until the dispatcher serves the request.
-    pub fn eval(&self, model_name: &str, points: Vec<f32>) -> Result<EvalResult> {
-        Metrics::inc(&self.metrics.eval_requests);
-        let model = self
-            .registry
-            .get(model_name)
-            .ok_or_else(|| anyhow!("unknown model {model_name:?}"))?;
+    /// Name-based handle lookup — the wire path's entry point (bumps the
+    /// LRU stamp).  In-process callers keep the handle `fit` returned and
+    /// never pay this lookup on the hot path.
+    pub fn handle(&self, name: &str) -> Option<ModelHandle> {
+        self.registry.get(name).map(ModelHandle::new)
+    }
+
+    /// Enqueue a query without waiting for the reply.  Returns a
+    /// [`QueryTicket`]; call `wait()` for the result.  Clients can submit
+    /// several queries and collect the tickets to pipeline requests.
+    pub fn submit(
+        &self,
+        handle: &ModelHandle,
+        spec: QuerySpec,
+    ) -> Result<QueryTicket> {
+        let model = Arc::clone(handle.fitted());
+        let QuerySpec { points, mode } = spec;
+        match mode.kernel() {
+            QueryKernel::Density => Metrics::inc(&self.metrics.eval_requests),
+            QueryKernel::Score => Metrics::inc(&self.metrics.grad_requests),
+        }
         if points.is_empty() || points.len() % model.d != 0 {
             Metrics::inc(&self.metrics.errors);
             bail!(
@@ -308,87 +361,49 @@ impl Coordinator {
             );
         }
         let k = points.len() / model.d;
-        Metrics::add(&self.metrics.eval_points, k as u64);
+        if mode.kernel() == QueryKernel::Density {
+            Metrics::add(&self.metrics.eval_points, k as u64);
+        }
 
         let (reply, rx) = channel();
-        let job = EvalJob { model, points, k, enqueued: Instant::now(), reply };
+        let job = QueryJob { model, points, k, mode, enqueued: Instant::now(), reply };
         match self.queue.push(job) {
             Ok(()) => {}
             Err((_, PushError::Full)) => {
                 Metrics::inc(&self.metrics.rejected);
-                bail!("server overloaded: eval queue full (backpressure)");
+                bail!("server overloaded: query queue full (backpressure)");
             }
             Err((_, PushError::Closed)) => bail!("coordinator shutting down"),
         }
-        let result = rx
-            .recv()
-            .map_err(|_| anyhow!("dispatcher dropped request"))?
-            .map_err(|e| anyhow!(e))?;
-        self.metrics
-            .e2e_latency
-            .record(Duration::from_secs_f64(
-                (result.queue_ms + result.exec_ms) / 1e3,
-            ));
-        Ok(result)
+        Ok(QueryTicket { rx, metrics: Arc::clone(&self.metrics) })
     }
 
-    /// Gradient of the fitted log-density at `points` ([k, d] row-major):
-    /// ∇ log p̂(y), served from the streaming score artifacts.  Returns a
-    /// flat [k, d] buffer.  Lower-QPS companion endpoint to `eval` (used by
-    /// samplers, e.g. the Langevin example); executed directly rather than
-    /// through the dynamic batcher.
-    pub fn grad(&self, model_name: &str, points: Vec<f32>) -> Result<Vec<f32>> {
-        let model = self
-            .registry
-            .get(model_name)
-            .ok_or_else(|| anyhow!("unknown model {model_name:?}"))?;
-        if points.is_empty() || points.len() % model.d != 0 {
-            bail!("points must be a non-empty [k, {}] buffer", model.d);
-        }
-        let d = model.d;
-        let k = points.len() / d;
-        let manifest = self.engine.manifest();
-        // Gradient artifacts ship in flash (+gemm) only; serve flash
-        // regardless of the model's eval variant.
-        let m_buckets: Vec<usize> = manifest
-            .buckets("score_eval", "flash", d)
-            .iter()
-            .filter(|&&(bn, _)| bn == model.bucket_n)
-            .map(|&(_, m)| m)
-            .collect();
-        if m_buckets.is_empty() {
-            bail!("no score_eval buckets for d={d} n={}", model.bucket_n);
-        }
-        let max_m = *m_buckets.iter().max().expect("non-empty");
+    /// Run a query to completion: enqueue, batch, execute, reply.
+    pub fn query(&self, handle: &ModelHandle, spec: QuerySpec) -> Result<QueryResult> {
+        self.submit(handle, spec)?.wait()
+    }
 
-        let mut grads = vec![0.0f32; k * d];
-        for (start, end) in batcher::chunk_rows(k, max_m) {
-            let rows = end - start;
-            let m_bucket =
-                batcher::pick_m_bucket(&m_buckets, rows).expect("non-empty");
-            let entry = manifest
-                .find("score_eval", "flash", d, model.bucket_n, m_bucket)
-                .ok_or_else(|| anyhow!("score_eval bucket vanished"))?
-                .clone();
-            let mut y = Vec::with_capacity(m_bucket * d);
-            y.extend_from_slice(&points[start * d..end * d]);
-            y.resize(m_bucket * d, 0.0);
-            let inputs = vec![
-                Arc::clone(&model.x),
-                Arc::clone(&model.w),
-                Arc::new(HostTensor::matrix(m_bucket, d, y)?),
-                // Score of the *fitted* density: bandwidth h.
-                Arc::new(HostTensor::scalar(model.h as f32)),
-            ];
-            let out = self.engine.execute(&entry, inputs)?;
-            let g = out
-                .outputs
-                .into_iter()
-                .next()
-                .ok_or_else(|| anyhow!("grad returned no output"))?;
-            grads[start * d..end * d].copy_from_slice(&g.data()[..rows * d]);
-        }
-        Ok(grads)
+    /// Densities at `points` (row-major `[k, d]`) under a fitted model.
+    pub fn eval(&self, handle: &ModelHandle, points: Vec<f32>) -> Result<QueryResult> {
+        self.query(handle, QuerySpec::density(points))
+    }
+
+    /// Gradient of the fitted log-density at `points` (row-major `[k, d]`):
+    /// `∇ log p̂(y)`, served from the streaming score artifacts through the
+    /// same bounded queue and dynamic batcher as densities.  `values` is a
+    /// flat `[k, d]` buffer.
+    pub fn grad(&self, handle: &ModelHandle, points: Vec<f32>) -> Result<QueryResult> {
+        self.query(handle, QuerySpec::grad(points))
+    }
+
+    /// Drop the model this handle refers to from the registry.  Acts on
+    /// pointer identity: if the name has since been re-fitted, the stale
+    /// handle is a no-op rather than deleting the replacement.  The
+    /// handle (and any clones) stays usable — the tensors remain
+    /// resident until the last `Arc` drops — but name-based lookup
+    /// stops resolving.
+    pub fn delete(&self, handle: &ModelHandle) -> bool {
+        self.registry.remove_if_same(handle.name(), handle.fitted())
     }
 
     /// Stats document served by `{"op":"stats"}` and the CLI.
@@ -445,7 +460,7 @@ impl Drop for Coordinator {
 fn dispatcher_loop(
     cfg: Config,
     engine: Engine,
-    queue: Arc<BoundedQueue<EvalJob>>,
+    queue: Arc<BoundedQueue<QueryJob>>,
     metrics: Arc<Metrics>,
 ) {
     log_info!("dispatch", "dispatcher up (batch budget {} queries, wait {}ms)",
@@ -462,11 +477,17 @@ fn dispatcher_loop(
             std::thread::sleep(Duration::from_millis(cfg.batch_wait_ms));
         }
 
-        // Same-model coalescing under the query budget.
+        // Same-model, same-kernel coalescing under the query budget
+        // (gradients batch with gradients, densities with densities —
+        // log-density shares the density kernel).
         let mut budget = cfg.batch_max_queries.saturating_sub(head.k);
         let head_model = Arc::clone(&head.model);
+        let head_kernel = head.mode.kernel();
         let followers = queue.drain_matching(usize::MAX, |j| {
-            if Arc::ptr_eq(&j.model, &head_model) && j.k <= budget {
+            if Arc::ptr_eq(&j.model, &head_model)
+                && j.mode.kernel() == head_kernel
+                && j.k <= budget
+            {
                 budget -= j.k;
                 true
             } else {
@@ -483,8 +504,9 @@ fn dispatcher_loop(
     log_info!("dispatch", "dispatcher down");
 }
 
-fn execute_batch(engine: &Engine, metrics: &Metrics, batch: Vec<EvalJob>) {
+fn execute_batch(engine: &Engine, metrics: &Metrics, batch: Vec<QueryJob>) {
     let model = Arc::clone(&batch[0].model);
+    let kernel = batch[0].mode.kernel();
     let batch_size = batch.len();
     let queue_wait = batch
         .iter()
@@ -493,20 +515,23 @@ fn execute_batch(engine: &Engine, metrics: &Metrics, batch: Vec<EvalJob>) {
         .unwrap_or_default();
     metrics.queue_wait.record(queue_wait);
 
-    let result = run_model_eval(engine, &model, &batch);
-    let exec_start_ms = match &result {
-        Ok((_, exec_ms)) => *exec_ms,
-        Err(_) => 0.0,
-    };
-
+    let result = run_model_query(engine, &model, &batch, kernel);
     match result {
-        Ok((densities, exec_ms)) => {
+        Ok((values, exec_ms)) => {
+            // All jobs in a batch share a kernel, hence one output width.
+            let width = batch[0].mode.width(model.d);
             let ks: Vec<usize> = batch.iter().map(|j| j.k).collect();
-            let parts = batcher::scatter(&densities, &ks);
-            for (job, dens) in batch.into_iter().zip(parts) {
+            let parts = batcher::scatter_rows(&values, &ks, width);
+            for (job, mut vals) in batch.into_iter().zip(parts) {
+                if job.mode == OutputMode::LogDensity {
+                    for v in &mut vals {
+                        *v = v.max(f32::MIN_POSITIVE).ln();
+                    }
+                }
                 let queue_ms = job.enqueued.elapsed().as_secs_f64() * 1e3 - exec_ms;
-                let _ = job.reply.send(Ok(EvalResult {
-                    densities: dens,
+                let _ = job.reply.send(Ok(QueryResult {
+                    values: vals,
+                    mode: job.mode,
                     queue_ms: queue_ms.max(0.0),
                     exec_ms,
                     batch_size,
@@ -514,7 +539,7 @@ fn execute_batch(engine: &Engine, metrics: &Metrics, batch: Vec<EvalJob>) {
             }
             metrics
                 .exec_latency
-                .record(Duration::from_secs_f64(exec_start_ms / 1e3));
+                .record(Duration::from_secs_f64(exec_ms / 1e3));
         }
         Err(e) => {
             Metrics::inc(&metrics.errors);
@@ -527,12 +552,15 @@ fn execute_batch(engine: &Engine, metrics: &Metrics, batch: Vec<EvalJob>) {
     }
 }
 
-/// Run one batched evaluation: concatenate queries, chunk against the
-/// available m-buckets, execute, concatenate densities.
-fn run_model_eval(
+/// Run one batched query execution: concatenate query points, chunk
+/// against the available m-buckets of the kernel's pipeline, execute, and
+/// concatenate outputs.  The density kernel returns one value per query
+/// row; the score kernel returns `d` values per row.
+fn run_model_query(
     engine: &Engine,
     model: &FittedModel,
-    batch: &[EvalJob],
+    batch: &[QueryJob],
+    kernel: QueryKernel,
 ) -> Result<(Vec<f32>, f64)> {
     let d = model.d;
     let total_k: usize = batch.iter().map(|j| j.k).sum();
@@ -541,31 +569,37 @@ fn run_model_eval(
         all_points.extend_from_slice(&job.points);
     }
 
-    let pipeline = model.kind.eval_pipeline();
+    // Gradient artifacts ship in flash (+gemm) only; serve flash
+    // regardless of the model's eval variant.
+    let (pipeline, variant, width) = match kernel {
+        QueryKernel::Density => {
+            (model.kind.eval_pipeline(), model.variant, 1usize)
+        }
+        QueryKernel::Score => ("score_eval", Variant::Flash, d),
+    };
     let manifest = engine.manifest();
     let m_buckets: Vec<usize> = manifest
-        .buckets(pipeline, &model.variant, d)
+        .buckets(pipeline, variant.as_str(), d)
         .iter()
         .filter(|&&(bn, _)| bn == model.bucket_n)
         .map(|&(_, m)| m)
         .collect();
     if m_buckets.is_empty() {
         bail!(
-            "no eval buckets for {pipeline}/{} d={d} n={}",
-            model.variant,
+            "no {pipeline} buckets for {variant} d={d} n={}",
             model.bucket_n
         );
     }
     let max_m = *m_buckets.iter().max().expect("non-empty");
 
-    let mut densities = vec![0.0f32; total_k];
+    let mut values = vec![0.0f32; total_k * width];
     let mut exec_ms = 0.0f64;
     for (start, end) in batcher::chunk_rows(total_k, max_m) {
         let rows = end - start;
         let m_bucket = batcher::pick_m_bucket(&m_buckets, rows)
             .expect("non-empty bucket list");
         let entry = manifest
-            .find(pipeline, &model.variant, d, model.bucket_n, m_bucket)
+            .find(pipeline, variant.as_str(), d, model.bucket_n, m_bucket)
             .ok_or_else(|| anyhow!("bucket disappeared from manifest"))?
             .clone();
 
@@ -575,7 +609,9 @@ fn run_model_eval(
         y.resize(m_bucket * d, 0.0);
         let y = HostTensor::matrix(m_bucket, d, y)?;
 
-        // Resident tensors cross by Arc (no copy on the hot path).
+        // Resident tensors cross by Arc (no copy on the hot path).  The
+        // score kernel takes the same inputs: bandwidth of the *fitted*
+        // density.
         let inputs = vec![
             Arc::clone(&model.x),
             Arc::clone(&model.w),
@@ -584,17 +620,18 @@ fn run_model_eval(
         ];
         let out = engine.execute(&entry, inputs)?;
         exec_ms += out.timings.total().as_secs_f64() * 1e3;
-        let pdf = out
+        let output = out
             .outputs
             .into_iter()
             .next()
-            .ok_or_else(|| anyhow!("eval returned no output"))?;
-        densities[start..end].copy_from_slice(&pdf.data()[..rows]);
+            .ok_or_else(|| anyhow!("query returned no output"))?;
+        values[start * width..end * width]
+            .copy_from_slice(&output.data()[..rows * width]);
         log_debug!(
             "dispatch",
             "chunk [{start}, {end}) via m={m_bucket}: {}",
             out.timings.render()
         );
     }
-    Ok((densities, exec_ms))
+    Ok((values, exec_ms))
 }

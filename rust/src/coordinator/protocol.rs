@@ -1,74 +1,81 @@
-//! Wire protocol: newline-delimited JSON over TCP (and the in-process
-//! equivalent types).
+//! Wire protocol: newline-delimited JSON over TCP, as a serialization of
+//! the *same* typed request structs the in-process API uses
+//! ([`FitSpec`], [`QuerySpec`], [`FitInfo`], [`QueryResult`]) — not a
+//! parallel universe of shapes (DESIGN.md §9).
 //!
-//! Requests:
-//!   {"op":"ping"}
-//!   {"op":"fit","model":"m1","estimator":"sdkde","d":16,
-//!    "points":[[...],[...]], "h":0.5?, "h_score":0.35?, "variant":"flash"?}
-//!   {"op":"eval","model":"m1","points":[[...],...]}
-//!   {"op":"models"} | {"op":"stats"} | {"op":"delete","model":"m1"}
+//! Every request and response carries an explicit protocol version `"v"`;
+//! a missing field means version 1 (the pre-spec legacy dialect).  The
+//! server *accepts* v1 request lines (including the old `eval`/`grad`
+//! op aliases) but always *emits* the current dialect, and rejects
+//! request versions newer than it speaks.  The client learns the
+//! server's version from the `pong` reply at connect time and fails
+//! fast against incompatible servers (`server.rs`).
 //!
-//! Responses mirror the request kinds; every response carries "ok":bool.
+//! Requests (v2):
+//!   {"v":2,"op":"ping"}
+//!   {"v":2,"op":"fit","model":"m1","estimator":"sdkde","d":16,
+//!    "points":[[...],...], "h":0.5?, "h_score":0.35?, "variant":"flash"?}
+//!   {"v":2,"op":"query","model":"m1","mode":"density|log_density|grad",
+//!    "points":[[...],...]}
+//!   {"v":2,"op":"models"} | {"v":2,"op":"stats"}
+//!   {"v":2,"op":"delete","model":"m1"}
+//!
+//! Legacy (v1) aliases `{"op":"eval",...}` and `{"op":"grad",...}` parse
+//! into `Query` with the corresponding mode.  This request-side
+//! acceptance keeps hand-written and scripted senders (nc/jq one-liners)
+//! working; pre-v2 *binary* clients must upgrade, since responses are
+//! always emitted in the current shape.  Responses mirror the request
+//! kinds; every response carries `"ok":bool` and `"v"`.
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::estimator::EstimatorKind;
+use crate::estimator::{EstimatorKind, Variant};
 use crate::util::json::{self, Value};
 
-/// Parsed client request.
+use super::request::{FitSpec, OutputMode, QuerySpec};
+use super::{FitInfo, QueryResult};
+
+/// Highest protocol version this build speaks.
+pub const PROTOCOL_VERSION: usize = 2;
+
+/// Parsed client request — a thin envelope around the shared typed specs.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Request {
     Ping,
     Fit {
         model: String,
-        estimator: EstimatorKind,
-        d: usize,
-        /// Row-major [n, d].
+        spec: FitSpec,
+        /// Row-major `[n, spec.d]`.
         points: Vec<f32>,
-        n: usize,
-        /// Bandwidth override; None = rule-of-thumb (Silverman for KDE,
-        /// SD-rate for SD-KDE).
-        h: Option<f64>,
-        h_score: Option<f64>,
-        variant: Option<String>,
     },
-    Eval {
+    Query {
         model: String,
-        /// Row-major [k, d].
-        points: Vec<f32>,
-        k: usize,
+        /// Row width of `spec.points` (wire framing; the server validates
+        /// against the fitted model's dimension).
+        d: usize,
+        spec: QuerySpec,
     },
     Models,
     Stats,
     Delete {
         model: String,
     },
-    /// Gradient of the fitted log-density at query points.
-    Grad {
-        model: String,
-        /// Row-major [k, d].
-        points: Vec<f32>,
-        k: usize,
-    },
 }
 
 /// Server response.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Response {
-    Pong,
-    FitOk {
-        model: String,
-        n: usize,
-        d: usize,
-        h: f64,
-        bucket_n: usize,
-        fit_ms: f64,
+    Pong {
+        /// Server protocol version, for client-side negotiation.
+        version: usize,
     },
-    EvalOk {
-        densities: Vec<f32>,
-        queue_ms: f64,
-        exec_ms: f64,
-        batch_size: usize,
+    FitOk {
+        info: FitInfo,
+    },
+    QueryOk {
+        /// Model dimension (the row width of grad values).
+        d: usize,
+        result: QueryResult,
     },
     Models {
         names: Vec<String>,
@@ -79,11 +86,6 @@ pub enum Response {
     Deleted {
         model: String,
         existed: bool,
-    },
-    GradOk {
-        /// Row-major [k, d].
-        gradients: Vec<f32>,
-        d: usize,
     },
     Error {
         message: String,
@@ -128,10 +130,35 @@ fn points_to_json(points: &[f32], d: usize) -> Value {
     )
 }
 
+/// Extract and check the line's protocol version.
+fn parse_version(v: &Value) -> Result<usize> {
+    let version = match v.get("v") {
+        None => 1, // legacy dialect
+        Some(x) => x
+            .as_usize()
+            .ok_or_else(|| anyhow!("'v' must be an integer"))?,
+    };
+    if version == 0 || version > PROTOCOL_VERSION {
+        bail!(
+            "unsupported protocol version {version} \
+             (this build speaks 1..={PROTOCOL_VERSION})"
+        );
+    }
+    Ok(version)
+}
+
+fn req_model(v: &Value) -> Result<String> {
+    v.get("model")
+        .and_then(Value::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| anyhow!("missing 'model'"))
+}
+
 impl Request {
-    /// Parse one wire line.
+    /// Parse one wire line (any supported version).
     pub fn parse(line: &str) -> Result<Request> {
         let v = json::parse(line).map_err(|e| anyhow!("bad json: {e}"))?;
+        parse_version(&v)?;
         let op = v
             .get("op")
             .and_then(Value::as_str)
@@ -155,34 +182,44 @@ impl Request {
                 if d == 0 {
                     bail!("d must be >= 1");
                 }
-                let (points, n) = parse_points(
+                let (points, _n) = parse_points(
                     v.get("points").ok_or_else(|| anyhow!("missing 'points'"))?,
                     d,
                 )?;
-                let h = v.get("h").and_then(Value::as_f64);
-                if let Some(h) = h {
+                let mut spec = FitSpec::new(estimator, d);
+                if let Some(h) = v.get("h").and_then(Value::as_f64) {
                     if !(h > 0.0) {
                         bail!("h must be positive");
                     }
+                    spec = spec.bandwidth(h);
                 }
-                let h_score = v.get("h_score").and_then(Value::as_f64);
-                let variant = v
-                    .get("variant")
-                    .and_then(Value::as_str)
-                    .map(str::to_string);
-                Ok(Request::Fit {
-                    model: req_model(&v)?,
-                    estimator,
-                    d,
-                    points,
-                    n,
-                    h,
-                    h_score,
-                    variant,
-                })
+                if let Some(hs) = v.get("h_score").and_then(Value::as_f64) {
+                    if !(hs > 0.0) {
+                        bail!("h_score must be positive");
+                    }
+                    spec = spec.score_bandwidth(hs);
+                }
+                if let Some(name) = v.get("variant").and_then(Value::as_str) {
+                    let variant = Variant::parse(name)
+                        .ok_or_else(|| anyhow!("unknown variant {name:?}"))?;
+                    spec = spec.variant(variant);
+                }
+                Ok(Request::Fit { model: req_model(&v)?, spec, points })
             }
-            "grad" | "eval" => {
-                let is_grad = op == "grad";
+            "query" | "eval" | "grad" => {
+                let mode = match op {
+                    // Legacy v1 aliases.
+                    "eval" => OutputMode::Density,
+                    "grad" => OutputMode::Grad,
+                    _ => {
+                        let name = v
+                            .get("mode")
+                            .and_then(Value::as_str)
+                            .unwrap_or("density");
+                        OutputMode::parse(name)
+                            .ok_or_else(|| anyhow!("unknown mode {name:?}"))?
+                    }
+                };
                 let model = req_model(&v)?;
                 // d is implied by the fitted model; rows are validated
                 // against it server-side.  Wire rows must be rectangular.
@@ -200,108 +237,100 @@ impl Request {
                 if d == 0 {
                     bail!("points rows must be non-empty");
                 }
-                let (points, k) = parse_points(v.get("points").unwrap(), d)?;
-                if is_grad {
-                    Ok(Request::Grad { model, points, k })
-                } else {
-                    Ok(Request::Eval { model, points, k })
-                }
+                let (points, _k) = parse_points(v.get("points").unwrap(), d)?;
+                Ok(Request::Query { model, d, spec: QuerySpec::new(points, mode) })
             }
             other => bail!("unknown op {other:?}"),
         }
     }
 
-    /// Render to a wire line (client side).
-    pub fn to_line(&self, d_hint: usize) -> String {
+    /// Render to a wire line (client side, current protocol version).
+    pub fn to_line(&self) -> String {
+        let versioned = |mut fields: Vec<(&str, Value)>| {
+            fields.insert(0, ("v", Value::from(PROTOCOL_VERSION)));
+            Value::object(fields)
+        };
         let v = match self {
-            Request::Ping => Value::object(vec![("op", "ping".into())]),
-            Request::Models => Value::object(vec![("op", "models".into())]),
-            Request::Stats => Value::object(vec![("op", "stats".into())]),
-            Request::Delete { model } => Value::object(vec![
+            Request::Ping => versioned(vec![("op", "ping".into())]),
+            Request::Models => versioned(vec![("op", "models".into())]),
+            Request::Stats => versioned(vec![("op", "stats".into())]),
+            Request::Delete { model } => versioned(vec![
                 ("op", "delete".into()),
                 ("model", model.as_str().into()),
             ]),
-            Request::Fit {
-                model,
-                estimator,
-                d,
-                points,
-                h,
-                h_score,
-                variant,
-                ..
-            } => {
+            Request::Fit { model, spec, points } => {
                 let mut fields = vec![
                     ("op", Value::from("fit")),
                     ("model", model.as_str().into()),
-                    ("estimator", estimator.as_str().into()),
-                    ("d", Value::from(*d)),
-                    ("points", points_to_json(points, *d)),
+                    ("estimator", spec.estimator.as_str().into()),
+                    ("d", Value::from(spec.d)),
+                    ("points", points_to_json(points, spec.d)),
                 ];
-                if let Some(h) = h {
-                    fields.push(("h", Value::Number(*h)));
+                if let Some(h) = spec.h {
+                    fields.push(("h", Value::Number(h)));
                 }
-                if let Some(hs) = h_score {
-                    fields.push(("h_score", Value::Number(*hs)));
+                if let Some(hs) = spec.h_score {
+                    fields.push(("h_score", Value::Number(hs)));
                 }
-                if let Some(variant) = variant {
+                if let Some(variant) = spec.variant {
                     fields.push(("variant", variant.as_str().into()));
                 }
-                Value::object(fields)
+                versioned(fields)
             }
-            Request::Eval { model, points, .. } => Value::object(vec![
-                ("op", "eval".into()),
+            Request::Query { model, d, spec } => versioned(vec![
+                ("op", "query".into()),
                 ("model", model.as_str().into()),
-                ("points", points_to_json(points, d_hint)),
-            ]),
-            Request::Grad { model, points, .. } => Value::object(vec![
-                ("op", "grad".into()),
-                ("model", model.as_str().into()),
-                ("points", points_to_json(points, d_hint)),
+                ("mode", spec.mode.as_str().into()),
+                ("points", points_to_json(&spec.points, *d)),
             ]),
         };
         json::to_string(&v)
     }
 }
 
-fn req_model(v: &Value) -> Result<String> {
-    v.get("model")
-        .and_then(Value::as_str)
-        .map(str::to_string)
-        .ok_or_else(|| anyhow!("missing 'model'"))
-}
-
 impl Response {
     pub fn to_line(&self) -> String {
+        let versioned = |mut fields: Vec<(&str, Value)>| {
+            fields.insert(0, ("ok", Value::from(true)));
+            fields.insert(1, ("v", Value::from(PROTOCOL_VERSION)));
+            Value::object(fields)
+        };
         let v = match self {
-            Response::Pong => Value::object(vec![
+            Response::Pong { version } => Value::object(vec![
                 ("ok", true.into()),
+                ("v", Value::from(*version)),
                 ("op", "pong".into()),
             ]),
-            Response::FitOk { model, n, d, h, bucket_n, fit_ms } => {
-                Value::object(vec![
-                    ("ok", true.into()),
-                    ("op", "fit".into()),
-                    ("model", model.as_str().into()),
-                    ("n", Value::from(*n)),
+            Response::FitOk { info } => versioned(vec![
+                ("op", "fit".into()),
+                ("model", info.model.as_str().into()),
+                ("estimator", info.kind.as_str().into()),
+                ("variant", info.variant.as_str().into()),
+                ("n", Value::from(info.n)),
+                ("d", Value::from(info.d)),
+                ("h", Value::Number(info.h)),
+                ("h_score", Value::Number(info.h_score)),
+                ("bucket_n", Value::from(info.bucket_n)),
+                ("fit_ms", Value::Number(info.fit_ms)),
+            ]),
+            Response::QueryOk { d, result } => {
+                let width = result.mode.width(*d);
+                let values = if width == 1 {
+                    Value::from_f32_slice(&result.values)
+                } else {
+                    points_to_json(&result.values, width)
+                };
+                versioned(vec![
+                    ("op", "query".into()),
+                    ("mode", result.mode.as_str().into()),
                     ("d", Value::from(*d)),
-                    ("h", Value::Number(*h)),
-                    ("bucket_n", Value::from(*bucket_n)),
-                    ("fit_ms", Value::Number(*fit_ms)),
+                    ("values", values),
+                    ("queue_ms", Value::Number(result.queue_ms)),
+                    ("exec_ms", Value::Number(result.exec_ms)),
+                    ("batch_size", Value::from(result.batch_size)),
                 ])
             }
-            Response::EvalOk { densities, queue_ms, exec_ms, batch_size } => {
-                Value::object(vec![
-                    ("ok", true.into()),
-                    ("op", "eval".into()),
-                    ("densities", Value::from_f32_slice(densities)),
-                    ("queue_ms", Value::Number(*queue_ms)),
-                    ("exec_ms", Value::Number(*exec_ms)),
-                    ("batch_size", Value::from(*batch_size)),
-                ])
-            }
-            Response::Models { names } => Value::object(vec![
-                ("ok", true.into()),
+            Response::Models { names } => versioned(vec![
                 ("op", "models".into()),
                 (
                     "names",
@@ -310,25 +339,18 @@ impl Response {
                     ),
                 ),
             ]),
-            Response::Stats { body } => Value::object(vec![
-                ("ok", true.into()),
+            Response::Stats { body } => versioned(vec![
                 ("op", "stats".into()),
                 ("stats", body.clone()),
             ]),
-            Response::Deleted { model, existed } => Value::object(vec![
-                ("ok", true.into()),
+            Response::Deleted { model, existed } => versioned(vec![
                 ("op", "delete".into()),
                 ("model", model.as_str().into()),
                 ("existed", (*existed).into()),
             ]),
-            Response::GradOk { gradients, d } => Value::object(vec![
-                ("ok", true.into()),
-                ("op", "grad".into()),
-                ("d", Value::from(*d)),
-                ("gradients", points_to_json(gradients, *d)),
-            ]),
             Response::Error { message } => Value::object(vec![
                 ("ok", false.into()),
+                ("v", Value::from(PROTOCOL_VERSION)),
                 ("error", message.as_str().into()),
             ]),
         };
@@ -351,25 +373,70 @@ impl Response {
             return Ok(Response::Error { message });
         }
         match v.get("op").and_then(Value::as_str) {
-            Some("pong") => Ok(Response::Pong),
-            Some("fit") => Ok(Response::FitOk {
-                model: req_model(&v)?,
-                n: field_usize(&v, "n")?,
-                d: field_usize(&v, "d")?,
-                h: field_f64(&v, "h")?,
-                bucket_n: field_usize(&v, "bucket_n")?,
-                fit_ms: field_f64(&v, "fit_ms")?,
+            Some("pong") => Ok(Response::Pong {
+                version: v.get("v").and_then(Value::as_usize).unwrap_or(1),
             }),
-            Some("eval") => Ok(Response::EvalOk {
-                densities: v
-                    .get("densities")
-                    .ok_or_else(|| anyhow!("missing densities"))?
-                    .to_f32_vec()
-                    .map_err(|e| anyhow!("{e}"))?,
-                queue_ms: field_f64(&v, "queue_ms")?,
-                exec_ms: field_f64(&v, "exec_ms")?,
-                batch_size: field_usize(&v, "batch_size")?,
-            }),
+            Some("fit") => {
+                let kind_name = v
+                    .get("estimator")
+                    .and_then(Value::as_str)
+                    .unwrap_or("kde");
+                let kind = EstimatorKind::parse(kind_name)
+                    .ok_or_else(|| anyhow!("unknown estimator {kind_name:?}"))?;
+                let variant_name = v
+                    .get("variant")
+                    .and_then(Value::as_str)
+                    .unwrap_or("flash");
+                let variant = Variant::parse(variant_name)
+                    .ok_or_else(|| anyhow!("unknown variant {variant_name:?}"))?;
+                Ok(Response::FitOk {
+                    info: FitInfo {
+                        model: req_model(&v)?,
+                        kind,
+                        variant,
+                        n: field_usize(&v, "n")?,
+                        d: field_usize(&v, "d")?,
+                        h: field_f64(&v, "h")?,
+                        h_score: field_f64(&v, "h_score")?,
+                        bucket_n: field_usize(&v, "bucket_n")?,
+                        fit_ms: field_f64(&v, "fit_ms")?,
+                    },
+                })
+            }
+            Some("query") => {
+                let mode_name = v
+                    .get("mode")
+                    .and_then(Value::as_str)
+                    .ok_or_else(|| anyhow!("missing 'mode'"))?;
+                let mode = OutputMode::parse(mode_name)
+                    .ok_or_else(|| anyhow!("unknown mode {mode_name:?}"))?;
+                let d = field_usize(&v, "d")?;
+                let raw = v
+                    .get("values")
+                    .ok_or_else(|| anyhow!("missing 'values'"))?;
+                let values = if mode.width(d) == 1 {
+                    raw.to_f32_vec().map_err(|e| anyhow!("{e}"))?
+                } else {
+                    let rows = raw
+                        .as_array()
+                        .ok_or_else(|| anyhow!("'values' must be rows"))?;
+                    let mut out = Vec::with_capacity(rows.len() * mode.width(d));
+                    for row in rows {
+                        out.extend(row.to_f32_vec().map_err(|e| anyhow!("{e}"))?);
+                    }
+                    out
+                };
+                Ok(Response::QueryOk {
+                    d,
+                    result: QueryResult {
+                        values,
+                        mode,
+                        queue_ms: field_f64(&v, "queue_ms")?,
+                        exec_ms: field_f64(&v, "exec_ms")?,
+                        batch_size: field_usize(&v, "batch_size")?,
+                    },
+                })
+            }
             Some("models") => {
                 let names = v
                     .get("names")
@@ -387,20 +454,6 @@ impl Response {
             Some("stats") => Ok(Response::Stats {
                 body: v.get("stats").cloned().unwrap_or(Value::Null),
             }),
-            Some("grad") => {
-                let d = field_usize(&v, "d")?;
-                let rows = v
-                    .get("gradients")
-                    .and_then(Value::as_array)
-                    .ok_or_else(|| anyhow!("missing gradients"))?;
-                let mut gradients = Vec::with_capacity(rows.len() * d);
-                for row in rows {
-                    gradients.extend(
-                        row.to_f32_vec().map_err(|e| anyhow!("{e}"))?,
-                    );
-                }
-                Ok(Response::GradOk { gradients, d })
-            }
             Some("delete") => Ok(Response::Deleted {
                 model: req_model(&v)?,
                 existed: v
@@ -433,35 +486,72 @@ mod tests {
     fn fit_request_round_trip() {
         let req = Request::Fit {
             model: "m1".into(),
-            estimator: EstimatorKind::SdKde,
-            d: 2,
+            spec: FitSpec::new(EstimatorKind::SdKde, 2)
+                .bandwidth(0.5)
+                .variant(Variant::Flash),
             points: vec![1.0, 2.0, 3.0, 4.0],
-            n: 2,
-            h: Some(0.5),
-            h_score: None,
-            variant: Some("flash".into()),
         };
-        let line = req.to_line(2);
+        let line = req.to_line();
+        assert!(line.contains("\"v\":2"), "{line}");
         let back = Request::parse(&line).unwrap();
         assert_eq!(req, back);
     }
 
     #[test]
-    fn eval_request_round_trip() {
-        let req = Request::Eval {
-            model: "m1".into(),
-            points: vec![0.5, -1.5, 2.0, 0.0],
-            k: 2,
-        };
-        let back = Request::parse(&req.to_line(2)).unwrap();
-        assert_eq!(req, back);
+    fn query_request_round_trip_all_modes() {
+        for mode in OutputMode::ALL {
+            let req = Request::Query {
+                model: "m1".into(),
+                d: 2,
+                spec: QuerySpec::new(vec![0.5, -1.5, 2.0, 0.0], mode),
+            };
+            let back = Request::parse(&req.to_line()).unwrap();
+            assert_eq!(req, back, "mode {mode}");
+        }
+    }
+
+    #[test]
+    fn legacy_v1_lines_still_parse() {
+        // Pre-versioning dialect: no "v", eval/grad ops.
+        let req = Request::parse(
+            r#"{"op":"eval","model":"m","points":[[1.0,2.0]]}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            req,
+            Request::Query {
+                model: "m".into(),
+                d: 2,
+                spec: QuerySpec::density(vec![1.0, 2.0]),
+            }
+        );
+        let req = Request::parse(
+            r#"{"op":"grad","model":"m","points":[[1.0]]}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            req,
+            Request::Query {
+                model: "m".into(),
+                d: 1,
+                spec: QuerySpec::grad(vec![1.0]),
+            }
+        );
+    }
+
+    #[test]
+    fn future_version_rejected() {
+        let err = Request::parse(r#"{"v":99,"op":"ping"}"#).unwrap_err();
+        assert!(format!("{err:#}").contains("version"), "{err:#}");
+        assert!(Request::parse(r#"{"v":0,"op":"ping"}"#).is_err());
+        assert!(Request::parse(r#"{"v":1.5,"op":"ping"}"#).is_err());
     }
 
     #[test]
     fn simple_ops_round_trip() {
         for req in [Request::Ping, Request::Models, Request::Stats,
                     Request::Delete { model: "x".into() }] {
-            assert_eq!(Request::parse(&req.to_line(0)).unwrap(), req);
+            assert_eq!(Request::parse(&req.to_line()).unwrap(), req);
         }
     }
 
@@ -476,8 +566,11 @@ mod tests {
             r#"{"op":"fit","model":"m","d":1,"points":[]}"#,
             r#"{"op":"fit","model":"m","d":1,"points":[["x"]]}"#,
             r#"{"op":"fit","model":"m","d":1,"points":[[1]],"h":-1}"#,
+            r#"{"op":"fit","model":"m","d":1,"points":[[1]],"h_score":0}"#,
+            r#"{"op":"fit","model":"m","d":1,"points":[[1]],"variant":"turbo"}"#,
             r#"{"op":"eval","model":"m"}"#,
             r#"{"op":"eval","model":"m","points":[[1],[1,2]]}"#,
+            r#"{"op":"query","model":"m","mode":"warp","points":[[1]]}"#,
             r#"{"op":"fit","model":"m","estimator":"magic","d":1,"points":[[1]]}"#,
         ] {
             assert!(Request::parse(bad).is_err(), "accepted: {bad}");
@@ -487,20 +580,39 @@ mod tests {
     #[test]
     fn responses_round_trip() {
         let cases = vec![
-            Response::Pong,
+            Response::Pong { version: PROTOCOL_VERSION },
             Response::FitOk {
-                model: "m".into(),
-                n: 100,
-                d: 16,
-                h: 0.42,
-                bucket_n: 512,
-                fit_ms: 12.5,
+                info: FitInfo {
+                    model: "m".into(),
+                    kind: EstimatorKind::SdKde,
+                    variant: Variant::Flash,
+                    n: 100,
+                    d: 16,
+                    h: 0.42,
+                    h_score: 0.29698484809834995,
+                    bucket_n: 512,
+                    fit_ms: 12.5,
+                },
             },
-            Response::EvalOk {
-                densities: vec![0.1, 0.0, 3.25],
-                queue_ms: 0.5,
-                exec_ms: 2.0,
-                batch_size: 3,
+            Response::QueryOk {
+                d: 3,
+                result: QueryResult {
+                    values: vec![0.1, 0.0, 3.25],
+                    mode: OutputMode::Density,
+                    queue_ms: 0.5,
+                    exec_ms: 2.0,
+                    batch_size: 3,
+                },
+            },
+            Response::QueryOk {
+                d: 2,
+                result: QueryResult {
+                    values: vec![0.5, -1.5, 2.0, 0.25],
+                    mode: OutputMode::Grad,
+                    queue_ms: 0.0,
+                    exec_ms: 1.0,
+                    batch_size: 1,
+                },
             },
             Response::Models { names: vec!["a".into(), "b".into()] },
             Response::Deleted { model: "m".into(), existed: true },
@@ -513,12 +625,35 @@ mod tests {
     }
 
     #[test]
+    fn fit_ok_carries_h_score() {
+        let line = Response::FitOk {
+            info: FitInfo {
+                model: "m".into(),
+                kind: EstimatorKind::SdKde,
+                variant: Variant::Flash,
+                n: 10,
+                d: 1,
+                h: 0.5,
+                h_score: 0.25,
+                bucket_n: 16,
+                fit_ms: 1.0,
+            },
+        }
+        .to_line();
+        assert!(line.contains("\"h_score\":0.25"), "{line}");
+    }
+
+    #[test]
     fn wire_lines_are_single_line() {
-        let r = Response::EvalOk {
-            densities: vec![1.0; 10],
-            queue_ms: 0.0,
-            exec_ms: 0.0,
-            batch_size: 1,
+        let r = Response::QueryOk {
+            d: 1,
+            result: QueryResult {
+                values: vec![1.0; 10],
+                mode: OutputMode::Density,
+                queue_ms: 0.0,
+                exec_ms: 0.0,
+                batch_size: 1,
+            },
         };
         assert!(!r.to_line().contains('\n'));
     }

@@ -9,7 +9,7 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 
-use crate::estimator::EstimatorKind;
+use crate::estimator::{EstimatorKind, Variant};
 use crate::runtime::HostTensor;
 
 /// An immutable fitted model (shared via Arc; eval never copies it).
@@ -18,7 +18,7 @@ pub struct FittedModel {
     pub name: String,
     pub kind: EstimatorKind,
     /// Artifact variant the model was fitted with and will be served with.
-    pub variant: String,
+    pub variant: Variant,
     pub d: usize,
     /// Actual sample count (<= bucket_n).
     pub n: usize,
@@ -69,6 +69,12 @@ impl Registry {
     /// Insert (or replace) a model; evicts the least-recently-used entry
     /// when at capacity.  Returns the evicted model name, if any.
     pub fn insert(&self, model: FittedModel) -> Option<String> {
+        self.insert_arc(Arc::new(model))
+    }
+
+    /// Like [`Registry::insert`], but the caller keeps a share of the
+    /// `Arc` (the coordinator hands it out as a `ModelHandle`).
+    pub fn insert_arc(&self, model: Arc<FittedModel>) -> Option<String> {
         let mut slots = self.slots.write().expect("registry poisoned");
         let name = model.name.clone();
         let stamp = self.tick();
@@ -84,7 +90,7 @@ impl Registry {
                 evicted = Some(victim);
             }
         }
-        slots.insert(name, Slot { model: Arc::new(model), last_used: stamp });
+        slots.insert(name, Slot { model, last_used: stamp });
         evicted
     }
 
@@ -113,6 +119,21 @@ impl Registry {
             .expect("registry poisoned")
             .remove(name)
             .is_some()
+    }
+
+    /// Remove `name` only if it still resolves to exactly `model`
+    /// (pointer identity).  This is the handle-based delete: a stale
+    /// handle whose name has since been re-fitted must not evict the
+    /// newer model it never referred to.
+    pub fn remove_if_same(&self, name: &str, model: &Arc<FittedModel>) -> bool {
+        let mut slots = self.slots.write().expect("registry poisoned");
+        match slots.get(name) {
+            Some(slot) if Arc::ptr_eq(&slot.model, model) => {
+                slots.remove(name);
+                true
+            }
+            _ => false,
+        }
     }
 
     pub fn names(&self) -> Vec<String> {
@@ -148,7 +169,7 @@ mod tests {
         FittedModel {
             name: name.to_string(),
             kind: EstimatorKind::Kde,
-            variant: "flash".into(),
+            variant: Variant::Flash,
             d: 1,
             n: 4,
             bucket_n: 8,
@@ -182,6 +203,22 @@ mod tests {
         assert_eq!(evicted.as_deref(), Some("b"));
         assert_eq!(r.names(), vec!["a", "c"]);
         assert_eq!(r.evictions(), 1);
+    }
+
+    #[test]
+    fn remove_if_same_ignores_stale_arcs() {
+        let r = Registry::new(4);
+        let first = Arc::new(model("a"));
+        r.insert_arc(Arc::clone(&first));
+        // Re-fit under the same name: "a" now resolves to a new model.
+        r.insert(model("a"));
+        // The stale Arc no longer matches — removal is a no-op...
+        assert!(!r.remove_if_same("a", &first));
+        assert_eq!(r.len(), 1);
+        // ...while the resident Arc removes as usual.
+        let current = r.peek("a").unwrap();
+        assert!(r.remove_if_same("a", &current));
+        assert!(r.is_empty());
     }
 
     #[test]

@@ -1,0 +1,339 @@
+//! Typed request specs and model handles — the single request vocabulary
+//! shared by the in-process API and the wire protocol (DESIGN.md §2).
+//!
+//! * [`FitSpec`] — everything a fit needs besides the training points:
+//!   estimator kind, dimension, optional bandwidth overrides, optional
+//!   execution variant.  Built fluently:
+//!
+//!   ```ignore
+//!   let spec = FitSpec::new(EstimatorKind::SdKde, 16)
+//!       .bandwidth(0.5)
+//!       .score_bandwidth(0.35)
+//!       .variant(Variant::Flash);
+//!   let handle = coordinator.fit("m", points, &spec)?;
+//!   ```
+//!
+//! * [`QuerySpec`] — query points plus an [`OutputMode`]
+//!   (`Density | LogDensity | Grad`).  Every mode flows through the same
+//!   bounded queue, dynamic batcher and metrics.
+//!
+//! * [`ModelHandle`] — returned by `fit`: the resolved bandwidths, bucket
+//!   and an `Arc` of the fitted model, so the eval hot path does no
+//!   stringly-typed registry lookup.  Name-based lookup
+//!   (`Coordinator::handle`) remains for the wire path.
+
+use std::sync::Arc;
+
+use crate::estimator::{bandwidth, EstimatorKind, Variant};
+
+use super::registry::FittedModel;
+
+/// Typed fit request: what to fit and how, minus the training data.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FitSpec {
+    /// Which estimator to fit.
+    pub estimator: EstimatorKind,
+    /// Data dimension (points are row-major `[n, d]`).
+    pub d: usize,
+    /// Evaluation-bandwidth override; `None` resolves to the rule of thumb
+    /// (Silverman for KDE/Laplace, the SD-rate schedule for SD-KDE).
+    pub h: Option<f64>,
+    /// Score-bandwidth override; `None` resolves to `h / sqrt(2)`
+    /// (the heat-semigroup rule t' = t/2, paper §5).
+    pub h_score: Option<f64>,
+    /// Execution-variant override; `None` serves the config default.
+    pub variant: Option<Variant>,
+}
+
+impl FitSpec {
+    pub fn new(estimator: EstimatorKind, d: usize) -> FitSpec {
+        FitSpec { estimator, d, h: None, h_score: None, variant: None }
+    }
+
+    /// Override the evaluation bandwidth.
+    pub fn bandwidth(mut self, h: f64) -> FitSpec {
+        self.h = Some(h);
+        self
+    }
+
+    /// Override the score-estimation bandwidth (SD-KDE fit pass only).
+    pub fn score_bandwidth(mut self, h_score: f64) -> FitSpec {
+        self.h_score = Some(h_score);
+        self
+    }
+
+    /// Pin the execution variant instead of the config default.
+    pub fn variant(mut self, variant: Variant) -> FitSpec {
+        self.variant = Some(variant);
+        self
+    }
+
+    /// Resolve the evaluation bandwidth against training data: the
+    /// override if set, otherwise the estimator's rule of thumb.
+    pub fn resolve_h(&self, points: &[f32], n: usize) -> f64 {
+        match self.h {
+            Some(h) => h,
+            None => match self.estimator {
+                EstimatorKind::SdKde => bandwidth::sdkde_rate(points, n, self.d),
+                _ => bandwidth::silverman(points, n, self.d),
+            },
+        }
+    }
+
+    /// Resolve the score bandwidth given the resolved evaluation bandwidth.
+    pub fn resolve_h_score(&self, h: f64) -> f64 {
+        self.h_score.unwrap_or_else(|| bandwidth::score_bandwidth(h))
+    }
+
+    /// Resolve the served variant against the configured default.
+    pub fn resolve_variant(&self, default: Variant) -> Variant {
+        self.variant.unwrap_or(default)
+    }
+}
+
+/// What a query asks to be computed at each point.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OutputMode {
+    /// Estimated density `p̂(y)` — one value per query row.
+    Density,
+    /// `ln p̂(y)` (clamped at `f32::MIN_POSITIVE` before the log so signed
+    /// or underflowed densities cannot produce non-finite wire values).
+    LogDensity,
+    /// `∇ log p̂(y)` — `d` values per query row, from the score kernel.
+    Grad,
+}
+
+/// Which artifact family serves a mode; modes sharing a kernel co-batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QueryKernel {
+    Density,
+    Score,
+}
+
+impl OutputMode {
+    pub fn parse(s: &str) -> Option<OutputMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "density" => Some(OutputMode::Density),
+            "log_density" | "logdensity" | "log-density" => Some(OutputMode::LogDensity),
+            "grad" | "gradient" | "score" => Some(OutputMode::Grad),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            OutputMode::Density => "density",
+            OutputMode::LogDensity => "log_density",
+            OutputMode::Grad => "grad",
+        }
+    }
+
+    /// The kernel family that serves this mode.  `Density` and
+    /// `LogDensity` share one execution (the log is a post-scatter
+    /// transform); `Grad` runs the score artifacts.
+    pub fn kernel(&self) -> QueryKernel {
+        match self {
+            OutputMode::Density | OutputMode::LogDensity => QueryKernel::Density,
+            OutputMode::Grad => QueryKernel::Score,
+        }
+    }
+
+    /// Output values per query row for a `d`-dimensional model.
+    pub fn width(&self, d: usize) -> usize {
+        match self.kernel() {
+            QueryKernel::Density => 1,
+            QueryKernel::Score => d,
+        }
+    }
+
+    pub const ALL: [OutputMode; 3] =
+        [OutputMode::Density, OutputMode::LogDensity, OutputMode::Grad];
+}
+
+impl std::fmt::Display for OutputMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Typed query request: points plus the requested output mode.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuerySpec {
+    /// Row-major `[k, d]` query points (`d` is the fitted model's).
+    pub points: Vec<f32>,
+    pub mode: OutputMode,
+}
+
+impl QuerySpec {
+    pub fn new(points: Vec<f32>, mode: OutputMode) -> QuerySpec {
+        QuerySpec { points, mode }
+    }
+
+    pub fn density(points: Vec<f32>) -> QuerySpec {
+        QuerySpec::new(points, OutputMode::Density)
+    }
+
+    pub fn log_density(points: Vec<f32>) -> QuerySpec {
+        QuerySpec::new(points, OutputMode::LogDensity)
+    }
+
+    pub fn grad(points: Vec<f32>) -> QuerySpec {
+        QuerySpec::new(points, OutputMode::Grad)
+    }
+}
+
+/// Handle to a fitted model: resolved fit parameters plus an `Arc` of the
+/// resident model, so `eval`/`grad`/`delete` skip the registry on the hot
+/// path.  Handles are cheap to clone and stay valid (the tensors stay
+/// resident) even if the registry later evicts the name.
+#[derive(Debug, Clone)]
+pub struct ModelHandle {
+    model: Arc<FittedModel>,
+}
+
+impl ModelHandle {
+    pub(crate) fn new(model: Arc<FittedModel>) -> ModelHandle {
+        ModelHandle { model }
+    }
+
+    pub(crate) fn fitted(&self) -> &Arc<FittedModel> {
+        &self.model
+    }
+
+    pub fn name(&self) -> &str {
+        &self.model.name
+    }
+
+    pub fn kind(&self) -> EstimatorKind {
+        self.model.kind
+    }
+
+    pub fn variant(&self) -> Variant {
+        self.model.variant
+    }
+
+    pub fn d(&self) -> usize {
+        self.model.d
+    }
+
+    /// Actual training-sample count (`<= bucket_n`).
+    pub fn n(&self) -> usize {
+        self.model.n
+    }
+
+    /// Train bucket the resident tensors are padded to.
+    pub fn bucket_n(&self) -> usize {
+        self.model.bucket_n
+    }
+
+    /// Resolved evaluation bandwidth.
+    pub fn h(&self) -> f64 {
+        self.model.h
+    }
+
+    /// Resolved score bandwidth (what the SD-KDE fit pass actually used) —
+    /// callers must not re-derive `h / sqrt(2)` by hand.
+    pub fn h_score(&self) -> f64 {
+        self.model.h_score
+    }
+
+    /// The fit report for this model (what the wire `FitOk` carries).
+    pub fn info(&self) -> super::FitInfo {
+        let m = &self.model;
+        super::FitInfo {
+            model: m.name.clone(),
+            kind: m.kind,
+            variant: m.variant,
+            n: m.n,
+            d: m.d,
+            h: m.h,
+            h_score: m.h_score,
+            bucket_n: m.bucket_n,
+            fit_ms: m.fit_ms,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn builder_sets_only_what_is_asked() {
+        let spec = FitSpec::new(EstimatorKind::SdKde, 16);
+        assert_eq!(spec.estimator, EstimatorKind::SdKde);
+        assert_eq!(spec.d, 16);
+        assert_eq!(spec.h, None);
+        assert_eq!(spec.h_score, None);
+        assert_eq!(spec.variant, None);
+
+        let spec = spec.bandwidth(0.5).score_bandwidth(0.35).variant(Variant::Gemm);
+        assert_eq!(spec.h, Some(0.5));
+        assert_eq!(spec.h_score, Some(0.35));
+        assert_eq!(spec.variant, Some(Variant::Gemm));
+    }
+
+    #[test]
+    fn defaults_reproduce_bandwidth_rules() {
+        // FitSpec with no overrides must resolve to exactly the rules in
+        // estimator::bandwidth: Silverman for KDE/Laplace, SD-rate for
+        // SD-KDE, and h/sqrt(2) for the score bandwidth.
+        let mut rng = Pcg64::seeded(11);
+        for d in [1usize, 4, 16] {
+            let n = 500;
+            let x = rng.normal_vec_f32(n * d);
+            for kind in [EstimatorKind::Kde, EstimatorKind::Laplace] {
+                let h = FitSpec::new(kind, d).resolve_h(&x, n);
+                assert_eq!(h, bandwidth::silverman(&x, n, d));
+            }
+            let spec = FitSpec::new(EstimatorKind::SdKde, d);
+            let h = spec.resolve_h(&x, n);
+            assert_eq!(h, bandwidth::sdkde_rate(&x, n, d));
+            assert_eq!(spec.resolve_h_score(h), bandwidth::score_bandwidth(h));
+            assert_eq!(spec.resolve_h_score(h), h / std::f64::consts::SQRT_2);
+        }
+    }
+
+    #[test]
+    fn overrides_win_over_rules() {
+        let x = vec![0.0f32, 1.0, 2.0, 3.0];
+        let spec = FitSpec::new(EstimatorKind::SdKde, 1)
+            .bandwidth(0.7)
+            .score_bandwidth(0.2);
+        assert_eq!(spec.resolve_h(&x, 4), 0.7);
+        assert_eq!(spec.resolve_h_score(0.7), 0.2);
+        assert_eq!(spec.resolve_variant(Variant::Flash), Variant::Flash);
+        assert_eq!(
+            spec.variant(Variant::Stream).resolve_variant(Variant::Flash),
+            Variant::Stream
+        );
+    }
+
+    #[test]
+    fn output_mode_parse_round_trip() {
+        for mode in OutputMode::ALL {
+            assert_eq!(OutputMode::parse(mode.as_str()), Some(mode));
+        }
+        assert_eq!(OutputMode::parse("gradient"), Some(OutputMode::Grad));
+        assert_eq!(OutputMode::parse("warp"), None);
+    }
+
+    #[test]
+    fn mode_kernel_and_width() {
+        assert_eq!(OutputMode::Density.kernel(), QueryKernel::Density);
+        assert_eq!(OutputMode::LogDensity.kernel(), QueryKernel::Density);
+        assert_eq!(OutputMode::Grad.kernel(), QueryKernel::Score);
+        assert_eq!(OutputMode::Density.width(16), 1);
+        assert_eq!(OutputMode::LogDensity.width(16), 1);
+        assert_eq!(OutputMode::Grad.width(16), 16);
+    }
+
+    #[test]
+    fn query_spec_constructors() {
+        let pts = vec![1.0f32, 2.0];
+        assert_eq!(QuerySpec::density(pts.clone()).mode, OutputMode::Density);
+        assert_eq!(QuerySpec::log_density(pts.clone()).mode, OutputMode::LogDensity);
+        assert_eq!(QuerySpec::grad(pts).mode, OutputMode::Grad);
+    }
+}

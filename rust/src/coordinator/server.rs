@@ -2,8 +2,16 @@
 //! connection (the request path inside each connection is the coordinator's
 //! queue + dispatcher, so connection threads only parse/serialize).
 //!
-//! Also provides `Client`, the matching blocking client used by the
-//! examples, the CLI and the integration tests.
+//! Protocol-version negotiation happens here (DESIGN.md §9): the server
+//! answers `ping` with its [`protocol::PROTOCOL_VERSION`], rejects request
+//! lines newer than it speaks, and [`Client::connect`] pings first,
+//! refusing servers too old to parse the dialect this client emits.
+//!
+//! Also provides [`Client`], the matching blocking client used by the
+//! examples, the CLI and the integration tests.  Besides the one-call
+//! round-trip helpers, `Client::submit` / `Client::recv` expose the
+//! pipelined path: write several request lines back-to-back, then collect
+//! the replies in order.
 
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
@@ -14,8 +22,9 @@ use std::time::Duration;
 
 use anyhow::{anyhow, Context, Result};
 
-use super::protocol::{Request, Response};
-use super::Coordinator;
+use super::protocol::{Request, Response, PROTOCOL_VERSION};
+use super::request::{FitSpec, QuerySpec};
+use super::{Coordinator, FitInfo, QueryResult};
 use crate::{log_info, log_warn};
 
 /// A running TCP server bound to a local address.
@@ -44,7 +53,7 @@ impl Server {
                 .spawn(move || accept_loop(listener, coordinator, stop))
                 .context("spawning acceptor")?
         };
-        log_info!("server", "listening on {local_addr}");
+        log_info!("server", "listening on {local_addr} (protocol v{PROTOCOL_VERSION})");
         Ok(Server { coordinator, local_addr, stop, accept_thread: Some(accept_thread) })
     }
 
@@ -148,6 +157,8 @@ fn connection_loop(
 }
 
 /// One request -> one response (shared by TCP and any future transport).
+/// Version mismatches surface here as `Error` responses, since
+/// `Request::parse` checks the line's `"v"` field.
 pub fn handle_line(coordinator: &Coordinator, line: &str) -> Response {
     let request = match Request::parse(line) {
         Ok(r) => r,
@@ -156,55 +167,43 @@ pub fn handle_line(coordinator: &Coordinator, line: &str) -> Response {
     handle_request(coordinator, request)
 }
 
+/// Serve one typed request.  The wire path resolves model names through
+/// `Coordinator::handle` and then runs the *same* typed specs the
+/// in-process API uses.
 pub fn handle_request(coordinator: &Coordinator, request: Request) -> Response {
     match request {
-        Request::Ping => Response::Pong,
+        Request::Ping => Response::Pong { version: PROTOCOL_VERSION },
         Request::Models => Response::Models { names: coordinator.registry().names() },
         Request::Stats => Response::Stats { body: coordinator.stats_json() },
         Request::Delete { model } => {
             let existed = coordinator.registry().remove(&model);
             Response::Deleted { model, existed }
         }
-        Request::Fit { model, estimator, d, points, h, h_score, variant, .. } => {
-            match coordinator.fit(
-                &model,
-                estimator,
-                d,
-                points,
-                h,
-                h_score,
-                variant.as_deref(),
-            ) {
-                Ok(info) => Response::FitOk {
-                    model: info.model,
-                    n: info.n,
-                    d: info.d,
-                    h: info.h,
-                    bucket_n: info.bucket_n,
-                    fit_ms: info.fit_ms,
-                },
+        Request::Fit { model, spec, points } => {
+            match coordinator.fit(&model, points, &spec) {
+                Ok(handle) => Response::FitOk { info: handle.info() },
                 Err(e) => Response::Error { message: format!("{e:#}") },
             }
         }
-        Request::Grad { model, points, .. } => {
-            match coordinator.registry().get(&model) {
-                None => Response::Error {
+        Request::Query { model, d, spec } => {
+            let Some(handle) = coordinator.handle(&model) else {
+                return Response::Error {
                     message: format!("unknown model {model:?}"),
-                },
-                Some(m) => match coordinator.grad(&model, points) {
-                    Ok(gradients) => Response::GradOk { gradients, d: m.d },
-                    Err(e) => Response::Error { message: format!("{e:#}") },
-                },
+                };
+            };
+            // The wire rows must match the fitted dimension exactly; the
+            // flat-buffer check in submit() alone would silently regroup
+            // e.g. two 1-D rows into one 2-D query.
+            if d != handle.d() {
+                return Response::Error {
+                    message: format!(
+                        "points are [k, {d}] but model {model:?} has d={}",
+                        handle.d()
+                    ),
+                };
             }
-        }
-        Request::Eval { model, points, .. } => {
-            match coordinator.eval(&model, points) {
-                Ok(r) => Response::EvalOk {
-                    densities: r.densities,
-                    queue_ms: r.queue_ms,
-                    exec_ms: r.exec_ms,
-                    batch_size: r.batch_size,
-                },
+            match coordinator.query(&handle, spec) {
+                Ok(result) => Response::QueryOk { d: handle.d(), result },
                 Err(e) => Response::Error { message: format!("{e:#}") },
             }
         }
@@ -219,22 +218,55 @@ pub fn handle_request(coordinator: &Coordinator, request: Request) -> Response {
 pub struct Client {
     reader: BufReader<TcpStream>,
     writer: BufWriter<TcpStream>,
+    /// The server's advertised protocol version (from the handshake
+    /// pong).  This client always emits [`PROTOCOL_VERSION`], so
+    /// connect fails against servers older than that.
+    server_version: usize,
 }
 
 impl Client {
+    /// Connect and check protocol compatibility via an initial ping.
     pub fn connect<A: ToSocketAddrs>(addr: A) -> Result<Client> {
         let stream = TcpStream::connect(addr).context("connecting")?;
         stream.set_nodelay(true)?;
-        Ok(Client {
+        let mut client = Client {
             reader: BufReader::new(stream.try_clone()?),
             writer: BufWriter::new(stream),
-        })
+            server_version: PROTOCOL_VERSION,
+        };
+        match client.round_trip(&Request::Ping)? {
+            Response::Pong { version } => {
+                if version < PROTOCOL_VERSION {
+                    return Err(anyhow!(
+                        "server speaks protocol v{version}; this client \
+                         requires v{PROTOCOL_VERSION}"
+                    ));
+                }
+                client.server_version = version;
+            }
+            other => return Err(anyhow!("bad handshake response {other:?}")),
+        }
+        Ok(client)
     }
 
-    fn round_trip(&mut self, line: &str) -> Result<Response> {
-        self.writer.write_all(line.as_bytes())?;
+    /// The server's advertised protocol version (>= this client's).
+    pub fn protocol_version(&self) -> usize {
+        self.server_version
+    }
+
+    /// Write one request line without waiting for the reply.  Pair with
+    /// [`Client::recv`]: the server answers one response line per request
+    /// line, in order, so submitting a window of requests before draining
+    /// the replies pipelines the connection.
+    pub fn submit(&mut self, request: &Request) -> Result<()> {
+        self.writer.write_all(request.to_line().as_bytes())?;
         self.writer.write_all(b"\n")?;
         self.writer.flush()?;
+        Ok(())
+    }
+
+    /// Read the next response line (replies arrive in request order).
+    pub fn recv(&mut self) -> Result<Response> {
         let mut response = String::new();
         let n = self.reader.read_line(&mut response)?;
         if n == 0 {
@@ -243,83 +275,81 @@ impl Client {
         Response::parse(response.trim())
     }
 
+    fn round_trip(&mut self, request: &Request) -> Result<Response> {
+        self.submit(request)?;
+        self.recv()
+    }
+
     pub fn ping(&mut self) -> Result<()> {
-        match self.round_trip(&Request::Ping.to_line(0))? {
-            Response::Pong => Ok(()),
+        match self.round_trip(&Request::Ping)? {
+            Response::Pong { .. } => Ok(()),
             other => Err(anyhow!("unexpected response {other:?}")),
         }
     }
 
-    /// Fit a model from row-major [n, d] points.
-    #[allow(clippy::too_many_arguments)]
+    /// Fit a model from row-major `[n, spec.d]` points.
     pub fn fit(
         &mut self,
         model: &str,
-        estimator: crate::estimator::EstimatorKind,
-        d: usize,
         points: Vec<f32>,
-        h: Option<f64>,
-        h_score: Option<f64>,
-        variant: Option<String>,
-    ) -> Result<super::FitInfo> {
-        let n = points.len() / d;
+        spec: &FitSpec,
+    ) -> Result<FitInfo> {
         let req = Request::Fit {
             model: model.into(),
-            estimator,
-            d,
+            spec: spec.clone(),
             points,
-            n,
-            h,
-            h_score,
-            variant,
         };
-        match self.round_trip(&req.to_line(d))? {
-            Response::FitOk { model, n, d, h, bucket_n, fit_ms } => {
-                Ok(super::FitInfo { model, n, d, h, bucket_n, fit_ms })
-            }
+        match self.round_trip(&req)? {
+            Response::FitOk { info } => Ok(info),
             Response::Error { message } => Err(anyhow!(message)),
             other => Err(anyhow!("unexpected response {other:?}")),
         }
     }
 
-    /// Evaluate densities at row-major [k, d] points.
+    /// Run a typed query (any output mode) at row-major `[k, d]` points.
+    pub fn query(
+        &mut self,
+        model: &str,
+        d: usize,
+        spec: QuerySpec,
+    ) -> Result<QueryResult> {
+        let req = Request::Query { model: model.into(), d, spec };
+        match self.round_trip(&req)? {
+            Response::QueryOk { result, .. } => Ok(result),
+            Response::Error { message } => Err(anyhow!(message)),
+            other => Err(anyhow!("unexpected response {other:?}")),
+        }
+    }
+
+    /// Evaluate densities at row-major `[k, d]` points.
     pub fn eval(
         &mut self,
         model: &str,
         d: usize,
         points: Vec<f32>,
-    ) -> Result<super::EvalResult> {
-        let k = points.len() / d;
-        let req = Request::Eval { model: model.into(), points, k };
-        match self.round_trip(&req.to_line(d))? {
-            Response::EvalOk { densities, queue_ms, exec_ms, batch_size } => {
-                Ok(super::EvalResult { densities, queue_ms, exec_ms, batch_size })
-            }
-            Response::Error { message } => Err(anyhow!(message)),
-            other => Err(anyhow!("unexpected response {other:?}")),
-        }
+    ) -> Result<QueryResult> {
+        self.query(model, d, QuerySpec::density(points))
     }
 
-    /// Gradient of the fitted log-density at row-major [k, d] points.
-    pub fn grad(&mut self, model: &str, d: usize, points: Vec<f32>) -> Result<Vec<f32>> {
-        let k = points.len() / d;
-        let req = Request::Grad { model: model.into(), points, k };
-        match self.round_trip(&req.to_line(d))? {
-            Response::GradOk { gradients, .. } => Ok(gradients),
-            Response::Error { message } => Err(anyhow!(message)),
-            other => Err(anyhow!("unexpected response {other:?}")),
-        }
+    /// Gradient of the fitted log-density at row-major `[k, d]` points.
+    pub fn grad(
+        &mut self,
+        model: &str,
+        d: usize,
+        points: Vec<f32>,
+    ) -> Result<QueryResult> {
+        self.query(model, d, QuerySpec::grad(points))
     }
 
     pub fn models(&mut self) -> Result<Vec<String>> {
-        match self.round_trip(&Request::Models.to_line(0))? {
+        match self.round_trip(&Request::Models)? {
             Response::Models { names } => Ok(names),
             other => Err(anyhow!("unexpected response {other:?}")),
         }
     }
 
     pub fn stats(&mut self) -> Result<crate::util::json::Value> {
-        match self.round_trip(&Request::Stats.to_line(0))? {
+        match self.round_trip(&Request::Stats)? {
             Response::Stats { body } => Ok(body),
             other => Err(anyhow!("unexpected response {other:?}")),
         }
@@ -327,7 +357,7 @@ impl Client {
 
     pub fn delete(&mut self, model: &str) -> Result<bool> {
         let req = Request::Delete { model: model.into() };
-        match self.round_trip(&req.to_line(0))? {
+        match self.round_trip(&req)? {
             Response::Deleted { existed, .. } => Ok(existed),
             other => Err(anyhow!("unexpected response {other:?}")),
         }

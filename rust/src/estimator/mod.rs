@@ -48,6 +48,8 @@ impl EstimatorKind {
     pub fn needs_fit(&self) -> bool {
         matches!(self, Self::SdKde)
     }
+
+    pub const ALL: [EstimatorKind; 3] = [Self::Kde, Self::SdKde, Self::Laplace];
 }
 
 impl fmt::Display for EstimatorKind {
@@ -93,6 +95,9 @@ impl Variant {
             Self::NonFused => "nonfused",
         }
     }
+
+    pub const ALL: [Variant; 5] =
+        [Self::Flash, Self::Gemm, Self::Stream, Self::Naive, Self::NonFused];
 }
 
 impl fmt::Display for Variant {

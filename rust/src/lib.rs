@@ -11,6 +11,26 @@
 //!   loads the artifacts via PJRT and owns the entire request path
 //!   (routing, dynamic batching, model registry, backpressure, metrics).
 //!
+//! The public API is typed end-to-end (DESIGN.md §2): build a
+//! [`FitSpec`], get a [`ModelHandle`] back from
+//! [`Coordinator::fit`](coordinator::Coordinator::fit), and run
+//! [`QuerySpec`] queries — density, log-density or gradient — through one
+//! batched request path:
+//!
+//! ```ignore
+//! let coordinator = Coordinator::start(Config::default())?;
+//! let handle = coordinator.fit(
+//!     "m",
+//!     train_points,
+//!     &FitSpec::new(EstimatorKind::SdKde, 16).bandwidth(0.5),
+//! )?;
+//! let densities = coordinator.eval(&handle, queries)?.values;
+//! let grads = coordinator.grad(&handle, more_queries)?.values;
+//! ```
+//!
+//! The wire protocol (`coordinator::protocol`) is a versioned JSON
+//! serialization of those same types — see DESIGN.md §9.
+//!
 //! Python never runs at request time; after `make artifacts` the binary is
 //! self-contained.  See DESIGN.md for the architecture and the experiment
 //! index, EXPERIMENTS.md for paper-vs-measured results.
@@ -25,3 +45,7 @@ pub mod runtime;
 pub mod util;
 
 pub use config::Config;
+pub use coordinator::{
+    Coordinator, FitSpec, ModelHandle, OutputMode, QueryResult, QuerySpec,
+};
+pub use estimator::{EstimatorKind, Variant};

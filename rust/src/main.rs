@@ -6,7 +6,9 @@
 //!   bench  — regenerate a paper table/figure (DESIGN.md §5)
 //!   info   — inspect artifacts/manifest + engine platform
 //!   fit    — client: fit a model on a running server from a CSV-ish file
-//!   eval   — client: evaluate points under a fitted model
+//!            (builds a typed FitSpec from the flags)
+//!   eval   — client: query points under a fitted model in any output
+//!            mode (density, log_density, grad)
 //!   stats  — client: dump server stats JSON
 
 use std::path::{Path, PathBuf};
@@ -16,8 +18,8 @@ use anyhow::{anyhow, bail, Context, Result};
 use flash_sdkde::bench_harness::{self, experiments::Ctx, RunSpec};
 use flash_sdkde::config::Config;
 use flash_sdkde::coordinator::server::{Client, Server};
-use flash_sdkde::coordinator::Coordinator;
-use flash_sdkde::estimator::EstimatorKind;
+use flash_sdkde::coordinator::{Coordinator, FitSpec, OutputMode, QuerySpec};
+use flash_sdkde::estimator::{EstimatorKind, Variant};
 use flash_sdkde::runtime::Manifest;
 use flash_sdkde::util::cli::{self, Command, OptSpec};
 use flash_sdkde::util::json;
@@ -67,16 +69,19 @@ fn commands() -> Vec<Command> {
                 OptSpec::opt_required("d", "dimension"),
                 OptSpec::opt_default("estimator", "kde|sdkde|laplace", "sdkde"),
                 OptSpec::opt("h", "bandwidth override"),
+                OptSpec::opt("h-score", "score bandwidth override"),
+                OptSpec::opt("variant", "flash|gemm|stream|naive override"),
             ],
         },
         Command {
             name: "eval",
-            about: "client: evaluate densities under a fitted model",
+            about: "client: query points under a fitted model",
             opts: vec![
                 OptSpec::opt_default("addr", "server address", "127.0.0.1:7474"),
                 OptSpec::opt_required("model", "model name"),
                 OptSpec::opt_required("data", "whitespace/comma separated point file"),
                 OptSpec::opt_required("d", "dimension"),
+                OptSpec::opt_default("mode", "density|log_density|grad", "density"),
             ],
         },
         Command {
@@ -248,20 +253,31 @@ fn cmd_fit(p: &cli::Parsed) -> Result<()> {
     let points = read_points(p.get("data").expect("required"), d)?;
     let estimator = EstimatorKind::parse(&p.get_string("estimator", "sdkde"))
         .ok_or_else(|| anyhow!("bad estimator"))?;
-    let h = p.get_f64("h").map_err(|e| anyhow!(e))?;
+    let mut spec = FitSpec::new(estimator, d);
+    if let Some(h) = p.get_f64("h").map_err(|e| anyhow!(e))? {
+        spec = spec.bandwidth(h);
+    }
+    if let Some(hs) = p.get_f64("h-score").map_err(|e| anyhow!(e))? {
+        spec = spec.score_bandwidth(hs);
+    }
+    if let Some(name) = p.get("variant") {
+        let variant = Variant::parse(name)
+            .ok_or_else(|| anyhow!("bad variant {name:?}"))?;
+        spec = spec.variant(variant);
+    }
     let mut client = Client::connect(p.get_string("addr", "127.0.0.1:7474"))?;
-    let info = client.fit(
-        p.get("model").expect("required"),
-        estimator,
-        d,
-        points,
-        h,
-        None,
-        None,
-    )?;
+    let info = client.fit(p.get("model").expect("required"), points, &spec)?;
     println!(
-        "fitted {} (n={}, d={}, h={:.5}, bucket={}, {:.1}ms)",
-        info.model, info.n, info.d, info.h, info.bucket_n, info.fit_ms
+        "fitted {} ({}/{}, n={}, d={}, h={:.5}, h_score={:.5}, bucket={}, {:.1}ms)",
+        info.model,
+        info.kind,
+        info.variant,
+        info.n,
+        info.d,
+        info.h,
+        info.h_score,
+        info.bucket_n,
+        info.fit_ms
     );
     Ok(())
 }
@@ -269,14 +285,26 @@ fn cmd_fit(p: &cli::Parsed) -> Result<()> {
 fn cmd_eval(p: &cli::Parsed) -> Result<()> {
     let d = p.get_usize("d").map_err(|e| anyhow!(e))?.expect("required");
     let points = read_points(p.get("data").expect("required"), d)?;
+    let mode_name = p.get_string("mode", "density");
+    let mode = OutputMode::parse(&mode_name)
+        .ok_or_else(|| anyhow!("bad mode {mode_name:?}"))?;
     let mut client = Client::connect(p.get_string("addr", "127.0.0.1:7474"))?;
-    let result = client.eval(p.get("model").expect("required"), d, points)?;
-    for v in &result.densities {
-        println!("{v}");
+    let result = client.query(
+        p.get("model").expect("required"),
+        d,
+        QuerySpec::new(points, mode),
+    )?;
+    // One output row per line: a single value for densities, d
+    // comma-separated values for gradients.
+    let width = mode.width(d);
+    for row in result.values.chunks_exact(width) {
+        let line: Vec<String> = row.iter().map(|v| v.to_string()).collect();
+        println!("{}", line.join(","));
     }
     eprintln!(
-        "({} densities, queue {:.2}ms, exec {:.2}ms, batch size {})",
-        result.densities.len(),
+        "({} {} rows, queue {:.2}ms, exec {:.2}ms, batch size {})",
+        result.values.len() / width,
+        mode,
         result.queue_ms,
         result.exec_ms,
         result.batch_size

@@ -1,12 +1,15 @@
 //! Coordinator + server integration: fit/eval over the real engine, the
-//! TCP wire protocol, dynamic batching, backpressure and registry behaviour.
+//! typed FitSpec/QuerySpec/ModelHandle API, the versioned wire protocol,
+//! dynamic batching (densities *and* gradients), backpressure and registry
+//! behaviour.
 
 use std::path::PathBuf;
 use std::sync::Arc;
 
 use flash_sdkde::config::Config;
+use flash_sdkde::coordinator::protocol::{Request, Response, PROTOCOL_VERSION};
 use flash_sdkde::coordinator::server::{handle_line, Client, Server};
-use flash_sdkde::coordinator::Coordinator;
+use flash_sdkde::coordinator::{Coordinator, FitSpec, OutputMode, QuerySpec};
 use flash_sdkde::data::mixture::by_dim;
 use flash_sdkde::estimator::{native, EstimatorKind};
 use flash_sdkde::util::rng::Pcg64;
@@ -52,20 +55,23 @@ fn fit_eval_kde_matches_native() {
     let n = 300;
     let train = mix.sample(n, &mut rng);
 
-    let info = coord
-        .fit("m", EstimatorKind::Kde, d, train.clone(), None, None, None)
+    let model = coord
+        .fit("m", train.clone(), &FitSpec::new(EstimatorKind::Kde, d))
         .expect("fit");
-    assert_eq!(info.n, n);
-    assert!(info.bucket_n >= n);
-    assert!(info.h > 0.0);
+    assert_eq!(model.n(), n);
+    assert!(model.bucket_n() >= n);
+    assert!(model.h() > 0.0);
+    // The handle exposes the resolved score bandwidth directly.
+    assert!((model.h_score() - model.h() / std::f64::consts::SQRT_2).abs() < 1e-12);
 
     let queries = mix.sample(10, &mut rng);
-    let res = coord.eval("m", queries.clone()).expect("eval");
-    assert_eq!(res.densities.len(), 10);
+    let res = coord.eval(&model, queries.clone()).expect("eval");
+    assert_eq!(res.values.len(), 10);
+    assert_eq!(res.mode, OutputMode::Density);
 
     let w = vec![1.0f32; n];
-    let want = native::kde(&train, &w, &queries, d, info.h);
-    for (a, b) in res.densities.iter().zip(&want) {
+    let want = native::kde(&train, &w, &queries, d, model.h());
+    for (a, b) in res.values.iter().zip(&want) {
         let rel = ((*a as f64 - b) / b).abs();
         assert!(rel < 1e-3, "{a} vs {b}");
     }
@@ -83,26 +89,60 @@ fn fit_eval_sdkde_and_laplace_match_native() {
     let queries = mix.sample(12, &mut rng);
     let w = vec![1.0f32; n];
 
-    // SD-KDE (explicit bandwidth so the oracle sees identical inputs).
+    // SD-KDE (explicit bandwidths so the oracle sees identical inputs).
     let h = 0.35;
     let hs = h / std::f64::consts::SQRT_2;
-    coord
-        .fit("sd", EstimatorKind::SdKde, d, train.clone(), Some(h), Some(hs), None)
+    let sd = coord
+        .fit(
+            "sd",
+            train.clone(),
+            &FitSpec::new(EstimatorKind::SdKde, d)
+                .bandwidth(h)
+                .score_bandwidth(hs),
+        )
         .expect("fit sdkde");
-    let res = coord.eval("sd", queries.clone()).expect("eval sdkde");
+    assert_eq!(sd.h(), h);
+    assert_eq!(sd.h_score(), hs);
+    let res = coord.eval(&sd, queries.clone()).expect("eval sdkde");
     let want = native::sdkde(&train, &w, &queries, d, h, hs);
-    for (a, b) in res.densities.iter().zip(&want) {
+    for (a, b) in res.values.iter().zip(&want) {
         assert!(((*a as f64 - b) / b).abs() < 2e-3, "{a} vs {b}");
     }
 
     // Laplace (signed estimator).
-    coord
-        .fit("lc", EstimatorKind::Laplace, d, train.clone(), Some(h), None, None)
+    let lc = coord
+        .fit(
+            "lc",
+            train.clone(),
+            &FitSpec::new(EstimatorKind::Laplace, d).bandwidth(h),
+        )
         .expect("fit laplace");
-    let res = coord.eval("lc", queries.clone()).expect("eval laplace");
+    let res = coord.eval(&lc, queries.clone()).expect("eval laplace");
     let want = native::laplace(&train, &w, &queries, d, h);
-    for (a, b) in res.densities.iter().zip(&want) {
+    for (a, b) in res.values.iter().zip(&want) {
         assert!((*a as f64 - b).abs() < 1e-5 + 1e-3 * b.abs(), "{a} vs {b}");
+    }
+}
+
+#[test]
+fn log_density_mode_is_ln_of_density() {
+    let _dir = require_artifacts!();
+    let coord = coordinator().unwrap();
+    let d = 1;
+    let mix = by_dim(d);
+    let mut rng = Pcg64::seeded(21);
+    let model = coord
+        .fit("log", mix.sample(200, &mut rng), &FitSpec::new(EstimatorKind::Kde, d))
+        .expect("fit");
+    let queries = mix.sample(8, &mut rng);
+    let dens = coord.eval(&model, queries.clone()).expect("eval");
+    let logs = coord
+        .query(&model, QuerySpec::log_density(queries))
+        .expect("log eval");
+    assert_eq!(logs.mode, OutputMode::LogDensity);
+    assert_eq!(logs.values.len(), dens.values.len());
+    for (l, p) in logs.values.iter().zip(&dens.values) {
+        assert!((l - p.max(f32::MIN_POSITIVE).ln()).abs() < 1e-6, "{l} vs ln {p}");
     }
 }
 
@@ -115,18 +155,18 @@ fn eval_chunks_requests_larger_than_biggest_bucket() {
     let mut rng = Pcg64::seeded(3);
     let n = 200;
     let train = mix.sample(n, &mut rng);
-    let info = coord
-        .fit("big", EstimatorKind::Kde, d, train.clone(), None, None, None)
+    let model = coord
+        .fit("big", train.clone(), &FitSpec::new(EstimatorKind::Kde, d))
         .expect("fit");
 
     // More queries than any m-bucket: the dispatcher must chunk.
     let k = 700;
     let queries = mix.sample(k, &mut rng);
-    let res = coord.eval("big", queries.clone()).expect("eval");
-    assert_eq!(res.densities.len(), k);
+    let res = coord.eval(&model, queries.clone()).expect("eval");
+    assert_eq!(res.values.len(), k);
     let w = vec![1.0f32; n];
-    let want = native::kde(&train, &w, &queries, d, info.h);
-    for (i, (a, b)) in res.densities.iter().zip(&want).enumerate() {
+    let want = native::kde(&train, &w, &queries, d, model.h());
+    for (i, (a, b)) in res.values.iter().zip(&want).enumerate() {
         assert!(((*a as f64 - b) / b).abs() < 1e-3, "row {i}: {a} vs {b}");
     }
 }
@@ -135,25 +175,30 @@ fn eval_chunks_requests_larger_than_biggest_bucket() {
 fn unknown_model_and_bad_points_error() {
     let _dir = require_artifacts!();
     let coord = coordinator().unwrap();
-    assert!(coord.eval("ghost", vec![1.0]).is_err());
+    assert!(coord.handle("ghost").is_none());
 
     let d = 1;
     let mix = by_dim(d);
     let mut rng = Pcg64::seeded(4);
-    coord
-        .fit("m", EstimatorKind::Kde, d, mix.sample(50, &mut rng), None, None, None)
+    let model = coord
+        .fit("m", mix.sample(50, &mut rng), &FitSpec::new(EstimatorKind::Kde, d))
         .expect("fit");
     // Empty points rejected.
-    assert!(coord.eval("m", vec![]).is_err());
+    assert!(coord.eval(&model, vec![]).is_err());
+    // Misaligned points rejected (5 values cannot tile a d=16 model).
+    let m16 = coord
+        .fit(
+            "m16",
+            by_dim(16).sample(40, &mut rng),
+            &FitSpec::new(EstimatorKind::Kde, 16),
+        )
+        .expect("fit 16d");
+    assert!(coord.eval(&m16, vec![0.0; 5]).is_err());
     // Oversized fit rejected with a clear message.
     let huge = coord.fit(
         "huge",
-        EstimatorKind::Kde,
-        16,
         vec![0.0; 16 * 100_000],
-        None,
-        None,
-        None,
+        &FitSpec::new(EstimatorKind::Kde, 16),
     );
     let err = format!("{:#}", huge.unwrap_err());
     assert!(err.contains("no train bucket"), "{err}");
@@ -171,8 +216,8 @@ fn concurrent_clients_get_batched() {
     let d = 1;
     let mix = by_dim(d);
     let mut rng = Pcg64::seeded(5);
-    coord
-        .fit("m", EstimatorKind::Kde, d, mix.sample(100, &mut rng), None, None, None)
+    let model = coord
+        .fit("m", mix.sample(100, &mut rng), &FitSpec::new(EstimatorKind::Kde, d))
         .expect("fit");
 
     let clients = 6;
@@ -181,11 +226,12 @@ fn concurrent_clients_get_batched() {
         .map(|c| {
             let coord = Arc::clone(&coord);
             let mix = mix.clone();
+            let model = model.clone();
             std::thread::spawn(move || {
                 let mut rng = Pcg64::new(50, c);
                 let mut max_batch = 0usize;
                 for _ in 0..per_client {
-                    let res = coord.eval("m", mix.sample(4, &mut rng)).expect("eval");
+                    let res = coord.eval(&model, mix.sample(4, &mut rng)).expect("eval");
                     max_batch = max_batch.max(res.batch_size);
                 }
                 max_batch
@@ -204,6 +250,60 @@ fn concurrent_clients_get_batched() {
 }
 
 #[test]
+fn concurrent_grads_get_batched_like_evals() {
+    // Gradients ride the same queue and batcher: under concurrent load
+    // they must co-batch and report batch_size exactly like densities.
+    let _dir = require_artifacts!();
+    let coord = Arc::new(Coordinator::start({
+        let mut cfg = test_config(artifacts_dir().unwrap());
+        cfg.batch_wait_ms = 5;
+        cfg
+    })
+    .expect("coordinator"));
+    let d = 1;
+    let mix = by_dim(d);
+    let mut rng = Pcg64::seeded(51);
+    let model = coord
+        .fit("g", mix.sample(100, &mut rng), &FitSpec::new(EstimatorKind::Kde, d))
+        .expect("fit");
+
+    let clients = 6;
+    let per_client = 10;
+    let threads: Vec<_> = (0..clients)
+        .map(|c| {
+            let coord = Arc::clone(&coord);
+            let mix = mix.clone();
+            let model = model.clone();
+            std::thread::spawn(move || {
+                let mut rng = Pcg64::new(60, c);
+                let mut max_batch = 0usize;
+                for _ in 0..per_client {
+                    let res = coord.grad(&model, mix.sample(4, &mut rng)).expect("grad");
+                    assert_eq!(res.mode, OutputMode::Grad);
+                    max_batch = max_batch.max(res.batch_size);
+                }
+                max_batch
+            })
+        })
+        .collect();
+    let max_batch = threads
+        .into_iter()
+        .map(|h| h.join().unwrap())
+        .max()
+        .unwrap();
+    assert!(max_batch >= 2, "no grad batching observed (max {max_batch})");
+    // Grad traffic is visible in the metrics document.
+    let metrics = coord.stats_json();
+    let m = metrics.get("metrics").expect("metrics");
+    assert_eq!(
+        m.get("grad_requests").unwrap().as_usize(),
+        Some(clients as usize * per_client)
+    );
+    assert!(m.get("batches").unwrap().as_usize().unwrap() >= 1);
+    assert!(coord.metrics().mean_batch_size() >= 1.0);
+}
+
+#[test]
 fn tcp_round_trip_full_protocol() {
     let _dir = require_artifacts!();
     let coord = coordinator().unwrap();
@@ -217,21 +317,31 @@ fn tcp_round_trip_full_protocol() {
     let queries = mix.sample(7, &mut rng);
 
     let mut client = Client::connect(addr).expect("connect");
+    assert_eq!(client.protocol_version(), PROTOCOL_VERSION);
     client.ping().expect("ping");
     let info = client
-        .fit("wire", EstimatorKind::SdKde, d, train.clone(), None, None, None)
+        .fit("wire", train.clone(), &FitSpec::new(EstimatorKind::SdKde, d))
         .expect("fit");
     assert_eq!(info.n, 120);
+    assert_eq!(info.kind, EstimatorKind::SdKde);
+    // The wire FitOk carries the resolved score bandwidth.
+    assert!((info.h_score - info.h / std::f64::consts::SQRT_2).abs() < 1e-12);
 
     let res = client.eval("wire", d, queries.clone()).expect("eval");
-    assert_eq!(res.densities.len(), 7);
+    assert_eq!(res.values.len(), 7);
 
     // In-process numerics must equal wire numerics.
+    let handle = server.coordinator().handle("wire").expect("handle");
     let local = server
         .coordinator()
-        .eval("wire", queries)
+        .eval(&handle, queries)
         .expect("local eval");
-    assert_eq!(res.densities, local.densities);
+    assert_eq!(res.values, local.values);
+
+    // Wire rows whose width disagrees with the fitted dimension are
+    // rejected outright (not silently regrouped into wider points).
+    let err = client.eval("wire", 2, vec![0.0, 0.0]).unwrap_err();
+    assert!(format!("{err:#}").contains("d=1"), "{err:#}");
 
     assert_eq!(client.models().expect("models"), vec!["wire".to_string()]);
     let stats = client.stats().expect("stats");
@@ -244,16 +354,67 @@ fn tcp_round_trip_full_protocol() {
 }
 
 #[test]
+fn pipelined_wire_queries_reply_in_order() {
+    // submit()/recv() pipelining: write a window of requests, then drain
+    // the replies — they must arrive in request order with the same
+    // numerics as sequential round trips.
+    let _dir = require_artifacts!();
+    let coord = coordinator().unwrap();
+    let mut server = Server::start(coord, "127.0.0.1", 0).expect("server");
+    let addr = server.local_addr();
+
+    let d = 1;
+    let mix = by_dim(d);
+    let mut rng = Pcg64::seeded(61);
+    let mut client = Client::connect(addr).expect("connect");
+    client
+        .fit("pipe", mix.sample(100, &mut rng), &FitSpec::new(EstimatorKind::Kde, d))
+        .expect("fit");
+
+    let windows: Vec<Vec<f32>> = (0..5).map(|_| mix.sample(3, &mut rng)).collect();
+    for points in &windows {
+        client
+            .submit(&Request::Query {
+                model: "pipe".into(),
+                d,
+                spec: QuerySpec::density(points.clone()),
+            })
+            .expect("submit");
+    }
+    let mut pipelined = Vec::new();
+    for _ in 0..windows.len() {
+        match client.recv().expect("recv") {
+            Response::QueryOk { result, .. } => pipelined.push(result.values),
+            other => panic!("unexpected response {other:?}"),
+        }
+    }
+    for (points, got) in windows.iter().zip(&pipelined) {
+        let want = client.eval("pipe", d, points.clone()).expect("eval").values;
+        assert_eq!(got, &want);
+    }
+    server.shutdown();
+}
+
+#[test]
 fn malformed_wire_lines_get_error_responses() {
     let _dir = require_artifacts!();
     let coord = coordinator().unwrap();
-    for bad in ["not json", "{}", r#"{"op":"fit"}"#, r#"{"op":"nope"}"#] {
+    for bad in [
+        "not json",
+        "{}",
+        r#"{"op":"fit"}"#,
+        r#"{"op":"nope"}"#,
+        r#"{"v":99,"op":"ping"}"#, // future protocol version
+    ] {
         let resp = handle_line(&coord, bad).to_line();
         assert!(resp.contains("\"ok\":false"), "{bad} -> {resp}");
     }
-    // A good line still works after bad ones.
-    let resp = handle_line(&coord, r#"{"op":"ping"}"#).to_line();
-    assert!(resp.contains("\"ok\":true"), "{resp}");
+    // A good line still works after bad ones, and legacy v1 lines (no
+    // "v" field) are still served.
+    for good in [r#"{"op":"ping"}"#, r#"{"v":2,"op":"ping"}"#] {
+        let resp = handle_line(&coord, good).to_line();
+        assert!(resp.contains("\"ok\":true"), "{resp}");
+    }
 }
 
 #[test]
@@ -265,17 +426,28 @@ fn registry_eviction_under_capacity_pressure() {
     let d = 1;
     let mix = by_dim(d);
     let mut rng = Pcg64::seeded(7);
+    let mut handles = Vec::new();
     for name in ["a", "b", "c"] {
-        coord
-            .fit(name, EstimatorKind::Kde, d, mix.sample(40, &mut rng), None, None, None)
-            .expect("fit");
+        handles.push(
+            coord
+                .fit(name, mix.sample(40, &mut rng), &FitSpec::new(EstimatorKind::Kde, d))
+                .expect("fit"),
+        );
     }
-    // Capacity 2: "a" was evicted.
+    // Capacity 2: "a" was evicted — name-based lookup stops resolving...
     assert_eq!(coord.registry().len(), 2);
     assert!(coord.registry().peek("a").is_none());
-    assert!(coord.eval("a", vec![0.0]).is_err());
-    assert!(coord.eval("c", vec![0.0]).is_ok());
+    assert!(coord.handle("a").is_none());
+    assert!(coord.handle("c").is_some());
     assert_eq!(coord.registry().evictions(), 1);
+    // ...but a handle taken before eviction stays serviceable (the model
+    // stays resident until the last Arc drops).
+    assert!(coord.eval(&handles[0], vec![0.0]).is_ok());
+    assert!(coord.eval(&handles[2], vec![0.0]).is_ok());
+    // Handle-based delete removes by name.
+    assert!(coord.delete(&handles[2]));
+    assert!(!coord.delete(&handles[2]));
+    assert!(coord.handle("c").is_none());
 }
 
 #[test]
@@ -285,22 +457,24 @@ fn stats_document_reflects_activity() {
     let d = 1;
     let mix = by_dim(d);
     let mut rng = Pcg64::seeded(8);
-    coord
-        .fit("s", EstimatorKind::Kde, d, mix.sample(64, &mut rng), None, None, None)
+    let model = coord
+        .fit("s", mix.sample(64, &mut rng), &FitSpec::new(EstimatorKind::Kde, d))
         .expect("fit");
     for _ in 0..3 {
-        coord.eval("s", mix.sample(4, &mut rng)).expect("eval");
+        coord.eval(&model, mix.sample(4, &mut rng)).expect("eval");
     }
+    coord.grad(&model, mix.sample(2, &mut rng)).expect("grad");
     let stats = coord.stats_json();
     let metrics = stats.get("metrics").expect("metrics");
     assert_eq!(metrics.get("fit_requests").unwrap().as_usize(), Some(1));
     assert_eq!(metrics.get("eval_requests").unwrap().as_usize(), Some(3));
+    assert_eq!(metrics.get("grad_requests").unwrap().as_usize(), Some(1));
     let engine = stats.get("engine").expect("engine");
-    assert!(engine.get("executions").unwrap().as_usize().unwrap() >= 3);
+    assert!(engine.get("executions").unwrap().as_usize().unwrap() >= 4);
 }
 
 #[test]
-fn grad_endpoint_matches_native_score() {
+fn grad_mode_matches_native_score() {
     let _dir = require_artifacts!();
     let coord = coordinator().unwrap();
     let d = 1;
@@ -309,18 +483,22 @@ fn grad_endpoint_matches_native_score() {
     let n = 300;
     let train = mix.sample(n, &mut rng);
     let h = 0.4;
-    coord
-        .fit("g", EstimatorKind::Kde, d, train.clone(), Some(h), None, None)
+    let model = coord
+        .fit("g", train.clone(), &FitSpec::new(EstimatorKind::Kde, d).bandwidth(h))
         .expect("fit");
 
     let queries = mix.sample(9, &mut rng);
-    let grads = coord.grad("g", queries.clone()).expect("grad");
-    assert_eq!(grads.len(), 9 * d);
+    let res = coord.grad(&model, queries.clone()).expect("grad");
+    assert_eq!(res.values.len(), 9 * d);
+    assert_eq!(res.mode, OutputMode::Grad);
+    // Batcher bookkeeping is reported exactly like eval.
+    assert!(res.batch_size >= 1);
+    assert!(res.exec_ms >= 0.0);
 
     // Native oracle: score of the fitted KDE at bandwidth h.
     let w = vec![1.0f32; n];
     let want = native::score_at(&train, &w, &queries, d, h);
-    for (i, (a, b)) in grads.iter().zip(&want).enumerate() {
+    for (i, (a, b)) in res.values.iter().zip(&want).enumerate() {
         let scale = b.abs().max(0.1);
         assert!(
             ((*a as f64 - b) / scale).abs() < 2e-3,
@@ -328,9 +506,8 @@ fn grad_endpoint_matches_native_score() {
         );
     }
 
-    // Unknown model / empty points rejected.
-    assert!(coord.grad("ghost", vec![0.0]).is_err());
-    assert!(coord.grad("g", vec![]).is_err());
+    // Empty points rejected.
+    assert!(coord.grad(&model, vec![]).is_err());
 }
 
 #[test]
@@ -345,13 +522,15 @@ fn grad_over_tcp_round_trip() {
     let mut rng = Pcg64::seeded(32);
     let mut client = Client::connect(addr).expect("connect");
     client
-        .fit("gw", EstimatorKind::Kde, d, mix.sample(100, &mut rng), None, None, None)
+        .fit("gw", mix.sample(100, &mut rng), &FitSpec::new(EstimatorKind::Kde, d))
         .expect("fit");
     let queries = mix.sample(5, &mut rng);
     let grads = client.grad("gw", d, queries.clone()).expect("grad");
-    assert_eq!(grads.len(), 5);
-    let local = server.coordinator().grad("gw", queries).expect("local");
-    assert_eq!(grads, local);
+    assert_eq!(grads.values.len(), 5);
+    assert_eq!(grads.mode, OutputMode::Grad);
+    let handle = server.coordinator().handle("gw").expect("handle");
+    let local = server.coordinator().grad(&handle, queries).expect("local");
+    assert_eq!(grads.values, local.values);
     server.shutdown();
 }
 
@@ -364,13 +543,13 @@ fn grad_points_downhill_from_tails() {
     let d = 1;
     let mix = by_dim(d);
     let mut rng = Pcg64::seeded(33);
-    coord
-        .fit("tail", EstimatorKind::Kde, d, mix.sample(400, &mut rng), None, None, None)
+    let model = coord
+        .fit("tail", mix.sample(400, &mut rng), &FitSpec::new(EstimatorKind::Kde, d))
         .expect("fit");
     let right_tail = vec![8.5f32, 9.0, 10.0];
-    let grads = coord.grad("tail", right_tail).expect("grad");
+    let grads = coord.grad(&model, right_tail).expect("grad").values;
     assert!(grads.iter().all(|&g| g < 0.0), "{grads:?}");
     let left_tail = vec![-6.0f32, -7.5];
-    let grads = coord.grad("tail", left_tail).expect("grad");
+    let grads = coord.grad(&model, left_tail).expect("grad").values;
     assert!(grads.iter().all(|&g| g > 0.0), "{grads:?}");
 }

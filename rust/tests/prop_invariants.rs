@@ -1,5 +1,6 @@
 //! Property-based invariants over the coordinator substrates (DESIGN.md §7):
-//! queue conservation, batching budgets, JSON fuzz round-trips, histogram
+//! queue conservation, batching budgets, JSON fuzz round-trips, wire
+//! protocol round-trips, FitSpec bandwidth-resolution laws, histogram
 //! quantile bounds, registry LRU laws, RNG distribution checks.
 //!
 //! Driven by the in-tree `util::prop` runner (seeded, shrinking-lite);
@@ -311,14 +312,14 @@ fn prop_registry_lru_model_based() {
     // sequences and mirror them in a plain map + LRU list; states must
     // agree after every operation.
     use flash_sdkde::coordinator::registry::{FittedModel, Registry};
-    use flash_sdkde::estimator::EstimatorKind;
+    use flash_sdkde::estimator::{EstimatorKind, Variant};
     use flash_sdkde::runtime::HostTensor;
 
     fn model(name: &str) -> FittedModel {
         FittedModel {
             name: name.to_string(),
             kind: EstimatorKind::Kde,
-            variant: "flash".into(),
+            variant: Variant::Flash,
             d: 1,
             n: 2,
             bucket_n: 4,
@@ -380,6 +381,163 @@ fn prop_registry_lru_model_based() {
             let mut want = lru.clone();
             want.sort();
             ensure(registry.names() == want, "name sets agree")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_protocol_request_round_trip() {
+    // Every request variant — including Query in all three output modes —
+    // must survive to_line -> parse exactly, and every emitted line must
+    // carry the protocol version.
+    use flash_sdkde::coordinator::protocol::{Request, PROTOCOL_VERSION};
+    use flash_sdkde::coordinator::{FitSpec, OutputMode, QuerySpec};
+    use flash_sdkde::estimator::{EstimatorKind, Variant};
+
+    fn gen_points(rng: &mut Pcg64, len: usize) -> Vec<f32> {
+        (0..len).map(|_| (rng.normal() * 8.0) as f32).collect()
+    }
+
+    check("protocol request round trip", 400, |rng| {
+        let d = 1 + rng.below(8) as usize;
+        let k = 1 + rng.below(6) as usize;
+        let req = match rng.below(7) {
+            0 => Request::Ping,
+            1 => Request::Models,
+            2 => Request::Stats,
+            3 => Request::Delete { model: format!("m{}", rng.below(100)) },
+            4 | 5 => {
+                let kind = EstimatorKind::ALL[rng.below(3) as usize];
+                let mut spec = FitSpec::new(kind, d);
+                if rng.below(2) == 0 {
+                    spec = spec.bandwidth(rng.uniform() + 0.01);
+                }
+                if rng.below(2) == 0 {
+                    spec = spec.score_bandwidth(rng.uniform() + 0.01);
+                }
+                if rng.below(2) == 0 {
+                    spec = spec.variant(Variant::ALL[rng.below(5) as usize]);
+                }
+                Request::Fit {
+                    model: format!("fit{}", rng.below(10)),
+                    spec,
+                    points: gen_points(rng, k * d),
+                }
+            }
+            _ => Request::Query {
+                model: format!("q{}", rng.below(10)),
+                d,
+                spec: QuerySpec::new(
+                    gen_points(rng, k * d),
+                    OutputMode::ALL[rng.below(3) as usize],
+                ),
+            },
+        };
+        let line = req.to_line();
+        ensure(
+            line.contains(&format!("\"v\":{PROTOCOL_VERSION}")),
+            "request line carries the protocol version",
+        )?;
+        ensure(!line.contains('\n'), "single line")?;
+        let back = Request::parse(&line).map_err(|e| format!("reparse: {e:#}"))?;
+        ensure(back == req, "request round trips")
+    });
+}
+
+#[test]
+fn prop_protocol_response_round_trip() {
+    // Every response variant — FitOk with h_score, QueryOk in every mode,
+    // Error, versioned Pong — must survive to_line -> parse exactly.
+    use flash_sdkde::coordinator::protocol::{Response, PROTOCOL_VERSION};
+    use flash_sdkde::coordinator::{FitInfo, OutputMode, QueryResult};
+    use flash_sdkde::estimator::{EstimatorKind, Variant};
+
+    check("protocol response round trip", 400, |rng| {
+        let d = 1 + rng.below(8) as usize;
+        let k = 1 + rng.below(6) as usize;
+        let resp = match rng.below(8) {
+            0 => Response::Pong { version: 1 + rng.below(PROTOCOL_VERSION as u64) as usize },
+            1 => Response::FitOk {
+                info: FitInfo {
+                    model: format!("m{}", rng.below(10)),
+                    kind: EstimatorKind::ALL[rng.below(3) as usize],
+                    variant: Variant::ALL[rng.below(5) as usize],
+                    n: 2 + rng.below(10_000) as usize,
+                    d,
+                    h: rng.uniform() + 1e-3,
+                    h_score: rng.uniform() + 1e-3,
+                    bucket_n: 1 + rng.below(1 << 16) as usize,
+                    fit_ms: rng.uniform() * 1e3,
+                },
+            },
+            2 | 3 => {
+                let mode = OutputMode::ALL[rng.below(3) as usize];
+                let len = k * mode.width(d);
+                Response::QueryOk {
+                    d,
+                    result: QueryResult {
+                        values: (0..len).map(|_| (rng.normal() * 4.0) as f32).collect(),
+                        mode,
+                        queue_ms: rng.uniform() * 10.0,
+                        exec_ms: rng.uniform() * 10.0,
+                        batch_size: 1 + rng.below(32) as usize,
+                    },
+                }
+            }
+            4 => Response::Models {
+                names: (0..rng.below(5)).map(|i| format!("m{i}")).collect(),
+            },
+            5 => Response::Deleted {
+                model: format!("m{}", rng.below(10)),
+                existed: rng.below(2) == 0,
+            },
+            6 => Response::Error {
+                message: format!("failure case {}", rng.below(1000)),
+            },
+            _ => Response::Stats { body: Value::Null },
+        };
+        let line = resp.to_line();
+        ensure(!line.contains('\n'), "single line")?;
+        let back = Response::parse(&line).map_err(|e| format!("reparse: {e:#}"))?;
+        ensure(back == resp, "response round trips")
+    });
+}
+
+#[test]
+fn prop_fitspec_defaults_reproduce_bandwidth_rules() {
+    // A FitSpec with no overrides must resolve bandwidths to exactly the
+    // published rules (Silverman / SD-rate / h / sqrt(2)), and overrides
+    // must win verbatim — for any data and any dimension.
+    use flash_sdkde::coordinator::FitSpec;
+    use flash_sdkde::estimator::{bandwidth, EstimatorKind};
+
+    check("fitspec bandwidth resolution", 200, |rng| {
+        let d = 1 + rng.below(16) as usize;
+        let n = 2 + rng.below(400) as usize;
+        let x: Vec<f32> = (0..n * d)
+            .map(|_| (rng.normal() * (1.0 + rng.uniform())) as f32)
+            .collect();
+        for kind in EstimatorKind::ALL {
+            let spec = FitSpec::new(kind, d);
+            let h = spec.resolve_h(&x, n);
+            let want = match kind {
+                EstimatorKind::SdKde => bandwidth::sdkde_rate(&x, n, d),
+                _ => bandwidth::silverman(&x, n, d),
+            };
+            ensure(h == want, "default h matches the rule of thumb")?;
+            ensure(
+                spec.resolve_h_score(h) == bandwidth::score_bandwidth(h),
+                "default h_score is h / sqrt(2)",
+            )?;
+            let h_override = rng.uniform() + 0.01;
+            let hs_override = rng.uniform() + 0.01;
+            let spec = spec.bandwidth(h_override).score_bandwidth(hs_override);
+            ensure(spec.resolve_h(&x, n) == h_override, "h override wins")?;
+            ensure(
+                spec.resolve_h_score(h_override) == hs_override,
+                "h_score override wins",
+            )?;
         }
         Ok(())
     });
