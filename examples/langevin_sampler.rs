@@ -29,6 +29,8 @@ fn main() -> anyhow::Result<()> {
     cfg.artifacts_dir = std::env::var("FLASH_SDKDE_ARTIFACTS")
         .unwrap_or_else(|_| "artifacts".to_string())
         .into();
+    // No artifacts? Serve the pure-Rust native flash backend instead.
+    let cfg = cfg.auto_backend();
     let coordinator = Coordinator::start(cfg)?;
 
     // Fit a KDE on the trimodal mixture.

@@ -22,8 +22,14 @@ fn main() -> anyhow::Result<()> {
     cfg.artifacts_dir = std::env::var("FLASH_SDKDE_ARTIFACTS")
         .unwrap_or_else(|_| "artifacts".to_string())
         .into();
+    // No artifacts? Serve the pure-Rust native flash backend instead.
+    let cfg = cfg.auto_backend();
 
-    println!("booting coordinator (artifacts: {})...", cfg.artifacts_dir.display());
+    println!(
+        "booting coordinator (artifacts: {}, backend: {})...",
+        cfg.artifacts_dir.display(),
+        cfg.backend
+    );
     let coordinator = Coordinator::start(cfg)?;
 
     // 1. Draw training data from the 16-D benchmark mixture.

@@ -30,6 +30,8 @@ fn main() -> anyhow::Result<()> {
         .into();
     cfg.batch_wait_ms = 2;
     cfg.port = 0; // ephemeral
+    // No artifacts? Serve the pure-Rust native flash backend instead.
+    let cfg = cfg.auto_backend();
 
     // --- boot ---------------------------------------------------------
     let coordinator = Coordinator::start(cfg.clone())?;

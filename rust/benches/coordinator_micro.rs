@@ -57,6 +57,10 @@ fn bench_eval_path(table: &mut Table, artifacts: &str) -> anyhow::Result<()> {
     let mut cfg = Config::default();
     cfg.artifacts_dir = artifacts.into();
     cfg.batch_wait_ms = 1;
+    // Without artifacts the native backend serves the same L3 path, so
+    // this bench runs on a fresh checkout (and in the no-XLA CI leg).
+    let cfg = cfg.auto_backend();
+    table.note(&format!("backend: {}", cfg.backend));
     let coordinator = Arc::new(Coordinator::start(cfg)?);
 
     // Fit the smallest 16-D model.

@@ -1,0 +1,40 @@
+//! `cargo bench --bench native_flash` — scalar baseline vs native-flash.
+//!
+//! The only bench target that needs neither `make artifacts` nor XLA:
+//! both estimators are compiled into the binary, so this runs on a fresh
+//! checkout (and in the no-XLA CI leg).  It is the CPU analogue of the
+//! paper's Fig. 1 ordering claim: the matmul-identity reordering beats
+//! the scalar O(n·m·d) sweep, increasingly so as n grows.
+//!
+//! Env overrides: FLASH_SDKDE_BENCH_SIZES="1024,4096" to change the
+//! n sweep, FLASH_SDKDE_NAIVE_MAX_N to cap the scalar baseline,
+//! FLASH_SDKDE_BENCH_SEEDS for a multi-seed sweep.
+
+use flash_sdkde::bench_harness::{native_cmp, RunSpec};
+
+fn env_sizes() -> Vec<usize> {
+    std::env::var("FLASH_SDKDE_BENCH_SIZES")
+        .ok()
+        .map(|s| {
+            s.split(',')
+                .filter_map(|p| p.trim().parse().ok())
+                .collect::<Vec<usize>>()
+        })
+        .filter(|v| !v.is_empty())
+        .unwrap_or_else(|| native_cmp::DEFAULT_SIZES.to_vec())
+}
+
+fn main() -> anyhow::Result<()> {
+    let cap = std::env::var("FLASH_SDKDE_NAIVE_MAX_N")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(native_cmp::DEFAULT_NAIVE_MAX_N);
+    let seeds = std::env::var("FLASH_SDKDE_BENCH_SEEDS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(native_cmp::DEFAULT_SEEDS);
+    let table =
+        native_cmp::native_vs_scalar(RunSpec::new(1, 3), &env_sizes(), cap, seeds)?;
+    table.emit("native_flash");
+    Ok(())
+}

@@ -3,24 +3,32 @@
 //!
 //! `cargo bench` targets under `rust/benches/` are thin wrappers over
 //! `experiments::*`; the `flash-sdkde bench --experiment <id>` CLI reaches
-//! the same functions.
+//! the same functions.  The artifact-driven experiments need the `pjrt`
+//! feature; the `native` comparison (`native_cmp`) runs in any build with
+//! zero artifacts.
 
+#[cfg(feature = "pjrt")]
 pub mod experiments;
+pub mod native_cmp;
 pub mod report;
 pub mod runner;
 
 pub use report::Table;
 pub use runner::{black_box, measure, Measurement, RunSpec};
 
+#[cfg(feature = "pjrt")]
 use anyhow::Result;
 
-/// Experiment ids addressable from the CLI and bench targets.
+/// Artifact-driven experiment ids addressable from the CLI and bench
+/// targets (the `native` comparison is dispatched separately — it needs
+/// neither artifacts nor the `pjrt` feature).
 pub const EXPERIMENTS: &[&str] = &[
     "fig1", "table1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7",
     "blocksweep", "headline",
 ];
 
-/// Dispatch one experiment by id.
+/// Dispatch one artifact-driven experiment by id.
+#[cfg(feature = "pjrt")]
 pub fn run_experiment(ctx: &mut experiments::Ctx, id: &str) -> Result<Table> {
     match id {
         "fig1" => experiments::fig1_runtime_16d(ctx),
@@ -34,7 +42,7 @@ pub fn run_experiment(ctx: &mut experiments::Ctx, id: &str) -> Result<Table> {
         "blocksweep" => experiments::ablation_blocksweep(ctx),
         "headline" => experiments::headline_scale(ctx),
         other => Err(anyhow::anyhow!(
-            "unknown experiment {other:?}; available: {EXPERIMENTS:?}"
+            "unknown experiment {other:?}; available: {EXPERIMENTS:?} + \"native\""
         )),
     }
 }

@@ -1,0 +1,124 @@
+//! Native-flash vs scalar-baseline comparison — the CPU analogue of the
+//! paper's Fig. 1 that needs **zero artifacts and zero XLA**: both sides
+//! are compiled into this binary.
+//!
+//! The scalar baseline is `estimator::native` (the deliberately-scalar
+//! scikit-learn analogue); the contender is `estimator::flash` (the
+//! matmul-identity reordering with f32 dot tiles, f64 accumulators and
+//! threaded query blocks).  Reported at the paper's 16-d workload with
+//! n_test = n/8, both single-threaded (the pure reordering win) and at
+//! the default thread count (the serving configuration).
+
+use anyhow::Result;
+
+use crate::data::mixture::by_dim;
+use crate::estimator::flash::{self, TileConfig};
+use crate::estimator::{bandwidth, native};
+use crate::util::rng::Pcg64;
+
+use super::report::{fmt_ms, fmt_speedup, Table};
+use super::runner::{black_box, measure, RunSpec};
+
+/// Default n sweep for the 16-d comparison.
+pub const DEFAULT_SIZES: &[usize] = &[1024, 2048, 4096, 8192];
+
+/// Default cap for the O(n²d) scalar baseline — shared by the CLI and the
+/// `native_flash` bench target so the entry points cannot diverge.
+pub const DEFAULT_NAIVE_MAX_N: usize = 8192;
+
+/// Default number of independent data draws.
+pub const DEFAULT_SEEDS: u64 = 1;
+
+/// Full SD-KDE (debias + evaluate) runtime: scalar oracle vs native-flash.
+/// Times are means over `seeds` independent data draws (x measurement
+/// iterations each, per `spec`).
+pub fn native_vs_scalar(
+    spec: RunSpec,
+    sizes: &[usize],
+    naive_max_n: usize,
+    seeds: u64,
+) -> Result<Table> {
+    let seeds = seeds.max(1);
+    let d = 16;
+    let mix = by_dim(d);
+    let mut table = Table::new(
+        "Native backend — SD-KDE runtime (ms), d=16, n_test = n/8",
+        &["n_train", "scalar baseline", "flash (1 thread)",
+          "flash (threaded)", "speedup (1t)", "speedup"],
+    );
+    table.note(
+        "scalar = estimator::native (pairwise ‖x−y‖² recomputed per \
+         coordinate, f64); flash = matmul identity ‖x−y‖² = ‖x‖²+‖y‖²−2x·yᵀ \
+         with f32 dot tiles + f64 accumulators (estimator::flash)",
+    );
+    let threaded = TileConfig::default();
+    table.note(&format!(
+        "threaded = up to {} threads, {}x{} tiles",
+        threaded.threads, threaded.block_q, threaded.block_t
+    ));
+    for &n in sizes {
+        let m = (n / 8).max(1);
+        let mut scalar_sum = 0.0f64;
+        let mut flash1_sum = 0.0f64;
+        let mut flashn_sum = 0.0f64;
+        for seed in 0..seeds {
+            let mut rng = Pcg64::new(42 + seed, 77);
+            let x = mix.sample(n, &mut rng);
+            let y = mix.sample(m, &mut rng);
+            let w = vec![1.0f32; n];
+            let h = bandwidth::sdkde_rate(&x, n, d);
+            let hs = bandwidth::score_bandwidth(h);
+
+            if n <= naive_max_n {
+                scalar_sum += measure("scalar", spec, || {
+                    black_box(native::sdkde(&x, &w, &y, d, h, hs));
+                })
+                .mean_ms();
+            }
+            let serial = TileConfig::serial();
+            flash1_sum += measure("flash-1t", spec, || {
+                black_box(flash::sdkde(&x, &w, &y, d, h, hs, &serial));
+            })
+            .mean_ms();
+            flashn_sum += measure("flash-nt", spec, || {
+                black_box(flash::sdkde(&x, &w, &y, d, h, hs, &threaded));
+            })
+            .mean_ms();
+        }
+        let scalar_ms =
+            (n <= naive_max_n).then_some(scalar_sum / seeds as f64);
+        let flash1_ms = flash1_sum / seeds as f64;
+        let flashn_ms = flashn_sum / seeds as f64;
+
+        table.row(vec![
+            n.to_string(),
+            scalar_ms.map(fmt_ms).unwrap_or_else(|| "-".into()),
+            fmt_ms(flash1_ms),
+            fmt_ms(flashn_ms),
+            scalar_ms
+                .map(|s| fmt_speedup(s / flash1_ms))
+                .unwrap_or_else(|| "-".into()),
+            scalar_ms
+                .map(|s| fmt_speedup(s / flashn_ms))
+                .unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    table
+        .notes
+        .push(format!("iters={} warmup={} seeds={seeds}", spec.iters, spec.warmup));
+    Ok(table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comparison_runs_without_artifacts() {
+        let t = native_vs_scalar(RunSpec::new(0, 1), &[128], 256, 2).unwrap();
+        assert_eq!(t.rows.len(), 1);
+        // Scalar column populated (128 <= cap) and speedups parse as "x".
+        assert_ne!(t.rows[0][1], "-");
+        assert!(t.rows[0][4].ends_with('x'), "{:?}", t.rows[0]);
+    }
+}

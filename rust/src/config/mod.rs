@@ -7,6 +7,7 @@
 use std::path::{Path, PathBuf};
 
 use crate::estimator::Variant;
+use crate::runtime::BackendKind;
 use crate::util::json::{self, Value};
 
 /// Everything the server/engine needs to run.
@@ -15,6 +16,9 @@ pub struct Config {
     /// Directory holding `manifest.json` + `*.hlo.txt` (built by
     /// `make artifacts`).
     pub artifacts_dir: PathBuf,
+    /// Execution backend: `"pjrt"` runs the AOT-compiled XLA artifacts,
+    /// `"native"` the pure-Rust tiled flash kernels (no artifacts needed).
+    pub backend: BackendKind,
     /// TCP bind address for `serve`.
     pub host: String,
     pub port: u16,
@@ -41,6 +45,7 @@ impl Default for Config {
     fn default() -> Self {
         Config {
             artifacts_dir: PathBuf::from("artifacts"),
+            backend: BackendKind::Pjrt,
             host: "127.0.0.1".to_string(),
             port: 7474,
             queue_depth: 256,
@@ -71,9 +76,9 @@ impl Config {
             .as_object()
             .ok_or_else(|| "config root must be an object".to_string())?;
         let known = [
-            "artifacts_dir", "host", "port", "queue_depth", "batch_wait_ms",
-            "batch_max_queries", "default_variant", "registry_capacity",
-            "engine_workers", "warm_dims",
+            "artifacts_dir", "backend", "host", "port", "queue_depth",
+            "batch_wait_ms", "batch_max_queries", "default_variant",
+            "registry_capacity", "engine_workers", "warm_dims",
         ];
         for key in obj.keys() {
             if !known.contains(&key.as_str()) {
@@ -86,6 +91,11 @@ impl Config {
             cfg.artifacts_dir = PathBuf::from(
                 x.as_str().ok_or("artifacts_dir must be a string")?,
             );
+        }
+        if let Some(x) = obj.get("backend") {
+            let name = x.as_str().ok_or("backend must be a string")?;
+            cfg.backend = BackendKind::parse(name)
+                .ok_or_else(|| format!("unknown backend {name:?} (pjrt | native)"))?;
         }
         if let Some(x) = obj.get("host") {
             cfg.host = x.as_str().ok_or("host must be a string")?.to_string();
@@ -153,10 +163,24 @@ impl Config {
         Ok(())
     }
 
+    /// Fall back to the native backend when the PJRT backend is selected
+    /// but no artifact manifest exists — zero-setup serving for examples
+    /// and micro-benches on a fresh checkout.  An explicit `native`
+    /// selection is left untouched.
+    pub fn auto_backend(mut self) -> Config {
+        if self.backend == BackendKind::Pjrt
+            && !self.artifacts_dir.join("manifest.json").exists()
+        {
+            self.backend = BackendKind::Native;
+        }
+        self
+    }
+
     /// Render as JSON (used by `flash-sdkde info --dump-config`).
     pub fn to_json(&self) -> Value {
         Value::object(vec![
             ("artifacts_dir", Value::from(self.artifacts_dir.display().to_string())),
+            ("backend", Value::from(self.backend.as_str())),
             ("host", Value::from(self.host.as_str())),
             ("port", Value::from(self.port as usize)),
             ("queue_depth", Value::from(self.queue_depth)),
@@ -229,7 +253,30 @@ mod tests {
         let mut cfg = Config::default();
         cfg.port = 1234;
         cfg.warm_dims = vec![16];
+        cfg.backend = BackendKind::Native;
         let back = Config::from_json(&cfg.to_json()).unwrap();
         assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn backend_key_parses_and_rejects() {
+        let v = json::parse(r#"{"backend": "native"}"#).unwrap();
+        assert_eq!(Config::from_json(&v).unwrap().backend, BackendKind::Native);
+        let v = json::parse(r#"{"backend": "pjrt"}"#).unwrap();
+        assert_eq!(Config::from_json(&v).unwrap().backend, BackendKind::Pjrt);
+        let v = json::parse(r#"{"backend": "tpu"}"#).unwrap();
+        let err = Config::from_json(&v).unwrap_err();
+        assert!(err.contains("backend"), "{err}");
+        assert_eq!(Config::default().backend, BackendKind::Pjrt);
+    }
+
+    #[test]
+    fn auto_backend_falls_back_without_artifacts() {
+        let mut cfg = Config::default();
+        cfg.artifacts_dir = PathBuf::from("/nonexistent-flash-sdkde-artifacts");
+        assert_eq!(cfg.clone().auto_backend().backend, BackendKind::Native);
+        // Explicit native stays native; an existing manifest keeps pjrt.
+        cfg.backend = BackendKind::Native;
+        assert_eq!(cfg.auto_backend().backend, BackendKind::Native);
     }
 }

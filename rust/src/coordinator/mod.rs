@@ -127,10 +127,13 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    /// Boot: load the manifest, start engine workers, spawn the dispatcher.
+    /// Boot: resolve the manifest for the configured backend (PJRT loads
+    /// the artifact directory; native synthesizes buckets when none
+    /// exists), start engine workers, spawn the dispatcher.
     pub fn start(cfg: Config) -> Result<Coordinator> {
-        let manifest = Manifest::load(&cfg.artifacts_dir)?;
-        let engine = Engine::start(manifest, cfg.engine_workers)?;
+        let manifest =
+            crate::runtime::backend::resolve_manifest(cfg.backend, &cfg.artifacts_dir)?;
+        let engine = Engine::start(manifest, cfg.engine_workers, cfg.backend)?;
         Self::with_engine(cfg, engine)
     }
 
@@ -237,10 +240,18 @@ impl Coordinator {
         ns.sort_unstable();
         ns.dedup();
         let bucket_n = *ns.iter().find(|&&bn| bn >= n).ok_or_else(|| {
-            anyhow!(
-                "no train bucket >= {n} for {eval_pipeline}/{variant} d={d} \
-                 (available: {ns:?})"
-            )
+            if ns.is_empty() {
+                anyhow!(
+                    "no {eval_pipeline}/{variant} buckets for d={d} in the \
+                     manifest (dimensions available: {:?})",
+                    manifest.dims()
+                )
+            } else {
+                anyhow!(
+                    "no train bucket >= {n} for {eval_pipeline}/{variant} d={d} \
+                     (available: {ns:?})"
+                )
+            }
         })?;
 
         // Bandwidths: rule-of-thumb unless overridden (FitSpec resolution).
@@ -424,6 +435,7 @@ impl Coordinator {
             (
                 "engine",
                 Value::object(vec![
+                    ("backend", Value::from(self.engine.backend().as_str())),
                     ("compiles", Value::from(store_stats.compiles)),
                     ("cache_hits", Value::from(store_stats.hits)),
                     ("executions", Value::from(store_stats.executions)),

@@ -1,0 +1,468 @@
+//! Native flash kernels: the paper's matmul reordering, on CPU.
+//!
+//! The scalar oracle in [`super::native`] walks every (query, train) pair
+//! and recomputes `‖y − x‖²` coordinate-by-coordinate.  These kernels
+//! apply the paper's core identity
+//!
+//! ```text
+//! ‖y − x‖² = ‖y‖² + ‖x‖² − 2·y·xᵀ
+//! ```
+//!
+//! so the O(n·m·d) inner sweep becomes GEMM structure: the cross term is a
+//! blocked matrix multiply over f32 tiles (the CPU analogue of the paper's
+//! tensor-core mapping — contiguous unit-stride FMA loops the compiler can
+//! vectorize), while the squared norms and every per-row reduction are
+//! carried in f64 (the "f32 tiles, f64 accumulators" policy; DESIGN.md
+//! §10 documents the resulting tolerance vs the scalar oracle).
+//!
+//! Query blocks are independent, so each kernel splits them across scoped
+//! worker threads ([`TileConfig::threads`]; small problems stay serial).
+//! Thread partitioning never touches a query row's arithmetic, so results
+//! are bit-identical across thread counts.  Tile sizes (`block_t`) do
+//! regroup the f64 partial sums over train rows, so across tile choices
+//! results agree only up to f64 re-association noise (~1e-15 relative) —
+//! the conformance suite pins both properties down.
+//!
+//! Formulas mirror `python/compile/kernels/ref.py` exactly like the
+//! scalar oracle does (same normalizers, same masked-row semantics, same
+//! `1e-30` denominator guard in the score kernels).
+
+use super::native::normalizer;
+
+/// Tiling / parallelism knobs for the native kernels.
+///
+/// `block_q` × `block_t` is the (query rows × train rows) tile the dot
+/// products are materialized for — the BLOCK_M × BLOCK_N analogue of the
+/// paper's launch-parameter sweep.  `threads` is an *upper bound* on the
+/// scoped threads query blocks are split across; problems below
+/// [`MIN_PAIRS_PER_THREAD`] per worker run serially, and `1` always does.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TileConfig {
+    pub block_q: usize,
+    pub block_t: usize,
+    pub threads: usize,
+}
+
+impl Default for TileConfig {
+    fn default() -> Self {
+        TileConfig { block_q: 32, block_t: 256, threads: default_threads() }
+    }
+}
+
+impl TileConfig {
+    /// Serial configuration (deterministic single-thread runs / baselines).
+    pub fn serial() -> Self {
+        TileConfig { threads: 1, ..TileConfig::default() }
+    }
+
+    fn checked(&self) -> TileConfig {
+        TileConfig {
+            block_q: self.block_q.max(1),
+            block_t: self.block_t.max(1),
+            threads: self.threads.max(1),
+        }
+    }
+}
+
+/// Default worker count: the machine's parallelism, capped so engine
+/// workers stacking their own kernel threads cannot oversubscribe wildly.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(16)
+}
+
+/// Column-major copy of a row-major [n, d] buffer: `xt[k*n + i] = x[i*d + k]`.
+/// Gives the tile GEMM unit-stride access over train rows.
+fn transpose(x: &[f32], n: usize, d: usize) -> Vec<f32> {
+    let mut xt = vec![0.0f32; n * d];
+    for i in 0..n {
+        for k in 0..d {
+            xt[k * n + i] = x[i * d + k];
+        }
+    }
+    xt
+}
+
+/// f64 squared row norms of a row-major [n, d] buffer (the exact half of
+/// the matmul identity — f32 squares are exact in f64).
+fn sq_norms(x: &[f32], n: usize, d: usize) -> Vec<f64> {
+    (0..n)
+        .map(|i| {
+            x[i * d..(i + 1) * d]
+                .iter()
+                .map(|&v| (v as f64) * (v as f64))
+                .sum()
+        })
+        .collect()
+}
+
+/// Fill `dots[q*bt + t]` with `y_{q0+q} · x_{t0+t}` for a
+/// `(q0, bq) × (t0, bt)` tile.
+///
+/// Loop order k → q → t keeps the transposed train column resident across
+/// all `bq` query rows and makes the innermost loop a unit-stride FMA the
+/// compiler can vectorize — this is the micro-GEMM at the heart of the
+/// reordering.
+#[inline]
+fn dot_tile(
+    y: &[f32],
+    xt: &[f32],
+    n: usize,
+    d: usize,
+    (q0, bq): (usize, usize),
+    (t0, bt): (usize, usize),
+    dots: &mut [f32],
+) {
+    dots[..bq * bt].fill(0.0);
+    for k in 0..d {
+        let col = &xt[k * n + t0..k * n + t0 + bt];
+        for q in 0..bq {
+            let yk = y[(q0 + q) * d + k];
+            let row = &mut dots[q * bt..q * bt + bt];
+            for (dst, &xv) in row.iter_mut().zip(col) {
+                *dst += yk * xv;
+            }
+        }
+    }
+}
+
+/// Minimum (query, train) pairs per worker thread: below this, spawn+join
+/// overhead (tens of µs per thread) outweighs the compute, so small
+/// requests — the serving hot path for padded 32-row buckets — run
+/// serially.  Thread count never changes results (each query row's
+/// arithmetic is independent of the partition).
+const MIN_PAIRS_PER_THREAD: usize = 32 * 1024;
+
+/// Split `rows` query rows (each `width` output values wide) across up to
+/// `threads` scoped threads — scaled down so every thread gets at least
+/// [`MIN_PAIRS_PER_THREAD`] of the `pairs` total — handing every thread a
+/// contiguous `(q_start, q_end, out_chunk)` span.
+fn par_query_rows<F>(
+    out: &mut [f64],
+    rows: usize,
+    width: usize,
+    pairs: usize,
+    threads: usize,
+    f: F,
+) where
+    F: Fn(usize, usize, &mut [f64]) + Sync,
+{
+    let threads = threads
+        .max(1)
+        .min(rows.max(1))
+        .min((pairs / MIN_PAIRS_PER_THREAD).max(1));
+    if threads <= 1 {
+        f(0, rows, out);
+        return;
+    }
+    let per = rows.div_ceil(threads);
+    std::thread::scope(|scope| {
+        let mut rest: &mut [f64] = out;
+        let mut q0 = 0usize;
+        let f = &f;
+        while q0 < rows {
+            let q1 = (q0 + per).min(rows);
+            // Detach the span from `rest` so it can cross into the thread
+            // while the tail keeps being split.
+            let (chunk, tail) =
+                std::mem::take(&mut rest).split_at_mut((q1 - q0) * width);
+            rest = tail;
+            scope.spawn(move || f(q0, q1, chunk));
+            q0 = q1;
+        }
+    });
+}
+
+/// Shared precomputation for one (x, y) problem.
+struct Prepared {
+    xt: Vec<f32>,
+    sq_x: Vec<f64>,
+    sq_y: Vec<f64>,
+    wf: Vec<f64>,
+    n: usize,
+    m: usize,
+}
+
+fn prepare(x: &[f32], w: &[f32], y: &[f32], d: usize) -> Prepared {
+    assert!(d >= 1, "dimension must be >= 1");
+    let n = w.len();
+    assert_eq!(x.len(), n * d, "x must be [n, d] row-major");
+    assert_eq!(y.len() % d, 0, "y must be [m, d] row-major");
+    let m = y.len() / d;
+    Prepared {
+        xt: transpose(x, n, d),
+        sq_x: sq_norms(x, n, d),
+        sq_y: sq_norms(y, m, d),
+        wf: w.iter().map(|&v| v as f64).collect(),
+        n,
+        m,
+    }
+}
+
+/// Weighted Gaussian KDE via the matmul identity.  Same contract as
+/// [`super::native::kde`]: x [n, d], w [n], y [m, d] row-major, returns
+/// [m] f64 densities.
+pub fn kde(x: &[f32], w: &[f32], y: &[f32], d: usize, h: f64, cfg: &TileConfig) -> Vec<f64> {
+    density(x, w, y, d, h, false, cfg)
+}
+
+/// Laplace-corrected KDE (signed).  Mirrors [`super::native::laplace`].
+pub fn laplace(x: &[f32], w: &[f32], y: &[f32], d: usize, h: f64, cfg: &TileConfig) -> Vec<f64> {
+    density(x, w, y, d, h, true, cfg)
+}
+
+fn density(
+    x: &[f32],
+    w: &[f32],
+    y: &[f32],
+    d: usize,
+    h: f64,
+    laplace_term: bool,
+    cfg: &TileConfig,
+) -> Vec<f64> {
+    let cfg = cfg.checked();
+    let p = prepare(x, w, y, d);
+    let count: f64 = p.wf.iter().sum();
+    assert!(count > 0.0, "no effective samples");
+    let norm = normalizer(h, d) / count;
+    let inv2h2 = 1.0 / (2.0 * h * h);
+    let half_d = d as f64 / 2.0;
+
+    let mut out = vec![0.0f64; p.m];
+    par_query_rows(&mut out, p.m, 1, p.m * p.n, cfg.threads, |qa, qb, chunk| {
+        let mut dots = vec![0.0f32; cfg.block_q * cfg.block_t];
+        let mut q0 = qa;
+        while q0 < qb {
+            let bq = cfg.block_q.min(qb - q0);
+            let mut acc = vec![0.0f64; bq];
+            let mut t0 = 0usize;
+            while t0 < p.n {
+                let bt = cfg.block_t.min(p.n - t0);
+                dot_tile(y, &p.xt, p.n, d, (q0, bq), (t0, bt), &mut dots);
+                for q in 0..bq {
+                    let sq_y = p.sq_y[q0 + q];
+                    let mut a = 0.0f64;
+                    for t in 0..bt {
+                        let wi = p.wf[t0 + t];
+                        if wi == 0.0 {
+                            continue;
+                        }
+                        let d2 = (sq_y + p.sq_x[t0 + t]
+                            - 2.0 * dots[q * bt + t] as f64)
+                            .max(0.0);
+                        let scaled = d2 * inv2h2;
+                        let e = (-scaled).exp();
+                        a += if laplace_term {
+                            wi * e * (1.0 + half_d - scaled)
+                        } else {
+                            wi * e
+                        };
+                    }
+                    acc[q] += a;
+                }
+                t0 += bt;
+            }
+            for q in 0..bq {
+                chunk[q0 + q - qa] = acc[q] * norm;
+            }
+            q0 += bq;
+        }
+    });
+    out
+}
+
+/// Score of the weighted KDE of `x` at query rows `y` — the flash twin of
+/// [`super::native::score_at`] (and, with `y = x`, of
+/// [`super::native::score`]): returns [m, d] row-major f64, `1e-30`
+/// denominator guard.
+pub fn score_at(
+    x: &[f32],
+    w: &[f32],
+    y: &[f32],
+    d: usize,
+    h_s: f64,
+    cfg: &TileConfig,
+) -> Vec<f64> {
+    let cfg = cfg.checked();
+    let p = prepare(x, w, y, d);
+    let inv2h2 = 1.0 / (2.0 * h_s * h_s);
+
+    let mut out = vec![0.0f64; p.m * d];
+    par_query_rows(&mut out, p.m, d, p.m * p.n, cfg.threads, |qa, qb, chunk| {
+        let mut dots = vec![0.0f32; cfg.block_q * cfg.block_t];
+        let mut q0 = qa;
+        while q0 < qb {
+            let bq = cfg.block_q.min(qb - q0);
+            let mut denom = vec![0.0f64; bq];
+            let mut numer = vec![0.0f64; bq * d];
+            let mut t0 = 0usize;
+            while t0 < p.n {
+                let bt = cfg.block_t.min(p.n - t0);
+                dot_tile(y, &p.xt, p.n, d, (q0, bq), (t0, bt), &mut dots);
+                for q in 0..bq {
+                    let sq_y = p.sq_y[q0 + q];
+                    let numer_q = &mut numer[q * d..(q + 1) * d];
+                    for t in 0..bt {
+                        let wi = p.wf[t0 + t];
+                        if wi == 0.0 {
+                            continue;
+                        }
+                        let d2 = (sq_y + p.sq_x[t0 + t]
+                            - 2.0 * dots[q * bt + t] as f64)
+                            .max(0.0);
+                        let phi = wi * (-d2 * inv2h2).exp();
+                        denom[q] += phi;
+                        let xi = &x[(t0 + t) * d..(t0 + t + 1) * d];
+                        for (acc, &v) in numer_q.iter_mut().zip(xi) {
+                            *acc += phi * v as f64;
+                        }
+                    }
+                }
+                t0 += bt;
+            }
+            for q in 0..bq {
+                let dq = denom[q].max(1e-30);
+                let yq = &y[(q0 + q) * d..(q0 + q + 1) * d];
+                for k in 0..d {
+                    chunk[(q0 + q - qa) * d + k] =
+                        (numer[q * d + k] - yq[k] as f64 * dq) / (h_s * h_s * dq);
+                }
+            }
+            q0 += bq;
+        }
+    });
+    out
+}
+
+/// Debiased samples X^SD = X + (h²/2)·s(X); masked rows pass through.
+/// Mirrors [`super::native::debias`] (f32 output, the artifact wire format).
+pub fn debias(x: &[f32], w: &[f32], d: usize, h: f64, h_s: f64, cfg: &TileConfig) -> Vec<f32> {
+    let n = w.len();
+    let s = score_at(x, w, x, d, h_s, cfg);
+    let shift = 0.5 * h * h;
+    let mut out = x.to_vec();
+    for i in 0..n {
+        if w[i] == 0.0 {
+            continue;
+        }
+        for k in 0..d {
+            out[i * d + k] = (x[i * d + k] as f64 + shift * s[i * d + k]) as f32;
+        }
+    }
+    out
+}
+
+/// Full SD-KDE: debias then evaluate.  Mirrors [`super::native::sdkde`].
+pub fn sdkde(
+    x: &[f32],
+    w: &[f32],
+    y: &[f32],
+    d: usize,
+    h: f64,
+    h_s: f64,
+    cfg: &TileConfig,
+) -> Vec<f64> {
+    let x_sd = debias(x, w, d, h, h_s, cfg);
+    kde(&x_sd, w, y, d, h, cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::estimator::native;
+    use crate::util::rng::Pcg64;
+
+    fn sample(n: usize, d: usize, seed: u64) -> Vec<f32> {
+        Pcg64::seeded(seed).normal_vec_f32(n * d)
+    }
+
+    fn assert_close(a: &[f64], b: &[f64], rtol: f64) {
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            let rel = (x - y).abs() / y.abs().max(1e-30);
+            assert!(rel < rtol, "row {i}: {x} vs {y} (rel {rel:.2e})");
+        }
+    }
+
+    #[test]
+    fn kde_matches_oracle_small() {
+        let (n, m, d) = (97, 23, 3);
+        let x = sample(n, d, 1);
+        let y = sample(m, d, 2);
+        let w = vec![1.0f32; n];
+        let got = kde(&x, &w, &y, d, 0.6, &TileConfig::default());
+        let want = native::kde(&x, &w, &y, d, 0.6);
+        assert_close(&got, &want, 1e-4);
+    }
+
+    #[test]
+    fn single_point_closed_form() {
+        let x = vec![0.0f32, 0.0];
+        let w = vec![1.0f32];
+        let y = vec![0.3f32, -0.4];
+        let h = 0.7;
+        let got = kde(&x, &w, &y, 2, h, &TileConfig::serial())[0];
+        let tau = std::f64::consts::TAU;
+        let want = (-0.25 / (2.0 * h * h)).exp() / (tau * h * h);
+        assert!((got - want).abs() < 1e-7, "{got} vs {want}");
+    }
+
+    #[test]
+    fn tiles_smaller_than_problem_still_cover_all_pairs() {
+        let (n, m, d) = (53, 17, 1);
+        let x = sample(n, d, 3);
+        let y = sample(m, d, 4);
+        let w = vec![1.0f32; n];
+        let tiny = TileConfig { block_q: 2, block_t: 3, threads: 1 };
+        let got = kde(&x, &w, &y, d, 0.4, &tiny);
+        let want = native::kde(&x, &w, &y, d, 0.4);
+        assert_close(&got, &want, 1e-4);
+    }
+
+    #[test]
+    fn score_at_matches_oracle() {
+        let (n, m, d) = (64, 9, 2);
+        let x = sample(n, d, 5);
+        let y = sample(m, d, 6);
+        let w = vec![1.0f32; n];
+        let got = score_at(&x, &w, &y, d, 0.5, &TileConfig::default());
+        let want = native::score_at(&x, &w, &y, d, 0.5);
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-4 * (1.0 + b.abs()), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn transpose_round_trip() {
+        let x = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]; // [3, 2]
+        let xt = transpose(&x, 3, 2);
+        assert_eq!(xt, vec![1.0, 3.0, 5.0, 2.0, 4.0, 6.0]);
+    }
+
+    #[test]
+    fn threads_do_not_change_results() {
+        // Big enough that MIN_PAIRS_PER_THREAD actually admits 4 workers.
+        let (n, m, d) = (600, 256, 4);
+        assert!(n * m / MIN_PAIRS_PER_THREAD >= 4);
+        let x = sample(n, d, 7);
+        let y = sample(m, d, 8);
+        let w = vec![1.0f32; n];
+        let serial = kde(&x, &w, &y, d, 0.7, &TileConfig::serial());
+        let threaded =
+            kde(&x, &w, &y, d, 0.7, &TileConfig { threads: 4, ..TileConfig::default() });
+        // Thread partitioning only splits query rows: bit-identical.
+        assert_eq!(serial, threaded);
+    }
+
+    #[test]
+    fn small_problems_run_serially_but_correctly() {
+        // Below the pairs floor the kernel must not spawn (latency), and
+        // results are the same either way.
+        let (n, m, d) = (40, 8, 2);
+        let x = sample(n, d, 9);
+        let y = sample(m, d, 10);
+        let w = vec![1.0f32; n];
+        let a = kde(&x, &w, &y, d, 0.5, &TileConfig { threads: 16, ..TileConfig::default() });
+        let b = kde(&x, &w, &y, d, 0.5, &TileConfig::serial());
+        assert_eq!(a, b);
+    }
+}

@@ -1,7 +1,9 @@
 //! Estimator layer: shared estimator/variant vocabulary, bandwidth rules,
-//! and the native Rust scalar baselines/oracles.
+//! the native Rust scalar baselines/oracles, and the tiled flash kernels
+//! backing the native execution backend.
 
 pub mod bandwidth;
+pub mod flash;
 pub mod native;
 
 use std::fmt;

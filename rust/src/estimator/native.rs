@@ -12,8 +12,9 @@
 
 const TWO_PI: f64 = std::f64::consts::TAU;
 
-/// Gaussian normalizer 1 / ((2 pi)^{d/2} h^d).
-fn normalizer(h: f64, d: usize) -> f64 {
+/// Gaussian normalizer 1 / ((2 pi)^{d/2} h^d) — shared with the flash
+/// kernels so oracle and backend can never disagree on normalization.
+pub(crate) fn normalizer(h: f64, d: usize) -> f64 {
     (TWO_PI).powf(-(d as f64) / 2.0) * h.powi(-(d as i32))
 }
 
@@ -79,7 +80,10 @@ pub fn score(x: &[f32], w: &[f32], d: usize, h_s: f64) -> Vec<f64> {
                 *acc += phi * v as f64;
             }
         }
-        let denom = denom.max(1e-300);
+        // Guard matches ref.py / score.py / score_at(): 1e-30.  A smaller
+        // guard (1e-300) lets a nearly-underflowed denominator survive and
+        // blow up the score of far-outlier rows (see the regression test).
+        let denom = denom.max(1e-30);
         for k in 0..d {
             out[i * d + k] =
                 (numer[k] - xi[k] as f64 * denom) / (h_s * h_s * denom);
@@ -265,6 +269,29 @@ mod tests {
         }
         let corr = cov / (vx.sqrt() * vs.sqrt());
         assert!(corr < -0.8, "corr={corr}");
+    }
+
+    #[test]
+    fn score_far_outlier_guard_matches_ref() {
+        // A masked far-outlier row: every kernel weight against the live
+        // points is ~exp(-450) ≈ 1e-196 — above f64 underflow but far
+        // below the ref.py guard of 1e-30.  With the guard at 1e-30 the
+        // denominator clamps and the score collapses to -x_i / h_s²; the
+        // old 1e-300 guard instead kept the tiny denominator and produced
+        // (x̄ - x_i) / h_s², silently diverging from ref.py/score_at.
+        let mut x: Vec<f32> = vec![4.0, 5.0, 6.0]; // live points near 5
+        x.push(35.0); // outlier, 30 bandwidths away
+        let mut w = vec![1.0f32; 3];
+        w.push(0.0); // masked: only the guard decides its score
+        let h_s = 1.0;
+        let s = score(&x, &w, 1, h_s);
+        let want = -35.0 / (h_s * h_s);
+        assert!(
+            (s[3] - want).abs() < 1e-6 * want.abs(),
+            "outlier score {} vs guarded ref {}",
+            s[3],
+            want
+        );
     }
 
     #[test]

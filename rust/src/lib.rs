@@ -8,8 +8,12 @@
 //! * **L2** — JAX pipelines lowered AOT to HLO text artifacts,
 //!   `python/compile/model.py` + `aot.py`.
 //! * **L3** — this crate: a density-estimation serving coordinator that
-//!   loads the artifacts via PJRT and owns the entire request path
-//!   (routing, dynamic batching, model registry, backpressure, metrics).
+//!   owns the entire request path (routing, dynamic batching, model
+//!   registry, backpressure, metrics) over pluggable execution backends:
+//!   the AOT artifacts via PJRT (`backend = pjrt`, `pjrt` feature), or
+//!   the pure-Rust tiled flash kernels (`backend = native`) that apply
+//!   the paper's matmul reordering on CPU and need no artifacts at all
+//!   (DESIGN.md §10).
 //!
 //! The public API is typed end-to-end (DESIGN.md §2): build a
 //! [`FitSpec`], get a [`ModelHandle`] back from
@@ -49,3 +53,4 @@ pub use coordinator::{
     Coordinator, FitSpec, ModelHandle, OutputMode, QueryResult, QuerySpec,
 };
 pub use estimator::{EstimatorKind, Variant};
+pub use runtime::BackendKind;

@@ -15,12 +15,14 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use flash_sdkde::bench_harness::{self, experiments::Ctx, RunSpec};
+#[cfg(feature = "pjrt")]
+use flash_sdkde::bench_harness::experiments::Ctx;
+use flash_sdkde::bench_harness::{self, native_cmp, RunSpec};
 use flash_sdkde::config::Config;
 use flash_sdkde::coordinator::server::{Client, Server};
 use flash_sdkde::coordinator::{Coordinator, FitSpec, OutputMode, QuerySpec};
 use flash_sdkde::estimator::{EstimatorKind, Variant};
-use flash_sdkde::runtime::Manifest;
+use flash_sdkde::runtime::{BackendKind, Manifest};
 use flash_sdkde::util::cli::{self, Command, OptSpec};
 use flash_sdkde::util::json;
 
@@ -32,6 +34,7 @@ fn commands() -> Vec<Command> {
             opts: vec![
                 OptSpec::opt("config", "JSON config file (configs/serve.json)"),
                 OptSpec::opt("artifacts", "artifact directory override"),
+                OptSpec::opt("backend", "execution backend override (pjrt | native)"),
                 OptSpec::opt("port", "TCP port override"),
                 OptSpec::opt("host", "bind host override"),
                 OptSpec::flag("once", "exit after binding (smoke test)"),
@@ -42,7 +45,7 @@ fn commands() -> Vec<Command> {
             about: "regenerate a paper table/figure",
             opts: vec![
                 OptSpec::opt_required("experiment",
-                    "fig1|table1|fig2|fig3|fig4|fig5|fig6|fig7|blocksweep|headline|all"),
+                    "fig1|table1|fig2|fig3|fig4|fig5|fig6|fig7|blocksweep|headline|native|all"),
                 OptSpec::opt_default("artifacts", "artifact directory", "artifacts"),
                 OptSpec::opt_default("iters", "measured iterations", "3"),
                 OptSpec::opt_default("warmup", "warmup iterations", "1"),
@@ -106,7 +109,8 @@ fn main() {
 fn run(args: &[String]) -> Result<()> {
     let cmds = commands();
     let program = "flash-sdkde";
-    let about = "Flash-SD-KDE serving coordinator (rust + JAX + Pallas, AOT via PJRT)";
+    let about = "Flash-SD-KDE serving coordinator (PJRT artifacts or the \
+                 pure-Rust native flash backend)";
     let Some(cmd_name) = args.get(1) else {
         print!("{}", cli::overview_text(program, about, &cmds));
         return Ok(());
@@ -145,6 +149,10 @@ fn cmd_serve(p: &cli::Parsed) -> Result<()> {
     if let Some(dir) = p.get("artifacts") {
         cfg.artifacts_dir = PathBuf::from(dir);
     }
+    if let Some(name) = p.get("backend") {
+        cfg.backend = BackendKind::parse(name)
+            .ok_or_else(|| anyhow!("unknown backend {name:?} (pjrt | native)"))?;
+    }
     if let Some(port) = p.get_usize("port").map_err(|e| anyhow!(e))? {
         cfg.port = u16::try_from(port).map_err(|_| anyhow!("port out of range"))?;
     }
@@ -167,34 +175,82 @@ fn cmd_serve(p: &cli::Parsed) -> Result<()> {
 }
 
 fn cmd_bench(p: &cli::Parsed) -> Result<()> {
-    let artifacts = PathBuf::from(p.get_string("artifacts", "artifacts"));
-    let mut ctx = Ctx::new(&artifacts)?;
-    ctx.spec = RunSpec::new(
+    let spec = RunSpec::new(
         p.get_usize("warmup").map_err(|e| anyhow!(e))?.unwrap_or(1),
         p.get_usize("iters").map_err(|e| anyhow!(e))?.unwrap_or(3),
     );
-    if let Some(sizes) = p.get_usize_list("sizes").map_err(|e| anyhow!(e))? {
-        ctx.sizes_16d = sizes.clone();
-        ctx.sizes_1d = sizes;
-    }
-    if let Some(seeds) = p.get_usize("seeds").map_err(|e| anyhow!(e))? {
-        ctx.seeds = seeds as u64;
-    }
-    if let Some(cap) = p.get_usize("naive-max-n").map_err(|e| anyhow!(e))? {
-        ctx.naive_max_n = cap;
+    let which = p.get("experiment").expect("required").to_string();
+
+    // The native comparison is compiled into the binary: no artifacts, no
+    // XLA, available in every build.
+    let run_native = |spec: RunSpec| -> Result<()> {
+        let sizes = p
+            .get_usize_list("sizes")
+            .map_err(|e| anyhow!(e))?
+            .unwrap_or_else(|| native_cmp::DEFAULT_SIZES.to_vec());
+        let cap = p
+            .get_usize("naive-max-n")
+            .map_err(|e| anyhow!(e))?
+            .unwrap_or(native_cmp::DEFAULT_NAIVE_MAX_N);
+        let seeds = p
+            .get_usize("seeds")
+            .map_err(|e| anyhow!(e))?
+            .map(|s| s as u64)
+            .unwrap_or(native_cmp::DEFAULT_SEEDS);
+        native_cmp::native_vs_scalar(spec, &sizes, cap, seeds)?.emit("native");
+        Ok(())
+    };
+    if which == "native" {
+        return run_native(spec);
     }
 
-    let which = p.get("experiment").expect("required");
-    let ids: Vec<&str> = if which == "all" {
-        bench_harness::EXPERIMENTS.to_vec()
-    } else {
-        vec![which]
-    };
-    for id in ids {
-        let table = bench_harness::run_experiment(&mut ctx, id)?;
-        table.emit(id);
+    #[cfg(feature = "pjrt")]
+    {
+        let artifacts = PathBuf::from(p.get_string("artifacts", "artifacts"));
+        let mut ctx = Ctx::new(&artifacts)?;
+        ctx.spec = spec;
+        if let Some(sizes) = p.get_usize_list("sizes").map_err(|e| anyhow!(e))? {
+            ctx.sizes_16d = sizes.clone();
+            ctx.sizes_1d = sizes;
+        }
+        if let Some(seeds) = p.get_usize("seeds").map_err(|e| anyhow!(e))? {
+            ctx.seeds = seeds as u64;
+        }
+        if let Some(cap) = p.get_usize("naive-max-n").map_err(|e| anyhow!(e))? {
+            ctx.naive_max_n = cap;
+        }
+
+        let ids: Vec<&str> = if which == "all" {
+            bench_harness::EXPERIMENTS.to_vec()
+        } else {
+            vec![which.as_str()]
+        };
+        for id in ids {
+            let table = bench_harness::run_experiment(&mut ctx, id)?;
+            table.emit(id);
+        }
+        if which == "all" {
+            run_native(spec)?;
+        }
+        return Ok(());
     }
-    Ok(())
+    #[cfg(not(feature = "pjrt"))]
+    {
+        // "all" still runs what this build has: the native comparison.
+        if which == "all" {
+            eprintln!(
+                "note: built without the `pjrt` feature — skipping the \
+                 artifact-driven experiments, running `native` only"
+            );
+            return run_native(spec);
+        }
+        return Err(anyhow!(
+            "experiment {which:?} drives the AOT-compiled XLA artifacts \
+             ({:?}), but this binary was built without the `pjrt` feature — \
+             only the `native` comparison is available in this build",
+            bench_harness::EXPERIMENTS
+        ));
+    }
 }
 
 fn cmd_info(p: &cli::Parsed) -> Result<()> {

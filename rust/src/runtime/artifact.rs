@@ -109,6 +109,97 @@ impl Manifest {
         self.dir.join(&entry.file)
     }
 
+    /// Synthesized manifest for the native backend when no compiled
+    /// artifacts exist: the default bucket schedule (power-of-two train
+    /// buckets, a small ladder of query buckets) over every serving
+    /// pipeline at the flash variant.  The native backend has no real
+    /// shape constraint — the buckets exist so routing, padding, masking
+    /// and chunking behave identically to the compiled path.  Dimensions
+    /// cover every d up to 32 plus the common wider embeddings; an
+    /// out-of-grid d fails fit with the bucket error naming the grid.
+    pub fn synthetic() -> Manifest {
+        let dims: Vec<usize> = (1..=32).chain([48, 64, 128]).collect();
+        Self::synthetic_with(
+            &dims,
+            &[64, 128, 256, 512, 1024, 2048, 4096, 8192, 16384],
+            &[32, 128, 512, 2048],
+        )
+    }
+
+    /// Synthesized manifest over explicit dimension / bucket grids
+    /// (tests pin small grids; `synthetic()` is the serving default).
+    pub fn synthetic_with(
+        dims: &[usize],
+        n_buckets: &[usize],
+        m_buckets: &[usize],
+    ) -> Manifest {
+        let spec = |name: &str, shape: Vec<usize>| TensorSpec {
+            name: name.to_string(),
+            shape,
+        };
+        let mut entries = Vec::new();
+        for &d in dims {
+            for &n in n_buckets {
+                for &m in m_buckets {
+                    let eval_inputs = || {
+                        vec![
+                            spec("x", vec![n, d]),
+                            spec("w", vec![n]),
+                            spec("y", vec![m, d]),
+                            spec("h", vec![]),
+                        ]
+                    };
+                    for pipeline in ["kde", "laplace"] {
+                        entries.push(ArtifactEntry {
+                            pipeline: pipeline.to_string(),
+                            variant: "flash".to_string(),
+                            d,
+                            n,
+                            m,
+                            tiles: None,
+                            file: format!("native://{pipeline}/flash/d{d}/n{n}/m{m}"),
+                            inputs: eval_inputs(),
+                            outputs: vec![spec("", vec![m])],
+                        });
+                    }
+                    entries.push(ArtifactEntry {
+                        pipeline: "score_eval".to_string(),
+                        variant: "flash".to_string(),
+                        d,
+                        n,
+                        m,
+                        tiles: None,
+                        file: format!("native://score_eval/flash/d{d}/n{n}/m{m}"),
+                        inputs: eval_inputs(),
+                        outputs: vec![spec("", vec![m, d])],
+                    });
+                }
+                // Fit has no query axis; m = 0 marks it unused.
+                entries.push(ArtifactEntry {
+                    pipeline: "sdkde_fit".to_string(),
+                    variant: "flash".to_string(),
+                    d,
+                    n,
+                    m: 0,
+                    tiles: None,
+                    file: format!("native://sdkde_fit/flash/d{d}/n{n}"),
+                    inputs: vec![
+                        spec("x", vec![n, d]),
+                        spec("w", vec![n]),
+                        spec("h", vec![]),
+                        spec("h_score", vec![]),
+                    ],
+                    outputs: vec![spec("", vec![n, d])],
+                });
+            }
+        }
+        Manifest {
+            dir: PathBuf::from("<native-synthetic>"),
+            digest: "native-synthetic".to_string(),
+            entries,
+        }
+    }
+
     /// Exact lookup.
     pub fn find(
         &self,
@@ -355,5 +446,31 @@ mod tests {
     #[test]
     fn dims_listing() {
         assert_eq!(manifest().dims(), vec![16]);
+    }
+
+    #[test]
+    fn synthetic_manifest_covers_serving_pipelines() {
+        let m = Manifest::synthetic();
+        // Every pipeline the coordinator can route (SD-KDE evals run the
+        // kde pipeline over the debiased set, so no sdkde_e2e needed).
+        for d in [1, 5, 16, 31, 64] {
+            for pipeline in ["kde", "laplace", "score_eval", "sdkde_fit"] {
+                assert!(
+                    !m.buckets(pipeline, "flash", d).is_empty(),
+                    "no {pipeline} buckets at d={d}"
+                );
+            }
+            // Fit and eval share train buckets (the coordinator intersects
+            // them for SD-KDE; an empty intersection would break fit).
+            let fit_ns: Vec<usize> =
+                m.buckets("sdkde_fit", "flash", d).iter().map(|&(n, _)| n).collect();
+            let eval_ns: Vec<usize> =
+                m.buckets("kde", "flash", d).iter().map(|&(n, _)| n).collect();
+            assert!(fit_ns.iter().all(|n| eval_ns.contains(n)));
+        }
+        // The router picks tight buckets out of the synthetic schedule.
+        let e = m.select_bucket("kde", "flash", 16, 300, 60).unwrap();
+        assert_eq!((e.n, e.m), (512, 128));
+        assert!(m.sweep_entries().is_empty());
     }
 }

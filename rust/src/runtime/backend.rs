@@ -1,0 +1,476 @@
+//! Execution backends: one trait, two substrates.
+//!
+//! [`ExecBackend`] is the contract an engine worker drives: execute an
+//! [`ArtifactEntry`] against host tensors, pre-warm entries, report cache
+//! stats.  Two implementations exist (DESIGN.md §10):
+//!
+//! * [`crate::runtime::ExecutableStore`] — the PJRT/XLA path: compiles the
+//!   AOT-lowered HLO artifacts and runs them on the XLA CPU client.
+//!   Requires `make artifacts` and the `pjrt` cargo feature (which links
+//!   the prebuilt `xla_extension`).
+//! * [`NativeFlash`] — a pure-Rust backend implementing the same pipelines
+//!   with the paper's matmul reordering ([`crate::estimator::flash`]):
+//!   blocked f32 dot tiles, f64 row accumulators, query blocks spread over
+//!   scoped threads.  Needs no artifacts, no Python, no XLA — the entire
+//!   serving path (fit → debias → registry → co-batching → eval/grad →
+//!   backpressure) runs on a fresh checkout.
+//!
+//! Both backends execute against the *same* bucket/manifest shapes, so the
+//! coordinator, batcher, wire protocol and every example behave
+//! identically on either; when no artifacts exist the native path serves a
+//! synthesized manifest ([`crate::runtime::Manifest::synthetic`]).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use super::artifact::{ArtifactEntry, Manifest};
+use super::tensor::HostTensor;
+use crate::estimator::flash::{self, TileConfig};
+use crate::util::timer::PhaseTimer;
+
+/// Result of one artifact execution (either backend).
+#[derive(Debug)]
+pub struct ExecOutput {
+    pub outputs: Vec<HostTensor>,
+    /// Phases: "h2d" / "execute" / "d2h" (+ "compile" on a PJRT cache
+    /// miss); the native backend reports a single "execute" phase.
+    pub timings: PhaseTimer,
+}
+
+/// Cache statistics for the info command / metrics endpoint.
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct StoreStats {
+    pub compiles: u64,
+    pub hits: u64,
+    pub executions: u64,
+    pub compile_time: Duration,
+}
+
+/// What an engine worker drives.  Implementations are single-thread
+/// objects (PJRT handles are not `Send`); each worker constructs its own
+/// via [`BackendKind::open`] on its own thread.
+pub trait ExecBackend {
+    /// Execute an artifact entry with validated host tensors.
+    fn execute(&mut self, entry: &ArtifactEntry, inputs: &[Arc<HostTensor>]) -> Result<ExecOutput>;
+
+    /// Pre-warm an entry (compile for PJRT; no-op for native).
+    fn warm(&mut self, entry: &ArtifactEntry) -> Result<Duration>;
+
+    fn stats(&self) -> StoreStats;
+
+    /// Number of compiled executables resident (0 for native).
+    fn cached_len(&self) -> usize;
+
+    /// Human-readable substrate name for logs.
+    fn platform(&self) -> String;
+}
+
+/// Which execution backend serves requests (`backend = pjrt | native` in
+/// the config file, `--backend` on the CLI).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum BackendKind {
+    /// AOT-compiled XLA artifacts via PJRT (requires `make artifacts`).
+    #[default]
+    Pjrt,
+    /// Pure-Rust tiled flash kernels (no artifacts required).
+    Native,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "pjrt" | "xla" => Some(Self::Pjrt),
+            "native" | "native-flash" | "cpu" => Some(Self::Native),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Self::Pjrt => "pjrt",
+            Self::Native => "native",
+        }
+    }
+
+    /// Construct the backend on the calling thread.  `manifest` is kept by
+    /// the PJRT store for artifact paths; the native backend needs only
+    /// the entries the engine hands it per request.  `pool_peers` is how
+    /// many sibling backends share this machine (engine workers): the
+    /// native backend divides its kernel-thread budget by it so a
+    /// multi-worker engine does not oversubscribe the cores.
+    pub fn open(self, manifest: Manifest, pool_peers: usize) -> Result<Box<dyn ExecBackend>> {
+        match self {
+            BackendKind::Pjrt => {
+                #[cfg(feature = "pjrt")]
+                {
+                    Ok(Box::new(super::store::ExecutableStore::open(manifest)?))
+                }
+                #[cfg(not(feature = "pjrt"))]
+                {
+                    let _ = manifest;
+                    bail!(
+                        "backend \"pjrt\" is unavailable: this binary was built \
+                         without the `pjrt` feature — use backend = \"native\" \
+                         or rebuild with `--features pjrt`"
+                    )
+                }
+            }
+            BackendKind::Native => {
+                drop(manifest);
+                let threads =
+                    (flash::default_threads() / pool_peers.max(1)).max(1);
+                Ok(Box::new(NativeFlash::with_tile(TileConfig {
+                    threads,
+                    ..TileConfig::default()
+                })))
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for BackendKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Check inputs against an entry's manifest signature (the wire-order
+/// contract with model.py) — shared by both backends.
+pub fn validate_inputs<T: std::borrow::Borrow<HostTensor>>(
+    entry: &ArtifactEntry,
+    inputs: &[T],
+) -> Result<()> {
+    if inputs.len() != entry.inputs.len() {
+        bail!(
+            "artifact {} expects {} inputs, got {}",
+            entry.key(),
+            entry.inputs.len(),
+            inputs.len()
+        );
+    }
+    for (i, (spec, t)) in entry.inputs.iter().zip(inputs).enumerate() {
+        let t = t.borrow();
+        if spec.shape != t.shape() {
+            bail!(
+                "input {} ({}) of {}: expected shape {:?}, got {:?}",
+                i,
+                spec.name,
+                entry.key(),
+                spec.shape,
+                t.shape()
+            );
+        }
+    }
+    Ok(())
+}
+
+/// The native flash backend: dispatches the manifest pipelines onto the
+/// tiled kernels in [`crate::estimator::flash`].
+///
+/// Numerics policy (DESIGN.md §10): f32 dot tiles, f64 norms and row
+/// accumulators, identical formulas and masked-row semantics to the
+/// scalar oracle; the conformance suite pins the agreement at rtol ≤ 2e-3
+/// (the f32 cross-term rounding, same order as the XLA f32 kernels).
+pub struct NativeFlash {
+    tile: TileConfig,
+    stats: StoreStats,
+}
+
+impl NativeFlash {
+    pub fn new() -> Self {
+        Self::with_tile(TileConfig::default())
+    }
+
+    /// Pin tile sizes / thread count (conformance + ablation harnesses).
+    pub fn with_tile(tile: TileConfig) -> Self {
+        NativeFlash { tile, stats: StoreStats::default() }
+    }
+
+    pub fn tile(&self) -> &TileConfig {
+        &self.tile
+    }
+
+    /// Positional input access with a typed error — validate_inputs only
+    /// matches the arity against the *entry*, and a foreign manifest may
+    /// declare fewer inputs than a pipeline needs; that must never panic
+    /// a worker.
+    fn input<'a>(
+        inputs: &'a [Arc<HostTensor>],
+        idx: usize,
+        name: &str,
+    ) -> Result<&'a HostTensor> {
+        match inputs.get(idx) {
+            Some(t) => Ok(t.as_ref()),
+            None => bail!(
+                "native pipeline needs input {idx} ({name}); entry declares {}",
+                inputs.len()
+            ),
+        }
+    }
+
+    fn scalar(inputs: &[Arc<HostTensor>], idx: usize, name: &str) -> Result<f64> {
+        let t = Self::input(inputs, idx, name)?;
+        if t.len() != 1 {
+            bail!("input {idx} ({name}) must be a scalar, got shape {:?}", t.shape());
+        }
+        Ok(t.data()[0] as f64)
+    }
+}
+
+impl Default for NativeFlash {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ExecBackend for NativeFlash {
+    fn execute(&mut self, entry: &ArtifactEntry, inputs: &[Arc<HostTensor>]) -> Result<ExecOutput> {
+        validate_inputs(entry, inputs)?;
+        let d = entry.d;
+        let mut timer = PhaseTimer::new();
+        let start = Instant::now();
+
+        // Every pipeline shares the (x, w) prefix; kernels treat w == 0 as
+        // a masked row exactly like the oracle and the padded buckets.
+        let x = Self::input(inputs, 0, "x")?.data();
+        let w = Self::input(inputs, 1, "w")?.data();
+        if !w.iter().any(|&v| v != 0.0) {
+            bail!("artifact {}: no effective samples (all weights zero)", entry.key());
+        }
+
+        let output = match entry.pipeline.as_str() {
+            "kde" => {
+                let y = Self::input(inputs, 2, "y")?.data();
+                let h = Self::scalar(inputs, 3, "h")?;
+                let dens = flash::kde(x, w, y, d, h, &self.tile);
+                HostTensor::vec1(dens.iter().map(|&v| v as f32).collect())
+            }
+            "laplace" => {
+                let y = Self::input(inputs, 2, "y")?.data();
+                let h = Self::scalar(inputs, 3, "h")?;
+                let dens = flash::laplace(x, w, y, d, h, &self.tile);
+                HostTensor::vec1(dens.iter().map(|&v| v as f32).collect())
+            }
+            "score_eval" => {
+                let y = Self::input(inputs, 2, "y")?.data();
+                let h = Self::scalar(inputs, 3, "h")?;
+                let s = flash::score_at(x, w, y, d, h, &self.tile);
+                HostTensor::matrix(
+                    y.len() / d,
+                    d,
+                    s.iter().map(|&v| v as f32).collect(),
+                )?
+            }
+            "sdkde_fit" => {
+                let h = Self::scalar(inputs, 2, "h")?;
+                let h_s = Self::scalar(inputs, 3, "h_score")?;
+                let x_sd = flash::debias(x, w, d, h, h_s, &self.tile);
+                HostTensor::matrix(w.len(), d, x_sd)?
+            }
+            // Not routed by the coordinator (SD-KDE evals run "kde" over
+            // the debiased set) but kept for parity with real manifests
+            // and direct backend driving (benches, conformance).
+            "sdkde_e2e" => {
+                let y = Self::input(inputs, 2, "y")?.data();
+                let h = Self::scalar(inputs, 3, "h")?;
+                let h_s = Self::scalar(inputs, 4, "h_score")?;
+                let dens = flash::sdkde(x, w, y, d, h, h_s, &self.tile);
+                HostTensor::vec1(dens.iter().map(|&v| v as f32).collect())
+            }
+            other => bail!(
+                "native backend does not implement pipeline {other:?} \
+                 (artifact {})",
+                entry.key()
+            ),
+        };
+
+        timer.add("execute", start.elapsed());
+        if let Some(spec) = entry.outputs.first() {
+            if !spec.shape.is_empty() && spec.shape != output.shape() {
+                bail!(
+                    "native {} produced shape {:?}, manifest says {:?}",
+                    entry.key(),
+                    output.shape(),
+                    spec.shape
+                );
+            }
+        }
+        self.stats.executions += 1;
+        Ok(ExecOutput { outputs: vec![output], timings: timer })
+    }
+
+    fn warm(&mut self, _entry: &ArtifactEntry) -> Result<Duration> {
+        // Nothing to compile: the kernels are this binary.
+        Ok(Duration::default())
+    }
+
+    fn stats(&self) -> StoreStats {
+        self.stats
+    }
+
+    fn cached_len(&self) -> usize {
+        0
+    }
+
+    fn platform(&self) -> String {
+        format!(
+            "native-cpu (tiles {}x{}, {} threads)",
+            self.tile.block_q, self.tile.block_t, self.tile.threads
+        )
+    }
+}
+
+/// Resolve the manifest a backend serves: PJRT always loads the artifact
+/// directory; the native backend loads it when present (identical buckets
+/// to the compiled path) and synthesizes one otherwise.  A *corrupt*
+/// manifest is a typed error for both — silent fallback would mask a torn
+/// `make artifacts`.
+pub fn resolve_manifest(kind: BackendKind, dir: &std::path::Path) -> Result<Manifest> {
+    match kind {
+        BackendKind::Pjrt => Manifest::load(dir),
+        BackendKind::Native => {
+            if dir.join("manifest.json").exists() {
+                Manifest::load(dir)
+            } else {
+                Ok(Manifest::synthetic())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::estimator::native;
+    use crate::runtime::artifact::TensorSpec;
+    use crate::util::rng::Pcg64;
+
+    fn kde_entry(n: usize, m: usize, d: usize) -> ArtifactEntry {
+        ArtifactEntry {
+            pipeline: "kde".into(),
+            variant: "flash".into(),
+            d,
+            n,
+            m,
+            tiles: None,
+            file: format!("native://kde/flash/d{d}/n{n}/m{m}"),
+            inputs: vec![
+                TensorSpec { name: "x".into(), shape: vec![n, d] },
+                TensorSpec { name: "w".into(), shape: vec![n] },
+                TensorSpec { name: "y".into(), shape: vec![m, d] },
+                TensorSpec { name: "h".into(), shape: vec![] },
+            ],
+            outputs: vec![TensorSpec { name: "".into(), shape: vec![m] }],
+        }
+    }
+
+    fn arcs(ts: Vec<HostTensor>) -> Vec<Arc<HostTensor>> {
+        ts.into_iter().map(Arc::new).collect()
+    }
+
+    #[test]
+    fn backend_kind_parse_round_trip() {
+        for k in [BackendKind::Pjrt, BackendKind::Native] {
+            assert_eq!(BackendKind::parse(k.as_str()), Some(k));
+        }
+        assert_eq!(BackendKind::parse("native-flash"), Some(BackendKind::Native));
+        assert_eq!(BackendKind::parse("XLA"), Some(BackendKind::Pjrt));
+        assert_eq!(BackendKind::parse("gpu"), None);
+        assert_eq!(BackendKind::default(), BackendKind::Pjrt);
+    }
+
+    #[test]
+    fn native_executes_kde_entry_against_oracle() {
+        let (n, m, d) = (40, 6, 2);
+        let mut rng = Pcg64::seeded(3);
+        let x = rng.normal_vec_f32(n * d);
+        let y = rng.normal_vec_f32(m * d);
+        let w = vec![1.0f32; n];
+        let h = 0.55f64;
+
+        let mut backend = NativeFlash::new();
+        let entry = kde_entry(n, m, d);
+        let out = backend
+            .execute(
+                &entry,
+                &arcs(vec![
+                    HostTensor::matrix(n, d, x.clone()).unwrap(),
+                    HostTensor::vec1(w.clone()),
+                    HostTensor::matrix(m, d, y.clone()).unwrap(),
+                    HostTensor::scalar(h as f32),
+                ]),
+            )
+            .expect("execute");
+        assert_eq!(out.outputs.len(), 1);
+        assert_eq!(out.outputs[0].shape(), &[m]);
+        let want = native::kde(&x, &w, &y, d, h);
+        for (a, b) in out.outputs[0].data().iter().zip(&want) {
+            assert!(((*a as f64 - b) / b).abs() < 1e-3, "{a} vs {b}");
+        }
+        assert_eq!(backend.stats().executions, 1);
+        assert_eq!(backend.cached_len(), 0);
+        assert!(backend.platform().contains("native-cpu"));
+    }
+
+    #[test]
+    fn native_rejects_bad_shapes_unknown_pipelines_and_dead_weights() {
+        let mut backend = NativeFlash::new();
+        let entry = kde_entry(4, 2, 1);
+
+        // Arity.
+        let err = backend
+            .execute(&entry, &arcs(vec![HostTensor::scalar(1.0)]))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("expects"), "{err:#}");
+
+        // All-zero weights.
+        let err = backend
+            .execute(
+                &entry,
+                &arcs(vec![
+                    HostTensor::zeros(vec![4, 1]),
+                    HostTensor::zeros(vec![4]),
+                    HostTensor::zeros(vec![2, 1]),
+                    HostTensor::scalar(0.5),
+                ]),
+            )
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("no effective samples"), "{err:#}");
+
+        // Unknown pipeline.
+        let mut weird = kde_entry(4, 2, 1);
+        weird.pipeline = "warp".into();
+        let mut w = HostTensor::zeros(vec![4]);
+        w.data_mut().fill(1.0);
+        let err = backend
+            .execute(
+                &weird,
+                &arcs(vec![
+                    HostTensor::zeros(vec![4, 1]),
+                    w,
+                    HostTensor::zeros(vec![2, 1]),
+                    HostTensor::scalar(0.5),
+                ]),
+            )
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("warp"), "{err:#}");
+    }
+
+    #[test]
+    fn warm_is_a_noop() {
+        let mut backend = NativeFlash::new();
+        let d = backend.warm(&kde_entry(4, 2, 1)).unwrap();
+        assert_eq!(d, Duration::default());
+        assert_eq!(backend.stats().compiles, 0);
+    }
+
+    #[test]
+    fn resolve_manifest_synthesizes_for_native_only() {
+        let missing = std::path::Path::new("/nonexistent-flash-sdkde-dir");
+        assert!(resolve_manifest(BackendKind::Pjrt, missing).is_err());
+        let m = resolve_manifest(BackendKind::Native, missing).unwrap();
+        assert!(!m.entries.is_empty());
+    }
+}

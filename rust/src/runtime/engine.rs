@@ -1,11 +1,12 @@
-//! Engine: threaded execution front-end over the `ExecutableStore`.
+//! Engine: threaded execution front-end over an [`ExecBackend`].
 //!
-//! PJRT handles are not `Send`, so each engine worker thread owns its own
-//! `ExecutableStore` (client + executable cache) and drains a shared job
+//! Each engine worker thread owns its own backend instance — a PJRT
+//! `ExecutableStore` (whose handles are not `Send`) or a `NativeFlash`
+//! kernel runner, selected by [`BackendKind`] — and drains a shared job
 //! queue.  The `Engine` handle is cheap to clone and safe to share across
 //! the coordinator's connection threads — this is the boundary between the
-//! L3 request path and the XLA runtime, analogous to a GPU-stream owner
-//! thread in a serving stack.
+//! L3 request path and the execution substrate, analogous to a GPU-stream
+//! owner thread in a serving stack.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
@@ -15,7 +16,7 @@ use std::time::Duration;
 use anyhow::{anyhow, Context, Result};
 
 use super::artifact::{ArtifactEntry, Manifest};
-use super::store::{ExecOutput, ExecutableStore, StoreStats};
+use super::backend::{BackendKind, ExecBackend as _, ExecOutput, StoreStats};
 use super::tensor::HostTensor;
 use crate::log_info;
 
@@ -49,6 +50,7 @@ enum Job {
 pub struct Engine {
     tx: Sender<Job>,
     manifest: Arc<Manifest>,
+    backend: BackendKind,
     /// Held only for its Drop: the last handle shuts the workers down.
     #[allow(dead_code)]
     inner: Arc<EngineInner>,
@@ -72,8 +74,9 @@ impl Drop for EngineInner {
 }
 
 impl Engine {
-    /// Start `workers` threads, each with its own PJRT client.
-    pub fn start(manifest: Manifest, workers: usize) -> Result<Engine> {
+    /// Start `workers` threads, each owning its own `backend` instance
+    /// (a PJRT client + executable cache, or a native kernel runner).
+    pub fn start(manifest: Manifest, workers: usize, backend: BackendKind) -> Result<Engine> {
         assert!(workers >= 1, "engine needs at least one worker");
         let (tx, rx) = channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
@@ -86,9 +89,11 @@ impl Engine {
             let (ready_tx, ready_rx) = channel::<Result<()>>();
             let handle = std::thread::Builder::new()
                 .name(format!("engine-{worker_id}"))
-                .spawn(move || worker_loop(worker_id, manifest, rx, ready_tx))
+                .spawn(move || {
+                    worker_loop(worker_id, workers, backend, manifest, rx, ready_tx)
+                })
                 .context("spawning engine worker")?;
-            // Surface client-creation failures at startup, not first use.
+            // Surface backend-creation failures at startup, not first use.
             ready_rx
                 .recv()
                 .map_err(|_| anyhow!("engine worker {worker_id} died during init"))??;
@@ -98,12 +103,17 @@ impl Engine {
             tx: tx.clone(),
             workers: Mutex::new(handles),
         });
-        Ok(Engine { tx, manifest, inner })
+        Ok(Engine { tx, manifest, backend, inner })
     }
 
     /// The shared artifact manifest (bucket selection happens caller-side).
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
+    }
+
+    /// Which execution backend the workers run.
+    pub fn backend(&self) -> BackendKind {
+        self.backend
     }
 
     /// Execute an artifact; blocks until the result is ready.
@@ -140,11 +150,13 @@ impl Engine {
 
 fn worker_loop(
     worker_id: usize,
+    pool_size: usize,
+    backend: BackendKind,
     manifest: Manifest,
     rx: Arc<Mutex<Receiver<Job>>>,
     ready: Sender<Result<()>>,
 ) {
-    let mut store = match ExecutableStore::open(manifest) {
+    let mut store = match backend.open(manifest, pool_size) {
         Ok(s) => {
             let _ = ready.send(Ok(()));
             s

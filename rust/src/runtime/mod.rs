@@ -1,17 +1,24 @@
-//! Runtime layer: load and execute AOT-compiled XLA artifacts via PJRT.
+//! Runtime layer: pluggable execution backends behind one engine.
 //!
-//! Pipeline: `artifact::Manifest` indexes the HLO text files emitted by
-//! `python/compile/aot.py`; `store::ExecutableStore` lazily compiles them on
-//! a PJRT CPU client; `engine::Engine` runs stores on dedicated worker
-//! threads so the (non-`Send`) PJRT handles never cross threads.
-//! `tensor::HostTensor` is the host-side data currency.
+//! Pipeline: `artifact::Manifest` indexes the HLO artifacts emitted by
+//! `python/compile/aot.py` (or synthesizes buckets for the native
+//! backend); `backend::ExecBackend` is the execution contract, implemented
+//! by `store::ExecutableStore` (PJRT, `pjrt` feature) and
+//! `backend::NativeFlash` (pure-Rust tiled flash kernels);
+//! `engine::Engine` runs one backend instance per dedicated worker thread
+//! (PJRT handles are not `Send`).  `tensor::HostTensor` is the host-side
+//! data currency.
 
 pub mod artifact;
+pub mod backend;
 pub mod engine;
+#[cfg(feature = "pjrt")]
 pub mod store;
 pub mod tensor;
 
 pub use artifact::{ArtifactEntry, Manifest, TensorSpec};
+pub use backend::{BackendKind, ExecBackend, ExecOutput, NativeFlash, StoreStats};
 pub use engine::Engine;
-pub use store::{ExecOutput, ExecutableStore, StoreStats};
+#[cfg(feature = "pjrt")]
+pub use store::ExecutableStore;
 pub use tensor::HostTensor;

@@ -13,26 +13,9 @@ use anyhow::{anyhow, bail, Context, Result};
 use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
 
 use super::artifact::{ArtifactEntry, Manifest};
+use super::backend::{validate_inputs, ExecBackend, ExecOutput, StoreStats};
 use super::tensor::HostTensor;
 use crate::util::timer::PhaseTimer;
-
-/// Result of one artifact execution.
-#[derive(Debug)]
-pub struct ExecOutput {
-    pub outputs: Vec<HostTensor>,
-    /// Phases: "h2d" (literal build), "execute", "d2h" (read-back),
-    /// plus "compile" on a cache miss.
-    pub timings: PhaseTimer,
-}
-
-/// Cache statistics for the info command / metrics endpoint.
-#[derive(Debug, Default, Clone, Copy, PartialEq)]
-pub struct StoreStats {
-    pub compiles: u64,
-    pub hits: u64,
-    pub executions: u64,
-    pub compile_time: Duration,
-}
 
 pub struct ExecutableStore {
     client: PjRtClient,
@@ -179,32 +162,32 @@ impl ExecutableStore {
     }
 }
 
-fn validate_inputs<T: std::borrow::Borrow<HostTensor>>(
-    entry: &ArtifactEntry,
-    inputs: &[T],
-) -> Result<()> {
-    if inputs.len() != entry.inputs.len() {
-        bail!(
-            "artifact {} expects {} inputs, got {}",
-            entry.key(),
-            entry.inputs.len(),
-            inputs.len()
-        );
+/// The engine drives the store through the backend trait; the inherent
+/// methods above remain the lowest-overhead direct path for benches.
+impl ExecBackend for ExecutableStore {
+    fn execute(
+        &mut self,
+        entry: &ArtifactEntry,
+        inputs: &[std::sync::Arc<HostTensor>],
+    ) -> Result<ExecOutput> {
+        ExecutableStore::execute(self, entry, inputs)
     }
-    for (i, (spec, t)) in entry.inputs.iter().zip(inputs).enumerate() {
-        let t = t.borrow();
-        if spec.shape != t.shape() {
-            bail!(
-                "input {} ({}) of {}: expected shape {:?}, got {:?}",
-                i,
-                spec.name,
-                entry.key(),
-                spec.shape,
-                t.shape()
-            );
-        }
+
+    fn warm(&mut self, entry: &ArtifactEntry) -> Result<Duration> {
+        ExecutableStore::warm(self, entry)
     }
-    Ok(())
+
+    fn stats(&self) -> StoreStats {
+        ExecutableStore::stats(self)
+    }
+
+    fn cached_len(&self) -> usize {
+        ExecutableStore::cached_len(self)
+    }
+
+    fn platform(&self) -> String {
+        ExecutableStore::platform(self)
+    }
 }
 
 #[cfg(test)]

@@ -1,10 +1,14 @@
-//! Host-side f32 tensors and their conversion to/from `xla::Literal`.
+//! Host-side f32 tensors — the data currency of every backend — and, when
+//! the `pjrt` feature is on, their conversion to/from `xla::Literal`.
 //!
 //! The whole wire/compute surface of this project is f32 (matching the
 //! paper's TF32/FP32 kernels), so `HostTensor` is deliberately monomorphic:
 //! a shape plus a contiguous row-major `Vec<f32>`.
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
+#[cfg(feature = "pjrt")]
+use anyhow::Context;
+#[cfg(feature = "pjrt")]
 use xla::{ElementType, Literal};
 
 /// Row-major f32 tensor on the host.
@@ -118,6 +122,7 @@ impl HostTensor {
     }
 
     /// Convert to an XLA literal (copies into XLA-owned memory).
+    #[cfg(feature = "pjrt")]
     pub fn to_literal(&self) -> Result<Literal> {
         let bytes: &[u8] = unsafe {
             std::slice::from_raw_parts(
@@ -130,6 +135,7 @@ impl HostTensor {
     }
 
     /// Read back from an XLA literal (must be f32).
+    #[cfg(feature = "pjrt")]
     pub fn from_literal(lit: &Literal) -> Result<Self> {
         let shape = lit.array_shape().context("literal shape")?;
         let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
@@ -174,6 +180,7 @@ mod tests {
         assert!(HostTensor::scalar(1.0).pad_rows(2, 0.0).is_err());
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn literal_round_trip() {
         let t = HostTensor::matrix(2, 3, vec![1., -2., 3.5, 0., 5., -6.]).unwrap();
@@ -182,6 +189,7 @@ mod tests {
         assert_eq!(t, back);
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn scalar_literal_round_trip() {
         let t = HostTensor::scalar(0.75);

@@ -1,0 +1,255 @@
+//! Differential conformance: the native-flash tiled kernels vs the scalar
+//! oracle, over a grid of dimensions, sizes, kernels, masked rows and
+//! padded buckets.  Runs unconditionally — no artifacts, no XLA, no
+//! feature flags — so a fresh checkout and the no-XLA CI leg both
+//! exercise the full numerics surface.
+//!
+//! Tolerance policy (documented in DESIGN.md §10): the flash kernels
+//! compute the cross term `x·yᵀ` in f32 (the tile GEMM) and everything
+//! else in f64, so densities/scores agree with the all-f64-difference
+//! oracle to DENSITY_RTOL / SCORE_RTOL — the same order as the XLA f32
+//! artifacts.  Tile/block/thread choices only repartition the pair space
+//! and must not move results beyond f64 re-association noise
+//! (TILE_INVARIANCE_RTOL).
+
+use flash_sdkde::data::mixture::by_dim;
+use flash_sdkde::estimator::flash::{self, TileConfig};
+use flash_sdkde::estimator::{bandwidth, native};
+use flash_sdkde::util::prop::{check, ensure};
+use flash_sdkde::util::rng::Pcg64;
+
+/// f32 cross-term rounding, amplified through the exponential.
+const DENSITY_RTOL: f64 = 2e-3;
+/// Scores carry an absolute floor: near-zero components are compared at
+/// the gradient's natural O(1/h) scale, like the runtime tests do.
+const SCORE_RTOL: f64 = 2e-3;
+/// Re-association of f64 partial sums across different tile boundaries.
+const TILE_INVARIANCE_RTOL: f64 = 1e-12;
+
+struct Problem {
+    x: Vec<f32>,
+    w: Vec<f32>,
+    y: Vec<f32>,
+    h: f64,
+    h_s: f64,
+    /// Real (unmasked, unpadded) query rows for assertions on used outputs.
+    m_used: usize,
+}
+
+/// Build a problem mimicking the serving path: `n_used` live rows padded
+/// with zero rows (w = 0) to `bucket_n`, plus `masked` live-region rows
+/// also masked out; queries padded to `bucket_m`.
+fn problem(
+    d: usize,
+    n_used: usize,
+    bucket_n: usize,
+    masked: usize,
+    m_used: usize,
+    bucket_m: usize,
+    seed: u64,
+) -> Problem {
+    assert!(n_used + masked <= bucket_n && m_used <= bucket_m);
+    let mix = by_dim(d);
+    let mut rng = Pcg64::seeded(seed);
+    let mut x = mix.sample(n_used + masked, &mut rng);
+    x.resize(bucket_n * d, 0.0);
+    let mut w = vec![1.0f32; n_used];
+    w.resize(n_used + masked, 0.0);
+    w.resize(bucket_n, 0.0);
+    let mut y = mix.sample(m_used, &mut rng);
+    y.resize(bucket_m * d, 0.0);
+    let h = bandwidth::silverman(&x[..n_used * d], n_used, d);
+    Problem { x, w, y, h, h_s: bandwidth::score_bandwidth(h), m_used }
+}
+
+fn assert_density_close(got: &[f64], want: &[f64], tag: &str) {
+    assert_eq!(got.len(), want.len(), "{tag}: length");
+    for (i, (a, b)) in got.iter().zip(want).enumerate() {
+        let rel = (a - b).abs() / b.abs().max(1e-30);
+        assert!(
+            rel < DENSITY_RTOL,
+            "{tag} row {i}: flash {a} vs oracle {b} (rel {rel:.2e})"
+        );
+    }
+}
+
+fn assert_score_close(got: &[f64], want: &[f64], h_s: f64, tag: &str) {
+    assert_eq!(got.len(), want.len(), "{tag}: length");
+    for (i, (a, b)) in got.iter().zip(want).enumerate() {
+        let scale = b.abs().max(0.1 / h_s);
+        assert!(
+            ((a - b) / scale).abs() < SCORE_RTOL,
+            "{tag} row {i}: flash {a} vs oracle {b}"
+        );
+    }
+}
+
+#[test]
+fn density_kernels_match_oracle_across_grid() {
+    // (n_used, bucket_n, masked, m_used, bucket_m): exact-fit buckets,
+    // padded buckets, and padded + masked interiors.
+    let shapes = [
+        (64, 64, 0, 16, 16),
+        (100, 128, 0, 9, 32),
+        (300, 512, 57, 40, 64),
+    ];
+    for d in [1usize, 3, 16] {
+        for (si, &(n_used, bucket_n, masked, m_used, bucket_m)) in
+            shapes.iter().enumerate()
+        {
+            let p = problem(d, n_used, bucket_n, masked, m_used, bucket_m,
+                            100 + si as u64);
+            let cfg = TileConfig::default();
+
+            let got = flash::kde(&p.x, &p.w, &p.y, d, p.h, &cfg);
+            let kde_want = native::kde(&p.x, &p.w, &p.y, d, p.h);
+            assert_density_close(&got, &kde_want, &format!("kde d={d} shape{si}"));
+
+            let got = flash::laplace(&p.x, &p.w, &p.y, d, p.h, &cfg);
+            let want = native::laplace(&p.x, &p.w, &p.y, d, p.h);
+            // Laplace is signed: compare at the KDE magnitude scale.
+            let kde_scale: f64 =
+                kde_want.iter().fold(0.0f64, |m, v| m.max(v.abs()));
+            for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+                assert!(
+                    (a - b).abs() < DENSITY_RTOL * (b.abs() + kde_scale),
+                    "laplace d={d} shape{si} row {i}: {a} vs {b}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn score_and_debias_match_oracle_across_grid() {
+    for d in [1usize, 3, 16] {
+        let p = problem(d, 150, 256, 20, 24, 32, 200 + d as u64);
+        let cfg = TileConfig::default();
+
+        // score_eval (the grad pipeline): flash vs score_at oracle.
+        let got = flash::score_at(&p.x, &p.w, &p.y, d, p.h_s, &cfg);
+        let want = native::score_at(&p.x, &p.w, &p.y, d, p.h_s);
+        assert_score_close(&got, &want, p.h_s, &format!("score_at d={d}"));
+
+        // With y = x the flash kernel is the fit-side score(): same guard,
+        // same masked-row semantics.
+        let got = flash::score_at(&p.x, &p.w, &p.x, d, p.h_s, &cfg);
+        let want = native::score(&p.x, &p.w, d, p.h_s);
+        assert_score_close(&got, &want, p.h_s, &format!("score d={d}"));
+
+        // Debias: element-wise shift agreement; masked rows pass through.
+        let got = flash::debias(&p.x, &p.w, d, p.h, p.h_s, &cfg);
+        let want = native::debias(&p.x, &p.w, d, p.h, p.h_s);
+        for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                (a - b).abs() < 1e-4 * (1.0 + b.abs()),
+                "debias d={d} elem {i}: {a} vs {b}"
+            );
+        }
+        for (i, &wi) in p.w.iter().enumerate() {
+            if wi == 0.0 {
+                assert_eq!(&got[i * d..(i + 1) * d], &p.x[i * d..(i + 1) * d]);
+            }
+        }
+    }
+}
+
+#[test]
+fn sdkde_end_to_end_matches_oracle() {
+    for d in [1usize, 3, 16] {
+        let p = problem(d, 200, 256, 13, 20, 32, 300 + d as u64);
+        let got = flash::sdkde(&p.x, &p.w, &p.y, d, p.h, p.h_s, &TileConfig::default());
+        let want = native::sdkde(&p.x, &p.w, &p.y, d, p.h, p.h_s);
+        assert_density_close(
+            &got[..p.m_used],
+            &want[..p.m_used],
+            &format!("sdkde d={d}"),
+        );
+    }
+}
+
+#[test]
+fn masked_rows_equal_compacted_problem() {
+    // Masking rows via w = 0 must equal physically removing them — the
+    // bucket-padding contract the coordinator relies on.
+    let d = 2;
+    let mix = by_dim(d);
+    let mut rng = Pcg64::seeded(42);
+    let x = mix.sample(80, &mut rng);
+    let y = mix.sample(12, &mut rng);
+    let mut w = vec![1.0f32; 80];
+    for i in 50..80 {
+        w[i] = 0.0;
+    }
+    let cfg = TileConfig::default();
+    let masked = flash::kde(&x, &w, &y, d, 0.5, &cfg);
+    let compact = flash::kde(&x[..50 * d], &vec![1.0; 50], &y, d, 0.5, &cfg);
+    for (a, b) in masked.iter().zip(&compact) {
+        assert!((a - b).abs() < 1e-12 * b.abs().max(1e-30), "{a} vs {b}");
+    }
+}
+
+#[test]
+fn prop_results_invariant_across_tile_and_thread_choices() {
+    check("tile/thread invariance", 40, |rng| {
+        let d = [1usize, 2, 3, 5, 16][rng.below(5) as usize];
+        let n = 2 + rng.below(200) as usize;
+        let m = 1 + rng.below(60) as usize;
+        let mix = by_dim(d);
+        let mut data_rng = Pcg64::new(rng.next_u64(), 1);
+        let x = mix.sample(n, &mut data_rng);
+        let y = mix.sample(m, &mut data_rng);
+        let mut w = vec![1.0f32; n];
+        // Random mask, keeping at least one live row.
+        for wi in w.iter_mut().skip(1) {
+            if rng.below(4) == 0 {
+                *wi = 0.0;
+            }
+        }
+        let h = 0.2 + 0.1 * rng.below(10) as f64;
+
+        let base_cfg = TileConfig { block_q: 32, block_t: 256, threads: 1 };
+        let base = flash::kde(&x, &w, &y, d, h, &base_cfg);
+        let base_s = flash::score_at(&x, &w, &y, d, h, &base_cfg);
+
+        for _ in 0..3 {
+            let cfg = TileConfig {
+                block_q: 1 + rng.below(70) as usize,
+                block_t: 1 + rng.below(300) as usize,
+                threads: 1 + rng.below(4) as usize,
+            };
+            let got = flash::kde(&x, &w, &y, d, h, &cfg);
+            for (a, b) in got.iter().zip(&base) {
+                let rel = (a - b).abs() / b.abs().max(1e-30);
+                ensure(
+                    rel < TILE_INVARIANCE_RTOL,
+                    &format!("kde moved under {cfg:?}: {a} vs {b}"),
+                )?;
+            }
+            let got_s = flash::score_at(&x, &w, &y, d, h, &cfg);
+            for (a, b) in got_s.iter().zip(&base_s) {
+                let scale = b.abs().max(1.0);
+                ensure(
+                    ((a - b) / scale).abs() < TILE_INVARIANCE_RTOL,
+                    &format!("score moved under {cfg:?}: {a} vs {b}"),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn far_queries_keep_guarded_scores() {
+    // score_at far from all mass: denominator clamps at 1e-30 in both
+    // implementations, so the score collapses to -y / h² identically.
+    let d = 1;
+    let x = vec![0.0f32, 0.5, -0.5, 0.25];
+    let w = vec![1.0f32; 4];
+    let y = vec![40.0f32];
+    let h_s = 1.0;
+    let got = flash::score_at(&x, &w, &y, d, h_s, &TileConfig::default());
+    let want = native::score_at(&x, &w, &y, d, h_s);
+    assert!((got[0] - want[0]).abs() < 1e-9 * want[0].abs(), "{got:?} vs {want:?}");
+    assert!((got[0] + 40.0).abs() < 1e-6, "guarded score should be -y/h²: {got:?}");
+}

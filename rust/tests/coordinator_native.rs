@@ -1,0 +1,409 @@
+//! The full serving path on the native backend — fit → debias → registry
+//! → bounded queue → co-batching → eval/grad → backpressure → wire
+//! protocol — with **zero artifacts and zero XLA**.  These are the
+//! de-skipped twins of the PJRT coordinator integration tests: they run
+//! on a fresh checkout and in the no-XLA CI leg, so L3 regressions fail
+//! fast everywhere.  The PJRT variants stay behind the artifact guard in
+//! `integration_coordinator.rs`.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use flash_sdkde::config::Config;
+use flash_sdkde::coordinator::server::{Client, Server};
+use flash_sdkde::coordinator::{Coordinator, FitSpec, OutputMode, QuerySpec};
+use flash_sdkde::data::mixture::by_dim;
+use flash_sdkde::estimator::{native, EstimatorKind};
+use flash_sdkde::runtime::BackendKind;
+use flash_sdkde::util::rng::Pcg64;
+
+/// Matches the conformance DENSITY_RTOL: f32 dot tiles + f32 wire format.
+const RTOL: f64 = 2e-3;
+
+fn native_config() -> Config {
+    let mut cfg = Config::default();
+    // Deliberately nonexistent: the manifest must be synthesized.
+    cfg.artifacts_dir = PathBuf::from("/nonexistent-flash-sdkde-artifacts");
+    cfg.backend = BackendKind::Native;
+    cfg.batch_wait_ms = 1;
+    cfg
+}
+
+fn coordinator() -> Coordinator {
+    Coordinator::start(native_config()).expect("native coordinator needs no artifacts")
+}
+
+#[test]
+fn fit_eval_kde_matches_oracle() {
+    let coord = coordinator();
+    let d = 3;
+    let mix = by_dim(d);
+    let mut rng = Pcg64::seeded(1);
+    let n = 300;
+    let train = mix.sample(n, &mut rng);
+
+    let model = coord
+        .fit("m", train.clone(), &FitSpec::new(EstimatorKind::Kde, d))
+        .expect("fit");
+    assert_eq!(model.n(), n);
+    assert!(model.bucket_n() >= n);
+    assert!(model.h() > 0.0);
+
+    let queries = mix.sample(10, &mut rng);
+    let res = coord.eval(&model, queries.clone()).expect("eval");
+    assert_eq!(res.values.len(), 10);
+    assert_eq!(res.mode, OutputMode::Density);
+
+    let w = vec![1.0f32; n];
+    let want = native::kde(&train, &w, &queries, d, model.h());
+    for (a, b) in res.values.iter().zip(&want) {
+        let rel = ((*a as f64 - b) / b).abs();
+        assert!(rel < RTOL, "{a} vs {b}");
+    }
+}
+
+#[test]
+fn fit_eval_sdkde_and_laplace_match_oracle() {
+    let coord = coordinator();
+    let d = 1;
+    let mix = by_dim(d);
+    let mut rng = Pcg64::seeded(2);
+    let n = 500;
+    let train = mix.sample(n, &mut rng);
+    let queries = mix.sample(12, &mut rng);
+    let w = vec![1.0f32; n];
+
+    let h = 0.35;
+    let hs = h / std::f64::consts::SQRT_2;
+    let sd = coord
+        .fit(
+            "sd",
+            train.clone(),
+            &FitSpec::new(EstimatorKind::SdKde, d)
+                .bandwidth(h)
+                .score_bandwidth(hs),
+        )
+        .expect("fit sdkde");
+    assert_eq!(sd.h(), h);
+    assert_eq!(sd.h_score(), hs);
+    let res = coord.eval(&sd, queries.clone()).expect("eval sdkde");
+    let want = native::sdkde(&train, &w, &queries, d, h, hs);
+    for (a, b) in res.values.iter().zip(&want) {
+        assert!(((*a as f64 - b) / b).abs() < RTOL, "{a} vs {b}");
+    }
+
+    let lc = coord
+        .fit(
+            "lc",
+            train.clone(),
+            &FitSpec::new(EstimatorKind::Laplace, d).bandwidth(h),
+        )
+        .expect("fit laplace");
+    let res = coord.eval(&lc, queries.clone()).expect("eval laplace");
+    let want = native::laplace(&train, &w, &queries, d, h);
+    for (a, b) in res.values.iter().zip(&want) {
+        assert!((*a as f64 - b).abs() < 1e-5 + RTOL * b.abs(), "{a} vs {b}");
+    }
+}
+
+#[test]
+fn log_density_mode_is_ln_of_density() {
+    let coord = coordinator();
+    let d = 1;
+    let mix = by_dim(d);
+    let mut rng = Pcg64::seeded(21);
+    let model = coord
+        .fit("log", mix.sample(200, &mut rng), &FitSpec::new(EstimatorKind::Kde, d))
+        .expect("fit");
+    let queries = mix.sample(8, &mut rng);
+    let dens = coord.eval(&model, queries.clone()).expect("eval");
+    let logs = coord
+        .query(&model, QuerySpec::log_density(queries))
+        .expect("log eval");
+    assert_eq!(logs.mode, OutputMode::LogDensity);
+    for (l, p) in logs.values.iter().zip(&dens.values) {
+        assert!((l - p.max(f32::MIN_POSITIVE).ln()).abs() < 1e-6, "{l} vs ln {p}");
+    }
+}
+
+#[test]
+fn eval_chunks_requests_larger_than_biggest_bucket() {
+    // The synthetic manifest's largest query bucket is 2048; a 2100-row
+    // request must be chunked and reassembled losslessly.
+    let coord = coordinator();
+    let d = 1;
+    let mix = by_dim(d);
+    let mut rng = Pcg64::seeded(3);
+    let n = 200;
+    let train = mix.sample(n, &mut rng);
+    let model = coord
+        .fit("big", train.clone(), &FitSpec::new(EstimatorKind::Kde, d))
+        .expect("fit");
+
+    let k = 2100;
+    let queries = mix.sample(k, &mut rng);
+    let res = coord.eval(&model, queries.clone()).expect("eval");
+    assert_eq!(res.values.len(), k);
+    let w = vec![1.0f32; n];
+    let want = native::kde(&train, &w, &queries, d, model.h());
+    for (i, (a, b)) in res.values.iter().zip(&want).enumerate() {
+        assert!(((*a as f64 - b) / b).abs() < RTOL, "row {i}: {a} vs {b}");
+    }
+}
+
+#[test]
+fn grad_over_the_queue_matches_oracle_and_batches() {
+    let coord = Arc::new(
+        Coordinator::start({
+            let mut cfg = native_config();
+            cfg.batch_wait_ms = 5;
+            cfg
+        })
+        .expect("coordinator"),
+    );
+    let d = 1;
+    let mix = by_dim(d);
+    let mut rng = Pcg64::seeded(31);
+    let n = 300;
+    let train = mix.sample(n, &mut rng);
+    let h = 0.4;
+    let model = coord
+        .fit("g", train.clone(), &FitSpec::new(EstimatorKind::Kde, d).bandwidth(h))
+        .expect("fit");
+
+    // Correctness through the queue.
+    let queries = mix.sample(9, &mut rng);
+    let res = coord.grad(&model, queries.clone()).expect("grad");
+    assert_eq!(res.values.len(), 9 * d);
+    assert_eq!(res.mode, OutputMode::Grad);
+    let w = vec![1.0f32; n];
+    let want = native::score_at(&train, &w, &queries, d, h);
+    for (i, (a, b)) in res.values.iter().zip(&want).enumerate() {
+        let scale = b.abs().max(0.1);
+        assert!(((*a as f64 - b) / scale).abs() < RTOL, "grad {i}: {a} vs {b}");
+    }
+
+    // Co-batching under concurrent gradient load.
+    let clients = 6;
+    let per_client = 10;
+    let threads: Vec<_> = (0..clients)
+        .map(|c| {
+            let coord = Arc::clone(&coord);
+            let mix = mix.clone();
+            let model = model.clone();
+            std::thread::spawn(move || {
+                let mut rng = Pcg64::new(60, c);
+                let mut max_batch = 0usize;
+                for _ in 0..per_client {
+                    let res = coord.grad(&model, mix.sample(4, &mut rng)).expect("grad");
+                    max_batch = max_batch.max(res.batch_size);
+                }
+                max_batch
+            })
+        })
+        .collect();
+    let max_batch = threads.into_iter().map(|h| h.join().unwrap()).max().unwrap();
+    assert!(max_batch >= 2, "no grad batching observed (max {max_batch})");
+    let stats = coord.stats_json();
+    let m = stats.get("metrics").expect("metrics");
+    assert_eq!(
+        m.get("grad_requests").unwrap().as_usize(),
+        Some(clients as usize * per_client + 1)
+    );
+}
+
+#[test]
+fn concurrent_clients_get_batched() {
+    let coord = Arc::new(
+        Coordinator::start({
+            let mut cfg = native_config();
+            cfg.batch_wait_ms = 5;
+            cfg
+        })
+        .expect("coordinator"),
+    );
+    let d = 1;
+    let mix = by_dim(d);
+    let mut rng = Pcg64::seeded(5);
+    let model = coord
+        .fit("m", mix.sample(100, &mut rng), &FitSpec::new(EstimatorKind::Kde, d))
+        .expect("fit");
+
+    let clients = 6;
+    let per_client = 10;
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            let coord = Arc::clone(&coord);
+            let mix = mix.clone();
+            let model = model.clone();
+            std::thread::spawn(move || {
+                let mut rng = Pcg64::new(50, c);
+                let mut max_batch = 0usize;
+                for _ in 0..per_client {
+                    let res = coord.eval(&model, mix.sample(4, &mut rng)).expect("eval");
+                    max_batch = max_batch.max(res.batch_size);
+                }
+                max_batch
+            })
+        })
+        .collect();
+    let max_batch = handles.into_iter().map(|h| h.join().unwrap()).max().unwrap();
+    assert!(max_batch >= 2, "no batching observed (max batch {max_batch})");
+    assert!(coord.metrics().mean_batch_size() >= 1.0);
+}
+
+#[test]
+fn queue_backpressure_sheds_load() {
+    // Tiny queue + a long co-batching window: once the dispatcher parks in
+    // the window, a burst must overflow the bounded queue and be rejected
+    // (the backpressure contract), while admitted requests still complete.
+    let coord = Arc::new(
+        Coordinator::start({
+            let mut cfg = native_config();
+            cfg.queue_depth = 2;
+            cfg.batch_wait_ms = 200;
+            cfg
+        })
+        .expect("coordinator"),
+    );
+    let d = 1;
+    let mix = by_dim(d);
+    let mut rng = Pcg64::seeded(71);
+    let model = coord
+        .fit("bp", mix.sample(64, &mut rng), &FitSpec::new(EstimatorKind::Kde, d))
+        .expect("fit");
+
+    // Head request: the dispatcher pops it and sleeps in the co-batch
+    // window (queue now empty).
+    let head = coord
+        .submit(&model, QuerySpec::density(mix.sample(1, &mut rng)))
+        .expect("head submit");
+    std::thread::sleep(std::time::Duration::from_millis(50));
+
+    // Burst while the dispatcher sleeps: only queue_depth fit.
+    let mut tickets = vec![head];
+    let mut rejections = 0usize;
+    for _ in 0..10 {
+        match coord.submit(&model, QuerySpec::density(mix.sample(1, &mut rng))) {
+            Ok(t) => tickets.push(t),
+            Err(e) => {
+                rejections += 1;
+                let msg = format!("{e:#}");
+                assert!(msg.contains("overloaded"), "{msg}");
+            }
+        }
+    }
+    assert!(rejections >= 1, "queue never overflowed");
+    // Admitted requests complete normally once the window closes.
+    for t in tickets {
+        t.wait().expect("admitted request served");
+    }
+    let stats = coord.stats_json();
+    let rejected = stats
+        .get("metrics")
+        .and_then(|m| m.get("rejected"))
+        .and_then(|v| v.as_usize())
+        .unwrap();
+    assert!(rejected >= rejections, "metrics lost rejections");
+}
+
+#[test]
+fn handle_delete_acts_on_identity_and_eviction_keeps_handles_alive() {
+    let mut cfg = native_config();
+    cfg.registry_capacity = 2;
+    let coord = Coordinator::start(cfg).expect("coordinator");
+    let d = 1;
+    let mix = by_dim(d);
+    let mut rng = Pcg64::seeded(7);
+
+    // Stale-handle delete must not remove a re-fitted replacement.
+    let first = coord
+        .fit("a", mix.sample(40, &mut rng), &FitSpec::new(EstimatorKind::Kde, d))
+        .expect("fit a");
+    let second = coord
+        .fit("a", mix.sample(40, &mut rng), &FitSpec::new(EstimatorKind::Kde, d))
+        .expect("refit a");
+    assert!(!coord.delete(&first), "stale handle deleted the replacement");
+    assert!(coord.handle("a").is_some());
+    assert!(coord.delete(&second));
+    assert!(coord.handle("a").is_none());
+    // Deleted-by-identity handles stay serviceable (tensors resident).
+    assert!(coord.eval(&second, vec![0.0]).is_ok());
+
+    // LRU eviction under capacity pressure; evicted handles stay usable.
+    let mut handles = Vec::new();
+    for name in ["x", "y", "z"] {
+        handles.push(
+            coord
+                .fit(name, mix.sample(40, &mut rng), &FitSpec::new(EstimatorKind::Kde, d))
+                .expect("fit"),
+        );
+    }
+    assert_eq!(coord.registry().len(), 2);
+    assert!(coord.handle("x").is_none());
+    assert!(coord.handle("z").is_some());
+    assert!(coord.eval(&handles[0], vec![0.0]).is_ok());
+}
+
+#[test]
+fn wire_protocol_round_trip_on_native_backend() {
+    let coord = coordinator();
+    let mut server = Server::start(coord, "127.0.0.1", 0).expect("server");
+    let addr = server.local_addr();
+
+    let d = 1;
+    let mix = by_dim(d);
+    let mut rng = Pcg64::seeded(6);
+    let train = mix.sample(120, &mut rng);
+    let queries = mix.sample(7, &mut rng);
+
+    let mut client = Client::connect(addr).expect("connect");
+    client.ping().expect("ping");
+    let info = client
+        .fit("wire", train.clone(), &FitSpec::new(EstimatorKind::SdKde, d))
+        .expect("fit");
+    assert_eq!(info.n, 120);
+    assert_eq!(info.kind, EstimatorKind::SdKde);
+
+    let res = client.eval("wire", d, queries.clone()).expect("eval");
+    assert_eq!(res.values.len(), 7);
+    // Wire numerics equal in-process numerics.
+    let handle = server.coordinator().handle("wire").expect("handle");
+    let local = server.coordinator().eval(&handle, queries.clone()).expect("local");
+    assert_eq!(res.values, local.values);
+
+    let grads = client.grad("wire", d, queries).expect("grad");
+    assert_eq!(grads.values.len(), 7);
+    assert_eq!(grads.mode, OutputMode::Grad);
+
+    let stats = client.stats().expect("stats");
+    let backend = stats
+        .get("engine")
+        .and_then(|e| e.get("backend"))
+        .and_then(|b| b.as_str().map(str::to_string));
+    assert_eq!(backend.as_deref(), Some("native"));
+
+    assert!(client.delete("wire").expect("delete"));
+    assert!(!client.delete("wire").expect("delete"));
+    server.shutdown();
+}
+
+#[test]
+fn oversized_fit_and_bad_points_error_cleanly() {
+    let coord = coordinator();
+    let d = 1;
+    let mix = by_dim(d);
+    let mut rng = Pcg64::seeded(4);
+    let model = coord
+        .fit("m", mix.sample(50, &mut rng), &FitSpec::new(EstimatorKind::Kde, d))
+        .expect("fit");
+    assert!(coord.eval(&model, vec![]).is_err());
+    // Beyond the largest synthetic train bucket (16384).
+    let huge = coord.fit(
+        "huge",
+        vec![0.5; 20_000],
+        &FitSpec::new(EstimatorKind::Kde, 1),
+    );
+    let err = format!("{:#}", huge.unwrap_err());
+    assert!(err.contains("no train bucket"), "{err}");
+}

@@ -1,12 +1,17 @@
 //! Failure injection: the runtime and coordinator must fail loudly and
 //! recoverably on corrupt artifacts, missing files and bad manifests —
-//! never with a panic or a silent wrong answer.
+//! never with a panic or a silent wrong answer — while the native backend
+//! keeps serving the same workload with no artifacts at all.
 
 use std::path::{Path, PathBuf};
 
-use flash_sdkde::runtime::{ExecutableStore, Manifest};
+use flash_sdkde::config::Config;
+use flash_sdkde::coordinator::{Coordinator, FitSpec};
+use flash_sdkde::estimator::EstimatorKind;
+use flash_sdkde::runtime::{BackendKind, Manifest};
 use flash_sdkde::util::json;
 
+#[cfg(feature = "pjrt")]
 fn artifacts_dir() -> Option<PathBuf> {
     let dir = std::env::var("FLASH_SDKDE_ARTIFACTS")
         .map(PathBuf::from)
@@ -14,21 +19,36 @@ fn artifacts_dir() -> Option<PathBuf> {
     dir.join("manifest.json").exists().then_some(dir)
 }
 
-/// Copy the real manifest into a temp dir, optionally corrupting pieces.
-fn temp_artifacts(mutate: impl Fn(&mut String)) -> PathBuf {
-    let src = artifacts_dir().expect("artifacts present");
+/// Fresh temp dir for one test (empty, or seeded via `write_manifest`).
+fn temp_dir(tag: &str) -> PathBuf {
     let dir = std::env::temp_dir().join(format!(
-        "flash-sdkde-fi-{}-{:?}",
+        "flash-sdkde-fi-{tag}-{}-{:?}",
         std::process::id(),
         std::thread::current().id()
     ));
     let _ = std::fs::remove_dir_all(&dir);
     std::fs::create_dir_all(&dir).expect("mkdir");
+    dir
+}
+
+/// Copy the real manifest into a temp dir, optionally corrupting pieces.
+#[cfg(feature = "pjrt")]
+fn temp_artifacts(mutate: impl Fn(&mut String)) -> PathBuf {
+    let src = artifacts_dir().expect("artifacts present");
+    let dir = temp_dir("art");
     let mut manifest =
         std::fs::read_to_string(src.join("manifest.json")).expect("read");
     mutate(&mut manifest);
     std::fs::write(dir.join("manifest.json"), manifest).expect("write");
     dir
+}
+
+fn config_for(dir: &Path, backend: BackendKind) -> Config {
+    let mut cfg = Config::default();
+    cfg.artifacts_dir = dir.to_path_buf();
+    cfg.backend = backend;
+    cfg.batch_wait_ms = 1;
+    cfg
 }
 
 #[test]
@@ -39,33 +59,90 @@ fn missing_manifest_yields_actionable_error() {
 }
 
 #[test]
-fn corrupt_manifest_json_rejected() {
-    if artifacts_dir().is_none() {
-        eprintln!("SKIP: no artifacts");
-        return;
+fn missing_manifest_pjrt_backend_is_typed_coordinator_error() {
+    // backend = pjrt with no artifacts: Coordinator::start must return the
+    // actionable manifest error — not panic, not silently switch backends.
+    let dir = temp_dir("missing-pjrt");
+    let err = Coordinator::start(config_for(&dir, BackendKind::Pjrt)).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("make artifacts"), "{msg}");
+}
+
+#[test]
+fn corrupt_manifest_is_typed_error_for_both_backends() {
+    // A torn manifest.json is a loud parse error on the PJRT path, and the
+    // native backend must *not* paper over it with a synthesized manifest
+    // — an existing-but-corrupt artifact directory means a broken build.
+    let dir = temp_dir("corrupt");
+    std::fs::write(dir.join("manifest.json"), "{\"version\": 1, \"entr").expect("write");
+    for backend in [BackendKind::Pjrt, BackendKind::Native] {
+        let err = Coordinator::start(config_for(&dir, backend)).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("parse"), "{backend}: {msg}");
     }
-    let dir = temp_artifacts(|m| {
-        m.truncate(m.len() / 2); // torn write
-    });
+}
+
+#[test]
+fn native_backend_serves_workload_where_pjrt_cannot() {
+    // Same (artifact-free) directory that fails the PJRT path above: the
+    // native backend synthesizes a manifest and serves fit + eval + grad.
+    let dir = temp_dir("native-serves");
+    let coord = Coordinator::start(config_for(&dir, BackendKind::Native))
+        .expect("native backend needs no artifacts");
+    let train: Vec<f32> = (0..64).map(|i| (i as f32) * 0.1 - 3.2).collect();
+    let model = coord
+        .fit("fi", train, &FitSpec::new(EstimatorKind::SdKde, 1))
+        .expect("fit");
+    let res = coord.eval(&model, vec![0.0, 1.0]).expect("eval");
+    assert_eq!(res.values.len(), 2);
+    assert!(res.values.iter().all(|v| v.is_finite() && *v > 0.0));
+    let grads = coord.grad(&model, vec![5.0]).expect("grad");
+    assert_eq!(grads.values.len(), 1);
+}
+
+#[cfg(not(feature = "pjrt"))]
+#[test]
+fn pjrt_backend_without_feature_is_typed_error() {
+    // Built without XLA: selecting pjrt over a *valid* manifest fails with
+    // a message pointing at the feature flag and the native escape hatch.
+    let dir = temp_dir("no-feature");
+    // A valid on-disk manifest, so the error comes from the backend
+    // constructor rather than the loader.
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"version": 1, "digest": "x", "entries": []}"#,
+    )
+    .expect("write");
+    let err = Coordinator::start(config_for(&dir, BackendKind::Pjrt)).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("pjrt"), "{msg}");
+    assert!(msg.contains("native"), "{msg}");
+}
+
+#[test]
+fn corrupt_manifest_json_rejected() {
+    let dir = temp_dir("torn");
+    std::fs::write(dir.join("manifest.json"), "not json at all").expect("write");
     let err = Manifest::load(&dir).unwrap_err();
     assert!(format!("{err:#}").contains("parse"), "{err:#}");
 }
 
 #[test]
 fn manifest_with_wrong_version_rejected() {
-    if artifacts_dir().is_none() {
-        eprintln!("SKIP: no artifacts");
-        return;
-    }
-    let dir = temp_artifacts(|m| {
-        *m = m.replacen("\"version\": 1", "\"version\": 99", 1);
-    });
+    let dir = temp_dir("version");
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"version": 99, "entries": []}"#,
+    )
+    .expect("write");
     let err = Manifest::load(&dir).unwrap_err();
     assert!(format!("{err:#}").contains("version"), "{err:#}");
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn missing_hlo_file_fails_at_compile_not_at_open() {
+    use flash_sdkde::runtime::ExecutableStore;
     // The store opens lazily; the error must surface on first use of the
     // affected entry, name the file, and leave the store usable.
     if artifacts_dir().is_none() {
@@ -84,8 +161,10 @@ fn missing_hlo_file_fails_at_compile_not_at_open() {
     assert!(store.warm(&entry).is_err());
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn garbage_hlo_text_fails_cleanly() {
+    use flash_sdkde::runtime::ExecutableStore;
     if artifacts_dir().is_none() {
         eprintln!("SKIP: no artifacts");
         return;

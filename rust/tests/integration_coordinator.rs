@@ -15,6 +15,12 @@ use flash_sdkde::estimator::{native, EstimatorKind};
 use flash_sdkde::util::rng::Pcg64;
 
 fn artifacts_dir() -> Option<PathBuf> {
+    // These are the PJRT variants; without the pjrt feature the engine
+    // cannot serve artifacts, so every test here skips.  The native-backend
+    // twins in `coordinator_native.rs` always run.
+    if cfg!(not(feature = "pjrt")) {
+        return None;
+    }
     let dir = std::env::var("FLASH_SDKDE_ARTIFACTS")
         .map(PathBuf::from)
         .unwrap_or_else(|_| PathBuf::from("artifacts"));

@@ -3,7 +3,10 @@
 //!
 //! Requires `make artifacts` (the quick set suffices); tests skip with a
 //! clear message when the manifest is missing so `cargo test` stays usable
-//! on a fresh checkout.
+//! on a fresh checkout.  The whole file is PJRT-specific — the native
+//! backend's equivalents live in `conformance_native.rs` and run
+//! unconditionally.
+#![cfg(feature = "pjrt")]
 
 use std::path::PathBuf;
 
@@ -366,7 +369,12 @@ fn engine_executes_across_threads() {
         .first()
         .expect("buckets");
     let entry = manifest.find("kde", "flash", d, bn, bm).unwrap().clone();
-    let engine = flash_sdkde::runtime::Engine::start(manifest, 1).expect("engine");
+    let engine = flash_sdkde::runtime::Engine::start(
+        manifest,
+        1,
+        flash_sdkde::runtime::BackendKind::Pjrt,
+    )
+    .expect("engine");
 
     let (x, w, y, h, _) = padded_problem(bn, bm, d, bn, bm, 7);
     let mut handles = Vec::new();
