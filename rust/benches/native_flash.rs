@@ -1,10 +1,14 @@
-//! `cargo bench --bench native_flash` — scalar baseline vs native-flash.
+//! `cargo bench --bench native_flash` — the four native series: scalar
+//! baseline, auto-vectorized flash tile, explicit-SIMD tile, and
+//! SIMD + cached prepare (the resident-model serving hot path).
 //!
 //! The only bench target that needs neither `make artifacts` nor XLA:
-//! both estimators are compiled into the binary, so this runs on a fresh
+//! every series is compiled into the binary, so this runs on a fresh
 //! checkout (and in the no-XLA CI leg).  It is the CPU analogue of the
 //! paper's Fig. 1 ordering claim: the matmul-identity reordering beats
-//! the scalar O(n·m·d) sweep, increasingly so as n grows.
+//! the scalar O(n·m·d) sweep, increasingly so as n grows.  For the SIMD
+//! series to differ from the tile series, build with a nightly toolchain
+//! and `--features simd` (see BENCHMARKS.md).
 //!
 //! Env overrides: FLASH_SDKDE_BENCH_SIZES="1024,4096" to change the
 //! n sweep, FLASH_SDKDE_NAIVE_MAX_N to cap the scalar baseline,

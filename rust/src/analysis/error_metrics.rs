@@ -15,10 +15,13 @@
 /// Error metrics for one estimator on one evaluation set.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct OracleError {
+    /// Mean integrated squared error vs the analytic truth.
     pub mise: f64,
+    /// Mean integrated absolute error vs the analytic truth.
     pub miae: f64,
     /// Integrated negative mass of the signed estimator.
     pub negative_mass: f64,
+    /// Query points the integrals were estimated over.
     pub points: usize,
 }
 
@@ -50,10 +53,13 @@ pub fn oracle_error(estimate: &[f64], truth: &[f64]) -> OracleError {
 /// uncertainty bands in Figs. 2/3).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ErrorBand {
+    /// Mean over the seed draws.
     pub mean: f64,
+    /// 95% CI half-width over the seed draws.
     pub half_width: f64,
 }
 
+/// Mean ± 95% CI half-width over per-seed values.
 pub fn band(values: &[f64]) -> ErrorBand {
     let s = crate::util::stats::Summary::of(values);
     ErrorBand { mean: s.mean, half_width: s.ci95_half_width() }

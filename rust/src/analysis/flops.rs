@@ -9,20 +9,27 @@ pub const EXP_FLOPS: f64 = 8.0;
 
 /// Paper's best launch parameters, used by the tile-byte model (§4.1).
 pub const PAPER_BLOCK_M: usize = 64;
+/// Paper's best BLOCK_N (train-rows tile) from the §6.2 sweep.
 pub const PAPER_BLOCK_N: usize = 1024;
 
 /// A6000 peaks used for the paper-scale roofline (§3, §4.1).
 pub const A6000_TC_PEAK_FLOPS: f64 = 155.0e12;
+/// A6000 scalar FP32 peak, FLOP/s.
 pub const A6000_FP32_PEAK_FLOPS: f64 = 40.0e12;
+/// A6000 main-memory bandwidth, bytes/s.
 pub const A6000_BANDWIDTH_BPS: f64 = 770.0e9;
 
 #[derive(Debug, Clone, Copy, PartialEq)]
+/// Model FLOPs and memory traffic for one kernel invocation.
 pub struct FlopEstimate {
+    /// Floating-point operations (exp counted at [`EXP_FLOPS`]).
     pub flops: f64,
+    /// Bytes moved to/from main memory.
     pub bytes: f64,
 }
 
 impl FlopEstimate {
+    /// Arithmetic intensity, FLOP per byte.
     pub fn intensity(&self) -> f64 {
         self.flops / self.bytes
     }
@@ -80,6 +87,7 @@ pub fn sdkde_bytes_1d(k: f64, n_test: Option<f64>) -> f64 {
     4.0 * (k + m) + 4.0 * m
 }
 
+/// Combined FLOP + bytes model for the 1-D SD-KDE pipeline.
 pub fn sdkde_estimate_1d(k: f64) -> FlopEstimate {
     FlopEstimate { flops: sdkde_flops_1d(k, None), bytes: sdkde_bytes_1d(k, None) }
 }

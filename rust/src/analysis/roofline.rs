@@ -12,6 +12,7 @@ use super::flops::{self, FlopEstimate};
 /// A two-roof machine: matrix-engine peak, scalar peak, memory bandwidth.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct MachineModel {
+    /// Human-readable machine name.
     pub name: &'static str,
     /// Matrix-unit peak (Tensor Core / MXU), FLOP/s.
     pub matrix_peak: f64,
@@ -89,13 +90,17 @@ impl MachineModel {
 /// Utilization report row produced by the Fig. 5 / Fig. 7 benches.
 #[derive(Debug, Clone, PartialEq)]
 pub struct UtilizationRow {
+    /// Training-set size of the measured run.
     pub n_train: usize,
+    /// Measured runtime, milliseconds.
     pub runtime_ms: f64,
+    /// Model FLOPs for that run.
     pub model_flops: f64,
     /// Fraction of the machine's matrix peak sustained.
     pub utilization: f64,
 }
 
+/// Assemble one utilization report row from a measured runtime.
 pub fn utilization_row(
     machine: &MachineModel,
     n_train: usize,

@@ -23,17 +23,22 @@ use super::runner::{black_box, measure, Measurement, RunSpec};
 
 /// Shared experiment context.
 pub struct Ctx {
+    /// Compiled-executable store over the artifact manifest.
     pub store: ExecutableStore,
+    /// Warmup/iteration policy shared by every experiment.
     pub spec: RunSpec,
     /// Override the default n-sweep (from `--sizes`).
     pub sizes_16d: Vec<usize>,
+    /// Override the default 1-D n-sweep (from `--sizes`).
     pub sizes_1d: Vec<usize>,
     /// Run the slow native baseline up to this n (it is O(n² d) scalar).
     pub naive_max_n: usize,
+    /// Independent data draws per oracle sweep.
     pub seeds: u64,
 }
 
 impl Ctx {
+    /// Open the artifact store and default sweep settings.
     pub fn new(artifacts_dir: &std::path::Path) -> Result<Ctx> {
         let manifest = Manifest::load(artifacts_dir)?;
         Ok(Ctx {
@@ -63,15 +68,23 @@ impl Ctx {
 
 /// Benchmark problem data at one (n, m, d) from the canonical mixture.
 pub struct Problem {
+    /// [n, d] training points.
     pub x: HostTensor,
+    /// [n] unit weights.
     pub w: HostTensor,
+    /// [m, d] query points.
     pub y: HostTensor,
+    /// SD-rate evaluation bandwidth for this draw.
     pub h: f64,
+    /// Score bandwidth (`h / sqrt(2)`).
     pub h_score: f64,
+    /// Analytic mixture density at the query points.
     pub truth_y: Vec<f64>,
+    /// The generating mixture.
     pub mix: Mixture,
 }
 
+/// Draw one benchmark problem from the canonical mixture.
 pub fn problem(n: usize, m: usize, d: usize, seed: u64) -> Problem {
     let mix = by_dim(d);
     let mut rng = Pcg64::new(seed, 77);
@@ -161,6 +174,7 @@ fn find_entry(
 // Fig. 1 — 16-D runtime comparison (sklearn / Torch SD-KDE / Flash-SD-KDE).
 // ---------------------------------------------------------------------------
 
+/// Fig. 1: SD-KDE runtime vs n at d = 16, all variants.
 pub fn fig1_runtime_16d(ctx: &mut Ctx) -> Result<Table> {
     runtime_comparison(ctx, 16, "fig1",
         "Fig.1 — 16-D SD-KDE runtime (ms), n_test = n/8")
@@ -223,6 +237,7 @@ fn runtime_comparison(ctx: &mut Ctx, d: usize, id: &str, title: &str) -> Result<
 // Table 1 — comparison against the streaming (PyKeOps-analogue) baseline.
 // ---------------------------------------------------------------------------
 
+/// Table 1: PyKeOps-analogue (stream) comparison.
 pub fn table1_keops(ctx: &mut Ctx) -> Result<Table> {
     let d = 16;
     // Paper: n=32k, m=4k; scaled to the largest artifact bucket present.
@@ -267,10 +282,12 @@ pub fn table1_keops(ctx: &mut Ctx) -> Result<Table> {
 // Figs. 2/3 — oracle MISE/MIAE sweeps.
 // ---------------------------------------------------------------------------
 
+/// Fig. 2: oracle error vs n at d = 16.
 pub fn fig2_oracle_16d(ctx: &mut Ctx) -> Result<Table> {
     oracle_sweep(ctx, 16, "Fig.2 — 16-D oracle error (MISE / MIAE)")
 }
 
+/// Fig. 3: oracle error vs n at d = 1.
 pub fn fig3_oracle_1d(ctx: &mut Ctx) -> Result<Table> {
     oracle_sweep(ctx, 1, "Fig.3 — 1-D oracle error (MISE / MIAE)")
 }
@@ -360,6 +377,7 @@ fn oracle_sweep(ctx: &mut Ctx, d: usize, title: &str) -> Result<Table> {
 // Fig. 4 — fused vs non-fused Laplace runtime (1-D) + speedups.
 // ---------------------------------------------------------------------------
 
+/// Fig. 4: fused vs non-fused Laplace ablation at d = 1.
 pub fn fig4_fusion_1d(ctx: &mut Ctx) -> Result<Table> {
     let d = 1;
     let sizes = ctx.present_sizes(d, "laplace", "flash");
@@ -397,10 +415,12 @@ pub fn fig4_fusion_1d(ctx: &mut Ctx) -> Result<Table> {
 // Figs. 5/7 — utilization from the flop model + measured runtimes.
 // ---------------------------------------------------------------------------
 
+/// Fig. 5: matrix-unit utilization vs n at d = 16.
 pub fn fig5_utilization_16d(ctx: &mut Ctx) -> Result<Table> {
     utilization_sweep(ctx, 16, "Fig.5 — 16-D utilization (flop model / measured)")
 }
 
+/// Fig. 7: matrix-unit utilization vs n at d = 1.
 pub fn fig7_utilization_1d(ctx: &mut Ctx) -> Result<Table> {
     utilization_sweep(ctx, 1, "Fig.7 — 1-D utilization, flash vs gemm")
 }
@@ -449,6 +469,7 @@ fn utilization_sweep(ctx: &mut Ctx, d: usize, title: &str) -> Result<Table> {
 // Fig. 6 — 1-D runtime comparison (appendix sweep).
 // ---------------------------------------------------------------------------
 
+/// Fig. 6: runtime vs n at d = 1, all variants.
 pub fn fig6_runtime_1d(ctx: &mut Ctx) -> Result<Table> {
     runtime_comparison(ctx, 1, "fig6",
         "Fig.6 — 1-D SD-KDE runtime (ms), n_test = n/8")
@@ -458,6 +479,7 @@ pub fn fig6_runtime_1d(ctx: &mut Ctx) -> Result<Table> {
 // §6.2 — launch-parameter (BLOCK_M x BLOCK_N) sweep ablation.
 // ---------------------------------------------------------------------------
 
+/// §6.2: BLOCK_M x BLOCK_N launch-parameter sweep.
 pub fn ablation_blocksweep(ctx: &mut Ctx) -> Result<Table> {
     let entries: Vec<ArtifactEntry> = ctx
         .store
@@ -506,6 +528,7 @@ pub fn ablation_blocksweep(ctx: &mut Ctx) -> Result<Table> {
 // Headline scale: biggest run + power-law extrapolation to the paper's 1M.
 // ---------------------------------------------------------------------------
 
+/// Headline large-scale runs (abstract's end-to-end claim).
 pub fn headline_scale(ctx: &mut Ctx) -> Result<Table> {
     let d = 16;
     let sizes = ctx.present_sizes(d, "sdkde_e2e", "flash");

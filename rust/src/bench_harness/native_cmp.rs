@@ -1,18 +1,31 @@
 //! Native-flash vs scalar-baseline comparison — the CPU analogue of the
-//! paper's Fig. 1 that needs **zero artifacts and zero XLA**: both sides
-//! are compiled into this binary.
+//! paper's Fig. 1 that needs **zero artifacts and zero XLA**: every series
+//! is compiled into this binary.
 //!
-//! The scalar baseline is `estimator::native` (the deliberately-scalar
-//! scikit-learn analogue); the contender is `estimator::flash` (the
-//! matmul-identity reordering with f32 dot tiles, f64 accumulators and
-//! threaded query blocks).  Reported at the paper's 16-d workload with
-//! n_test = n/8, both single-threaded (the pure reordering win) and at
-//! the default thread count (the serving configuration).
+//! Four series over the paper's 16-d workload (n_test = n/8), all
+//! single-threaded so the kernel wins are not conflated with threading:
+//!
+//! 1. **scalar** — `estimator::native::kde`, the deliberately-scalar
+//!    scikit-learn analogue (pairwise ‖x−y‖² recomputed per coordinate).
+//! 2. **tile (auto-vec)** — the PR 2 flash kernel: matmul identity with
+//!    compiler-vectorized f32 dot tiles ([`TileConfig::scalar_tiles`]),
+//!    re-deriving the prepared train state every call (what the backend
+//!    did before the prepare cache).
+//! 3. **simd** — the same kernel with explicit `std::simd` lanes
+//!    (`TileConfig { simd: true }`; identical to series 2 in builds
+//!    without the `simd` cargo feature — the table notes say which ran).
+//! 4. **simd+cached** — series 3 over a [`flash::PreparedTrain`] built
+//!    once and reused, i.e. the serving hot path for a resident model
+//!    (DESIGN.md §11).
+//!
+//! The workload is the query ("decode") side — a KDE eval sweep — since
+//! that is what the prepare cache amortizes; BENCHMARKS.md records the
+//! series across PRs.
 
 use anyhow::Result;
 
 use crate::data::mixture::by_dim;
-use crate::estimator::flash::{self, TileConfig};
+use crate::estimator::flash::{self, PreparedTrain, TileConfig};
 use crate::estimator::{bandwidth, native};
 use crate::util::rng::Pcg64;
 
@@ -22,16 +35,16 @@ use super::runner::{black_box, measure, RunSpec};
 /// Default n sweep for the 16-d comparison.
 pub const DEFAULT_SIZES: &[usize] = &[1024, 2048, 4096, 8192];
 
-/// Default cap for the O(n²d) scalar baseline — shared by the CLI and the
-/// `native_flash` bench target so the entry points cannot diverge.
+/// Default cap for the O(n·m·d) scalar baseline — shared by the CLI and
+/// the `native_flash` bench target so the entry points cannot diverge.
 pub const DEFAULT_NAIVE_MAX_N: usize = 8192;
 
 /// Default number of independent data draws.
 pub const DEFAULT_SEEDS: u64 = 1;
 
-/// Full SD-KDE (debias + evaluate) runtime: scalar oracle vs native-flash.
-/// Times are means over `seeds` independent data draws (x measurement
-/// iterations each, per `spec`).
+/// KDE eval runtime over the four native series.  Times are means over
+/// `seeds` independent data draws (x measurement iterations each, per
+/// `spec`).
 pub fn native_vs_scalar(
     spec: RunSpec,
     sizes: &[usize],
@@ -42,65 +55,70 @@ pub fn native_vs_scalar(
     let d = 16;
     let mix = by_dim(d);
     let mut table = Table::new(
-        "Native backend — SD-KDE runtime (ms), d=16, n_test = n/8",
-        &["n_train", "scalar baseline", "flash (1 thread)",
-          "flash (threaded)", "speedup (1t)", "speedup"],
+        "Native backend — KDE eval runtime (ms), d=16, n_test = n/8, 1 thread",
+        &["n_train", "scalar", "tile (auto-vec)", "simd", "simd+cached",
+          "simd vs tile", "cached vs tile"],
     );
     table.note(
         "scalar = estimator::native (pairwise ‖x−y‖² recomputed per \
-         coordinate, f64); flash = matmul identity ‖x−y‖² = ‖x‖²+‖y‖²−2x·yᵀ \
-         with f32 dot tiles + f64 accumulators (estimator::flash)",
+         coordinate, f64); tile = matmul identity ‖x−y‖² = ‖x‖²+‖y‖²−2x·yᵀ \
+         with f32 dot tiles + f64 accumulators (estimator::flash), train \
+         state re-derived per call; cached = PreparedTrain built once \
+         (the resident-model serving hot path)",
     );
-    let threaded = TileConfig::default();
-    table.note(&format!(
-        "threaded = up to {} threads, {}x{} tiles",
-        threaded.threads, threaded.block_q, threaded.block_t
-    ));
+    table.note(if cfg!(feature = "simd") {
+        "simd = explicit std::simd lanes (f32x8 dot tile, f64x4 \
+         exp/accumulate; `simd` feature on)"
+    } else {
+        "simd = built WITHOUT the `simd` feature: series runs the \
+         auto-vectorized tile (rebuild with nightly + --features simd)"
+    });
+    let tile_cfg = TileConfig::scalar_tiles();
+    let simd_cfg = TileConfig { simd: true, ..TileConfig::serial() };
     for &n in sizes {
         let m = (n / 8).max(1);
-        let mut scalar_sum = 0.0f64;
-        let mut flash1_sum = 0.0f64;
-        let mut flashn_sum = 0.0f64;
+        let mut sums = [0.0f64; 4]; // scalar, tile, simd, cached
         for seed in 0..seeds {
             let mut rng = Pcg64::new(42 + seed, 77);
             let x = mix.sample(n, &mut rng);
             let y = mix.sample(m, &mut rng);
             let w = vec![1.0f32; n];
             let h = bandwidth::sdkde_rate(&x, n, d);
-            let hs = bandwidth::score_bandwidth(h);
 
             if n <= naive_max_n {
-                scalar_sum += measure("scalar", spec, || {
-                    black_box(native::sdkde(&x, &w, &y, d, h, hs));
+                sums[0] += measure("scalar", spec, || {
+                    black_box(native::kde(&x, &w, &y, d, h));
                 })
                 .mean_ms();
             }
-            let serial = TileConfig::serial();
-            flash1_sum += measure("flash-1t", spec, || {
-                black_box(flash::sdkde(&x, &w, &y, d, h, hs, &serial));
+            sums[1] += measure("tile", spec, || {
+                black_box(flash::kde(&x, &w, &y, d, h, &tile_cfg));
             })
             .mean_ms();
-            flashn_sum += measure("flash-nt", spec, || {
-                black_box(flash::sdkde(&x, &w, &y, d, h, hs, &threaded));
+            sums[2] += measure("simd", spec, || {
+                black_box(flash::kde(&x, &w, &y, d, h, &simd_cfg));
+            })
+            .mean_ms();
+            let train = PreparedTrain::new(&x, &w, d);
+            sums[3] += measure("simd-cached", spec, || {
+                black_box(flash::kde_prepared(&train, &y, h, &simd_cfg));
             })
             .mean_ms();
         }
         let scalar_ms =
-            (n <= naive_max_n).then_some(scalar_sum / seeds as f64);
-        let flash1_ms = flash1_sum / seeds as f64;
-        let flashn_ms = flashn_sum / seeds as f64;
+            (n <= naive_max_n).then_some(sums[0] / seeds as f64);
+        let tile_ms = sums[1] / seeds as f64;
+        let simd_ms = sums[2] / seeds as f64;
+        let cached_ms = sums[3] / seeds as f64;
 
         table.row(vec![
             n.to_string(),
             scalar_ms.map(fmt_ms).unwrap_or_else(|| "-".into()),
-            fmt_ms(flash1_ms),
-            fmt_ms(flashn_ms),
-            scalar_ms
-                .map(|s| fmt_speedup(s / flash1_ms))
-                .unwrap_or_else(|| "-".into()),
-            scalar_ms
-                .map(|s| fmt_speedup(s / flashn_ms))
-                .unwrap_or_else(|| "-".into()),
+            fmt_ms(tile_ms),
+            fmt_ms(simd_ms),
+            fmt_ms(cached_ms),
+            fmt_speedup(tile_ms / simd_ms),
+            fmt_speedup(tile_ms / cached_ms),
         ]);
     }
     table
@@ -119,6 +137,15 @@ mod tests {
         assert_eq!(t.rows.len(), 1);
         // Scalar column populated (128 <= cap) and speedups parse as "x".
         assert_ne!(t.rows[0][1], "-");
-        assert!(t.rows[0][4].ends_with('x'), "{:?}", t.rows[0]);
+        assert!(t.rows[0][5].ends_with('x'), "{:?}", t.rows[0]);
+        assert!(t.rows[0][6].ends_with('x'), "{:?}", t.rows[0]);
+    }
+
+    #[test]
+    fn scalar_cap_blanks_the_baseline_column() {
+        let t = native_vs_scalar(RunSpec::new(0, 1), &[128], 64, 1).unwrap();
+        assert_eq!(t.rows[0][1], "-");
+        // Flash series still measured.
+        assert_ne!(t.rows[0][2], "-");
     }
 }

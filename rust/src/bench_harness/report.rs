@@ -7,13 +7,18 @@ use std::path::PathBuf;
 /// A rendered experiment table.
 #[derive(Debug, Clone)]
 pub struct Table {
+    /// Table caption.
     pub title: String,
+    /// Column headers.
     pub headers: Vec<String>,
+    /// Data rows (each the headers' arity).
     pub rows: Vec<Vec<String>>,
+    /// Free-form footnotes rendered under the table.
     pub notes: Vec<String>,
 }
 
 impl Table {
+    /// Empty table with a caption and column headers.
     pub fn new(title: &str, headers: &[&str]) -> Table {
         Table {
             title: title.to_string(),
@@ -23,11 +28,13 @@ impl Table {
         }
     }
 
+    /// Append a row (must match the header arity).
     pub fn row(&mut self, cells: Vec<String>) {
         assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
         self.rows.push(cells);
     }
 
+    /// Append a footnote.
     pub fn note(&mut self, note: &str) {
         self.notes.push(note.to_string());
     }

@@ -9,7 +9,9 @@ use crate::util::stats::Summary;
 /// Benchmark knobs.
 #[derive(Debug, Clone, Copy)]
 pub struct RunSpec {
+    /// Unmeasured warmup iterations.
     pub warmup: usize,
+    /// Measured iterations.
     pub iters: usize,
 }
 
@@ -20,6 +22,7 @@ impl Default for RunSpec {
 }
 
 impl RunSpec {
+    /// Knobs with at least one measured iteration.
     pub fn new(warmup: usize, iters: usize) -> Self {
         assert!(iters >= 1, "need at least one measured iteration");
         RunSpec { warmup, iters }
@@ -29,15 +32,19 @@ impl RunSpec {
 /// One benchmark measurement in seconds.
 #[derive(Debug, Clone)]
 pub struct Measurement {
+    /// Label the measurement ran under.
     pub name: String,
+    /// Wall-time summary over the measured iterations, seconds.
     pub seconds: Summary,
 }
 
 impl Measurement {
+    /// Mean wall time, milliseconds.
     pub fn mean_ms(&self) -> f64 {
         self.seconds.mean * 1e3
     }
 
+    /// Fastest iteration, milliseconds.
     pub fn min_ms(&self) -> f64 {
         self.seconds.min * 1e3
     }

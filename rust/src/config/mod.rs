@@ -21,6 +21,7 @@ pub struct Config {
     pub backend: BackendKind,
     /// TCP bind address for `serve`.
     pub host: String,
+    /// TCP port for `serve`.
     pub port: u16,
     /// Bounded request-queue depth; beyond this the server sheds load
     /// (backpressure, DESIGN.md coordinator section).

@@ -27,8 +27,10 @@ impl Default for LatencyHistogram {
 }
 
 impl LatencyHistogram {
+    /// Power-of-two microsecond buckets (1 µs .. ~35 min).
     pub const NUM_BUCKETS: usize = 32;
 
+    /// Empty histogram.
     pub fn new() -> Self {
         LatencyHistogram {
             buckets: std::array::from_fn(|_| AtomicU64::new(0)),
@@ -44,6 +46,7 @@ impl LatencyHistogram {
         idx.min(Self::NUM_BUCKETS - 1)
     }
 
+    /// Record one latency sample (lock-free).
     pub fn record(&self, d: Duration) {
         let us = d.as_micros().min(u128::from(u64::MAX)) as u64;
         self.buckets[Self::bucket_of(us)].fetch_add(1, Ordering::Relaxed);
@@ -52,10 +55,12 @@ impl LatencyHistogram {
         self.max_us.fetch_max(us, Ordering::Relaxed);
     }
 
+    /// Samples recorded.
     pub fn count(&self) -> u64 {
         self.count.load(Ordering::Relaxed)
     }
 
+    /// Mean latency (zero when empty).
     pub fn mean(&self) -> Duration {
         let c = self.count();
         if c == 0 {
@@ -64,6 +69,7 @@ impl LatencyHistogram {
         Duration::from_micros(self.sum_us.load(Ordering::Relaxed) / c)
     }
 
+    /// Largest recorded latency.
     pub fn max(&self) -> Duration {
         Duration::from_micros(self.max_us.load(Ordering::Relaxed))
     }
@@ -86,6 +92,7 @@ impl LatencyHistogram {
         self.max()
     }
 
+    /// Render for the stats endpoint.
     pub fn to_json(&self) -> Value {
         Value::object(vec![
             ("count", Value::from(self.count())),
@@ -101,37 +108,49 @@ impl LatencyHistogram {
 /// Coordinator-wide counters (one instance, shared via Arc).
 #[derive(Debug, Default)]
 pub struct Metrics {
+    /// Fit requests admitted (in-process + wire).
     pub fit_requests: AtomicU64,
+    /// Density/log-density queries admitted.
     pub eval_requests: AtomicU64,
     /// Score-kernel queries (`OutputMode::Grad`) — routed through the same
     /// queue and batcher as densities, counted separately here.
     pub grad_requests: AtomicU64,
+    /// Total query points across density evals.
     pub eval_points: AtomicU64,
+    /// Failed requests (validation + execution).
     pub errors: AtomicU64,
     /// Requests shed by queue backpressure.
     pub rejected: AtomicU64,
     /// Number of executed batches and total co-batched requests, for
     /// mean-batch-size reporting.
     pub batches: AtomicU64,
+    /// Total requests served through co-batched executions.
     pub batched_requests: AtomicU64,
+    /// Time requests spent queued before their batch executed.
     pub queue_wait: LatencyHistogram,
+    /// Engine execution time per batch.
     pub exec_latency: LatencyHistogram,
+    /// Client-observed end-to-end query latency.
     pub e2e_latency: LatencyHistogram,
 }
 
 impl Metrics {
+    /// Fresh zeroed counters.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Increment a counter by one (relaxed).
     pub fn inc(counter: &AtomicU64) {
         counter.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Increment a counter by `v` (relaxed).
     pub fn add(counter: &AtomicU64, v: u64) {
         counter.fetch_add(v, Ordering::Relaxed);
     }
 
+    /// Mean co-batched requests per executed batch.
     pub fn mean_batch_size(&self) -> f64 {
         let b = self.batches.load(Ordering::Relaxed);
         if b == 0 {
@@ -140,6 +159,7 @@ impl Metrics {
         self.batched_requests.load(Ordering::Relaxed) as f64 / b as f64
     }
 
+    /// Render for the stats endpoint.
     pub fn to_json(&self) -> Value {
         Value::object(vec![
             ("fit_requests", Value::from(self.fit_requests.load(Ordering::Relaxed))),

@@ -61,8 +61,11 @@ pub struct QueryResult {
     /// Flat output values: `[k]` for `Density`/`LogDensity`, row-major
     /// `[k, d]` for `Grad`.
     pub values: Vec<f32>,
+    /// The output mode these values were computed in.
     pub mode: OutputMode,
+    /// Time spent queued + co-batching before execution started.
     pub queue_ms: f64,
+    /// Execution wall time of the batch that served this request.
     pub exec_ms: f64,
     /// Number of requests co-batched into the execution that served this
     /// one (gradients report it exactly like densities).
@@ -73,14 +76,23 @@ pub struct QueryResult {
 /// carries.  `h_score` is exposed so callers never re-derive `h / sqrt(2)`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct FitInfo {
+    /// Model name the fit registered.
     pub model: String,
+    /// Estimator kind that was fitted.
     pub kind: EstimatorKind,
+    /// Execution variant the model will be served with.
     pub variant: Variant,
+    /// Training-sample count (actual, not padded).
     pub n: usize,
+    /// Data dimension.
     pub d: usize,
+    /// Resolved evaluation bandwidth.
     pub h: f64,
+    /// Resolved score bandwidth (SD-KDE fit pass).
     pub h_score: f64,
+    /// Train bucket the resident tensors are padded to.
     pub bucket_n: usize,
+    /// Wall time of the fit pass.
     pub fit_ms: f64,
 }
 
@@ -148,7 +160,7 @@ impl Coordinator {
         for &d in &cfg.warm_dims {
             let entries: Vec<ArtifactEntry> = engine
                 .manifest()
-                .entries
+                .entries()
                 .iter()
                 .filter(|e| e.d == d && e.tiles.is_none())
                 .cloned()
@@ -180,18 +192,22 @@ impl Coordinator {
         })
     }
 
+    /// The configuration this coordinator booted with.
     pub fn config(&self) -> &Config {
         &self.cfg
     }
 
+    /// Request counters and latency histograms (live, lock-free reads).
     pub fn metrics(&self) -> &Metrics {
         &self.metrics
     }
 
+    /// The fitted-model registry (bounded LRU of resident models).
     pub fn registry(&self) -> &Registry {
         &self.registry
     }
 
+    /// The artifact manifest the engine serves (bucket routing source).
     pub fn manifest(&self) -> &Manifest {
         self.engine.manifest()
     }
@@ -302,7 +318,7 @@ impl Coordinator {
         // query pays no compile spike (fit is the "prefill" phase anyway —
         // perf pass, EXPERIMENTS.md §Perf/L3).
         let eval_entries: Vec<ArtifactEntry> = manifest
-            .entries
+            .entries()
             .iter()
             .filter(|e| {
                 e.pipeline == eval_pipeline
@@ -444,6 +460,9 @@ impl Coordinator {
                         "compile_time_ms",
                         Value::Number(store_stats.compile_time.as_secs_f64() * 1e3),
                     ),
+                    // Native prepare cache (DESIGN.md §11); 0/0 on PJRT.
+                    ("prepare_hits", Value::from(store_stats.prepare_hits)),
+                    ("prepare_misses", Value::from(store_stats.prepare_misses)),
                 ]),
             ),
             ("queue_depth", Value::from(self.queue.len())),

@@ -41,23 +41,34 @@ pub const PROTOCOL_VERSION: usize = 2;
 /// Parsed client request — a thin envelope around the shared typed specs.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Request {
+    /// Liveness + version probe.
     Ping,
+    /// Fit a model from inline training points.
     Fit {
+        /// Name to register the model under.
         model: String,
+        /// Estimator kind, dimension and overrides.
         spec: FitSpec,
         /// Row-major `[n, spec.d]`.
         points: Vec<f32>,
     },
+    /// Evaluate a fitted model (any output mode).
     Query {
+        /// Name of the fitted model.
         model: String,
         /// Row width of `spec.points` (wire framing; the server validates
         /// against the fitted model's dimension).
         d: usize,
+        /// Query points + output mode.
         spec: QuerySpec,
     },
+    /// List resident model names.
     Models,
+    /// Fetch the server stats document.
     Stats,
+    /// Delete a model by name.
     Delete {
+        /// Name of the model to delete.
         model: String,
     },
 }
@@ -65,29 +76,43 @@ pub enum Request {
 /// Server response.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Response {
+    /// Reply to [`Request::Ping`].
     Pong {
         /// Server protocol version, for client-side negotiation.
         version: usize,
     },
+    /// Successful fit: the resolved parameters.
     FitOk {
+        /// What the fit resolved (mirrors the in-process `FitInfo`).
         info: FitInfo,
     },
+    /// Successful query: values + timings.
     QueryOk {
         /// Model dimension (the row width of grad values).
         d: usize,
+        /// Values, mode, timings and batch size.
         result: QueryResult,
     },
+    /// Resident model names.
     Models {
+        /// Sorted model names.
         names: Vec<String>,
     },
+    /// The stats document.
     Stats {
+        /// Same JSON the in-process `stats_json` renders.
         body: Value,
     },
+    /// Reply to [`Request::Delete`].
     Deleted {
+        /// Echoed model name.
         model: String,
+        /// Whether a model by that name was resident.
         existed: bool,
     },
+    /// Any failure, as a displayable message.
     Error {
+        /// Human-readable cause.
         message: String,
     },
 }
@@ -289,6 +314,7 @@ impl Request {
 }
 
 impl Response {
+    /// Render as one newline-terminated wire line (server side).
     pub fn to_line(&self) -> String {
         let versioned = |mut fields: Vec<(&str, Value)>| {
             fields.insert(0, ("ok", Value::from(true)));

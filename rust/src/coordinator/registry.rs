@@ -15,10 +15,13 @@ use crate::runtime::HostTensor;
 /// An immutable fitted model (shared via Arc; eval never copies it).
 #[derive(Debug)]
 pub struct FittedModel {
+    /// Registry name the model was fitted under.
     pub name: String,
+    /// Estimator kind the model serves.
     pub kind: EstimatorKind,
     /// Artifact variant the model was fitted with and will be served with.
     pub variant: Variant,
+    /// Data dimension.
     pub d: usize,
     /// Actual sample count (<= bucket_n).
     pub n: usize,
@@ -52,6 +55,7 @@ pub struct Registry {
 }
 
 impl Registry {
+    /// Empty registry holding at most `capacity` models.
     pub fn new(capacity: usize) -> Self {
         assert!(capacity >= 1);
         Registry {
@@ -113,6 +117,7 @@ impl Registry {
             .map(|s| Arc::clone(&s.model))
     }
 
+    /// Remove by name; returns whether a model was resident.
     pub fn remove(&self, name: &str) -> bool {
         self.slots
             .write()
@@ -136,6 +141,7 @@ impl Registry {
         }
     }
 
+    /// Resident model names, sorted.
     pub fn names(&self) -> Vec<String> {
         let mut names: Vec<String> = self
             .slots
@@ -148,14 +154,17 @@ impl Registry {
         names
     }
 
+    /// Resident model count.
     pub fn len(&self) -> usize {
         self.slots.read().expect("registry poisoned").len()
     }
 
+    /// Whether no models are resident.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// Capacity evictions since construction.
     pub fn evictions(&self) -> u64 {
         self.evictions.load(Ordering::Relaxed)
     }

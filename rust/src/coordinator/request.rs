@@ -29,6 +29,25 @@ use crate::estimator::{bandwidth, EstimatorKind, Variant};
 use super::registry::FittedModel;
 
 /// Typed fit request: what to fit and how, minus the training data.
+///
+/// Built fluently; unset fields resolve to the published defaults at fit
+/// time (runnable — this is the documented builder contract):
+///
+/// ```
+/// use flash_sdkde::{EstimatorKind, FitSpec};
+///
+/// let spec = FitSpec::new(EstimatorKind::SdKde, 16)
+///     .bandwidth(0.5)
+///     .score_bandwidth(0.35);
+/// assert_eq!(spec.d, 16);
+/// assert_eq!(spec.resolve_h(&[], 100), 0.5); // override wins, data unused
+/// assert_eq!(spec.resolve_h_score(0.5), 0.35);
+///
+/// // Without overrides the score bandwidth is h / sqrt(2) (paper §5).
+/// let default_spec = FitSpec::new(EstimatorKind::SdKde, 16);
+/// let hs = default_spec.resolve_h_score(0.5);
+/// assert!((hs - 0.5 / std::f64::consts::SQRT_2).abs() < 1e-12);
+/// ```
 #[derive(Debug, Clone, PartialEq)]
 pub struct FitSpec {
     /// Which estimator to fit.
@@ -46,6 +65,8 @@ pub struct FitSpec {
 }
 
 impl FitSpec {
+    /// Spec with no overrides: bandwidths and variant resolve to the
+    /// estimator's rules / config default at fit time.
     pub fn new(estimator: EstimatorKind, d: usize) -> FitSpec {
         FitSpec { estimator, d, h: None, h_score: None, variant: None }
     }
@@ -106,11 +127,14 @@ pub enum OutputMode {
 /// Which artifact family serves a mode; modes sharing a kernel co-batch.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum QueryKernel {
+    /// The density artifacts (serve `Density` and `LogDensity`).
     Density,
+    /// The streaming score artifacts (serve `Grad`).
     Score,
 }
 
 impl OutputMode {
+    /// Parse a wire/CLI spelling (`density`, `log_density`, `grad`, …).
     pub fn parse(s: &str) -> Option<OutputMode> {
         match s.to_ascii_lowercase().as_str() {
             "density" => Some(OutputMode::Density),
@@ -120,6 +144,7 @@ impl OutputMode {
         }
     }
 
+    /// Canonical wire spelling.
     pub fn as_str(&self) -> &'static str {
         match self {
             OutputMode::Density => "density",
@@ -146,6 +171,7 @@ impl OutputMode {
         }
     }
 
+    /// Every output mode (protocol fuzzing, grid tests).
     pub const ALL: [OutputMode; 3] =
         [OutputMode::Density, OutputMode::LogDensity, OutputMode::Grad];
 }
@@ -157,26 +183,43 @@ impl std::fmt::Display for OutputMode {
 }
 
 /// Typed query request: points plus the requested output mode.
+///
+/// ```
+/// use flash_sdkde::{OutputMode, QuerySpec};
+///
+/// let q = QuerySpec::density(vec![0.0, 1.0]);
+/// assert_eq!(q.mode, OutputMode::Density);
+/// let g = QuerySpec::grad(vec![0.0, 1.0]);
+/// assert_eq!(g.mode, OutputMode::Grad);
+/// // Gradients are d values per row; densities one.
+/// assert_eq!(g.mode.width(2), 2);
+/// assert_eq!(q.mode.width(2), 1);
+/// ```
 #[derive(Debug, Clone, PartialEq)]
 pub struct QuerySpec {
     /// Row-major `[k, d]` query points (`d` is the fitted model's).
     pub points: Vec<f32>,
+    /// What to compute at each point.
     pub mode: OutputMode,
 }
 
 impl QuerySpec {
+    /// Query with an explicit mode.
     pub fn new(points: Vec<f32>, mode: OutputMode) -> QuerySpec {
         QuerySpec { points, mode }
     }
 
+    /// Density query (`p̂(y)` per row).
     pub fn density(points: Vec<f32>) -> QuerySpec {
         QuerySpec::new(points, OutputMode::Density)
     }
 
+    /// Log-density query (`ln p̂(y)` per row, underflow-clamped).
     pub fn log_density(points: Vec<f32>) -> QuerySpec {
         QuerySpec::new(points, OutputMode::LogDensity)
     }
 
+    /// Gradient query (`∇ log p̂(y)`, `d` values per row).
     pub fn grad(points: Vec<f32>) -> QuerySpec {
         QuerySpec::new(points, OutputMode::Grad)
     }
@@ -200,18 +243,22 @@ impl ModelHandle {
         &self.model
     }
 
+    /// The registry name the model was fitted under.
     pub fn name(&self) -> &str {
         &self.model.name
     }
 
+    /// Estimator kind this model serves.
     pub fn kind(&self) -> EstimatorKind {
         self.model.kind
     }
 
+    /// Execution variant the model is served with.
     pub fn variant(&self) -> Variant {
         self.model.variant
     }
 
+    /// Data dimension.
     pub fn d(&self) -> usize {
         self.model.d
     }

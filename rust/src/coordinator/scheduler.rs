@@ -10,14 +10,18 @@ use std::time::{Duration, Instant};
 /// Why a pop returned nothing.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PopTimeout {
+    /// No request arrived within the wait.
     TimedOut,
+    /// The queue is closed and drained.
     Closed,
 }
 
 /// Push failure: queue full (backpressure) or closed (shutdown).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PushError {
+    /// The queue is at capacity (backpressure signal).
     Full,
+    /// The queue no longer accepts work (shutdown).
     Closed,
 }
 
@@ -35,6 +39,7 @@ pub struct BoundedQueue<T> {
 }
 
 impl<T> BoundedQueue<T> {
+    /// Empty queue admitting at most `capacity` requests.
     pub fn new(capacity: usize) -> Self {
         assert!(capacity >= 1);
         BoundedQueue {
@@ -44,14 +49,17 @@ impl<T> BoundedQueue<T> {
         }
     }
 
+    /// The admission bound.
     pub fn capacity(&self) -> usize {
         self.capacity
     }
 
+    /// Requests currently queued.
     pub fn len(&self) -> usize {
         self.inner.lock().expect("queue poisoned").queue.len()
     }
 
+    /// Whether nothing is queued.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -123,6 +131,7 @@ impl<T> BoundedQueue<T> {
         self.not_empty.notify_all();
     }
 
+    /// Whether the queue has been closed.
     pub fn is_closed(&self) -> bool {
         self.inner.lock().expect("queue poisoned").closed
     }

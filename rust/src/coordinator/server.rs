@@ -3,7 +3,7 @@
 //! queue + dispatcher, so connection threads only parse/serialize).
 //!
 //! Protocol-version negotiation happens here (DESIGN.md §9): the server
-//! answers `ping` with its [`protocol::PROTOCOL_VERSION`], rejects request
+//! answers `ping` with its [`PROTOCOL_VERSION`], rejects request
 //! lines newer than it speaks, and [`Client::connect`] pings first,
 //! refusing servers too old to parse the dialect this client emits.
 //!
@@ -57,10 +57,12 @@ impl Server {
         Ok(Server { coordinator, local_addr, stop, accept_thread: Some(accept_thread) })
     }
 
+    /// The bound listen address (real port for port-0 binds).
     pub fn local_addr(&self) -> std::net::SocketAddr {
         self.local_addr
     }
 
+    /// The coordinator this server fronts.
     pub fn coordinator(&self) -> &Coordinator {
         &self.coordinator
     }
@@ -280,6 +282,7 @@ impl Client {
         self.recv()
     }
 
+    /// Round-trip a ping (version check happens at connect).
     pub fn ping(&mut self) -> Result<()> {
         match self.round_trip(&Request::Ping)? {
             Response::Pong { .. } => Ok(()),
@@ -341,6 +344,7 @@ impl Client {
         self.query(model, d, QuerySpec::grad(points))
     }
 
+    /// List resident model names on the server.
     pub fn models(&mut self) -> Result<Vec<String>> {
         match self.round_trip(&Request::Models)? {
             Response::Models { names } => Ok(names),
@@ -348,6 +352,7 @@ impl Client {
         }
     }
 
+    /// Fetch the server's stats document.
     pub fn stats(&mut self) -> Result<crate::util::json::Value> {
         match self.round_trip(&Request::Stats)? {
             Response::Stats { body } => Ok(body),
@@ -355,6 +360,7 @@ impl Client {
         }
     }
 
+    /// Delete a model by name; false if it was not resident.
     pub fn delete(&mut self, model: &str) -> Result<bool> {
         let req = Request::Delete { model: model.into() };
         match self.round_trip(&req)? {

@@ -11,17 +11,21 @@ use crate::util::rng::Pcg64;
 /// Isotropic Gaussian mixture.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Mixture {
+    /// Component mixture weights (sum to 1).
     pub weights: Vec<f64>,
     /// [k][d] component means.
     pub means: Vec<Vec<f64>>,
+    /// Per-component isotropic standard deviations.
     pub sigmas: Vec<f64>,
 }
 
 impl Mixture {
+    /// Data dimension.
     pub fn d(&self) -> usize {
         self.means[0].len()
     }
 
+    /// Number of mixture components.
     pub fn k(&self) -> usize {
         self.weights.len()
     }

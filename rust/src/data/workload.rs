@@ -26,6 +26,7 @@ pub struct TraceSpec {
     pub requests: usize,
     /// Points per request: uniform in [min_k, max_k].
     pub min_k: usize,
+    /// Largest per-request query-point count drawn.
     pub max_k: usize,
     /// Open-loop arrival rate (requests/s); `None` = closed loop
     /// (all arrivals at t=0, issued back-to-back by the driver).

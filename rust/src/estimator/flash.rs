@@ -10,10 +10,31 @@
 //!
 //! so the O(n·m·d) inner sweep becomes GEMM structure: the cross term is a
 //! blocked matrix multiply over f32 tiles (the CPU analogue of the paper's
-//! tensor-core mapping — contiguous unit-stride FMA loops the compiler can
-//! vectorize), while the squared norms and every per-row reduction are
-//! carried in f64 (the "f32 tiles, f64 accumulators" policy; DESIGN.md
-//! §10 documents the resulting tolerance vs the scalar oracle).
+//! tensor-core mapping), while the squared norms and every per-row
+//! reduction are carried in f64 (the "f32 tiles, f64 accumulators" policy;
+//! DESIGN.md §10/§11 document the resulting tolerance vs the scalar
+//! oracle).
+//!
+//! Two inner-loop implementations exist behind [`TileConfig::simd`]:
+//!
+//! * **auto-vec** (always compiled) — unit-stride FMA loops the compiler
+//!   vectorizes on its own; this was the PR 2 kernel.
+//! * **explicit SIMD** (`simd` cargo feature, nightly `std::simd`) —
+//!   `f32x8` lanes for the dot tile (element-for-element the same
+//!   arithmetic as the scalar loop, so results are bit-identical across
+//!   the flag) and `f64x4` lanes for the density exp/accumulate loop
+//!   (`exp` applied per lane; lane partial sums re-associate the f64
+//!   reduction, so densities agree with the auto-vec path only up to f64
+//!   re-association noise — the same bound as tile-size changes).  The
+//!   score kernels vectorize only their dot tile, keeping the gradient
+//!   accumulation scalar and therefore invariant across the flag.
+//!
+//! The per-dataset precomputation — transposed train matrix, squared
+//! norms, f64 weights — is factored into [`PreparedTrain`] so resident
+//! models can pay it once: the `*_prepared` entry points are what the
+//! native backend's prepare cache calls on the serving hot path
+//! (DESIGN.md §11), while the plain entry points (`kde`, `score_at`, …)
+//! prepare internally and remain the one-shot convenience surface.
 //!
 //! Query blocks are independent, so each kernel splits them across scoped
 //! worker threads ([`TileConfig::threads`]; small problems stay serial).
@@ -34,18 +55,32 @@ use super::native::normalizer;
 /// `block_q` × `block_t` is the (query rows × train rows) tile the dot
 /// products are materialized for — the BLOCK_M × BLOCK_N analogue of the
 /// paper's launch-parameter sweep.  `threads` is an *upper bound* on the
-/// scoped threads query blocks are split across; problems below
-/// [`MIN_PAIRS_PER_THREAD`] per worker run serially, and `1` always does.
+/// scoped threads query blocks are split across; problems below the
+/// internal `MIN_PAIRS_PER_THREAD` floor per worker run serially, and `1`
+/// always does.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct TileConfig {
+    /// Query rows per tile (BLOCK_M analogue).
     pub block_q: usize,
+    /// Train rows per tile (BLOCK_N analogue).
     pub block_t: usize,
+    /// Upper bound on scoped worker threads for query blocks.
     pub threads: usize,
+    /// Run the explicit `std::simd` inner loops.  Only effective in
+    /// builds with the `simd` cargo feature; without it the flag is
+    /// ignored and the auto-vectorized loops run.  Defaults to the
+    /// feature's presence, so the fastest compiled path serves.
+    pub simd: bool,
 }
 
 impl Default for TileConfig {
     fn default() -> Self {
-        TileConfig { block_q: 32, block_t: 256, threads: default_threads() }
+        TileConfig {
+            block_q: 32,
+            block_t: 256,
+            threads: default_threads(),
+            simd: cfg!(feature = "simd"),
+        }
     }
 }
 
@@ -55,11 +90,19 @@ impl TileConfig {
         TileConfig { threads: 1, ..TileConfig::default() }
     }
 
+    /// Serial configuration with the explicit-SIMD loops disabled — the
+    /// PR 2 auto-vectorized tile, kept callable for the bench series and
+    /// the SIMD-agreement conformance property.
+    pub fn scalar_tiles() -> Self {
+        TileConfig { simd: false, ..TileConfig::serial() }
+    }
+
     fn checked(&self) -> TileConfig {
         TileConfig {
             block_q: self.block_q.max(1),
             block_t: self.block_t.max(1),
             threads: self.threads.max(1),
+            simd: self.simd,
         }
     }
 }
@@ -95,15 +138,88 @@ fn sq_norms(x: &[f32], n: usize, d: usize) -> Vec<f64> {
         .collect()
 }
 
+/// Precomputed per-dataset state for the train side of every kernel: the
+/// transposed train matrix (unit-stride tile GEMM access), the f64
+/// squared norms (the exact half of the matmul identity), the f64 weights
+/// and their sum.
+///
+/// Building one is O(n·d) — a few percent of each chunk's GEMM work — so
+/// resident models should build it **once** and reuse it across queries;
+/// the native backend caches it keyed by the registry tensors' `Arc`
+/// identity (DESIGN.md §11).  Construction is deterministic: kernels fed
+/// a cached `PreparedTrain` return bit-identical results to a fresh one.
+///
+/// The struct owns copies of its inputs (including the row-major train
+/// matrix, which the score kernels' numerator loop needs), so it holds no
+/// borrow of — and keeps no `Arc` pinning — the registry's tensors.
+#[derive(Debug, Clone)]
+pub struct PreparedTrain {
+    /// Row-major [n, d] train matrix (score-kernel numerator access).
+    x: Vec<f32>,
+    /// Column-major transpose of `x` (dot-tile access).
+    xt: Vec<f32>,
+    /// f64 squared row norms of `x`.
+    sq_x: Vec<f64>,
+    /// Weights widened to f64 (0.0 marks a masked row).
+    wf: Vec<f64>,
+    /// Sum of the weights (the kernel's effective sample count).
+    count: f64,
+    n: usize,
+    d: usize,
+}
+
+impl PreparedTrain {
+    /// Prepare a weighted train set: `x` is row-major `[n, d]` with
+    /// `n = w.len()`; `w == 0.0` marks a masked (padded) row exactly as
+    /// in the one-shot kernels.
+    pub fn new(x: &[f32], w: &[f32], d: usize) -> PreparedTrain {
+        assert!(d >= 1, "dimension must be >= 1");
+        let n = w.len();
+        assert_eq!(x.len(), n * d, "x must be [n, d] row-major");
+        PreparedTrain {
+            x: x.to_vec(),
+            xt: transpose(x, n, d),
+            sq_x: sq_norms(x, n, d),
+            wf: w.iter().map(|&v| v as f64).collect(),
+            count: w.iter().map(|&v| v as f64).sum(),
+            n,
+            d,
+        }
+    }
+
+    /// Train rows (including masked ones).
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Data dimension.
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Sum of the weights (0.0 means every row is masked — the kernels
+    /// reject such a train set).
+    pub fn count(&self) -> f64 {
+        self.count
+    }
+
+    /// Approximate resident size in bytes (cache accounting / stats).
+    pub fn bytes(&self) -> usize {
+        self.x.len() * 4
+            + self.xt.len() * 4
+            + (self.sq_x.len() + self.wf.len()) * 8
+    }
+}
+
 /// Fill `dots[q*bt + t]` with `y_{q0+q} · x_{t0+t}` for a
-/// `(q0, bq) × (t0, bt)` tile.
+/// `(q0, bq) × (t0, bt)` tile — auto-vectorized implementation.
 ///
 /// Loop order k → q → t keeps the transposed train column resident across
 /// all `bq` query rows and makes the innermost loop a unit-stride FMA the
 /// compiler can vectorize — this is the micro-GEMM at the heart of the
 /// reordering.
 #[inline]
-fn dot_tile(
+fn dot_tile_scalar(
     y: &[f32],
     xt: &[f32],
     n: usize,
@@ -122,6 +238,189 @@ fn dot_tile(
                 *dst += yk * xv;
             }
         }
+    }
+}
+
+/// Dot-tile dispatch: explicit `f32x8` lanes when the build has them and
+/// the config asks, the auto-vectorized loop otherwise.  Both compute the
+/// identical per-element operation sequence, so the choice never moves a
+/// result bit.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn dot_tile(
+    use_simd: bool,
+    y: &[f32],
+    xt: &[f32],
+    n: usize,
+    d: usize,
+    q: (usize, usize),
+    t: (usize, usize),
+    dots: &mut [f32],
+) {
+    #[cfg(feature = "simd")]
+    {
+        if use_simd {
+            simd::dot_tile(y, xt, n, d, q, t, dots);
+            return;
+        }
+    }
+    let _ = use_simd;
+    dot_tile_scalar(y, xt, n, d, q, t, dots);
+}
+
+/// One query row's density partial sum over a train tile — scalar
+/// implementation (the exact PR 2 arithmetic, masked rows skipped).
+#[inline]
+fn density_row_scalar(
+    sq_y: f64,
+    sq_x: &[f64],
+    wf: &[f64],
+    dots: &[f32],
+    inv2h2: f64,
+    half_d: f64,
+    laplace_term: bool,
+) -> f64 {
+    let mut a = 0.0f64;
+    for t in 0..dots.len() {
+        let wi = wf[t];
+        if wi == 0.0 {
+            continue;
+        }
+        let d2 = (sq_y + sq_x[t] - 2.0 * dots[t] as f64).max(0.0);
+        let scaled = d2 * inv2h2;
+        let e = (-scaled).exp();
+        a += if laplace_term {
+            wi * e * (1.0 + half_d - scaled)
+        } else {
+            wi * e
+        };
+    }
+    a
+}
+
+/// Density partial-sum dispatch.  The SIMD path evaluates masked rows as
+/// exact `+0.0` terms instead of skipping them and carries four f64 lane
+/// accumulators, so it agrees with the scalar path up to f64
+/// re-association — the same bound tile-size changes already carry.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn density_row(
+    use_simd: bool,
+    sq_y: f64,
+    sq_x: &[f64],
+    wf: &[f64],
+    dots: &[f32],
+    inv2h2: f64,
+    half_d: f64,
+    laplace_term: bool,
+) -> f64 {
+    #[cfg(feature = "simd")]
+    {
+        if use_simd {
+            return simd::density_row(
+                sq_y, sq_x, wf, dots, inv2h2, half_d, laplace_term,
+            );
+        }
+    }
+    let _ = use_simd;
+    density_row_scalar(sq_y, sq_x, wf, dots, inv2h2, half_d, laplace_term)
+}
+
+/// Explicit `std::simd` inner loops (nightly portable SIMD, `simd` cargo
+/// feature).  DESIGN.md §11 states the numerics contract: the dot tile is
+/// element-for-element the scalar arithmetic on `f32x8` lanes (bit-equal
+/// across the flag); the density accumulate runs `f64x4` lanes with `exp`
+/// applied per lane, re-associating the f64 reduction within a tile.
+#[cfg(feature = "simd")]
+mod simd {
+    use std::simd::prelude::*;
+
+    const F32_LANES: usize = 8;
+    const F64_LANES: usize = 4;
+
+    pub(super) fn dot_tile(
+        y: &[f32],
+        xt: &[f32],
+        n: usize,
+        d: usize,
+        (q0, bq): (usize, usize),
+        (t0, bt): (usize, usize),
+        dots: &mut [f32],
+    ) {
+        dots[..bq * bt].fill(0.0);
+        for k in 0..d {
+            let col = &xt[k * n + t0..k * n + t0 + bt];
+            for q in 0..bq {
+                let yk = y[(q0 + q) * d + k];
+                let ykv = f32x8::splat(yk);
+                let row = &mut dots[q * bt..q * bt + bt];
+                let mut t = 0usize;
+                while t + F32_LANES <= bt {
+                    let c = f32x8::from_slice(&col[t..]);
+                    let r = f32x8::from_slice(&row[t..]);
+                    (r + ykv * c).copy_to_slice(&mut row[t..t + F32_LANES]);
+                    t += F32_LANES;
+                }
+                while t < bt {
+                    row[t] += yk * col[t];
+                    t += 1;
+                }
+            }
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub(super) fn density_row(
+        sq_y: f64,
+        sq_x: &[f64],
+        wf: &[f64],
+        dots: &[f32],
+        inv2h2: f64,
+        half_d: f64,
+        laplace_term: bool,
+    ) -> f64 {
+        let bt = dots.len();
+        let sqy = f64x4::splat(sq_y);
+        let zero = f64x4::splat(0.0);
+        let two = f64x4::splat(2.0);
+        let inv = f64x4::splat(inv2h2);
+        let hd1 = f64x4::splat(1.0 + half_d);
+        let mut acc = f64x4::splat(0.0);
+        let mut t = 0usize;
+        while t + F64_LANES <= bt {
+            let dv = f64x4::from_array([
+                dots[t] as f64,
+                dots[t + 1] as f64,
+                dots[t + 2] as f64,
+                dots[t + 3] as f64,
+            ]);
+            let sx = f64x4::from_slice(&sq_x[t..]);
+            let d2 = (sqy + sx - two * dv).simd_max(zero);
+            let scaled = d2 * inv;
+            let mut ea = scaled.to_array();
+            for v in &mut ea {
+                *v = (-*v).exp();
+            }
+            let e = f64x4::from_array(ea);
+            let w = f64x4::from_slice(&wf[t..]);
+            acc += if laplace_term { w * e * (hd1 - scaled) } else { w * e };
+            t += F64_LANES;
+        }
+        let a = acc.to_array();
+        // Scalar tail for the last `bt % 4` rows: delegate to the one
+        // scalar implementation so the term formula lives in one place.
+        a[0] + a[1]
+            + a[2]
+            + a[3]
+            + super::density_row_scalar(
+                sq_y,
+                &sq_x[t..bt],
+                &wf[t..bt],
+                &dots[t..],
+                inv2h2,
+                half_d,
+                laplace_term,
+            )
     }
 }
 
@@ -172,92 +471,79 @@ fn par_query_rows<F>(
     });
 }
 
-/// Shared precomputation for one (x, y) problem.
-struct Prepared {
-    xt: Vec<f32>,
-    sq_x: Vec<f64>,
-    sq_y: Vec<f64>,
-    wf: Vec<f64>,
-    n: usize,
-    m: usize,
-}
-
-fn prepare(x: &[f32], w: &[f32], y: &[f32], d: usize) -> Prepared {
-    assert!(d >= 1, "dimension must be >= 1");
-    let n = w.len();
-    assert_eq!(x.len(), n * d, "x must be [n, d] row-major");
-    assert_eq!(y.len() % d, 0, "y must be [m, d] row-major");
-    let m = y.len() / d;
-    Prepared {
-        xt: transpose(x, n, d),
-        sq_x: sq_norms(x, n, d),
-        sq_y: sq_norms(y, m, d),
-        wf: w.iter().map(|&v| v as f64).collect(),
-        n,
-        m,
-    }
-}
-
 /// Weighted Gaussian KDE via the matmul identity.  Same contract as
 /// [`super::native::kde`]: x [n, d], w [n], y [m, d] row-major, returns
-/// [m] f64 densities.
+/// [m] f64 densities.  One-shot: prepares the train side internally; use
+/// [`kde_prepared`] to amortize that over many query batches.
 pub fn kde(x: &[f32], w: &[f32], y: &[f32], d: usize, h: f64, cfg: &TileConfig) -> Vec<f64> {
-    density(x, w, y, d, h, false, cfg)
+    kde_prepared(&PreparedTrain::new(x, w, d), y, h, cfg)
+}
+
+/// [`kde`] over an already-[`PreparedTrain`] train side.
+pub fn kde_prepared(
+    train: &PreparedTrain,
+    y: &[f32],
+    h: f64,
+    cfg: &TileConfig,
+) -> Vec<f64> {
+    density(train, y, h, false, cfg)
 }
 
 /// Laplace-corrected KDE (signed).  Mirrors [`super::native::laplace`].
 pub fn laplace(x: &[f32], w: &[f32], y: &[f32], d: usize, h: f64, cfg: &TileConfig) -> Vec<f64> {
-    density(x, w, y, d, h, true, cfg)
+    laplace_prepared(&PreparedTrain::new(x, w, d), y, h, cfg)
+}
+
+/// [`laplace`] over an already-[`PreparedTrain`] train side.
+pub fn laplace_prepared(
+    train: &PreparedTrain,
+    y: &[f32],
+    h: f64,
+    cfg: &TileConfig,
+) -> Vec<f64> {
+    density(train, y, h, true, cfg)
 }
 
 fn density(
-    x: &[f32],
-    w: &[f32],
+    train: &PreparedTrain,
     y: &[f32],
-    d: usize,
     h: f64,
     laplace_term: bool,
     cfg: &TileConfig,
 ) -> Vec<f64> {
     let cfg = cfg.checked();
-    let p = prepare(x, w, y, d);
-    let count: f64 = p.wf.iter().sum();
-    assert!(count > 0.0, "no effective samples");
-    let norm = normalizer(h, d) / count;
+    let d = train.d;
+    assert_eq!(y.len() % d, 0, "y must be [m, d] row-major");
+    let m = y.len() / d;
+    let sq_y = sq_norms(y, m, d);
+    assert!(train.count > 0.0, "no effective samples");
+    let norm = normalizer(h, d) / train.count;
     let inv2h2 = 1.0 / (2.0 * h * h);
     let half_d = d as f64 / 2.0;
+    let n = train.n;
 
-    let mut out = vec![0.0f64; p.m];
-    par_query_rows(&mut out, p.m, 1, p.m * p.n, cfg.threads, |qa, qb, chunk| {
+    let mut out = vec![0.0f64; m];
+    par_query_rows(&mut out, m, 1, m * n, cfg.threads, |qa, qb, chunk| {
         let mut dots = vec![0.0f32; cfg.block_q * cfg.block_t];
         let mut q0 = qa;
         while q0 < qb {
             let bq = cfg.block_q.min(qb - q0);
             let mut acc = vec![0.0f64; bq];
             let mut t0 = 0usize;
-            while t0 < p.n {
-                let bt = cfg.block_t.min(p.n - t0);
-                dot_tile(y, &p.xt, p.n, d, (q0, bq), (t0, bt), &mut dots);
-                for q in 0..bq {
-                    let sq_y = p.sq_y[q0 + q];
-                    let mut a = 0.0f64;
-                    for t in 0..bt {
-                        let wi = p.wf[t0 + t];
-                        if wi == 0.0 {
-                            continue;
-                        }
-                        let d2 = (sq_y + p.sq_x[t0 + t]
-                            - 2.0 * dots[q * bt + t] as f64)
-                            .max(0.0);
-                        let scaled = d2 * inv2h2;
-                        let e = (-scaled).exp();
-                        a += if laplace_term {
-                            wi * e * (1.0 + half_d - scaled)
-                        } else {
-                            wi * e
-                        };
-                    }
-                    acc[q] += a;
+            while t0 < n {
+                let bt = cfg.block_t.min(n - t0);
+                dot_tile(cfg.simd, y, &train.xt, n, d, (q0, bq), (t0, bt), &mut dots);
+                for (q, a) in acc.iter_mut().enumerate() {
+                    *a += density_row(
+                        cfg.simd,
+                        sq_y[q0 + q],
+                        &train.sq_x[t0..t0 + bt],
+                        &train.wf[t0..t0 + bt],
+                        &dots[q * bt..q * bt + bt],
+                        inv2h2,
+                        half_d,
+                        laplace_term,
+                    );
                 }
                 t0 += bt;
             }
@@ -273,7 +559,7 @@ fn density(
 /// Score of the weighted KDE of `x` at query rows `y` — the flash twin of
 /// [`super::native::score_at`] (and, with `y = x`, of
 /// [`super::native::score`]): returns [m, d] row-major f64, `1e-30`
-/// denominator guard.
+/// denominator guard.  One-shot; see [`score_at_prepared`].
 pub fn score_at(
     x: &[f32],
     w: &[f32],
@@ -282,12 +568,30 @@ pub fn score_at(
     h_s: f64,
     cfg: &TileConfig,
 ) -> Vec<f64> {
-    let cfg = cfg.checked();
-    let p = prepare(x, w, y, d);
-    let inv2h2 = 1.0 / (2.0 * h_s * h_s);
+    score_at_prepared(&PreparedTrain::new(x, w, d), y, h_s, cfg)
+}
 
-    let mut out = vec![0.0f64; p.m * d];
-    par_query_rows(&mut out, p.m, d, p.m * p.n, cfg.threads, |qa, qb, chunk| {
+/// [`score_at`] over an already-[`PreparedTrain`] train side.
+///
+/// Only the dot tile runs SIMD lanes here; the gradient accumulation
+/// (denominator + d-wide numerator) stays scalar, so score results are
+/// identical whichever inner loop serves the dot tile.
+pub fn score_at_prepared(
+    train: &PreparedTrain,
+    y: &[f32],
+    h_s: f64,
+    cfg: &TileConfig,
+) -> Vec<f64> {
+    let cfg = cfg.checked();
+    let d = train.d;
+    assert_eq!(y.len() % d, 0, "y must be [m, d] row-major");
+    let m = y.len() / d;
+    let sq_y = sq_norms(y, m, d);
+    let inv2h2 = 1.0 / (2.0 * h_s * h_s);
+    let n = train.n;
+
+    let mut out = vec![0.0f64; m * d];
+    par_query_rows(&mut out, m, d, m * n, cfg.threads, |qa, qb, chunk| {
         let mut dots = vec![0.0f32; cfg.block_q * cfg.block_t];
         let mut q0 = qa;
         while q0 < qb {
@@ -295,23 +599,23 @@ pub fn score_at(
             let mut denom = vec![0.0f64; bq];
             let mut numer = vec![0.0f64; bq * d];
             let mut t0 = 0usize;
-            while t0 < p.n {
-                let bt = cfg.block_t.min(p.n - t0);
-                dot_tile(y, &p.xt, p.n, d, (q0, bq), (t0, bt), &mut dots);
+            while t0 < n {
+                let bt = cfg.block_t.min(n - t0);
+                dot_tile(cfg.simd, y, &train.xt, n, d, (q0, bq), (t0, bt), &mut dots);
                 for q in 0..bq {
-                    let sq_y = p.sq_y[q0 + q];
+                    let sq_yq = sq_y[q0 + q];
                     let numer_q = &mut numer[q * d..(q + 1) * d];
                     for t in 0..bt {
-                        let wi = p.wf[t0 + t];
+                        let wi = train.wf[t0 + t];
                         if wi == 0.0 {
                             continue;
                         }
-                        let d2 = (sq_y + p.sq_x[t0 + t]
+                        let d2 = (sq_yq + train.sq_x[t0 + t]
                             - 2.0 * dots[q * bt + t] as f64)
                             .max(0.0);
                         let phi = wi * (-d2 * inv2h2).exp();
                         denom[q] += phi;
-                        let xi = &x[(t0 + t) * d..(t0 + t + 1) * d];
+                        let xi = &train.x[(t0 + t) * d..(t0 + t + 1) * d];
                         for (acc, &v) in numer_q.iter_mut().zip(xi) {
                             *acc += phi * v as f64;
                         }
@@ -336,16 +640,28 @@ pub fn score_at(
 /// Debiased samples X^SD = X + (h²/2)·s(X); masked rows pass through.
 /// Mirrors [`super::native::debias`] (f32 output, the artifact wire format).
 pub fn debias(x: &[f32], w: &[f32], d: usize, h: f64, h_s: f64, cfg: &TileConfig) -> Vec<f32> {
-    let n = w.len();
-    let s = score_at(x, w, x, d, h_s, cfg);
+    debias_prepared(&PreparedTrain::new(x, w, d), h, h_s, cfg)
+}
+
+/// [`debias`] over an already-[`PreparedTrain`] train side (the prepared
+/// matrix doubles as the query set: the score pass runs at `y = x`).
+pub fn debias_prepared(
+    train: &PreparedTrain,
+    h: f64,
+    h_s: f64,
+    cfg: &TileConfig,
+) -> Vec<f32> {
+    let d = train.d;
+    let s = score_at_prepared(train, &train.x, h_s, cfg);
     let shift = 0.5 * h * h;
-    let mut out = x.to_vec();
-    for i in 0..n {
-        if w[i] == 0.0 {
+    let mut out = train.x.clone();
+    for i in 0..train.n {
+        if train.wf[i] == 0.0 {
             continue;
         }
         for k in 0..d {
-            out[i * d + k] = (x[i * d + k] as f64 + shift * s[i * d + k]) as f32;
+            out[i * d + k] =
+                (train.x[i * d + k] as f64 + shift * s[i * d + k]) as f32;
         }
     }
     out
@@ -412,7 +728,8 @@ mod tests {
         let x = sample(n, d, 3);
         let y = sample(m, d, 4);
         let w = vec![1.0f32; n];
-        let tiny = TileConfig { block_q: 2, block_t: 3, threads: 1 };
+        let tiny =
+            TileConfig { block_q: 2, block_t: 3, ..TileConfig::serial() };
         let got = kde(&x, &w, &y, d, 0.4, &tiny);
         let want = native::kde(&x, &w, &y, d, 0.4);
         assert_close(&got, &want, 1e-4);
@@ -464,5 +781,76 @@ mod tests {
         let a = kde(&x, &w, &y, d, 0.5, &TileConfig { threads: 16, ..TileConfig::default() });
         let b = kde(&x, &w, &y, d, 0.5, &TileConfig::serial());
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn prepared_entry_points_are_bitwise_identical_to_oneshot() {
+        // The cache-hit contract: a PreparedTrain built once and reused
+        // must give exactly what the one-shot entry points compute.
+        let (n, m, d) = (150, 31, 3);
+        let x = sample(n, d, 11);
+        let y = sample(m, d, 12);
+        let mut w = vec![1.0f32; n];
+        w[7] = 0.0;
+        w[n - 1] = 0.0;
+        let cfg = TileConfig::default();
+        let train = PreparedTrain::new(&x, &w, d);
+        assert_eq!(train.n(), n);
+        assert_eq!(train.d(), d);
+        assert!(train.count() > 0.0 && train.bytes() > 0);
+
+        for _ in 0..2 {
+            // Twice: reuse must not mutate the prepared state.
+            assert_eq!(
+                kde_prepared(&train, &y, 0.5, &cfg),
+                kde(&x, &w, &y, d, 0.5, &cfg)
+            );
+            assert_eq!(
+                laplace_prepared(&train, &y, 0.5, &cfg),
+                laplace(&x, &w, &y, d, 0.5, &cfg)
+            );
+            assert_eq!(
+                score_at_prepared(&train, &y, 0.4, &cfg),
+                score_at(&x, &w, &y, d, 0.4, &cfg)
+            );
+            assert_eq!(
+                debias_prepared(&train, 0.5, 0.35, &cfg),
+                debias(&x, &w, d, 0.5, 0.35, &cfg)
+            );
+        }
+    }
+
+    #[test]
+    fn simd_flag_agrees_with_scalar_tiles() {
+        // With the `simd` feature: the dot tile is bit-equal across the
+        // flag and the density accumulate re-associates f64 partial sums
+        // only.  Without the feature both flags run the same code, so the
+        // test degenerates to exact equality — either way it must pass.
+        let (n, m, d) = (213, 47, 16);
+        let x = sample(n, d, 13);
+        let y = sample(m, d, 14);
+        let mut w = vec![1.0f32; n];
+        w[3] = 0.0;
+        let on = TileConfig { simd: true, ..TileConfig::serial() };
+        let off = TileConfig::scalar_tiles();
+
+        let a = kde(&x, &w, &y, d, 0.6, &on);
+        let b = kde(&x, &w, &y, d, 0.6, &off);
+        for (p, q) in a.iter().zip(&b) {
+            let rel = (p - q).abs() / q.abs().max(1e-30);
+            assert!(rel < 1e-12, "kde moved across simd flag: {p} vs {q}");
+        }
+
+        // Scores keep a scalar accumulate: agreement is far tighter than
+        // re-association noise (bit-equal in practice).
+        let a = score_at(&x, &w, &y, d, 0.5, &on);
+        let b = score_at(&x, &w, &y, d, 0.5, &off);
+        for (p, q) in a.iter().zip(&b) {
+            let scale = q.abs().max(1.0);
+            assert!(
+                ((p - q) / scale).abs() < 1e-13,
+                "score moved across simd flag: {p} vs {q}"
+            );
+        }
     }
 }

@@ -20,6 +20,7 @@ pub enum EstimatorKind {
 }
 
 impl EstimatorKind {
+    /// Parse a CLI/wire spelling (`kde`, `sdkde`/`sd-kde`, `laplace`).
     pub fn parse(s: &str) -> Option<Self> {
         match s.to_ascii_lowercase().as_str() {
             "kde" => Some(Self::Kde),
@@ -29,6 +30,7 @@ impl EstimatorKind {
         }
     }
 
+    /// Canonical spelling (what `parse` round-trips).
     pub fn as_str(&self) -> &'static str {
         match self {
             Self::Kde => "kde",
@@ -51,6 +53,7 @@ impl EstimatorKind {
         matches!(self, Self::SdKde)
     }
 
+    /// Every estimator kind (grid sweeps, protocol fuzzing).
     pub const ALL: [EstimatorKind; 3] = [Self::Kde, Self::SdKde, Self::Laplace];
 }
 
@@ -77,6 +80,8 @@ pub enum Variant {
 }
 
 impl Variant {
+    /// Parse a config/wire spelling (`flash`, `gemm`, `stream`, `naive`,
+    /// `nonfused`/`non-fused`).
     pub fn parse(s: &str) -> Option<Self> {
         match s.to_ascii_lowercase().as_str() {
             "flash" => Some(Self::Flash),
@@ -88,6 +93,7 @@ impl Variant {
         }
     }
 
+    /// Canonical spelling (artifact-manifest variant id).
     pub fn as_str(&self) -> &'static str {
         match self {
             Self::Flash => "flash",
@@ -98,6 +104,7 @@ impl Variant {
         }
     }
 
+    /// Every variant (grid sweeps, protocol fuzzing).
     pub const ALL: [Variant; 5] =
         [Self::Flash, Self::Gemm, Self::Stream, Self::Naive, Self::NonFused];
 }

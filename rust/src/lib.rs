@@ -21,15 +21,23 @@
 //! [`QuerySpec`] queries — density, log-density or gradient — through one
 //! batched request path:
 //!
-//! ```ignore
-//! let coordinator = Coordinator::start(Config::default())?;
+//! ```no_run
+//! use flash_sdkde::{Config, Coordinator, EstimatorKind, FitSpec};
+//! # fn main() -> anyhow::Result<()> {
+//! # let (train_points, queries) = (vec![0.0f32; 1024], vec![0.0f32; 64]);
+//! // auto_backend(): fall back to the native backend when no compiled
+//! // artifacts exist, so this runs on a fresh checkout.
+//! let coordinator = Coordinator::start(Config::default().auto_backend())?;
 //! let handle = coordinator.fit(
 //!     "m",
 //!     train_points,
 //!     &FitSpec::new(EstimatorKind::SdKde, 16).bandwidth(0.5),
 //! )?;
-//! let densities = coordinator.eval(&handle, queries)?.values;
-//! let grads = coordinator.grad(&handle, more_queries)?.values;
+//! let densities = coordinator.eval(&handle, queries.clone())?.values;
+//! let grads = coordinator.grad(&handle, queries)?.values;
+//! assert_eq!(grads.len(), densities.len() * 16);
+//! # Ok(())
+//! # }
 //! ```
 //!
 //! The wire protocol (`coordinator::protocol`) is a versioned JSON
@@ -37,7 +45,13 @@
 //!
 //! Python never runs at request time; after `make artifacts` the binary is
 //! self-contained.  See DESIGN.md for the architecture and the experiment
-//! index, EXPERIMENTS.md for paper-vs-measured results.
+//! index, EXPERIMENTS.md for paper-vs-measured results, BENCHMARKS.md for
+//! how to run and read the benchmark suite.
+
+// Nightly portable SIMD for the explicit flash tiles; the stable build
+// compiles the auto-vectorized loops instead (estimator/flash.rs).
+#![cfg_attr(feature = "simd", feature(portable_simd))]
+#![warn(missing_docs)]
 
 pub mod analysis;
 pub mod bench_harness;

@@ -261,7 +261,7 @@ fn cmd_info(p: &cli::Parsed) -> Result<()> {
     let dir = PathBuf::from(p.get_string("artifacts", "artifacts"));
     let manifest = Manifest::load(&dir)?;
     println!("artifacts: {} entries (digest {})",
-        manifest.entries.len(),
+        manifest.entries().len(),
         &manifest.digest.get(..12).unwrap_or(&manifest.digest));
     for d in manifest.dims() {
         for pipeline in ["kde", "sdkde_fit", "sdkde_e2e", "laplace"] {

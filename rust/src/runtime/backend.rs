@@ -4,23 +4,34 @@
 //! [`ArtifactEntry`] against host tensors, pre-warm entries, report cache
 //! stats.  Two implementations exist (DESIGN.md §10):
 //!
-//! * [`crate::runtime::ExecutableStore`] — the PJRT/XLA path: compiles the
+//! * `ExecutableStore` (`runtime::store`, behind the `pjrt` cargo
+//!   feature) — the PJRT/XLA path: compiles the
 //!   AOT-lowered HLO artifacts and runs them on the XLA CPU client.
 //!   Requires `make artifacts` and the `pjrt` cargo feature (which links
 //!   the prebuilt `xla_extension`).
 //! * [`NativeFlash`] — a pure-Rust backend implementing the same pipelines
 //!   with the paper's matmul reordering ([`crate::estimator::flash`]):
-//!   blocked f32 dot tiles, f64 row accumulators, query blocks spread over
-//!   scoped threads.  Needs no artifacts, no Python, no XLA — the entire
-//!   serving path (fit → debias → registry → co-batching → eval/grad →
+//!   blocked f32 dot tiles (explicit `std::simd` lanes under the `simd`
+//!   feature), f64 row accumulators, query blocks spread over scoped
+//!   threads.  Needs no artifacts, no Python, no XLA — the entire serving
+//!   path (fit → debias → registry → co-batching → eval/grad →
 //!   backpressure) runs on a fresh checkout.
+//!
+//! The native backend also keeps a **resident-model prepare cache**
+//! (DESIGN.md §11): the O(n·d) per-dataset precomputation the flash
+//! kernels need (transposed train matrix + squared norms,
+//! [`flash::PreparedTrain`]) is cached keyed by the *pointer identity* of
+//! the registry's `Arc<HostTensor>` train tensors, held through `Weak`
+//! references — so a registry delete or LRU eviction invalidates the
+//! entry automatically by dropping the last strong `Arc`, and the cache
+//! can never pin a deleted model's memory.
 //!
 //! Both backends execute against the *same* bucket/manifest shapes, so the
 //! coordinator, batcher, wire protocol and every example behave
 //! identically on either; when no artifacts exist the native path serves a
 //! synthesized manifest ([`crate::runtime::Manifest::synthetic`]).
 
-use std::sync::Arc;
+use std::sync::{Arc, Weak};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
@@ -33,6 +44,7 @@ use crate::util::timer::PhaseTimer;
 /// Result of one artifact execution (either backend).
 #[derive(Debug)]
 pub struct ExecOutput {
+    /// Output tensors in the entry's declared order.
     pub outputs: Vec<HostTensor>,
     /// Phases: "h2d" / "execute" / "d2h" (+ "compile" on a PJRT cache
     /// miss); the native backend reports a single "execute" phase.
@@ -42,10 +54,21 @@ pub struct ExecOutput {
 /// Cache statistics for the info command / metrics endpoint.
 #[derive(Debug, Default, Clone, Copy, PartialEq)]
 pub struct StoreStats {
+    /// Executables compiled (PJRT; 0 for native).
     pub compiles: u64,
+    /// Executable-cache hits (PJRT; 0 for native).
     pub hits: u64,
+    /// Artifact executions served.
     pub executions: u64,
+    /// Total wall time spent compiling (PJRT).
     pub compile_time: Duration,
+    /// Prepare-cache hits (native; 0 for PJRT).  A hit means a query
+    /// chunk reused a resident model's [`flash::PreparedTrain`] instead
+    /// of re-deriving the transposed train matrix + squared norms.
+    pub prepare_hits: u64,
+    /// Prepare-cache misses (native; 0 for PJRT) — first touch of a
+    /// model's tensors, or re-prepare after the registry dropped them.
+    pub prepare_misses: u64,
 }
 
 /// What an engine worker drives.  Implementations are single-thread
@@ -58,6 +81,7 @@ pub trait ExecBackend {
     /// Pre-warm an entry (compile for PJRT; no-op for native).
     fn warm(&mut self, entry: &ArtifactEntry) -> Result<Duration>;
 
+    /// Counters for the stats endpoint.
     fn stats(&self) -> StoreStats;
 
     /// Number of compiled executables resident (0 for native).
@@ -79,6 +103,7 @@ pub enum BackendKind {
 }
 
 impl BackendKind {
+    /// Parse a config/CLI spelling (`"pjrt"`/`"xla"`, `"native"`/`"cpu"`).
     pub fn parse(s: &str) -> Option<Self> {
         match s.to_ascii_lowercase().as_str() {
             "pjrt" | "xla" => Some(Self::Pjrt),
@@ -87,6 +112,7 @@ impl BackendKind {
         }
     }
 
+    /// Canonical config-file spelling.
     pub fn as_str(&self) -> &'static str {
         match self {
             Self::Pjrt => "pjrt",
@@ -166,48 +192,140 @@ pub fn validate_inputs<T: std::borrow::Borrow<HostTensor>>(
     Ok(())
 }
 
+/// One prepare-cache entry: `Weak` handles to the registry's train
+/// tensors plus the shared prepared form.  Holding only `Weak`s is the
+/// invalidation mechanism — when the registry (and every handle) drops a
+/// model, the upgrade fails and the slot is purged on the next touch, so
+/// the cache can neither serve a stale model nor keep its memory alive.
+struct PrepareSlot {
+    x: Weak<HostTensor>,
+    w: Weak<HostTensor>,
+    prep: Arc<flash::PreparedTrain>,
+}
+
+/// Upper bound on resident prepared models per backend instance.  Matches
+/// the default registry capacity (a deployment raising
+/// `registry_capacity` far beyond this will see prepare misses under
+/// round-robin load wider than the cap — watch `prepare_hits/misses`).
+/// Eviction is least-recently-used: hits refresh their slot, dead slots
+/// are purged before counting.
+const PREPARE_CACHE_CAP: usize = 64;
+
 /// The native flash backend: dispatches the manifest pipelines onto the
 /// tiled kernels in [`crate::estimator::flash`].
 ///
-/// Numerics policy (DESIGN.md §10): f32 dot tiles, f64 norms and row
+/// Numerics policy (DESIGN.md §10/§11): f32 dot tiles, f64 norms and row
 /// accumulators, identical formulas and masked-row semantics to the
 /// scalar oracle; the conformance suite pins the agreement at rtol ≤ 2e-3
 /// (the f32 cross-term rounding, same order as the XLA f32 kernels).
+/// Serving-path executions (`kde`, `laplace`, `score_eval`) reuse a
+/// cached [`flash::PreparedTrain`] per resident model (see module docs);
+/// the fit pipelines prepare inline since their train set is one-shot.
 pub struct NativeFlash {
     tile: TileConfig,
     stats: StoreStats,
+    prepared: Vec<PrepareSlot>,
 }
 
 impl NativeFlash {
+    /// Backend with the default tile configuration.
     pub fn new() -> Self {
         Self::with_tile(TileConfig::default())
     }
 
     /// Pin tile sizes / thread count (conformance + ablation harnesses).
     pub fn with_tile(tile: TileConfig) -> Self {
-        NativeFlash { tile, stats: StoreStats::default() }
+        NativeFlash { tile, stats: StoreStats::default(), prepared: Vec::new() }
     }
 
+    /// The tile configuration this backend runs.
     pub fn tile(&self) -> &TileConfig {
         &self.tile
+    }
+
+    /// Live prepare-cache entries (dead slots purged first).
+    pub fn prepared_len(&mut self) -> usize {
+        self.purge_dead();
+        self.prepared.len()
+    }
+
+    /// Drop prepare-cache slots whose model tensors have been released
+    /// (registry delete / LRU eviction).  Runs automatically on every
+    /// cache access; exposed for tests and explicit maintenance.
+    pub fn prepared_gc(&mut self) {
+        self.purge_dead();
+    }
+
+    fn purge_dead(&mut self) {
+        self.prepared
+            .retain(|s| s.x.upgrade().is_some() && s.w.upgrade().is_some());
+    }
+
+    /// Resolve the prepared form of a (train, weights) tensor pair,
+    /// reusing the cached one when the *same allocations* were prepared
+    /// before.  Identity is pointer equality of the `Arc` allocations:
+    /// dead slots are purged first, so a surviving slot's address belongs
+    /// to a live allocation and cannot alias a freed model (the caller's
+    /// strong `Arc` pins its own address for the duration — no ABA).
+    fn prepared_for(
+        &mut self,
+        x: &Arc<HostTensor>,
+        w: &Arc<HostTensor>,
+        d: usize,
+    ) -> Result<Arc<flash::PreparedTrain>> {
+        self.purge_dead();
+        if let Some(pos) = self.prepared.iter().position(|s| {
+            std::ptr::eq(s.x.as_ptr(), Arc::as_ptr(x))
+                && std::ptr::eq(s.w.as_ptr(), Arc::as_ptr(w))
+                && s.prep.d() == d
+        }) {
+            self.stats.prepare_hits += 1;
+            // Refresh: move the slot to the back so eviction is LRU, not
+            // FIFO — churn cannot evict the hottest model first.
+            let slot = self.prepared.remove(pos);
+            let prep = Arc::clone(&slot.prep);
+            self.prepared.push(slot);
+            return Ok(prep);
+        }
+        self.stats.prepare_misses += 1;
+        // Shape consistency was bailed on in execute() before any kernel
+        // or prepare runs; the assert in PreparedTrain::new is vestigial.
+        let prep = Arc::new(flash::PreparedTrain::new(x.data(), w.data(), d));
+        if self.prepared.len() >= PREPARE_CACHE_CAP {
+            self.prepared.remove(0);
+        }
+        self.prepared.push(PrepareSlot {
+            x: Arc::downgrade(x),
+            w: Arc::downgrade(w),
+            prep: Arc::clone(&prep),
+        });
+        Ok(prep)
     }
 
     /// Positional input access with a typed error — validate_inputs only
     /// matches the arity against the *entry*, and a foreign manifest may
     /// declare fewer inputs than a pipeline needs; that must never panic
     /// a worker.
-    fn input<'a>(
+    fn input_arc<'a>(
         inputs: &'a [Arc<HostTensor>],
         idx: usize,
         name: &str,
-    ) -> Result<&'a HostTensor> {
+    ) -> Result<&'a Arc<HostTensor>> {
         match inputs.get(idx) {
-            Some(t) => Ok(t.as_ref()),
+            Some(t) => Ok(t),
             None => bail!(
                 "native pipeline needs input {idx} ({name}); entry declares {}",
                 inputs.len()
             ),
         }
+    }
+
+    fn input<'a>(
+        inputs: &'a [Arc<HostTensor>],
+        idx: usize,
+        name: &str,
+    ) -> Result<&'a HostTensor> {
+        Self::input_arc(inputs, idx, name).map(|t| t.as_ref())
     }
 
     fn scalar(inputs: &[Arc<HostTensor>], idx: usize, name: &str) -> Result<f64> {
@@ -216,6 +334,25 @@ impl NativeFlash {
             bail!("input {idx} ({name}) must be a scalar, got shape {:?}", t.shape());
         }
         Ok(t.data()[0] as f64)
+    }
+
+    /// A `[rows, d]` input as a flat slice, with the row-width check the
+    /// flash kernels would otherwise only `assert!` — a foreign manifest's
+    /// inconsistent entry must be a typed error, never a worker panic.
+    fn rows_input<'a>(
+        inputs: &'a [Arc<HostTensor>],
+        idx: usize,
+        name: &str,
+        d: usize,
+    ) -> Result<&'a [f32]> {
+        let t = Self::input(inputs, idx, name)?;
+        if t.len() % d != 0 {
+            bail!(
+                "input {idx} ({name}) has {} values, not a multiple of d={d}",
+                t.len()
+            );
+        }
+        Ok(t.data())
     }
 }
 
@@ -234,35 +371,61 @@ impl ExecBackend for NativeFlash {
 
         // Every pipeline shares the (x, w) prefix; kernels treat w == 0 as
         // a masked row exactly like the oracle and the padded buckets.
-        let x = Self::input(inputs, 0, "x")?.data();
-        let w = Self::input(inputs, 1, "w")?.data();
+        let x_arc = Self::input_arc(inputs, 0, "x")?;
+        let w_arc = Self::input_arc(inputs, 1, "w")?;
+        let x = x_arc.data();
+        let w = w_arc.data();
         if !w.iter().any(|&v| v != 0.0) {
             bail!("artifact {}: no effective samples (all weights zero)", entry.key());
         }
+        // A foreign manifest entry can be internally inconsistent in ways
+        // validate_inputs cannot see (it only matches tensors against the
+        // entry's own specs): reject them here as typed errors before the
+        // kernels' asserts could panic the worker.
+        if d == 0 {
+            bail!("artifact {}: dimension must be >= 1", entry.key());
+        }
+        if x.len() != w.len() * d {
+            bail!(
+                "artifact {}: train tensors disagree: x has {} values, \
+                 w has {} rows, d={d}",
+                entry.key(),
+                x.len(),
+                w.len()
+            );
+        }
 
         let output = match entry.pipeline.as_str() {
+            // Serving pipelines: the train side is a resident model's
+            // tensors — reuse (or build) its cached prepared form.
             "kde" => {
-                let y = Self::input(inputs, 2, "y")?.data();
+                let y = Self::rows_input(inputs, 2, "y", d)?;
                 let h = Self::scalar(inputs, 3, "h")?;
-                let dens = flash::kde(x, w, y, d, h, &self.tile);
+                let train = self.prepared_for(x_arc, w_arc, d)?;
+                let dens = flash::kde_prepared(&train, y, h, &self.tile);
                 HostTensor::vec1(dens.iter().map(|&v| v as f32).collect())
             }
             "laplace" => {
-                let y = Self::input(inputs, 2, "y")?.data();
+                let y = Self::rows_input(inputs, 2, "y", d)?;
                 let h = Self::scalar(inputs, 3, "h")?;
-                let dens = flash::laplace(x, w, y, d, h, &self.tile);
+                let train = self.prepared_for(x_arc, w_arc, d)?;
+                let dens = flash::laplace_prepared(&train, y, h, &self.tile);
                 HostTensor::vec1(dens.iter().map(|&v| v as f32).collect())
             }
             "score_eval" => {
-                let y = Self::input(inputs, 2, "y")?.data();
+                let y = Self::rows_input(inputs, 2, "y", d)?;
                 let h = Self::scalar(inputs, 3, "h")?;
-                let s = flash::score_at(x, w, y, d, h, &self.tile);
+                let train = self.prepared_for(x_arc, w_arc, d)?;
+                let s = flash::score_at_prepared(&train, y, h, &self.tile);
                 HostTensor::matrix(
                     y.len() / d,
                     d,
                     s.iter().map(|&v| v as f32).collect(),
                 )?
             }
+            // Fit pipelines: the train set is one-shot (the registry
+            // stores the *debiased* output, a different tensor), so
+            // prepare inline and keep the cache for resident models.
             "sdkde_fit" => {
                 let h = Self::scalar(inputs, 2, "h")?;
                 let h_s = Self::scalar(inputs, 3, "h_score")?;
@@ -273,7 +436,7 @@ impl ExecBackend for NativeFlash {
             // the debiased set) but kept for parity with real manifests
             // and direct backend driving (benches, conformance).
             "sdkde_e2e" => {
-                let y = Self::input(inputs, 2, "y")?.data();
+                let y = Self::rows_input(inputs, 2, "y", d)?;
                 let h = Self::scalar(inputs, 3, "h")?;
                 let h_s = Self::scalar(inputs, 4, "h_score")?;
                 let dens = flash::sdkde(x, w, y, d, h, h_s, &self.tile);
@@ -315,8 +478,13 @@ impl ExecBackend for NativeFlash {
     }
 
     fn platform(&self) -> String {
+        let lanes = if cfg!(feature = "simd") && self.tile.simd {
+            "simd"
+        } else {
+            "auto-vec"
+        };
         format!(
-            "native-cpu (tiles {}x{}, {} threads)",
+            "native-cpu (tiles {}x{}, {} threads, {lanes})",
             self.tile.block_q, self.tile.block_t, self.tile.threads
         )
     }
@@ -412,6 +580,77 @@ mod tests {
         assert_eq!(backend.stats().executions, 1);
         assert_eq!(backend.cached_len(), 0);
         assert!(backend.platform().contains("native-cpu"));
+        // Fresh tensors each call: that execution was a prepare miss.
+        assert_eq!(backend.stats().prepare_misses, 1);
+        assert_eq!(backend.stats().prepare_hits, 0);
+    }
+
+    #[test]
+    fn prepare_cache_hits_resident_tensors_and_never_changes_results() {
+        let (n, m, d) = (64, 8, 3);
+        let mut rng = Pcg64::seeded(17);
+        let entry = kde_entry(n, m, d);
+        // Two "resident models" sharing a backend, as in serving.
+        let x1 = Arc::new(HostTensor::matrix(n, d, rng.normal_vec_f32(n * d)).unwrap());
+        let x2 = Arc::new(HostTensor::matrix(n, d, rng.normal_vec_f32(n * d)).unwrap());
+        let w = Arc::new(HostTensor::full(vec![n], 1.0));
+        let y = Arc::new(HostTensor::matrix(m, d, rng.normal_vec_f32(m * d)).unwrap());
+        let h = Arc::new(HostTensor::scalar(0.6));
+
+        let mut cached = NativeFlash::new();
+        let run = |b: &mut NativeFlash, x: &Arc<HostTensor>| {
+            let inputs = vec![
+                Arc::clone(x),
+                Arc::clone(&w),
+                Arc::clone(&y),
+                Arc::clone(&h),
+            ];
+            b.execute(&entry, &inputs).expect("execute").outputs.remove(0)
+        };
+        // Interleave the two models; from the second touch on, each is a
+        // cache hit — and every output must be bitwise what a fresh
+        // backend (fresh prepare) computes.
+        for round in 0..3 {
+            for x in [&x1, &x2] {
+                let got = run(&mut cached, x);
+                let fresh = run(&mut NativeFlash::new(), x);
+                assert_eq!(got, fresh, "round {round}: cache changed a result");
+            }
+        }
+        let s = cached.stats();
+        assert_eq!(s.prepare_misses, 2, "one miss per model");
+        assert_eq!(s.prepare_hits, 4, "every later touch hits");
+        assert_eq!(cached.prepared_len(), 2);
+    }
+
+    #[test]
+    fn prepare_cache_drops_entry_when_model_tensors_are_released() {
+        let (n, m, d) = (32, 4, 2);
+        let mut rng = Pcg64::seeded(23);
+        let entry = kde_entry(n, m, d);
+        let x = Arc::new(HostTensor::matrix(n, d, rng.normal_vec_f32(n * d)).unwrap());
+        let w = Arc::new(HostTensor::full(vec![n], 1.0));
+
+        let mut backend = NativeFlash::new();
+        let inputs = vec![
+            Arc::clone(&x),
+            Arc::clone(&w),
+            Arc::new(HostTensor::matrix(m, d, rng.normal_vec_f32(m * d)).unwrap()),
+            Arc::new(HostTensor::scalar(0.5)),
+        ];
+        backend.execute(&entry, &inputs).expect("execute");
+        drop(inputs);
+        assert_eq!(backend.prepared_len(), 1);
+
+        // The cache holds only Weaks: releasing the model (registry
+        // delete / eviction) must actually free it...
+        let x_obs = Arc::downgrade(&x);
+        drop(x);
+        drop(w);
+        assert!(x_obs.upgrade().is_none(), "cache kept the model alive");
+        // ...and the slot disappears on the next cache touch.
+        backend.prepared_gc();
+        assert_eq!(backend.prepared_len(), 0);
     }
 
     #[test]
@@ -456,6 +695,66 @@ mod tests {
             )
             .unwrap_err();
         assert!(format!("{err:#}").contains("warp"), "{err:#}");
+
+        // Entries whose own specs are internally inconsistent — ways
+        // validate_inputs cannot catch — must be typed errors, never
+        // worker panics (the kernels would assert on all three).
+
+        // Train shape vs weights disagree.
+        let mut torn = kde_entry(4, 2, 1);
+        torn.inputs[0].shape = vec![3, 1];
+        let mut w = HostTensor::zeros(vec![4]);
+        w.data_mut().fill(1.0);
+        let err = backend
+            .execute(
+                &torn,
+                &arcs(vec![
+                    HostTensor::zeros(vec![3, 1]),
+                    w,
+                    HostTensor::zeros(vec![2, 1]),
+                    HostTensor::scalar(0.5),
+                ]),
+            )
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("disagree"), "{err:#}");
+
+        // Query width not a multiple of d.
+        let mut torn_y = kde_entry(4, 2, 2);
+        torn_y.inputs[2].shape = vec![3];
+        let mut w = HostTensor::zeros(vec![4]);
+        w.data_mut().fill(1.0);
+        let err = backend
+            .execute(
+                &torn_y,
+                &arcs(vec![
+                    HostTensor::zeros(vec![4, 2]),
+                    w,
+                    HostTensor::zeros(vec![3]),
+                    HostTensor::scalar(0.5),
+                ]),
+            )
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("not a multiple"), "{err:#}");
+
+        // Zero dimension.
+        let mut torn_d = kde_entry(4, 2, 1);
+        torn_d.d = 0;
+        torn_d.inputs[0].shape = vec![4, 0];
+        torn_d.inputs[2].shape = vec![2, 0];
+        let mut w = HostTensor::zeros(vec![4]);
+        w.data_mut().fill(1.0);
+        let err = backend
+            .execute(
+                &torn_d,
+                &arcs(vec![
+                    HostTensor::zeros(vec![4, 0]),
+                    w,
+                    HostTensor::zeros(vec![2, 0]),
+                    HostTensor::scalar(0.5),
+                ]),
+            )
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("dimension"), "{err:#}");
     }
 
     #[test]
@@ -471,6 +770,6 @@ mod tests {
         let missing = std::path::Path::new("/nonexistent-flash-sdkde-dir");
         assert!(resolve_manifest(BackendKind::Pjrt, missing).is_err());
         let m = resolve_manifest(BackendKind::Native, missing).unwrap();
-        assert!(!m.entries.is_empty());
+        assert!(!m.entries().is_empty());
     }
 }

@@ -1,4 +1,5 @@
-//! Engine: threaded execution front-end over an [`ExecBackend`].
+//! Engine: threaded execution front-end over an
+//! [`ExecBackend`](super::backend::ExecBackend).
 //!
 //! Each engine worker thread owns its own backend instance — a PJRT
 //! `ExecutableStore` (whose handles are not `Send`) or a `NativeFlash`
@@ -24,6 +25,7 @@ use crate::log_info;
 /// shared `Manifest`, which is plain data and freely shareable).
 #[derive(Debug, Clone)]
 pub struct ExecRequest {
+    /// The resolved artifact entry to execute.
     pub entry: ArtifactEntry,
     /// Arc-shared so registry-resident tensors (the fitted training set)
     /// cross into the worker without copying (perf pass, EXPERIMENTS.md).

@@ -17,6 +17,8 @@ use super::backend::{validate_inputs, ExecBackend, ExecOutput, StoreStats};
 use super::tensor::HostTensor;
 use crate::util::timer::PhaseTimer;
 
+/// PJRT-backed executable store: lazily compiles HLO artifacts on first
+/// use and caches the loaded executables by entry key.
 pub struct ExecutableStore {
     client: PjRtClient,
     manifest: Manifest,
@@ -31,14 +33,17 @@ impl ExecutableStore {
         Ok(ExecutableStore { client, manifest, cache: HashMap::new(), stats: StoreStats::default() })
     }
 
+    /// The artifact manifest this store serves.
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
 
+    /// Compile/hit/execution counters.
     pub fn stats(&self) -> StoreStats {
         self.stats
     }
 
+    /// PJRT platform name (e.g. "cpu").
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }

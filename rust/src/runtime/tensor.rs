@@ -60,30 +60,37 @@ impl HostTensor {
         HostTensor { shape, data: vec![value; len] }
     }
 
+    /// The tensor's shape (empty for rank-0 scalars).
     pub fn shape(&self) -> &[usize] {
         &self.shape
     }
 
+    /// Flat row-major element view.
     pub fn data(&self) -> &[f32] {
         &self.data
     }
 
+    /// Mutable flat row-major element view.
     pub fn data_mut(&mut self) -> &mut [f32] {
         &mut self.data
     }
 
+    /// Consume the tensor, returning its flat element buffer.
     pub fn into_data(self) -> Vec<f32> {
         self.data
     }
 
+    /// Total element count.
     pub fn len(&self) -> usize {
         self.data.len()
     }
 
+    /// Whether the tensor holds no elements.
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
 
+    /// Number of dimensions (0 for scalars).
     pub fn rank(&self) -> usize {
         self.shape.len()
     }

@@ -10,22 +10,30 @@ use std::fmt::Write as _;
 /// One option/flag specification.
 #[derive(Debug, Clone)]
 pub struct OptSpec {
+    /// Long option name (no leading `--`).
     pub name: &'static str,
+    /// One-line help text.
     pub help: &'static str,
+    /// Whether the option consumes a value (false = boolean flag).
     pub takes_value: bool,
+    /// Default value when omitted.
     pub default: Option<&'static str>,
+    /// Whether omission is a parse error.
     pub required: bool,
 }
 
 impl OptSpec {
+    /// Boolean flag (present/absent).
     pub fn flag(name: &'static str, help: &'static str) -> Self {
         OptSpec { name, help, takes_value: false, default: None, required: false }
     }
 
+    /// Optional valued option.
     pub fn opt(name: &'static str, help: &'static str) -> Self {
         OptSpec { name, help, takes_value: true, default: None, required: false }
     }
 
+    /// Valued option with a default.
     pub fn opt_default(
         name: &'static str,
         help: &'static str,
@@ -34,6 +42,7 @@ impl OptSpec {
         OptSpec { name, help, takes_value: true, default: Some(default), required: false }
     }
 
+    /// Valued option that must be present.
     pub fn opt_required(name: &'static str, help: &'static str) -> Self {
         OptSpec { name, help, takes_value: true, default: None, required: true }
     }
@@ -42,8 +51,11 @@ impl OptSpec {
 /// A subcommand: name, description, options.
 #[derive(Debug, Clone)]
 pub struct Command {
+    /// Subcommand name.
     pub name: &'static str,
+    /// One-line description for the overview.
     pub about: &'static str,
+    /// Accepted options/flags.
     pub opts: Vec<OptSpec>,
 }
 
@@ -52,22 +64,27 @@ pub struct Command {
 pub struct Parsed {
     values: BTreeMap<String, String>,
     flags: Vec<String>,
+    /// Arguments that were not options.
     pub positional: Vec<String>,
 }
 
 impl Parsed {
+    /// Whether a boolean flag was passed.
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// Raw option value (defaults already applied).
     pub fn get(&self, name: &str) -> Option<&str> {
         self.values.get(name).map(|s| s.as_str())
     }
 
+    /// Option value with a caller-side fallback.
     pub fn get_string(&self, name: &str, default: &str) -> String {
         self.get(name).unwrap_or(default).to_string()
     }
 
+    /// Option value parsed as an integer.
     pub fn get_usize(&self, name: &str) -> Result<Option<usize>, String> {
         match self.get(name) {
             None => Ok(None),
@@ -78,6 +95,7 @@ impl Parsed {
         }
     }
 
+    /// Option value parsed as a float.
     pub fn get_f64(&self, name: &str) -> Result<Option<f64>, String> {
         match self.get(name) {
             None => Ok(None),

@@ -13,15 +13,22 @@ use std::fmt;
 /// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Value {
+    /// JSON `null`.
     Null,
+    /// JSON boolean.
     Bool(bool),
+    /// JSON number (always f64; integers below 2^53 are lossless).
     Number(f64),
+    /// JSON string.
     String(String),
+    /// JSON array.
     Array(Vec<Value>),
+    /// JSON object (sorted keys — deterministic rendering).
     Object(BTreeMap<String, Value>),
 }
 
 impl Value {
+    /// The boolean payload, if this is a `Bool`.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Value::Bool(b) => Some(*b),
@@ -29,6 +36,7 @@ impl Value {
         }
     }
 
+    /// The numeric payload, if this is a `Number`.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Value::Number(n) => Some(*n),
@@ -36,6 +44,7 @@ impl Value {
         }
     }
 
+    /// The payload as a non-negative integer (rejects fractions).
     pub fn as_usize(&self) -> Option<usize> {
         match self {
             Value::Number(n) if *n >= 0.0 && n.fract() == 0.0 => Some(*n as usize),
@@ -43,6 +52,7 @@ impl Value {
         }
     }
 
+    /// The payload as a signed integer (rejects fractions).
     pub fn as_i64(&self) -> Option<i64> {
         match self {
             Value::Number(n) if n.fract() == 0.0 => Some(*n as i64),
@@ -50,6 +60,7 @@ impl Value {
         }
     }
 
+    /// The string payload, if this is a `String`.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Value::String(s) => Some(s),
@@ -57,6 +68,7 @@ impl Value {
         }
     }
 
+    /// The element slice, if this is an `Array`.
     pub fn as_array(&self) -> Option<&[Value]> {
         match self {
             Value::Array(a) => Some(a),
@@ -64,6 +76,7 @@ impl Value {
         }
     }
 
+    /// The key/value map, if this is an `Object`.
     pub fn as_object(&self) -> Option<&BTreeMap<String, Value>> {
         match self {
             Value::Object(o) => Some(o),
@@ -76,6 +89,7 @@ impl Value {
         self.as_object().and_then(|o| o.get(key))
     }
 
+    /// Whether this is JSON `null`.
     pub fn is_null(&self) -> bool {
         matches!(self, Value::Null)
     }
@@ -151,7 +165,9 @@ impl From<Vec<Value>> for Value {
 /// Parse / render error with byte offset context.
 #[derive(Debug, Clone)]
 pub struct JsonError {
+    /// What went wrong.
     pub message: String,
+    /// Byte offset into the input where it went wrong (0 for writers).
     pub offset: usize,
 }
 

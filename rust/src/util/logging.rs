@@ -9,15 +9,22 @@ use std::time::Instant;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 #[repr(u8)]
+/// Log severity, most severe first.
 pub enum Level {
+    /// Unrecoverable or dropped-work conditions.
     Error = 0,
+    /// Degraded but continuing.
     Warn = 1,
+    /// Lifecycle milestones (default level).
     Info = 2,
+    /// Per-request detail.
     Debug = 3,
+    /// Everything.
     Trace = 4,
 }
 
 impl Level {
+    /// Parse a `FLASH_SDKDE_LOG` spelling.
     pub fn parse(s: &str) -> Option<Level> {
         match s.to_ascii_lowercase().as_str() {
             "error" => Some(Level::Error),
@@ -58,16 +65,19 @@ fn start_instant() -> Instant {
     }
 }
 
+/// Set the global log level (overrides `FLASH_SDKDE_LOG`).
 pub fn set_level(level: Level) {
     start_instant();
     LEVEL.store(level as u8, Ordering::Relaxed);
 }
 
+/// Whether `level` currently logs (one atomic load).
 pub fn enabled(level: Level) -> bool {
     start_instant();
     level as u8 <= LEVEL.load(Ordering::Relaxed)
 }
 
+/// Emit one log line; prefer the `log_*!` macros.
 pub fn log(level: Level, target: &str, msg: std::fmt::Arguments<'_>) {
     if !enabled(level) {
         return;
@@ -82,6 +92,7 @@ pub fn log(level: Level, target: &str, msg: std::fmt::Arguments<'_>) {
     );
 }
 
+/// Log at [`util::logging::Level::Error`](crate::util::logging::Level).
 #[macro_export]
 macro_rules! log_error {
     ($target:expr, $($arg:tt)*) => {
@@ -91,6 +102,7 @@ macro_rules! log_error {
     };
 }
 
+/// Log at [`util::logging::Level::Warn`](crate::util::logging::Level).
 #[macro_export]
 macro_rules! log_warn {
     ($target:expr, $($arg:tt)*) => {
@@ -100,6 +112,7 @@ macro_rules! log_warn {
     };
 }
 
+/// Log at [`util::logging::Level::Info`](crate::util::logging::Level).
 #[macro_export]
 macro_rules! log_info {
     ($target:expr, $($arg:tt)*) => {
@@ -109,6 +122,7 @@ macro_rules! log_info {
     };
 }
 
+/// Log at [`util::logging::Level::Debug`](crate::util::logging::Level).
 #[macro_export]
 macro_rules! log_debug {
     ($target:expr, $($arg:tt)*) => {

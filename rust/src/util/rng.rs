@@ -30,6 +30,7 @@ impl Pcg64 {
         Self::new(seed, 0)
     }
 
+    /// Next 64 random bits (two PCG32 outputs).
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
         let rot = (self.state >> 122) as u32;
@@ -37,6 +38,7 @@ impl Pcg64 {
         xored.rotate_right(rot)
     }
 
+    /// Next 32 random bits (one PCG32 step).
     pub fn next_u32(&mut self) -> u32 {
         (self.next_u64() >> 32) as u32
     }

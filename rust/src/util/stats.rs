@@ -8,13 +8,21 @@
 /// Summary of a sample of observations.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Summary {
+    /// Number of samples summarized.
     pub count: usize,
+    /// Arithmetic mean.
     pub mean: f64,
+    /// Sample standard deviation.
     pub std: f64,
+    /// Smallest sample.
     pub min: f64,
+    /// Largest sample.
     pub max: f64,
+    /// 50th percentile (linear interpolation).
     pub median: f64,
+    /// 95th percentile.
     pub p95: f64,
+    /// 99th percentile.
     pub p99: f64,
 }
 

@@ -17,6 +17,7 @@ pub struct PhaseTimer {
 }
 
 impl PhaseTimer {
+    /// Empty timer.
     pub fn new() -> Self {
         Self::default()
     }
@@ -38,14 +39,17 @@ impl PhaseTimer {
         }
     }
 
+    /// Duration of a named phase, if recorded.
     pub fn get(&self, phase: &str) -> Option<Duration> {
         self.phases.iter().find(|(p, _)| *p == phase).map(|(_, d)| *d)
     }
 
+    /// Sum over all recorded phases.
     pub fn total(&self) -> Duration {
         self.phases.iter().map(|(_, d)| *d).sum()
     }
 
+    /// The recorded (phase, duration) pairs, in record order.
     pub fn phases(&self) -> &[(&'static str, Duration)] {
         &self.phases
     }

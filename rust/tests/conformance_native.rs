@@ -13,7 +13,7 @@
 //! (TILE_INVARIANCE_RTOL).
 
 use flash_sdkde::data::mixture::by_dim;
-use flash_sdkde::estimator::flash::{self, TileConfig};
+use flash_sdkde::estimator::flash::{self, PreparedTrain, TileConfig};
 use flash_sdkde::estimator::{bandwidth, native};
 use flash_sdkde::util::prop::{check, ensure};
 use flash_sdkde::util::rng::Pcg64;
@@ -190,8 +190,8 @@ fn masked_rows_equal_compacted_problem() {
 }
 
 #[test]
-fn prop_results_invariant_across_tile_and_thread_choices() {
-    check("tile/thread invariance", 40, |rng| {
+fn prop_results_invariant_across_tile_thread_and_simd_choices() {
+    check("tile/thread/simd invariance", 40, |rng| {
         let d = [1usize, 2, 3, 5, 16][rng.below(5) as usize];
         let n = 2 + rng.below(200) as usize;
         let m = 1 + rng.below(60) as usize;
@@ -208,7 +208,12 @@ fn prop_results_invariant_across_tile_and_thread_choices() {
         }
         let h = 0.2 + 0.1 * rng.below(10) as f64;
 
-        let base_cfg = TileConfig { block_q: 32, block_t: 256, threads: 1 };
+        // Scalar-tile serial reference; varied configs flip the SIMD flag
+        // too (a no-op without the `simd` feature).  The explicit-SIMD
+        // dot tile is element-for-element the scalar arithmetic, and the
+        // SIMD density accumulate only re-associates the f64 sum, so the
+        // 1e-12 invariance bound covers the flag like any tile change.
+        let base_cfg = TileConfig::scalar_tiles();
         let base = flash::kde(&x, &w, &y, d, h, &base_cfg);
         let base_s = flash::score_at(&x, &w, &y, d, h, &base_cfg);
 
@@ -217,6 +222,7 @@ fn prop_results_invariant_across_tile_and_thread_choices() {
                 block_q: 1 + rng.below(70) as usize,
                 block_t: 1 + rng.below(300) as usize,
                 threads: 1 + rng.below(4) as usize,
+                simd: rng.below(2) == 0,
             };
             let got = flash::kde(&x, &w, &y, d, h, &cfg);
             for (a, b) in got.iter().zip(&base) {
@@ -234,6 +240,52 @@ fn prop_results_invariant_across_tile_and_thread_choices() {
                     &format!("score moved under {cfg:?}: {a} vs {b}"),
                 )?;
             }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_prepared_train_reuse_is_bitwise_stable() {
+    // The prepare-cache contract (DESIGN.md §11): a PreparedTrain built
+    // once and reused across queries — what a backend cache hit serves —
+    // must return exactly what the one-shot entry points (a cache miss)
+    // compute, for every kernel, under arbitrary tile configs and masks.
+    check("prepared reuse bitwise", 30, |rng| {
+        let d = [1usize, 2, 3, 16][rng.below(4) as usize];
+        let n = 2 + rng.below(150) as usize;
+        let m = 1 + rng.below(40) as usize;
+        let mix = by_dim(d);
+        let mut data_rng = Pcg64::new(rng.next_u64(), 2);
+        let x = mix.sample(n, &mut data_rng);
+        let y = mix.sample(m, &mut data_rng);
+        let mut w = vec![1.0f32; n];
+        for wi in w.iter_mut().skip(1) {
+            if rng.below(4) == 0 {
+                *wi = 0.0;
+            }
+        }
+        let h = 0.2 + 0.1 * rng.below(10) as f64;
+        let cfg = TileConfig {
+            block_q: 1 + rng.below(64) as usize,
+            block_t: 1 + rng.below(300) as usize,
+            threads: 1 + rng.below(3) as usize,
+            simd: rng.below(2) == 0,
+        };
+
+        let train = PreparedTrain::new(&x, &w, d);
+        let kde_fresh = flash::kde(&x, &w, &y, d, h, &cfg);
+        let score_fresh = flash::score_at(&x, &w, &y, d, h, &cfg);
+        for round in 0..2 {
+            // Twice: reuse must not mutate the prepared state.
+            ensure(
+                flash::kde_prepared(&train, &y, h, &cfg) == kde_fresh,
+                &format!("kde via cached prepare moved (round {round})"),
+            )?;
+            ensure(
+                flash::score_at_prepared(&train, &y, h, &cfg) == score_fresh,
+                &format!("score via cached prepare moved (round {round})"),
+            )?;
         }
         Ok(())
     });

@@ -346,6 +346,66 @@ fn handle_delete_acts_on_identity_and_eviction_keeps_handles_alive() {
 }
 
 #[test]
+fn prepare_cache_serves_resident_models_through_the_full_path() {
+    let coord = coordinator();
+    let d = 2;
+    let mix = by_dim(d);
+    let mut rng = Pcg64::seeded(91);
+    let train = mix.sample(120, &mut rng);
+    let queries = mix.sample(9, &mut rng);
+
+    let engine_stat = |coord: &Coordinator, key: &str| -> usize {
+        coord
+            .stats_json()
+            .get("engine")
+            .and_then(|e| e.get(key))
+            .and_then(|v| v.as_usize())
+            .unwrap_or_else(|| panic!("stats missing engine.{key}"))
+    };
+
+    let model = coord
+        .fit("pc", train.clone(), &FitSpec::new(EstimatorKind::Kde, d))
+        .expect("fit");
+    // First eval prepares (miss); repeats reuse the cached PreparedTrain.
+    let first = coord.eval(&model, queries.clone()).expect("eval 1");
+    let misses_after_first = engine_stat(&coord, "prepare_misses");
+    assert!(misses_after_first >= 1, "first eval should prepare");
+    let second = coord.eval(&model, queries.clone()).expect("eval 2");
+    let third = coord.eval(&model, queries.clone()).expect("eval 3");
+    assert!(engine_stat(&coord, "prepare_hits") >= 2, "resident model never hit");
+    assert_eq!(
+        engine_stat(&coord, "prepare_misses"),
+        misses_after_first,
+        "resident model re-prepared"
+    );
+    // Cache hit vs miss must not move a single bit of the output.
+    assert_eq!(first.values, second.values);
+    assert_eq!(first.values, third.values);
+    // And the values stay oracle-correct.
+    let w = vec![1.0f32; 120];
+    let want = native::kde(&train, &w, &queries, d, model.h());
+    for (a, b) in first.values.iter().zip(&want) {
+        assert!(((*a as f64 - b) / b).abs() < RTOL, "{a} vs {b}");
+    }
+
+    // Delete drops the registry's Arc; the handle keeps the tensors
+    // alive (so the cache may still serve it), but a *re-fit* under the
+    // same name is a new allocation and must be prepared afresh — the
+    // cache can never alias the old model.
+    assert!(coord.delete(&model));
+    drop(model);
+    let refit = coord
+        .fit("pc", train, &FitSpec::new(EstimatorKind::Kde, d))
+        .expect("refit");
+    let refit_vals = coord.eval(&refit, queries).expect("eval refit").values;
+    assert!(
+        engine_stat(&coord, "prepare_misses") > misses_after_first,
+        "refit model must re-prepare (fresh tensors)"
+    );
+    assert_eq!(first.values, refit_vals, "same data refit changed results");
+}
+
+#[test]
 fn wire_protocol_round_trip_on_native_backend() {
     let coord = coordinator();
     let mut server = Server::start(coord, "127.0.0.1", 0).expect("server");

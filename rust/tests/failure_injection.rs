@@ -152,7 +152,7 @@ fn missing_hlo_file_fails_at_compile_not_at_open() {
     let dir = temp_artifacts(|_| {}); // manifest fine, no HLO files copied
     let manifest = Manifest::load(&dir).expect("manifest loads");
     let mut store = ExecutableStore::open(manifest).expect("store opens");
-    let entry = store.manifest().entries[0].clone();
+    let entry = store.manifest().entries()[0].clone();
     let err = store.warm(&entry).unwrap_err();
     let msg = format!("{err:#}");
     assert!(msg.contains("HLO") || msg.contains(&entry.file), "{msg}");
@@ -171,7 +171,7 @@ fn garbage_hlo_text_fails_cleanly() {
     }
     let dir = temp_artifacts(|_| {});
     let manifest = Manifest::load(&dir).expect("manifest");
-    let entry = manifest.entries[0].clone();
+    let entry = manifest.entries()[0].clone();
     std::fs::write(dir.join(&entry.file), "HloModule corrupted\nnot hlo at all")
         .expect("write garbage");
     let mut store = ExecutableStore::open(manifest).expect("store");
