@@ -1,0 +1,116 @@
+//! Multi-node serving demo (DESIGN.md §12): three in-process `serve`
+//! workers behind the consistent-hash router, all on loopback ephemeral
+//! ports — no artifacts, no XLA, no setup:
+//!
+//! ```bash
+//! cargo run --release --example cluster_route --no-default-features
+//! ```
+//!
+//! Walks the whole lifecycle: fit a handful of models through the router
+//! (placement is rendezvous hashing of the model name), query them, dump
+//! the aggregated fleet stats, "unplug" one worker to show the typed
+//! failure, then update the node table and re-fit to show failover.
+
+use anyhow::Result;
+
+use flash_sdkde::config::{Config, RouterConfig};
+use flash_sdkde::coordinator::router::{Router, RouterServer};
+use flash_sdkde::coordinator::server::{Client, Server};
+use flash_sdkde::coordinator::{Coordinator, FitSpec};
+use flash_sdkde::data::mixture::by_dim;
+use flash_sdkde::estimator::EstimatorKind;
+use flash_sdkde::runtime::BackendKind;
+use flash_sdkde::util::json;
+use flash_sdkde::util::rng::Pcg64;
+
+fn worker() -> Result<Server> {
+    let mut cfg = Config::default();
+    cfg.backend = BackendKind::Native;
+    cfg.artifacts_dir = "/nonexistent-artifacts".into();
+    cfg.batch_wait_ms = 1;
+    Server::start(Coordinator::start(cfg)?, "127.0.0.1", 0)
+}
+
+fn main() -> Result<()> {
+    // Three loopback workers, each a full native-backend coordinator.
+    let mut workers: Vec<Server> = Vec::new();
+    for _ in 0..3 {
+        workers.push(worker()?);
+    }
+    let mut router_cfg = RouterConfig::default();
+    router_cfg.nodes =
+        workers.iter().map(|w| w.local_addr().to_string()).collect();
+    router_cfg.connect_timeout_ms = 500;
+    router_cfg.retries = 2;
+    let router_server =
+        RouterServer::start(Router::new(router_cfg)?, "127.0.0.1", 0)?;
+    let table = router_server.router().table();
+    println!(
+        "cluster up: router {} over {:?} (epoch {})",
+        router_server.local_addr(),
+        table.nodes(),
+        table.epoch()
+    );
+
+    // Fit six models through the router; placement is deterministic.
+    let d = 2;
+    let mix = by_dim(d);
+    let mut rng = Pcg64::seeded(1);
+    let mut client = Client::connect(router_server.local_addr())?;
+    let names: Vec<String> = (0..6).map(|i| format!("tenant-{i}")).collect();
+    for name in &names {
+        let info =
+            client.fit(name, mix.sample(256, &mut rng), &FitSpec::new(EstimatorKind::SdKde, d))?;
+        println!(
+            "  fit {name} (n={}, h={:.4}) -> {}",
+            info.n,
+            info.h,
+            table.owner(name).expect("owner")
+        );
+    }
+
+    // Queries follow their model to the owning node.
+    let queries = mix.sample(4, &mut rng);
+    for name in &names {
+        let res = client.eval(name, d, queries.clone())?;
+        println!("  eval {name}: p[0] = {:.6}", res.values[0]);
+    }
+
+    // One aggregated stats document for the whole fleet.
+    println!("fleet stats: {}", json::to_string(&client.stats()?));
+
+    // Unplug a worker: routed ops for its models fail typed (and fast).
+    let victim = table.owner(&names[0]).expect("owner").to_string();
+    let idx = workers
+        .iter()
+        .position(|w| w.local_addr().to_string() == victim)
+        .expect("victim index");
+    drop(workers.remove(idx));
+    match client.eval(&names[0], d, queries.clone()) {
+        Err(e) => println!("after killing {victim}: typed error: {e:#}"),
+        Ok(_) => println!("unexpected: {victim} still answered"),
+    }
+
+    // Failover: drop the node from the table (epoch bumps), re-fit the
+    // orphaned model through the router, and serving resumes.
+    router_server.router().remove_node(&victim);
+    let updated = router_server.router().table();
+    println!(
+        "table updated: {:?} (epoch {})",
+        updated.nodes(),
+        updated.epoch()
+    );
+    client.fit(
+        &names[0],
+        mix.sample(256, &mut rng),
+        &FitSpec::new(EstimatorKind::SdKde, d),
+    )?;
+    let res = client.eval(&names[0], d, queries)?;
+    println!(
+        "re-routed {} to {}: p[0] = {:.6}",
+        names[0],
+        updated.owner(&names[0]).expect("owner"),
+        res.values[0]
+    );
+    Ok(())
+}

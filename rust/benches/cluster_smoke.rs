@@ -1,0 +1,125 @@
+//! `cargo bench --bench cluster_smoke` — loopback multi-node smoke
+//! latency: per-query wire latency against a single `serve` worker
+//! directly vs through the consistent-hash router over a 3-worker
+//! cluster (BENCHMARKS.md "Cluster loopback smoke").
+//!
+//! Everything is in-process on 127.0.0.1 ephemeral ports with the native
+//! backend, so this runs on a fresh checkout and in the no-XLA CI leg.
+//! The delta between the two series is the router's forwarding cost (one
+//! extra hop: parse + rendezvous + pooled round-trip), which should stay
+//! small against the kernel time.
+//!
+//! Env overrides: FLASH_SDKDE_CLUSTER_QUERIES (measured queries per
+//! series, default 200), FLASH_SDKDE_CLUSTER_WORKERS (cluster size,
+//! default 3).
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use flash_sdkde::bench_harness::Table;
+use flash_sdkde::config::{Config, RouterConfig};
+use flash_sdkde::coordinator::router::{Router, RouterServer};
+use flash_sdkde::coordinator::server::{Client, Server};
+use flash_sdkde::coordinator::{Coordinator, FitSpec};
+use flash_sdkde::data::mixture::by_dim;
+use flash_sdkde::estimator::EstimatorKind;
+use flash_sdkde::runtime::BackendKind;
+use flash_sdkde::util::rng::Pcg64;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .filter(|&v| v > 0)
+        .unwrap_or(default)
+}
+
+fn worker() -> Result<Server> {
+    let mut cfg = Config::default();
+    cfg.backend = BackendKind::Native;
+    cfg.artifacts_dir = "/nonexistent-flash-sdkde-artifacts".into();
+    cfg.batch_wait_ms = 0;
+    Server::start(Coordinator::start(cfg)?, "127.0.0.1", 0)
+}
+
+/// Fit `models` through `client`, then measure per-query latency round
+/// robin over them; returns (mean_ms, p50_ms, p95_ms).
+fn measure_series(
+    client: &mut Client,
+    models: &[String],
+    d: usize,
+    queries: usize,
+) -> Result<(f64, f64, f64)> {
+    let mix = by_dim(d);
+    let mut rng = Pcg64::seeded(5);
+    for name in models {
+        client.fit(name, mix.sample(512, &mut rng), &FitSpec::new(EstimatorKind::Kde, d))?;
+    }
+    let points = mix.sample(8, &mut rng);
+    // Warmup: touch every model once (prepare cache + connection pool).
+    for name in models {
+        client.eval(name, d, points.clone())?;
+    }
+    let mut samples = Vec::with_capacity(queries);
+    for i in 0..queries {
+        let name = &models[i % models.len()];
+        let start = Instant::now();
+        client.eval(name, d, points.clone())?;
+        samples.push(start.elapsed().as_secs_f64() * 1e3);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let pct = |p: f64| samples[((samples.len() - 1) as f64 * p) as usize];
+    Ok((mean, pct(0.50), pct(0.95)))
+}
+
+fn main() -> Result<()> {
+    let queries = env_usize("FLASH_SDKDE_CLUSTER_QUERIES", 200);
+    let n_workers = env_usize("FLASH_SDKDE_CLUSTER_WORKERS", 3);
+    let d = 2;
+    let models: Vec<String> = (0..6).map(|i| format!("smoke-{i}")).collect();
+
+    // Series 1: one worker, direct connection.
+    let single = worker()?;
+    let mut direct = Client::connect(single.local_addr())?;
+    let (d_mean, d_p50, d_p95) = measure_series(&mut direct, &models, d, queries)?;
+
+    // Series 2: n workers behind the router.
+    let workers: Vec<Server> =
+        (0..n_workers).map(|_| worker()).collect::<Result<_>>()?;
+    let mut cfg = RouterConfig::default();
+    cfg.nodes = workers.iter().map(|w| w.local_addr().to_string()).collect();
+    cfg.connect_timeout_ms = 500;
+    let router_server = RouterServer::start(Router::new(cfg)?, "127.0.0.1", 0)?;
+    let mut routed = Client::connect(router_server.local_addr())?;
+    let (r_mean, r_p50, r_p95) = measure_series(&mut routed, &models, d, queries)?;
+
+    let mut table = Table::new(
+        "cluster loopback smoke: direct single node vs routed cluster \
+         (per-query wire latency, ms)",
+        &["series", "nodes", "queries", "mean_ms", "p50_ms", "p95_ms"],
+    );
+    table.row(vec![
+        "direct".into(),
+        "1".into(),
+        queries.to_string(),
+        format!("{d_mean:.4}"),
+        format!("{d_p50:.4}"),
+        format!("{d_p95:.4}"),
+    ]);
+    table.row(vec![
+        "routed".into(),
+        n_workers.to_string(),
+        queries.to_string(),
+        format!("{r_mean:.4}"),
+        format!("{r_p50:.4}"),
+        format!("{r_p95:.4}"),
+    ]);
+    table.note(
+        "routed - direct = router forwarding overhead (parse + rendezvous \
+         + pooled hop); kernels are identical on both paths",
+    );
+    table.emit("cluster_smoke");
+    Ok(())
+}

@@ -198,6 +198,75 @@ impl Config {
     }
 }
 
+/// Everything the `route` subcommand needs: where to bind, which worker
+/// nodes to hash over, and the failure-bounding knobs (connect/read
+/// timeouts, retry budget) that keep a dead node a fast typed error
+/// instead of a hang (DESIGN.md §12).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RouterConfig {
+    /// TCP bind address for the router front-end.
+    pub host: String,
+    /// TCP port for the router front-end.
+    pub port: u16,
+    /// Worker addresses (`host:port`) forming the initial node table.
+    pub nodes: Vec<String>,
+    /// Per-node TCP connect timeout in milliseconds.
+    pub connect_timeout_ms: u64,
+    /// Per-read reply timeout in milliseconds on node connections (bounds
+    /// each read syscall, so it must exceed the slowest expected fit).
+    pub request_timeout_ms: u64,
+    /// Bounded retry budget per forwarded frame (attempts = retries + 1).
+    /// Retries cover transient transport failures; a node still failing
+    /// afterwards is a typed `unavailable` error (epoch re-enrollment
+    /// does not consume the budget).
+    pub retries: usize,
+    /// Node-table epoch to start at (>= 1).  A *restarted* router must
+    /// resume the fleet's epoch lineage — workers only ever advance, so
+    /// restarting at 1 against workers enrolled at a higher epoch would
+    /// reject every frame as stale with no recovery.  Set it to the last
+    /// known fleet epoch (or higher); fresh fleets keep the default 1.
+    pub initial_epoch: u64,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            host: "127.0.0.1".to_string(),
+            port: 7575,
+            nodes: Vec::new(),
+            connect_timeout_ms: 1_000,
+            request_timeout_ms: 30_000,
+            retries: 2,
+            initial_epoch: 1,
+        }
+    }
+}
+
+impl RouterConfig {
+    /// Sanity constraints (the node table itself re-validates membership:
+    /// duplicates and empty addresses are rejected there too).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.nodes.is_empty() {
+            return Err("router needs at least one node (--nodes)".to_string());
+        }
+        if self.nodes.iter().any(|n| n.trim().is_empty()) {
+            return Err("router node addresses must be non-empty".to_string());
+        }
+        if self.connect_timeout_ms == 0 {
+            return Err("connect_timeout_ms must be >= 1".to_string());
+        }
+        if self.request_timeout_ms == 0 {
+            return Err("request_timeout_ms must be >= 1".to_string());
+        }
+        if self.initial_epoch == 0 {
+            return Err(
+                "initial_epoch must be >= 1 (0 means unenrolled)".to_string()
+            );
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -205,6 +274,29 @@ mod tests {
     #[test]
     fn defaults_validate() {
         Config::default().validate().unwrap();
+    }
+
+    #[test]
+    fn router_config_validates() {
+        let mut rc = RouterConfig::default();
+        assert!(rc.validate().is_err(), "empty node list rejected");
+        rc.nodes = vec!["127.0.0.1:7474".into()];
+        rc.validate().unwrap();
+        rc.retries = 0;
+        rc.validate().unwrap(); // zero retries = exactly one attempt
+        rc.nodes.push("  ".into());
+        assert!(rc.validate().is_err(), "blank node address rejected");
+        rc.nodes.pop();
+        rc.connect_timeout_ms = 0;
+        assert!(rc.validate().is_err(), "unbounded connect rejected");
+        rc.connect_timeout_ms = 1;
+        rc.request_timeout_ms = 0;
+        assert!(rc.validate().is_err(), "unbounded read rejected");
+        rc.request_timeout_ms = 1;
+        rc.initial_epoch = 0;
+        assert!(rc.validate().is_err(), "unenrolled sentinel epoch rejected");
+        rc.initial_epoch = 7; // router restart resumes the fleet lineage
+        rc.validate().unwrap();
     }
 
     #[test]

@@ -33,9 +33,11 @@ pub mod metrics;
 pub mod protocol;
 pub mod registry;
 pub mod request;
+pub mod router;
 pub mod scheduler;
 pub mod server;
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -136,6 +138,10 @@ pub struct Coordinator {
     metrics: Arc<Metrics>,
     queue: Arc<BoundedQueue<QueryJob>>,
     dispatcher: Option<JoinHandle<()>>,
+    /// Routing-table epoch this worker is enrolled at (multi-node
+    /// serving, DESIGN.md §12).  0 = unenrolled: frames are accepted
+    /// regardless of their epoch stamp until a router pushes `set_epoch`.
+    routing_epoch: AtomicU64,
 }
 
 impl Coordinator {
@@ -145,7 +151,14 @@ impl Coordinator {
     pub fn start(cfg: Config) -> Result<Coordinator> {
         let manifest =
             crate::runtime::backend::resolve_manifest(cfg.backend, &cfg.artifacts_dir)?;
-        let engine = Engine::start(manifest, cfg.engine_workers, cfg.backend)?;
+        // The native prepare cache is sized from the registry capacity so
+        // every resident model can keep its prepared form (DESIGN.md §11).
+        let engine = Engine::start(
+            manifest,
+            cfg.engine_workers,
+            cfg.backend,
+            cfg.registry_capacity,
+        )?;
         Self::with_engine(cfg, engine)
     }
 
@@ -189,7 +202,22 @@ impl Coordinator {
             metrics,
             queue,
             dispatcher: Some(dispatcher),
+            routing_epoch: AtomicU64::new(0),
         })
+    }
+
+    /// The routing-table epoch this worker is enrolled at (0 before any
+    /// router pushed `set_epoch`).
+    pub fn routing_epoch(&self) -> u64 {
+        self.routing_epoch.load(Ordering::SeqCst)
+    }
+
+    /// Enroll at a routing-table epoch.  Epochs only advance — a racing
+    /// or stale router can never roll a worker back to an older table —
+    /// and the resulting epoch is returned.
+    pub fn set_routing_epoch(&self, epoch: u64) -> u64 {
+        self.routing_epoch.fetch_max(epoch, Ordering::SeqCst);
+        self.routing_epoch()
     }
 
     /// The configuration this coordinator booted with.

@@ -26,6 +26,16 @@
 //! working; pre-v2 *binary* clients must upgrade, since responses are
 //! always emitted in the current shape.  Responses mirror the request
 //! kinds; every response carries `"ok":bool` and `"v"`.
+//!
+//! **Routing epoch** (multi-node serving, DESIGN.md §12): model-addressed
+//! frames (`fit`, `query`, `delete`) may carry an optional `"epoch": N`
+//! stamped by a router from its node-table version, and
+//! `{"v":2,"op":"set_epoch","epoch":N}` enrolls a worker at a table
+//! version.  A frame whose epoch does not match the receiver's enrolled
+//! epoch is answered with the typed [`Response::StaleEpoch`] rejection —
+//! a stale router table can never silently misroute.  The field is
+//! optional and additive, so direct clients (and v1 senders) are
+//! unaffected; the protocol version stays 2.
 
 use anyhow::{anyhow, bail, Result};
 
@@ -37,6 +47,14 @@ use super::{FitInfo, QueryResult};
 
 /// Highest protocol version this build speaks.
 pub const PROTOCOL_VERSION: usize = 2;
+
+/// Ceiling on routing epochs accepted from the wire.  Keeps the headroom
+/// for `NodeTable`'s `epoch += 1` membership bumps astronomically large
+/// (2^63 changes) even after enrolling at the maximum, so epoch
+/// arithmetic can never overflow — a hostile or buggy sender cannot
+/// inject `u64::MAX` and wedge the arithmetic.  (Also comfortably inside
+/// the JSON layer's exact-integer range.)
+pub const MAX_EPOCH: u64 = 1 << 52;
 
 /// Parsed client request — a thin envelope around the shared typed specs.
 #[derive(Debug, Clone, PartialEq)]
@@ -51,6 +69,8 @@ pub enum Request {
         spec: FitSpec,
         /// Row-major `[n, spec.d]`.
         points: Vec<f32>,
+        /// Routing-epoch stamp (routers only; `None` for direct clients).
+        epoch: Option<u64>,
     },
     /// Evaluate a fitted model (any output mode).
     Query {
@@ -61,6 +81,8 @@ pub enum Request {
         d: usize,
         /// Query points + output mode.
         spec: QuerySpec,
+        /// Routing-epoch stamp (routers only; `None` for direct clients).
+        epoch: Option<u64>,
     },
     /// List resident model names.
     Models,
@@ -70,6 +92,15 @@ pub enum Request {
     Delete {
         /// Name of the model to delete.
         model: String,
+        /// Routing-epoch stamp (routers only; `None` for direct clients).
+        epoch: Option<u64>,
+    },
+    /// Enroll the receiving worker at a routing-table epoch (router →
+    /// worker; epochs only advance — see `Coordinator::set_routing_epoch`).
+    SetEpoch {
+        /// The router's node-table version (>= 1; 0 means "unenrolled"
+        /// and is rejected at parse time).
+        epoch: u64,
     },
 }
 
@@ -109,6 +140,21 @@ pub enum Response {
         model: String,
         /// Whether a model by that name was resident.
         existed: bool,
+    },
+    /// Reply to [`Request::SetEpoch`]: the worker is now enrolled.
+    EpochOk {
+        /// The epoch the worker is enrolled at after this request.
+        epoch: u64,
+    },
+    /// Typed routing rejection: the frame's epoch does not match the
+    /// receiver's enrolled epoch.  Routers react by re-enrolling (worker
+    /// behind) or by refusing to serve from a stale table (worker ahead)
+    /// — never by silently misrouting.
+    StaleEpoch {
+        /// The epoch the receiver is enrolled at.
+        expected: u64,
+        /// The epoch the offending frame carried.
+        got: u64,
     },
     /// Any failure, as a displayable message.
     Error {
@@ -179,7 +225,53 @@ fn req_model(v: &Value) -> Result<String> {
         .ok_or_else(|| anyhow!("missing 'model'"))
 }
 
+/// Extract the optional routing-epoch stamp (`None` when absent; epoch 0
+/// is the "unenrolled" sentinel and never valid on the wire; values
+/// above [`MAX_EPOCH`] are rejected so epoch arithmetic cannot be
+/// overflowed from the wire).
+fn parse_epoch(v: &Value) -> Result<Option<u64>> {
+    match v.get("epoch") {
+        None => Ok(None),
+        Some(x) => {
+            let e = x
+                .as_usize()
+                .ok_or_else(|| anyhow!("'epoch' must be a non-negative integer"))?
+                as u64;
+            if e == 0 {
+                bail!("'epoch' must be >= 1 (0 means unenrolled)");
+            }
+            if e > MAX_EPOCH {
+                bail!("'epoch' {e} exceeds the maximum {MAX_EPOCH}");
+            }
+            Ok(Some(e))
+        }
+    }
+}
+
 impl Request {
+    /// The model name this request routes by — `Some` for the
+    /// model-addressed ops (`fit`, `query`, `delete`), `None` for the
+    /// connection-scoped ones.  Routers hash this key over the node table.
+    pub fn model_key(&self) -> Option<&str> {
+        match self {
+            Request::Fit { model, .. }
+            | Request::Query { model, .. }
+            | Request::Delete { model, .. } => Some(model),
+            _ => None,
+        }
+    }
+
+    /// The routing-epoch stamp this frame carries, if any.
+    pub fn epoch(&self) -> Option<u64> {
+        match self {
+            Request::Fit { epoch, .. }
+            | Request::Query { epoch, .. }
+            | Request::Delete { epoch, .. } => *epoch,
+            Request::SetEpoch { epoch } => Some(*epoch),
+            _ => None,
+        }
+    }
+
     /// Parse one wire line (any supported version).
     pub fn parse(line: &str) -> Result<Request> {
         let v = json::parse(line).map_err(|e| anyhow!("bad json: {e}"))?;
@@ -192,7 +284,15 @@ impl Request {
             "ping" => Ok(Request::Ping),
             "models" => Ok(Request::Models),
             "stats" => Ok(Request::Stats),
-            "delete" => Ok(Request::Delete { model: req_model(&v)? }),
+            "set_epoch" => {
+                let epoch = parse_epoch(&v)?
+                    .ok_or_else(|| anyhow!("missing 'epoch'"))?;
+                Ok(Request::SetEpoch { epoch })
+            }
+            "delete" => Ok(Request::Delete {
+                model: req_model(&v)?,
+                epoch: parse_epoch(&v)?,
+            }),
             "fit" => {
                 let estimator = v
                     .get("estimator")
@@ -229,7 +329,12 @@ impl Request {
                         .ok_or_else(|| anyhow!("unknown variant {name:?}"))?;
                     spec = spec.variant(variant);
                 }
-                Ok(Request::Fit { model: req_model(&v)?, spec, points })
+                Ok(Request::Fit {
+                    model: req_model(&v)?,
+                    spec,
+                    points,
+                    epoch: parse_epoch(&v)?,
+                })
             }
             "query" | "eval" | "grad" => {
                 let mode = match op {
@@ -263,7 +368,12 @@ impl Request {
                     bail!("points rows must be non-empty");
                 }
                 let (points, _k) = parse_points(v.get("points").unwrap(), d)?;
-                Ok(Request::Query { model, d, spec: QuerySpec::new(points, mode) })
+                Ok(Request::Query {
+                    model,
+                    d,
+                    spec: QuerySpec::new(points, mode),
+                    epoch: parse_epoch(&v)?,
+                })
             }
             other => bail!("unknown op {other:?}"),
         }
@@ -275,15 +385,28 @@ impl Request {
             fields.insert(0, ("v", Value::from(PROTOCOL_VERSION)));
             Value::object(fields)
         };
+        let stamped = |mut fields: Vec<(&str, Value)>, epoch: &Option<u64>| {
+            if let Some(e) = epoch {
+                fields.push(("epoch", Value::from(*e)));
+            }
+            fields
+        };
         let v = match self {
             Request::Ping => versioned(vec![("op", "ping".into())]),
             Request::Models => versioned(vec![("op", "models".into())]),
             Request::Stats => versioned(vec![("op", "stats".into())]),
-            Request::Delete { model } => versioned(vec![
-                ("op", "delete".into()),
-                ("model", model.as_str().into()),
+            Request::SetEpoch { epoch } => versioned(vec![
+                ("op", "set_epoch".into()),
+                ("epoch", Value::from(*epoch)),
             ]),
-            Request::Fit { model, spec, points } => {
+            Request::Delete { model, epoch } => versioned(stamped(
+                vec![
+                    ("op", "delete".into()),
+                    ("model", model.as_str().into()),
+                ],
+                epoch,
+            )),
+            Request::Fit { model, spec, points, epoch } => {
                 let mut fields = vec![
                     ("op", Value::from("fit")),
                     ("model", model.as_str().into()),
@@ -300,14 +423,17 @@ impl Request {
                 if let Some(variant) = spec.variant {
                     fields.push(("variant", variant.as_str().into()));
                 }
-                versioned(fields)
+                versioned(stamped(fields, epoch))
             }
-            Request::Query { model, d, spec } => versioned(vec![
-                ("op", "query".into()),
-                ("model", model.as_str().into()),
-                ("mode", spec.mode.as_str().into()),
-                ("points", points_to_json(&spec.points, *d)),
-            ]),
+            Request::Query { model, d, spec, epoch } => versioned(stamped(
+                vec![
+                    ("op", "query".into()),
+                    ("model", model.as_str().into()),
+                    ("mode", spec.mode.as_str().into()),
+                    ("points", points_to_json(&spec.points, *d)),
+                ],
+                epoch,
+            )),
         };
         json::to_string(&v)
     }
@@ -374,6 +500,29 @@ impl Response {
                 ("model", model.as_str().into()),
                 ("existed", (*existed).into()),
             ]),
+            Response::EpochOk { epoch } => versioned(vec![
+                ("op", "set_epoch".into()),
+                ("epoch", Value::from(*epoch)),
+            ]),
+            Response::StaleEpoch { expected, got } => Value::object(vec![
+                ("ok", false.into()),
+                ("v", Value::from(PROTOCOL_VERSION)),
+                (
+                    "error",
+                    format!(
+                        "stale routing epoch: frame carries {got}, node is \
+                         enrolled at {expected}"
+                    )
+                    .into(),
+                ),
+                (
+                    "stale_epoch",
+                    Value::object(vec![
+                        ("expected", Value::from(*expected)),
+                        ("got", Value::from(*got)),
+                    ]),
+                ),
+            ]),
             Response::Error { message } => Value::object(vec![
                 ("ok", false.into()),
                 ("v", Value::from(PROTOCOL_VERSION)),
@@ -391,6 +540,18 @@ impl Response {
             .and_then(Value::as_bool)
             .ok_or_else(|| anyhow!("missing 'ok'"))?;
         if !ok {
+            if let Some(se) = v.get("stale_epoch") {
+                let field = |k: &str| -> Result<u64> {
+                    se.get(k)
+                        .and_then(Value::as_usize)
+                        .map(|e| e as u64)
+                        .ok_or_else(|| anyhow!("stale_epoch missing '{k}'"))
+                };
+                return Ok(Response::StaleEpoch {
+                    expected: field("expected")?,
+                    got: field("got")?,
+                });
+            }
             let message = v
                 .get("error")
                 .and_then(Value::as_str)
@@ -487,6 +648,9 @@ impl Response {
                     .and_then(Value::as_bool)
                     .unwrap_or(false),
             }),
+            Some("set_epoch") => Ok(Response::EpochOk {
+                epoch: field_usize(&v, "epoch")? as u64,
+            }),
             other => bail!("unknown response op {other:?}"),
         }
     }
@@ -516,6 +680,7 @@ mod tests {
                 .bandwidth(0.5)
                 .variant(Variant::Flash),
             points: vec![1.0, 2.0, 3.0, 4.0],
+            epoch: None,
         };
         let line = req.to_line();
         assert!(line.contains("\"v\":2"), "{line}");
@@ -530,10 +695,93 @@ mod tests {
                 model: "m1".into(),
                 d: 2,
                 spec: QuerySpec::new(vec![0.5, -1.5, 2.0, 0.0], mode),
+                epoch: None,
             };
             let back = Request::parse(&req.to_line()).unwrap();
             assert_eq!(req, back, "mode {mode}");
         }
+    }
+
+    #[test]
+    fn epoch_stamped_requests_round_trip() {
+        // Routed frames: the optional routing epoch must survive the wire
+        // on every model-addressed op, and stay absent when unset.
+        let cases = vec![
+            Request::Fit {
+                model: "m".into(),
+                spec: FitSpec::new(EstimatorKind::Kde, 1),
+                points: vec![1.0, 2.0],
+                epoch: Some(7),
+            },
+            Request::Query {
+                model: "m".into(),
+                d: 1,
+                spec: QuerySpec::density(vec![0.5]),
+                epoch: Some(3),
+            },
+            Request::Delete { model: "m".into(), epoch: Some(1) },
+            Request::SetEpoch { epoch: 9 },
+        ];
+        for req in cases {
+            let line = req.to_line();
+            assert!(line.contains("\"epoch\":"), "{line}");
+            assert_eq!(Request::parse(&line).unwrap(), req, "{line}");
+            assert_eq!(Request::parse(&line).unwrap().epoch(), req.epoch());
+        }
+        // Unstamped frames carry no epoch field at all.
+        let line = Request::Delete { model: "m".into(), epoch: None }.to_line();
+        assert!(!line.contains("epoch"), "{line}");
+        assert_eq!(Request::parse(&line).unwrap().epoch(), None);
+    }
+
+    #[test]
+    fn model_key_routes_model_addressed_ops_only() {
+        let fit = Request::Fit {
+            model: "a".into(),
+            spec: FitSpec::new(EstimatorKind::Kde, 1),
+            points: vec![0.0, 1.0],
+            epoch: None,
+        };
+        assert_eq!(fit.model_key(), Some("a"));
+        let q = Request::Query {
+            model: "b".into(),
+            d: 1,
+            spec: QuerySpec::density(vec![0.0]),
+            epoch: None,
+        };
+        assert_eq!(q.model_key(), Some("b"));
+        assert_eq!(
+            Request::Delete { model: "c".into(), epoch: None }.model_key(),
+            Some("c")
+        );
+        for req in [Request::Ping, Request::Models, Request::Stats,
+                    Request::SetEpoch { epoch: 1 }] {
+            assert_eq!(req.model_key(), None, "{req:?}");
+        }
+    }
+
+    #[test]
+    fn malformed_epochs_rejected() {
+        for bad in [
+            r#"{"v":2,"op":"set_epoch"}"#,
+            r#"{"v":2,"op":"set_epoch","epoch":0}"#,
+            r#"{"v":2,"op":"set_epoch","epoch":1.5}"#,
+            r#"{"v":2,"op":"set_epoch","epoch":-3}"#,
+            r#"{"v":2,"op":"set_epoch","epoch":"five"}"#,
+            r#"{"v":2,"op":"delete","model":"m","epoch":0}"#,
+            r#"{"v":2,"op":"query","model":"m","points":[[1]],"epoch":"x"}"#,
+            r#"{"v":2,"op":"fit","model":"m","d":1,"points":[[1],[2]],"epoch":2.5}"#,
+            // Above MAX_EPOCH (2^52): rejected so epoch arithmetic can
+            // never overflow and wire integers stay f64-exact.
+            r#"{"v":2,"op":"set_epoch","epoch":9007199254740992}"#,
+        ] {
+            assert!(Request::parse(bad).is_err(), "accepted: {bad}");
+        }
+        // The ceiling itself is accepted.
+        assert!(Request::parse(
+            &format!(r#"{{"v":2,"op":"set_epoch","epoch":{MAX_EPOCH}}}"#)
+        )
+        .is_ok());
     }
 
     #[test]
@@ -549,6 +797,7 @@ mod tests {
                 model: "m".into(),
                 d: 2,
                 spec: QuerySpec::density(vec![1.0, 2.0]),
+                epoch: None,
             }
         );
         let req = Request::parse(
@@ -561,6 +810,7 @@ mod tests {
                 model: "m".into(),
                 d: 1,
                 spec: QuerySpec::grad(vec![1.0]),
+                epoch: None,
             }
         );
     }
@@ -576,7 +826,7 @@ mod tests {
     #[test]
     fn simple_ops_round_trip() {
         for req in [Request::Ping, Request::Models, Request::Stats,
-                    Request::Delete { model: "x".into() }] {
+                    Request::Delete { model: "x".into(), epoch: None }] {
             assert_eq!(Request::parse(&req.to_line()).unwrap(), req);
         }
     }
@@ -642,6 +892,8 @@ mod tests {
             },
             Response::Models { names: vec!["a".into(), "b".into()] },
             Response::Deleted { model: "m".into(), existed: true },
+            Response::EpochOk { epoch: 4 },
+            Response::StaleEpoch { expected: 5, got: 3 },
             Response::Error { message: "boom".into() },
         ];
         for r in cases {

@@ -7,11 +7,16 @@
 //! lines newer than it speaks, and [`Client::connect`] pings first,
 //! refusing servers too old to parse the dialect this client emits.
 //!
+//! The accept/connection machinery is factored into `LineServer` (crate
+//! internal), a handler-generic line-protocol front-end shared with the
+//! multi-node router ([`super::router::RouterServer`]) — both speak the
+//! same frames, so they share the same transport loop.
+//!
 //! Also provides [`Client`], the matching blocking client used by the
-//! examples, the CLI and the integration tests.  Besides the one-call
-//! round-trip helpers, `Client::submit` / `Client::recv` expose the
-//! pipelined path: write several request lines back-to-back, then collect
-//! the replies in order.
+//! examples, the CLI, the router's per-node connection pool and the
+//! integration tests.  Besides the one-call round-trip helpers,
+//! `Client::submit` / `Client::recv` expose the pipelined path: write
+//! several request lines back-to-back, then collect the replies in order.
 
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
@@ -27,39 +32,86 @@ use super::request::{FitSpec, QuerySpec};
 use super::{Coordinator, FitInfo, QueryResult};
 use crate::{log_info, log_warn};
 
-/// A running TCP server bound to a local address.
-pub struct Server {
-    coordinator: Arc<Coordinator>,
+/// One wire line in, one response out — what a [`LineServer`] serves.
+pub(crate) type LineHandler = Arc<dyn Fn(&str) -> Response + Send + Sync>;
+
+/// Handler-generic TCP line server: binds, accepts, spawns one thread per
+/// connection, answers each request line with `handler`'s response line.
+/// The coordinator's [`Server`] and the router's
+/// [`super::router::RouterServer`] are thin wrappers over this.
+pub(crate) struct LineServer {
     local_addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
     accept_thread: Option<JoinHandle<()>>,
 }
 
-impl Server {
+impl LineServer {
     /// Bind and start accepting.  Use port 0 for an ephemeral port (tests).
-    pub fn start(coordinator: Coordinator, host: &str, port: u16) -> Result<Server> {
+    pub(crate) fn start(
+        host: &str,
+        port: u16,
+        name: &'static str,
+        handler: LineHandler,
+    ) -> Result<LineServer> {
         let listener = TcpListener::bind((host, port))
             .with_context(|| format!("binding {host}:{port}"))?;
         let local_addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
-        let coordinator = Arc::new(coordinator);
 
         let accept_thread = {
-            let coordinator = Arc::clone(&coordinator);
             let stop = Arc::clone(&stop);
             std::thread::Builder::new()
                 .name("acceptor".into())
-                .spawn(move || accept_loop(listener, coordinator, stop))
+                .spawn(move || accept_loop(name, listener, handler, stop))
                 .context("spawning acceptor")?
         };
-        log_info!("server", "listening on {local_addr} (protocol v{PROTOCOL_VERSION})");
-        Ok(Server { coordinator, local_addr, stop, accept_thread: Some(accept_thread) })
+        log_info!(name, "listening on {local_addr} (protocol v{PROTOCOL_VERSION})");
+        Ok(LineServer { local_addr, stop, accept_thread: Some(accept_thread) })
+    }
+
+    /// The bound listen address (real port for port-0 binds).
+    pub(crate) fn local_addr(&self) -> std::net::SocketAddr {
+        self.local_addr
+    }
+
+    /// Stop accepting and join the acceptor (open connections finish their
+    /// in-flight request and then see EOF-ish errors).
+    pub(crate) fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for LineServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// A running TCP server bound to a local address.
+pub struct Server {
+    coordinator: Arc<Coordinator>,
+    inner: LineServer,
+}
+
+impl Server {
+    /// Bind and start accepting.  Use port 0 for an ephemeral port (tests).
+    pub fn start(coordinator: Coordinator, host: &str, port: u16) -> Result<Server> {
+        let coordinator = Arc::new(coordinator);
+        let handler: LineHandler = {
+            let coordinator = Arc::clone(&coordinator);
+            Arc::new(move |line: &str| handle_line(&coordinator, line))
+        };
+        let inner = LineServer::start(host, port, "server", handler)?;
+        Ok(Server { coordinator, inner })
     }
 
     /// The bound listen address (real port for port-0 binds).
     pub fn local_addr(&self) -> std::net::SocketAddr {
-        self.local_addr
+        self.inner.local_addr()
     }
 
     /// The coordinator this server fronts.
@@ -70,47 +122,39 @@ impl Server {
     /// Stop accepting and join the acceptor (open connections finish their
     /// in-flight request and then see EOF-ish errors).
     pub fn shutdown(&mut self) {
-        self.stop.store(true, Ordering::SeqCst);
-        if let Some(t) = self.accept_thread.take() {
-            let _ = t.join();
-        }
-    }
-}
-
-impl Drop for Server {
-    fn drop(&mut self) {
-        self.shutdown();
+        self.inner.shutdown();
     }
 }
 
 fn accept_loop(
+    name: &'static str,
     listener: TcpListener,
-    coordinator: Arc<Coordinator>,
+    handler: LineHandler,
     stop: Arc<AtomicBool>,
 ) {
     let mut conn_threads: Vec<JoinHandle<()>> = Vec::new();
     while !stop.load(Ordering::SeqCst) {
         match listener.accept() {
             Ok((stream, peer)) => {
-                log_info!("server", "connection from {peer}");
-                let coordinator = Arc::clone(&coordinator);
+                log_info!(name, "connection from {peer}");
+                let handler = Arc::clone(&handler);
                 let stop = Arc::clone(&stop);
                 match std::thread::Builder::new()
                     .name(format!("conn-{peer}"))
                     .spawn(move || {
-                        if let Err(e) = connection_loop(stream, &coordinator, &stop) {
-                            log_warn!("server", "connection {peer}: {e:#}");
+                        if let Err(e) = connection_loop(stream, &handler, &stop) {
+                            log_warn!(name, "connection {peer}: {e:#}");
                         }
                     }) {
                     Ok(t) => conn_threads.push(t),
-                    Err(e) => log_warn!("server", "spawn failed: {e}"),
+                    Err(e) => log_warn!(name, "spawn failed: {e}"),
                 }
             }
             Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                 std::thread::sleep(Duration::from_millis(10));
             }
             Err(e) => {
-                log_warn!("server", "accept error: {e}");
+                log_warn!(name, "accept error: {e}");
                 break;
             }
         }
@@ -119,12 +163,12 @@ fn accept_loop(
     for t in conn_threads {
         let _ = t.join();
     }
-    log_info!("server", "acceptor down");
+    log_info!(name, "acceptor down");
 }
 
 fn connection_loop(
     stream: TcpStream,
-    coordinator: &Coordinator,
+    handler: &LineHandler,
     stop: &AtomicBool,
 ) -> Result<()> {
     stream.set_read_timeout(Some(Duration::from_millis(200)))?;
@@ -151,7 +195,7 @@ fn connection_loop(
         if trimmed.is_empty() {
             continue;
         }
-        let response = handle_line(coordinator, trimmed);
+        let response = handler(trimmed);
         writer.write_all(response.to_line().as_bytes())?;
         writer.write_all(b"\n")?;
         writer.flush()?;
@@ -169,6 +213,21 @@ pub fn handle_line(coordinator: &Coordinator, line: &str) -> Response {
     handle_request(coordinator, request)
 }
 
+/// The routing-epoch gate (DESIGN.md §12): a model-addressed frame whose
+/// epoch stamp disagrees with the worker's enrolled epoch is a typed
+/// rejection — a router with a stale node table must never silently fit
+/// or serve a model this worker no longer owns.  Unstamped frames
+/// (direct clients) and unenrolled workers (epoch 0) always pass.
+fn epoch_gate(coordinator: &Coordinator, epoch: Option<u64>) -> Option<Response> {
+    let current = coordinator.routing_epoch();
+    match epoch {
+        Some(e) if current != 0 && e != current => {
+            Some(Response::StaleEpoch { expected: current, got: e })
+        }
+        _ => None,
+    }
+}
+
 /// Serve one typed request.  The wire path resolves model names through
 /// `Coordinator::handle` and then runs the *same* typed specs the
 /// in-process API uses.
@@ -177,17 +236,36 @@ pub fn handle_request(coordinator: &Coordinator, request: Request) -> Response {
         Request::Ping => Response::Pong { version: PROTOCOL_VERSION },
         Request::Models => Response::Models { names: coordinator.registry().names() },
         Request::Stats => Response::Stats { body: coordinator.stats_json() },
-        Request::Delete { model } => {
+        Request::SetEpoch { epoch } => {
+            let current = coordinator.routing_epoch();
+            if epoch < current {
+                // A router trying to enroll us *backwards* is itself
+                // stale; tell it so instead of rolling back.
+                Response::StaleEpoch { expected: current, got: epoch }
+            } else {
+                Response::EpochOk { epoch: coordinator.set_routing_epoch(epoch) }
+            }
+        }
+        Request::Delete { model, epoch } => {
+            if let Some(rejection) = epoch_gate(coordinator, epoch) {
+                return rejection;
+            }
             let existed = coordinator.registry().remove(&model);
             Response::Deleted { model, existed }
         }
-        Request::Fit { model, spec, points } => {
+        Request::Fit { model, spec, points, epoch } => {
+            if let Some(rejection) = epoch_gate(coordinator, epoch) {
+                return rejection;
+            }
             match coordinator.fit(&model, points, &spec) {
                 Ok(handle) => Response::FitOk { info: handle.info() },
                 Err(e) => Response::Error { message: format!("{e:#}") },
             }
         }
-        Request::Query { model, d, spec } => {
+        Request::Query { model, d, spec, epoch } => {
+            if let Some(rejection) = epoch_gate(coordinator, epoch) {
+                return rejection;
+            }
             let Some(handle) = coordinator.handle(&model) else {
                 return Response::Error {
                     message: format!("unknown model {model:?}"),
@@ -230,13 +308,54 @@ impl Client {
     /// Connect and check protocol compatibility via an initial ping.
     pub fn connect<A: ToSocketAddrs>(addr: A) -> Result<Client> {
         let stream = TcpStream::connect(addr).context("connecting")?;
+        Self::handshake(stream)
+    }
+
+    /// Connect with explicit timeouts: `connect` bounds the TCP connect
+    /// per resolved address, `io` bounds every subsequent read/write
+    /// syscall.  The router uses this so a dead node is a fast typed
+    /// error, never a hang; direct CLI/test clients keep the unbounded
+    /// [`Client::connect`].
+    pub fn connect_timeout<A: ToSocketAddrs>(
+        addr: A,
+        connect: Duration,
+        io: Duration,
+    ) -> Result<Client> {
+        let mut last: Option<std::io::Error> = None;
+        let mut stream = None;
+        for resolved in addr.to_socket_addrs().context("resolving address")? {
+            match TcpStream::connect_timeout(&resolved, connect) {
+                Ok(s) => {
+                    stream = Some(s);
+                    break;
+                }
+                Err(e) => last = Some(e),
+            }
+        }
+        let stream = match stream {
+            Some(s) => s,
+            None => {
+                return Err(match last {
+                    Some(e) => anyhow::Error::from(e).context("connecting"),
+                    None => anyhow!("address resolved to no candidates"),
+                })
+            }
+        };
+        stream.set_read_timeout(Some(io))?;
+        stream.set_write_timeout(Some(io))?;
+        Self::handshake(stream)
+    }
+
+    /// Version handshake over a connected stream (shared by both
+    /// constructors).
+    fn handshake(stream: TcpStream) -> Result<Client> {
         stream.set_nodelay(true)?;
         let mut client = Client {
             reader: BufReader::new(stream.try_clone()?),
             writer: BufWriter::new(stream),
             server_version: PROTOCOL_VERSION,
         };
-        match client.round_trip(&Request::Ping)? {
+        match client.request(&Request::Ping)? {
             Response::Pong { version } => {
                 if version < PROTOCOL_VERSION {
                     return Err(anyhow!(
@@ -277,15 +396,31 @@ impl Client {
         Response::parse(response.trim())
     }
 
-    fn round_trip(&mut self, request: &Request) -> Result<Response> {
+    /// One request line in, the matching response line out — the raw
+    /// round-trip every typed helper builds on.  Public so callers that
+    /// forward frames verbatim (the router) need no parallel client.
+    pub fn request(&mut self, request: &Request) -> Result<Response> {
         self.submit(request)?;
         self.recv()
     }
 
     /// Round-trip a ping (version check happens at connect).
     pub fn ping(&mut self) -> Result<()> {
-        match self.round_trip(&Request::Ping)? {
+        match self.request(&Request::Ping)? {
             Response::Pong { .. } => Ok(()),
+            other => Err(anyhow!("unexpected response {other:?}")),
+        }
+    }
+
+    /// Enroll the server at a routing-table epoch (router → worker).
+    /// Returns the epoch the worker ended up at; a worker already ahead
+    /// answers with the typed stale rejection, surfaced here as an error.
+    pub fn set_epoch(&mut self, epoch: u64) -> Result<u64> {
+        match self.request(&Request::SetEpoch { epoch })? {
+            Response::EpochOk { epoch } => Ok(epoch),
+            Response::StaleEpoch { expected, got } => Err(anyhow!(
+                "worker is enrolled at routing epoch {expected}, ahead of {got}"
+            )),
             other => Err(anyhow!("unexpected response {other:?}")),
         }
     }
@@ -301,8 +436,9 @@ impl Client {
             model: model.into(),
             spec: spec.clone(),
             points,
+            epoch: None,
         };
-        match self.round_trip(&req)? {
+        match self.request(&req)? {
             Response::FitOk { info } => Ok(info),
             Response::Error { message } => Err(anyhow!(message)),
             other => Err(anyhow!("unexpected response {other:?}")),
@@ -316,8 +452,8 @@ impl Client {
         d: usize,
         spec: QuerySpec,
     ) -> Result<QueryResult> {
-        let req = Request::Query { model: model.into(), d, spec };
-        match self.round_trip(&req)? {
+        let req = Request::Query { model: model.into(), d, spec, epoch: None };
+        match self.request(&req)? {
             Response::QueryOk { result, .. } => Ok(result),
             Response::Error { message } => Err(anyhow!(message)),
             other => Err(anyhow!("unexpected response {other:?}")),
@@ -346,7 +482,7 @@ impl Client {
 
     /// List resident model names on the server.
     pub fn models(&mut self) -> Result<Vec<String>> {
-        match self.round_trip(&Request::Models)? {
+        match self.request(&Request::Models)? {
             Response::Models { names } => Ok(names),
             other => Err(anyhow!("unexpected response {other:?}")),
         }
@@ -354,7 +490,7 @@ impl Client {
 
     /// Fetch the server's stats document.
     pub fn stats(&mut self) -> Result<crate::util::json::Value> {
-        match self.round_trip(&Request::Stats)? {
+        match self.request(&Request::Stats)? {
             Response::Stats { body } => Ok(body),
             other => Err(anyhow!("unexpected response {other:?}")),
         }
@@ -362,9 +498,10 @@ impl Client {
 
     /// Delete a model by name; false if it was not resident.
     pub fn delete(&mut self, model: &str) -> Result<bool> {
-        let req = Request::Delete { model: model.into() };
-        match self.round_trip(&req)? {
+        let req = Request::Delete { model: model.into(), epoch: None };
+        match self.request(&req)? {
             Response::Deleted { existed, .. } => Ok(existed),
+            Response::Error { message } => Err(anyhow!(message)),
             other => Err(anyhow!("unexpected response {other:?}")),
         }
     }

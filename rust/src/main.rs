@@ -3,13 +3,16 @@
 //!
 //! Commands:
 //!   serve  — boot the coordinator + TCP server from a config file
+//!   route  — boot a consistent-hash router over `serve` workers
+//!            (multi-node serving, DESIGN.md §12)
 //!   bench  — regenerate a paper table/figure (DESIGN.md §5)
 //!   info   — inspect artifacts/manifest + engine platform
 //!   fit    — client: fit a model on a running server from a CSV-ish file
 //!            (builds a typed FitSpec from the flags)
 //!   eval   — client: query points under a fitted model in any output
 //!            mode (density, log_density, grad)
-//!   stats  — client: dump server stats JSON
+//!   stats  — client: dump server stats JSON (or the router's aggregated
+//!            fleet document when pointed at a router)
 
 use std::path::{Path, PathBuf};
 
@@ -18,7 +21,8 @@ use anyhow::{anyhow, bail, Context, Result};
 #[cfg(feature = "pjrt")]
 use flash_sdkde::bench_harness::experiments::Ctx;
 use flash_sdkde::bench_harness::{self, native_cmp, RunSpec};
-use flash_sdkde::config::Config;
+use flash_sdkde::config::{Config, RouterConfig};
+use flash_sdkde::coordinator::router::{Router, RouterServer};
 use flash_sdkde::coordinator::server::{Client, Server};
 use flash_sdkde::coordinator::{Coordinator, FitSpec, OutputMode, QuerySpec};
 use flash_sdkde::estimator::{EstimatorKind, Variant};
@@ -37,6 +41,26 @@ fn commands() -> Vec<Command> {
                 OptSpec::opt("backend", "execution backend override (pjrt | native)"),
                 OptSpec::opt("port", "TCP port override"),
                 OptSpec::opt("host", "bind host override"),
+                OptSpec::flag("once", "exit after binding (smoke test)"),
+            ],
+        },
+        Command {
+            name: "route",
+            about: "start a consistent-hash router over serve workers",
+            opts: vec![
+                OptSpec::opt_required("nodes",
+                    "comma list of worker addresses (host:port,host:port,...)"),
+                OptSpec::opt_default("host", "bind host", "127.0.0.1"),
+                OptSpec::opt_default("port", "TCP port", "7575"),
+                OptSpec::opt_default("connect-timeout-ms",
+                    "per-node TCP connect timeout", "1000"),
+                OptSpec::opt_default("request-timeout-ms",
+                    "per-read reply timeout on node connections", "30000"),
+                OptSpec::opt_default("retries",
+                    "bounded retry budget per forwarded request", "2"),
+                OptSpec::opt_default("epoch",
+                    "node-table epoch to start at (resume the fleet's \
+                     lineage after a router restart)", "1"),
                 OptSpec::flag("once", "exit after binding (smoke test)"),
             ],
         },
@@ -132,6 +156,7 @@ fn run(args: &[String]) -> Result<()> {
 
     match cmd.name {
         "serve" => cmd_serve(&parsed),
+        "route" => cmd_route(&parsed),
         "bench" => cmd_bench(&parsed),
         "info" => cmd_info(&parsed),
         "fit" => cmd_fit(&parsed),
@@ -169,6 +194,53 @@ fn cmd_serve(p: &cli::Parsed) -> Result<()> {
         return Ok(());
     }
     // Serve until killed.
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_route(p: &cli::Parsed) -> Result<()> {
+    let mut cfg = RouterConfig::default();
+    cfg.nodes = p
+        .get_str_list("nodes")
+        .map_err(|e| anyhow!(e))?
+        .expect("required");
+    if let Some(host) = p.get("host") {
+        cfg.host = host.to_string();
+    }
+    if let Some(port) = p.get_usize("port").map_err(|e| anyhow!(e))? {
+        cfg.port = u16::try_from(port).map_err(|_| anyhow!("port out of range"))?;
+    }
+    if let Some(ms) = p.get_usize("connect-timeout-ms").map_err(|e| anyhow!(e))? {
+        cfg.connect_timeout_ms = ms as u64;
+    }
+    if let Some(ms) = p.get_usize("request-timeout-ms").map_err(|e| anyhow!(e))? {
+        cfg.request_timeout_ms = ms as u64;
+    }
+    if let Some(n) = p.get_usize("retries").map_err(|e| anyhow!(e))? {
+        cfg.retries = n;
+    }
+    if let Some(e) = p.get_usize("epoch").map_err(|e| anyhow!(e))? {
+        cfg.initial_epoch = e as u64;
+    }
+    cfg.validate().map_err(|e| anyhow!(e))?;
+
+    let (host, port) = (cfg.host.clone(), cfg.port);
+    let router = Router::new(cfg)?;
+    let table = router.table();
+    let mut server = RouterServer::start(router, &host, port)?;
+    println!(
+        "flash-sdkde routing on {} over {} nodes (epoch {}): {:?}",
+        server.local_addr(),
+        table.len(),
+        table.epoch(),
+        table.nodes()
+    );
+    if p.flag("once") {
+        server.shutdown();
+        return Ok(());
+    }
+    // Route until killed.
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }

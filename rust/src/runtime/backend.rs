@@ -126,7 +126,15 @@ impl BackendKind {
     /// many sibling backends share this machine (engine workers): the
     /// native backend divides its kernel-thread budget by it so a
     /// multi-worker engine does not oversubscribe the cores.
-    pub fn open(self, manifest: Manifest, pool_peers: usize) -> Result<Box<dyn ExecBackend>> {
+    /// `prepare_cap` bounds the native prepare cache — the coordinator
+    /// passes its `registry_capacity` so every resident model fits
+    /// (PJRT ignores it; its executable cache is keyed by artifact).
+    pub fn open(
+        self,
+        manifest: Manifest,
+        pool_peers: usize,
+        prepare_cap: usize,
+    ) -> Result<Box<dyn ExecBackend>> {
         match self {
             BackendKind::Pjrt => {
                 #[cfg(feature = "pjrt")]
@@ -147,10 +155,10 @@ impl BackendKind {
                 drop(manifest);
                 let threads =
                     (flash::default_threads() / pool_peers.max(1)).max(1);
-                Ok(Box::new(NativeFlash::with_tile(TileConfig {
-                    threads,
-                    ..TileConfig::default()
-                })))
+                Ok(Box::new(NativeFlash::with_tile_and_capacity(
+                    TileConfig { threads, ..TileConfig::default() },
+                    prepare_cap,
+                )))
             }
         }
     }
@@ -203,13 +211,16 @@ struct PrepareSlot {
     prep: Arc<flash::PreparedTrain>,
 }
 
-/// Upper bound on resident prepared models per backend instance.  Matches
-/// the default registry capacity (a deployment raising
-/// `registry_capacity` far beyond this will see prepare misses under
-/// round-robin load wider than the cap — watch `prepare_hits/misses`).
-/// Eviction is least-recently-used: hits refresh their slot, dead slots
-/// are purged before counting.
-const PREPARE_CACHE_CAP: usize = 64;
+/// Default upper bound on resident prepared models per backend instance —
+/// the standalone-constructor fallback, matching the default registry
+/// capacity.  The serving path does better: `Coordinator::start` sizes
+/// the cache from `Config::registry_capacity` (via
+/// [`Engine::start`](super::Engine::start) →
+/// [`BackendKind::open`]), so every resident model can keep its prepared
+/// form and round-robin load over a large registry cannot thrash the
+/// cache.  Eviction is least-recently-used: hits refresh their slot,
+/// dead slots are purged before counting.
+pub const DEFAULT_PREPARE_CAP: usize = 64;
 
 /// The native flash backend: dispatches the manifest pipelines onto the
 /// tiled kernels in [`crate::estimator::flash`].
@@ -225,6 +236,7 @@ pub struct NativeFlash {
     tile: TileConfig,
     stats: StoreStats,
     prepared: Vec<PrepareSlot>,
+    prepare_cap: usize,
 }
 
 impl NativeFlash {
@@ -235,12 +247,30 @@ impl NativeFlash {
 
     /// Pin tile sizes / thread count (conformance + ablation harnesses).
     pub fn with_tile(tile: TileConfig) -> Self {
-        NativeFlash { tile, stats: StoreStats::default(), prepared: Vec::new() }
+        Self::with_tile_and_capacity(tile, DEFAULT_PREPARE_CAP)
+    }
+
+    /// Pin tile configuration *and* the prepare-cache bound.  The engine
+    /// sizes `prepare_cap` from the registry capacity so the cache can
+    /// hold every resident model; a zero cap is clamped to 1 (the cache
+    /// eviction pops the front slot and must never pop an empty vec).
+    pub fn with_tile_and_capacity(tile: TileConfig, prepare_cap: usize) -> Self {
+        NativeFlash {
+            tile,
+            stats: StoreStats::default(),
+            prepared: Vec::new(),
+            prepare_cap: prepare_cap.max(1),
+        }
     }
 
     /// The tile configuration this backend runs.
     pub fn tile(&self) -> &TileConfig {
         &self.tile
+    }
+
+    /// The prepare-cache bound this backend was built with.
+    pub fn prepare_capacity(&self) -> usize {
+        self.prepare_cap
     }
 
     /// Live prepare-cache entries (dead slots purged first).
@@ -291,7 +321,7 @@ impl NativeFlash {
         // Shape consistency was bailed on in execute() before any kernel
         // or prepare runs; the assert in PreparedTrain::new is vestigial.
         let prep = Arc::new(flash::PreparedTrain::new(x.data(), w.data(), d));
-        if self.prepared.len() >= PREPARE_CACHE_CAP {
+        if self.prepared.len() >= self.prepare_cap {
             self.prepared.remove(0);
         }
         self.prepared.push(PrepareSlot {
@@ -621,6 +651,57 @@ mod tests {
         assert_eq!(s.prepare_misses, 2, "one miss per model");
         assert_eq!(s.prepare_hits, 4, "every later touch hits");
         assert_eq!(cached.prepared_len(), 2);
+    }
+
+    #[test]
+    fn prepare_cache_capacity_is_configurable_with_lru_eviction_at_the_bound() {
+        // ISSUE 4 satellite: the cache is sized from `registry_capacity`
+        // (via BackendKind::open), not the fixed 64-slot cap.  Pin the
+        // eviction order at a small bound: a hit must refresh its slot,
+        // so filling past capacity evicts the least-recently-used model,
+        // never the hottest one.
+        let (n, m, d) = (24, 2, 1);
+        let entry = kde_entry(n, m, d);
+        let mut rng = Pcg64::seeded(41);
+        let mut backend =
+            NativeFlash::with_tile_and_capacity(TileConfig::default(), 2);
+        assert_eq!(backend.prepare_capacity(), 2);
+        // Zero caps clamp instead of panicking on evict.
+        assert_eq!(
+            NativeFlash::with_tile_and_capacity(TileConfig::default(), 0)
+                .prepare_capacity(),
+            1
+        );
+
+        let model = |rng: &mut Pcg64| {
+            (
+                Arc::new(HostTensor::matrix(n, d, rng.normal_vec_f32(n * d)).unwrap()),
+                Arc::new(HostTensor::full(vec![n], 1.0)),
+            )
+        };
+        let (xa, wa) = model(&mut rng);
+        let (xb, wb) = model(&mut rng);
+        let (xc, wc) = model(&mut rng);
+        let y = Arc::new(HostTensor::matrix(m, d, rng.normal_vec_f32(m * d)).unwrap());
+        let h = Arc::new(HostTensor::scalar(0.5));
+        let run = |b: &mut NativeFlash, x: &Arc<HostTensor>, w: &Arc<HostTensor>| {
+            let inputs =
+                vec![Arc::clone(x), Arc::clone(w), Arc::clone(&y), Arc::clone(&h)];
+            b.execute(&entry, &inputs).expect("execute");
+        };
+
+        run(&mut backend, &xa, &wa); // miss: cache [a]
+        run(&mut backend, &xb, &wb); // miss: cache [a, b]
+        run(&mut backend, &xa, &wa); // hit refreshes a: LRU order [b, a]
+        run(&mut backend, &xc, &wc); // miss at capacity: evicts b, NOT a
+        assert_eq!(backend.prepared_len(), 2);
+        assert_eq!(backend.stats().prepare_misses, 3);
+        assert_eq!(backend.stats().prepare_hits, 1);
+
+        run(&mut backend, &xa, &wa); // a survived the eviction: hit
+        assert_eq!(backend.stats().prepare_hits, 2, "LRU evicted the hot model");
+        run(&mut backend, &xb, &wb); // b was the LRU victim: miss again
+        assert_eq!(backend.stats().prepare_misses, 4, "b should have been evicted");
     }
 
     #[test]

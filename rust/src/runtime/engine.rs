@@ -78,7 +78,15 @@ impl Drop for EngineInner {
 impl Engine {
     /// Start `workers` threads, each owning its own `backend` instance
     /// (a PJRT client + executable cache, or a native kernel runner).
-    pub fn start(manifest: Manifest, workers: usize, backend: BackendKind) -> Result<Engine> {
+    /// `prepare_cap` bounds each native worker's resident-model prepare
+    /// cache — the coordinator passes its registry capacity so every
+    /// resident model can keep its prepared form (ignored by PJRT).
+    pub fn start(
+        manifest: Manifest,
+        workers: usize,
+        backend: BackendKind,
+        prepare_cap: usize,
+    ) -> Result<Engine> {
         assert!(workers >= 1, "engine needs at least one worker");
         let (tx, rx) = channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
@@ -92,7 +100,10 @@ impl Engine {
             let handle = std::thread::Builder::new()
                 .name(format!("engine-{worker_id}"))
                 .spawn(move || {
-                    worker_loop(worker_id, workers, backend, manifest, rx, ready_tx)
+                    worker_loop(
+                        worker_id, workers, backend, prepare_cap, manifest, rx,
+                        ready_tx,
+                    )
                 })
                 .context("spawning engine worker")?;
             // Surface backend-creation failures at startup, not first use.
@@ -154,11 +165,12 @@ fn worker_loop(
     worker_id: usize,
     pool_size: usize,
     backend: BackendKind,
+    prepare_cap: usize,
     manifest: Manifest,
     rx: Arc<Mutex<Receiver<Job>>>,
     ready: Sender<Result<()>>,
 ) {
-    let mut store = match backend.open(manifest, pool_size) {
+    let mut store = match backend.open(manifest, pool_size, prepare_cap) {
         Ok(s) => {
             let _ = ready.send(Ok(()));
             s

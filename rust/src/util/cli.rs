@@ -106,6 +106,22 @@ impl Parsed {
         }
     }
 
+    /// Comma-separated string list (e.g. `--nodes host:1,host:2`); entries
+    /// are trimmed and must be non-empty.
+    pub fn get_str_list(&self, name: &str) -> Result<Option<Vec<String>>, String> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => {
+                let items: Vec<String> =
+                    s.split(',').map(|part| part.trim().to_string()).collect();
+                if items.iter().any(String::is_empty) {
+                    return Err(format!("--{name}: empty entry in list {s:?}"));
+                }
+                Ok(Some(items))
+            }
+        }
+    }
+
     /// Comma-separated integer list (e.g. `--sizes 512,1024,2048`).
     pub fn get_usize_list(&self, name: &str) -> Result<Option<Vec<usize>>, String> {
         match self.get(name) {
@@ -288,6 +304,27 @@ mod tests {
     fn flag_with_value_rejected() {
         let err = parse(&["--experiment", "x", "--verbose=yes"]).unwrap_err();
         assert!(err.contains("does not take a value"), "{err}");
+    }
+
+    #[test]
+    fn string_list() {
+        let c = Command {
+            name: "route",
+            about: "route",
+            opts: vec![OptSpec::opt("nodes", "worker addresses")],
+        };
+        let args: Vec<String> =
+            vec!["--nodes".into(), "a:1, b:2 ,c:3".into()];
+        let p = parse_args(&c, &args).unwrap();
+        assert_eq!(
+            p.get_str_list("nodes").unwrap().unwrap(),
+            vec!["a:1".to_string(), "b:2".into(), "c:3".into()]
+        );
+        assert_eq!(p.get_str_list("missing").unwrap(), None);
+        let args: Vec<String> = vec!["--nodes".into(), "a:1,,b:2".into()];
+        let p = parse_args(&c, &args).unwrap();
+        let err = p.get_str_list("nodes").unwrap_err();
+        assert!(err.contains("--nodes"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,347 @@
+//! In-process cluster harness (ISSUE 4): N loopback `serve` workers plus
+//! the consistent-hash router, all in one process — the entire multi-node
+//! topology is exercised by `cargo test -q` with **no artifacts and no
+//! real network setup** (everything binds ephemeral 127.0.0.1 ports), so
+//! it runs unconditionally on the no-XLA CI leg.
+//!
+//! Coverage:
+//! * bitwise oracle equality: every eval/grad reply routed through the
+//!   cluster equals a single-node in-process coordinator bit-for-bit;
+//! * deterministic placement: each fit lands exactly on the rendezvous
+//!   owner of its model key, and nowhere else;
+//! * fan-out: `models` is the union, `stats` aggregates per-node docs;
+//! * failure: killing a worker mid-stream yields typed `unavailable`
+//!   errors (bounded, no hang), survivors keep serving, and a table
+//!   update + re-fit re-routes the orphaned keys onto survivors with the
+//!   epoch propagated to every remaining worker.
+//!
+//! Sizes are deliberately small (3 workers, tens of models, <=96 train
+//! points) so the whole file stays seconds in CI.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use flash_sdkde::config::{Config, RouterConfig};
+use flash_sdkde::coordinator::router::{NodeTable, Router, RouterServer};
+use flash_sdkde::coordinator::server::{Client, Server};
+use flash_sdkde::coordinator::{Coordinator, FitSpec};
+use flash_sdkde::data::mixture::by_dim;
+use flash_sdkde::estimator::EstimatorKind;
+use flash_sdkde::runtime::BackendKind;
+use flash_sdkde::util::json::Value;
+use flash_sdkde::util::rng::Pcg64;
+
+fn native_config() -> Config {
+    let mut cfg = Config::default();
+    // Deliberately nonexistent: the manifest must be synthesized.
+    cfg.artifacts_dir = PathBuf::from("/nonexistent-flash-sdkde-artifacts");
+    cfg.backend = BackendKind::Native;
+    cfg.batch_wait_ms = 1;
+    cfg
+}
+
+/// One loopback worker: a native coordinator behind a real TCP server on
+/// an ephemeral port.  Dropping it kills the node (acceptor + connection
+/// threads join, the listener closes), which is how the failure test
+/// "unplugs" a worker.
+struct Worker {
+    addr: String,
+    server: Server,
+}
+
+fn spawn_worker() -> Worker {
+    let coordinator =
+        Coordinator::start(native_config()).expect("native worker needs no artifacts");
+    let server = Server::start(coordinator, "127.0.0.1", 0).expect("worker server");
+    Worker { addr: server.local_addr().to_string(), server }
+}
+
+fn spawn_cluster(n: usize) -> (Vec<Worker>, RouterServer) {
+    let workers: Vec<Worker> = (0..n).map(|_| spawn_worker()).collect();
+    let mut cfg = RouterConfig::default();
+    cfg.nodes = workers.iter().map(|w| w.addr.clone()).collect();
+    cfg.connect_timeout_ms = 500;
+    cfg.request_timeout_ms = 10_000;
+    cfg.retries = 2;
+    let router = Router::new(cfg).expect("router");
+    let router_server =
+        RouterServer::start(router, "127.0.0.1", 0).expect("router server");
+    (workers, router_server)
+}
+
+/// Model names such that every node owns at least `per_node` of them.
+/// Ownership is the pure rendezvous function, so the set is derived from
+/// the table itself rather than hoping a fixed list happens to spread.
+fn names_covering(table: &NodeTable, per_node: usize) -> Vec<String> {
+    let mut owned: HashMap<String, usize> =
+        table.nodes().iter().map(|n| (n.clone(), 0)).collect();
+    let mut names = Vec::new();
+    for i in 0..10_000 {
+        let name = format!("model-{i}");
+        let owner = table.owner(&name).expect("non-empty table").to_string();
+        if owned[&owner] < per_node {
+            *owned.get_mut(&owner).unwrap() += 1;
+            names.push(name);
+        }
+        if owned.values().all(|&c| c >= per_node) {
+            return names;
+        }
+    }
+    panic!("rendezvous hashing never covered all {} nodes", table.len());
+}
+
+fn stat_usize(stats: &Value, path: [&str; 2]) -> Option<usize> {
+    stats.get(path[0]).and_then(|v| v.get(path[1])).and_then(Value::as_usize)
+}
+
+#[test]
+fn cluster_replies_are_bitwise_equal_to_a_single_node_oracle() {
+    let (workers, router_server) = spawn_cluster(3);
+    let table = router_server.router().table();
+    let names = names_covering(&table, 1);
+    assert!(names.len() >= 3, "need at least one model per node");
+
+    // The oracle: one ordinary in-process coordinator, no router, no wire.
+    let oracle = Coordinator::start(native_config()).expect("oracle coordinator");
+    let mut client = Client::connect(router_server.local_addr()).expect("connect");
+    client.ping().expect("router answers ping locally");
+
+    let kinds =
+        [EstimatorKind::Kde, EstimatorKind::SdKde, EstimatorKind::Laplace];
+    let dims = [1usize, 2, 3];
+    let mut rng = Pcg64::seeded(42);
+    for (i, name) in names.iter().enumerate() {
+        let kind = kinds[i % kinds.len()];
+        let d = dims[i % dims.len()];
+        let mix = by_dim(d);
+        let train = mix.sample(96, &mut rng);
+        let queries = mix.sample(5, &mut rng);
+
+        // Fit through the router and on the oracle: identical resolution.
+        let info = client
+            .fit(name, train.clone(), &FitSpec::new(kind, d))
+            .expect("routed fit");
+        let oracle_handle = oracle
+            .fit(name, train, &FitSpec::new(kind, d))
+            .expect("oracle fit");
+        assert_eq!(info.h, oracle_handle.h(), "{name}: bandwidth drifted");
+        assert_eq!(info.h_score, oracle_handle.h_score());
+        assert_eq!(info.bucket_n, oracle_handle.bucket_n());
+
+        // Every routed reply must be bitwise what the single node computes.
+        let routed = client.eval(name, d, queries.clone()).expect("routed eval");
+        let local = oracle.eval(&oracle_handle, queries.clone()).expect("oracle eval");
+        assert_eq!(routed.values, local.values, "{name}: density bits drifted");
+        let routed_g = client.grad(name, d, queries.clone()).expect("routed grad");
+        let local_g = oracle.grad(&oracle_handle, queries).expect("oracle grad");
+        assert_eq!(routed_g.values, local_g.values, "{name}: grad bits drifted");
+
+        // Placement: exactly the rendezvous owner holds the model.
+        let owner = table.owner(name).expect("owner");
+        for worker in &workers {
+            let resident = worker.server.coordinator().handle(name).is_some();
+            assert_eq!(
+                resident,
+                worker.addr == owner,
+                "{name}: wrong residency on {}",
+                worker.addr
+            );
+        }
+    }
+
+    // `models` fans out to the union of all three nodes.
+    let mut expected = names.clone();
+    expected.sort();
+    assert_eq!(client.models().expect("models"), expected);
+
+    // `stats` aggregates one document over the fleet.
+    let stats = client.stats().expect("stats");
+    assert_eq!(stat_usize(&stats, ["router", "nodes"]), Some(3));
+    assert_eq!(stat_usize(&stats, ["router", "reachable"]), Some(3));
+    assert_eq!(stat_usize(&stats, ["totals", "models"]), Some(names.len()));
+    let per_node = stats
+        .get("nodes")
+        .and_then(Value::as_object)
+        .expect("per-node stats object");
+    assert_eq!(per_node.len(), 3);
+    for worker in &workers {
+        let body = per_node.get(&worker.addr).expect("node entry");
+        assert!(
+            body.get("engine").is_some(),
+            "{}: engine stats missing",
+            worker.addr
+        );
+    }
+
+    // Routed deletes land on the owner too.
+    assert!(client.delete(&names[0]).expect("routed delete"));
+    assert!(!client.delete(&names[0]).expect("second delete is a no-op"));
+}
+
+#[test]
+fn worker_death_is_typed_failover_then_reroutes_after_table_update() {
+    let (mut workers, router_server) = spawn_cluster(3);
+    let table = router_server.router().table();
+    let names = names_covering(&table, 2);
+    let d = 1usize;
+    let mix = by_dim(d);
+    let mut rng = Pcg64::seeded(7);
+
+    let mut client = Client::connect(router_server.local_addr()).expect("connect");
+    let mut train_sets: HashMap<String, Vec<f32>> = HashMap::new();
+    for name in &names {
+        let train = mix.sample(64, &mut rng);
+        client
+            .fit(name, train.clone(), &FitSpec::new(EstimatorKind::Kde, d))
+            .expect("fit");
+        train_sets.insert(name.clone(), train);
+    }
+    let queries = mix.sample(4, &mut rng);
+    for name in &names {
+        client.eval(name, d, queries.clone()).expect("pre-kill eval");
+    }
+
+    // Unplug the worker owning names[0], mid-stream: the router still
+    // holds pooled connections to it, and the client keeps querying.
+    let victim_addr = table.owner(&names[0]).expect("owner").to_string();
+    let victim_idx =
+        workers.iter().position(|w| w.addr == victim_addr).expect("victim");
+    drop(workers.remove(victim_idx));
+
+    // Dead node: typed unavailable (bounded retries burned). Live nodes:
+    // still serving, bit-identical to before the failure.
+    for name in &names {
+        let owner = table.owner(name).expect("owner");
+        let result = client.eval(name, d, queries.clone());
+        if owner == victim_addr {
+            let err = format!("{:#}", result.expect_err("dead owner must fail"));
+            assert!(err.contains("unavailable"), "{err}");
+            assert!(err.contains(&victim_addr), "{err}");
+        } else {
+            result.expect("survivor must keep serving through the failure");
+        }
+    }
+
+    // Operator failover: drop the dead node from the table.  Epoch bumps;
+    // surviving keys keep their owner (minimal disruption) and keep
+    // serving — the router transparently re-enrolls pooled connections
+    // at the new epoch under its bounded retry budget.
+    assert!(router_server.router().remove_node(&victim_addr));
+    let updated = router_server.router().table();
+    assert_eq!(updated.epoch(), table.epoch() + 1);
+    assert_eq!(updated.len(), 2);
+    for name in &names {
+        if table.owner(name).expect("owner") != victim_addr {
+            assert_eq!(updated.owner(name), table.owner(name), "{name} moved");
+            client.eval(name, d, queries.clone()).expect("survivor after update");
+        }
+    }
+
+    // Orphaned keys: re-fit through the router, which now lands them on a
+    // survivor; queries follow successfully.
+    for name in &names {
+        if table.owner(name).expect("owner") == victim_addr {
+            let new_owner = updated.owner(name).expect("new owner").to_string();
+            assert_ne!(new_owner, victim_addr);
+            client
+                .fit(
+                    name,
+                    train_sets[name].clone(),
+                    &FitSpec::new(EstimatorKind::Kde, d),
+                )
+                .expect("re-fit after failover");
+            client.eval(name, d, queries.clone()).expect("re-routed eval");
+            let holder = workers.iter().find(|w| w.addr == new_owner).expect("holder");
+            assert!(
+                holder.server.coordinator().handle(name).is_some(),
+                "{name} did not land on its new owner"
+            );
+        }
+    }
+
+    // Every surviving worker served post-update traffic, so every one of
+    // them must have been re-enrolled at the new epoch.
+    for worker in &workers {
+        assert_eq!(
+            worker.server.coordinator().routing_epoch(),
+            updated.epoch(),
+            "{} was not re-enrolled",
+            worker.addr
+        );
+    }
+
+    // The aggregated stats document reflects the shrunken fleet.
+    let stats = client.stats().expect("stats");
+    assert_eq!(stat_usize(&stats, ["router", "nodes"]), Some(2));
+    assert_eq!(stat_usize(&stats, ["router", "reachable"]), Some(2));
+}
+
+#[test]
+fn router_rejects_stale_routers_after_a_table_update() {
+    // Two routers over the same single worker: when router A bumps its
+    // table past router B's, the *worker* (enrolled by A) rejects B's
+    // frames and B surfaces the typed stale-table error instead of
+    // serving from the old topology.
+    let worker = spawn_worker();
+    let second_node = {
+        // A second (never-contacted) member so A's table can shrink.
+        let placeholder =
+            std::net::TcpListener::bind(("127.0.0.1", 0)).expect("bind");
+        let addr = placeholder.local_addr().expect("addr").to_string();
+        drop(placeholder);
+        addr
+    };
+    let make_router = |nodes: Vec<String>| {
+        let mut cfg = RouterConfig::default();
+        cfg.nodes = nodes;
+        cfg.connect_timeout_ms = 500;
+        cfg.request_timeout_ms = 5_000;
+        cfg.retries = 1;
+        Router::new(cfg).expect("router")
+    };
+    let router_a =
+        make_router(vec![worker.addr.clone(), second_node.clone()]);
+    let router_b =
+        make_router(vec![worker.addr.clone(), second_node.clone()]);
+
+    let d = 1usize;
+    let mix = by_dim(d);
+    let mut rng = Pcg64::seeded(11);
+    // A model owned by the live worker under table A (epoch 1).
+    let name = names_covering(&router_a.table(), 1)
+        .into_iter()
+        .find(|n| router_a.table().owner(n) == Some(worker.addr.as_str()))
+        .expect("some key owned by the live worker");
+    let fit_line = flash_sdkde::coordinator::protocol::Request::Fit {
+        model: name.clone(),
+        spec: FitSpec::new(EstimatorKind::Kde, d),
+        points: mix.sample(32, &mut rng),
+        epoch: None,
+    };
+
+    // Both routers serve at epoch 1.
+    match router_a.handle_request(fit_line.clone()) {
+        flash_sdkde::coordinator::protocol::Response::FitOk { .. } => {}
+        other => panic!("router A fit failed: {other:?}"),
+    }
+    assert_eq!(worker.server.coordinator().routing_epoch(), 1);
+
+    // A's table moves on (epoch 2) and A keeps serving...
+    assert!(router_a.remove_node(&second_node));
+    match router_a.handle_request(fit_line.clone()) {
+        flash_sdkde::coordinator::protocol::Response::FitOk { .. } => {}
+        other => panic!("router A post-update fit failed: {other:?}"),
+    }
+    assert_eq!(worker.server.coordinator().routing_epoch(), 2);
+
+    // ...while B (still at epoch 1) is now the stale router: the worker
+    // rejects its stamp and B reports the typed stale-table error rather
+    // than retrying forever or misrouting.
+    match router_b.handle_request(fit_line) {
+        flash_sdkde::coordinator::protocol::Response::Error { message } => {
+            assert!(message.contains("stale"), "{message}");
+            assert!(message.contains(&worker.addr), "{message}");
+        }
+        other => panic!("stale router must fail typed, got {other:?}"),
+    }
+}

@@ -406,6 +406,58 @@ fn prepare_cache_serves_resident_models_through_the_full_path() {
 }
 
 #[test]
+fn prepare_cache_is_sized_from_registry_capacity() {
+    // ISSUE 4 satellite: the native prepare cache used to be a fixed
+    // 64-slot cap regardless of `registry_capacity`; round-robin load
+    // over >64 resident models would then miss on every touch.  Sized
+    // from the registry, a second pass over `capacity`-many resident
+    // models must be all hits.
+    let mut cfg = native_config();
+    cfg.registry_capacity = 80;
+    let coord = Coordinator::start(cfg).expect("coordinator");
+    let engine_stat = |key: &str| -> usize {
+        coord
+            .stats_json()
+            .get("engine")
+            .and_then(|e| e.get(key))
+            .and_then(|v| v.as_usize())
+            .unwrap_or_else(|| panic!("stats missing engine.{key}"))
+    };
+
+    let d = 1;
+    let mut rng = Pcg64::seeded(83);
+    let n_models = 72; // would thrash the old fixed 64-slot cap
+    let mut handles = Vec::new();
+    for i in 0..n_models {
+        let train = rng.normal_vec_f32(8);
+        handles.push(
+            coord
+                .fit(&format!("rc{i}"), train, &FitSpec::new(EstimatorKind::Kde, d))
+                .expect("fit"),
+        );
+    }
+    assert_eq!(coord.registry().len(), n_models, "no evictions expected");
+
+    // First pass prepares each resident model once.
+    for h in &handles {
+        coord.eval(h, vec![0.25]).expect("eval pass 1");
+    }
+    let misses_after_first = engine_stat("prepare_misses");
+    assert_eq!(misses_after_first, n_models);
+    // Second round-robin pass: every touch must hit the cache.
+    for h in &handles {
+        coord.eval(h, vec![0.25]).expect("eval pass 2");
+    }
+    assert_eq!(
+        engine_stat("prepare_misses"),
+        misses_after_first,
+        "round-robin over resident models re-prepared: cache smaller than \
+         the registry"
+    );
+    assert_eq!(engine_stat("prepare_hits"), n_models);
+}
+
+#[test]
 fn wire_protocol_round_trip_on_native_backend() {
     let coord = coordinator();
     let mut server = Server::start(coord, "127.0.0.1", 0).expect("server");

@@ -1,11 +1,18 @@
 //! Failure injection: the runtime and coordinator must fail loudly and
 //! recoverably on corrupt artifacts, missing files and bad manifests —
 //! never with a panic or a silent wrong answer — while the native backend
-//! keeps serving the same workload with no artifacts at all.
+//! keeps serving the same workload with no artifacts at all.  The
+//! multi-node frames get the same treatment: truncated, corrupt and
+//! wrong-epoch lines are typed errors on both the worker and the router
+//! side, and a dead node is a *bounded* typed error, never a hang.
 
 use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
 
-use flash_sdkde::config::Config;
+use flash_sdkde::config::{Config, RouterConfig};
+use flash_sdkde::coordinator::protocol::Response;
+use flash_sdkde::coordinator::router::Router;
+use flash_sdkde::coordinator::server::handle_line;
 use flash_sdkde::coordinator::{Coordinator, FitSpec};
 use flash_sdkde::estimator::EstimatorKind;
 use flash_sdkde::runtime::{BackendKind, Manifest};
@@ -178,6 +185,190 @@ fn garbage_hlo_text_fails_cleanly() {
     let err = store.warm(&entry).unwrap_err();
     // Parse or compile error, never a panic.
     assert!(!format!("{err:#}").is_empty());
+}
+
+#[test]
+fn worker_rejects_truncated_corrupt_and_wrong_epoch_frames() {
+    // ISSUE 4 satellite: router-frame fuzz coverage, worker side.  Every
+    // bad line must come back as a typed response — parse failures as
+    // `Error`, epoch mismatches as the machine-readable `StaleEpoch` —
+    // and never panic the connection handler.
+    let dir = temp_dir("epoch-worker");
+    let coord = Coordinator::start(config_for(&dir, BackendKind::Native))
+        .expect("native worker");
+
+    // Unenrolled (epoch 0): stamped frames pass the gate regardless.
+    match handle_line(&coord, r#"{"v":2,"op":"delete","model":"x","epoch":9}"#) {
+        Response::Deleted { existed, .. } => assert!(!existed),
+        other => panic!("unenrolled worker must serve stamped frames: {other:?}"),
+    }
+
+    // Enroll at epoch 5.
+    match handle_line(&coord, r#"{"v":2,"op":"set_epoch","epoch":5}"#) {
+        Response::EpochOk { epoch } => assert_eq!(epoch, 5),
+        other => panic!("expected EpochOk, got {other:?}"),
+    }
+    assert_eq!(coord.routing_epoch(), 5);
+
+    // A frame stamped with the wrong epoch is the typed rejection, with
+    // both epochs machine-readable.
+    match handle_line(&coord, r#"{"v":2,"op":"delete","model":"x","epoch":3}"#) {
+        Response::StaleEpoch { expected, got } => {
+            assert_eq!((expected, got), (5, 3));
+        }
+        other => panic!("expected StaleEpoch, got {other:?}"),
+    }
+    match handle_line(
+        &coord,
+        r#"{"v":2,"op":"query","model":"m","points":[[1.0]],"epoch":7}"#,
+    ) {
+        Response::StaleEpoch { expected, got } => {
+            assert_eq!((expected, got), (5, 7));
+        }
+        other => panic!("expected StaleEpoch, got {other:?}"),
+    }
+
+    // Enrollment can never roll backwards (a stale router pushing an old
+    // table is itself rejected)...
+    match handle_line(&coord, r#"{"v":2,"op":"set_epoch","epoch":4}"#) {
+        Response::StaleEpoch { expected, got } => {
+            assert_eq!((expected, got), (5, 4));
+        }
+        other => panic!("expected StaleEpoch, got {other:?}"),
+    }
+    assert_eq!(coord.routing_epoch(), 5, "epoch must not roll back");
+    // ...while matching and advancing epochs are accepted.
+    match handle_line(&coord, r#"{"v":2,"op":"delete","model":"x","epoch":5}"#) {
+        Response::Deleted { .. } => {}
+        other => panic!("matching epoch must pass the gate: {other:?}"),
+    }
+    match handle_line(&coord, r#"{"v":2,"op":"set_epoch","epoch":6}"#) {
+        Response::EpochOk { epoch } => assert_eq!(epoch, 6),
+        other => panic!("expected EpochOk, got {other:?}"),
+    }
+    // Unstamped frames (direct clients) always pass the gate.
+    match handle_line(&coord, r#"{"v":2,"op":"models"}"#) {
+        Response::Models { names } => assert!(names.is_empty()),
+        other => panic!("expected Models, got {other:?}"),
+    }
+
+    // Truncated / corrupt / malformed-epoch lines: typed Error, no panic.
+    for bad in [
+        r#"{"v":2,"op":"fit""#,
+        r#"{"v":2,"op":"query","model":"m","points":[[1],"#,
+        r#"{"v":2,"op":"set_epoch"}"#,
+        r#"{"v":2,"op":"set_epoch","epoch":0}"#,
+        r#"{"v":2,"op":"set_epoch","epoch":"six"}"#,
+        r#"{"v":2,"op":"delete","model":"x","epoch":1.5}"#,
+        "\u{0}\u{1}not json",
+    ] {
+        match handle_line(&coord, bad) {
+            Response::Error { message } => {
+                assert!(!message.is_empty(), "empty error for {bad:?}")
+            }
+            other => panic!("{bad:?} must be a typed Error, got {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn router_rejects_corrupt_frames_and_bounds_dead_node_failures() {
+    // ISSUE 4 satellite: router-frame fuzz coverage, router side.  The
+    // node table points at an address nobody listens on (bind an
+    // ephemeral port, then drop the listener), so every forward must
+    // fail *typed* and *fast* — never hang.
+    let dead = {
+        let listener =
+            std::net::TcpListener::bind(("127.0.0.1", 0)).expect("bind");
+        let addr = listener.local_addr().expect("addr").to_string();
+        drop(listener);
+        addr
+    };
+    let mut cfg = RouterConfig::default();
+    cfg.nodes = vec![dead.clone()];
+    cfg.connect_timeout_ms = 200;
+    cfg.request_timeout_ms = 500;
+    cfg.retries = 1;
+    let router = Router::new(cfg).expect("router");
+
+    // Corrupt and unsupported frames are typed errors before any routing.
+    for bad in [
+        "{",
+        r#"{"v":2,"op":"warp"}"#,
+        r#"{"v":99,"op":"ping"}"#,
+        r#"{"v":2,"op":"fit","model":"m"}"#,
+        r#"{"v":2,"op":"set_epoch","epoch":0}"#,
+    ] {
+        match router.handle_line(bad) {
+            Response::Error { message } => {
+                assert!(!message.is_empty(), "empty error for {bad:?}")
+            }
+            other => panic!("{bad:?} must be a typed Error, got {other:?}"),
+        }
+    }
+
+    // set_epoch *at* the router is refused: the router owns the table.
+    match router.handle_line(r#"{"v":2,"op":"set_epoch","epoch":2}"#) {
+        Response::Error { message } => assert!(message.contains("router")),
+        other => panic!("expected Error, got {other:?}"),
+    }
+
+    // A frame stamped from a stale upstream table is the typed rejection
+    // (the router's table is at epoch 1) — checked before any forwarding.
+    match router
+        .handle_line(r#"{"v":2,"op":"query","model":"m","points":[[1.0]],"epoch":9}"#)
+    {
+        Response::StaleEpoch { expected, got } => {
+            assert_eq!((expected, got), (1, 9));
+        }
+        other => panic!("expected StaleEpoch, got {other:?}"),
+    }
+
+    // Ping answers locally even with the whole fleet down.
+    match router.handle_line(r#"{"v":2,"op":"ping"}"#) {
+        Response::Pong { .. } => {}
+        other => panic!("expected Pong, got {other:?}"),
+    }
+
+    // Routed ops against the dead node: typed, names the node, bounded.
+    let start = Instant::now();
+    match router.handle_line(r#"{"v":2,"op":"query","model":"m","points":[[1.0]]}"#) {
+        Response::Error { message } => {
+            assert!(message.contains("unavailable"), "{message}");
+            assert!(message.contains(&dead), "{message}");
+        }
+        other => panic!("expected typed unavailable, got {other:?}"),
+    }
+    assert!(
+        start.elapsed() < Duration::from_secs(10),
+        "dead-node failure took {:?} — retry/timeout bounds are broken",
+        start.elapsed()
+    );
+
+    // Stats fan-out still renders one document, with the dead node's
+    // error embedded rather than omitted.
+    match router.handle_line(r#"{"v":2,"op":"stats"}"#) {
+        Response::Stats { body } => {
+            let per_node = body.get("nodes").expect("per-node section");
+            let entry = per_node.get(&dead).expect("dead node present");
+            let err = entry.get("error").and_then(|e| e.as_str()).unwrap_or("");
+            assert!(err.contains("unavailable"), "{err}");
+            assert_eq!(
+                body.get("router")
+                    .and_then(|r| r.get("reachable"))
+                    .and_then(|v| v.as_usize()),
+                Some(0)
+            );
+        }
+        other => panic!("expected Stats, got {other:?}"),
+    }
+
+    // Removing the last node flips routed ops to the empty-table error.
+    assert!(router.remove_node(&dead));
+    match router.handle_line(r#"{"v":2,"op":"query","model":"m","points":[[1.0]]}"#) {
+        Response::Error { message } => assert!(message.contains("empty"), "{message}"),
+        other => panic!("expected empty-table error, got {other:?}"),
+    }
 }
 
 #[test]

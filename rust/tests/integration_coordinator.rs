@@ -384,6 +384,7 @@ fn pipelined_wire_queries_reply_in_order() {
                 model: "pipe".into(),
                 d,
                 spec: QuerySpec::density(points.clone()),
+                epoch: None,
             })
             .expect("submit");
     }

@@ -373,6 +373,7 @@ fn engine_executes_across_threads() {
         manifest,
         1,
         flash_sdkde::runtime::BackendKind::Pjrt,
+        64,
     )
     .expect("engine");
 

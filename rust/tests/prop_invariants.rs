@@ -402,11 +402,20 @@ fn prop_protocol_request_round_trip() {
     check("protocol request round trip", 400, |rng| {
         let d = 1 + rng.below(8) as usize;
         let k = 1 + rng.below(6) as usize;
-        let req = match rng.below(7) {
+        // Model-addressed frames optionally carry a routing-epoch stamp
+        // (multi-node serving); it must round-trip bit-for-bit too.
+        let epoch = match rng.below(3) {
+            0 => None,
+            _ => Some(1 + rng.below(1 << 20)),
+        };
+        let req = match rng.below(8) {
             0 => Request::Ping,
             1 => Request::Models,
             2 => Request::Stats,
-            3 => Request::Delete { model: format!("m{}", rng.below(100)) },
+            3 => Request::Delete {
+                model: format!("m{}", rng.below(100)),
+                epoch,
+            },
             4 | 5 => {
                 let kind = EstimatorKind::ALL[rng.below(3) as usize];
                 let mut spec = FitSpec::new(kind, d);
@@ -423,8 +432,10 @@ fn prop_protocol_request_round_trip() {
                     model: format!("fit{}", rng.below(10)),
                     spec,
                     points: gen_points(rng, k * d),
+                    epoch,
                 }
             }
+            6 => Request::SetEpoch { epoch: 1 + rng.below(1 << 20) },
             _ => Request::Query {
                 model: format!("q{}", rng.below(10)),
                 d,
@@ -432,6 +443,7 @@ fn prop_protocol_request_round_trip() {
                     gen_points(rng, k * d),
                     OutputMode::ALL[rng.below(3) as usize],
                 ),
+                epoch,
             },
         };
         let line = req.to_line();
@@ -456,7 +468,7 @@ fn prop_protocol_response_round_trip() {
     check("protocol response round trip", 400, |rng| {
         let d = 1 + rng.below(8) as usize;
         let k = 1 + rng.below(6) as usize;
-        let resp = match rng.below(8) {
+        let resp = match rng.below(10) {
             0 => Response::Pong { version: 1 + rng.below(PROTOCOL_VERSION as u64) as usize },
             1 => Response::FitOk {
                 info: FitInfo {
@@ -494,6 +506,11 @@ fn prop_protocol_response_round_trip() {
             },
             6 => Response::Error {
                 message: format!("failure case {}", rng.below(1000)),
+            },
+            7 => Response::EpochOk { epoch: 1 + rng.below(1 << 20) },
+            8 => Response::StaleEpoch {
+                expected: 1 + rng.below(1 << 20),
+                got: 1 + rng.below(1 << 20),
             },
             _ => Response::Stats { body: Value::Null },
         };
