@@ -10,6 +10,11 @@
 //! (placement is rendezvous hashing of the model name), query them, dump
 //! the aggregated fleet stats, "unplug" one worker to show the typed
 //! failure, then update the node table and re-fit to show failover.
+//!
+//! Pass `--tuning <table.json>` (a `flash-sdkde tune` output) to boot
+//! every worker with the tile-tuning table, i.e. a tuned cluster.
+
+use std::path::PathBuf;
 
 use anyhow::Result;
 
@@ -23,19 +28,32 @@ use flash_sdkde::runtime::BackendKind;
 use flash_sdkde::util::json;
 use flash_sdkde::util::rng::Pcg64;
 
-fn worker() -> Result<Server> {
+fn worker(tuning: Option<&PathBuf>) -> Result<Server> {
     let mut cfg = Config::default();
     cfg.backend = BackendKind::Native;
     cfg.artifacts_dir = "/nonexistent-artifacts".into();
     cfg.batch_wait_ms = 1;
+    cfg.tuning_path = tuning.cloned();
     Server::start(Coordinator::start(cfg)?, "127.0.0.1", 0)
 }
 
+/// `--tuning <path>` / `--tuning=<path>` from the example's arguments.
+/// A dangling `--tuning` is an error, not a silent untuned run.
+fn tuning_arg() -> Result<Option<PathBuf>> {
+    flash_sdkde::util::cli::scan_raw_option("tuning", std::env::args().skip(1))
+        .map(|o| o.map(PathBuf::from))
+        .map_err(anyhow::Error::msg)
+}
+
 fn main() -> Result<()> {
+    let tuning = tuning_arg()?;
+    if let Some(path) = &tuning {
+        println!("booting workers with tuning table {}", path.display());
+    }
     // Three loopback workers, each a full native-backend coordinator.
     let mut workers: Vec<Server> = Vec::new();
     for _ in 0..3 {
-        workers.push(worker()?);
+        workers.push(worker(tuning.as_ref())?);
     }
     let mut router_cfg = RouterConfig::default();
     router_cfg.nodes =

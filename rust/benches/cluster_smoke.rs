@@ -11,8 +11,12 @@
 //!
 //! Env overrides: FLASH_SDKDE_CLUSTER_QUERIES (measured queries per
 //! series, default 200), FLASH_SDKDE_CLUSTER_WORKERS (cluster size,
-//! default 3).
+//! default 3).  An optional `--tuning <table.json>` argument (or
+//! FLASH_SDKDE_TUNING) makes every worker — direct and routed — load
+//! the tile-tuning table, so the smoke stays representative of a tuned
+//! fleet.
 
+use std::path::PathBuf;
 use std::time::Instant;
 
 use anyhow::Result;
@@ -35,11 +39,26 @@ fn env_usize(key: &str, default: usize) -> usize {
         .unwrap_or(default)
 }
 
-fn worker() -> Result<Server> {
+/// `--tuning <path>` / `--tuning=<path>` argument, falling back to the
+/// FLASH_SDKDE_TUNING env var.  A dangling `--tuning` is an error, not
+/// a silent untuned run.
+fn tuning_arg() -> Result<Option<PathBuf>> {
+    let from_args = flash_sdkde::util::cli::scan_raw_option(
+        "tuning",
+        std::env::args().skip(1),
+    )
+    .map_err(anyhow::Error::msg)?;
+    Ok(from_args
+        .or_else(|| std::env::var("FLASH_SDKDE_TUNING").ok())
+        .map(PathBuf::from))
+}
+
+fn worker(tuning: Option<&PathBuf>) -> Result<Server> {
     let mut cfg = Config::default();
     cfg.backend = BackendKind::Native;
     cfg.artifacts_dir = "/nonexistent-flash-sdkde-artifacts".into();
     cfg.batch_wait_ms = 0;
+    cfg.tuning_path = tuning.cloned();
     Server::start(Coordinator::start(cfg)?, "127.0.0.1", 0)
 }
 
@@ -77,17 +96,18 @@ fn measure_series(
 fn main() -> Result<()> {
     let queries = env_usize("FLASH_SDKDE_CLUSTER_QUERIES", 200);
     let n_workers = env_usize("FLASH_SDKDE_CLUSTER_WORKERS", 3);
+    let tuning = tuning_arg()?;
     let d = 2;
     let models: Vec<String> = (0..6).map(|i| format!("smoke-{i}")).collect();
 
     // Series 1: one worker, direct connection.
-    let single = worker()?;
+    let single = worker(tuning.as_ref())?;
     let mut direct = Client::connect(single.local_addr())?;
     let (d_mean, d_p50, d_p95) = measure_series(&mut direct, &models, d, queries)?;
 
     // Series 2: n workers behind the router.
     let workers: Vec<Server> =
-        (0..n_workers).map(|_| worker()).collect::<Result<_>>()?;
+        (0..n_workers).map(|_| worker(tuning.as_ref())).collect::<Result<_>>()?;
     let mut cfg = RouterConfig::default();
     cfg.nodes = workers.iter().map(|w| w.local_addr().to_string()).collect();
     cfg.connect_timeout_ms = 500;
@@ -120,6 +140,14 @@ fn main() -> Result<()> {
         "routed - direct = router forwarding overhead (parse + rendezvous \
          + pooled hop); kernels are identical on both paths",
     );
+    match &tuning {
+        Some(path) => table.note(&format!(
+            "all workers tuned: --tuning {}",
+            path.display()
+        )),
+        None => table.note("workers run the static default TileConfig \
+                            (pass --tuning <table.json> for a tuned fleet)"),
+    }
     table.emit("cluster_smoke");
     Ok(())
 }

@@ -1,8 +1,13 @@
 //! `cargo bench --bench fig6_runtime_1d` — regenerates the paper's fig6 series.
 //! Thin wrapper over `bench_harness::experiments` (harness = false; the
 //! offline registry has no criterion — see DESIGN.md §3).
+//!
+//! Env overrides: FLASH_SDKDE_NATIVE_SERIES=1 adds the pure-Rust native
+//! backend as a third measured series; FLASH_SDKDE_TUNING=<table.json>
+//! runs that series under a `flash-sdkde tune` table's block shapes.
 
 use flash_sdkde::bench_harness::{experiments::Ctx, run_experiment, RunSpec};
+use flash_sdkde::tuner::TuningTable;
 
 fn main() -> anyhow::Result<()> {
     let artifacts = std::env::var("FLASH_SDKDE_ARTIFACTS")
@@ -10,6 +15,13 @@ fn main() -> anyhow::Result<()> {
     let mut ctx = Ctx::new(std::path::Path::new(&artifacts))?;
     if let Ok(iters) = std::env::var("FLASH_SDKDE_BENCH_ITERS") {
         ctx.spec = RunSpec::new(1, iters.parse()?);
+    }
+    if let Ok(v) = std::env::var("FLASH_SDKDE_NATIVE_SERIES") {
+        ctx.native_series = v == "1" || v.eq_ignore_ascii_case("true");
+    }
+    if let Ok(path) = std::env::var("FLASH_SDKDE_TUNING") {
+        ctx.native_series = true;
+        ctx.native_tuning = Some(TuningTable::load(std::path::Path::new(&path))?);
     }
     run_experiment(&mut ctx, "fig6")?.emit("fig6");
     Ok(())

@@ -12,9 +12,14 @@
 //!
 //! Env overrides: FLASH_SDKDE_BENCH_SIZES="1024,4096" to change the
 //! n sweep, FLASH_SDKDE_NAIVE_MAX_N to cap the scalar baseline,
-//! FLASH_SDKDE_BENCH_SEEDS for a multi-seed sweep.
+//! FLASH_SDKDE_BENCH_SEEDS for a multi-seed sweep, and
+//! FLASH_SDKDE_TUNING=<table.json> to add the `tuned` series (the
+//! cached hot path under a `flash-sdkde tune` table's block shapes —
+//! run with and without it for the BENCHMARKS.md tuned-vs-default
+//! record).
 
 use flash_sdkde::bench_harness::{native_cmp, RunSpec};
+use flash_sdkde::tuner::TuningTable;
 
 fn env_sizes() -> Vec<usize> {
     std::env::var("FLASH_SDKDE_BENCH_SIZES")
@@ -37,8 +42,17 @@ fn main() -> anyhow::Result<()> {
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(native_cmp::DEFAULT_SEEDS);
-    let table =
-        native_cmp::native_vs_scalar(RunSpec::new(1, 3), &env_sizes(), cap, seeds)?;
+    let tuning = match std::env::var("FLASH_SDKDE_TUNING") {
+        Ok(path) => Some(TuningTable::load(std::path::Path::new(&path))?),
+        Err(_) => None,
+    };
+    let table = native_cmp::native_vs_scalar(
+        RunSpec::new(1, 3),
+        &env_sizes(),
+        cap,
+        seeds,
+        tuning.as_ref(),
+    )?;
     table.emit("native_flash");
     Ok(())
 }

@@ -13,8 +13,10 @@ use anyhow::{anyhow, Context, Result};
 
 use crate::analysis::{flops, oracle_error, roofline::MachineModel};
 use crate::data::mixture::{by_dim, Mixture};
+use crate::estimator::flash::{self, TileConfig};
 use crate::estimator::{bandwidth, native};
 use crate::runtime::{ArtifactEntry, ExecutableStore, HostTensor, Manifest};
+use crate::tuner::TuningTable;
 use crate::util::rng::Pcg64;
 use crate::util::stats;
 
@@ -35,6 +37,14 @@ pub struct Ctx {
     pub naive_max_n: usize,
     /// Independent data draws per oracle sweep.
     pub seeds: u64,
+    /// Add the pure-Rust native flash backend as a third runtime series
+    /// in the fig1/fig6 comparisons (`bench --native-series`; ROADMAP
+    /// "native backend in the paper benches").
+    pub native_series: bool,
+    /// Tile-tuning table the native series consults per (d, n, m) for
+    /// its block shapes (`bench --tuning`); `None` runs the static
+    /// serial default.
+    pub native_tuning: Option<TuningTable>,
 }
 
 impl Ctx {
@@ -48,7 +58,24 @@ impl Ctx {
             sizes_1d: vec![1024, 4096, 16384],
             naive_max_n: 2048,
             seeds: 3,
+            native_series: false,
+            native_tuning: None,
         })
+    }
+
+    /// The tile configuration the native series runs at one workload:
+    /// the tuning table's nearest-bucket block shapes over a serial base
+    /// (single-threaded like every other series here), or the static
+    /// serial default without a table.
+    fn native_tile(&self, d: usize, n: usize, m: usize) -> TileConfig {
+        let base = TileConfig::serial();
+        match &self.native_tuning {
+            Some(t) => match t.lookup(d, n, m) {
+                Some(cell) => cell.apply(base),
+                None => base,
+            },
+            None => base,
+        }
     }
 
     /// Keep only sweep sizes that actually have artifacts.
@@ -180,16 +207,31 @@ pub fn fig1_runtime_16d(ctx: &mut Ctx) -> Result<Table> {
         "Fig.1 — 16-D SD-KDE runtime (ms), n_test = n/8")
 }
 
-/// Shared by Fig. 1 (d=16) and Fig. 6 (d=1).
+/// Shared by Fig. 1 (d=16) and Fig. 6 (d=1).  With `Ctx::native_series`
+/// the pure-Rust native flash backend rides along as a third measured
+/// series (tile-tuned when `Ctx::native_tuning` is set), so the paper
+/// figures show the artifact variants and the CPU backend side by side.
 fn runtime_comparison(ctx: &mut Ctx, d: usize, id: &str, title: &str) -> Result<Table> {
     let sizes = ctx.present_sizes(d, "sdkde_e2e", "flash");
-    let mut table = Table::new(
-        title,
-        &["n_train", "native naive", "SD-KDE (gemm)", "Flash-SD-KDE",
-          "speedup vs naive", "speedup vs gemm"],
-    );
+    let mut headers = vec!["n_train", "native naive", "SD-KDE (gemm)",
+                           "Flash-SD-KDE", "speedup vs naive", "speedup vs gemm"];
+    if ctx.native_series {
+        headers.push("native flash (CPU)");
+        headers.push("native vs gemm");
+    }
+    let mut table = Table::new(title, &headers);
     table.note("native naive = scalar-loop Rust (scikit-learn analogue); \
                 gemm = materializing XLA baseline (Torch analogue)");
+    if ctx.native_series {
+        table.note(&format!(
+            "native flash (CPU) = estimator::flash sdkde end-to-end, serial, {}",
+            if ctx.native_tuning.is_some() {
+                "block shapes from the tuning table (nearest bucket)"
+            } else {
+                "static default block shapes (tune + --tuning to apply a table)"
+            }
+        ));
+    }
     for n in sizes {
         let m = n / 8;
         let p = problem(n, m, d, 42);
@@ -216,7 +258,24 @@ fn runtime_comparison(ctx: &mut Ctx, d: usize, id: &str, title: &str) -> Result<
             time_artifact(ctx, &flash, &inputs_for("sdkde_e2e", &p), "flash")?
                 .mean_ms();
 
-        table.row(vec![
+        // The native backend series: same problem, same spec, the tiled
+        // CPU kernels compiled into this binary.
+        let native_ms = if ctx.native_series {
+            let cfg = ctx.native_tile(d, n, m);
+            let x = p.x.data().to_vec();
+            let w = p.w.data().to_vec();
+            let y = p.y.data().to_vec();
+            let (h, hs) = (p.h, p.h_score);
+            let spec = ctx.spec;
+            let meas = measure("native-flash", spec, || {
+                black_box(flash::sdkde(&x, &w, &y, d, h, hs, &cfg));
+            });
+            Some(meas.mean_ms())
+        } else {
+            None
+        };
+
+        let mut row = vec![
             n.to_string(),
             naive_ms.map(fmt_ms).unwrap_or_else(|| "-".into()),
             fmt_ms(gemm_ms),
@@ -225,7 +284,12 @@ fn runtime_comparison(ctx: &mut Ctx, d: usize, id: &str, title: &str) -> Result<
                 .map(|nv| fmt_speedup(nv / flash_ms))
                 .unwrap_or_else(|| "-".into()),
             fmt_speedup(gemm_ms / flash_ms),
-        ]);
+        ];
+        if let Some(nms) = native_ms {
+            row.push(fmt_ms(nms));
+            row.push(fmt_speedup(gemm_ms / nms));
+        }
+        table.row(row);
     }
     let mut t = table;
     t.notes.push(format!("iters={} warmup={}", ctx.spec.iters, ctx.spec.warmup));

@@ -18,6 +18,10 @@
 //!    once and reused, i.e. the serving hot path for a resident model
 //!    (DESIGN.md §11).
 //!
+//! With a tuning table ([`crate::tuner`]) a fifth series, **tuned**,
+//! runs series 4 under the table's nearest-bucket block shapes — the
+//! tuned-vs-default record BENCHMARKS.md tracks.
+//!
 //! The workload is the query ("decode") side — a KDE eval sweep — since
 //! that is what the prepare cache amortizes; BENCHMARKS.md records the
 //! series across PRs.
@@ -27,6 +31,7 @@ use anyhow::Result;
 use crate::data::mixture::by_dim;
 use crate::estimator::flash::{self, PreparedTrain, TileConfig};
 use crate::estimator::{bandwidth, native};
+use crate::tuner::TuningTable;
 use crate::util::rng::Pcg64;
 
 use super::report::{fmt_ms, fmt_speedup, Table};
@@ -42,22 +47,31 @@ pub const DEFAULT_NAIVE_MAX_N: usize = 8192;
 /// Default number of independent data draws.
 pub const DEFAULT_SEEDS: u64 = 1;
 
-/// KDE eval runtime over the four native series.  Times are means over
-/// `seeds` independent data draws (x measurement iterations each, per
-/// `spec`).
+/// KDE eval runtime over the four native series — plus a fifth, `tuned`,
+/// when a tuning table is given: the `simd+cached` hot path under the
+/// table's nearest-bucket block shapes instead of the static default
+/// (the BENCHMARKS.md "tuned vs default" record — run with and without
+/// `--tuning` to produce both sides).  Times are means over `seeds`
+/// independent data draws (x measurement iterations each, per `spec`).
 pub fn native_vs_scalar(
     spec: RunSpec,
     sizes: &[usize],
     naive_max_n: usize,
     seeds: u64,
+    tuning: Option<&TuningTable>,
 ) -> Result<Table> {
     let seeds = seeds.max(1);
     let d = 16;
     let mix = by_dim(d);
+    let mut headers = vec!["n_train", "scalar", "tile (auto-vec)", "simd",
+                           "simd+cached", "simd vs tile", "cached vs tile"];
+    if tuning.is_some() {
+        headers.push("tuned");
+        headers.push("tuned vs cached");
+    }
     let mut table = Table::new(
         "Native backend — KDE eval runtime (ms), d=16, n_test = n/8, 1 thread",
-        &["n_train", "scalar", "tile (auto-vec)", "simd", "simd+cached",
-          "simd vs tile", "cached vs tile"],
+        &headers,
     );
     table.note(
         "scalar = estimator::native (pairwise ‖x−y‖² recomputed per \
@@ -73,11 +87,29 @@ pub fn native_vs_scalar(
         "simd = built WITHOUT the `simd` feature: series runs the \
          auto-vectorized tile (rebuild with nightly + --features simd)"
     });
+    if let Some(t) = tuning {
+        table.note(&format!(
+            "tuned = simd+cached under the tuning table's nearest-bucket \
+             block shapes ({} cells; run without --tuning for the default \
+             side of the BENCHMARKS.md tuned-vs-default record)",
+            t.cells().len()
+        ));
+    }
     let tile_cfg = TileConfig::scalar_tiles();
     let simd_cfg = TileConfig { simd: true, ..TileConfig::serial() };
     for &n in sizes {
         let m = (n / 8).max(1);
-        let mut sums = [0.0f64; 4]; // scalar, tile, simd, cached
+        let tuned_cell = tuning.and_then(|t| t.lookup(d, n, m));
+        let tuned_cfg = tuning.map(|_| {
+            tuned_cell.map(|c| c.apply(simd_cfg)).unwrap_or(simd_cfg)
+        });
+        if tuning.is_some() && tuned_cell.is_none() {
+            table.note(&format!(
+                "n={n}: table has no d={d} cell — tuned series ran the \
+                 static config (tune --dims {d} to cover it)"
+            ));
+        }
+        let mut sums = [0.0f64; 5]; // scalar, tile, simd, cached, tuned
         for seed in 0..seeds {
             let mut rng = Pcg64::new(42 + seed, 77);
             let x = mix.sample(n, &mut rng);
@@ -104,6 +136,12 @@ pub fn native_vs_scalar(
                 black_box(flash::kde_prepared(&train, &y, h, &simd_cfg));
             })
             .mean_ms();
+            if let Some(cfg) = &tuned_cfg {
+                sums[4] += measure("tuned", spec, || {
+                    black_box(flash::kde_prepared(&train, &y, h, cfg));
+                })
+                .mean_ms();
+            }
         }
         let scalar_ms =
             (n <= naive_max_n).then_some(sums[0] / seeds as f64);
@@ -111,7 +149,7 @@ pub fn native_vs_scalar(
         let simd_ms = sums[2] / seeds as f64;
         let cached_ms = sums[3] / seeds as f64;
 
-        table.row(vec![
+        let mut row = vec![
             n.to_string(),
             scalar_ms.map(fmt_ms).unwrap_or_else(|| "-".into()),
             fmt_ms(tile_ms),
@@ -119,7 +157,13 @@ pub fn native_vs_scalar(
             fmt_ms(cached_ms),
             fmt_speedup(tile_ms / simd_ms),
             fmt_speedup(tile_ms / cached_ms),
-        ]);
+        ];
+        if tuned_cfg.is_some() {
+            let tuned_ms = sums[4] / seeds as f64;
+            row.push(fmt_ms(tuned_ms));
+            row.push(fmt_speedup(cached_ms / tuned_ms));
+        }
+        table.row(row);
     }
     table
         .notes
@@ -133,8 +177,10 @@ mod tests {
 
     #[test]
     fn comparison_runs_without_artifacts() {
-        let t = native_vs_scalar(RunSpec::new(0, 1), &[128], 256, 2).unwrap();
+        let t = native_vs_scalar(RunSpec::new(0, 1), &[128], 256, 2, None).unwrap();
         assert_eq!(t.rows.len(), 1);
+        // No tuning table: the base seven columns only.
+        assert_eq!(t.headers.len(), 7);
         // Scalar column populated (128 <= cap) and speedups parse as "x".
         assert_ne!(t.rows[0][1], "-");
         assert!(t.rows[0][5].ends_with('x'), "{:?}", t.rows[0]);
@@ -143,9 +189,32 @@ mod tests {
 
     #[test]
     fn scalar_cap_blanks_the_baseline_column() {
-        let t = native_vs_scalar(RunSpec::new(0, 1), &[128], 64, 1).unwrap();
+        let t = native_vs_scalar(RunSpec::new(0, 1), &[128], 64, 1, None).unwrap();
         assert_eq!(t.rows[0][1], "-");
         // Flash series still measured.
         assert_ne!(t.rows[0][2], "-");
+    }
+
+    #[test]
+    fn tuning_table_adds_the_tuned_series() {
+        use crate::tuner::{TunedCell, TuningTable};
+        let table = TuningTable::new(vec![TunedCell {
+            d: 16,
+            n: 128,
+            m: 16,
+            block_q: 16,
+            block_t: 64,
+            threads: 1,
+            simd: false,
+            best_ms: 0.1,
+            default_ms: 0.2,
+        }])
+        .unwrap();
+        let t = native_vs_scalar(RunSpec::new(0, 1), &[128], 64, 1, Some(&table))
+            .unwrap();
+        assert_eq!(t.headers.len(), 9);
+        assert_eq!(t.headers[7], "tuned");
+        assert_ne!(t.rows[0][7], "-");
+        assert!(t.rows[0][8].ends_with('x'), "{:?}", t.rows[0]);
     }
 }

@@ -40,6 +40,12 @@ pub struct Config {
     pub engine_workers: usize,
     /// Warm the executable cache at startup for these dims.
     pub warm_dims: Vec<usize>,
+    /// Optional tile-tuning table (written by `flash-sdkde tune`) the
+    /// native backend consults per workload; `None` serves the static
+    /// default `TileConfig`.  Ignored by the PJRT backend.  A missing,
+    /// corrupt or version-mismatched table fails startup with a typed
+    /// error — never a silent fallback.
+    pub tuning_path: Option<PathBuf>,
 }
 
 impl Default for Config {
@@ -56,6 +62,7 @@ impl Default for Config {
             registry_capacity: 64,
             engine_workers: 1,
             warm_dims: vec![],
+            tuning_path: None,
         }
     }
 }
@@ -79,7 +86,7 @@ impl Config {
         let known = [
             "artifacts_dir", "backend", "host", "port", "queue_depth",
             "batch_wait_ms", "batch_max_queries", "default_variant",
-            "registry_capacity", "engine_workers", "warm_dims",
+            "registry_capacity", "engine_workers", "warm_dims", "tuning",
         ];
         for key in obj.keys() {
             if !known.contains(&key.as_str()) {
@@ -136,6 +143,11 @@ impl Config {
                 .map(|v| v.as_usize().ok_or("warm_dims entries must be integers"))
                 .collect::<Result<Vec<_>, _>>()?;
         }
+        if let Some(x) = obj.get("tuning") {
+            cfg.tuning_path = Some(PathBuf::from(
+                x.as_str().ok_or("tuning must be a string (table path)")?,
+            ));
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -178,8 +190,9 @@ impl Config {
     }
 
     /// Render as JSON (used by `flash-sdkde info --dump-config`).
+    /// `tuning` is emitted only when set, so defaults round-trip.
     pub fn to_json(&self) -> Value {
-        Value::object(vec![
+        let mut fields = vec![
             ("artifacts_dir", Value::from(self.artifacts_dir.display().to_string())),
             ("backend", Value::from(self.backend.as_str())),
             ("host", Value::from(self.host.as_str())),
@@ -194,7 +207,11 @@ impl Config {
                 "warm_dims",
                 Value::Array(self.warm_dims.iter().map(|&d| Value::from(d)).collect()),
             ),
-        ])
+        ];
+        if let Some(p) = &self.tuning_path {
+            fields.push(("tuning", Value::from(p.display().to_string())));
+        }
+        Value::object(fields)
     }
 }
 
@@ -349,6 +366,23 @@ mod tests {
         cfg.backend = BackendKind::Native;
         let back = Config::from_json(&cfg.to_json()).unwrap();
         assert_eq!(cfg, back);
+        // With a tuning table set, the path round-trips too.
+        cfg.tuning_path = Some(PathBuf::from("/tmp/tuning.json"));
+        let back = Config::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn tuning_key_parses_and_rejects_non_strings() {
+        let v = json::parse(r#"{"tuning": "tables/tuned.json"}"#).unwrap();
+        assert_eq!(
+            Config::from_json(&v).unwrap().tuning_path,
+            Some(PathBuf::from("tables/tuned.json"))
+        );
+        assert_eq!(Config::default().tuning_path, None);
+        let v = json::parse(r#"{"tuning": 7}"#).unwrap();
+        let err = Config::from_json(&v).unwrap_err();
+        assert!(err.contains("tuning"), "{err}");
     }
 
     #[test]

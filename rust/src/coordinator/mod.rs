@@ -147,17 +147,35 @@ pub struct Coordinator {
 impl Coordinator {
     /// Boot: resolve the manifest for the configured backend (PJRT loads
     /// the artifact directory; native synthesizes buckets when none
-    /// exists), start engine workers, spawn the dispatcher.
+    /// exists), load the optional tile-tuning table (a corrupt or
+    /// version-mismatched table is a typed startup error, never a silent
+    /// fallback), start engine workers, spawn the dispatcher.
     pub fn start(cfg: Config) -> Result<Coordinator> {
         let manifest =
             crate::runtime::backend::resolve_manifest(cfg.backend, &cfg.artifacts_dir)?;
+        let tuning = match &cfg.tuning_path {
+            Some(path) => {
+                let table = crate::tuner::TuningTable::load(path)
+                    .map_err(|e| anyhow!("{e}"))?;
+                log_info!(
+                    "coord",
+                    "loaded tuning table {} ({} cells)",
+                    path.display(),
+                    table.cells().len()
+                );
+                Some(Arc::new(table))
+            }
+            None => None,
+        };
         // The native prepare cache is sized from the registry capacity so
-        // every resident model can keep its prepared form (DESIGN.md §11).
+        // every resident model can keep its prepared form (DESIGN.md §11);
+        // it is shared across the engine's workers.
         let engine = Engine::start(
             manifest,
             cfg.engine_workers,
             cfg.backend,
             cfg.registry_capacity,
+            tuning,
         )?;
         Self::with_engine(cfg, engine)
     }
@@ -491,6 +509,10 @@ impl Coordinator {
                     // Native prepare cache (DESIGN.md §11); 0/0 on PJRT.
                     ("prepare_hits", Value::from(store_stats.prepare_hits)),
                     ("prepare_misses", Value::from(store_stats.prepare_misses)),
+                    // Tile-tuning table behaviour (DESIGN.md §13); both 0
+                    // when no table is loaded (and always 0 on PJRT).
+                    ("tuned_lookups", Value::from(store_stats.tuned_lookups)),
+                    ("tuned_fallbacks", Value::from(store_stats.tuned_fallbacks)),
                 ]),
             ),
             ("queue_depth", Value::from(self.queue.len())),

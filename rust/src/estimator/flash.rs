@@ -25,9 +25,9 @@
 //!   the flag) and `f64x4` lanes for the density exp/accumulate loop
 //!   (`exp` applied per lane; lane partial sums re-associate the f64
 //!   reduction, so densities agree with the auto-vec path only up to f64
-//!   re-association noise — the same bound as tile-size changes).  The
-//!   score kernels vectorize only their dot tile, keeping the gradient
-//!   accumulation scalar and therefore invariant across the flag.
+//!   re-association noise, ~1e-15 relative).  The score kernels
+//!   vectorize only their dot tile, keeping the gradient accumulation
+//!   scalar and therefore invariant across the flag.
 //!
 //! The per-dataset precomputation — transposed train matrix, squared
 //! norms, f64 weights — is factored into [`PreparedTrain`] so resident
@@ -39,10 +39,17 @@
 //! Query blocks are independent, so each kernel splits them across scoped
 //! worker threads ([`TileConfig::threads`]; small problems stay serial).
 //! Thread partitioning never touches a query row's arithmetic, so results
-//! are bit-identical across thread counts.  Tile sizes (`block_t`) do
-//! regroup the f64 partial sums over train rows, so across tile choices
-//! results agree only up to f64 re-association noise (~1e-15 relative) —
-//! the conformance suite pins both properties down.
+//! are bit-identical across thread counts.  On the auto-vec path, tile
+//! sizes are bit-invariant too: each pair's dot product accumulates in k
+//! order regardless of tile boundaries, and the density/score reductions
+//! thread one running f64 accumulator through the tiles in strict
+//! train-row order — so `block_q`/`block_t` never move a result bit,
+//! which is what lets the autotuner ([`crate::tuner`]) apply
+//! table-chosen block shapes with zero numeric consequence.  The
+//! explicit-SIMD density accumulate carries lane partial sums whose
+//! grouping follows the tile width, so under the `simd` flag tile
+//! choices agree only up to f64 re-association noise (~1e-15 relative).
+//! The conformance suite pins all of these properties down.
 //!
 //! Formulas mirror `python/compile/kernels/ref.py` exactly like the
 //! scalar oracle does (same normalizers, same masked-row semantics, same
@@ -97,7 +104,11 @@ impl TileConfig {
         TileConfig { simd: false, ..TileConfig::serial() }
     }
 
-    fn checked(&self) -> TileConfig {
+    /// Clamp degenerate fields to the kernels' floor (every shape field
+    /// ≥ 1).  Kernels apply this at entry; the tuner's candidate
+    /// enumeration prunes on the same constraints (a candidate this
+    /// method would alter is degenerate and never measured).
+    pub fn checked(&self) -> TileConfig {
         TileConfig {
             block_q: self.block_q.max(1),
             block_t: self.block_t.max(1),
@@ -268,10 +279,17 @@ fn dot_tile(
     dot_tile_scalar(y, xt, n, d, q, t, dots);
 }
 
-/// One query row's density partial sum over a train tile — scalar
-/// implementation (the exact PR 2 arithmetic, masked rows skipped).
+/// One query row's density accumulation over a train tile — scalar
+/// implementation (masked rows skipped).  Takes the running accumulator
+/// `acc` and folds the tile's terms into it **in train-row order**, so
+/// the full reduction over all tiles is one strictly sequential f64 sum
+/// — tile boundaries never regroup it, which makes densities bit-exact
+/// across `block_t` choices on this path (the tuner's invariance
+/// contract).
 #[inline]
+#[allow(clippy::too_many_arguments)]
 fn density_row_scalar(
+    acc: f64,
     sq_y: f64,
     sq_x: &[f64],
     wf: &[f64],
@@ -280,7 +298,7 @@ fn density_row_scalar(
     half_d: f64,
     laplace_term: bool,
 ) -> f64 {
-    let mut a = 0.0f64;
+    let mut a = acc;
     for t in 0..dots.len() {
         let wi = wf[t];
         if wi == 0.0 {
@@ -298,14 +316,17 @@ fn density_row_scalar(
     a
 }
 
-/// Density partial-sum dispatch.  The SIMD path evaluates masked rows as
-/// exact `+0.0` terms instead of skipping them and carries four f64 lane
-/// accumulators, so it agrees with the scalar path up to f64
-/// re-association — the same bound tile-size changes already carry.
+/// Density accumulation dispatch.  The scalar path threads `acc`
+/// through the tile in strict train-row order (bit-exact across tile
+/// sizes); the SIMD path evaluates masked rows as exact `+0.0` terms
+/// instead of skipping them and carries four f64 lane accumulators whose
+/// tile partial is added to `acc`, so it agrees with the scalar path —
+/// and with itself across tile sizes — only up to f64 re-association.
 #[inline]
 #[allow(clippy::too_many_arguments)]
 fn density_row(
     use_simd: bool,
+    acc: f64,
     sq_y: f64,
     sq_x: &[f64],
     wf: &[f64],
@@ -317,13 +338,14 @@ fn density_row(
     #[cfg(feature = "simd")]
     {
         if use_simd {
-            return simd::density_row(
-                sq_y, sq_x, wf, dots, inv2h2, half_d, laplace_term,
-            );
+            return acc
+                + simd::density_row(
+                    sq_y, sq_x, wf, dots, inv2h2, half_d, laplace_term,
+                );
         }
     }
     let _ = use_simd;
-    density_row_scalar(sq_y, sq_x, wf, dots, inv2h2, half_d, laplace_term)
+    density_row_scalar(acc, sq_y, sq_x, wf, dots, inv2h2, half_d, laplace_term)
 }
 
 /// Explicit `std::simd` inner loops (nightly portable SIMD, `simd` cargo
@@ -408,11 +430,14 @@ mod simd {
         }
         let a = acc.to_array();
         // Scalar tail for the last `bt % 4` rows: delegate to the one
-        // scalar implementation so the term formula lives in one place.
+        // scalar implementation (accumulator seeded at 0 — this returns
+        // the tile partial, re-associated by the lanes above) so the
+        // term formula lives in one place.
         a[0] + a[1]
             + a[2]
             + a[3]
             + super::density_row_scalar(
+                0.0,
                 sq_y,
                 &sq_x[t..bt],
                 &wf[t..bt],
@@ -534,8 +559,9 @@ fn density(
                 let bt = cfg.block_t.min(n - t0);
                 dot_tile(cfg.simd, y, &train.xt, n, d, (q0, bq), (t0, bt), &mut dots);
                 for (q, a) in acc.iter_mut().enumerate() {
-                    *a += density_row(
+                    *a = density_row(
                         cfg.simd,
+                        *a,
                         sq_y[q0 + q],
                         &train.sq_x[t0..t0 + bt],
                         &train.wf[t0..t0 + bt],
@@ -753,6 +779,39 @@ mod tests {
         let x = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]; // [3, 2]
         let xt = transpose(&x, 3, 2);
         assert_eq!(xt, vec![1.0, 3.0, 5.0, 2.0, 4.0, 6.0]);
+    }
+
+    #[test]
+    fn block_shapes_are_bitwise_invariant_on_the_autovec_path() {
+        // The tuner's contract: applying table-chosen block_q/block_t
+        // must never move a result bit.  On the auto-vec path the
+        // density reduction is strictly train-row-sequential and the
+        // score reductions always were, so any block shape — including
+        // odd, non-power-of-two ones — is bit-exact against the default.
+        let (n, m, d) = (157, 29, 3);
+        let x = sample(n, d, 21);
+        let y = sample(m, d, 22);
+        let mut w = vec![1.0f32; n];
+        w[5] = 0.0;
+        let base = TileConfig::scalar_tiles();
+        for (bq, bt) in [(1, 1), (5, 7), (64, 33), (256, 1024)] {
+            let cfg = TileConfig { block_q: bq, block_t: bt, ..base };
+            assert_eq!(
+                kde(&x, &w, &y, d, 0.5, &cfg),
+                kde(&x, &w, &y, d, 0.5, &base),
+                "kde moved at blocks {bq}x{bt}"
+            );
+            assert_eq!(
+                laplace(&x, &w, &y, d, 0.5, &cfg),
+                laplace(&x, &w, &y, d, 0.5, &base),
+                "laplace moved at blocks {bq}x{bt}"
+            );
+            assert_eq!(
+                score_at(&x, &w, &y, d, 0.4, &cfg),
+                score_at(&x, &w, &y, d, 0.4, &base),
+                "score moved at blocks {bq}x{bt}"
+            );
+        }
     }
 
     #[test]

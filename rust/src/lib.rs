@@ -60,6 +60,7 @@ pub mod coordinator;
 pub mod data;
 pub mod estimator;
 pub mod runtime;
+pub mod tuner;
 pub mod util;
 
 pub use config::Config;

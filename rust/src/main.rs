@@ -5,6 +5,8 @@
 //!   serve  — boot the coordinator + TCP server from a config file
 //!   route  — boot a consistent-hash router over `serve` workers
 //!            (multi-node serving, DESIGN.md §12)
+//!   tune   — measure per-workload tile configs on this machine and
+//!            write a tuning table `serve --tuning` loads (DESIGN.md §13)
 //!   bench  — regenerate a paper table/figure (DESIGN.md §5)
 //!   info   — inspect artifacts/manifest + engine platform
 //!   fit    — client: fit a model on a running server from a CSV-ish file
@@ -27,6 +29,7 @@ use flash_sdkde::coordinator::server::{Client, Server};
 use flash_sdkde::coordinator::{Coordinator, FitSpec, OutputMode, QuerySpec};
 use flash_sdkde::estimator::{EstimatorKind, Variant};
 use flash_sdkde::runtime::{BackendKind, Manifest};
+use flash_sdkde::tuner;
 use flash_sdkde::util::cli::{self, Command, OptSpec};
 use flash_sdkde::util::json;
 
@@ -41,6 +44,8 @@ fn commands() -> Vec<Command> {
                 OptSpec::opt("backend", "execution backend override (pjrt | native)"),
                 OptSpec::opt("port", "TCP port override"),
                 OptSpec::opt("host", "bind host override"),
+                OptSpec::opt("tuning",
+                    "tile-tuning table override (written by `tune`)"),
                 OptSpec::flag("once", "exit after binding (smoke test)"),
             ],
         },
@@ -65,6 +70,22 @@ fn commands() -> Vec<Command> {
             ],
         },
         Command {
+            name: "tune",
+            about: "measure per-workload tile configs, write a tuning table",
+            opts: vec![
+                OptSpec::opt_default("out", "output table path (JSON)", "tuning.json"),
+                OptSpec::opt("dims", "dimensions to tune (comma list)"),
+                OptSpec::opt("sizes",
+                    "train sizes per dimension (comma list; queries = n/8)"),
+                OptSpec::opt("iters",
+                    "measured iterations per candidate (default 2; 1 with --quick)"),
+                OptSpec::opt("warmup",
+                    "warmup iterations per candidate (default 1; 0 with --quick)"),
+                OptSpec::flag("quick", "tiny grid + single iteration (CI smoke)"),
+                OptSpec::flag("full-report", "print per-cell candidate rankings"),
+            ],
+        },
+        Command {
             name: "bench",
             about: "regenerate a paper table/figure",
             opts: vec![
@@ -76,6 +97,10 @@ fn commands() -> Vec<Command> {
                 OptSpec::opt("sizes", "override n sweep (comma list)"),
                 OptSpec::opt("seeds", "seeds for oracle sweeps"),
                 OptSpec::opt("naive-max-n", "cap for the scalar baseline"),
+                OptSpec::flag("native-series",
+                    "add the native CPU backend as a third series (fig1/fig6)"),
+                OptSpec::opt("tuning",
+                    "tile-tuning table for the native series/comparison"),
             ],
         },
         Command {
@@ -157,6 +182,7 @@ fn run(args: &[String]) -> Result<()> {
     match cmd.name {
         "serve" => cmd_serve(&parsed),
         "route" => cmd_route(&parsed),
+        "tune" => cmd_tune(&parsed),
         "bench" => cmd_bench(&parsed),
         "info" => cmd_info(&parsed),
         "fit" => cmd_fit(&parsed),
@@ -183,6 +209,9 @@ fn cmd_serve(p: &cli::Parsed) -> Result<()> {
     }
     if let Some(host) = p.get("host") {
         cfg.host = host.to_string();
+    }
+    if let Some(path) = p.get("tuning") {
+        cfg.tuning_path = Some(PathBuf::from(path));
     }
     cfg.validate().map_err(|e| anyhow!(e))?;
 
@@ -246,12 +275,58 @@ fn cmd_route(p: &cli::Parsed) -> Result<()> {
     }
 }
 
+fn cmd_tune(p: &cli::Parsed) -> Result<()> {
+    let mut spec = if p.flag("quick") {
+        tuner::TuneSpec::quick()
+    } else {
+        tuner::TuneSpec::default_grid()
+    };
+    if let Some(dims) = p.get_usize_list("dims").map_err(|e| anyhow!(e))? {
+        spec.dims = dims;
+    }
+    if let Some(sizes) = p.get_usize_list("sizes").map_err(|e| anyhow!(e))? {
+        spec.sizes = sizes;
+    }
+    // Explicit --iters/--warmup override either grid's measurement
+    // policy (including --quick's single unwarmed iteration).
+    let warmup = p.get_usize("warmup").map_err(|e| anyhow!(e))?;
+    let iters = p.get_usize("iters").map_err(|e| anyhow!(e))?;
+    if warmup.is_some() || iters.is_some() {
+        spec.spec = RunSpec::new(
+            warmup.unwrap_or(spec.spec.warmup),
+            iters.unwrap_or(spec.spec.iters).max(1),
+        );
+    }
+    let outcome = tuner::tune(&spec)?;
+    if p.flag("full-report") {
+        for report in &outcome.reports {
+            print!("{}", report.render());
+        }
+    }
+    outcome.summary.emit("tune");
+    let out = PathBuf::from(p.get_string("out", "tuning.json"));
+    outcome.table.save(&out)?;
+    println!(
+        "wrote {} ({} cells) — serve it with `flash-sdkde serve --tuning {}`",
+        out.display(),
+        outcome.table.cells().len(),
+        out.display()
+    );
+    Ok(())
+}
+
 fn cmd_bench(p: &cli::Parsed) -> Result<()> {
     let spec = RunSpec::new(
         p.get_usize("warmup").map_err(|e| anyhow!(e))?.unwrap_or(1),
         p.get_usize("iters").map_err(|e| anyhow!(e))?.unwrap_or(3),
     );
     let which = p.get("experiment").expect("required").to_string();
+    let tuning = match p.get("tuning") {
+        Some(path) => {
+            Some(tuner::TuningTable::load(Path::new(path)).map_err(|e| anyhow!("{e}"))?)
+        }
+        None => None,
+    };
 
     // The native comparison is compiled into the binary: no artifacts, no
     // XLA, available in every build.
@@ -269,7 +344,8 @@ fn cmd_bench(p: &cli::Parsed) -> Result<()> {
             .map_err(|e| anyhow!(e))?
             .map(|s| s as u64)
             .unwrap_or(native_cmp::DEFAULT_SEEDS);
-        native_cmp::native_vs_scalar(spec, &sizes, cap, seeds)?.emit("native");
+        native_cmp::native_vs_scalar(spec, &sizes, cap, seeds, tuning.as_ref())?
+            .emit("native");
         Ok(())
     };
     if which == "native" {
@@ -281,6 +357,8 @@ fn cmd_bench(p: &cli::Parsed) -> Result<()> {
         let artifacts = PathBuf::from(p.get_string("artifacts", "artifacts"));
         let mut ctx = Ctx::new(&artifacts)?;
         ctx.spec = spec;
+        ctx.native_series = p.flag("native-series");
+        ctx.native_tuning = tuning.clone();
         if let Some(sizes) = p.get_usize_list("sizes").map_err(|e| anyhow!(e))? {
             ctx.sizes_16d = sizes.clone();
             ctx.sizes_1d = sizes;

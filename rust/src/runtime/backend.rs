@@ -24,14 +24,28 @@
 //! the registry's `Arc<HostTensor>` train tensors, held through `Weak`
 //! references — so a registry delete or LRU eviction invalidates the
 //! entry automatically by dropping the last strong `Arc`, and the cache
-//! can never pin a deleted model's memory.
+//! can never pin a deleted model's memory.  The cache ([`PrepareCache`])
+//! is **shared across every native worker of one engine** (the prepared
+//! form is an immutable `Arc` behind a mutex'd slot list), so
+//! multi-worker native serving prepares each resident model once, not
+//! once per worker.
+//!
+//! When a tuning table ([`crate::tuner::TuningTable`], written by
+//! `flash-sdkde tune`, loaded via `serve --tuning`) is present, the
+//! backend consults it at prepare time: a nearest-bucket lookup picks the
+//! measured-best `block_q`/`block_t` for the model's `(d, n, m)` workload
+//! (threads and the SIMD flag stay engine-owned), falling back to the
+//! static default when the table has no cell for the dimension.  The
+//! choice is cached in the model's prepare slot, so the hot path pays
+//! zero lookup cost after first touch; `StoreStats.tuned_lookups` /
+//! `tuned_fallbacks` surface the behaviour (DESIGN.md §13).
 //!
 //! Both backends execute against the *same* bucket/manifest shapes, so the
 //! coordinator, batcher, wire protocol and every example behave
 //! identically on either; when no artifacts exist the native path serves a
 //! synthesized manifest ([`crate::runtime::Manifest::synthetic`]).
 
-use std::sync::{Arc, Weak};
+use std::sync::{Arc, Mutex, MutexGuard, Weak};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
@@ -39,6 +53,7 @@ use anyhow::{bail, Result};
 use super::artifact::{ArtifactEntry, Manifest};
 use super::tensor::HostTensor;
 use crate::estimator::flash::{self, TileConfig};
+use crate::tuner::TuningTable;
 use crate::util::timer::PhaseTimer;
 
 /// Result of one artifact execution (either backend).
@@ -65,10 +80,22 @@ pub struct StoreStats {
     /// Prepare-cache hits (native; 0 for PJRT).  A hit means a query
     /// chunk reused a resident model's [`flash::PreparedTrain`] instead
     /// of re-deriving the transposed train matrix + squared norms.
+    /// Counted in the engine-shared [`PrepareCache`], so every worker's
+    /// `stats()` reports the engine-wide number.
     pub prepare_hits: u64,
     /// Prepare-cache misses (native; 0 for PJRT) — first touch of a
     /// model's tensors, or re-prepare after the registry dropped them.
+    /// Engine-wide, like `prepare_hits`.
     pub prepare_misses: u64,
+    /// Tuning-table lookups that found a cell and applied its block
+    /// shapes (native with `--tuning`; 0 when no table is loaded).
+    /// Engine-wide, like `prepare_hits`.
+    pub tuned_lookups: u64,
+    /// Tuning-table lookups that fell back to the static default because
+    /// the loaded table has no cell for the workload's dimension.  Stays
+    /// 0 when no table is loaded — an absent table is not a fallback.
+    /// Engine-wide, like `prepare_hits`.
+    pub tuned_fallbacks: u64,
 }
 
 /// What an engine worker drives.  Implementations are single-thread
@@ -125,18 +152,22 @@ impl BackendKind {
     /// the entries the engine hands it per request.  `pool_peers` is how
     /// many sibling backends share this machine (engine workers): the
     /// native backend divides its kernel-thread budget by it so a
-    /// multi-worker engine does not oversubscribe the cores.
-    /// `prepare_cap` bounds the native prepare cache — the coordinator
-    /// passes its `registry_capacity` so every resident model fits
-    /// (PJRT ignores it; its executable cache is keyed by artifact).
+    /// multi-worker engine does not oversubscribe the cores.  `cache` is
+    /// the engine's shared prepare cache — every native worker of one
+    /// engine gets a clone of the same cache, sized by the coordinator
+    /// from `registry_capacity` so every resident model fits.  `tuning`
+    /// is the optional tile-tuning table (`serve --tuning`).  PJRT
+    /// ignores both; its executable cache is keyed by artifact.
     pub fn open(
         self,
         manifest: Manifest,
         pool_peers: usize,
-        prepare_cap: usize,
+        cache: PrepareCache,
+        tuning: Option<Arc<TuningTable>>,
     ) -> Result<Box<dyn ExecBackend>> {
         match self {
             BackendKind::Pjrt => {
+                let _ = (cache, tuning);
                 #[cfg(feature = "pjrt")]
                 {
                     Ok(Box::new(super::store::ExecutableStore::open(manifest)?))
@@ -155,9 +186,10 @@ impl BackendKind {
                 drop(manifest);
                 let threads =
                     (flash::default_threads() / pool_peers.max(1)).max(1);
-                Ok(Box::new(NativeFlash::with_tile_and_capacity(
+                Ok(Box::new(NativeFlash::with_cache(
                     TileConfig { threads, ..TileConfig::default() },
-                    prepare_cap,
+                    cache,
+                    tuning,
                 )))
             }
         }
@@ -201,18 +233,22 @@ pub fn validate_inputs<T: std::borrow::Borrow<HostTensor>>(
 }
 
 /// One prepare-cache entry: `Weak` handles to the registry's train
-/// tensors plus the shared prepared form.  Holding only `Weak`s is the
-/// invalidation mechanism — when the registry (and every handle) drops a
-/// model, the upgrade fails and the slot is purged on the next touch, so
-/// the cache can neither serve a stale model nor keep its memory alive.
+/// tensors, the shared prepared form, and the tile configuration chosen
+/// for this model (the tuning-table lookup runs once, at slot creation —
+/// hits reuse the cached choice, so the hot path pays zero lookup cost).
+/// Holding only `Weak`s is the invalidation mechanism — when the
+/// registry (and every handle) drops a model, the upgrade fails and the
+/// slot is purged on the next touch, so the cache can neither serve a
+/// stale model nor keep its memory alive.
 struct PrepareSlot {
     x: Weak<HostTensor>,
     w: Weak<HostTensor>,
     prep: Arc<flash::PreparedTrain>,
+    tile: TileConfig,
 }
 
-/// Default upper bound on resident prepared models per backend instance —
-/// the standalone-constructor fallback, matching the default registry
+/// Default upper bound on resident prepared models per cache — the
+/// standalone-constructor fallback, matching the default registry
 /// capacity.  The serving path does better: `Coordinator::start` sizes
 /// the cache from `Config::registry_capacity` (via
 /// [`Engine::start`](super::Engine::start) →
@@ -221,6 +257,65 @@ struct PrepareSlot {
 /// cache.  Eviction is least-recently-used: hits refresh their slot,
 /// dead slots are purged before counting.
 pub const DEFAULT_PREPARE_CAP: usize = 64;
+
+/// The resident-model prepare cache, shared by every native worker of
+/// one engine: a bounded, mutex'd slot list (`Mutex<Vec<PrepareSlot>>`)
+/// whose prepared forms are immutable `Arc`s — cloning the cache clones
+/// the handle, not the slots.  `Engine::start` creates one per engine
+/// and hands each worker a clone through [`BackendKind::open`], so
+/// multi-worker native serving prepares a resident model **once**
+/// instead of once per worker (the PR 3 follow-up ROADMAP named).
+/// Standalone [`NativeFlash`] constructors make a private one.
+#[derive(Clone)]
+pub struct PrepareCache {
+    inner: Arc<Mutex<CacheInner>>,
+}
+
+struct CacheInner {
+    slots: Vec<PrepareSlot>,
+    cap: usize,
+    /// Cache-wide counters (surfaced through every worker's `stats()`):
+    /// with the cache shared across engine workers, per-worker counters
+    /// would make `stats()`'s sample-one-worker read misleading — the
+    /// worker that answers may not be the one that prepared.
+    prepare_hits: u64,
+    prepare_misses: u64,
+    tuned_lookups: u64,
+    tuned_fallbacks: u64,
+}
+
+impl CacheInner {
+    fn purge_dead(&mut self) {
+        self.slots
+            .retain(|s| s.x.upgrade().is_some() && s.w.upgrade().is_some());
+    }
+}
+
+impl PrepareCache {
+    /// Cache bounded at `cap` slots (a zero cap is clamped to 1: the
+    /// eviction pops the front slot and must never pop an empty vec).
+    pub fn new(cap: usize) -> Self {
+        PrepareCache {
+            inner: Arc::new(Mutex::new(CacheInner {
+                slots: Vec::new(),
+                cap: cap.max(1),
+                prepare_hits: 0,
+                prepare_misses: 0,
+                tuned_lookups: 0,
+                tuned_fallbacks: 0,
+            })),
+        }
+    }
+
+    /// The slot bound this cache was built with.
+    pub fn capacity(&self) -> usize {
+        self.lock().cap
+    }
+
+    fn lock(&self) -> MutexGuard<'_, CacheInner> {
+        self.inner.lock().expect("prepare cache poisoned")
+    }
+}
 
 /// The native flash backend: dispatches the manifest pipelines onto the
 /// tiled kernels in [`crate::estimator::flash`].
@@ -235,8 +330,8 @@ pub const DEFAULT_PREPARE_CAP: usize = 64;
 pub struct NativeFlash {
     tile: TileConfig,
     stats: StoreStats,
-    prepared: Vec<PrepareSlot>,
-    prepare_cap: usize,
+    cache: PrepareCache,
+    tuning: Option<Arc<TuningTable>>,
 }
 
 impl NativeFlash {
@@ -250,86 +345,131 @@ impl NativeFlash {
         Self::with_tile_and_capacity(tile, DEFAULT_PREPARE_CAP)
     }
 
-    /// Pin tile configuration *and* the prepare-cache bound.  The engine
-    /// sizes `prepare_cap` from the registry capacity so the cache can
-    /// hold every resident model; a zero cap is clamped to 1 (the cache
-    /// eviction pops the front slot and must never pop an empty vec).
+    /// Pin tile configuration *and* the prepare-cache bound, with a
+    /// private (unshared) cache and no tuning table.
     pub fn with_tile_and_capacity(tile: TileConfig, prepare_cap: usize) -> Self {
-        NativeFlash {
-            tile,
-            stats: StoreStats::default(),
-            prepared: Vec::new(),
-            prepare_cap: prepare_cap.max(1),
-        }
+        Self::with_cache(tile, PrepareCache::new(prepare_cap), None)
     }
 
-    /// The tile configuration this backend runs.
+    /// The full serving constructor: pin the tile configuration, attach
+    /// an engine-shared [`PrepareCache`], and optionally a tile-tuning
+    /// table whose nearest-bucket winners override `block_q`/`block_t`
+    /// per workload (threads and the SIMD flag stay from `tile` — the
+    /// engine owns the per-worker thread budget, the build owns SIMD).
+    pub fn with_cache(
+        tile: TileConfig,
+        cache: PrepareCache,
+        tuning: Option<Arc<TuningTable>>,
+    ) -> Self {
+        NativeFlash { tile, stats: StoreStats::default(), cache, tuning }
+    }
+
+    /// The static tile configuration this backend falls back to.
     pub fn tile(&self) -> &TileConfig {
         &self.tile
     }
 
     /// The prepare-cache bound this backend was built with.
     pub fn prepare_capacity(&self) -> usize {
-        self.prepare_cap
+        self.cache.capacity()
     }
 
     /// Live prepare-cache entries (dead slots purged first).
     pub fn prepared_len(&mut self) -> usize {
-        self.purge_dead();
-        self.prepared.len()
+        let mut inner = self.cache.lock();
+        inner.purge_dead();
+        inner.slots.len()
     }
 
     /// Drop prepare-cache slots whose model tensors have been released
     /// (registry delete / LRU eviction).  Runs automatically on every
     /// cache access; exposed for tests and explicit maintenance.
     pub fn prepared_gc(&mut self) {
-        self.purge_dead();
+        self.cache.lock().purge_dead();
     }
 
-    fn purge_dead(&mut self) {
-        self.prepared
-            .retain(|s| s.x.upgrade().is_some() && s.w.upgrade().is_some());
+    /// The tile configuration serving a `(d, n, m)` workload: the tuning
+    /// table's nearest-bucket winner with this backend's threads/SIMD
+    /// flag, or the static default.  Counts `tuned_lookups` /
+    /// `tuned_fallbacks`; with no table loaded neither counter moves.
+    fn choose_tile(&mut self, d: usize, n: usize, m: usize) -> TileConfig {
+        let Some(table) = &self.tuning else {
+            return self.tile;
+        };
+        match table.lookup(d, n, m) {
+            Some(cell) => {
+                self.cache.lock().tuned_lookups += 1;
+                cell.apply(self.tile)
+            }
+            None => {
+                self.cache.lock().tuned_fallbacks += 1;
+                self.tile
+            }
+        }
     }
 
-    /// Resolve the prepared form of a (train, weights) tensor pair,
-    /// reusing the cached one when the *same allocations* were prepared
-    /// before.  Identity is pointer equality of the `Arc` allocations:
-    /// dead slots are purged first, so a surviving slot's address belongs
-    /// to a live allocation and cannot alias a freed model (the caller's
-    /// strong `Arc` pins its own address for the duration — no ABA).
+    /// Resolve the prepared form (and cached tile choice) of a (train,
+    /// weights) tensor pair, reusing the cached one when the *same
+    /// allocations* were prepared before.  Identity is pointer equality
+    /// of the `Arc` allocations: dead slots are purged first, so a
+    /// surviving slot's address belongs to a live allocation and cannot
+    /// alias a freed model (the caller's strong `Arc` pins its own
+    /// address for the duration — no ABA).  `m` is this request's query
+    /// rows — it feeds the tuning lookup on slot creation only; later
+    /// hits reuse the slot's choice (query buckets are stable per model
+    /// on the serving path, and re-running the lookup per request would
+    /// put table scans back on the hot path).
     fn prepared_for(
         &mut self,
         x: &Arc<HostTensor>,
         w: &Arc<HostTensor>,
         d: usize,
-    ) -> Result<Arc<flash::PreparedTrain>> {
-        self.purge_dead();
-        if let Some(pos) = self.prepared.iter().position(|s| {
-            std::ptr::eq(s.x.as_ptr(), Arc::as_ptr(x))
-                && std::ptr::eq(s.w.as_ptr(), Arc::as_ptr(w))
-                && s.prep.d() == d
-        }) {
-            self.stats.prepare_hits += 1;
-            // Refresh: move the slot to the back so eviction is LRU, not
-            // FIFO — churn cannot evict the hottest model first.
-            let slot = self.prepared.remove(pos);
-            let prep = Arc::clone(&slot.prep);
-            self.prepared.push(slot);
-            return Ok(prep);
+        m: usize,
+    ) -> Result<(Arc<flash::PreparedTrain>, TileConfig)> {
+        let find = |slots: &[PrepareSlot]| {
+            slots.iter().position(|s| {
+                std::ptr::eq(s.x.as_ptr(), Arc::as_ptr(x))
+                    && std::ptr::eq(s.w.as_ptr(), Arc::as_ptr(w))
+                    && s.prep.d() == d
+            })
+        };
+        {
+            let mut inner = self.cache.lock();
+            inner.purge_dead();
+            if let Some(pos) = find(&inner.slots) {
+                inner.prepare_hits += 1;
+                // Refresh: move the slot to the back so eviction is LRU,
+                // not FIFO — churn cannot evict the hottest model first.
+                let slot = inner.slots.remove(pos);
+                let out = (Arc::clone(&slot.prep), slot.tile);
+                inner.slots.push(slot);
+                return Ok(out);
+            }
+            inner.prepare_misses += 1;
         }
-        self.stats.prepare_misses += 1;
+        // Miss: prepare outside the lock so sibling workers serving
+        // other (cached) models are not stalled behind this O(n·d) pass.
+        let tile = self.choose_tile(d, w.len(), m);
         // Shape consistency was bailed on in execute() before any kernel
         // or prepare runs; the assert in PreparedTrain::new is vestigial.
         let prep = Arc::new(flash::PreparedTrain::new(x.data(), w.data(), d));
-        if self.prepared.len() >= self.prepare_cap {
-            self.prepared.remove(0);
+        let mut inner = self.cache.lock();
+        if let Some(pos) = find(&inner.slots) {
+            // A sibling worker prepared the same model while we did: use
+            // the shared slot (one canonical prepared form + tile choice).
+            let slot = &inner.slots[pos];
+            return Ok((Arc::clone(&slot.prep), slot.tile));
         }
-        self.prepared.push(PrepareSlot {
+        if inner.slots.len() >= inner.cap {
+            inner.slots.remove(0);
+        }
+        inner.slots.push(PrepareSlot {
             x: Arc::downgrade(x),
             w: Arc::downgrade(w),
             prep: Arc::clone(&prep),
+            tile,
         });
-        Ok(prep)
+        Ok((prep, tile))
     }
 
     /// Positional input access with a typed error — validate_inputs only
@@ -427,26 +567,30 @@ impl ExecBackend for NativeFlash {
 
         let output = match entry.pipeline.as_str() {
             // Serving pipelines: the train side is a resident model's
-            // tensors — reuse (or build) its cached prepared form.
+            // tensors — reuse (or build) its cached prepared form and the
+            // tile choice cached beside it.
             "kde" => {
                 let y = Self::rows_input(inputs, 2, "y", d)?;
                 let h = Self::scalar(inputs, 3, "h")?;
-                let train = self.prepared_for(x_arc, w_arc, d)?;
-                let dens = flash::kde_prepared(&train, y, h, &self.tile);
+                let (train, tile) =
+                    self.prepared_for(x_arc, w_arc, d, y.len() / d)?;
+                let dens = flash::kde_prepared(&train, y, h, &tile);
                 HostTensor::vec1(dens.iter().map(|&v| v as f32).collect())
             }
             "laplace" => {
                 let y = Self::rows_input(inputs, 2, "y", d)?;
                 let h = Self::scalar(inputs, 3, "h")?;
-                let train = self.prepared_for(x_arc, w_arc, d)?;
-                let dens = flash::laplace_prepared(&train, y, h, &self.tile);
+                let (train, tile) =
+                    self.prepared_for(x_arc, w_arc, d, y.len() / d)?;
+                let dens = flash::laplace_prepared(&train, y, h, &tile);
                 HostTensor::vec1(dens.iter().map(|&v| v as f32).collect())
             }
             "score_eval" => {
                 let y = Self::rows_input(inputs, 2, "y", d)?;
                 let h = Self::scalar(inputs, 3, "h")?;
-                let train = self.prepared_for(x_arc, w_arc, d)?;
-                let s = flash::score_at_prepared(&train, y, h, &self.tile);
+                let (train, tile) =
+                    self.prepared_for(x_arc, w_arc, d, y.len() / d)?;
+                let s = flash::score_at_prepared(&train, y, h, &tile);
                 HostTensor::matrix(
                     y.len() / d,
                     d,
@@ -455,11 +599,14 @@ impl ExecBackend for NativeFlash {
             }
             // Fit pipelines: the train set is one-shot (the registry
             // stores the *debiased* output, a different tensor), so
-            // prepare inline and keep the cache for resident models.
+            // prepare inline and keep the cache for resident models; the
+            // tuning lookup still applies (the score pass runs y = x, so
+            // the query bucket is the train bucket).
             "sdkde_fit" => {
                 let h = Self::scalar(inputs, 2, "h")?;
                 let h_s = Self::scalar(inputs, 3, "h_score")?;
-                let x_sd = flash::debias(x, w, d, h, h_s, &self.tile);
+                let tile = self.choose_tile(d, w.len(), w.len());
+                let x_sd = flash::debias(x, w, d, h, h_s, &tile);
                 HostTensor::matrix(w.len(), d, x_sd)?
             }
             // Not routed by the coordinator (SD-KDE evals run "kde" over
@@ -469,7 +616,8 @@ impl ExecBackend for NativeFlash {
                 let y = Self::rows_input(inputs, 2, "y", d)?;
                 let h = Self::scalar(inputs, 3, "h")?;
                 let h_s = Self::scalar(inputs, 4, "h_score")?;
-                let dens = flash::sdkde(x, w, y, d, h, h_s, &self.tile);
+                let tile = self.choose_tile(d, w.len(), y.len() / d);
+                let dens = flash::sdkde(x, w, y, d, h, h_s, &tile);
                 HostTensor::vec1(dens.iter().map(|&v| v as f32).collect())
             }
             other => bail!(
@@ -500,7 +648,17 @@ impl ExecBackend for NativeFlash {
     }
 
     fn stats(&self) -> StoreStats {
-        self.stats
+        // Executions are per worker; the prepare/tuning counters live in
+        // the engine-shared cache, so whichever worker answers a stats
+        // request reports the engine-wide numbers.
+        let inner = self.cache.lock();
+        StoreStats {
+            prepare_hits: inner.prepare_hits,
+            prepare_misses: inner.prepare_misses,
+            tuned_lookups: inner.tuned_lookups,
+            tuned_fallbacks: inner.tuned_fallbacks,
+            ..self.stats
+        }
     }
 
     fn cached_len(&self) -> usize {
@@ -852,5 +1010,113 @@ mod tests {
         assert!(resolve_manifest(BackendKind::Pjrt, missing).is_err());
         let m = resolve_manifest(BackendKind::Native, missing).unwrap();
         assert!(!m.entries().is_empty());
+    }
+
+    #[test]
+    fn prepare_cache_is_shared_across_backend_instances() {
+        // ISSUE 5 satellite: every native worker of one engine clones
+        // the same PrepareCache, so a model prepared by one worker is a
+        // hit for its siblings — and serves the identical prepared form.
+        let (n, m, d) = (48, 4, 2);
+        let mut rng = Pcg64::seeded(31);
+        let entry = kde_entry(n, m, d);
+        let x = Arc::new(HostTensor::matrix(n, d, rng.normal_vec_f32(n * d)).unwrap());
+        let w = Arc::new(HostTensor::full(vec![n], 1.0));
+        let inputs = vec![
+            Arc::clone(&x),
+            Arc::clone(&w),
+            Arc::new(HostTensor::matrix(m, d, rng.normal_vec_f32(m * d)).unwrap()),
+            Arc::new(HostTensor::scalar(0.5)),
+        ];
+
+        let cache = PrepareCache::new(8);
+        let mut worker_a =
+            NativeFlash::with_cache(TileConfig::default(), cache.clone(), None);
+        let mut worker_b =
+            NativeFlash::with_cache(TileConfig::default(), cache, None);
+
+        let out_a = worker_a.execute(&entry, &inputs).expect("worker a");
+        let out_b = worker_b.execute(&entry, &inputs).expect("worker b");
+        assert_eq!(out_a.outputs, out_b.outputs);
+        // Counters are cache-wide, so BOTH workers report the engine
+        // truth: one miss total (worker b reused the shared slot), one
+        // hit — whichever worker a stats request samples.
+        for w in [&worker_a, &worker_b] {
+            assert_eq!(w.stats().prepare_misses, 1, "shared slot re-prepared");
+            assert_eq!(w.stats().prepare_hits, 1);
+        }
+        assert_eq!(worker_a.prepared_len(), 1);
+        assert_eq!(worker_b.prepared_len(), 1, "one cache, one slot");
+    }
+
+    #[test]
+    fn tuning_table_drives_the_tile_choice_without_moving_results() {
+        use crate::tuner::{TunedCell, TuningTable};
+        let (n, m, d) = (64, 8, 2);
+        let mut rng = Pcg64::seeded(37);
+        let entry = kde_entry(n, m, d);
+        let x = Arc::new(HostTensor::matrix(n, d, rng.normal_vec_f32(n * d)).unwrap());
+        let w = Arc::new(HostTensor::full(vec![n], 1.0));
+        let inputs = vec![
+            Arc::clone(&x),
+            Arc::clone(&w),
+            Arc::new(HostTensor::matrix(m, d, rng.normal_vec_f32(m * d)).unwrap()),
+            Arc::new(HostTensor::scalar(0.6)),
+        ];
+        // A cell with deliberately odd block shapes (≠ default), matched
+        // by nearest-bucket lookup for this (d, n, m).
+        let table = Arc::new(
+            TuningTable::new(vec![TunedCell {
+                d,
+                n: 64,
+                m: 8,
+                block_q: 3,
+                block_t: 17,
+                threads: 1,
+                simd: false,
+                best_ms: 0.1,
+                default_ms: 0.2,
+            }])
+            .unwrap(),
+        );
+        // Pin simd off on both sides: on the auto-vec path block shapes
+        // are bitwise result-invariant (flash.rs), so the tuned backend
+        // must produce exactly the untuned output.
+        let base = TileConfig::scalar_tiles();
+        let mut tuned = NativeFlash::with_cache(
+            base,
+            PrepareCache::new(4),
+            Some(Arc::clone(&table)),
+        );
+        let mut untuned =
+            NativeFlash::with_cache(base, PrepareCache::new(4), None);
+
+        let got = tuned.execute(&entry, &inputs).expect("tuned");
+        let want = untuned.execute(&entry, &inputs).expect("untuned");
+        assert_eq!(got.outputs, want.outputs, "tuned tile moved a result");
+        assert_eq!(tuned.stats().tuned_lookups, 1);
+        assert_eq!(tuned.stats().tuned_fallbacks, 0);
+        // No table -> neither counter moves.
+        assert_eq!(untuned.stats().tuned_lookups, 0);
+        assert_eq!(untuned.stats().tuned_fallbacks, 0);
+
+        // Second touch: prepare hit, choice served from the slot — the
+        // lookup counter must NOT move again (zero hot-path lookups).
+        tuned.execute(&entry, &inputs).expect("tuned again");
+        assert_eq!(tuned.stats().tuned_lookups, 1);
+        assert_eq!(tuned.stats().prepare_hits, 1);
+
+        // A dimension the table has no cell for is a counted fallback.
+        let (n2, m2, d2) = (32, 4, 3);
+        let entry2 = kde_entry(n2, m2, d2);
+        let inputs2 = vec![
+            Arc::new(HostTensor::matrix(n2, d2, rng.normal_vec_f32(n2 * d2)).unwrap()),
+            Arc::new(HostTensor::full(vec![n2], 1.0)),
+            Arc::new(HostTensor::matrix(m2, d2, rng.normal_vec_f32(m2 * d2)).unwrap()),
+            Arc::new(HostTensor::scalar(0.5)),
+        ];
+        tuned.execute(&entry2, &inputs2).expect("fallback execute");
+        assert_eq!(tuned.stats().tuned_fallbacks, 1);
+        assert_eq!(tuned.stats().tuned_lookups, 1);
     }
 }

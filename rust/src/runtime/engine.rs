@@ -17,9 +17,12 @@ use std::time::Duration;
 use anyhow::{anyhow, Context, Result};
 
 use super::artifact::{ArtifactEntry, Manifest};
-use super::backend::{BackendKind, ExecBackend as _, ExecOutput, StoreStats};
+use super::backend::{
+    BackendKind, ExecBackend as _, ExecOutput, PrepareCache, StoreStats,
+};
 use super::tensor::HostTensor;
 use crate::log_info;
+use crate::tuner::TuningTable;
 
 /// What to execute: an exact artifact entry (resolved by the caller via the
 /// shared `Manifest`, which is plain data and freely shareable).
@@ -78,31 +81,37 @@ impl Drop for EngineInner {
 impl Engine {
     /// Start `workers` threads, each owning its own `backend` instance
     /// (a PJRT client + executable cache, or a native kernel runner).
-    /// `prepare_cap` bounds each native worker's resident-model prepare
-    /// cache — the coordinator passes its registry capacity so every
-    /// resident model can keep its prepared form (ignored by PJRT).
+    /// `prepare_cap` bounds the engine's resident-model prepare cache —
+    /// **one cache, shared by every native worker** (the coordinator
+    /// passes its registry capacity so every resident model can keep its
+    /// prepared form; ignored by PJRT).  `tuning` is the optional
+    /// tile-tuning table every native worker consults (`serve --tuning`).
     pub fn start(
         manifest: Manifest,
         workers: usize,
         backend: BackendKind,
         prepare_cap: usize,
+        tuning: Option<Arc<TuningTable>>,
     ) -> Result<Engine> {
         assert!(workers >= 1, "engine needs at least one worker");
         let (tx, rx) = channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
         let manifest = Arc::new(manifest);
+        let cache = PrepareCache::new(prepare_cap);
 
         let mut handles = Vec::with_capacity(workers);
         for worker_id in 0..workers {
             let rx = Arc::clone(&rx);
             let manifest = Manifest::clone(&manifest);
+            let cache = cache.clone();
+            let tuning = tuning.clone();
             let (ready_tx, ready_rx) = channel::<Result<()>>();
             let handle = std::thread::Builder::new()
                 .name(format!("engine-{worker_id}"))
                 .spawn(move || {
                     worker_loop(
-                        worker_id, workers, backend, prepare_cap, manifest, rx,
-                        ready_tx,
+                        worker_id, workers, backend, cache, tuning, manifest,
+                        rx, ready_tx,
                     )
                 })
                 .context("spawning engine worker")?;
@@ -161,16 +170,18 @@ impl Engine {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn worker_loop(
     worker_id: usize,
     pool_size: usize,
     backend: BackendKind,
-    prepare_cap: usize,
+    cache: PrepareCache,
+    tuning: Option<Arc<TuningTable>>,
     manifest: Manifest,
     rx: Arc<Mutex<Receiver<Job>>>,
     ready: Sender<Result<()>>,
 ) {
-    let mut store = match backend.open(manifest, pool_size, prepare_cap) {
+    let mut store = match backend.open(manifest, pool_size, cache, tuning) {
         Ok(s) => {
             let _ = ready.send(Ok(()));
             s

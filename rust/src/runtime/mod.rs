@@ -17,7 +17,9 @@ pub mod store;
 pub mod tensor;
 
 pub use artifact::{ArtifactEntry, Manifest, TensorSpec};
-pub use backend::{BackendKind, ExecBackend, ExecOutput, NativeFlash, StoreStats};
+pub use backend::{
+    BackendKind, ExecBackend, ExecOutput, NativeFlash, PrepareCache, StoreStats,
+};
 pub use engine::Engine;
 #[cfg(feature = "pjrt")]
 pub use store::ExecutableStore;

@@ -1,0 +1,143 @@
+//! Candidate [`TileConfig`] enumeration for the tuner.
+//!
+//! The space is the cross product of block-shape, thread and SIMD axes,
+//! pruned by the same constraints [`TileConfig::checked`] clamps at
+//! kernel entry (every field ≥ 1), by a tile-buffer byte cap (the dots
+//! scratch is `block_q × block_t` f32s — the CPU analogue of the paper's
+//! VMEM bound on BLOCK_M × BLOCK_N), and by *effective-shape*
+//! deduplication: tiles larger than the problem clamp to the problem, so
+//! two candidates whose clamped shapes coincide would measure the same
+//! kernel twice.  Enumeration order is deterministic (axes in declaration
+//! order), which is what makes the tuner's strict-minimum winner
+//! selection reproducible under timing ties.
+
+use crate::estimator::flash::TileConfig;
+
+/// Upper bound on `block_q * block_t` — 1 Mi f32 elements = 4 MiB of
+/// dots scratch per worker, comfortably inside L2 on the machines this
+/// serves and far past the point where bigger tiles stop helping.
+pub const MAX_TILE_ELEMS: usize = 1 << 20;
+
+/// The candidate axes the tuner sweeps.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CandidateSpace {
+    /// Query-rows-per-tile axis (BLOCK_M analogue).
+    pub block_q: Vec<usize>,
+    /// Train-rows-per-tile axis (BLOCK_N analogue).
+    pub block_t: Vec<usize>,
+    /// Thread-bound axis.  Defaults to `[1]`: winners should reflect
+    /// kernel effects, not parallelism (thread partitioning never
+    /// changes results or per-core behaviour), matching the
+    /// single-threaded convention of `ablation_blocksweep` and the
+    /// `native` bench series.
+    pub threads: Vec<usize>,
+    /// SIMD-flag axis.  Defaults to the build's flag (the config the
+    /// serving path actually runs); sweeping both only makes sense on a
+    /// nightly `--features simd` build.
+    pub simd: Vec<bool>,
+}
+
+impl Default for CandidateSpace {
+    fn default() -> Self {
+        CandidateSpace {
+            block_q: vec![8, 16, 32, 64],
+            block_t: vec![64, 128, 256, 512],
+            threads: vec![1],
+            simd: vec![TileConfig::default().simd],
+        }
+    }
+}
+
+impl CandidateSpace {
+    /// Tiny space for `tune --quick` (CI smoke): 2×2 block shapes, one
+    /// thread, the build's SIMD flag.
+    pub fn quick() -> Self {
+        CandidateSpace {
+            block_q: vec![16, 32],
+            block_t: vec![128, 256],
+            ..CandidateSpace::default()
+        }
+    }
+
+    /// Enumerate the pruned candidate list for an `(n, m)` cell, in
+    /// deterministic axis order.  Pruning: candidates any of whose
+    /// fields `TileConfig::checked` would clamp (zeros) are dropped,
+    /// tile buffers over [`MAX_TILE_ELEMS`] are dropped, and candidates
+    /// whose *effective* shape — `(block_q.min(m), block_t.min(n),
+    /// threads, simd)` — repeats an earlier candidate's are dropped
+    /// (clamped tiles run the identical kernel).
+    pub fn enumerate(&self, n: usize, m: usize) -> Vec<TileConfig> {
+        let mut seen = std::collections::BTreeSet::new();
+        let mut out = Vec::new();
+        for &simd in &self.simd {
+            for &threads in &self.threads {
+                for &block_q in &self.block_q {
+                    for &block_t in &self.block_t {
+                        let c = TileConfig { block_q, block_t, threads, simd };
+                        if c.checked() != c {
+                            continue; // a zero field: degenerate
+                        }
+                        if block_q * block_t > MAX_TILE_ELEMS {
+                            continue; // dots scratch over the byte cap
+                        }
+                        let eff =
+                            (block_q.min(m.max(1)), block_t.min(n.max(1)), threads, simd);
+                        if seen.insert(eff) {
+                            out.push(c);
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_space_enumerates_the_full_cross_product_on_big_problems() {
+        let s = CandidateSpace::default();
+        let c = s.enumerate(1 << 16, 1 << 12);
+        assert_eq!(c.len(), 16, "4x4 blocks, 1 thread axis, 1 simd axis");
+        // Deterministic order: first candidate is the smallest shape.
+        assert_eq!((c[0].block_q, c[0].block_t), (8, 64));
+        assert!(c.iter().all(|c| c.threads == 1));
+    }
+
+    #[test]
+    fn small_problems_dedupe_clamped_shapes() {
+        let s = CandidateSpace::default();
+        // n = 64 clamps every block_t axis value to 64: one block_t
+        // survives per block_q; m = 8 clamps every block_q to 8.
+        let c = s.enumerate(64, 8);
+        assert_eq!(c.len(), 1, "{c:?}");
+        assert_eq!((c[0].block_q, c[0].block_t), (8, 64));
+    }
+
+    #[test]
+    fn pruning_drops_zeros_and_oversized_tiles() {
+        let s = CandidateSpace {
+            block_q: vec![0, 2048],
+            block_t: vec![1024, 0],
+            threads: vec![1],
+            simd: vec![false],
+        };
+        // 2048 * 1024 = 2^21 > MAX_TILE_ELEMS; everything else has a zero.
+        assert!(s.enumerate(1 << 16, 1 << 12).is_empty());
+        let ok = CandidateSpace {
+            block_q: vec![1024],
+            block_t: vec![1024],
+            threads: vec![1],
+            simd: vec![false],
+        };
+        assert_eq!(ok.enumerate(1 << 16, 1 << 12).len(), 1);
+    }
+
+    #[test]
+    fn quick_space_is_small() {
+        assert_eq!(CandidateSpace::quick().enumerate(1 << 12, 1 << 9).len(), 4);
+    }
+}

@@ -1,0 +1,265 @@
+//! Autotuner: measured per-workload tile tuning for the native backend.
+//!
+//! The paper's §6.2 launch-parameter sweep shows the optimal
+//! BLOCK_M × BLOCK_N moves with problem size; the native backend's CPU
+//! analogue has the same shape-sensitivity in `TileConfig`, yet serving
+//! ran one static default for every workload.  This subsystem closes the
+//! loop (ROADMAP "Adaptive tile tuning"):
+//!
+//! 1. [`CandidateSpace`] enumerates a pruned grid of `TileConfig`
+//!    candidates (`candidates` module);
+//! 2. [`tune`] micro-benchmarks each candidate **in-process** on
+//!    deterministic synthetic workloads — the canonical benchmark
+//!    mixtures ([`crate::data::mixture::by_dim`]), seeded like the bench
+//!    harness — across a grid of `(d, n-bucket, m-bucket)` cells,
+//!    reusing the `ablation_blocksweep` timing/reporting conventions
+//!    ([`measure`]/[`Table`]);
+//! 3. the winners persist as a versioned, schema-checked JSON
+//!    [`TuningTable`] (`table` module) that `flash-sdkde serve --tuning`
+//!    loads and `NativeFlash` consults at prepare time (nearest-bucket
+//!    lookup, static-default fallback, choice cached in the resident
+//!    model's prepare slot — DESIGN.md §13).
+//!
+//! The measured kernel is the KDE eval over a pre-built
+//! [`flash::PreparedTrain`] — the resident-model serving hot path the
+//! table exists to speed up.  Measurements run single-threaded by
+//! default so winners reflect tile effects, not parallelism (thread
+//! partitioning never changes results, and the engine owns the serving
+//! thread budget); the SIMD axis follows the build.  Applying a tuned
+//! cell changes only `block_q`/`block_t` at serving time, and on the
+//! auto-vectorized path block shapes are **bitwise result-invariant**
+//! (the density accumulation is strictly train-row-sequential; see
+//! `estimator::flash`), so a tuned table can never move a served result.
+
+pub mod candidates;
+pub mod table;
+
+pub use candidates::CandidateSpace;
+pub use table::{TuneError, TunedCell, TuningTable};
+
+use anyhow::Result;
+
+use crate::bench_harness::report::{fmt_ms, fmt_speedup, Table};
+use crate::bench_harness::runner::{black_box, measure, RunSpec};
+use crate::data::mixture::by_dim;
+use crate::estimator::bandwidth;
+use crate::estimator::flash::{self, PreparedTrain, TileConfig};
+use crate::util::rng::Pcg64;
+
+/// One workload cell to tune: dimension, train bucket, query bucket.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Cell {
+    /// Data dimension.
+    pub d: usize,
+    /// Train rows.
+    pub n: usize,
+    /// Query rows.
+    pub m: usize,
+}
+
+/// Everything one tuning run needs: the cell grid, the candidate space,
+/// the measurement policy, and the data seed.
+#[derive(Debug, Clone)]
+pub struct TuneSpec {
+    /// Dimensions to tune (each crossed with every size).
+    pub dims: Vec<usize>,
+    /// Train sizes per dimension; the query bucket is `n / 8` (the
+    /// paper's n_test ratio), floored at 1.
+    pub sizes: Vec<usize>,
+    /// Warmup/iteration policy per candidate measurement.
+    pub spec: RunSpec,
+    /// The candidate axes.
+    pub space: CandidateSpace,
+    /// Base seed for the deterministic synthetic workloads (each cell
+    /// draws from `seed + cell index`).
+    pub seed: u64,
+}
+
+impl TuneSpec {
+    /// The default production grid: the paper's two benchmark dimensions
+    /// over three octave-spaced sizes, two measured iterations each.
+    pub fn default_grid() -> Self {
+        TuneSpec {
+            dims: vec![1, 16],
+            sizes: vec![512, 2048, 8192],
+            spec: RunSpec::new(1, 2),
+            space: CandidateSpace::default(),
+            seed: 42,
+        }
+    }
+
+    /// Tiny grid for `tune --quick` (CI smoke): one low-d cell, a 2×2
+    /// candidate space, a single unwarmed iteration.
+    pub fn quick() -> Self {
+        TuneSpec {
+            dims: vec![2],
+            sizes: vec![256],
+            spec: RunSpec::new(0, 1),
+            space: CandidateSpace::quick(),
+            seed: 42,
+        }
+    }
+
+    /// The cell grid this spec tunes, in deterministic order.
+    pub fn cells(&self) -> Vec<Cell> {
+        let mut out = Vec::new();
+        for &d in &self.dims {
+            for &n in &self.sizes {
+                out.push(Cell { d, n, m: (n / 8).max(1) });
+            }
+        }
+        out
+    }
+}
+
+/// Result of a tuning run: the persistable table plus the report tables
+/// (`ablation_blocksweep`-style candidate rankings per cell, and one
+/// summary) for the console/CSV surfaces.
+pub struct TuneOutcome {
+    /// The validated winners, ready to `save`.
+    pub table: TuningTable,
+    /// Per-cell candidate rankings, best first.
+    pub reports: Vec<Table>,
+    /// One row per cell: winner vs the static default.
+    pub summary: Table,
+}
+
+/// Run the tuner over `spec`'s grid and return the winners plus report
+/// tables.  Deterministic inputs (seeded mixtures, fixed candidate
+/// order, strict-minimum winner selection) — only the timings themselves
+/// vary run to run.
+pub fn tune(spec: &TuneSpec) -> Result<TuneOutcome> {
+    let mut cells = Vec::new();
+    let mut reports = Vec::new();
+    let mut summary = Table::new(
+        "tune — measured tile configs (KDE eval over a prepared train side)",
+        &["d", "n_train", "n_query", "block_q", "block_t", "best (ms)",
+          "default (ms)", "vs default"],
+    );
+    summary.note(
+        "winner applied at serve time via --tuning (block shapes only; \
+         threads/simd stay engine-owned); default = the static TileConfig \
+         the backend runs without a table",
+    );
+    summary.note(&format!(
+        "iters={} warmup={} seed={} simd axis {:?}",
+        spec.spec.iters, spec.spec.warmup, spec.seed, spec.space.simd
+    ));
+
+    for (idx, cell) in spec.cells().into_iter().enumerate() {
+        let Cell { d, n, m } = cell;
+        let mix = by_dim(d);
+        let mut rng = Pcg64::new(spec.seed + idx as u64, 77);
+        let x = mix.sample(n, &mut rng);
+        let y = mix.sample(m, &mut rng);
+        let w = vec![1.0f32; n];
+        let h = bandwidth::sdkde_rate(&x, n, d);
+        let train = PreparedTrain::new(&x, &w, d);
+
+        // The static default, restricted to the measurement policy
+        // (serial, first SIMD-axis value) so the comparison isolates
+        // block shapes.
+        let simd =
+            spec.space.simd.first().copied().unwrap_or(TileConfig::default().simd);
+        let default_cfg = TileConfig { threads: 1, simd, ..TileConfig::default() };
+        let default_ms = measure("default", spec.spec, || {
+            black_box(flash::kde_prepared(&train, &y, h, &default_cfg));
+        })
+        .mean_ms();
+
+        let mut ranked: Vec<(TileConfig, f64)> = Vec::new();
+        let mut best: Option<(TileConfig, f64)> = None;
+        for cand in spec.space.enumerate(n, m) {
+            let ms = measure("candidate", spec.spec, || {
+                black_box(flash::kde_prepared(&train, &y, h, &cand));
+            })
+            .mean_ms();
+            // Strict minimum: under a timing tie the earliest candidate
+            // in enumeration order wins, deterministically.
+            let better = match &best {
+                None => true,
+                Some((_, b)) => ms < *b,
+            };
+            if better {
+                best = Some((cand, ms));
+            }
+            ranked.push((cand, ms));
+        }
+        let Some((win, best_ms)) = best else {
+            continue; // empty candidate space for this cell: nothing to record
+        };
+
+        ranked.sort_by(|a, b| a.1.partial_cmp(&b.1).expect("finite timings"));
+        let mut report = Table::new(
+            &format!("tune cell d={d} n={n} m={m} — candidate sweep"),
+            &["block_q", "block_t", "threads", "simd", "runtime (ms)", "vs best"],
+        );
+        for (c, ms) in &ranked {
+            report.row(vec![
+                c.block_q.to_string(),
+                c.block_t.to_string(),
+                c.threads.to_string(),
+                c.simd.to_string(),
+                fmt_ms(*ms),
+                fmt_speedup(ms / best_ms),
+            ]);
+        }
+        reports.push(report);
+
+        summary.row(vec![
+            d.to_string(),
+            n.to_string(),
+            m.to_string(),
+            win.block_q.to_string(),
+            win.block_t.to_string(),
+            fmt_ms(best_ms),
+            fmt_ms(default_ms),
+            fmt_speedup(default_ms / best_ms),
+        ]);
+        cells.push(TunedCell {
+            d,
+            n,
+            m,
+            block_q: win.block_q,
+            block_t: win.block_t,
+            threads: win.threads,
+            simd: win.simd,
+            best_ms,
+            default_ms,
+        });
+    }
+
+    Ok(TuneOutcome { table: TuningTable::new(cells)?, reports, summary })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_grid_produces_one_valid_cell_per_entry() {
+        let spec = TuneSpec::quick();
+        assert_eq!(spec.cells(), vec![Cell { d: 2, n: 256, m: 32 }]);
+        let out = tune(&spec).expect("tune");
+        assert_eq!(out.table.cells().len(), 1);
+        let c = out.table.cells()[0];
+        assert_eq!((c.d, c.n, c.m), (2, 256, 32));
+        // The winner came out of the declared candidate space.
+        assert!(spec.space.block_q.contains(&c.block_q));
+        assert!(spec.space.block_t.contains(&c.block_t));
+        assert!(c.best_ms.is_finite() && c.default_ms.is_finite());
+        // Reports: one ranked table per cell plus the summary row.
+        assert_eq!(out.reports.len(), 1);
+        assert_eq!(out.summary.rows.len(), 1);
+        assert!(!out.reports[0].rows.is_empty());
+    }
+
+    #[test]
+    fn default_grid_cells_cross_dims_and_sizes() {
+        let spec = TuneSpec::default_grid();
+        let cells = spec.cells();
+        assert_eq!(cells.len(), spec.dims.len() * spec.sizes.len());
+        assert!(cells.contains(&Cell { d: 16, n: 8192, m: 1024 }));
+        assert!(cells.contains(&Cell { d: 1, n: 512, m: 64 }));
+    }
+}

@@ -1,0 +1,458 @@
+//! The persisted tuning table: versioned, schema-checked JSON mapping
+//! workload buckets to measured-best tile configurations.
+//!
+//! A [`TuningTable`] is a flat list of [`TunedCell`]s, each recording the
+//! winning `(block_q, block_t)` pair the tuner measured for one
+//! `(d, n-bucket, m-bucket)` workload cell, plus the measurement context
+//! (thread count, SIMD flag, best/default runtimes).  Lookup is
+//! **nearest-bucket**: the dimension must match exactly (a different `d`
+//! changes the kernel's arithmetic shape, so cross-`d` extrapolation is
+//! meaningless), and among same-`d` cells the one closest to the queried
+//! `(n, m)` in log₂ space wins, ties broken deterministically toward the
+//! smallest bucket (cells are kept sorted by `(d, n, m)` and the first
+//! strict minimum is taken).
+//!
+//! Persistence is the project's dependency-free JSON
+//! ([`crate::util::json`]) under a `schema`/`version` envelope; loading a
+//! corrupt, mistyped, or version-mismatched table is a typed
+//! [`TuneError`], never a panic — a bad table must fail `serve` startup
+//! loudly, not wedge a worker.  Unknown keys are rejected like the config
+//! parser does: a typo'd hand-edited table should not silently lose its
+//! meaning.
+
+use std::fmt;
+use std::path::Path;
+
+use crate::estimator::flash::TileConfig;
+use crate::util::json::{self, Value};
+
+/// Schema identifier stamped into every table file.
+pub const SCHEMA: &str = "flash-sdkde-tuning";
+
+/// Current table format version.  Bump on any semantic change to the
+/// cell fields or lookup contract; loaders reject other versions with
+/// [`TuneError::Version`] (no silent migration).
+pub const VERSION: u64 = 1;
+
+/// One tuned cell: the measured-best block shape for a workload bucket.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TunedCell {
+    /// Data dimension the cell was measured at (matched exactly).
+    pub d: usize,
+    /// Train-row bucket (nearest-bucket matched in log₂ space).
+    pub n: usize,
+    /// Query-row bucket (nearest-bucket matched in log₂ space).
+    pub m: usize,
+    /// Winning query-rows-per-tile (BLOCK_M analogue).
+    pub block_q: usize,
+    /// Winning train-rows-per-tile (BLOCK_N analogue).
+    pub block_t: usize,
+    /// Thread bound the measurement ran under (context, not applied at
+    /// serving time: the engine owns the per-worker thread budget).
+    pub threads: usize,
+    /// Whether the measurement ran the explicit-SIMD inner loops
+    /// (context, not applied: the serving flag follows the build).
+    pub simd: bool,
+    /// Mean runtime of the winning candidate, milliseconds.
+    pub best_ms: f64,
+    /// Mean runtime of the static default config on the same workload,
+    /// milliseconds (the tuned-vs-default record, BENCHMARKS.md).
+    pub default_ms: f64,
+}
+
+impl TunedCell {
+    /// The one partial-application policy, shared by serving and every
+    /// bench surface: block shapes come from the cell, `threads` and the
+    /// SIMD flag stay with `base` (the engine owns the per-worker thread
+    /// budget; the build owns SIMD).  A table measured anywhere is
+    /// therefore safe to apply everywhere — and on the auto-vec path the
+    /// result is bitwise what `base` computes (DESIGN.md §13).
+    pub fn apply(&self, base: TileConfig) -> TileConfig {
+        TileConfig { block_q: self.block_q, block_t: self.block_t, ..base }
+            .checked()
+    }
+}
+
+/// Typed errors loading or validating a tuning table.  Every failure
+/// mode of a file from disk — unreadable, unparseable, wrong schema,
+/// wrong version, semantically invalid — maps to a distinct variant so
+/// callers (and tests) can tell them apart.
+#[derive(Debug, Clone)]
+pub enum TuneError {
+    /// The file could not be read or written.
+    Io {
+        /// Path that failed.
+        path: String,
+        /// Underlying error text.
+        error: String,
+    },
+    /// The file is not valid JSON.
+    Json {
+        /// Path that failed.
+        path: String,
+        /// Parser error (with byte offset).
+        error: String,
+    },
+    /// The table's format version does not match this binary's.
+    Version {
+        /// Version stamped in the file.
+        found: u64,
+        /// Version this binary reads/writes ([`VERSION`]).
+        expected: u64,
+    },
+    /// The JSON parsed but violates the table schema (wrong types,
+    /// missing/unknown keys, invalid or duplicate cells).
+    Schema(String),
+}
+
+impl fmt::Display for TuneError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TuneError::Io { path, error } => {
+                write!(f, "tuning table {path}: {error}")
+            }
+            TuneError::Json { path, error } => {
+                write!(f, "tuning table {path} is not valid JSON: {error}")
+            }
+            TuneError::Version { found, expected } => write!(
+                f,
+                "tuning table version {found} is not supported (this binary \
+                 reads version {expected}; re-run `flash-sdkde tune`)"
+            ),
+            TuneError::Schema(msg) => write!(f, "tuning table schema: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for TuneError {}
+
+/// A validated set of tuned cells with nearest-bucket lookup.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TuningTable {
+    /// Sorted by (d, n, m); validated non-degenerate and duplicate-free.
+    cells: Vec<TunedCell>,
+}
+
+impl TuningTable {
+    /// Build a table from cells, validating each (all shape fields
+    /// ≥ 1 — the same constraints `TileConfig::checked` clamps —
+    /// finite non-negative runtimes) and rejecting duplicate
+    /// `(d, n, m)` keys.  Cells are sorted by `(d, n, m)` so lookup
+    /// tie-breaking and rendering are deterministic.
+    pub fn new(mut cells: Vec<TunedCell>) -> Result<TuningTable, TuneError> {
+        for c in &cells {
+            if c.d == 0 || c.n == 0 || c.m == 0 {
+                return Err(TuneError::Schema(format!(
+                    "cell (d={}, n={}, m={}) has a zero shape field",
+                    c.d, c.n, c.m
+                )));
+            }
+            if c.block_q == 0 || c.block_t == 0 || c.threads == 0 {
+                return Err(TuneError::Schema(format!(
+                    "cell (d={}, n={}, m={}) has a zero tile field \
+                     (block_q={}, block_t={}, threads={})",
+                    c.d, c.n, c.m, c.block_q, c.block_t, c.threads
+                )));
+            }
+            if !(c.best_ms.is_finite() && c.best_ms >= 0.0)
+                || !(c.default_ms.is_finite() && c.default_ms >= 0.0)
+            {
+                return Err(TuneError::Schema(format!(
+                    "cell (d={}, n={}, m={}) has a non-finite or negative \
+                     runtime",
+                    c.d, c.n, c.m
+                )));
+            }
+        }
+        cells.sort_by_key(|c| (c.d, c.n, c.m));
+        if let Some(w) = cells.windows(2).find(|w| {
+            (w[0].d, w[0].n, w[0].m) == (w[1].d, w[1].n, w[1].m)
+        }) {
+            return Err(TuneError::Schema(format!(
+                "duplicate cell (d={}, n={}, m={})",
+                w[0].d, w[0].n, w[0].m
+            )));
+        }
+        Ok(TuningTable { cells })
+    }
+
+    /// The validated cells, sorted by `(d, n, m)`.
+    pub fn cells(&self) -> &[TunedCell] {
+        &self.cells
+    }
+
+    /// Nearest-bucket lookup for a `(d, n, m)` workload.  `d` must match
+    /// a cell exactly (`None` otherwise — the caller falls back to the
+    /// static default); among same-`d` cells the squared log₂ distance
+    /// over `(n, m)` is minimized, first strict minimum in `(n, m)`
+    /// order winning — so equidistant neighbours resolve to the smaller
+    /// bucket, deterministically.
+    pub fn lookup(&self, d: usize, n: usize, m: usize) -> Option<&TunedCell> {
+        if d == 0 {
+            return None;
+        }
+        let (ln, lm) = ((n.max(1) as f64).log2(), (m.max(1) as f64).log2());
+        let mut best: Option<(f64, &TunedCell)> = None;
+        for c in self.cells.iter().filter(|c| c.d == d) {
+            let dn = ln - (c.n as f64).log2();
+            let dm = lm - (c.m as f64).log2();
+            let dist = dn * dn + dm * dm;
+            let better = match best {
+                None => true,
+                Some((b, _)) => dist < b,
+            };
+            if better {
+                best = Some((dist, c));
+            }
+        }
+        best.map(|(_, c)| c)
+    }
+
+    /// Render as the versioned JSON document [`Self::from_json`] reads.
+    pub fn to_json(&self) -> Value {
+        Value::object(vec![
+            ("schema", Value::from(SCHEMA)),
+            ("version", Value::from(VERSION)),
+            (
+                "cells",
+                Value::Array(
+                    self.cells
+                        .iter()
+                        .map(|c| {
+                            Value::object(vec![
+                                ("d", Value::from(c.d)),
+                                ("n", Value::from(c.n)),
+                                ("m", Value::from(c.m)),
+                                ("block_q", Value::from(c.block_q)),
+                                ("block_t", Value::from(c.block_t)),
+                                ("threads", Value::from(c.threads)),
+                                ("simd", Value::from(c.simd)),
+                                ("best_ms", Value::Number(c.best_ms)),
+                                ("default_ms", Value::Number(c.default_ms)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Parse and validate the versioned JSON document.  Schema and
+    /// version are checked before any cell is read; unknown keys (root
+    /// and cell level) are rejected like the config parser does.
+    pub fn from_json(v: &Value) -> Result<TuningTable, TuneError> {
+        let obj = v
+            .as_object()
+            .ok_or_else(|| TuneError::Schema("root must be an object".into()))?;
+        for key in obj.keys() {
+            if !["schema", "version", "cells"].contains(&key.as_str()) {
+                return Err(TuneError::Schema(format!("unknown key {key:?}")));
+            }
+        }
+        let schema = obj
+            .get("schema")
+            .and_then(Value::as_str)
+            .ok_or_else(|| TuneError::Schema("missing \"schema\" string".into()))?;
+        if schema != SCHEMA {
+            return Err(TuneError::Schema(format!(
+                "schema {schema:?} is not {SCHEMA:?}"
+            )));
+        }
+        let version = obj
+            .get("version")
+            .and_then(Value::as_usize)
+            .ok_or_else(|| TuneError::Schema("missing \"version\" integer".into()))?
+            as u64;
+        if version != VERSION {
+            return Err(TuneError::Version { found: version, expected: VERSION });
+        }
+        let cells_v = obj
+            .get("cells")
+            .and_then(Value::as_array)
+            .ok_or_else(|| TuneError::Schema("missing \"cells\" array".into()))?;
+
+        let known = [
+            "d", "n", "m", "block_q", "block_t", "threads", "simd",
+            "best_ms", "default_ms",
+        ];
+        let mut cells = Vec::with_capacity(cells_v.len());
+        for (i, cv) in cells_v.iter().enumerate() {
+            let co = cv.as_object().ok_or_else(|| {
+                TuneError::Schema(format!("cell {i} must be an object"))
+            })?;
+            for key in co.keys() {
+                if !known.contains(&key.as_str()) {
+                    return Err(TuneError::Schema(format!(
+                        "cell {i}: unknown key {key:?}"
+                    )));
+                }
+            }
+            let int = |name: &str| -> Result<usize, TuneError> {
+                cv.get(name).and_then(Value::as_usize).ok_or_else(|| {
+                    TuneError::Schema(format!(
+                        "cell {i}: missing or non-integer {name:?}"
+                    ))
+                })
+            };
+            let num = |name: &str| -> Result<f64, TuneError> {
+                cv.get(name).and_then(Value::as_f64).ok_or_else(|| {
+                    TuneError::Schema(format!(
+                        "cell {i}: missing or non-numeric {name:?}"
+                    ))
+                })
+            };
+            cells.push(TunedCell {
+                d: int("d")?,
+                n: int("n")?,
+                m: int("m")?,
+                block_q: int("block_q")?,
+                block_t: int("block_t")?,
+                threads: int("threads")?,
+                simd: cv.get("simd").and_then(Value::as_bool).ok_or_else(|| {
+                    TuneError::Schema(format!(
+                        "cell {i}: missing or non-boolean \"simd\""
+                    ))
+                })?,
+                best_ms: num("best_ms")?,
+                default_ms: num("default_ms")?,
+            });
+        }
+        TuningTable::new(cells)
+    }
+
+    /// Write the table to `path` as JSON.
+    pub fn save(&self, path: &Path) -> Result<(), TuneError> {
+        std::fs::write(path, json::to_string(&self.to_json())).map_err(|e| {
+            TuneError::Io { path: path.display().to_string(), error: e.to_string() }
+        })
+    }
+
+    /// Load and validate a table from `path`.  Every failure is a typed
+    /// [`TuneError`]; this never panics on foreign bytes.
+    pub fn load(path: &Path) -> Result<TuningTable, TuneError> {
+        let text = std::fs::read_to_string(path).map_err(|e| TuneError::Io {
+            path: path.display().to_string(),
+            error: e.to_string(),
+        })?;
+        let v = json::parse(&text).map_err(|e| TuneError::Json {
+            path: path.display().to_string(),
+            error: e.to_string(),
+        })?;
+        Self::from_json(&v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cell(d: usize, n: usize, m: usize, bq: usize, bt: usize) -> TunedCell {
+        TunedCell {
+            d,
+            n,
+            m,
+            block_q: bq,
+            block_t: bt,
+            threads: 1,
+            simd: false,
+            best_ms: 1.0,
+            default_ms: 2.0,
+        }
+    }
+
+    #[test]
+    fn json_round_trip_is_identity() {
+        let t = TuningTable::new(vec![
+            cell(16, 4096, 512, 64, 128),
+            cell(1, 1024, 128, 8, 512),
+        ])
+        .unwrap();
+        let back = TuningTable::from_json(&t.to_json()).unwrap();
+        assert_eq!(t, back);
+        // Sorted by (d, n, m) regardless of construction order.
+        assert_eq!(back.cells()[0].d, 1);
+    }
+
+    #[test]
+    fn exact_and_nearest_lookups() {
+        let t = TuningTable::new(vec![
+            cell(16, 1024, 128, 16, 64),
+            cell(16, 8192, 1024, 64, 512),
+            cell(1, 1024, 128, 8, 256),
+        ])
+        .unwrap();
+        // Exact hit.
+        assert_eq!(t.lookup(16, 1024, 128).unwrap().block_q, 16);
+        // Nearest in log space: 4096 x 600 is closer to the 8192 cell.
+        assert_eq!(t.lookup(16, 4096, 600).unwrap().block_q, 64);
+        // Small workloads snap to the small cell.
+        assert_eq!(t.lookup(16, 256, 32).unwrap().block_q, 16);
+        // Dimension must match exactly.
+        assert!(t.lookup(3, 1024, 128).is_none());
+        assert!(t.lookup(0, 1024, 128).is_none());
+        // d = 1 resolves independently of the d = 16 cells.
+        assert_eq!(t.lookup(1, 700, 90).unwrap().block_t, 256);
+    }
+
+    #[test]
+    fn equidistant_lookup_breaks_ties_toward_the_smaller_bucket() {
+        // 2048 is exactly one octave from both 1024 and 4096: the tie
+        // must resolve to the smaller bucket, every time.
+        let t = TuningTable::new(vec![
+            cell(16, 1024, 128, 11, 64),
+            cell(16, 4096, 128, 22, 64),
+        ])
+        .unwrap();
+        for _ in 0..8 {
+            assert_eq!(t.lookup(16, 2048, 128).unwrap().block_q, 11);
+        }
+    }
+
+    #[test]
+    fn validation_rejects_degenerate_and_duplicate_cells() {
+        let dup = TuningTable::new(vec![
+            cell(16, 1024, 128, 16, 64),
+            cell(16, 1024, 128, 32, 32),
+        ]);
+        assert!(matches!(dup, Err(TuneError::Schema(_))), "{dup:?}");
+        let zero = TuningTable::new(vec![cell(16, 1024, 128, 0, 64)]);
+        assert!(matches!(zero, Err(TuneError::Schema(_))), "{zero:?}");
+        let mut bad = cell(16, 1024, 128, 16, 64);
+        bad.best_ms = f64::NAN;
+        assert!(TuningTable::new(vec![bad]).is_err());
+    }
+
+    #[test]
+    fn from_json_rejects_wrong_envelope() {
+        let t = TuningTable::new(vec![cell(16, 1024, 128, 16, 64)]).unwrap();
+        // Version mismatch is its own variant.
+        let mut v = t.to_json();
+        if let Value::Object(o) = &mut v {
+            o.insert("version".into(), Value::from(VERSION + 1));
+        }
+        assert!(matches!(
+            TuningTable::from_json(&v),
+            Err(TuneError::Version { .. })
+        ));
+        // Unknown root key.
+        let mut v = t.to_json();
+        if let Value::Object(o) = &mut v {
+            o.insert("extra".into(), Value::Null);
+        }
+        assert!(matches!(
+            TuningTable::from_json(&v),
+            Err(TuneError::Schema(_))
+        ));
+        // Wrong schema string.
+        let mut v = t.to_json();
+        if let Value::Object(o) = &mut v {
+            o.insert("schema".into(), Value::from("something-else"));
+        }
+        assert!(matches!(
+            TuningTable::from_json(&v),
+            Err(TuneError::Schema(_))
+        ));
+        // Non-object root.
+        assert!(TuningTable::from_json(&Value::from(3usize)).is_err());
+    }
+}

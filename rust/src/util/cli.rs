@@ -197,6 +197,33 @@ pub fn parse_args(
     Ok(parsed)
 }
 
+/// Scan raw process arguments for a single `--<name> value` /
+/// `--<name>=value` option — for examples and harness-less bench
+/// binaries that take one optional flag without the full parser (e.g.
+/// `--tuning` on `cluster_smoke`/`cluster_route`).  Unknown arguments
+/// are ignored (cargo may pass its own); a trailing `--<name>` with no
+/// value is an error, never a silent no-op.
+pub fn scan_raw_option(
+    name: &str,
+    args: impl Iterator<Item = String>,
+) -> Result<Option<String>, String> {
+    let exact = format!("--{name}");
+    let prefix = format!("--{name}=");
+    let mut args = args;
+    while let Some(a) = args.next() {
+        if a == exact {
+            return match args.next() {
+                Some(v) => Ok(Some(v)),
+                None => Err(format!("--{name} needs a value")),
+            };
+        }
+        if let Some(v) = a.strip_prefix(&prefix) {
+            return Ok(Some(v.to_string()));
+        }
+    }
+    Ok(None)
+}
+
 /// Render help text for one subcommand.
 pub fn help_text(program: &str, cmd: &Command) -> String {
     let mut out = String::new();
@@ -343,6 +370,26 @@ mod tests {
         let p = parse(&["--experiment", "x", "--iters", "many"]).unwrap();
         let err = p.get_usize("iters").unwrap_err();
         assert!(err.contains("--iters"), "{err}");
+    }
+
+    #[test]
+    fn scan_raw_option_finds_both_spellings_and_rejects_dangling() {
+        let args = |xs: &[&str]| xs.iter().map(|s| s.to_string()).collect::<Vec<_>>();
+        assert_eq!(
+            scan_raw_option("tuning", args(&["--bench", "--tuning", "t.json"]).into_iter())
+                .unwrap(),
+            Some("t.json".to_string())
+        );
+        assert_eq!(
+            scan_raw_option("tuning", args(&["--tuning=t.json"]).into_iter()).unwrap(),
+            Some("t.json".to_string())
+        );
+        assert_eq!(
+            scan_raw_option("tuning", args(&["--other", "x"]).into_iter()).unwrap(),
+            None
+        );
+        let err = scan_raw_option("tuning", args(&["--tuning"]).into_iter()).unwrap_err();
+        assert!(err.contains("--tuning"), "{err}");
     }
 
     #[test]

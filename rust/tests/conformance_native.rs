@@ -10,11 +10,16 @@
 //! oracle to DENSITY_RTOL / SCORE_RTOL — the same order as the XLA f32
 //! artifacts.  Tile/block/thread choices only repartition the pair space
 //! and must not move results beyond f64 re-association noise
-//! (TILE_INVARIANCE_RTOL).
+//! (TILE_INVARIANCE_RTOL); on the auto-vec path (`simd: false`) the
+//! reductions are strictly train-row-sequential, so block/thread
+//! choices — including ones a tuning table picks — are **bitwise**
+//! invariant there (the autotuner's correctness contract, DESIGN.md
+//! §13).
 
 use flash_sdkde::data::mixture::by_dim;
 use flash_sdkde::estimator::flash::{self, PreparedTrain, TileConfig};
 use flash_sdkde::estimator::{bandwidth, native};
+use flash_sdkde::tuner::{TunedCell, TuningTable};
 use flash_sdkde::util::prop::{check, ensure};
 use flash_sdkde::util::rng::Pcg64;
 
@@ -239,6 +244,104 @@ fn prop_results_invariant_across_tile_thread_and_simd_choices() {
                     ((a - b) / scale).abs() < TILE_INVARIANCE_RTOL,
                     &format!("score moved under {cfg:?}: {a} vs {b}"),
                 )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_table_chosen_configs_preserve_results() {
+    // The autotuner's invariance contract, extended over table-chosen
+    // configs: whatever block shapes a TuningTable's nearest-bucket
+    // lookup picks, applying them (the backend overrides block_q/block_t
+    // only) must leave every kernel's results where the static default
+    // put them — bitwise on the auto-vec path, within the usual
+    // re-association bound when the SIMD flag is on.
+    let cells: Vec<TunedCell> = [
+        (1usize, 64usize, 32usize, 3usize, 17usize),
+        (1, 1024, 128, 64, 512),
+        (2, 256, 32, 8, 96),
+        (3, 512, 32, 16, 33),
+        (16, 512, 64, 48, 256),
+        (16, 8192, 1024, 64, 128),
+    ]
+    .iter()
+    .map(|&(d, n, m, block_q, block_t)| TunedCell {
+        d,
+        n,
+        m,
+        block_q,
+        block_t,
+        threads: 1,
+        simd: false,
+        best_ms: 1.0,
+        default_ms: 1.0,
+    })
+    .collect();
+    let table = TuningTable::new(cells).expect("valid table");
+
+    check("table-chosen config invariance", 25, |rng| {
+        let d = [1usize, 2, 3, 16][rng.below(4) as usize];
+        let n = 2 + rng.below(300) as usize;
+        let m = 1 + rng.below(80) as usize;
+        let mix = by_dim(d);
+        let mut data_rng = Pcg64::new(rng.next_u64(), 3);
+        let x = mix.sample(n, &mut data_rng);
+        let y = mix.sample(m, &mut data_rng);
+        let mut w = vec![1.0f32; n];
+        for wi in w.iter_mut().skip(1) {
+            if rng.below(5) == 0 {
+                *wi = 0.0;
+            }
+        }
+        let h = 0.2 + 0.1 * rng.below(10) as f64;
+
+        let cell = table.lookup(d, n, m);
+        ensure(cell.is_some(), "every tuned dimension must resolve a cell")?;
+        let cell = cell.expect("checked");
+        // Lookup is deterministic: the same workload resolves the same
+        // cell every time.
+        ensure(
+            table.lookup(d, n, m) == Some(cell),
+            "nearest-bucket lookup is not deterministic",
+        )?;
+
+        for simd in [false, true] {
+            let base = TileConfig { simd, ..TileConfig::serial() };
+            // Exactly what NativeFlash::choose_tile applies: the one
+            // partial-application policy, TunedCell::apply.
+            let tuned = cell.apply(base);
+            let kde_base = flash::kde(&x, &w, &y, d, h, &base);
+            let kde_tuned = flash::kde(&x, &w, &y, d, h, &tuned);
+            let score_base = flash::score_at(&x, &w, &y, d, h, &base);
+            let score_tuned = flash::score_at(&x, &w, &y, d, h, &tuned);
+            if !cfg!(feature = "simd") || !simd {
+                // Auto-vec path: strictly sequential reductions — the
+                // tuned config must be bit-for-bit the default.
+                ensure(
+                    kde_tuned == kde_base,
+                    &format!("kde moved bitwise under tuned {tuned:?}"),
+                )?;
+                ensure(
+                    score_tuned == score_base,
+                    &format!("score moved bitwise under tuned {tuned:?}"),
+                )?;
+            } else {
+                for (a, b) in kde_tuned.iter().zip(&kde_base) {
+                    let rel = (a - b).abs() / b.abs().max(1e-30);
+                    ensure(
+                        rel < TILE_INVARIANCE_RTOL,
+                        &format!("kde moved under tuned {tuned:?}: {a} vs {b}"),
+                    )?;
+                }
+                for (a, b) in score_tuned.iter().zip(&score_base) {
+                    let scale = b.abs().max(1.0);
+                    ensure(
+                        ((a - b) / scale).abs() < TILE_INVARIANCE_RTOL,
+                        &format!("score moved under tuned {tuned:?}: {a} vs {b}"),
+                    )?;
+                }
             }
         }
         Ok(())

@@ -374,6 +374,7 @@ fn engine_executes_across_threads() {
         1,
         flash_sdkde::runtime::BackendKind::Pjrt,
         64,
+        None,
     )
     .expect("engine");
 

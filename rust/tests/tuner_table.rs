@@ -1,0 +1,296 @@
+//! Tuner subsystem integration: table round-trip through disk, typed
+//! errors on corrupt/incompatible tables, nearest-bucket determinism,
+//! and the serving E2E — `serve --tuning`'s code path (a `Config` with
+//! `tuning_path`) must load the table, apply its block shapes on the
+//! native hot path (`engine.tuned_lookups > 0` in `stats_json()`), and
+//! leave results exactly where the static default put them.  Runs with
+//! zero artifacts and zero XLA, like the rest of the native suites.
+
+use std::path::PathBuf;
+
+use flash_sdkde::config::Config;
+use flash_sdkde::coordinator::{Coordinator, FitSpec};
+use flash_sdkde::data::mixture::by_dim;
+use flash_sdkde::estimator::EstimatorKind;
+use flash_sdkde::runtime::BackendKind;
+use flash_sdkde::tuner::{self, TuneError, TunedCell, TuneSpec, TuningTable};
+use flash_sdkde::util::rng::Pcg64;
+
+/// A unique temp path per test (cleaned up by the caller via TempFile).
+struct TempFile(PathBuf);
+
+impl TempFile {
+    fn new(tag: &str) -> TempFile {
+        TempFile(std::env::temp_dir().join(format!(
+            "flash-sdkde-tuner-{}-{tag}.json",
+            std::process::id()
+        )))
+    }
+}
+
+impl Drop for TempFile {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.0);
+    }
+}
+
+fn cell(d: usize, n: usize, m: usize, bq: usize, bt: usize) -> TunedCell {
+    TunedCell {
+        d,
+        n,
+        m,
+        block_q: bq,
+        block_t: bt,
+        threads: 1,
+        simd: false,
+        best_ms: 0.5,
+        default_ms: 1.0,
+    }
+}
+
+fn native_config() -> Config {
+    let mut cfg = Config::default();
+    cfg.artifacts_dir = PathBuf::from("/nonexistent-flash-sdkde-artifacts");
+    cfg.backend = BackendKind::Native;
+    cfg.batch_wait_ms = 0;
+    cfg
+}
+
+#[test]
+fn table_round_trips_through_disk_with_identical_lookups() {
+    let table = TuningTable::new(vec![
+        cell(1, 512, 64, 8, 128),
+        cell(3, 512, 32, 16, 96),
+        cell(16, 4096, 512, 64, 256),
+        cell(16, 512, 64, 16, 512),
+    ])
+    .expect("valid table");
+    let file = TempFile::new("round-trip");
+    table.save(&file.0).expect("save");
+    let loaded = TuningTable::load(&file.0).expect("load");
+    assert_eq!(table, loaded);
+    // Identical lookups over a probe grid — the write → load → lookup
+    // contract the serving path depends on.
+    for d in [1usize, 2, 3, 16] {
+        for n in [64usize, 300, 512, 2048, 4096, 100_000] {
+            for m in [1usize, 32, 64, 512, 4096] {
+                assert_eq!(
+                    table.lookup(d, n, m),
+                    loaded.lookup(d, n, m),
+                    "lookup diverged at (d={d}, n={n}, m={m})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn corrupt_and_incompatible_tables_are_typed_errors() {
+    // Missing file.
+    let gone = PathBuf::from("/nonexistent-flash-sdkde-tuning.json");
+    assert!(matches!(TuningTable::load(&gone), Err(TuneError::Io { .. })));
+
+    let file = TempFile::new("corrupt");
+    // Not JSON at all.
+    std::fs::write(&file.0, b"\x00\xffnot json{{{").unwrap();
+    assert!(matches!(TuningTable::load(&file.0), Err(TuneError::Json { .. })));
+    // Truncated JSON.
+    std::fs::write(&file.0, "{\"schema\": \"flash-sdkde-tuning\", \"cel").unwrap();
+    assert!(matches!(TuningTable::load(&file.0), Err(TuneError::Json { .. })));
+    // Valid JSON, wrong shape.
+    std::fs::write(&file.0, "[1, 2, 3]").unwrap();
+    assert!(matches!(TuningTable::load(&file.0), Err(TuneError::Schema(_))));
+    // Version from the future.
+    std::fs::write(
+        &file.0,
+        r#"{"schema": "flash-sdkde-tuning", "version": 999, "cells": []}"#,
+    )
+    .unwrap();
+    let err = TuningTable::load(&file.0).unwrap_err();
+    assert!(
+        matches!(err, TuneError::Version { found: 999, expected: _ }),
+        "{err}"
+    );
+    // Cell with a bad field type.
+    std::fs::write(
+        &file.0,
+        r#"{"schema": "flash-sdkde-tuning", "version": 1, "cells":
+            [{"d": "sixteen", "n": 1, "m": 1, "block_q": 1, "block_t": 1,
+              "threads": 1, "simd": false, "best_ms": 1, "default_ms": 1}]}"#,
+    )
+    .unwrap();
+    assert!(matches!(TuningTable::load(&file.0), Err(TuneError::Schema(_))));
+    // Unknown cell key (hand-edit typo protection).
+    std::fs::write(
+        &file.0,
+        r#"{"schema": "flash-sdkde-tuning", "version": 1, "cells":
+            [{"d": 1, "n": 1, "m": 1, "blockq": 1, "block_t": 1,
+              "threads": 1, "simd": false, "best_ms": 1, "default_ms": 1}]}"#,
+    )
+    .unwrap();
+    assert!(matches!(TuningTable::load(&file.0), Err(TuneError::Schema(_))));
+
+    // A coordinator pointed at a corrupt table must fail startup typed —
+    // never panic, never silently serve untuned.
+    std::fs::write(&file.0, "{broken").unwrap();
+    let mut cfg = native_config();
+    cfg.tuning_path = Some(file.0.clone());
+    let err = match Coordinator::start(cfg) {
+        Ok(_) => panic!("corrupt table must fail boot"),
+        Err(e) => e,
+    };
+    assert!(format!("{err:#}").contains("tuning table"), "{err:#}");
+}
+
+#[test]
+fn nearest_bucket_fallback_is_deterministic() {
+    let table = TuningTable::new(vec![
+        cell(16, 1024, 128, 8, 64),
+        cell(16, 4096, 128, 64, 512),
+    ])
+    .expect("valid table");
+    // 2048 sits exactly one octave from both cells: repeated lookups must
+    // pin the same (smaller-bucket) winner.
+    let first = *table.lookup(16, 2048, 128).expect("cell");
+    for _ in 0..16 {
+        assert_eq!(table.lookup(16, 2048, 128), Some(&first));
+    }
+    assert_eq!(first.n, 1024, "tie resolves to the smaller bucket");
+    // Off-grid d: no cell, the caller's static-default fallback.
+    assert!(table.lookup(7, 2048, 128).is_none());
+}
+
+#[test]
+fn quick_tune_writes_a_table_serve_can_load() {
+    // The `tune --quick` → `serve --tuning` pipeline, in-process.
+    let out = tuner::tune(&TuneSpec::quick()).expect("quick tune");
+    assert!(!out.table.cells().is_empty());
+    let file = TempFile::new("quick");
+    out.table.save(&file.0).expect("save");
+    let loaded = TuningTable::load(&file.0).expect("load");
+    assert_eq!(out.table, loaded);
+}
+
+#[test]
+fn serve_with_table_applies_tuned_tiles_without_moving_results() {
+    // One cell exactly matching the serving buckets this workload hits:
+    // n = 300 at d = 3 pads to the synthetic 512 train bucket, 10
+    // queries pad to the 32 query bucket.  Deliberately non-default
+    // block shapes prove the table is actually applied.
+    let table = TuningTable::new(vec![cell(3, 512, 32, 8, 96)]).expect("table");
+    let file = TempFile::new("serve-e2e");
+    table.save(&file.0).expect("save");
+
+    let d = 3;
+    let mix = by_dim(d);
+    let mut rng = Pcg64::seeded(11);
+    let train = mix.sample(300, &mut rng);
+    let queries = mix.sample(10, &mut rng);
+
+    let mut tuned_cfg = native_config();
+    tuned_cfg.tuning_path = Some(file.0.clone());
+    let tuned = Coordinator::start(tuned_cfg).expect("tuned coordinator");
+    let untuned = Coordinator::start(native_config()).expect("untuned coordinator");
+
+    let spec = FitSpec::new(EstimatorKind::Kde, d);
+    let mt = tuned.fit("m", train.clone(), &spec).expect("tuned fit");
+    let mu = untuned.fit("m", train, &spec).expect("untuned fit");
+
+    let rt = tuned.eval(&mt, queries.clone()).expect("tuned eval");
+    let ru = untuned.eval(&mu, queries.clone()).expect("untuned eval");
+    if cfg!(feature = "simd") {
+        // The SIMD density accumulate re-associates with the tile width:
+        // agreement is at re-association noise, far below f32 rounding.
+        for (a, b) in rt.values.iter().zip(&ru.values) {
+            let rel = ((a - b) / b.abs().max(1e-30)) as f64;
+            assert!(rel.abs() < 1e-5, "{a} vs {b}");
+        }
+    } else {
+        // Auto-vec path: table-chosen block shapes are bitwise inert.
+        assert_eq!(rt.values, ru.values, "tuned tile moved a served result");
+    }
+
+    // Gradients ride the same prepare slot: same tile choice, no second
+    // table lookup, identical invariance.
+    let gt = tuned.grad(&mt, queries.clone()).expect("tuned grad");
+    let gu = untuned.grad(&mu, queries).expect("untuned grad");
+    if cfg!(feature = "simd") {
+        for (a, b) in gt.values.iter().zip(&gu.values) {
+            let scale = b.abs().max(1.0);
+            assert!(((a - b) / scale).abs() < 1e-5, "{a} vs {b}");
+        }
+    } else {
+        assert_eq!(gt.values, gu.values);
+    }
+
+    // The acceptance counter: the native fit/eval round-trip consulted
+    // the table (once — the choice is cached in the prepare slot).
+    let stats = tuned.stats_json();
+    let engine = stats.get("engine").expect("engine stats");
+    let lookups = engine
+        .get("tuned_lookups")
+        .and_then(|v| v.as_usize())
+        .expect("tuned_lookups");
+    assert!(lookups > 0, "serving never consulted the table: {stats:?}");
+    let fallbacks = engine
+        .get("tuned_fallbacks")
+        .and_then(|v| v.as_usize())
+        .expect("tuned_fallbacks");
+    assert_eq!(fallbacks, 0, "d=3 has a cell; no fallback expected");
+
+    // The untuned coordinator never counts tuning activity.
+    let stats = untuned.stats_json();
+    let engine = stats.get("engine").expect("engine stats");
+    assert_eq!(engine.get("tuned_lookups").and_then(|v| v.as_usize()), Some(0));
+
+    // A dimension with no cell is a counted fallback on the tuned side.
+    let d5 = 5;
+    let train5 = by_dim(d5).sample(64, &mut rng);
+    let q5 = by_dim(d5).sample(4, &mut rng);
+    let m5 = tuned
+        .fit("m5", train5, &FitSpec::new(EstimatorKind::Kde, d5))
+        .expect("d=5 fit");
+    tuned.eval(&m5, q5).expect("d=5 eval");
+    let stats = tuned.stats_json();
+    let engine = stats.get("engine").expect("engine stats");
+    let fallbacks = engine
+        .get("tuned_fallbacks")
+        .and_then(|v| v.as_usize())
+        .expect("tuned_fallbacks");
+    assert!(fallbacks > 0, "off-table dimension must count a fallback");
+}
+
+#[test]
+fn shared_prepare_cache_spans_engine_workers() {
+    // ISSUE 5 satellite at the serving layer: with several engine
+    // workers, a resident model is prepared once for the whole engine —
+    // per-worker caches would re-prepare per worker.  The counters live
+    // in the shared cache, so whichever worker answers the stats
+    // request reports the engine-wide truth.
+    let mut cfg = native_config();
+    cfg.engine_workers = 3;
+    let coord = Coordinator::start(cfg).expect("multi-worker coordinator");
+    let d = 2;
+    let mix = by_dim(d);
+    let mut rng = Pcg64::seeded(9);
+    let handle = coord
+        .fit("shared", mix.sample(128, &mut rng), &FitSpec::new(EstimatorKind::Kde, d))
+        .expect("fit");
+    let queries = mix.sample(4, &mut rng);
+    for _ in 0..12 {
+        coord.eval(&handle, queries.clone()).expect("eval");
+    }
+    let stats = coord.stats_json();
+    let engine = stats.get("engine").expect("engine stats");
+    let stat = |key: &str| {
+        engine
+            .get(key)
+            .and_then(|v| v.as_usize())
+            .unwrap_or_else(|| panic!("stats missing engine.{key}"))
+    };
+    // One shared cache, cache-wide counters: exactly one miss for the
+    // one resident model, every later eval a hit — regardless of which
+    // worker answered the stats request.
+    assert_eq!(stat("prepare_misses"), 1, "shared cache re-prepared: {stats:?}");
+    assert_eq!(stat("prepare_hits"), 11, "12 sequential evals = 1 miss + 11 hits");
+}
