@@ -2,24 +2,41 @@
 //! Thin wrapper over `bench_harness::experiments` (harness = false; the
 //! offline registry has no criterion — see DESIGN.md §3).
 //!
-//! Env overrides: FLASH_SDKDE_NATIVE_SERIES=1 adds the pure-Rust native
-//! backend as a third measured series; FLASH_SDKDE_TUNING=<table.json>
+//! Knobs (argv after `--` wins; env var is the fallback, matching
+//! cluster_smoke): `--artifacts <dir>` / FLASH_SDKDE_ARTIFACTS,
+//! `--iters <n>` / FLASH_SDKDE_BENCH_ITERS, `--native-series` /
+//! FLASH_SDKDE_NATIVE_SERIES=1 adds the pure-Rust native backend as a
+//! third measured series, `--tuning <table.json>` / FLASH_SDKDE_TUNING
 //! runs that series under a `flash-sdkde tune` table's block shapes.
+//! Dangling flags (`--tuning` with no value, `--native-series=1`) are
+//! errors, not silent no-ops.
 
 use flash_sdkde::bench_harness::{experiments::Ctx, run_experiment, RunSpec};
 use flash_sdkde::tuner::TuningTable;
+use flash_sdkde::util::cli::{scan_raw_flag, scan_raw_option};
 
 fn main() -> anyhow::Result<()> {
-    let artifacts = std::env::var("FLASH_SDKDE_ARTIFACTS")
-        .unwrap_or_else(|_| "artifacts".to_string());
+    let args = || std::env::args().skip(1);
+    let artifacts = scan_raw_option("artifacts", args())
+        .map_err(anyhow::Error::msg)?
+        .or_else(|| std::env::var("FLASH_SDKDE_ARTIFACTS").ok())
+        .unwrap_or_else(|| "artifacts".to_string());
     let mut ctx = Ctx::new(std::path::Path::new(&artifacts))?;
-    if let Ok(iters) = std::env::var("FLASH_SDKDE_BENCH_ITERS") {
+    if let Some(iters) = scan_raw_option("iters", args())
+        .map_err(anyhow::Error::msg)?
+        .or_else(|| std::env::var("FLASH_SDKDE_BENCH_ITERS").ok())
+    {
         ctx.spec = RunSpec::new(1, iters.parse()?);
     }
-    if let Ok(v) = std::env::var("FLASH_SDKDE_NATIVE_SERIES") {
-        ctx.native_series = v == "1" || v.eq_ignore_ascii_case("true");
-    }
-    if let Ok(path) = std::env::var("FLASH_SDKDE_TUNING") {
+    ctx.native_series = scan_raw_flag("native-series", args())
+        .map_err(anyhow::Error::msg)?
+        || std::env::var("FLASH_SDKDE_NATIVE_SERIES")
+            .map(|v| v == "1" || v.eq_ignore_ascii_case("true"))
+            .unwrap_or(false);
+    if let Some(path) = scan_raw_option("tuning", args())
+        .map_err(anyhow::Error::msg)?
+        .or_else(|| std::env::var("FLASH_SDKDE_TUNING").ok())
+    {
         ctx.native_series = true;
         ctx.native_tuning = Some(TuningTable::load(std::path::Path::new(&path))?);
     }

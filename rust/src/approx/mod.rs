@@ -1,0 +1,159 @@
+//! Approximate sublinear query path (DESIGN.md §14).
+//!
+//! Every exact query pays the full O(n·m·d) sweep no matter how fast the
+//! tiles are; this module adds the two complementary approximation
+//! regimes that break that wall behind the same `ExecBackend` +
+//! [`QuerySpec`](crate::coordinator::QuerySpec) surface:
+//!
+//! * [`deann::DeannIndex`] — DEANN-style evaluation (Karppa et al.,
+//!   arXiv 2107.02736): a per-model cell index built once and cached in
+//!   the backend's prepare cache; near cells are evaluated exactly, the
+//!   far tail is estimated by uniform random sampling from a
+//!   deterministic [`util::rng`](crate::util::rng) splitmix64 stream
+//!   seeded from the query spec.  The adaptive stopping rule gives a
+//!   **deterministic** per-query relative-error guarantee (not merely a
+//!   statistical one), which is what lets the conformance suite assert
+//!   hard bounds.
+//! * [`rff::RffSketch`] — a random-Fourier-feature sketch (Gallego et
+//!   al., arXiv 2208.01206): `prepare` materializes a feature projection
+//!   of the train side so a density query costs O(D·d) independent of
+//!   n.  Viability and per-query acceptance checks route queries the
+//!   sketch cannot serve within budget to DEANN instead.
+//!
+//! Both estimators are *density-kernel only*: gradient/score queries and
+//! the Laplace pipeline always fall back to the exact path (the
+//! `exact_fallbacks` engine counter records it).  `Exact` requests never
+//! touch this module — their results are bitwise identical to builds
+//! without it.
+
+pub mod deann;
+pub mod rff;
+
+use crate::util::rng::{splitmix64, SplitMix64};
+
+/// Accuracy budget of a query: exact (the default, bitwise-stable
+/// serving path) or approximate with a relative-error budget.
+///
+/// The budget travels inside
+/// [`QuerySpec`](crate::coordinator::QuerySpec) through the coordinator
+/// queue, the v2 wire protocol (optional `rel_err`/`seed` frame fields;
+/// legacy frames parse as `Exact`), config and CLI.  Construct `Approx`
+/// values through [`Budget::approx`] so invalid budgets surface as typed
+/// errors at the boundary instead of panics in the hot path.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Budget {
+    /// Full exact evaluation — results are bitwise reproducible.
+    Exact,
+    /// Approximate evaluation within a relative-error budget.
+    Approx {
+        /// Requested relative error bound (finite, > 0).
+        rel_err: f64,
+        /// Tail-sampler seed; `None` derives one deterministically from
+        /// the model key ([`default_seed`]), so repeated identical
+        /// queries are bitwise-stable either way.
+        seed: Option<u64>,
+    },
+}
+
+impl Default for Budget {
+    fn default() -> Self {
+        Budget::Exact
+    }
+}
+
+impl Budget {
+    /// Checked `Approx` constructor: `rel_err` must be finite and > 0.
+    /// Every boundary (config, CLI, wire frames, `Coordinator::submit`)
+    /// goes through this, so a bad budget is a typed error there and the
+    /// kernels below can trust the value.
+    pub fn approx(rel_err: f64, seed: Option<u64>) -> Result<Budget, String> {
+        if !rel_err.is_finite() || rel_err <= 0.0 {
+            return Err(format!(
+                "invalid approx budget: rel_err must be finite and > 0, \
+                 got {rel_err}"
+            ));
+        }
+        Ok(Budget::Approx { rel_err, seed })
+    }
+
+    /// Whether this is the exact (default) budget.
+    pub fn is_exact(&self) -> bool {
+        matches!(self, Budget::Exact)
+    }
+}
+
+/// Resolved approximation parameters handed to
+/// [`ExecBackend::execute_approx`](crate::runtime::ExecBackend::execute_approx):
+/// the budget with the seed already defaulted and the chunk's global row
+/// offset, so per-row sampling streams never depend on how a request was
+/// chunked.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ApproxParams {
+    /// Relative-error budget (validated finite and > 0 upstream).
+    pub rel_err: f64,
+    /// Tail-sampler seed (explicit from the spec, or [`default_seed`]).
+    pub seed: u64,
+    /// Global index of this chunk's first query row within the request.
+    pub row_offset: usize,
+}
+
+/// Deterministic default tail-sampler seed for a model key: FNV-1a over
+/// the name folded through [`splitmix64`].  Requests that leave
+/// `Budget::Approx { seed: None }` get this, so identical queries against
+/// the same model are bitwise-stable across processes and nodes — the
+/// cluster harness pins routed approx results against a single-node
+/// oracle on exactly this property.
+pub fn default_seed(model: &str) -> u64 {
+    const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = FNV_OFFSET;
+    for b in model.as_bytes() {
+        h = (h ^ u64::from(*b)).wrapping_mul(FNV_PRIME);
+    }
+    splitmix64(h)
+}
+
+/// The per-query-row sampling stream: `seed` and the row's global index
+/// are mixed twice so adjacent rows get decorrelated (non-overlapping)
+/// splitmix64 streams.  Both DEANN tail sampling and the conformance
+/// suite derive their draws from this one function.
+pub fn row_stream(seed: u64, row: u64) -> SplitMix64 {
+    SplitMix64::new(splitmix64(seed ^ splitmix64(row)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budget_constructor_rejects_bad_rel_err() {
+        for bad in [0.0, -0.5, f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let err = Budget::approx(bad, None).unwrap_err();
+            assert!(err.contains("rel_err"), "{err}");
+        }
+        let b = Budget::approx(0.1, Some(7)).unwrap();
+        assert_eq!(b, Budget::Approx { rel_err: 0.1, seed: Some(7) });
+        assert!(!b.is_exact());
+        assert!(Budget::default().is_exact());
+    }
+
+    #[test]
+    fn default_seed_is_stable_and_model_keyed() {
+        assert_eq!(default_seed("m1"), default_seed("m1"));
+        assert_ne!(default_seed("m1"), default_seed("m2"));
+        // Pin the value: routed approx results across a cluster depend on
+        // every node deriving the same default seed.
+        assert_eq!(default_seed("m1"), splitmix64(0x08a9_8b07_b550_9b6b));
+    }
+
+    #[test]
+    fn row_streams_are_deterministic_and_row_separated() {
+        let draw = |seed: u64, row: u64| row_stream(seed, row).next_u64();
+        let a: Vec<u64> = (0..4u64).map(|i| draw(42, i)).collect();
+        let b: Vec<u64> = (0..4u64).map(|i| draw(42, i)).collect();
+        assert_eq!(a, b);
+        assert_ne!(a[0], a[1]);
+        let mut other_seed = row_stream(43, 0);
+        assert_ne!(a[0], other_seed.next_u64());
+    }
+}

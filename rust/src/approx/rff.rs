@@ -1,0 +1,328 @@
+//! Random-Fourier-feature KDE sketch (Gallego et al., arXiv 2208.01206):
+//! `prepare` projects the train side onto `D` random cosine features so a
+//! density query costs O(D·d) — **independent of n** (DESIGN.md §14).
+//!
+//! For the Gaussian kernel `k(x, y) = exp(−‖x−y‖²/(2h²))`, Bochner's
+//! theorem gives `k(x, y) = E_ω[2·cos(ωᵀx + b)·cos(ωᵀy + b)]` with
+//! `ω ~ N(0, I/h²)`, `b ~ U[0, 2π)`.  The sketch stores
+//! `S_f = Σ_i w_i·cos(ω_f·x_i + b_f)`, so
+//!
+//! ```text
+//! Σ_i w_i·k(x_i, y)  ≈  (2/D)·Σ_f S_f·cos(ω_f·y + b_f)
+//! ```
+//!
+//! The feature error is *additive in kernel units* (`k ∈ [0, 1]`), not
+//! relative — a sketch can only honor a relative budget where the density
+//! it measures stands clear of its own noise floor.  Two typed gates
+//! enforce that instead of hoping:
+//!
+//! * **Viability** ([`RffSketch::build`] returns `None`): the feature
+//!   count implied by the budget and the train set's estimated mean
+//!   kernel value must stay under [`MAX_FEATURES`], and the sketch must
+//!   actually be cheaper than the exact sweep it replaces.  High-d /
+//!   tiny-bandwidth regimes (where mean kernel values underflow) fail
+//!   here and the caller uses DEANN instead.
+//! * **Acceptance** ([`RffSketch::density`] returns `None` per query):
+//!   the returned estimate must exceed the sketch's 3σ noise floor
+//!   scaled by the budget; queries in low-density regions fall back.
+//!
+//! The frequencies are part of the *prepared model state* — drawn from a
+//! fixed-seed [`Pcg64`] stream keyed only by `(D, d)` — so the sketch is
+//! deterministic and shared across queries; the query-spec seed plays no
+//! role here (it only drives DEANN tail sampling; DESIGN.md §14 states
+//! the seeding policy).
+
+use crate::estimator::native::normalizer;
+use crate::util::rng::Pcg64;
+
+/// Hard cap on the feature count: budgets that would need more features
+/// than this are not viable for the sketch (DEANN serves them).
+pub const MAX_FEATURES: usize = 16_384;
+
+/// Smallest sketch worth building.
+const MIN_FEATURES: usize = 64;
+
+/// Variance constant: `D ≥ C_VAR / (rel_err·mean_k)²` puts the 3σ worst
+/// case at half the budget when queries resemble the train distribution
+/// (3·√(2/D)/mean_k ≤ rel_err/2 ⇒ C_VAR = 72).
+const C_VAR: f64 = 72.0;
+
+/// Fixed seed for the frequency/bias draws (model- and query-independent).
+const OMEGA_SEED: u64 = 0x5DF0_0A11;
+
+/// Train pairs sampled when estimating the mean kernel value at build.
+const MEAN_K_PAIRS: usize = 512;
+
+/// A prepared random-feature sketch of one model's train side at one
+/// bandwidth, sized for one relative-error budget.  The backend caches
+/// one per `(h, rel_err)` pair alongside the model's other prepared
+/// state — including negative ("not viable") entries, so the viability
+/// probe runs once per model/budget, not per query.
+#[derive(Debug, Clone)]
+pub struct RffSketch {
+    d: usize,
+    features: usize,
+    /// Bandwidth the frequencies were scaled for (bit-exact identity).
+    h_bits: u64,
+    /// [features, d] frequency rows (f64: the projection is the entire
+    /// query cost, and f64 keeps phase error out of the cosines).
+    omega: Vec<f64>,
+    /// [features] phase offsets in [0, 2π).
+    bias: Vec<f64>,
+    /// [features] projected train mass `Σ_i w_i·cos(ω_f·x_i + b_f)`.
+    sketch: Vec<f64>,
+    /// Total train weight.
+    count: f64,
+    /// 3σ additive noise bound on the unnormalized density estimate.
+    noise_floor: f64,
+}
+
+/// Estimate the mean kernel value over the live train rows from a fixed
+/// deterministic sample of pairs — the proxy for how far typical query
+/// densities stand above the sketch's noise.  Returns 0.0 when every
+/// sampled pair underflows (the not-viable signal for high-d regimes).
+fn mean_kernel_estimate(x: &[f32], w: &[f32], d: usize, h: f64) -> f64 {
+    let live: Vec<usize> =
+        (0..w.len()).filter(|&i| w[i] != 0.0).collect();
+    if live.is_empty() {
+        return 0.0;
+    }
+    let inv2h2 = 1.0 / (2.0 * h * h);
+    let mut rng = Pcg64::new(OMEGA_SEED, 1);
+    let mut acc = 0.0f64;
+    for _ in 0..MEAN_K_PAIRS {
+        let i = live[rng.below(live.len() as u64) as usize];
+        let j = live[rng.below(live.len() as u64) as usize];
+        let (a, b) = (&x[i * d..(i + 1) * d], &x[j * d..(j + 1) * d]);
+        let mut d2 = 0.0f64;
+        for (p, q) in a.iter().zip(b) {
+            let diff = (*p - *q) as f64;
+            d2 += diff * diff;
+        }
+        acc += (-d2 * inv2h2).exp();
+    }
+    acc / MEAN_K_PAIRS as f64
+}
+
+/// Feature count for a budget given the estimated mean kernel value:
+/// `clamp_pow2(C_VAR / (rel_err·mean_k)²)`, or `None` when the budget
+/// needs more than [`MAX_FEATURES`].
+fn feature_count(rel_err: f64, mean_k: f64) -> Option<usize> {
+    if mean_k <= 0.0 {
+        return None;
+    }
+    let need = C_VAR / (rel_err * mean_k).powi(2);
+    if !need.is_finite() || need > MAX_FEATURES as f64 {
+        return None;
+    }
+    let mut f = MIN_FEATURES;
+    while (f as f64) < need {
+        f *= 2;
+    }
+    (f <= MAX_FEATURES).then_some(f)
+}
+
+impl RffSketch {
+    /// Build a sketch for a weighted train set at bandwidth `h`, sized
+    /// for `rel_err`.  Returns `None` when the sketch is not viable —
+    /// the budget needs too many features for the train set's kernel
+    /// scale, or a query through it would not undercut the exact sweep
+    /// (`features·(d+1) > n·d/2`).  `rel_err` must be validated upstream
+    /// ([`Budget::approx`](super::Budget::approx)).
+    pub fn build(x: &[f32], w: &[f32], d: usize, h: f64, rel_err: f64) -> Option<RffSketch> {
+        assert!(d >= 1, "dimension must be >= 1");
+        let n = w.len();
+        assert_eq!(x.len(), n * d, "x must be [n, d] row-major");
+        let count: f64 = w.iter().map(|&v| v as f64).sum();
+        assert!(count > 0.0, "no effective samples");
+
+        let mean_k = mean_kernel_estimate(x, w, d, h);
+        let features = feature_count(rel_err, mean_k)?;
+        if features * (d + 1) > n * d / 2 {
+            return None; // the exact sweep is already (nearly) as cheap
+        }
+
+        // Frequencies/biases from a fixed stream keyed by (features, d):
+        // sketches of different sizes are independent draws, and equal
+        // sizes share frequencies across models (irrelevant — the gates
+        // are per-model) while staying fully deterministic.
+        let mut rng = Pcg64::new(OMEGA_SEED ^ features as u64, d as u64);
+        let inv_h = 1.0 / h;
+        let omega: Vec<f64> =
+            (0..features * d).map(|_| rng.normal() * inv_h).collect();
+        let bias: Vec<f64> = (0..features)
+            .map(|_| rng.uniform() * std::f64::consts::TAU)
+            .collect();
+
+        let mut sketch = vec![0.0f64; features];
+        for i in 0..n {
+            let wi = w[i] as f64;
+            if wi == 0.0 {
+                continue;
+            }
+            let xi = &x[i * d..(i + 1) * d];
+            for f in 0..features {
+                let of = &omega[f * d..(f + 1) * d];
+                let mut phase = bias[f];
+                for (o, &v) in of.iter().zip(xi) {
+                    phase += o * v as f64;
+                }
+                sketch[f] += wi * phase.cos();
+            }
+        }
+
+        Some(RffSketch {
+            d,
+            features,
+            h_bits: h.to_bits(),
+            omega,
+            bias,
+            sketch,
+            count,
+            noise_floor: 3.0 * count * (2.0 / features as f64).sqrt(),
+        })
+    }
+
+    /// Data dimension.
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Feature count `D`.
+    pub fn features(&self) -> usize {
+        self.features
+    }
+
+    /// Approximate normalized density at one query row, or `None` when
+    /// the estimate sits too close to the sketch's noise floor for the
+    /// budget (the caller falls back to DEANN/exact).  Deterministic:
+    /// no per-query randomness exists on this path.
+    pub fn density(&self, y: &[f32], h: f64, rel_err: f64) -> Option<f64> {
+        assert_eq!(y.len(), self.d, "query row must be [d]");
+        debug_assert_eq!(self.h_bits, h.to_bits(), "sketch/bandwidth mismatch");
+        let mut est = 0.0f64;
+        for f in 0..self.features {
+            let of = &self.omega[f * self.d..(f + 1) * self.d];
+            let mut phase = self.bias[f];
+            for (o, &v) in of.iter().zip(y) {
+                phase += o * v as f64;
+            }
+            est += self.sketch[f] * phase.cos();
+        }
+        est *= 2.0 / self.features as f64;
+        if est <= 0.0 || self.noise_floor > rel_err * est {
+            return None;
+        }
+        Some(est * normalizer(h, self.d) / self.count)
+    }
+
+    /// Approximate resident size in bytes (cache accounting / stats).
+    pub fn bytes(&self) -> usize {
+        (self.omega.len() + self.bias.len() + self.sketch.len()) * 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::estimator::native;
+    use crate::util::rng::Pcg64;
+
+    /// A smooth 1-d problem where the kernel scale is O(1): the sketch
+    /// must be viable and accepted, and accepted answers must honor the
+    /// budget.
+    fn smooth_problem(n: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>, f64) {
+        let mut rng = Pcg64::seeded(77);
+        let x: Vec<f32> =
+            (0..n).map(|_| rng.normal_scaled(0.0, 1.0) as f32).collect();
+        let y: Vec<f32> =
+            (0..16).map(|_| rng.normal_scaled(0.0, 0.8) as f32).collect();
+        let w = vec![1.0f32; n];
+        (x, w, y, 2.0)
+    }
+
+    #[test]
+    fn viable_sketch_honors_budget_on_accepted_queries() {
+        let (x, w, y, h) = smooth_problem(4096);
+        let rel_err = 0.5;
+        let sk = RffSketch::build(&x, &w, 1, h, rel_err)
+            .expect("smooth 1-d problem must be viable");
+        let exact = native::kde(&x, &w, &y, 1, h);
+        let mut accepted = 0usize;
+        for (row, want) in y.chunks_exact(1).zip(&exact) {
+            if let Some(got) = sk.density(row, h, rel_err) {
+                accepted += 1;
+                let rel = (got - want).abs() / want.abs().max(1e-30);
+                assert!(rel <= rel_err, "{got} vs {want} (rel {rel:.3e})");
+            }
+        }
+        // h = 2 over N(0,1) data: every query sits well above the noise
+        // floor, so the sketch actually serves.
+        assert!(accepted == y.len(), "accepted {accepted}/{}", y.len());
+    }
+
+    #[test]
+    fn sketch_is_deterministic() {
+        let (x, w, y, h) = smooth_problem(4096);
+        let a = RffSketch::build(&x, &w, 1, h, 0.5).expect("viable");
+        let b = RffSketch::build(&x, &w, 1, h, 0.5).expect("viable");
+        assert_eq!(a.features(), b.features());
+        for row in y.chunks_exact(1) {
+            assert_eq!(a.density(row, h, 0.5), b.density(row, h, 0.5));
+        }
+    }
+
+    #[test]
+    fn high_dimension_tiny_kernel_scale_is_not_viable() {
+        // 16-d spread-out data with a small bandwidth: sampled kernel
+        // values underflow, so the budget cannot be honored by any
+        // affordable feature count — build must say so, not mis-serve.
+        let d = 16;
+        let n = 512;
+        let mut rng = Pcg64::seeded(3);
+        let x: Vec<f32> =
+            (0..n * d).map(|_| rng.normal_scaled(0.0, 3.0) as f32).collect();
+        let w = vec![1.0f32; n];
+        assert!(RffSketch::build(&x, &w, d, 0.3, 0.1).is_none());
+    }
+
+    #[test]
+    fn small_train_sets_are_not_viable() {
+        // features·(d+1) must undercut n·d/2: a sketch over 100 points
+        // can never win.
+        let (x, w, _, h) = smooth_problem(100);
+        assert!(RffSketch::build(&x, &w, 1, h, 0.5).is_none());
+    }
+
+    #[test]
+    fn low_density_queries_are_rejected_not_mis_served() {
+        let (x, w, _, h) = smooth_problem(4096);
+        let sk = RffSketch::build(&x, &w, 1, h, 0.5).expect("viable");
+        // 40σ out: the true density is ~0; the estimate cannot clear the
+        // noise gate, so the sketch must decline.
+        assert_eq!(sk.density(&[80.0f32], h, 0.5), None);
+    }
+
+    #[test]
+    fn masked_rows_do_not_enter_the_sketch() {
+        let (x, w, y, h) = smooth_problem(4096);
+        let mut w_masked = w.clone();
+        for i in 3000..4096 {
+            w_masked[i] = 0.0;
+        }
+        let full = RffSketch::build(&x, &w, 1, h, 0.5).expect("viable");
+        let masked =
+            RffSketch::build(&x, &w_masked, 1, h, 0.5).expect("viable");
+        let compact = RffSketch::build(&x[..3000], &w[..3000], 1, h, 0.5)
+            .expect("viable");
+        for row in y.chunks_exact(1) {
+            assert_eq!(
+                masked.density(row, h, 0.5),
+                compact.density(row, h, 0.5)
+            );
+        }
+        // And the masked sketch differs from the full one (the mask bit
+        // actually matters).
+        assert_ne!(full.sketch, masked.sketch);
+    }
+}

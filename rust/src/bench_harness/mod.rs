@@ -9,6 +9,7 @@
 
 #[cfg(feature = "pjrt")]
 pub mod experiments;
+pub mod frontier;
 pub mod native_cmp;
 pub mod report;
 pub mod runner;

@@ -46,6 +46,13 @@ pub struct Config {
     /// corrupt or version-mismatched table fails startup with a typed
     /// error — never a silent fallback.
     pub tuning_path: Option<PathBuf>,
+    /// Optional default relative-error budget for CLI `eval` requests
+    /// (DESIGN.md §14): `None` (the default) evaluates exactly; a value
+    /// must be finite and > 0, validated here like every other budget
+    /// boundary.  The serving path itself takes the budget per query
+    /// (wire `rel_err` / [`QuerySpec`](crate::coordinator::QuerySpec)),
+    /// so this is a client-side convenience knob, not server state.
+    pub approx_rel_err: Option<f64>,
 }
 
 impl Default for Config {
@@ -63,6 +70,7 @@ impl Default for Config {
             engine_workers: 1,
             warm_dims: vec![],
             tuning_path: None,
+            approx_rel_err: None,
         }
     }
 }
@@ -87,6 +95,7 @@ impl Config {
             "artifacts_dir", "backend", "host", "port", "queue_depth",
             "batch_wait_ms", "batch_max_queries", "default_variant",
             "registry_capacity", "engine_workers", "warm_dims", "tuning",
+            "approx_rel_err",
         ];
         for key in obj.keys() {
             if !known.contains(&key.as_str()) {
@@ -148,6 +157,10 @@ impl Config {
                 x.as_str().ok_or("tuning must be a string (table path)")?,
             ));
         }
+        if let Some(x) = obj.get("approx_rel_err") {
+            cfg.approx_rel_err =
+                Some(x.as_f64().ok_or("approx_rel_err must be a number")?);
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -172,6 +185,11 @@ impl Config {
                  stream or naive"
                     .to_string(),
             );
+        }
+        if let Some(e) = self.approx_rel_err {
+            // Same contract as Budget::approx — validated here so a bad
+            // config fails at load, before any request is built.
+            crate::approx::Budget::approx(e, None)?;
         }
         Ok(())
     }
@@ -210,6 +228,9 @@ impl Config {
         ];
         if let Some(p) = &self.tuning_path {
             fields.push(("tuning", Value::from(p.display().to_string())));
+        }
+        if let Some(e) = self.approx_rel_err {
+            fields.push(("approx_rel_err", Value::Number(e)));
         }
         Value::object(fields)
     }
@@ -383,6 +404,32 @@ mod tests {
         let v = json::parse(r#"{"tuning": 7}"#).unwrap();
         let err = Config::from_json(&v).unwrap_err();
         assert!(err.contains("tuning"), "{err}");
+    }
+
+    #[test]
+    fn approx_rel_err_key_parses_validates_and_round_trips() {
+        let v = json::parse(r#"{"approx_rel_err": 0.1}"#).unwrap();
+        let cfg = Config::from_json(&v).unwrap();
+        assert_eq!(cfg.approx_rel_err, Some(0.1));
+        assert_eq!(Config::default().approx_rel_err, None);
+        // Same typed rejection as every other budget boundary.
+        for bad in [
+            r#"{"approx_rel_err": 0}"#,
+            r#"{"approx_rel_err": -0.5}"#,
+            r#"{"approx_rel_err": "tight"}"#,
+        ] {
+            let v = json::parse(bad).unwrap();
+            let err = Config::from_json(&v).unwrap_err();
+            assert!(
+                err.contains("approx_rel_err") || err.contains("rel_err"),
+                "{err}"
+            );
+        }
+        // Set → emitted → parsed back; unset → absent from the dump.
+        let back = Config::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(cfg, back);
+        let dump = json::to_string(&Config::default().to_json());
+        assert!(!dump.contains("approx_rel_err"), "{dump}");
     }
 
     #[test]

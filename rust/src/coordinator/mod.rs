@@ -45,6 +45,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::approx::{default_seed, ApproxParams, Budget};
 use crate::config::Config;
 use crate::estimator::{EstimatorKind, Variant};
 use crate::runtime::{ArtifactEntry, Engine, HostTensor, Manifest};
@@ -104,6 +105,7 @@ struct QueryJob {
     points: Vec<f32>,
     k: usize,
     mode: OutputMode,
+    budget: Budget,
     enqueued: Instant,
     reply: Sender<Result<QueryResult, String>>,
 }
@@ -421,10 +423,19 @@ impl Coordinator {
         spec: QuerySpec,
     ) -> Result<QueryTicket> {
         let model = Arc::clone(handle.fitted());
-        let QuerySpec { points, mode } = spec;
+        let QuerySpec { points, mode, budget } = spec;
         match mode.kernel() {
             QueryKernel::Density => Metrics::inc(&self.metrics.eval_requests),
             QueryKernel::Score => Metrics::inc(&self.metrics.grad_requests),
+        }
+        // Re-validate the budget at the queue boundary: `Budget::Approx`
+        // is constructible with raw fields, and a NaN/0 budget must be a
+        // typed error here, never a hot-path surprise (DESIGN.md §14).
+        if let Budget::Approx { rel_err, seed } = budget {
+            if let Err(e) = Budget::approx(rel_err, seed) {
+                Metrics::inc(&self.metrics.errors);
+                bail!(e);
+            }
         }
         if points.is_empty() || points.len() % model.d != 0 {
             Metrics::inc(&self.metrics.errors);
@@ -439,7 +450,8 @@ impl Coordinator {
         }
 
         let (reply, rx) = channel();
-        let job = QueryJob { model, points, k, mode, enqueued: Instant::now(), reply };
+        let job =
+            QueryJob { model, points, k, mode, budget, enqueued: Instant::now(), reply };
         match self.queue.push(job) {
             Ok(()) => {}
             Err((_, PushError::Full)) => {
@@ -513,6 +525,10 @@ impl Coordinator {
                     // when no table is loaded (and always 0 on PJRT).
                     ("tuned_lookups", Value::from(store_stats.tuned_lookups)),
                     ("tuned_fallbacks", Value::from(store_stats.tuned_fallbacks)),
+                    // Approximate query path (DESIGN.md §14); both 0 when
+                    // every request is Exact (and always 0 on PJRT).
+                    ("approx_queries", Value::from(store_stats.approx_queries)),
+                    ("exact_fallbacks", Value::from(store_stats.exact_fallbacks)),
                 ]),
             ),
             ("queue_depth", Value::from(self.queue.len())),
@@ -560,21 +576,30 @@ fn dispatcher_loop(
 
         // Same-model, same-kernel coalescing under the query budget
         // (gradients batch with gradients, densities with densities —
-        // log-density shares the density kernel).
+        // log-density shares the density kernel).  Approx-budget jobs
+        // never co-batch — with anything: a row's tail-sampling stream is
+        // keyed by its offset within the executed request (DESIGN.md
+        // §14), and co-batching would make that offset depend on what
+        // else happened to be queued, breaking bitwise reproducibility.
         let mut budget = cfg.batch_max_queries.saturating_sub(head.k);
         let head_model = Arc::clone(&head.model);
         let head_kernel = head.mode.kernel();
-        let followers = queue.drain_matching(usize::MAX, |j| {
-            if Arc::ptr_eq(&j.model, &head_model)
-                && j.mode.kernel() == head_kernel
-                && j.k <= budget
-            {
-                budget -= j.k;
-                true
-            } else {
-                false
-            }
-        });
+        let followers = if head.budget.is_exact() {
+            queue.drain_matching(usize::MAX, |j| {
+                if Arc::ptr_eq(&j.model, &head_model)
+                    && j.mode.kernel() == head_kernel
+                    && j.budget.is_exact()
+                    && j.k <= budget
+                {
+                    budget -= j.k;
+                    true
+                } else {
+                    false
+                }
+            })
+        } else {
+            Vec::new()
+        };
         let mut batch = vec![head];
         batch.extend(followers);
 
@@ -650,6 +675,17 @@ fn run_model_query(
         all_points.extend_from_slice(&job.points);
     }
 
+    // Approx jobs never co-batch (dispatcher_loop), so the batch budget
+    // is the head's.  Resolve the seed here — an unset seed defaults
+    // deterministically from the model key, so repeated queries are
+    // bitwise-stable on any node (DESIGN.md §14).
+    let approx = match batch[0].budget {
+        Budget::Exact => None,
+        Budget::Approx { rel_err, seed } => {
+            Some((rel_err, seed.unwrap_or_else(|| default_seed(&model.name))))
+        }
+    };
+
     // Gradient artifacts ship in flash (+gemm) only; serve flash
     // regardless of the model's eval variant.
     let (pipeline, variant, width) = match kernel {
@@ -699,7 +735,21 @@ fn run_model_query(
             Arc::new(y),
             Arc::new(HostTensor::scalar(model.h as f32)),
         ];
-        let out = engine.execute(&entry, inputs)?;
+        // Approx budget: offer the chunk to the backend's approximate
+        // path with the chunk's global row offset (so chunking never
+        // moves a result); a decline — non-density kernel, non-native
+        // backend — falls through to the exact execution it would have
+        // run anyway (counted by the engine's `exact_fallbacks`).
+        let out = match approx {
+            Some((rel_err, seed)) => {
+                let params = ApproxParams { rel_err, seed, row_offset: start };
+                match engine.execute_approx(&entry, inputs.clone(), params)? {
+                    Some(out) => out,
+                    None => engine.execute(&entry, inputs)?,
+                }
+            }
+            None => engine.execute(&entry, inputs)?,
+        };
         exec_ms += out.timings.total().as_secs_f64() * 1e3;
         let output = out
             .outputs

@@ -16,7 +16,7 @@
 //!   {"v":2,"op":"fit","model":"m1","estimator":"sdkde","d":16,
 //!    "points":[[...],...], "h":0.5?, "h_score":0.35?, "variant":"flash"?}
 //!   {"v":2,"op":"query","model":"m1","mode":"density|log_density|grad",
-//!    "points":[[...],...]}
+//!    "points":[[...],...], "rel_err":0.1?, "seed":42?}
 //!   {"v":2,"op":"models"} | {"v":2,"op":"stats"}
 //!   {"v":2,"op":"delete","model":"m1"}
 //!
@@ -36,9 +36,20 @@
 //! a stale router table can never silently misroute.  The field is
 //! optional and additive, so direct clients (and v1 senders) are
 //! unaffected; the protocol version stays 2.
+//!
+//! **Approx budget** (DESIGN.md §14): query frames may carry an optional
+//! `"rel_err": e` (finite, > 0) requesting approximate evaluation within
+//! that relative-error budget, plus an optional `"seed": s` pinning the
+//! tail-sampler stream (`"seed"` without `"rel_err"` is an error — an
+//! exact query has no sampler to seed).  Frames without the field —
+//! including every legacy v1 line — parse as [`Budget::Exact`], so the
+//! fields are optional and additive like `"epoch"` and the protocol
+//! version stays 2.  Invalid budgets are parse-time errors, mirroring the
+//! typed validation at every other boundary.
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::approx::Budget;
 use crate::estimator::{EstimatorKind, Variant};
 use crate::util::json::{self, Value};
 
@@ -248,6 +259,36 @@ fn parse_epoch(v: &Value) -> Result<Option<u64>> {
     }
 }
 
+/// Extract the optional approx-budget fields (`"rel_err"` / `"seed"`);
+/// absent fields mean [`Budget::Exact`], exactly like legacy frames.
+/// Validation runs through [`Budget::approx`], so the wire rejects the
+/// same budgets every other boundary rejects.
+fn parse_budget(v: &Value) -> Result<Budget> {
+    let rel_err = match v.get("rel_err") {
+        None => {
+            if v.get("seed").is_some() {
+                bail!(
+                    "'seed' requires 'rel_err' (an exact query has no \
+                     sampler to seed)"
+                );
+            }
+            return Ok(Budget::Exact);
+        }
+        Some(x) => x
+            .as_f64()
+            .ok_or_else(|| anyhow!("'rel_err' must be a number"))?,
+    };
+    let seed = match v.get("seed") {
+        None => None,
+        Some(x) => Some(
+            x.as_usize()
+                .ok_or_else(|| anyhow!("'seed' must be a non-negative integer"))?
+                as u64,
+        ),
+    };
+    Budget::approx(rel_err, seed).map_err(|e| anyhow!(e))
+}
+
 impl Request {
     /// The model name this request routes by — `Some` for the
     /// model-addressed ops (`fit`, `query`, `delete`), `None` for the
@@ -371,7 +412,8 @@ impl Request {
                 Ok(Request::Query {
                     model,
                     d,
-                    spec: QuerySpec::new(points, mode),
+                    spec: QuerySpec::new(points, mode)
+                        .with_budget(parse_budget(&v)?),
                     epoch: parse_epoch(&v)?,
                 })
             }
@@ -425,15 +467,21 @@ impl Request {
                 }
                 versioned(stamped(fields, epoch))
             }
-            Request::Query { model, d, spec, epoch } => versioned(stamped(
-                vec![
-                    ("op", "query".into()),
+            Request::Query { model, d, spec, epoch } => {
+                let mut fields = vec![
+                    ("op", Value::from("query")),
                     ("model", model.as_str().into()),
                     ("mode", spec.mode.as_str().into()),
                     ("points", points_to_json(&spec.points, *d)),
-                ],
-                epoch,
-            )),
+                ];
+                if let Budget::Approx { rel_err, seed } = spec.budget {
+                    fields.push(("rel_err", Value::Number(rel_err)));
+                    if let Some(s) = seed {
+                        fields.push(("seed", Value::from(s)));
+                    }
+                }
+                versioned(stamped(fields, epoch))
+            }
         };
         json::to_string(&v)
     }
@@ -699,6 +747,63 @@ mod tests {
             };
             let back = Request::parse(&req.to_line()).unwrap();
             assert_eq!(req, back, "mode {mode}");
+        }
+    }
+
+    #[test]
+    fn approx_budget_round_trips_and_legacy_parses_exact() {
+        // rel_err alone, and rel_err + seed, both survive the wire.
+        for seed in [None, Some(42u64)] {
+            let req = Request::Query {
+                model: "m".into(),
+                d: 1,
+                spec: QuerySpec::density(vec![0.5])
+                    .with_budget(Budget::approx(0.1, seed).unwrap()),
+                epoch: Some(2),
+            };
+            let line = req.to_line();
+            assert!(line.contains("\"rel_err\":0.1"), "{line}");
+            assert_eq!(
+                line.contains("\"seed\":42"),
+                seed.is_some(),
+                "{line}"
+            );
+            assert_eq!(Request::parse(&line).unwrap(), req, "{line}");
+        }
+        // Exact frames carry neither field.
+        let line = Request::Query {
+            model: "m".into(),
+            d: 1,
+            spec: QuerySpec::density(vec![0.5]),
+            epoch: None,
+        }
+        .to_line();
+        assert!(!line.contains("rel_err") && !line.contains("seed"), "{line}");
+        // Legacy v1 lines (no budget fields) parse as Exact.
+        let req = Request::parse(
+            r#"{"op":"eval","model":"m","points":[[1.0]]}"#,
+        )
+        .unwrap();
+        match req {
+            Request::Query { spec, .. } => assert!(spec.budget.is_exact()),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn malformed_approx_budgets_rejected() {
+        for bad in [
+            // Invalid rel_err values: zero, negative, non-numeric.
+            r#"{"v":2,"op":"query","model":"m","points":[[1]],"rel_err":0}"#,
+            r#"{"v":2,"op":"query","model":"m","points":[[1]],"rel_err":-0.5}"#,
+            r#"{"v":2,"op":"query","model":"m","points":[[1]],"rel_err":"x"}"#,
+            // Seed without a budget, and malformed seeds.
+            r#"{"v":2,"op":"query","model":"m","points":[[1]],"seed":7}"#,
+            r#"{"v":2,"op":"query","model":"m","points":[[1]],"rel_err":0.1,"seed":-1}"#,
+            r#"{"v":2,"op":"query","model":"m","points":[[1]],"rel_err":0.1,"seed":1.5}"#,
+            r#"{"v":2,"op":"query","model":"m","points":[[1]],"rel_err":0.1,"seed":"x"}"#,
+        ] {
+            assert!(Request::parse(bad).is_err(), "accepted: {bad}");
         }
     }
 

@@ -24,6 +24,7 @@
 
 use std::sync::Arc;
 
+use crate::approx::Budget;
 use crate::estimator::{bandwidth, EstimatorKind, Variant};
 
 use super::registry::FittedModel;
@@ -182,18 +183,25 @@ impl std::fmt::Display for OutputMode {
     }
 }
 
-/// Typed query request: points plus the requested output mode.
+/// Typed query request: points plus the requested output mode and an
+/// accuracy budget (defaulting to [`Budget::Exact`]).
 ///
 /// ```
-/// use flash_sdkde::{OutputMode, QuerySpec};
+/// use flash_sdkde::{Budget, OutputMode, QuerySpec};
 ///
 /// let q = QuerySpec::density(vec![0.0, 1.0]);
 /// assert_eq!(q.mode, OutputMode::Density);
+/// assert!(q.budget.is_exact());
 /// let g = QuerySpec::grad(vec![0.0, 1.0]);
 /// assert_eq!(g.mode, OutputMode::Grad);
 /// // Gradients are d values per row; densities one.
 /// assert_eq!(g.mode.width(2), 2);
 /// assert_eq!(q.mode.width(2), 1);
+///
+/// // Opt a query into the approximate sublinear path (DESIGN.md §14):
+/// let budget = Budget::approx(0.1, None).expect("valid budget");
+/// let a = QuerySpec::density(vec![0.0, 1.0]).with_budget(budget);
+/// assert_eq!(a.budget, budget);
 /// ```
 #[derive(Debug, Clone, PartialEq)]
 pub struct QuerySpec {
@@ -201,12 +209,16 @@ pub struct QuerySpec {
     pub points: Vec<f32>,
     /// What to compute at each point.
     pub mode: OutputMode,
+    /// Accuracy budget: exact (default) or approximate within a
+    /// relative-error bound (density kernels only — gradient queries
+    /// fall back to exact; DESIGN.md §14).
+    pub budget: Budget,
 }
 
 impl QuerySpec {
-    /// Query with an explicit mode.
+    /// Query with an explicit mode (and the default [`Budget::Exact`]).
     pub fn new(points: Vec<f32>, mode: OutputMode) -> QuerySpec {
-        QuerySpec { points, mode }
+        QuerySpec { points, mode, budget: Budget::Exact }
     }
 
     /// Density query (`p̂(y)` per row).
@@ -222,6 +234,13 @@ impl QuerySpec {
     /// Gradient query (`∇ log p̂(y)`, `d` values per row).
     pub fn grad(points: Vec<f32>) -> QuerySpec {
         QuerySpec::new(points, OutputMode::Grad)
+    }
+
+    /// Set the accuracy budget (validate `Approx` budgets through
+    /// [`Budget::approx`] first).
+    pub fn with_budget(mut self, budget: Budget) -> QuerySpec {
+        self.budget = budget;
+        self
     }
 }
 
@@ -382,5 +401,16 @@ mod tests {
         assert_eq!(QuerySpec::density(pts.clone()).mode, OutputMode::Density);
         assert_eq!(QuerySpec::log_density(pts.clone()).mode, OutputMode::LogDensity);
         assert_eq!(QuerySpec::grad(pts).mode, OutputMode::Grad);
+    }
+
+    #[test]
+    fn query_spec_budget_defaults_exact_and_builds() {
+        let pts = vec![1.0f32, 2.0];
+        for mode in OutputMode::ALL {
+            assert!(QuerySpec::new(pts.clone(), mode).budget.is_exact());
+        }
+        let b = Budget::approx(0.25, Some(9)).expect("valid");
+        let spec = QuerySpec::density(pts).with_budget(b);
+        assert_eq!(spec.budget, Budget::Approx { rel_err: 0.25, seed: Some(9) });
     }
 }

@@ -51,6 +51,7 @@ use anyhow::{anyhow, Result};
 
 use crate::config::RouterConfig;
 use crate::util::json::Value;
+use crate::util::rng::splitmix64;
 use crate::{log_info, log_warn};
 
 use super::protocol::{Request, Response, MAX_EPOCH, PROTOCOL_VERSION};
@@ -60,20 +61,13 @@ use super::server::{Client, LineHandler, LineServer};
 // Rendezvous hashing.
 // ---------------------------------------------------------------------------
 
-/// splitmix64 finalizer: full-avalanche mixing of the running FNV state,
-/// so max-selection over nodes behaves uniformly even for short,
-/// similar keys (`m1`, `m2`, …).
-fn mix64(x: u64) -> u64 {
-    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
-    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
-    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
-    z ^ (z >> 31)
-}
-
 /// The rendezvous weight of `(node, key)`: FNV-1a over both strings
 /// (with a separator byte so `("ab", "c")` ≠ `("a", "bc")`) pushed
-/// through a splitmix64 finalizer.  Deterministic across platforms and
-/// builds — placement must not change under recompilation.
+/// through the shared [`splitmix64`] finalizer — full-avalanche mixing
+/// of the running FNV state, so max-selection over nodes behaves
+/// uniformly even for short, similar keys (`m1`, `m2`, …).
+/// Deterministic across platforms and builds — placement must not
+/// change under recompilation.
 pub fn rendezvous_weight(node: &str, key: &str) -> u64 {
     const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
     const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
@@ -85,7 +79,7 @@ pub fn rendezvous_weight(node: &str, key: &str) -> u64 {
     for b in key.as_bytes() {
         h = (h ^ u64::from(*b)).wrapping_mul(FNV_PRIME);
     }
-    mix64(h)
+    splitmix64(h)
 }
 
 /// A versioned set of worker addresses with rendezvous-hash placement.

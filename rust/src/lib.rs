@@ -54,6 +54,7 @@
 #![warn(missing_docs)]
 
 pub mod analysis;
+pub mod approx;
 pub mod bench_harness;
 pub mod config;
 pub mod coordinator;
@@ -63,6 +64,7 @@ pub mod runtime;
 pub mod tuner;
 pub mod util;
 
+pub use approx::Budget;
 pub use config::Config;
 pub use coordinator::{
     Coordinator, FitSpec, ModelHandle, OutputMode, QueryResult, QuerySpec,

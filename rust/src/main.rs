@@ -22,7 +22,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 #[cfg(feature = "pjrt")]
 use flash_sdkde::bench_harness::experiments::Ctx;
-use flash_sdkde::bench_harness::{self, native_cmp, RunSpec};
+use flash_sdkde::bench_harness::{self, frontier, native_cmp, RunSpec};
 use flash_sdkde::config::{Config, RouterConfig};
 use flash_sdkde::coordinator::router::{Router, RouterServer};
 use flash_sdkde::coordinator::server::{Client, Server};
@@ -32,6 +32,7 @@ use flash_sdkde::runtime::{BackendKind, Manifest};
 use flash_sdkde::tuner;
 use flash_sdkde::util::cli::{self, Command, OptSpec};
 use flash_sdkde::util::json;
+use flash_sdkde::Budget;
 
 fn commands() -> Vec<Command> {
     vec![
@@ -90,7 +91,8 @@ fn commands() -> Vec<Command> {
             about: "regenerate a paper table/figure",
             opts: vec![
                 OptSpec::opt_required("experiment",
-                    "fig1|table1|fig2|fig3|fig4|fig5|fig6|fig7|blocksweep|headline|native|all"),
+                    "fig1|table1|fig2|fig3|fig4|fig5|fig6|fig7|blocksweep|\
+                     headline|native|frontier|all"),
                 OptSpec::opt_default("artifacts", "artifact directory", "artifacts"),
                 OptSpec::opt_default("iters", "measured iterations", "3"),
                 OptSpec::opt_default("warmup", "warmup iterations", "1"),
@@ -101,6 +103,8 @@ fn commands() -> Vec<Command> {
                     "add the native CPU backend as a third series (fig1/fig6)"),
                 OptSpec::opt("tuning",
                     "tile-tuning table for the native series/comparison"),
+                OptSpec::flag("quick",
+                    "frontier: tiny sweep + single iteration (CI smoke)"),
             ],
         },
         Command {
@@ -134,6 +138,14 @@ fn commands() -> Vec<Command> {
                 OptSpec::opt_required("data", "whitespace/comma separated point file"),
                 OptSpec::opt_required("d", "dimension"),
                 OptSpec::opt_default("mode", "density|log_density|grad", "density"),
+                OptSpec::opt("rel-err",
+                    "approximate query budget: relative density error \
+                     (DESIGN.md §14); omit for an exact query"),
+                OptSpec::opt("seed",
+                    "approximate tail-sampler seed (requires --rel-err; \
+                     defaults deterministically from the model name)"),
+                OptSpec::opt("config",
+                    "JSON config supplying the approx_rel_err default"),
             ],
         },
         Command {
@@ -351,6 +363,31 @@ fn cmd_bench(p: &cli::Parsed) -> Result<()> {
     if which == "native" {
         return run_native(spec);
     }
+    // The exact-vs-approx frontier is likewise artifact-free: it sweeps
+    // the native backend's error budgets (DESIGN.md §14) in every build.
+    if which == "frontier" {
+        let quick = p.flag("quick");
+        let spec = if quick
+            && p.get_usize("iters").map_err(|e| anyhow!(e))?.is_none()
+            && p.get_usize("warmup").map_err(|e| anyhow!(e))?.is_none()
+        {
+            RunSpec::new(0, 1)
+        } else {
+            spec
+        };
+        let sizes = p
+            .get_usize_list("sizes")
+            .map_err(|e| anyhow!(e))?
+            .unwrap_or_else(|| {
+                if quick {
+                    frontier::QUICK_SIZES.to_vec()
+                } else {
+                    frontier::DEFAULT_SIZES.to_vec()
+                }
+            });
+        frontier::exact_vs_approx(spec, &sizes)?.emit("frontier");
+        return Ok(());
+    }
 
     #[cfg(feature = "pjrt")]
     {
@@ -494,11 +531,35 @@ fn cmd_eval(p: &cli::Parsed) -> Result<()> {
     let mode_name = p.get_string("mode", "density");
     let mode = OutputMode::parse(&mode_name)
         .ok_or_else(|| anyhow!("bad mode {mode_name:?}"))?;
+    // Error budget: an explicit --rel-err wins; otherwise an optional
+    // --config supplies its `approx_rel_err` client-side default; with
+    // neither the query is exact.  Budgets are validated here at the
+    // boundary (typed error, not a server-side surprise).
+    let cfg_rel_err = match p.get("config") {
+        Some(path) => {
+            Config::from_file(Path::new(path))
+                .map_err(|e| anyhow!(e))?
+                .approx_rel_err
+        }
+        None => None,
+    };
+    let rel_err = p.get_f64("rel-err").map_err(|e| anyhow!(e))?.or(cfg_rel_err);
+    let seed = p
+        .get_usize("seed")
+        .map_err(|e| anyhow!(e))?
+        .map(|s| s as u64);
+    let budget = match (rel_err, seed) {
+        (Some(e), s) => Budget::approx(e, s).map_err(|e| anyhow!(e))?,
+        (None, Some(_)) => bail!(
+            "--seed requires --rel-err (an exact query has no sampler to seed)"
+        ),
+        (None, None) => Budget::Exact,
+    };
     let mut client = Client::connect(p.get_string("addr", "127.0.0.1:7474"))?;
     let result = client.query(
         p.get("model").expect("required"),
         d,
-        QuerySpec::new(points, mode),
+        QuerySpec::new(points, mode).with_budget(budget),
     )?;
     // One output row per line: a single value for densities, d
     // comma-separated values for gradients.

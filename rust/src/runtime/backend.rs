@@ -52,6 +52,7 @@ use anyhow::{bail, Result};
 
 use super::artifact::{ArtifactEntry, Manifest};
 use super::tensor::HostTensor;
+use crate::approx::{deann::DeannIndex, rff::RffSketch, ApproxParams};
 use crate::estimator::flash::{self, TileConfig};
 use crate::tuner::TuningTable;
 use crate::util::timer::PhaseTimer;
@@ -96,6 +97,15 @@ pub struct StoreStats {
     /// 0 when no table is loaded — an absent table is not a fallback.
     /// Engine-wide, like `prepare_hits`.
     pub tuned_fallbacks: u64,
+    /// Executions served by the approximate path (native; 0 for PJRT):
+    /// approx-budget density chunks answered by the DEANN index / RFF
+    /// sketch instead of the exact sweep (DESIGN.md §14).  Engine-wide,
+    /// like `prepare_hits`.
+    pub approx_queries: u64,
+    /// Approx-budget executions the backend declined and routed back to
+    /// the exact path — gradient/Laplace/fit pipelines, which have no
+    /// approximate estimator.  Engine-wide, like `prepare_hits`.
+    pub exact_fallbacks: u64,
 }
 
 /// What an engine worker drives.  Implementations are single-thread
@@ -104,6 +114,23 @@ pub struct StoreStats {
 pub trait ExecBackend {
     /// Execute an artifact entry with validated host tensors.
     fn execute(&mut self, entry: &ArtifactEntry, inputs: &[Arc<HostTensor>]) -> Result<ExecOutput>;
+
+    /// Try to execute an entry through the backend's *approximate* path
+    /// within the resolved error budget (DESIGN.md §14).  `Ok(None)`
+    /// means this backend (or this pipeline) has no approximate
+    /// estimator and the caller must run [`execute`](Self::execute) —
+    /// which is exactly what the default implementation says.  `Err` is
+    /// reserved for real failures (bad shapes, torn entries), never for
+    /// "cannot approximate".
+    fn execute_approx(
+        &mut self,
+        entry: &ArtifactEntry,
+        inputs: &[Arc<HostTensor>],
+        params: &ApproxParams,
+    ) -> Result<Option<ExecOutput>> {
+        let _ = (entry, inputs, params);
+        Ok(None)
+    }
 
     /// Pre-warm an entry (compile for PJRT; no-op for native).
     fn warm(&mut self, entry: &ArtifactEntry) -> Result<Duration>;
@@ -245,7 +272,28 @@ struct PrepareSlot {
     w: Weak<HostTensor>,
     prep: Arc<flash::PreparedTrain>,
     tile: TileConfig,
+    /// DEANN cell index (DESIGN.md §14), built lazily on the model's
+    /// first approx-budget query — exact-only serving never pays for it.
+    /// Like `prep`, it depends only on the train tensors, so one index
+    /// serves every bandwidth and budget.
+    deann: Option<Arc<DeannIndex>>,
+    /// RFF sketches keyed by `(h_bits, rel_err_bits)`, **including
+    /// negative entries** (`sketch: None` = "probed, not viable"), so
+    /// the viability probe runs once per model/budget, not per query.
+    sketches: Vec<SketchSlot>,
 }
+
+/// One cached RFF probe result for a `(bandwidth, budget)` pair.
+struct SketchSlot {
+    h_bits: u64,
+    rel_err_bits: u64,
+    sketch: Option<Arc<RffSketch>>,
+}
+
+/// Bound on cached RFF probe results per model slot — eviction is FIFO;
+/// serving traffic uses a handful of budgets at most, so churn here
+/// would indicate a client sweeping budgets, not a hot path to protect.
+const MAX_SKETCHES_PER_MODEL: usize = 8;
 
 /// Default upper bound on resident prepared models per cache — the
 /// standalone-constructor fallback, matching the default registry
@@ -282,6 +330,8 @@ struct CacheInner {
     prepare_misses: u64,
     tuned_lookups: u64,
     tuned_fallbacks: u64,
+    approx_queries: u64,
+    exact_fallbacks: u64,
 }
 
 impl CacheInner {
@@ -303,6 +353,8 @@ impl PrepareCache {
                 prepare_misses: 0,
                 tuned_lookups: 0,
                 tuned_fallbacks: 0,
+                approx_queries: 0,
+                exact_fallbacks: 0,
             })),
         }
     }
@@ -468,8 +520,103 @@ impl NativeFlash {
             w: Arc::downgrade(w),
             prep: Arc::clone(&prep),
             tile,
+            deann: None,
+            sketches: Vec::new(),
         });
         Ok((prep, tile))
+    }
+
+    /// Resolve the approximate estimators for a model at one bandwidth
+    /// and budget: the per-model [`DeannIndex`] (always available) and
+    /// the [`RffSketch`] for this `(h, rel_err)` pair when viable.  Both
+    /// live in the model's prepare slot; like `prepared_for`, builds run
+    /// *outside* the cache lock with a sibling re-check afterwards, so
+    /// one worker's O(n·√n·d) index build never stalls siblings serving
+    /// cached models.
+    fn approx_for(
+        &mut self,
+        x: &Arc<HostTensor>,
+        w: &Arc<HostTensor>,
+        d: usize,
+        m: usize,
+        h: f64,
+        rel_err: f64,
+    ) -> Result<(Arc<DeannIndex>, Option<Arc<RffSketch>>)> {
+        // Ensure the model has a slot — and the exact prepared form any
+        // per-row fallback or later exact query wants anyway.
+        self.prepared_for(x, w, d, m)?;
+        let find = |slots: &[PrepareSlot]| {
+            slots.iter().position(|s| {
+                std::ptr::eq(s.x.as_ptr(), Arc::as_ptr(x))
+                    && std::ptr::eq(s.w.as_ptr(), Arc::as_ptr(w))
+                    && s.prep.d() == d
+            })
+        };
+
+        // DEANN index: built once per model, bandwidth-independent.
+        let cached = {
+            let inner = self.cache.lock();
+            find(&inner.slots).and_then(|p| inner.slots[p].deann.clone())
+        };
+        let deann = match cached {
+            Some(idx) => idx,
+            None => {
+                let built = Arc::new(DeannIndex::build(x.data(), w.data(), d));
+                let mut inner = self.cache.lock();
+                match find(&inner.slots) {
+                    // A sibling may have built it while we did: keep one
+                    // canonical index per slot.
+                    Some(p) => Arc::clone(
+                        inner.slots[p].deann.get_or_insert(built),
+                    ),
+                    // Slot evicted meanwhile: serve the build uncached.
+                    None => built,
+                }
+            }
+        };
+
+        // RFF sketch: one probe per (h, rel_err), negative results cached
+        // too so non-viable regimes don't re-probe per query.
+        let key = (h.to_bits(), rel_err.to_bits());
+        let hit = |slot: &PrepareSlot| {
+            slot.sketches
+                .iter()
+                .find(|s| (s.h_bits, s.rel_err_bits) == key)
+                .map(|s| s.sketch.clone())
+        };
+        let cached = {
+            let inner = self.cache.lock();
+            find(&inner.slots).and_then(|p| hit(&inner.slots[p]))
+        };
+        let sketch = match cached {
+            Some(entry) => entry,
+            None => {
+                let built =
+                    RffSketch::build(x.data(), w.data(), d, h, rel_err)
+                        .map(Arc::new);
+                let mut inner = self.cache.lock();
+                match find(&inner.slots) {
+                    Some(p) => {
+                        if let Some(entry) = hit(&inner.slots[p]) {
+                            entry // sibling probed first: share its result
+                        } else {
+                            let slot = &mut inner.slots[p];
+                            if slot.sketches.len() >= MAX_SKETCHES_PER_MODEL {
+                                slot.sketches.remove(0);
+                            }
+                            slot.sketches.push(SketchSlot {
+                                h_bits: key.0,
+                                rel_err_bits: key.1,
+                                sketch: built.clone(),
+                            });
+                            built
+                        }
+                    }
+                    None => built,
+                }
+            }
+        };
+        Ok((deann, sketch))
     }
 
     /// Positional input access with a typed error — validate_inputs only
@@ -642,6 +789,83 @@ impl ExecBackend for NativeFlash {
         Ok(ExecOutput { outputs: vec![output], timings: timer })
     }
 
+    fn execute_approx(
+        &mut self,
+        entry: &ArtifactEntry,
+        inputs: &[Arc<HostTensor>],
+        params: &ApproxParams,
+    ) -> Result<Option<ExecOutput>> {
+        // Only the density pipeline has approximate estimators
+        // (DESIGN.md §14); gradients, Laplace and the fit pipelines are
+        // counted exact fallbacks.
+        if entry.pipeline.as_str() != "kde" {
+            self.cache.lock().exact_fallbacks += 1;
+            return Ok(None);
+        }
+        validate_inputs(entry, inputs)?;
+        let d = entry.d;
+        let mut timer = PhaseTimer::new();
+        let start = Instant::now();
+
+        // Same boundary validation as the exact path: torn entries are
+        // typed errors here too, never index-build panics.
+        let x_arc = Self::input_arc(inputs, 0, "x")?;
+        let w_arc = Self::input_arc(inputs, 1, "w")?;
+        let x = x_arc.data();
+        let w = w_arc.data();
+        if !w.iter().any(|&v| v != 0.0) {
+            bail!("artifact {}: no effective samples (all weights zero)", entry.key());
+        }
+        if d == 0 {
+            bail!("artifact {}: dimension must be >= 1", entry.key());
+        }
+        if x.len() != w.len() * d {
+            bail!(
+                "artifact {}: train tensors disagree: x has {} values, \
+                 w has {} rows, d={d}",
+                entry.key(),
+                x.len(),
+                w.len()
+            );
+        }
+        let y = Self::rows_input(inputs, 2, "y", d)?;
+        let h = Self::scalar(inputs, 3, "h")?;
+        let m = y.len() / d;
+
+        let (deann, sketch) =
+            self.approx_for(x_arc, w_arc, d, m, h, params.rel_err)?;
+        // Per row: the sketch when it accepts (n-independent), DEANN
+        // otherwise.  Acceptance is deterministic, so the split — and
+        // therefore the result — is bitwise-stable per (query, seed).
+        let mut dens = Vec::with_capacity(m);
+        for (i, q) in y.chunks_exact(d).enumerate() {
+            let row = (params.row_offset + i) as u64;
+            let v = sketch
+                .as_deref()
+                .and_then(|sk| sk.density(q, h, params.rel_err))
+                .unwrap_or_else(|| {
+                    deann.density(q, h, params.rel_err, params.seed, row)
+                });
+            dens.push(v as f32);
+        }
+        let output = HostTensor::vec1(dens);
+
+        timer.add("execute", start.elapsed());
+        if let Some(spec) = entry.outputs.first() {
+            if !spec.shape.is_empty() && spec.shape != output.shape() {
+                bail!(
+                    "native approx {} produced shape {:?}, manifest says {:?}",
+                    entry.key(),
+                    output.shape(),
+                    spec.shape
+                );
+            }
+        }
+        self.cache.lock().approx_queries += 1;
+        self.stats.executions += 1;
+        Ok(Some(ExecOutput { outputs: vec![output], timings: timer }))
+    }
+
     fn warm(&mut self, _entry: &ArtifactEntry) -> Result<Duration> {
         // Nothing to compile: the kernels are this binary.
         Ok(Duration::default())
@@ -657,6 +881,8 @@ impl ExecBackend for NativeFlash {
             prepare_misses: inner.prepare_misses,
             tuned_lookups: inner.tuned_lookups,
             tuned_fallbacks: inner.tuned_fallbacks,
+            approx_queries: inner.approx_queries,
+            exact_fallbacks: inner.exact_fallbacks,
             ..self.stats
         }
     }
@@ -1047,6 +1273,130 @@ mod tests {
         }
         assert_eq!(worker_a.prepared_len(), 1);
         assert_eq!(worker_b.prepared_len(), 1, "one cache, one slot");
+    }
+
+    #[test]
+    fn approx_execute_serves_kde_within_budget_and_counts() {
+        use crate::approx::ApproxParams;
+        let (n, m, d) = (600, 8, 3);
+        let mut rng = Pcg64::seeded(7);
+        let x = rng.normal_vec_f32(n * d);
+        let y = rng.normal_vec_f32(m * d);
+        let w = vec![1.0f32; n];
+        let h = 0.5f64;
+        let entry = kde_entry(n, m, d);
+        let inputs = arcs(vec![
+            HostTensor::matrix(n, d, x.clone()).unwrap(),
+            HostTensor::vec1(w.clone()),
+            HostTensor::matrix(m, d, y.clone()).unwrap(),
+            HostTensor::scalar(h as f32),
+        ]);
+        let params = ApproxParams { rel_err: 0.1, seed: 99, row_offset: 0 };
+
+        let mut backend = NativeFlash::new();
+        let out = backend
+            .execute_approx(&entry, &inputs, &params)
+            .expect("approx execute")
+            .expect("native serves kde approximately");
+        assert_eq!(out.outputs[0].shape(), &[m]);
+        let exact = native::kde(&x, &w, &y, d, h);
+        for (a, b) in out.outputs[0].data().iter().zip(&exact) {
+            let rel = (*a as f64 - b).abs() / b.abs().max(1e-30);
+            assert!(rel <= params.rel_err, "{a} vs {b} (rel {rel:.3e})");
+        }
+        let s = backend.stats();
+        assert_eq!(s.approx_queries, 1);
+        assert_eq!(s.exact_fallbacks, 0);
+        assert_eq!(s.executions, 1);
+
+        // Bitwise-stable on repeat; the second call reuses the cached
+        // index (one prepare miss total).
+        let again = backend
+            .execute_approx(&entry, &inputs, &params)
+            .expect("approx again")
+            .expect("still served");
+        assert_eq!(again.outputs, out.outputs);
+        assert_eq!(backend.stats().prepare_misses, 1);
+        assert_eq!(backend.stats().prepare_hits, 1);
+    }
+
+    #[test]
+    fn approx_is_chunk_invariant_via_row_offset() {
+        use crate::approx::ApproxParams;
+        let (n, d) = (400, 2);
+        let mut rng = Pcg64::seeded(13);
+        let x = rng.normal_vec_f32(n * d);
+        let y = rng.normal_vec_f32(8 * d);
+        let w = vec![1.0f32; n];
+        let xs = Arc::new(HostTensor::matrix(n, d, x).unwrap());
+        let ws = Arc::new(HostTensor::vec1(w));
+        let h = Arc::new(HostTensor::scalar(0.5));
+        let run = |b: &mut NativeFlash, rows: &[f32], m: usize, off: usize| {
+            let inputs = vec![
+                Arc::clone(&xs),
+                Arc::clone(&ws),
+                Arc::new(HostTensor::matrix(m, d, rows.to_vec()).unwrap()),
+                Arc::clone(&h),
+            ];
+            let params =
+                ApproxParams { rel_err: 0.1, seed: 5, row_offset: off };
+            b.execute_approx(&kde_entry(n, m, d), &inputs, &params)
+                .expect("approx")
+                .expect("served")
+                .outputs
+                .remove(0)
+        };
+        let mut backend = NativeFlash::new();
+        let whole = run(&mut backend, &y, 8, 0);
+        let first = run(&mut backend, &y[..5 * d], 5, 0);
+        let rest = run(&mut backend, &y[5 * d..], 3, 5);
+        let stitched: Vec<f32> = first
+            .data()
+            .iter()
+            .chain(rest.data())
+            .copied()
+            .collect();
+        assert_eq!(whole.data(), &stitched[..], "chunking moved a result");
+    }
+
+    #[test]
+    fn approx_declines_non_kde_pipelines_as_counted_fallback() {
+        use crate::approx::ApproxParams;
+        let mut backend = NativeFlash::new();
+        let mut entry = kde_entry(4, 2, 1);
+        entry.pipeline = "score_eval".into();
+        let params = ApproxParams { rel_err: 0.1, seed: 0, row_offset: 0 };
+        let out = backend
+            .execute_approx(&entry, &[], &params)
+            .expect("decline is not an error");
+        assert!(out.is_none());
+        assert_eq!(backend.stats().exact_fallbacks, 1);
+        assert_eq!(backend.stats().approx_queries, 0);
+        // The default trait impl (non-native backends) also declines.
+        struct Nop;
+        impl ExecBackend for Nop {
+            fn execute(
+                &mut self,
+                _: &ArtifactEntry,
+                _: &[Arc<HostTensor>],
+            ) -> Result<ExecOutput> {
+                unreachable!()
+            }
+            fn warm(&mut self, _: &ArtifactEntry) -> Result<Duration> {
+                Ok(Duration::default())
+            }
+            fn stats(&self) -> StoreStats {
+                StoreStats::default()
+            }
+            fn cached_len(&self) -> usize {
+                0
+            }
+            fn platform(&self) -> String {
+                "nop".into()
+            }
+        }
+        let kde = kde_entry(4, 2, 1);
+        assert!(Nop.execute_approx(&kde, &[], &params).unwrap().is_none());
     }
 
     #[test]

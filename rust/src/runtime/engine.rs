@@ -21,6 +21,7 @@ use super::backend::{
     BackendKind, ExecBackend as _, ExecOutput, PrepareCache, StoreStats,
 };
 use super::tensor::HostTensor;
+use crate::approx::ApproxParams;
 use crate::log_info;
 use crate::tuner::TuningTable;
 
@@ -39,6 +40,11 @@ enum Job {
     Exec {
         req: ExecRequest,
         reply: Sender<Result<ExecOutput>>,
+    },
+    ExecApprox {
+        req: ExecRequest,
+        params: ApproxParams,
+        reply: Sender<Result<Option<ExecOutput>>>,
     },
     Warm {
         entries: Vec<ArtifactEntry>,
@@ -150,6 +156,28 @@ impl Engine {
         rx.recv().map_err(|_| anyhow!("engine worker dropped reply"))?
     }
 
+    /// Try to execute an artifact through the backend's approximate path
+    /// (DESIGN.md §14); blocks until the result is ready.  `Ok(None)`
+    /// means the backend declined (no approximate estimator for this
+    /// pipeline/substrate) and the caller must fall back to
+    /// [`execute`](Self::execute).
+    pub fn execute_approx(
+        &self,
+        entry: &ArtifactEntry,
+        inputs: Vec<Arc<HostTensor>>,
+        params: ApproxParams,
+    ) -> Result<Option<ExecOutput>> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Job::ExecApprox {
+                req: ExecRequest { entry: entry.clone(), inputs },
+                params,
+                reply,
+            })
+            .map_err(|_| anyhow!("engine is shut down"))?;
+        rx.recv().map_err(|_| anyhow!("engine worker dropped reply"))?
+    }
+
     /// Pre-compile entries on one worker; returns total compile time.
     pub fn warm(&self, entries: Vec<ArtifactEntry>) -> Result<Duration> {
         let (reply, rx) = channel();
@@ -201,6 +229,10 @@ fn worker_loop(
         match job {
             Job::Exec { req, reply } => {
                 let out = store.execute(&req.entry, &req.inputs);
+                let _ = reply.send(out);
+            }
+            Job::ExecApprox { req, params, reply } => {
+                let out = store.execute_approx(&req.entry, &req.inputs, &params);
                 let _ = reply.send(out);
             }
             Job::Warm { entries, reply } => {

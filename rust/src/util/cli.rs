@@ -224,6 +224,28 @@ pub fn scan_raw_option(
     Ok(None)
 }
 
+/// Scan raw process arguments for a boolean `--<name>` flag — the
+/// presence-only companion of [`scan_raw_option`] for harness-less bench
+/// binaries (e.g. `--native-series` on the figure benches).  Unknown
+/// arguments are ignored; `--<name>=...` is an error, mirroring the full
+/// parser's "does not take a value" rejection.
+pub fn scan_raw_flag(
+    name: &str,
+    args: impl Iterator<Item = String>,
+) -> Result<bool, String> {
+    let exact = format!("--{name}");
+    let prefix = format!("--{name}=");
+    for a in args {
+        if a == exact {
+            return Ok(true);
+        }
+        if a.starts_with(&prefix) {
+            return Err(format!("--{name} does not take a value"));
+        }
+    }
+    Ok(false)
+}
+
 /// Render help text for one subcommand.
 pub fn help_text(program: &str, cmd: &Command) -> String {
     let mut out = String::new();
@@ -390,6 +412,27 @@ mod tests {
         );
         let err = scan_raw_option("tuning", args(&["--tuning"]).into_iter()).unwrap_err();
         assert!(err.contains("--tuning"), "{err}");
+    }
+
+    #[test]
+    fn scan_raw_flag_detects_presence_and_rejects_values() {
+        let args = |xs: &[&str]| xs.iter().map(|s| s.to_string()).collect::<Vec<_>>();
+        assert!(scan_raw_flag(
+            "native-series",
+            args(&["--bench", "--native-series"]).into_iter()
+        )
+        .unwrap());
+        assert!(!scan_raw_flag(
+            "native-series",
+            args(&["--other"]).into_iter()
+        )
+        .unwrap());
+        let err = scan_raw_flag(
+            "native-series",
+            args(&["--native-series=1"]).into_iter(),
+        )
+        .unwrap_err();
+        assert!(err.contains("--native-series"), "{err}");
     }
 
     #[test]

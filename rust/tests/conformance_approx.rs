@@ -1,0 +1,260 @@
+//! Conformance for the approximate query path (DESIGN.md §14): the
+//! DEANN-style pruned index and the RFF sketch vs the exact scalar
+//! oracle, the end-to-end coordinator contract (budgets thread the
+//! queue, exact results stay bitwise untouched, counters move), and the
+//! typed-error surface for invalid budgets at every boundary.  Runs
+//! unconditionally — no artifacts, no XLA, no feature flags — like
+//! `conformance_native`.
+//!
+//! Error policy: the DEANN estimator's stopping rule is deterministic
+//! (remaining upper bound ≤ 0.9 · rel_err · accumulated exact mass), so
+//! its answers are asserted within the requested budget on **every**
+//! grid cell.  The RFF sketch self-gates per query (it answers only when
+//! its conservative noise floor fits the budget), so its answers are
+//! asserted within budget wherever it accepts; declined queries are the
+//! documented fallback, served by DEANN.
+
+use flash_sdkde::approx::{deann::DeannIndex, default_seed, rff::RffSketch};
+use flash_sdkde::config::Config;
+use flash_sdkde::coordinator::protocol::Request;
+use flash_sdkde::coordinator::{Coordinator, FitSpec, QuerySpec};
+use flash_sdkde::data::mixture::by_dim;
+use flash_sdkde::estimator::{bandwidth, native, EstimatorKind};
+use flash_sdkde::runtime::BackendKind;
+use flash_sdkde::util::prop::{check, ensure};
+use flash_sdkde::util::rng::Pcg64;
+use flash_sdkde::Budget;
+
+/// Requested budgets swept per grid cell, loosest first.
+const REL_ERRS: &[f64] = &[0.5, 0.1, 0.02];
+
+/// Slack on top of the requested budget for the oracle comparison: the
+/// estimators guarantee their bound against their own f64 weighted sum;
+/// the oracle re-associates that sum, and the DEANN rule keeps a 10%
+/// safety margin precisely so such noise cannot breach the budget.
+const ORACLE_SLACK: f64 = 1e-6;
+
+fn grid_problem(
+    d: usize,
+    n: usize,
+    masked: usize,
+    m: usize,
+    seed: u64,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>, f64) {
+    let mix = by_dim(d);
+    let mut rng = Pcg64::seeded(seed);
+    let x = mix.sample(n, &mut rng);
+    let y = mix.sample(m, &mut rng);
+    let mut w = vec![1.0f32; n];
+    for wi in w.iter_mut().take(masked) {
+        *wi = 0.0;
+    }
+    let h = bandwidth::sdkde_rate(&x, n, d);
+    (x, w, y, h)
+}
+
+#[test]
+fn budgeted_error_bounded_across_grid() {
+    let seed = default_seed("conformance");
+    for d in [1usize, 3, 16] {
+        for (si, &(n, masked)) in [(256usize, 0usize), (1024, 37)].iter().enumerate() {
+            let (x, w, y, h) = grid_problem(d, n, masked, 48, 500 + si as u64);
+            let exact = native::kde(&x, &w, &y, d, h);
+
+            let index = DeannIndex::build(&x, &w, d);
+            for &rel_err in REL_ERRS {
+                let got = index.densities(&y, h, rel_err, seed, 0);
+                for (i, (a, e)) in got.iter().zip(&exact).enumerate() {
+                    let rel = (a - e).abs() / e.abs().max(1e-300);
+                    assert!(
+                        rel <= rel_err + ORACLE_SLACK,
+                        "deann d={d} n={n} rel_err={rel_err} row {i}: \
+                         {a} vs oracle {e} (rel {rel:.3e})"
+                    );
+                }
+
+                if let Some(sketch) = RffSketch::build(&x, &w, d, h, rel_err) {
+                    let mut accepted = 0usize;
+                    for (i, q) in y.chunks_exact(d).enumerate() {
+                        let Some(a) = sketch.density(q, h, rel_err) else {
+                            continue;
+                        };
+                        accepted += 1;
+                        let e = exact[i];
+                        let rel = (a - e).abs() / e.abs().max(1e-300);
+                        assert!(
+                            rel <= rel_err + ORACLE_SLACK,
+                            "rff d={d} n={n} rel_err={rel_err} row {i}: \
+                             {a} vs oracle {e} (rel {rel:.3e})"
+                        );
+                    }
+                    // A sketch that builds must be useful on in-support
+                    // queries — otherwise the viability gate is broken.
+                    assert!(
+                        accepted > 0,
+                        "rff d={d} n={n} rel_err={rel_err}: sketch built \
+                         but accepted no queries"
+                    );
+                }
+            }
+        }
+    }
+}
+
+fn native_coordinator() -> Coordinator {
+    let mut cfg = Config::default();
+    cfg.backend = BackendKind::Native;
+    cfg.artifacts_dir = "/nonexistent-flash-sdkde-artifacts".into();
+    cfg.batch_wait_ms = 0;
+    Coordinator::start(cfg).expect("native coordinator")
+}
+
+fn engine_counter(coord: &Coordinator, key: &str) -> usize {
+    coord
+        .stats_json()
+        .get("engine")
+        .and_then(|e| e.get(key))
+        .and_then(|v| v.as_usize())
+        .unwrap_or_else(|| panic!("stats_json().engine.{key} missing"))
+}
+
+#[test]
+fn coordinator_serves_budgets_and_keeps_exact_bitwise() {
+    let coord = native_coordinator();
+    let d = 3;
+    let mix = by_dim(d);
+    let mut rng = Pcg64::seeded(9);
+    let handle = coord
+        .fit("m1", mix.sample(512, &mut rng), &FitSpec::new(EstimatorKind::Kde, d))
+        .expect("fit");
+    let y = mix.sample(32, &mut rng);
+
+    let exact1 = coord
+        .query(&handle, QuerySpec::density(y.clone()))
+        .expect("exact query")
+        .values;
+
+    let budget = Budget::approx(0.2, Some(7)).expect("valid budget");
+    let approx1 = coord
+        .query(&handle, QuerySpec::density(y.clone()).with_budget(budget))
+        .expect("approx query")
+        .values;
+    assert_eq!(approx1.len(), exact1.len());
+    for (i, (&a, &e)) in approx1.iter().zip(&exact1).enumerate() {
+        let (a, e) = (f64::from(a), f64::from(e));
+        let rel = (a - e).abs() / e.abs().max(1e-30);
+        assert!(
+            rel <= 0.2 + 1e-3,
+            "row {i}: approx {a} vs exact {e} (rel {rel:.3e})"
+        );
+    }
+    assert!(engine_counter(&coord, "approx_queries") >= 1);
+    assert_eq!(engine_counter(&coord, "exact_fallbacks"), 0);
+
+    // Same budget + seed => bitwise-identical answers, repeatably.
+    let approx2 = coord
+        .query(&handle, QuerySpec::density(y.clone()).with_budget(budget))
+        .expect("approx repeat")
+        .values;
+    assert_eq!(approx1, approx2, "approx replies must be bitwise stable");
+
+    // Exact results are bitwise untouched by interleaved approx traffic.
+    let exact2 = coord
+        .query(&handle, QuerySpec::density(y.clone()))
+        .expect("exact repeat")
+        .values;
+    assert_eq!(exact1, exact2, "exact replies must stay bitwise identical");
+
+    // Non-density kernels decline the budget: the counted fallback serves
+    // exactly what the plain exact query serves.
+    let grad_exact = coord
+        .query(&handle, QuerySpec::grad(y.clone()))
+        .expect("grad exact")
+        .values;
+    let grad_budgeted = coord
+        .query(&handle, QuerySpec::grad(y.clone()).with_budget(budget))
+        .expect("grad with budget")
+        .values;
+    assert_eq!(grad_exact, grad_budgeted, "fallback must serve the exact result");
+    assert!(engine_counter(&coord, "exact_fallbacks") >= 1);
+}
+
+#[test]
+fn prop_exact_results_bit_identical_with_approx_compiled_in() {
+    // The bitwise-invariance contract: with the approx subsystem compiled
+    // in and actively queried, an Exact request returns exactly what it
+    // returned before any approx traffic — across random dims, sizes,
+    // and budgets.
+    let coord = native_coordinator();
+    check("exact bitwise under approx traffic", 10, |rng| {
+        let d = [1usize, 2, 3, 16][rng.below(4) as usize];
+        let n = 64 + rng.below(256) as usize;
+        let m = 1 + rng.below(24) as usize;
+        let mix = by_dim(d);
+        let mut data_rng = Pcg64::new(rng.next_u64(), 5);
+        let name = format!("p{}", rng.next_u64());
+        let handle = coord
+            .fit(&name, mix.sample(n, &mut data_rng), &FitSpec::new(EstimatorKind::Kde, d))
+            .map_err(|e| format!("fit: {e}"))?;
+        let y = mix.sample(m, &mut data_rng);
+
+        let before = coord
+            .query(&handle, QuerySpec::density(y.clone()))
+            .map_err(|e| format!("exact: {e}"))?
+            .values;
+        let rel_err = [0.5, 0.1, 0.02][rng.below(3) as usize];
+        let budget = Budget::approx(rel_err, Some(rng.next_u64() >> 12))
+            .expect("valid budget");
+        coord
+            .query(&handle, QuerySpec::density(y.clone()).with_budget(budget))
+            .map_err(|e| format!("approx: {e}"))?;
+        let after = coord
+            .query(&handle, QuerySpec::density(y))
+            .map_err(|e| format!("exact repeat: {e}"))?
+            .values;
+        ensure(before == after, "exact result moved after approx traffic")?;
+        Ok(())
+    });
+}
+
+#[test]
+fn invalid_budgets_are_typed_errors_at_every_boundary() {
+    // API boundary (what the CLI's --rel-err/--seed handling calls).
+    for bad in [0.0, -0.1, f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+        let err = Budget::approx(bad, None).expect_err("must reject");
+        assert!(err.contains("invalid approx budget"), "{err}");
+    }
+    assert!(Budget::approx(0.1, Some(7)).is_ok());
+
+    // Config boundary: `approx_rel_err` is validated like every budget.
+    let mut cfg = Config::default();
+    cfg.approx_rel_err = Some(-0.5);
+    assert!(cfg.validate().expect_err("must reject").contains("budget"));
+    cfg.approx_rel_err = Some(0.1);
+    assert!(cfg.validate().is_ok());
+
+    // Wire boundary: malformed budget fields are parse errors, never
+    // frames that reach the queue.
+    for bad in [
+        r#"{"v":2,"op":"query","model":"m","points":[[1]],"rel_err":0}"#,
+        r#"{"v":2,"op":"query","model":"m","points":[[1]],"rel_err":-1}"#,
+        r#"{"v":2,"op":"query","model":"m","points":[[1]],"seed":7}"#,
+        r#"{"v":2,"op":"query","model":"m","points":[[1]],"rel_err":0.1,"seed":-1}"#,
+    ] {
+        assert!(Request::parse(bad).is_err(), "accepted: {bad}");
+    }
+
+    // Coordinator boundary: a hand-built invalid budget smuggled past the
+    // constructor is re-validated at submit — a typed error, not a
+    // hot-path panic.
+    let coord = native_coordinator();
+    let d = 1;
+    let handle = coord
+        .fit("mb", vec![0.0, 0.5, 1.0, 1.5], &FitSpec::new(EstimatorKind::Kde, d))
+        .expect("fit");
+    let smuggled = Budget::Approx { rel_err: f64::NAN, seed: None };
+    let err = coord
+        .query(&handle, QuerySpec::density(vec![0.25]).with_budget(smuggled))
+        .expect_err("must reject");
+    assert!(err.to_string().contains("invalid approx budget"), "{err}");
+}
