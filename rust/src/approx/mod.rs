@@ -21,10 +21,19 @@
 //!   sketch cannot serve within budget to DEANN instead.
 //!
 //! Both estimators are *density-kernel only*: gradient/score queries and
-//! the Laplace pipeline always fall back to the exact path (the
-//! `exact_fallbacks` engine counter records it).  `Exact` requests never
-//! touch this module — their results are bitwise identical to builds
-//! without it.
+//! the Laplace pipeline always fall back to the exact path.  Fallbacks
+//! are counted by **cause**, because operators need to tell "a user asked
+//! for an approx grad" apart from "the backend genuinely cannot serve
+//! this": a backend that recognises the budget but has no approximate
+//! estimator for the *pipeline* (grad/Laplace/fit on the native backend)
+//! reports [`ApproxOffer::Unsupported`](crate::runtime::ApproxOffer) and
+//! the engine's `unsupported_mode` counter moves; a backend with no
+//! approximate path at all (PJRT, the trait default) reports
+//! [`ApproxOffer::Declined`](crate::runtime::ApproxOffer) and the
+//! coordinator's `declined` counter moves instead.  Either way the query
+//! is answered by the exact path, bitwise-identical to an `Exact`
+//! request.  `Exact` requests never touch this module — their results
+//! are bitwise identical to builds without it.
 
 pub mod deann;
 pub mod rff;
@@ -79,6 +88,26 @@ impl Budget {
     /// Whether this is the exact (default) budget.
     pub fn is_exact(&self) -> bool {
         matches!(self, Budget::Exact)
+    }
+
+    /// Resolve optional `(rel_err, seed)` inputs into a budget — the one
+    /// shared validator behind every client boundary (the CLI's
+    /// `--rel-err`/`--seed` flags and the wire's optional frame fields),
+    /// so a seed without a budget fails with the *same* typed message on
+    /// both paths instead of each boundary wording its own.
+    pub fn resolve(
+        rel_err: Option<f64>,
+        seed: Option<u64>,
+    ) -> Result<Budget, String> {
+        match (rel_err, seed) {
+            (Some(e), s) => Budget::approx(e, s),
+            (None, Some(_)) => Err(
+                "'seed' requires 'rel_err' (an exact query has no sampler \
+                 to seed)"
+                    .to_string(),
+            ),
+            (None, None) => Ok(Budget::Exact),
+        }
     }
 }
 
@@ -135,6 +164,29 @@ mod tests {
         assert_eq!(b, Budget::Approx { rel_err: 0.1, seed: Some(7) });
         assert!(!b.is_exact());
         assert!(Budget::default().is_exact());
+    }
+
+    #[test]
+    fn resolve_shares_one_seed_without_budget_message() {
+        assert_eq!(Budget::resolve(None, None), Ok(Budget::Exact));
+        assert_eq!(
+            Budget::resolve(Some(0.1), Some(7)),
+            Ok(Budget::Approx { rel_err: 0.1, seed: Some(7) })
+        );
+        assert_eq!(
+            Budget::resolve(Some(0.1), None),
+            Ok(Budget::Approx { rel_err: 0.1, seed: None })
+        );
+        // Pin the exact message: the CLI and the wire parser both surface
+        // it verbatim, so clients grep for one string.
+        let err = Budget::resolve(None, Some(9)).unwrap_err();
+        assert_eq!(
+            err,
+            "'seed' requires 'rel_err' (an exact query has no sampler \
+             to seed)"
+        );
+        // Bad rel_err still routes through the checked constructor.
+        assert!(Budget::resolve(Some(-1.0), None).is_err());
     }
 
     #[test]

@@ -264,6 +264,20 @@ pub struct RouterConfig {
     /// reject every frame as stale with no recovery.  Set it to the last
     /// known fleet epoch (or higher); fresh fleets keep the default 1.
     pub initial_epoch: u64,
+    /// Health-probe period in milliseconds; `0` (the default) disables
+    /// the background health loop entirely — membership then only moves
+    /// by operator calls, exactly the pre-self-healing behaviour.  With a
+    /// period set, the router probes every configured node each tick
+    /// (a `stats` round-trip under the same connect/read timeouts as
+    /// forwarded traffic) and updates the node table itself: dead members
+    /// are removed, recovered nodes re-added, each with an epoch bump and
+    /// a journal-driven re-fit of the models the change re-homed.
+    pub health_interval_ms: u64,
+    /// Consecutive failed probes before the health loop declares a member
+    /// dead and removes it (>= 1).  One failure can be a transient (an
+    /// accept backlog, a GC-less but busy worker); the default 2 tolerates
+    /// a single blip while still converging within two probe ticks.
+    pub health_failures: u32,
 }
 
 impl Default for RouterConfig {
@@ -276,6 +290,8 @@ impl Default for RouterConfig {
             request_timeout_ms: 30_000,
             retries: 2,
             initial_epoch: 1,
+            health_interval_ms: 0,
+            health_failures: 2,
         }
     }
 }
@@ -299,6 +315,13 @@ impl RouterConfig {
         if self.initial_epoch == 0 {
             return Err(
                 "initial_epoch must be >= 1 (0 means unenrolled)".to_string()
+            );
+        }
+        if self.health_failures == 0 {
+            return Err(
+                "health_failures must be >= 1 (a node cannot be declared \
+                 dead after zero failed probes)"
+                    .to_string(),
             );
         }
         Ok(())
@@ -334,6 +357,13 @@ mod tests {
         rc.initial_epoch = 0;
         assert!(rc.validate().is_err(), "unenrolled sentinel epoch rejected");
         rc.initial_epoch = 7; // router restart resumes the fleet lineage
+        rc.validate().unwrap();
+        rc.health_failures = 0;
+        assert!(rc.validate().is_err(), "zero-failure death threshold rejected");
+        rc.health_failures = 1;
+        rc.health_interval_ms = 50; // probe loop enabled
+        rc.validate().unwrap();
+        rc.health_interval_ms = 0; // disabled is always valid
         rc.validate().unwrap();
     }
 

@@ -126,6 +126,15 @@ pub struct Metrics {
     pub batches: AtomicU64,
     /// Total requests served through co-batched executions.
     pub batched_requests: AtomicU64,
+    /// Approx-budget chunks the execution backend declined outright (no
+    /// approximate path at all — PJRT, or a custom backend keeping the
+    /// trait default) and the coordinator served exactly instead.
+    /// Counted here rather than in the backend because a backend with no
+    /// approximate path has nowhere to count; surfaced in the stats
+    /// document's `engine.declined`, beside `engine.unsupported_mode`
+    /// (the backend-counted per-pipeline fallback) — see `approx/mod.rs`
+    /// for the split's contract.
+    pub approx_declined: AtomicU64,
     /// Time requests spent queued before their batch executed.
     pub queue_wait: LatencyHistogram,
     /// Engine execution time per batch.

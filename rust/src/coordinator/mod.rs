@@ -37,9 +37,8 @@ pub mod router;
 pub mod scheduler;
 pub mod server;
 
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -48,7 +47,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::approx::{default_seed, ApproxParams, Budget};
 use crate::config::Config;
 use crate::estimator::{EstimatorKind, Variant};
-use crate::runtime::{ArtifactEntry, Engine, HostTensor, Manifest};
+use crate::runtime::{ApproxOffer, ArtifactEntry, Engine, HostTensor, Manifest};
 use crate::util::json::Value;
 use crate::{log_debug, log_info, log_warn};
 
@@ -140,10 +139,43 @@ pub struct Coordinator {
     metrics: Arc<Metrics>,
     queue: Arc<BoundedQueue<QueryJob>>,
     dispatcher: Option<JoinHandle<()>>,
-    /// Routing-table epoch this worker is enrolled at (multi-node
-    /// serving, DESIGN.md §12).  0 = unenrolled: frames are accepted
-    /// regardless of their epoch stamp until a router pushes `set_epoch`.
-    routing_epoch: AtomicU64,
+    /// Routing enrollment this worker holds: `(epoch, digest)` of the
+    /// router table it was last enrolled under (multi-node serving,
+    /// DESIGN.md §12/§15).  Epoch 0 = unenrolled: frames are accepted
+    /// regardless of their stamps until a router pushes `set_epoch`.
+    /// Digest 0 = unset (an epoch-only enrollment from a pre-digest
+    /// router).  One mutex so the gate reads the pair atomically — a
+    /// torn read during enrollment could otherwise reject a valid frame
+    /// as diverged.
+    routing: Mutex<(u64, u64)>,
+}
+
+/// Outcome of a routing enrollment attempt
+/// ([`Coordinator::enroll_routing`]) — maps 1:1 onto the wire's
+/// `EpochOk` / `StaleEpoch` / `DigestMismatch` responses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EnrollOutcome {
+    /// Enrolled (or already enrolled); carries the worker's epoch after
+    /// the request.
+    Enrolled(u64),
+    /// The request's epoch is behind the worker's — epochs never rewind.
+    Stale {
+        /// The epoch the worker is enrolled at.
+        expected: u64,
+        /// The epoch the request carried.
+        got: u64,
+    },
+    /// Equal epoch, different table digest: the requesting router's
+    /// table is from a divergent lineage and must not displace the
+    /// enrolled one.
+    Diverged {
+        /// The epoch both sides agree on.
+        epoch: u64,
+        /// The digest the worker is enrolled with.
+        expected: u64,
+        /// The digest the request carried.
+        got: u64,
+    },
 }
 
 impl Coordinator {
@@ -222,22 +254,71 @@ impl Coordinator {
             metrics,
             queue,
             dispatcher: Some(dispatcher),
-            routing_epoch: AtomicU64::new(0),
+            routing: Mutex::new((0, 0)),
         })
     }
 
     /// The routing-table epoch this worker is enrolled at (0 before any
     /// router pushed `set_epoch`).
     pub fn routing_epoch(&self) -> u64 {
-        self.routing_epoch.load(Ordering::SeqCst)
+        self.routing_stamp().0
     }
 
-    /// Enroll at a routing-table epoch.  Epochs only advance — a racing
-    /// or stale router can never roll a worker back to an older table —
-    /// and the resulting epoch is returned.
+    /// The full routing enrollment `(epoch, digest)` as one atomic read
+    /// (digest 0 = unset; see the `routing` field).
+    pub fn routing_stamp(&self) -> (u64, u64) {
+        *self.routing.lock().expect("routing enrollment poisoned")
+    }
+
+    /// Enroll at a routing-table epoch without a digest (epoch 0 is a
+    /// no-op read).  Epochs only advance — a racing or stale router can
+    /// never roll a worker back to an older table — and the resulting
+    /// epoch is returned.  Kept for in-process callers and tests; the
+    /// wire path goes through [`enroll_routing`](Self::enroll_routing),
+    /// which also arbitrates digests.
     pub fn set_routing_epoch(&self, epoch: u64) -> u64 {
-        self.routing_epoch.fetch_max(epoch, Ordering::SeqCst);
-        self.routing_epoch()
+        let mut routing = self.routing.lock().expect("routing enrollment poisoned");
+        if epoch > routing.0 {
+            *routing = (epoch, 0);
+        }
+        routing.0
+    }
+
+    /// Arbitrate a `set_epoch` enrollment request carrying `epoch` and an
+    /// optional table `digest` (DESIGN.md §15):
+    ///
+    /// * a *higher* epoch always enrolls, replacing both stored values
+    ///   (absent digest stores the "unset" sentinel 0);
+    /// * an *equal* epoch is idempotent — except when both the stored and
+    ///   offered digests are set and differ, which is a divergent-lineage
+    ///   router and is rejected [`EnrollOutcome::Diverged`] without
+    ///   touching the stored pair.  An equal-epoch request *may* fill in
+    ///   a still-unset digest (the first digest-aware router to enroll
+    ///   after an epoch-only one pins the lineage);
+    /// * a *lower* epoch is [`EnrollOutcome::Stale`] — epochs never
+    ///   rewind.
+    pub fn enroll_routing(&self, epoch: u64, digest: Option<u64>) -> EnrollOutcome {
+        let mut routing = self.routing.lock().expect("routing enrollment poisoned");
+        let (cur_epoch, cur_digest) = *routing;
+        if epoch < cur_epoch {
+            return EnrollOutcome::Stale { expected: cur_epoch, got: epoch };
+        }
+        if epoch == cur_epoch && cur_epoch != 0 {
+            match digest {
+                Some(got) if cur_digest != 0 && got != cur_digest => {
+                    return EnrollOutcome::Diverged {
+                        epoch,
+                        expected: cur_digest,
+                        got,
+                    };
+                }
+                Some(got) if cur_digest == 0 => *routing = (epoch, got),
+                _ => {}
+            }
+            return EnrollOutcome::Enrolled(cur_epoch);
+        }
+        *routing = (epoch, digest.unwrap_or(0));
+        EnrollOutcome::Enrolled(epoch)
     }
 
     /// The configuration this coordinator booted with.
@@ -525,10 +606,33 @@ impl Coordinator {
                     // when no table is loaded (and always 0 on PJRT).
                     ("tuned_lookups", Value::from(store_stats.tuned_lookups)),
                     ("tuned_fallbacks", Value::from(store_stats.tuned_fallbacks)),
-                    // Approximate query path (DESIGN.md §14); both 0 when
-                    // every request is Exact (and always 0 on PJRT).
+                    // Approximate query path (DESIGN.md §14).  Fallbacks
+                    // are split by cause: `unsupported_mode` counts
+                    // budgets the backend recognised but whose pipeline
+                    // has no approximate estimator (grad/Laplace/fit);
+                    // `declined` counts offers refused outright by a
+                    // backend with no approximate path at all (PJRT) —
+                    // that one is coordinator-counted, since a backend
+                    // that can't approximate can't count either.
                     ("approx_queries", Value::from(store_stats.approx_queries)),
-                    ("exact_fallbacks", Value::from(store_stats.exact_fallbacks)),
+                    (
+                        "unsupported_mode",
+                        Value::from(store_stats.unsupported_mode),
+                    ),
+                    (
+                        "declined",
+                        Value::from(
+                            self.metrics
+                                .approx_declined
+                                .load(std::sync::atomic::Ordering::Relaxed),
+                        ),
+                    ),
+                    // RFF probe-cache evictions (bounded per-model LRU;
+                    // nonzero means a tenant is sweeping rel_err values).
+                    (
+                        "sketch_evictions",
+                        Value::from(store_stats.sketch_evictions),
+                    ),
                 ]),
             ),
             ("queue_depth", Value::from(self.queue.len())),
@@ -621,7 +725,7 @@ fn execute_batch(engine: &Engine, metrics: &Metrics, batch: Vec<QueryJob>) {
         .unwrap_or_default();
     metrics.queue_wait.record(queue_wait);
 
-    let result = run_model_query(engine, &model, &batch, kernel);
+    let result = run_model_query(engine, metrics, &model, &batch, kernel);
     match result {
         Ok((values, exec_ms)) => {
             // All jobs in a batch share a kernel, hence one output width.
@@ -664,6 +768,7 @@ fn execute_batch(engine: &Engine, metrics: &Metrics, batch: Vec<QueryJob>) {
 /// row; the score kernel returns `d` values per row.
 fn run_model_query(
     engine: &Engine,
+    metrics: &Metrics,
     model: &FittedModel,
     batch: &[QueryJob],
     kernel: QueryKernel,
@@ -737,15 +842,21 @@ fn run_model_query(
         ];
         // Approx budget: offer the chunk to the backend's approximate
         // path with the chunk's global row offset (so chunking never
-        // moves a result); a decline — non-density kernel, non-native
-        // backend — falls through to the exact execution it would have
-        // run anyway (counted by the engine's `exact_fallbacks`).
+        // moves a result); either fallback outcome — an unsupported
+        // pipeline (engine counts `unsupported_mode`) or an outright
+        // decline (counted here: the backend that can't approximate
+        // can't count) — runs the exact execution it would have run
+        // anyway (`approx/mod.rs` documents the contract).
         let out = match approx {
             Some((rel_err, seed)) => {
                 let params = ApproxParams { rel_err, seed, row_offset: start };
                 match engine.execute_approx(&entry, inputs.clone(), params)? {
-                    Some(out) => out,
-                    None => engine.execute(&entry, inputs)?,
+                    ApproxOffer::Served(out) => out,
+                    ApproxOffer::Unsupported => engine.execute(&entry, inputs)?,
+                    ApproxOffer::Declined => {
+                        Metrics::inc(&metrics.approx_declined);
+                        engine.execute(&entry, inputs)?
+                    }
                 }
             }
             None => engine.execute(&entry, inputs)?,

@@ -37,6 +37,19 @@
 //! optional and additive, so direct clients (and v1 senders) are
 //! unaffected; the protocol version stays 2.
 //!
+//! **Table digest** (DESIGN.md §15): the same stamped frames may carry an
+//! optional `"digest": D` — a content hash of the router's node-table
+//! *membership* (1 ..= 2^52-1; 0 is the "unset" sentinel and never valid
+//! on the wire).  Epochs order tables within one lineage; the digest
+//! detects *divergent* lineages: two independently-administered routers
+//! can sit at equal epochs over different memberships, and without the
+//! digest the worker's epoch gate would wave both through.  A stamped
+//! frame whose epoch matches but whose digest differs from the enrolled
+//! one is answered with the typed [`Response::DigestMismatch`] rejection,
+//! which routers treat as fatal (re-enrolling cannot reconcile divergent
+//! tables the way it reconciles a stale epoch).  Optional and additive
+//! like `"epoch"`.
+//!
 //! **Approx budget** (DESIGN.md §14): query frames may carry an optional
 //! `"rel_err": e` (finite, > 0) requesting approximate evaluation within
 //! that relative-error budget, plus an optional `"seed": s` pinning the
@@ -67,6 +80,12 @@ pub const PROTOCOL_VERSION: usize = 2;
 /// the JSON layer's exact-integer range.)
 pub const MAX_EPOCH: u64 = 1 << 52;
 
+/// Ceiling on node-table digests accepted from the wire: digests are
+/// masked into `1 ..= 2^52 - 1` at the producer
+/// (`NodeTable::digest`) so they stay exactly representable through the
+/// JSON layer's f64 integers; 0 is reserved as the "unset" sentinel.
+pub const MAX_DIGEST: u64 = (1 << 52) - 1;
+
 /// Parsed client request — a thin envelope around the shared typed specs.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Request {
@@ -82,6 +101,9 @@ pub enum Request {
         points: Vec<f32>,
         /// Routing-epoch stamp (routers only; `None` for direct clients).
         epoch: Option<u64>,
+        /// Node-table digest stamp (routers only; `None` for direct
+        /// clients and pre-digest routers).
+        digest: Option<u64>,
     },
     /// Evaluate a fitted model (any output mode).
     Query {
@@ -94,6 +116,9 @@ pub enum Request {
         spec: QuerySpec,
         /// Routing-epoch stamp (routers only; `None` for direct clients).
         epoch: Option<u64>,
+        /// Node-table digest stamp (routers only; `None` for direct
+        /// clients and pre-digest routers).
+        digest: Option<u64>,
     },
     /// List resident model names.
     Models,
@@ -105,6 +130,9 @@ pub enum Request {
         model: String,
         /// Routing-epoch stamp (routers only; `None` for direct clients).
         epoch: Option<u64>,
+        /// Node-table digest stamp (routers only; `None` for direct
+        /// clients and pre-digest routers).
+        digest: Option<u64>,
     },
     /// Enroll the receiving worker at a routing-table epoch (router →
     /// worker; epochs only advance — see `Coordinator::set_routing_epoch`).
@@ -112,6 +140,10 @@ pub enum Request {
         /// The router's node-table version (>= 1; 0 means "unenrolled"
         /// and is rejected at parse time).
         epoch: u64,
+        /// The router's node-table digest, recorded beside the epoch so
+        /// equal-epoch frames from a *divergent* router are rejected
+        /// typed.  Optional: pre-digest routers enroll epoch-only.
+        digest: Option<u64>,
     },
 }
 
@@ -165,6 +197,20 @@ pub enum Response {
         /// The epoch the receiver is enrolled at.
         expected: u64,
         /// The epoch the offending frame carried.
+        got: u64,
+    },
+    /// Typed divergence rejection: the frame's epoch matches the enrolled
+    /// one but its node-table digest does not — the sending router's
+    /// table comes from a *different lineage* than the one this worker is
+    /// enrolled under.  Unlike [`Response::StaleEpoch`] this is fatal to
+    /// the sender: re-enrolling cannot reconcile divergent memberships,
+    /// so routers surface it instead of retrying.
+    DigestMismatch {
+        /// The epoch both sides agree on.
+        epoch: u64,
+        /// The digest the receiver is enrolled with.
+        expected: u64,
+        /// The digest the offending frame carried.
         got: u64,
     },
     /// Any failure, as a displayable message.
@@ -259,24 +305,41 @@ fn parse_epoch(v: &Value) -> Result<Option<u64>> {
     }
 }
 
+/// Extract the optional node-table digest stamp (`None` when absent;
+/// digest 0 is the "unset" sentinel and never valid on the wire; values
+/// above [`MAX_DIGEST`] cannot come from `NodeTable::digest` and are
+/// rejected so wire integers stay f64-exact).
+fn parse_digest(v: &Value) -> Result<Option<u64>> {
+    match v.get("digest") {
+        None => Ok(None),
+        Some(x) => {
+            let d = x
+                .as_usize()
+                .ok_or_else(|| anyhow!("'digest' must be a non-negative integer"))?
+                as u64;
+            if d == 0 {
+                bail!("'digest' must be >= 1 (0 means unset)");
+            }
+            if d > MAX_DIGEST {
+                bail!("'digest' {d} exceeds the maximum {MAX_DIGEST}");
+            }
+            Ok(Some(d))
+        }
+    }
+}
+
 /// Extract the optional approx-budget fields (`"rel_err"` / `"seed"`);
 /// absent fields mean [`Budget::Exact`], exactly like legacy frames.
-/// Validation runs through [`Budget::approx`], so the wire rejects the
-/// same budgets every other boundary rejects.
+/// Validation runs through [`Budget::resolve`], so the wire rejects the
+/// same budgets — with the same messages — as every other boundary
+/// (notably the CLI's `--seed`-without-`--rel-err`).
 fn parse_budget(v: &Value) -> Result<Budget> {
     let rel_err = match v.get("rel_err") {
-        None => {
-            if v.get("seed").is_some() {
-                bail!(
-                    "'seed' requires 'rel_err' (an exact query has no \
-                     sampler to seed)"
-                );
-            }
-            return Ok(Budget::Exact);
-        }
-        Some(x) => x
-            .as_f64()
-            .ok_or_else(|| anyhow!("'rel_err' must be a number"))?,
+        None => None,
+        Some(x) => Some(
+            x.as_f64()
+                .ok_or_else(|| anyhow!("'rel_err' must be a number"))?,
+        ),
     };
     let seed = match v.get("seed") {
         None => None,
@@ -286,7 +349,7 @@ fn parse_budget(v: &Value) -> Result<Budget> {
                 as u64,
         ),
     };
-    Budget::approx(rel_err, seed).map_err(|e| anyhow!(e))
+    Budget::resolve(rel_err, seed).map_err(|e| anyhow!(e))
 }
 
 impl Request {
@@ -308,7 +371,18 @@ impl Request {
             Request::Fit { epoch, .. }
             | Request::Query { epoch, .. }
             | Request::Delete { epoch, .. } => *epoch,
-            Request::SetEpoch { epoch } => Some(*epoch),
+            Request::SetEpoch { epoch, .. } => Some(*epoch),
+            _ => None,
+        }
+    }
+
+    /// The node-table digest stamp this frame carries, if any.
+    pub fn digest(&self) -> Option<u64> {
+        match self {
+            Request::Fit { digest, .. }
+            | Request::Query { digest, .. }
+            | Request::Delete { digest, .. }
+            | Request::SetEpoch { digest, .. } => *digest,
             _ => None,
         }
     }
@@ -328,11 +402,12 @@ impl Request {
             "set_epoch" => {
                 let epoch = parse_epoch(&v)?
                     .ok_or_else(|| anyhow!("missing 'epoch'"))?;
-                Ok(Request::SetEpoch { epoch })
+                Ok(Request::SetEpoch { epoch, digest: parse_digest(&v)? })
             }
             "delete" => Ok(Request::Delete {
                 model: req_model(&v)?,
                 epoch: parse_epoch(&v)?,
+                digest: parse_digest(&v)?,
             }),
             "fit" => {
                 let estimator = v
@@ -375,6 +450,7 @@ impl Request {
                     spec,
                     points,
                     epoch: parse_epoch(&v)?,
+                    digest: parse_digest(&v)?,
                 })
             }
             "query" | "eval" | "grad" => {
@@ -415,6 +491,7 @@ impl Request {
                     spec: QuerySpec::new(points, mode)
                         .with_budget(parse_budget(&v)?),
                     epoch: parse_epoch(&v)?,
+                    digest: parse_digest(&v)?,
                 })
             }
             other => bail!("unknown op {other:?}"),
@@ -427,9 +504,14 @@ impl Request {
             fields.insert(0, ("v", Value::from(PROTOCOL_VERSION)));
             Value::object(fields)
         };
-        let stamped = |mut fields: Vec<(&str, Value)>, epoch: &Option<u64>| {
+        let stamped = |mut fields: Vec<(&str, Value)>,
+                       epoch: &Option<u64>,
+                       digest: &Option<u64>| {
             if let Some(e) = epoch {
                 fields.push(("epoch", Value::from(*e)));
+            }
+            if let Some(g) = digest {
+                fields.push(("digest", Value::from(*g)));
             }
             fields
         };
@@ -437,18 +519,25 @@ impl Request {
             Request::Ping => versioned(vec![("op", "ping".into())]),
             Request::Models => versioned(vec![("op", "models".into())]),
             Request::Stats => versioned(vec![("op", "stats".into())]),
-            Request::SetEpoch { epoch } => versioned(vec![
-                ("op", "set_epoch".into()),
-                ("epoch", Value::from(*epoch)),
-            ]),
-            Request::Delete { model, epoch } => versioned(stamped(
+            Request::SetEpoch { epoch, digest } => {
+                let mut fields = vec![
+                    ("op", Value::from("set_epoch")),
+                    ("epoch", Value::from(*epoch)),
+                ];
+                if let Some(g) = digest {
+                    fields.push(("digest", Value::from(*g)));
+                }
+                versioned(fields)
+            }
+            Request::Delete { model, epoch, digest } => versioned(stamped(
                 vec![
                     ("op", "delete".into()),
                     ("model", model.as_str().into()),
                 ],
                 epoch,
+                digest,
             )),
-            Request::Fit { model, spec, points, epoch } => {
+            Request::Fit { model, spec, points, epoch, digest } => {
                 let mut fields = vec![
                     ("op", Value::from("fit")),
                     ("model", model.as_str().into()),
@@ -465,9 +554,9 @@ impl Request {
                 if let Some(variant) = spec.variant {
                     fields.push(("variant", variant.as_str().into()));
                 }
-                versioned(stamped(fields, epoch))
+                versioned(stamped(fields, epoch, digest))
             }
-            Request::Query { model, d, spec, epoch } => {
+            Request::Query { model, d, spec, epoch, digest } => {
                 let mut fields = vec![
                     ("op", Value::from("query")),
                     ("model", model.as_str().into()),
@@ -480,7 +569,7 @@ impl Request {
                         fields.push(("seed", Value::from(s)));
                     }
                 }
-                versioned(stamped(fields, epoch))
+                versioned(stamped(fields, epoch, digest))
             }
         };
         json::to_string(&v)
@@ -571,6 +660,29 @@ impl Response {
                     ]),
                 ),
             ]),
+            Response::DigestMismatch { epoch, expected, got } => {
+                Value::object(vec![
+                    ("ok", false.into()),
+                    ("v", Value::from(PROTOCOL_VERSION)),
+                    (
+                        "error",
+                        format!(
+                            "node table diverged at epoch {epoch}: frame \
+                             carries digest {got}, node is enrolled with \
+                             digest {expected}"
+                        )
+                        .into(),
+                    ),
+                    (
+                        "digest_mismatch",
+                        Value::object(vec![
+                            ("epoch", Value::from(*epoch)),
+                            ("expected", Value::from(*expected)),
+                            ("got", Value::from(*got)),
+                        ]),
+                    ),
+                ])
+            }
             Response::Error { message } => Value::object(vec![
                 ("ok", false.into()),
                 ("v", Value::from(PROTOCOL_VERSION)),
@@ -596,6 +708,19 @@ impl Response {
                         .ok_or_else(|| anyhow!("stale_epoch missing '{k}'"))
                 };
                 return Ok(Response::StaleEpoch {
+                    expected: field("expected")?,
+                    got: field("got")?,
+                });
+            }
+            if let Some(dm) = v.get("digest_mismatch") {
+                let field = |k: &str| -> Result<u64> {
+                    dm.get(k)
+                        .and_then(Value::as_usize)
+                        .map(|e| e as u64)
+                        .ok_or_else(|| anyhow!("digest_mismatch missing '{k}'"))
+                };
+                return Ok(Response::DigestMismatch {
+                    epoch: field("epoch")?,
                     expected: field("expected")?,
                     got: field("got")?,
                 });
@@ -729,6 +854,7 @@ mod tests {
                 .variant(Variant::Flash),
             points: vec![1.0, 2.0, 3.0, 4.0],
             epoch: None,
+            digest: None,
         };
         let line = req.to_line();
         assert!(line.contains("\"v\":2"), "{line}");
@@ -744,6 +870,7 @@ mod tests {
                 d: 2,
                 spec: QuerySpec::new(vec![0.5, -1.5, 2.0, 0.0], mode),
                 epoch: None,
+                digest: None,
             };
             let back = Request::parse(&req.to_line()).unwrap();
             assert_eq!(req, back, "mode {mode}");
@@ -760,6 +887,7 @@ mod tests {
                 spec: QuerySpec::density(vec![0.5])
                     .with_budget(Budget::approx(0.1, seed).unwrap()),
                 epoch: Some(2),
+                digest: Some(777),
             };
             let line = req.to_line();
             assert!(line.contains("\"rel_err\":0.1"), "{line}");
@@ -776,6 +904,7 @@ mod tests {
             d: 1,
             spec: QuerySpec::density(vec![0.5]),
             epoch: None,
+            digest: None,
         }
         .to_line();
         assert!(!line.contains("rel_err") && !line.contains("seed"), "{line}");
@@ -805,6 +934,40 @@ mod tests {
         ] {
             assert!(Request::parse(bad).is_err(), "accepted: {bad}");
         }
+        // Regression (both-boundary alignment): the wire's seed-without-
+        // budget rejection is the shared `Budget::resolve` message, so a
+        // client sees the identical text here and from `eval --seed`.
+        let err = Request::parse(
+            r#"{"v":2,"op":"query","model":"m","points":[[1]],"seed":7}"#,
+        )
+        .unwrap_err();
+        assert!(
+            format!("{err:#}").contains(
+                "'seed' requires 'rel_err' (an exact query has no sampler \
+                 to seed)"
+            ),
+            "{err:#}"
+        );
+    }
+
+    #[test]
+    fn malformed_digests_rejected() {
+        for bad in [
+            r#"{"v":2,"op":"delete","model":"m","epoch":1,"digest":0}"#,
+            r#"{"v":2,"op":"delete","model":"m","epoch":1,"digest":-2}"#,
+            r#"{"v":2,"op":"delete","model":"m","epoch":1,"digest":1.5}"#,
+            r#"{"v":2,"op":"delete","model":"m","epoch":1,"digest":"x"}"#,
+            r#"{"v":2,"op":"set_epoch","epoch":1,"digest":0}"#,
+            // Above MAX_DIGEST (= 2^52 - 1): no NodeTable can produce it.
+            r#"{"v":2,"op":"set_epoch","epoch":1,"digest":4503599627370496}"#,
+        ] {
+            assert!(Request::parse(bad).is_err(), "accepted: {bad}");
+        }
+        // The ceiling itself is accepted.
+        assert!(Request::parse(
+            &format!(r#"{{"v":2,"op":"set_epoch","epoch":1,"digest":{MAX_DIGEST}}}"#)
+        )
+        .is_ok());
     }
 
     #[test]
@@ -817,26 +980,45 @@ mod tests {
                 spec: FitSpec::new(EstimatorKind::Kde, 1),
                 points: vec![1.0, 2.0],
                 epoch: Some(7),
+                digest: Some(41),
             },
             Request::Query {
                 model: "m".into(),
                 d: 1,
                 spec: QuerySpec::density(vec![0.5]),
                 epoch: Some(3),
+                digest: None,
             },
-            Request::Delete { model: "m".into(), epoch: Some(1) },
-            Request::SetEpoch { epoch: 9 },
+            Request::Delete {
+                model: "m".into(),
+                epoch: Some(1),
+                digest: Some(MAX_DIGEST),
+            },
+            Request::SetEpoch { epoch: 9, digest: Some(13) },
+            Request::SetEpoch { epoch: 9, digest: None },
         ];
         for req in cases {
             let line = req.to_line();
             assert!(line.contains("\"epoch\":"), "{line}");
+            assert_eq!(
+                line.contains("\"digest\":"),
+                req.digest().is_some(),
+                "{line}"
+            );
             assert_eq!(Request::parse(&line).unwrap(), req, "{line}");
             assert_eq!(Request::parse(&line).unwrap().epoch(), req.epoch());
+            assert_eq!(Request::parse(&line).unwrap().digest(), req.digest());
         }
-        // Unstamped frames carry no epoch field at all.
-        let line = Request::Delete { model: "m".into(), epoch: None }.to_line();
-        assert!(!line.contains("epoch"), "{line}");
+        // Unstamped frames carry no epoch/digest field at all.
+        let line = Request::Delete {
+            model: "m".into(),
+            epoch: None,
+            digest: None,
+        }
+        .to_line();
+        assert!(!line.contains("epoch") && !line.contains("digest"), "{line}");
         assert_eq!(Request::parse(&line).unwrap().epoch(), None);
+        assert_eq!(Request::parse(&line).unwrap().digest(), None);
     }
 
     #[test]
@@ -846,6 +1028,7 @@ mod tests {
             spec: FitSpec::new(EstimatorKind::Kde, 1),
             points: vec![0.0, 1.0],
             epoch: None,
+            digest: None,
         };
         assert_eq!(fit.model_key(), Some("a"));
         let q = Request::Query {
@@ -853,14 +1036,16 @@ mod tests {
             d: 1,
             spec: QuerySpec::density(vec![0.0]),
             epoch: None,
+            digest: None,
         };
         assert_eq!(q.model_key(), Some("b"));
         assert_eq!(
-            Request::Delete { model: "c".into(), epoch: None }.model_key(),
+            Request::Delete { model: "c".into(), epoch: None, digest: None }
+                .model_key(),
             Some("c")
         );
         for req in [Request::Ping, Request::Models, Request::Stats,
-                    Request::SetEpoch { epoch: 1 }] {
+                    Request::SetEpoch { epoch: 1, digest: None }] {
             assert_eq!(req.model_key(), None, "{req:?}");
         }
     }
@@ -903,6 +1088,7 @@ mod tests {
                 d: 2,
                 spec: QuerySpec::density(vec![1.0, 2.0]),
                 epoch: None,
+                digest: None,
             }
         );
         let req = Request::parse(
@@ -916,6 +1102,7 @@ mod tests {
                 d: 1,
                 spec: QuerySpec::grad(vec![1.0]),
                 epoch: None,
+                digest: None,
             }
         );
     }
@@ -930,8 +1117,12 @@ mod tests {
 
     #[test]
     fn simple_ops_round_trip() {
-        for req in [Request::Ping, Request::Models, Request::Stats,
-                    Request::Delete { model: "x".into(), epoch: None }] {
+        for req in [
+            Request::Ping,
+            Request::Models,
+            Request::Stats,
+            Request::Delete { model: "x".into(), epoch: None, digest: None },
+        ] {
             assert_eq!(Request::parse(&req.to_line()).unwrap(), req);
         }
     }
@@ -999,6 +1190,7 @@ mod tests {
             Response::Deleted { model: "m".into(), existed: true },
             Response::EpochOk { epoch: 4 },
             Response::StaleEpoch { expected: 5, got: 3 },
+            Response::DigestMismatch { epoch: 5, expected: 17, got: 23 },
             Response::Error { message: "boom".into() },
         ];
         for r in cases {

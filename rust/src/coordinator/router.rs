@@ -27,24 +27,48 @@
 //! refusing with [`RouteError::StaleTable`] — a router that has fallen
 //! behind the fleet's table never silently misroutes.
 //!
-//! The protection assumes all routers over one fleet derive their
-//! tables from a **single lineage** (one operator/supervisor applying
-//! membership changes in order), so epoch numbers totally order the
-//! table versions.  Two independently administered routers that make
-//! *different* membership changes at numerically equal epochs are
-//! split-brain and outside this guard — see ROADMAP (table-digest
-//! stamp) for the follow-up that would detect that too.
+//! **Table digest.**  Epoch ordering assumes all routers over one fleet
+//! derive their tables from a **single lineage** (one operator or
+//! supervisor applying membership changes in order).  To catch the
+//! split-brain case — two independently administered routers making
+//! *different* membership changes at numerically equal epochs — every
+//! stamped frame and every enrollment also carries the table's
+//! **digest** ([`NodeTable::digest`], an order-independent hash of the
+//! membership).  A worker enrolled with one digest answers a same-epoch
+//! frame carrying another with the typed [`Response::DigestMismatch`],
+//! which the router surfaces as the *fatal*
+//! [`RouteError::DivergedTable`]: re-enrolling cannot reconcile tables
+//! that share no history, so a human has to (DESIGN.md §15).
+//!
+//! **Replication & failover.**  Model-addressed frames target the **top
+//! two** nodes of the rendezvous ranking.  Fits apply on the primary
+//! (authoritative for the reply) and replicate synchronously,
+//! best-effort, to the replica (`degraded_writes` counts misses);
+//! queries serve from the primary and fail over to the replica when the
+//! primary is unreachable (`degraded_reads` counts those); deletes apply
+//! to both.  The router journals each model's fit frame and **replays**
+//! it when a membership change hands the model a new top-2 owner
+//! (`replayed_fits`), so scale-up rebalances instead of orphaning and a
+//! replaced worker re-fits automatically.
+//!
+//! **Self-healing.**  With `RouterConfig::health_interval_ms > 0`,
+//! [`RouterServer`] runs a background probe loop (the `stats` frame is
+//! the probe) over every node the router has ever been told about:
+//! `health_failures` consecutive failed probes remove a member — bumping
+//! the epoch and rebalancing, though the last member is never removed —
+//! and a known node that answers again is re-added and re-fit via the
+//! journal.  Kill → detect → failover → rebalance happens with no
+//! operator in the loop; manual [`Router::remove_node`] stays for
+//! drains and also *forgets* the node, so the loop will not re-add it.
 //!
 //! **Failure semantics.**  Connects and reads are timeout-bounded
 //! ([`RouterConfig`]), retries are capped, and node death surfaces as the
 //! typed [`RouteError::NodeUnavailable`] — never a hang, never a panic.
-//! Failover is explicit: an operator (or supervisor) removes the dead
-//! node from the table, the epoch bumps, surviving keys stay put, and
-//! the dead node's keys remap to survivors on the next fit.
 
 use std::collections::{BTreeMap, HashMap};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
+use std::thread::JoinHandle;
 use std::time::Duration;
 
 use anyhow::{anyhow, Result};
@@ -54,7 +78,9 @@ use crate::util::json::Value;
 use crate::util::rng::splitmix64;
 use crate::{log_info, log_warn};
 
-use super::protocol::{Request, Response, MAX_EPOCH, PROTOCOL_VERSION};
+use super::protocol::{
+    Request, Response, MAX_DIGEST, MAX_EPOCH, PROTOCOL_VERSION,
+};
 use super::server::{Client, LineHandler, LineServer};
 
 // ---------------------------------------------------------------------------
@@ -144,6 +170,42 @@ impl NodeTable {
             .iter()
             .max_by_key(|n| rendezvous_weight(n.as_str(), key))
             .map(String::as_str)
+    }
+
+    /// The top-2 rendezvous owners of `key`: the primary first, then the
+    /// replica (absent on single-node tables).  Empty only when the
+    /// table is empty.  Removing a node *outside* this pair never
+    /// changes it — the minimal-disruption invariant extends to the
+    /// replica set (property-tested below).
+    pub fn top_owners(&self, key: &str) -> Vec<&str> {
+        let mut ranked = self.ranked(key);
+        ranked.truncate(2);
+        ranked
+    }
+
+    /// An order-independent digest of the membership (DESIGN.md §15):
+    /// FNV-1a over the *sorted* addresses with a separator byte, pushed
+    /// through [`splitmix64`] and masked to the wire's f64-exact integer
+    /// range (`1..=MAX_DIGEST`; the raw value 0 maps to 1 because 0 is
+    /// the protocol's "unset" sentinel).  Two tables with the same
+    /// members agree on it regardless of insertion order or epoch; two
+    /// divergent same-epoch tables all but surely disagree, which is
+    /// what turns silent split-brain misrouting into the typed
+    /// [`Response::DigestMismatch`].
+    pub fn digest(&self) -> u64 {
+        const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut sorted: Vec<&str> = self.nodes.iter().map(String::as_str).collect();
+        sorted.sort_unstable();
+        let mut h = FNV_OFFSET;
+        for node in sorted {
+            for b in node.as_bytes() {
+                h = (h ^ u64::from(*b)).wrapping_mul(FNV_PRIME);
+            }
+            h = (h ^ 0x1F).wrapping_mul(FNV_PRIME); // entry separator
+        }
+        let digest = splitmix64(h) & MAX_DIGEST;
+        if digest == 0 { 1 } else { digest }
     }
 
     /// All members ordered by descending preference for `key` (the
@@ -238,6 +300,21 @@ pub enum RouteError {
         /// This router's (older) table epoch.
         table_epoch: u64,
     },
+    /// A worker at this router's exact epoch is enrolled with a
+    /// *different* table digest: the two tables share no lineage
+    /// (split-brain), and unlike [`RouteError::StaleTable`] no amount of
+    /// re-enrolling or retrying can reconcile them — an operator must
+    /// rebuild one fleet table (DESIGN.md §15).
+    DivergedTable {
+        /// The worker that rejected us.
+        node: String,
+        /// The epoch both sides agree on.
+        epoch: u64,
+        /// The digest the worker is enrolled with.
+        worker_digest: u64,
+        /// This router's table digest.
+        table_digest: u64,
+    },
 }
 
 impl std::fmt::Display for RouteError {
@@ -253,6 +330,18 @@ impl std::fmt::Display for RouteError {
                 f,
                 "router table stale (epoch {table_epoch}): worker {node} is \
                  enrolled at epoch {worker_epoch}; refresh the node table"
+            ),
+            RouteError::DivergedTable {
+                node,
+                epoch,
+                worker_digest,
+                table_digest,
+            } => write!(
+                f,
+                "router table diverged at epoch {epoch}: worker {node} is \
+                 enrolled with table digest {worker_digest}, this router's \
+                 table has digest {table_digest}; the tables share no \
+                 lineage — rebuild one fleet table"
             ),
         }
     }
@@ -309,9 +398,22 @@ pub struct Router {
     cfg: RouterConfig,
     table: RwLock<NodeTable>,
     pools: Mutex<HashMap<String, Vec<Client>>>,
+    /// Every address the router has ever been told about (config +
+    /// `add_node`), member or not: the health loop's probe set, so a
+    /// health-removed node that comes back is re-enrolled automatically.
+    /// Manual `remove_node` (a drain) deletes from here too.
+    known: Mutex<Vec<String>>,
+    /// model key → the unstamped `fit` frame that created it, replayed
+    /// to new top-2 owners on membership changes (DESIGN.md §15).
+    journal: Mutex<HashMap<String, Request>>,
     routed: AtomicU64,
     retried: AtomicU64,
     node_errors: AtomicU64,
+    degraded_reads: AtomicU64,
+    degraded_writes: AtomicU64,
+    health_removed: AtomicU64,
+    health_restored: AtomicU64,
+    replayed_fits: AtomicU64,
 }
 
 impl Router {
@@ -330,13 +432,21 @@ impl Router {
             table.len(),
             table.nodes()
         );
+        let known = table.nodes().to_vec();
         Ok(Router {
             cfg,
             table: RwLock::new(table),
             pools: Mutex::new(HashMap::new()),
+            known: Mutex::new(known),
+            journal: Mutex::new(HashMap::new()),
             routed: AtomicU64::new(0),
             retried: AtomicU64::new(0),
             node_errors: AtomicU64::new(0),
+            degraded_reads: AtomicU64::new(0),
+            degraded_writes: AtomicU64::new(0),
+            health_removed: AtomicU64::new(0),
+            health_restored: AtomicU64::new(0),
+            replayed_fits: AtomicU64::new(0),
         })
     }
 
@@ -350,28 +460,197 @@ impl Router {
         self.table.read().expect("router table poisoned").epoch()
     }
 
-    /// Remove a node (dead or draining) from the table: bumps the epoch,
-    /// drops its pooled connections, remaps only the keys it owned.
-    /// Returns false when the address was not a member.
+    /// The current `(epoch, digest)` stamp, read atomically from one
+    /// table snapshot — frames must never carry the epoch of one table
+    /// version and the digest of another.
+    fn stamp(&self) -> (u64, u64) {
+        let table = self.table.read().expect("router table poisoned");
+        (table.epoch(), table.digest())
+    }
+
+    /// Remove a node from the table *and* the health loop's probe set (a
+    /// drain: the node will not be re-added when it answers again):
+    /// bumps the epoch, drops its pooled connections, re-replicates
+    /// journaled models whose top-2 ownership gained a node.  Returns
+    /// false when the address was not a member.
     pub fn remove_node(&self, node: &str) -> bool {
-        let removed =
-            self.table.write().expect("router table poisoned").remove(node);
+        let (removed, old, new) = {
+            let mut table = self.table.write().expect("router table poisoned");
+            let old = table.clone();
+            let removed = table.remove(node);
+            (removed, old, table.clone())
+        };
         if removed {
             self.pools.lock().expect("router pools poisoned").remove(node);
-            log_info!("router", "removed node {node}; epoch {}", self.epoch());
+            self.known
+                .lock()
+                .expect("router known-node set poisoned")
+                .retain(|n| n != node);
+            log_info!("router", "removed node {node}; epoch {}", new.epoch());
+            self.rebalance(&old, &new);
         }
         removed
     }
 
-    /// Add a node to the table: bumps the epoch; keys whose ownership
-    /// moves to the new node serve from it after their next fit.
-    /// Returns false when the address was already a member.
+    /// Add a node to the table (and the health loop's probe set): bumps
+    /// the epoch and replays journaled fits for every model whose top-2
+    /// ownership now includes the new node, so scale-up rebalances
+    /// instead of waiting for the next client fit.  Returns false when
+    /// the address was already a member.
     pub fn add_node(&self, node: &str) -> bool {
-        let added = self.table.write().expect("router table poisoned").add(node);
+        let (added, old, new) = {
+            let mut table = self.table.write().expect("router table poisoned");
+            let old = table.clone();
+            let added = table.add(node);
+            (added, old, table.clone())
+        };
         if added {
-            log_info!("router", "added node {node}; epoch {}", self.epoch());
+            let node = node.trim().to_string();
+            let mut known =
+                self.known.lock().expect("router known-node set poisoned");
+            if !known.iter().any(|n| *n == node) {
+                known.push(node.clone());
+            }
+            drop(known);
+            log_info!("router", "added node {node}; epoch {}", new.epoch());
+            self.rebalance(&old, &new);
         }
         added
+    }
+
+    /// One pass of the health loop (DESIGN.md §15), called periodically
+    /// by [`RouterServer`]'s probe thread.  `failures` is the loop's
+    /// consecutive-failure tally per address — loop-local so a router
+    /// used without the loop carries no dead state.  Probes every known
+    /// node with a `stats` frame: `cfg.health_failures` consecutive
+    /// misses remove a member (never the last one — an empty table would
+    /// turn a full-fleet outage into permanent amnesia), and a known
+    /// non-member that answers is re-added; both paths bump the epoch
+    /// and re-fit via the journal.
+    pub fn health_tick(&self, failures: &mut HashMap<String, u32>) {
+        let known: Vec<String> = self
+            .known
+            .lock()
+            .expect("router known-node set poisoned")
+            .clone();
+        for node in known {
+            let alive = matches!(
+                self.forward(&node, Request::Stats),
+                Ok(Response::Stats { .. })
+            );
+            if alive {
+                failures.remove(&node);
+                let member = self
+                    .table
+                    .read()
+                    .expect("router table poisoned")
+                    .nodes()
+                    .iter()
+                    .any(|n| *n == node);
+                if !member {
+                    let (added, old, new) = {
+                        let mut table =
+                            self.table.write().expect("router table poisoned");
+                        let old = table.clone();
+                        let added = table.add(&node);
+                        (added, old, table.clone())
+                    };
+                    if added {
+                        self.health_restored.fetch_add(1, Ordering::Relaxed);
+                        log_info!(
+                            "router",
+                            "health: node {node} answered again; re-added at \
+                             epoch {}",
+                            new.epoch()
+                        );
+                        self.rebalance(&old, &new);
+                    }
+                }
+                continue;
+            }
+            let count = failures.entry(node.clone()).or_insert(0);
+            *count = count.saturating_add(1);
+            if *count < self.cfg.health_failures {
+                continue;
+            }
+            // Membership and the last-member guard are checked under the
+            // write lock so a concurrent removal cannot empty the table.
+            let removed = {
+                let mut table =
+                    self.table.write().expect("router table poisoned");
+                if table.len() > 1
+                    && table.nodes().iter().any(|n| *n == node)
+                {
+                    let old = table.clone();
+                    table.remove(&node);
+                    Some((old, table.clone()))
+                } else {
+                    None
+                }
+            };
+            if let Some((old, new)) = removed {
+                self.pools.lock().expect("router pools poisoned").remove(&node);
+                self.health_removed.fetch_add(1, Ordering::Relaxed);
+                log_warn!(
+                    "router",
+                    "health: node {node} failed {count} consecutive probes; \
+                     removed at epoch {} (kept in the probe set for \
+                     recovery)",
+                    new.epoch()
+                );
+                self.rebalance(&old, &new);
+            }
+        }
+    }
+
+    /// Replay journaled `fit` frames to every node that *entered* a
+    /// model's top-2 ownership in the move from `old` to `new`
+    /// (DESIGN.md §15): membership changes re-fit and re-replicate
+    /// instead of orphaning.  Nodes already in the old top-2 hold the
+    /// model; replay failures are logged and counted as degraded writes
+    /// — the next membership change (or client fit) retries.
+    fn rebalance(&self, old: &NodeTable, new: &NodeTable) {
+        let journal: Vec<(String, Request)> = {
+            let journal = self.journal.lock().expect("router journal poisoned");
+            journal
+                .iter()
+                .map(|(model, fit)| (model.clone(), fit.clone()))
+                .collect()
+        };
+        for (model, fit) in journal {
+            let old_owners = old.top_owners(&model);
+            for node in new.top_owners(&model) {
+                if old_owners.contains(&node) {
+                    continue;
+                }
+                match self.forward(node, fit.clone()) {
+                    Ok(Response::FitOk { .. }) => {
+                        self.replayed_fits.fetch_add(1, Ordering::Relaxed);
+                        log_info!(
+                            "router",
+                            "replayed fit for model {model:?} to new owner \
+                             {node}"
+                        );
+                    }
+                    Ok(other) => {
+                        self.degraded_writes.fetch_add(1, Ordering::Relaxed);
+                        log_warn!(
+                            "router",
+                            "fit replay for model {model:?} to {node} \
+                             answered {other:?}"
+                        );
+                    }
+                    Err((e, _)) => {
+                        self.degraded_writes.fetch_add(1, Ordering::Relaxed);
+                        log_warn!(
+                            "router",
+                            "fit replay for model {model:?} to {node} \
+                             failed: {e}"
+                        );
+                    }
+                }
+            }
+        }
     }
 
     /// One wire line in, one response line out (mirrors
@@ -390,13 +669,24 @@ impl Router {
     pub fn handle_request(&self, request: Request) -> Response {
         // A frame that already carries an epoch is checked against this
         // router's table — a stale *upstream* router relaying through us
-        // is rejected exactly like a stale router at a worker.
+        // is rejected exactly like a stale router at a worker, and an
+        // upstream at our epoch but on a divergent table lineage gets
+        // the fatal digest rejection (DESIGN.md §15).
         if let (Some(stamp), false) =
             (request.epoch(), matches!(request, Request::SetEpoch { .. }))
         {
-            let current = self.epoch();
+            let (current, digest) = self.stamp();
             if stamp != current {
                 return Response::StaleEpoch { expected: current, got: stamp };
+            }
+            if let Some(got) = request.digest() {
+                if got != digest {
+                    return Response::DigestMismatch {
+                        epoch: current,
+                        expected: digest,
+                        got,
+                    };
+                }
             }
         }
         match request {
@@ -415,36 +705,46 @@ impl Router {
                     .model_key()
                     .expect("model-addressed op")
                     .to_string();
-                let (node, epoch_before) = {
+                let (owners, epoch_before) = {
                     let table = self.table.read().expect("router table poisoned");
-                    (table.owner(&key).map(str::to_string), table.epoch())
+                    (
+                        table
+                            .top_owners(&key)
+                            .into_iter()
+                            .map(str::to_string)
+                            .collect::<Vec<String>>(),
+                        table.epoch(),
+                    )
                 };
-                let Some(node) = node else {
+                if owners.is_empty() {
                     return RouteError::EmptyTable.into_response();
-                };
+                }
                 self.routed.fetch_add(1, Ordering::Relaxed);
-                let response = match self.forward(&node, request) {
-                    Ok(response) => response,
-                    Err(e) => return e.into_response(),
-                };
+                let response =
+                    match self.forward_replicated(&key, &owners, request) {
+                        Ok(response) => response,
+                        Err(e) => return e.into_response(),
+                    };
                 // If the table changed while the frame was in flight and
-                // ownership of this key moved, the reply may have come
-                // from a node that is no longer the owner — worst case a
-                // fit now resident where no router will route again.
-                // Surface that as a typed retryable error instead of a
-                // silent success (on retry the frame lands on the new
-                // owner).  Unchanged-epoch fast path skips the re-check.
+                // the *primary* for this key moved, the reply may have
+                // come from a node that is no longer the owner — worst
+                // case a fit now resident where no router will route
+                // again.  Surface that as a typed retryable error
+                // instead of a silent success (on retry the frame lands
+                // on the new owner).  Unchanged-epoch fast path skips
+                // the re-check.
                 if self.epoch() != epoch_before {
                     let owner_now = {
                         let table =
                             self.table.read().expect("router table poisoned");
                         table.owner(&key).map(str::to_string)
                     };
-                    if owner_now.as_deref() != Some(node.as_str()) {
+                    if owner_now.as_deref() != Some(owners[0].as_str()) {
                         return Response::Error {
                             message: format!(
                                 "node table changed while routing model \
-                                 {key:?} (owner moved off {node}); retry"
+                                 {key:?} (owner moved off {}); retry",
+                                owners[0]
                             ),
                         };
                     }
@@ -454,17 +754,118 @@ impl Router {
         }
     }
 
-    /// Forward one frame to `node` with the current epoch stamped on,
-    /// under the bounded retry budget.  Lagging workers are re-enrolled
-    /// transparently *without* consuming the retry budget (epoch
-    /// convergence is not a node failure); stale *pooled* connections are
-    /// drained for free too (a dead pooled socket usually means the
-    /// worker restarted, and a fresh dial would succeed); fresh-dial and
-    /// in-flight transport failures burn an attempt each; a worker ahead
-    /// of the table is fatal (typed) immediately.  Takes the frame by
-    /// value so re-stamping between attempts mutates one `Option<u64>`
-    /// instead of cloning payloads.
-    fn forward(&self, node: &str, mut request: Request) -> Result<Response, RouteError> {
+    /// Forward a model-addressed frame under the top-2 replication
+    /// policy (DESIGN.md §15).  Writes (`fit`, `delete`) apply on the
+    /// primary — whose reply is authoritative — then synchronously
+    /// best-effort on the replica, counting misses as `degraded_writes`;
+    /// an applied fit is journaled for membership-change replay, an
+    /// applied delete is unjournaled.  Reads (`query`) serve from the
+    /// primary and fail over to the replica only on
+    /// [`RouteError::NodeUnavailable`], counting `degraded_reads`;
+    /// stale/diverged-table rejections stay fatal — failover must never
+    /// mask a routing-correctness error.
+    fn forward_replicated(
+        &self,
+        key: &str,
+        owners: &[String],
+        request: Request,
+    ) -> Result<Response, RouteError> {
+        let primary = owners[0].as_str();
+        let replica = owners.get(1).map(String::as_str);
+        if matches!(request, Request::Query { .. }) {
+            return match self.forward(primary, request) {
+                Ok(response) => Ok(response),
+                Err((RouteError::NodeUnavailable { node, cause }, request)) => {
+                    let Some(replica) = replica else {
+                        return Err(RouteError::NodeUnavailable { node, cause });
+                    };
+                    log_warn!(
+                        "router",
+                        "primary {node} for model {key:?} unavailable \
+                         ({cause}); failing over to replica {replica}"
+                    );
+                    let response = self
+                        .forward(replica, request)
+                        .map_err(|(e, _)| e)?;
+                    self.degraded_reads.fetch_add(1, Ordering::Relaxed);
+                    Ok(response)
+                }
+                Err((e, _)) => Err(e),
+            };
+        }
+        // Writes: fit and delete share the policy; only the "applied"
+        // reply shape and the journal action differ.
+        let is_fit = matches!(request, Request::Fit { .. });
+        let journal_copy = is_fit.then(|| request.clone());
+        let replica_copy = replica.map(|_| request.clone());
+        let response = self.forward(primary, request).map_err(|(e, _)| e)?;
+        let applied = if is_fit {
+            matches!(response, Response::FitOk { .. })
+        } else {
+            matches!(response, Response::Deleted { .. })
+        };
+        if !applied {
+            return Ok(response);
+        }
+        {
+            let mut journal =
+                self.journal.lock().expect("router journal poisoned");
+            match journal_copy {
+                Some(fit) => {
+                    journal.insert(key.to_string(), fit);
+                }
+                None => {
+                    journal.remove(key);
+                }
+            }
+        }
+        if let (Some(replica), Some(copy)) = (replica, replica_copy) {
+            let verb = if is_fit { "fit" } else { "delete" };
+            let replicated = match self.forward(replica, copy) {
+                Ok(Response::FitOk { .. }) | Ok(Response::Deleted { .. }) => {
+                    true
+                }
+                Ok(other) => {
+                    log_warn!(
+                        "router",
+                        "replica {verb} for model {key:?} on {replica} \
+                         answered {other:?}; primary holds the truth"
+                    );
+                    false
+                }
+                Err((e, _)) => {
+                    log_warn!(
+                        "router",
+                        "replica {verb} for model {key:?} on {replica} \
+                         failed: {e}; primary holds the truth"
+                    );
+                    false
+                }
+            };
+            if !replicated {
+                self.degraded_writes.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        Ok(response)
+    }
+
+    /// Forward one frame to `node` with the current `(epoch, digest)`
+    /// stamped on, under the bounded retry budget.  Lagging workers are
+    /// re-enrolled transparently *without* consuming the retry budget
+    /// (epoch convergence is not a node failure); stale *pooled*
+    /// connections are drained for free too (a dead pooled socket
+    /// usually means the worker restarted, and a fresh dial would
+    /// succeed); fresh-dial and in-flight transport failures burn an
+    /// attempt each; a worker ahead of the table — or on a divergent
+    /// table lineage — is fatal (typed) immediately.  Takes the frame by
+    /// value so re-stamping between attempts mutates two `Option<u64>`s
+    /// instead of cloning payloads; errors hand the frame back so a
+    /// caller with a replica to try needs no pre-emptive clone.
+    fn forward(
+        &self,
+        node: &str,
+        mut request: Request,
+    ) -> Result<Response, (RouteError, Request)> {
         let mut last_cause = String::from("no connection attempt made");
         for attempt in 0..=self.cfg.retries {
             if attempt > 0 {
@@ -474,20 +875,21 @@ impl Router {
             // (bounded by the pool cap).
             let mut churned = false;
             while let Some(mut client) = self.pop_pooled(node) {
-                match self.round(node, &mut client, &mut request)? {
-                    Round::Done(response) => {
+                match self.round(node, &mut client, &mut request) {
+                    Ok(Round::Done(response)) => {
                         self.checkin(node, client);
                         return Ok(response);
                     }
-                    Round::Churn(cause) => {
+                    Ok(Round::Churn(cause)) => {
                         self.checkin(node, client);
                         last_cause = cause;
                         churned = true;
                         break;
                     }
-                    Round::Dead(cause) => {
+                    Ok(Round::Dead(cause)) => {
                         last_cause = format!("pooled connection: {cause}");
                     }
+                    Err(e) => return Err((e, request)),
                 }
             }
             if churned {
@@ -501,51 +903,64 @@ impl Router {
                     last_cause = cause;
                     continue;
                 }
-                Acquire::Fatal(e) => return Err(e),
+                Acquire::Fatal(e) => return Err((e, request)),
             };
-            match self.round(node, &mut client, &mut request)? {
-                Round::Done(response) => {
+            match self.round(node, &mut client, &mut request) {
+                Ok(Round::Done(response)) => {
                     self.checkin(node, client);
                     return Ok(response);
                 }
-                Round::Churn(cause) => {
+                Ok(Round::Churn(cause)) => {
                     self.checkin(node, client);
                     last_cause = cause;
                 }
-                Round::Dead(cause) => {
+                Ok(Round::Dead(cause)) => {
                     last_cause = cause;
                 }
+                Err(e) => return Err((e, request)),
             }
         }
         self.node_errors.fetch_add(1, Ordering::Relaxed);
         log_warn!("router", "node {node} unavailable: {last_cause}");
-        Err(RouteError::NodeUnavailable {
-            node: node.to_string(),
-            cause: last_cause,
-        })
+        Err((
+            RouteError::NodeUnavailable {
+                node: node.to_string(),
+                cause: last_cause,
+            },
+            request,
+        ))
     }
 
     /// One stamped request round on an established connection, including
-    /// the transparent epoch re-enroll + resend.  `Err` is the fatal
-    /// worker-ahead rejection; everything recoverable comes back as a
-    /// [`Round`].
+    /// the transparent epoch re-enroll + resend.  `Err` is a fatal
+    /// rejection — the worker is ahead of us, or enrolled to a divergent
+    /// table lineage; everything recoverable comes back as a [`Round`].
     fn round(
         &self,
         node: &str,
         client: &mut Client,
         request: &mut Request,
     ) -> Result<Round, RouteError> {
-        // Stamp with the *current* epoch each round: a table update
-        // between attempts must re-stamp, not replay the old epoch.
-        Self::set_stamp(request, self.epoch());
+        // Stamp with the *current* (epoch, digest) each round: a table
+        // update between attempts must re-stamp, not replay the old one.
+        let (epoch, digest) = self.stamp();
+        Self::set_stamp(request, epoch, digest);
         let first = match client.request(request) {
             Ok(response) => response,
             Err(e) => return Ok(Round::Dead(format!("{e:#}"))),
         };
+        if let Response::DigestMismatch { epoch, expected, .. } = first {
+            return Err(RouteError::DivergedTable {
+                node: node.to_string(),
+                epoch,
+                worker_digest: expected,
+                table_digest: digest,
+            });
+        }
         let Response::StaleEpoch { expected, got: _ } = first else {
             return Ok(Round::Done(first));
         };
-        let table_epoch = self.epoch();
+        let (table_epoch, table_digest) = self.stamp();
         if expected > table_epoch {
             return Err(RouteError::StaleTable {
                 node: node.to_string(),
@@ -556,13 +971,25 @@ impl Router {
         // Worker lagged (or the table moved mid-flight): re-enroll on
         // this connection and resend once immediately — a healthy worker
         // converging on the new epoch must succeed even with retries = 0.
-        match client.request(&Request::SetEpoch { epoch: table_epoch }) {
+        let enroll = Request::SetEpoch {
+            epoch: table_epoch,
+            digest: Some(table_digest),
+        };
+        match client.request(&enroll) {
             Ok(Response::EpochOk { .. }) => {}
             Ok(Response::StaleEpoch { expected, .. }) => {
                 return Err(RouteError::StaleTable {
                     node: node.to_string(),
                     worker_epoch: expected,
                     table_epoch,
+                });
+            }
+            Ok(Response::DigestMismatch { epoch, expected, .. }) => {
+                return Err(RouteError::DivergedTable {
+                    node: node.to_string(),
+                    epoch,
+                    worker_digest: expected,
+                    table_digest,
                 });
             }
             Ok(other) => {
@@ -572,7 +999,7 @@ impl Router {
             }
             Err(e) => return Ok(Round::Dead(format!("{e:#}"))),
         }
-        Self::set_stamp(request, table_epoch);
+        Self::set_stamp(request, table_epoch, table_digest);
         match client.request(request) {
             Ok(Response::StaleEpoch { expected, got }) => {
                 // The table moved again mid-resend; let the normal retry
@@ -581,6 +1008,14 @@ impl Router {
                     "routing epoch churned (worker expected {expected}, \
                      frame carried {got})"
                 )))
+            }
+            Ok(Response::DigestMismatch { epoch, expected, .. }) => {
+                Err(RouteError::DivergedTable {
+                    node: node.to_string(),
+                    epoch,
+                    worker_digest: expected,
+                    table_digest,
+                })
             }
             Ok(response) => Ok(Round::Done(response)),
             Err(e) => Ok(Round::Dead(format!("{e:#}"))),
@@ -597,7 +1032,7 @@ impl Router {
     }
 
     /// Dial a fresh connection (bounded connect + IO timeouts) and enroll
-    /// it at the current table epoch.
+    /// it at the current table `(epoch, digest)` stamp.
     fn dial(&self, node: &str) -> Acquire {
         let mut client = match Client::connect_timeout(
             node,
@@ -607,9 +1042,17 @@ impl Router {
             Ok(c) => c,
             Err(e) => return Acquire::Retry(format!("{e:#}")),
         };
-        let epoch = self.epoch();
-        match client.request(&Request::SetEpoch { epoch }) {
+        let (epoch, digest) = self.stamp();
+        match client.request(&Request::SetEpoch { epoch, digest: Some(digest) }) {
             Ok(Response::EpochOk { .. }) => Acquire::Ready(client),
+            Ok(Response::DigestMismatch { epoch, expected, .. }) => {
+                Acquire::Fatal(RouteError::DivergedTable {
+                    node: node.to_string(),
+                    epoch,
+                    worker_digest: expected,
+                    table_digest: digest,
+                })
+            }
             Ok(Response::StaleEpoch { expected, .. }) => {
                 // Re-read before declaring split-brain: our own table may
                 // have bumped past `epoch` while this enrollment was in
@@ -667,14 +1110,17 @@ impl Router {
         }
     }
 
-    /// Overwrite the routing-epoch stamp in place (no-op for ops that
-    /// carry no epoch) — cheap per-attempt re-stamping without cloning
-    /// query/fit payloads.
-    fn set_stamp(request: &mut Request, epoch: u64) {
+    /// Overwrite the routing-epoch and table-digest stamps in place
+    /// (no-op for ops that carry neither) — cheap per-attempt
+    /// re-stamping without cloning query/fit payloads.
+    fn set_stamp(request: &mut Request, epoch: u64, digest: u64) {
         match request {
-            Request::Fit { epoch: e, .. }
-            | Request::Query { epoch: e, .. }
-            | Request::Delete { epoch: e, .. } => *e = Some(epoch),
+            Request::Fit { epoch: e, digest: d, .. }
+            | Request::Query { epoch: e, digest: d, .. }
+            | Request::Delete { epoch: e, digest: d, .. } => {
+                *e = Some(epoch);
+                *d = Some(digest);
+            }
             _ => {}
         }
     }
@@ -692,7 +1138,10 @@ impl Router {
             let handles: Vec<_> = nodes
                 .iter()
                 .map(|node| {
-                    scope.spawn(move || self.forward(node, request.clone()))
+                    scope.spawn(move || {
+                        self.forward(node, request.clone())
+                            .map_err(|(e, _)| e)
+                    })
                 })
                 .collect();
             handles
@@ -785,14 +1234,27 @@ impl Router {
                 }
             }
         }
+        let journaled_models = self
+            .journal
+            .lock()
+            .expect("router journal poisoned")
+            .len();
+        let known_nodes = self
+            .known
+            .lock()
+            .expect("router known-node set poisoned")
+            .len();
         Response::Stats {
             body: Value::object(vec![
                 (
                     "router",
                     Value::object(vec![
                         ("epoch", Value::from(table.epoch())),
+                        ("digest", Value::from(table.digest())),
                         ("nodes", Value::from(table.len())),
+                        ("known_nodes", Value::from(known_nodes)),
                         ("reachable", Value::from(reachable)),
+                        ("journaled_models", Value::from(journaled_models)),
                         ("routed", Value::from(self.routed.load(Ordering::Relaxed))),
                         (
                             "retries",
@@ -802,10 +1264,45 @@ impl Router {
                             "node_errors",
                             Value::from(self.node_errors.load(Ordering::Relaxed)),
                         ),
+                        (
+                            "degraded_reads",
+                            Value::from(
+                                self.degraded_reads.load(Ordering::Relaxed),
+                            ),
+                        ),
+                        (
+                            "degraded_writes",
+                            Value::from(
+                                self.degraded_writes.load(Ordering::Relaxed),
+                            ),
+                        ),
+                        (
+                            "health_removed",
+                            Value::from(
+                                self.health_removed.load(Ordering::Relaxed),
+                            ),
+                        ),
+                        (
+                            "health_restored",
+                            Value::from(
+                                self.health_restored.load(Ordering::Relaxed),
+                            ),
+                        ),
+                        (
+                            "replayed_fits",
+                            Value::from(
+                                self.replayed_fits.load(Ordering::Relaxed),
+                            ),
+                        ),
                     ]),
                 ),
                 ("nodes", Value::Object(per_node)),
                 (
+                    // totals.models counts *residencies*, not distinct
+                    // models: under top-2 replication a model fitted
+                    // through the router is resident on two nodes and
+                    // counts twice here (router.journaled_models is the
+                    // distinct count).
                     "totals",
                     Value::object(vec![
                         ("models", Value::from(models)),
@@ -824,10 +1321,15 @@ impl Router {
 
 /// TCP front-end for a [`Router`]: same transport loop as the worker
 /// [`Server`](super::server::Server) (one thread per connection,
-/// newline-delimited JSON), with the router's handler behind it.
+/// newline-delimited JSON), with the router's handler behind it.  When
+/// `RouterConfig::health_interval_ms > 0` it also runs the self-healing
+/// probe loop (DESIGN.md §15) on a background thread, stopped and
+/// joined by [`shutdown`](Self::shutdown) (or drop).
 pub struct RouterServer {
     router: Arc<Router>,
     inner: LineServer,
+    health_stop: Arc<AtomicBool>,
+    health_thread: Option<JoinHandle<()>>,
 }
 
 impl RouterServer {
@@ -839,7 +1341,46 @@ impl RouterServer {
             Arc::new(move |line: &str| router.handle_line(line))
         };
         let inner = LineServer::start(host, port, "router", handler)?;
-        Ok(RouterServer { router, inner })
+        let health_stop = Arc::new(AtomicBool::new(false));
+        let health_thread = if router.cfg.health_interval_ms > 0 {
+            let router = Arc::clone(&router);
+            let stop = Arc::clone(&health_stop);
+            let interval = Duration::from_millis(router.cfg.health_interval_ms);
+            log_info!(
+                "router",
+                "health loop up: probing every {}ms, removal after {} \
+                 consecutive failures",
+                router.cfg.health_interval_ms,
+                router.cfg.health_failures
+            );
+            let handle = std::thread::Builder::new()
+                .name("router-health".into())
+                .spawn(move || {
+                    // Consecutive-failure tallies live on this thread:
+                    // the loop is the only prober, so the router itself
+                    // carries no health state when the loop is off.
+                    let mut failures: HashMap<String, u32> = HashMap::new();
+                    while !stop.load(Ordering::Relaxed) {
+                        router.health_tick(&mut failures);
+                        // Sleep in short slices so shutdown stays prompt
+                        // even under long probe intervals.
+                        let mut slept = Duration::ZERO;
+                        while slept < interval && !stop.load(Ordering::Relaxed)
+                        {
+                            let slice = (interval - slept)
+                                .min(Duration::from_millis(25));
+                            std::thread::sleep(slice);
+                            slept += slice;
+                        }
+                    }
+                    log_info!("router", "health loop down");
+                })
+                .map_err(|e| anyhow!("spawning router health loop: {e}"))?;
+            Some(handle)
+        } else {
+            None
+        };
+        Ok(RouterServer { router, inner, health_stop, health_thread })
     }
 
     /// The bound listen address (real port for port-0 binds).
@@ -852,9 +1393,21 @@ impl RouterServer {
         &self.router
     }
 
-    /// Stop accepting and join the acceptor.
+    /// Stop accepting, stop the health loop (if running) and join both.
     pub fn shutdown(&mut self) {
+        self.health_stop.store(true, Ordering::Relaxed);
+        if let Some(thread) = self.health_thread.take() {
+            let _ = thread.join();
+        }
         self.inner.shutdown();
+    }
+}
+
+impl Drop for RouterServer {
+    fn drop(&mut self) {
+        // The health thread holds an Arc<Router>; without this join a
+        // dropped-but-not-shut-down server would leak a live prober.
+        self.shutdown();
     }
 }
 
@@ -937,6 +1490,108 @@ mod tests {
     fn weight_separator_distinguishes_field_boundaries() {
         assert_ne!(rendezvous_weight("ab", "c"), rendezvous_weight("a", "bc"));
         assert_ne!(rendezvous_weight("a", "b"), rendezvous_weight("b", "a"));
+    }
+
+    #[test]
+    fn top_owners_is_the_ranked_prefix() {
+        let t = table(&["10.0.0.1:7474", "10.0.0.2:7474", "10.0.0.3:7474"]);
+        for key in ["m", "model-17", "tenant/a/b"] {
+            let owners = t.top_owners(key);
+            assert_eq!(owners.len(), 2);
+            assert_eq!(owners[0], t.owner(key).unwrap());
+            assert_ne!(owners[0], owners[1], "owners must be distinct");
+            assert_eq!(owners, t.ranked(key)[..2].to_vec());
+        }
+        // Single-node tables have a primary and no replica.
+        let solo = table(&["a:1"]);
+        assert_eq!(solo.top_owners("m"), vec!["a:1"]);
+    }
+
+    #[test]
+    fn digest_is_membership_only_order_independent_and_wire_safe() {
+        let a = table(&["a:1", "b:2", "c:3"]);
+        let b = table(&["c:3", "a:1", "b:2"]);
+        assert_eq!(
+            a.digest(),
+            b.digest(),
+            "insertion order must not change the digest"
+        );
+        // Epoch does not feed the digest: one lineage at two epochs still
+        // matches itself.
+        let rebased = a.clone().at_epoch(9).unwrap();
+        assert_eq!(a.digest(), rebased.digest());
+        // Different memberships (the split-brain case) disagree.
+        let c = table(&["a:1", "b:2", "d:4"]);
+        assert_ne!(a.digest(), c.digest());
+        // Membership changes move the digest, and reversing them
+        // restores it (same members => same digest, whatever the path).
+        let mut m = table(&["a:1", "b:2"]);
+        let before = m.digest();
+        assert!(m.add("c:3"));
+        assert_ne!(m.digest(), before);
+        assert!(m.remove("c:3"));
+        assert_eq!(m.digest(), before);
+        // Wire safety: nonzero (0 is the protocol's "unset" sentinel)
+        // and within the f64-exact integer range.
+        for t in [&a, &b, &c] {
+            assert!(t.digest() >= 1);
+            assert!(t.digest() <= MAX_DIGEST);
+        }
+    }
+
+    #[test]
+    fn prop_removing_a_node_outside_the_top2_keeps_the_top2() {
+        // The minimal-disruption invariant extended to the replica set:
+        // replicated placement only moves when one of the two owners
+        // does (this is what makes health-driven removal of an
+        // *unrelated* node a no-op for a model's placement).
+        check("rendezvous top-2 minimal disruption", 25, |rng| {
+            let n_nodes = 3 + rng.below(6) as usize; // 3..=8
+            let nodes: Vec<String> = (0..n_nodes)
+                .map(|i| format!("node-{}.example:{i}", rng.below(1 << 20)))
+                .collect();
+            let t = NodeTable::new(nodes.clone()).map_err(|e| e.to_string())?;
+            let keys: Vec<String> = (0..400)
+                .map(|i| format!("m{}-{i}", rng.below(1 << 32)))
+                .collect();
+            let victim = nodes[rng.below(n_nodes as u64) as usize].clone();
+            let mut t2 = t.clone();
+            ensure(t2.remove(&victim), "victim was a member")?;
+            for key in &keys {
+                let old: Vec<String> = t
+                    .top_owners(key)
+                    .into_iter()
+                    .map(str::to_string)
+                    .collect();
+                let new: Vec<String> = t2
+                    .top_owners(key)
+                    .into_iter()
+                    .map(str::to_string)
+                    .collect();
+                if old.contains(&victim) {
+                    ensure(
+                        !new.contains(&victim),
+                        "victim must leave the owner set",
+                    )?;
+                    // The surviving owner keeps its relative position...
+                    let survivor =
+                        old.iter().find(|n| **n != victim).unwrap();
+                    ensure(
+                        new.contains(survivor),
+                        "the surviving owner must stay an owner",
+                    )?;
+                } else {
+                    ensure(
+                        new == old,
+                        &format!(
+                            "top-2 of {key:?} moved {old:?} -> {new:?} \
+                             though {victim} was not an owner"
+                        ),
+                    )?;
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]
@@ -1035,6 +1690,20 @@ mod tests {
         };
         let msg = e.to_string();
         assert!(msg.contains("stale") && msg.contains('5') && msg.contains('3'));
+        let e = RouteError::DivergedTable {
+            node: "n:1".into(),
+            epoch: 4,
+            worker_digest: 17,
+            table_digest: 23,
+        };
+        let msg = e.to_string();
+        assert!(
+            msg.contains("diverged")
+                && msg.contains("17")
+                && msg.contains("23")
+                && msg.contains("no lineage"),
+            "{msg}"
+        );
         assert!(RouteError::EmptyTable.to_string().contains("empty"));
         // And the wire shape is a typed Error response.
         match RouteError::EmptyTable.into_response() {

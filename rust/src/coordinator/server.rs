@@ -29,7 +29,7 @@ use anyhow::{anyhow, Context, Result};
 
 use super::protocol::{Request, Response, PROTOCOL_VERSION};
 use super::request::{FitSpec, QuerySpec};
-use super::{Coordinator, FitInfo, QueryResult};
+use super::{Coordinator, EnrollOutcome, FitInfo, QueryResult};
 use crate::{log_info, log_warn};
 
 /// One wire line in, one response out — what a [`LineServer`] serves.
@@ -213,18 +213,33 @@ pub fn handle_line(coordinator: &Coordinator, line: &str) -> Response {
     handle_request(coordinator, request)
 }
 
-/// The routing-epoch gate (DESIGN.md §12): a model-addressed frame whose
-/// epoch stamp disagrees with the worker's enrolled epoch is a typed
-/// rejection — a router with a stale node table must never silently fit
-/// or serve a model this worker no longer owns.  Unstamped frames
-/// (direct clients) and unenrolled workers (epoch 0) always pass.
-fn epoch_gate(coordinator: &Coordinator, epoch: Option<u64>) -> Option<Response> {
-    let current = coordinator.routing_epoch();
+/// The routing-epoch gate (DESIGN.md §12, §15): a model-addressed frame
+/// whose epoch stamp disagrees with the worker's enrolled epoch is a
+/// typed rejection — a router with a stale node table must never
+/// silently fit or serve a model this worker no longer owns.  Frames at
+/// the *right* epoch but carrying a different table digest come from a
+/// divergent table lineage (two independently-administered routers that
+/// never shared history) and get the distinct — fatal-to-sender —
+/// [`Response::DigestMismatch`], since re-enrolling cannot reconcile
+/// them.  Unstamped frames (direct clients), unenrolled workers
+/// (epoch 0), and digest-less stamps always pass the digest check.
+fn epoch_gate(coordinator: &Coordinator, epoch: Option<u64>, digest: Option<u64>) -> Option<Response> {
+    let (current, enrolled_digest) = coordinator.routing_stamp();
     match epoch {
         Some(e) if current != 0 && e != current => {
             Some(Response::StaleEpoch { expected: current, got: e })
         }
-        _ => None,
+        Some(e) => match digest {
+            Some(got) if current != 0 && enrolled_digest != 0 && got != enrolled_digest => {
+                Some(Response::DigestMismatch {
+                    epoch: e,
+                    expected: enrolled_digest,
+                    got,
+                })
+            }
+            _ => None,
+        },
+        None => None,
     }
 }
 
@@ -236,25 +251,30 @@ pub fn handle_request(coordinator: &Coordinator, request: Request) -> Response {
         Request::Ping => Response::Pong { version: PROTOCOL_VERSION },
         Request::Models => Response::Models { names: coordinator.registry().names() },
         Request::Stats => Response::Stats { body: coordinator.stats_json() },
-        Request::SetEpoch { epoch } => {
-            let current = coordinator.routing_epoch();
-            if epoch < current {
+        Request::SetEpoch { epoch, digest } => {
+            match coordinator.enroll_routing(epoch, digest) {
+                EnrollOutcome::Enrolled(epoch) => Response::EpochOk { epoch },
                 // A router trying to enroll us *backwards* is itself
                 // stale; tell it so instead of rolling back.
-                Response::StaleEpoch { expected: current, got: epoch }
-            } else {
-                Response::EpochOk { epoch: coordinator.set_routing_epoch(epoch) }
+                EnrollOutcome::Stale { expected, got } => {
+                    Response::StaleEpoch { expected, got }
+                }
+                // Same epoch, different table lineage: fatal to the
+                // sender — re-enrolling can never reconcile it.
+                EnrollOutcome::Diverged { epoch, expected, got } => {
+                    Response::DigestMismatch { epoch, expected, got }
+                }
             }
         }
-        Request::Delete { model, epoch } => {
-            if let Some(rejection) = epoch_gate(coordinator, epoch) {
+        Request::Delete { model, epoch, digest } => {
+            if let Some(rejection) = epoch_gate(coordinator, epoch, digest) {
                 return rejection;
             }
             let existed = coordinator.registry().remove(&model);
             Response::Deleted { model, existed }
         }
-        Request::Fit { model, spec, points, epoch } => {
-            if let Some(rejection) = epoch_gate(coordinator, epoch) {
+        Request::Fit { model, spec, points, epoch, digest } => {
+            if let Some(rejection) = epoch_gate(coordinator, epoch, digest) {
                 return rejection;
             }
             match coordinator.fit(&model, points, &spec) {
@@ -262,8 +282,8 @@ pub fn handle_request(coordinator: &Coordinator, request: Request) -> Response {
                 Err(e) => Response::Error { message: format!("{e:#}") },
             }
         }
-        Request::Query { model, d, spec, epoch } => {
-            if let Some(rejection) = epoch_gate(coordinator, epoch) {
+        Request::Query { model, d, spec, epoch, digest } => {
+            if let Some(rejection) = epoch_gate(coordinator, epoch, digest) {
                 return rejection;
             }
             let Some(handle) = coordinator.handle(&model) else {
@@ -412,14 +432,21 @@ impl Client {
         }
     }
 
-    /// Enroll the server at a routing-table epoch (router → worker).
-    /// Returns the epoch the worker ended up at; a worker already ahead
-    /// answers with the typed stale rejection, surfaced here as an error.
-    pub fn set_epoch(&mut self, epoch: u64) -> Result<u64> {
-        match self.request(&Request::SetEpoch { epoch })? {
+    /// Enroll the server at a routing-table epoch (router → worker),
+    /// optionally binding the table's digest (DESIGN.md §15).  Returns
+    /// the epoch the worker ended up at; a worker already ahead answers
+    /// with the typed stale rejection, and one enrolled to a *different
+    /// table lineage* at the same epoch with the fatal digest rejection
+    /// — both surfaced here as errors.
+    pub fn set_epoch(&mut self, epoch: u64, digest: Option<u64>) -> Result<u64> {
+        match self.request(&Request::SetEpoch { epoch, digest })? {
             Response::EpochOk { epoch } => Ok(epoch),
             Response::StaleEpoch { expected, got } => Err(anyhow!(
                 "worker is enrolled at routing epoch {expected}, ahead of {got}"
+            )),
+            Response::DigestMismatch { epoch, expected, got } => Err(anyhow!(
+                "worker's node table diverged at epoch {epoch}: \
+                 enrolled digest {expected}, offered {got}"
             )),
             other => Err(anyhow!("unexpected response {other:?}")),
         }
@@ -437,6 +464,7 @@ impl Client {
             spec: spec.clone(),
             points,
             epoch: None,
+            digest: None,
         };
         match self.request(&req)? {
             Response::FitOk { info } => Ok(info),
@@ -452,7 +480,13 @@ impl Client {
         d: usize,
         spec: QuerySpec,
     ) -> Result<QueryResult> {
-        let req = Request::Query { model: model.into(), d, spec, epoch: None };
+        let req = Request::Query {
+            model: model.into(),
+            d,
+            spec,
+            epoch: None,
+            digest: None,
+        };
         match self.request(&req)? {
             Response::QueryOk { result, .. } => Ok(result),
             Response::Error { message } => Err(anyhow!(message)),
@@ -498,7 +532,7 @@ impl Client {
 
     /// Delete a model by name; false if it was not resident.
     pub fn delete(&mut self, model: &str) -> Result<bool> {
-        let req = Request::Delete { model: model.into(), epoch: None };
+        let req = Request::Delete { model: model.into(), epoch: None, digest: None };
         match self.request(&req)? {
             Response::Deleted { existed, .. } => Ok(existed),
             Response::Error { message } => Err(anyhow!(message)),

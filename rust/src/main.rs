@@ -67,6 +67,12 @@ fn commands() -> Vec<Command> {
                 OptSpec::opt_default("epoch",
                     "node-table epoch to start at (resume the fleet's \
                      lineage after a router restart)", "1"),
+                OptSpec::opt_default("health-interval",
+                    "self-healing probe interval in ms (0 disables the \
+                     health loop)", "0"),
+                OptSpec::opt_default("health-failures",
+                    "consecutive failed probes before a node is removed",
+                    "2"),
                 OptSpec::flag("once", "exit after binding (smoke test)"),
             ],
         },
@@ -264,6 +270,13 @@ fn cmd_route(p: &cli::Parsed) -> Result<()> {
     if let Some(e) = p.get_usize("epoch").map_err(|e| anyhow!(e))? {
         cfg.initial_epoch = e as u64;
     }
+    if let Some(ms) = p.get_usize("health-interval").map_err(|e| anyhow!(e))? {
+        cfg.health_interval_ms = ms as u64;
+    }
+    if let Some(n) = p.get_usize("health-failures").map_err(|e| anyhow!(e))? {
+        cfg.health_failures =
+            u32::try_from(n).map_err(|_| anyhow!("health-failures out of range"))?;
+    }
     cfg.validate().map_err(|e| anyhow!(e))?;
 
     let (host, port) = (cfg.host.clone(), cfg.port);
@@ -271,10 +284,11 @@ fn cmd_route(p: &cli::Parsed) -> Result<()> {
     let table = router.table();
     let mut server = RouterServer::start(router, &host, port)?;
     println!(
-        "flash-sdkde routing on {} over {} nodes (epoch {}): {:?}",
+        "flash-sdkde routing on {} over {} nodes (epoch {}, digest {}): {:?}",
         server.local_addr(),
         table.len(),
         table.epoch(),
+        table.digest(),
         table.nodes()
     );
     if p.flag("once") {
@@ -548,13 +562,10 @@ fn cmd_eval(p: &cli::Parsed) -> Result<()> {
         .get_usize("seed")
         .map_err(|e| anyhow!(e))?
         .map(|s| s as u64);
-    let budget = match (rel_err, seed) {
-        (Some(e), s) => Budget::approx(e, s).map_err(|e| anyhow!(e))?,
-        (None, Some(_)) => bail!(
-            "--seed requires --rel-err (an exact query has no sampler to seed)"
-        ),
-        (None, None) => Budget::Exact,
-    };
+    // The shared resolver keeps the CLI boundary bit-for-bit aligned
+    // with the wire's: `--seed` without `--rel-err` fails with the SAME
+    // typed message a raw frame would get from the server.
+    let budget = Budget::resolve(rel_err, seed).map_err(|e| anyhow!(e))?;
     let mut client = Client::connect(p.get_string("addr", "127.0.0.1:7474"))?;
     let result = client.query(
         p.get("model").expect("required"),

@@ -102,10 +102,39 @@ pub struct StoreStats {
     /// sketch instead of the exact sweep (DESIGN.md §14).  Engine-wide,
     /// like `prepare_hits`.
     pub approx_queries: u64,
-    /// Approx-budget executions the backend declined and routed back to
-    /// the exact path — gradient/Laplace/fit pipelines, which have no
-    /// approximate estimator.  Engine-wide, like `prepare_hits`.
-    pub exact_fallbacks: u64,
+    /// Approx-budget executions the backend recognised but routed back
+    /// to the exact path because the *pipeline* has no approximate
+    /// estimator — gradient/Laplace/fit ([`ApproxOffer::Unsupported`]).
+    /// The complementary cause — a backend with no approximate path at
+    /// all ([`ApproxOffer::Declined`]) — is counted by the coordinator
+    /// (`engine.declined` in the stats document), since such a backend
+    /// has nowhere to count.  Engine-wide, like `prepare_hits`.
+    pub unsupported_mode: u64,
+    /// RFF probe-cache evictions: sketch slots pushed out of a model's
+    /// bounded per-model LRU (`MAX_SKETCHES_PER_MODEL` = 8) by distinct
+    /// `(h, rel_err)` budgets.  Nonzero means a tenant is sweeping
+    /// budgets — the bound is what keeps that sweep from growing backend
+    /// memory without limit.  Engine-wide, like `prepare_hits`.
+    pub sketch_evictions: u64,
+}
+
+/// Outcome of offering an execution to a backend's approximate path
+/// ([`ExecBackend::execute_approx`]).  The two non-served outcomes both
+/// mean "run the exact path", but for *different reasons* that operators
+/// need to tell apart in stats: a user asking for an approx gradient
+/// (`Unsupported` → `engine.unsupported_mode`) is not the same signal as
+/// serving on a backend with no approximate machinery at all
+/// (`Declined` → the coordinator-counted `engine.declined`).
+#[derive(Debug)]
+pub enum ApproxOffer {
+    /// The backend served the request approximately, within budget.
+    Served(ExecOutput),
+    /// The backend has approximate estimators, but not for this entry's
+    /// pipeline (grad/Laplace/fit on the native backend).
+    Unsupported,
+    /// The backend has no approximate path at all (PJRT, and any
+    /// implementation keeping the trait default).
+    Declined,
 }
 
 /// What an engine worker drives.  Implementations are single-thread
@@ -116,20 +145,22 @@ pub trait ExecBackend {
     fn execute(&mut self, entry: &ArtifactEntry, inputs: &[Arc<HostTensor>]) -> Result<ExecOutput>;
 
     /// Try to execute an entry through the backend's *approximate* path
-    /// within the resolved error budget (DESIGN.md §14).  `Ok(None)`
-    /// means this backend (or this pipeline) has no approximate
-    /// estimator and the caller must run [`execute`](Self::execute) —
-    /// which is exactly what the default implementation says.  `Err` is
-    /// reserved for real failures (bad shapes, torn entries), never for
-    /// "cannot approximate".
+    /// within the resolved error budget (DESIGN.md §14).  A non-served
+    /// [`ApproxOffer`] means the caller must run
+    /// [`execute`](Self::execute), with the variant recording *why*:
+    /// `Unsupported` for a pipeline with no approximate estimator,
+    /// `Declined` for a backend with none at all — which is exactly what
+    /// the default implementation says.  `Err` is reserved for real
+    /// failures (bad shapes, torn entries), never for "cannot
+    /// approximate".
     fn execute_approx(
         &mut self,
         entry: &ArtifactEntry,
         inputs: &[Arc<HostTensor>],
         params: &ApproxParams,
-    ) -> Result<Option<ExecOutput>> {
+    ) -> Result<ApproxOffer> {
         let _ = (entry, inputs, params);
-        Ok(None)
+        Ok(ApproxOffer::Declined)
     }
 
     /// Pre-warm an entry (compile for PJRT; no-op for native).
@@ -290,9 +321,12 @@ struct SketchSlot {
     sketch: Option<Arc<RffSketch>>,
 }
 
-/// Bound on cached RFF probe results per model slot — eviction is FIFO;
-/// serving traffic uses a handful of budgets at most, so churn here
-/// would indicate a client sweeping budgets, not a hot path to protect.
+/// Bound on cached RFF probe results per model slot — eviction is
+/// least-recently-used (probe hits refresh their entry) and counted in
+/// [`StoreStats::sketch_evictions`]; serving traffic uses a handful of
+/// budgets at most, so churn here would indicate a client sweeping
+/// budgets, not a hot path to protect — the bound is what keeps such a
+/// sweep from growing backend memory without limit.
 const MAX_SKETCHES_PER_MODEL: usize = 8;
 
 /// Default upper bound on resident prepared models per cache — the
@@ -331,7 +365,8 @@ struct CacheInner {
     tuned_lookups: u64,
     tuned_fallbacks: u64,
     approx_queries: u64,
-    exact_fallbacks: u64,
+    unsupported_mode: u64,
+    sketch_evictions: u64,
 }
 
 impl CacheInner {
@@ -354,7 +389,8 @@ impl PrepareCache {
                 tuned_lookups: 0,
                 tuned_fallbacks: 0,
                 approx_queries: 0,
-                exact_fallbacks: 0,
+                unsupported_mode: 0,
+                sketch_evictions: 0,
             })),
         }
     }
@@ -576,17 +612,28 @@ impl NativeFlash {
         };
 
         // RFF sketch: one probe per (h, rel_err), negative results cached
-        // too so non-viable regimes don't re-probe per query.
+        // too so non-viable regimes don't re-probe per query.  A probe
+        // hit moves its entry to the back of the slot list, so the
+        // bounded cache evicts least-recently-used: a tenant sweeping
+        // budgets churns the cold tail, never the budget a steady
+        // client keeps re-using.
         let key = (h.to_bits(), rel_err.to_bits());
-        let hit = |slot: &PrepareSlot| {
-            slot.sketches
+        let touch = |slot: &mut PrepareSlot| {
+            let p = slot
+                .sketches
                 .iter()
-                .find(|s| (s.h_bits, s.rel_err_bits) == key)
-                .map(|s| s.sketch.clone())
+                .position(|s| (s.h_bits, s.rel_err_bits) == key)?;
+            let entry = slot.sketches.remove(p);
+            let sketch = entry.sketch.clone();
+            slot.sketches.push(entry);
+            Some(sketch)
         };
         let cached = {
-            let inner = self.cache.lock();
-            find(&inner.slots).and_then(|p| hit(&inner.slots[p]))
+            let mut inner = self.cache.lock();
+            match find(&inner.slots) {
+                Some(p) => touch(&mut inner.slots[p]),
+                None => None,
+            }
         };
         let sketch = match cached {
             Some(entry) => entry,
@@ -597,14 +644,17 @@ impl NativeFlash {
                 let mut inner = self.cache.lock();
                 match find(&inner.slots) {
                     Some(p) => {
-                        if let Some(entry) = hit(&inner.slots[p]) {
+                        if let Some(entry) = touch(&mut inner.slots[p]) {
                             entry // sibling probed first: share its result
                         } else {
-                            let slot = &mut inner.slots[p];
-                            if slot.sketches.len() >= MAX_SKETCHES_PER_MODEL {
-                                slot.sketches.remove(0);
+                            if inner.slots[p].sketches.len()
+                                >= MAX_SKETCHES_PER_MODEL
+                            {
+                                // Front = coldest (hits move to the back).
+                                inner.slots[p].sketches.remove(0);
+                                inner.sketch_evictions += 1;
                             }
-                            slot.sketches.push(SketchSlot {
+                            inner.slots[p].sketches.push(SketchSlot {
                                 h_bits: key.0,
                                 rel_err_bits: key.1,
                                 sketch: built.clone(),
@@ -794,13 +844,15 @@ impl ExecBackend for NativeFlash {
         entry: &ArtifactEntry,
         inputs: &[Arc<HostTensor>],
         params: &ApproxParams,
-    ) -> Result<Option<ExecOutput>> {
+    ) -> Result<ApproxOffer> {
         // Only the density pipeline has approximate estimators
         // (DESIGN.md §14); gradients, Laplace and the fit pipelines are
-        // counted exact fallbacks.
+        // unsupported modes, counted so operators can tell "user asked
+        // for an approx gradient" apart from "backend has no approx
+        // path" (the coordinator-counted `Declined`).
         if entry.pipeline.as_str() != "kde" {
-            self.cache.lock().exact_fallbacks += 1;
-            return Ok(None);
+            self.cache.lock().unsupported_mode += 1;
+            return Ok(ApproxOffer::Unsupported);
         }
         validate_inputs(entry, inputs)?;
         let d = entry.d;
@@ -863,7 +915,10 @@ impl ExecBackend for NativeFlash {
         }
         self.cache.lock().approx_queries += 1;
         self.stats.executions += 1;
-        Ok(Some(ExecOutput { outputs: vec![output], timings: timer }))
+        Ok(ApproxOffer::Served(ExecOutput {
+            outputs: vec![output],
+            timings: timer,
+        }))
     }
 
     fn warm(&mut self, _entry: &ArtifactEntry) -> Result<Duration> {
@@ -882,7 +937,8 @@ impl ExecBackend for NativeFlash {
             tuned_lookups: inner.tuned_lookups,
             tuned_fallbacks: inner.tuned_fallbacks,
             approx_queries: inner.approx_queries,
-            exact_fallbacks: inner.exact_fallbacks,
+            unsupported_mode: inner.unsupported_mode,
+            sketch_evictions: inner.sketch_evictions,
             ..self.stats
         }
     }
@@ -950,6 +1006,13 @@ mod tests {
 
     fn arcs(ts: Vec<HostTensor>) -> Vec<Arc<HostTensor>> {
         ts.into_iter().map(Arc::new).collect()
+    }
+
+    fn served(offer: ApproxOffer) -> ExecOutput {
+        match offer {
+            ApproxOffer::Served(out) => out,
+            other => panic!("expected ApproxOffer::Served, got {other:?}"),
+        }
     }
 
     #[test]
@@ -1294,10 +1357,11 @@ mod tests {
         let params = ApproxParams { rel_err: 0.1, seed: 99, row_offset: 0 };
 
         let mut backend = NativeFlash::new();
-        let out = backend
-            .execute_approx(&entry, &inputs, &params)
-            .expect("approx execute")
-            .expect("native serves kde approximately");
+        let out = served(
+            backend
+                .execute_approx(&entry, &inputs, &params)
+                .expect("approx execute"),
+        );
         assert_eq!(out.outputs[0].shape(), &[m]);
         let exact = native::kde(&x, &w, &y, d, h);
         for (a, b) in out.outputs[0].data().iter().zip(&exact) {
@@ -1306,15 +1370,16 @@ mod tests {
         }
         let s = backend.stats();
         assert_eq!(s.approx_queries, 1);
-        assert_eq!(s.exact_fallbacks, 0);
+        assert_eq!(s.unsupported_mode, 0);
         assert_eq!(s.executions, 1);
 
         // Bitwise-stable on repeat; the second call reuses the cached
         // index (one prepare miss total).
-        let again = backend
-            .execute_approx(&entry, &inputs, &params)
-            .expect("approx again")
-            .expect("still served");
+        let again = served(
+            backend
+                .execute_approx(&entry, &inputs, &params)
+                .expect("approx again"),
+        );
         assert_eq!(again.outputs, out.outputs);
         assert_eq!(backend.stats().prepare_misses, 1);
         assert_eq!(backend.stats().prepare_hits, 1);
@@ -1340,11 +1405,12 @@ mod tests {
             ];
             let params =
                 ApproxParams { rel_err: 0.1, seed: 5, row_offset: off };
-            b.execute_approx(&kde_entry(n, m, d), &inputs, &params)
-                .expect("approx")
-                .expect("served")
-                .outputs
-                .remove(0)
+            served(
+                b.execute_approx(&kde_entry(n, m, d), &inputs, &params)
+                    .expect("approx"),
+            )
+            .outputs
+            .remove(0)
         };
         let mut backend = NativeFlash::new();
         let whole = run(&mut backend, &y, 8, 0);
@@ -1368,11 +1434,12 @@ mod tests {
         let params = ApproxParams { rel_err: 0.1, seed: 0, row_offset: 0 };
         let out = backend
             .execute_approx(&entry, &[], &params)
-            .expect("decline is not an error");
-        assert!(out.is_none());
-        assert_eq!(backend.stats().exact_fallbacks, 1);
+            .expect("an unsupported mode is not an error");
+        assert!(matches!(out, ApproxOffer::Unsupported));
+        assert_eq!(backend.stats().unsupported_mode, 1);
         assert_eq!(backend.stats().approx_queries, 0);
-        // The default trait impl (non-native backends) also declines.
+        // The default trait impl (non-native backends) declines outright
+        // — a distinct outcome the coordinator counts separately.
         struct Nop;
         impl ExecBackend for Nop {
             fn execute(
@@ -1396,7 +1463,54 @@ mod tests {
             }
         }
         let kde = kde_entry(4, 2, 1);
-        assert!(Nop.execute_approx(&kde, &[], &params).unwrap().is_none());
+        assert!(matches!(
+            Nop.execute_approx(&kde, &[], &params).unwrap(),
+            ApproxOffer::Declined
+        ));
+    }
+
+    #[test]
+    fn sketch_cache_is_bounded_lru_and_counts_evictions() {
+        use crate::approx::ApproxParams;
+        let (n, m, d) = (600, 4, 2);
+        let mut rng = Pcg64::seeded(11);
+        let entry = kde_entry(n, m, d);
+        let inputs = arcs(vec![
+            HostTensor::matrix(n, d, rng.normal_vec_f32(n * d)).unwrap(),
+            HostTensor::vec1(vec![1.0f32; n]),
+            HostTensor::matrix(m, d, rng.normal_vec_f32(m * d)).unwrap(),
+            HostTensor::scalar(0.5),
+        ]);
+        let mut backend = NativeFlash::new();
+        let query = |b: &mut NativeFlash, rel_err: f64| {
+            let params = ApproxParams { rel_err, seed: 3, row_offset: 0 };
+            served(
+                b.execute_approx(&entry, &inputs, &params)
+                    .expect("approx execute"),
+            );
+        };
+
+        // A hot budget, touched before each step of a budget sweep that
+        // overflows the bound: LRU keeps it resident, so the sweep evicts
+        // exactly its own cold tail.
+        let hot = 0.10f64;
+        query(&mut backend, hot);
+        for i in 0..MAX_SKETCHES_PER_MODEL {
+            query(&mut backend, hot); // refresh → never the LRU victim
+            query(&mut backend, 0.20 + 0.01 * i as f64);
+        }
+        // 1 hot + MAX sweep entries = MAX + 1 distinct budgets, bound MAX
+        // → exactly one eviction so far, and it was not the hot budget.
+        assert_eq!(backend.stats().sketch_evictions, 1);
+        let before = backend.stats().approx_queries;
+        query(&mut backend, hot);
+        // The hot budget was still cached: re-querying it probes the
+        // cache, evicting nothing new.
+        assert_eq!(backend.stats().sketch_evictions, 1);
+        assert_eq!(backend.stats().approx_queries, before + 1);
+        // An (MAX+2)'th distinct budget evicts again — the bound holds.
+        query(&mut backend, 0.4);
+        assert_eq!(backend.stats().sketch_evictions, 2);
     }
 
     #[test]

@@ -18,7 +18,8 @@ use anyhow::{anyhow, Context, Result};
 
 use super::artifact::{ArtifactEntry, Manifest};
 use super::backend::{
-    BackendKind, ExecBackend as _, ExecOutput, PrepareCache, StoreStats,
+    ApproxOffer, BackendKind, ExecBackend as _, ExecOutput, PrepareCache,
+    StoreStats,
 };
 use super::tensor::HostTensor;
 use crate::approx::ApproxParams;
@@ -44,7 +45,7 @@ enum Job {
     ExecApprox {
         req: ExecRequest,
         params: ApproxParams,
-        reply: Sender<Result<Option<ExecOutput>>>,
+        reply: Sender<Result<ApproxOffer>>,
     },
     Warm {
         entries: Vec<ArtifactEntry>,
@@ -157,16 +158,17 @@ impl Engine {
     }
 
     /// Try to execute an artifact through the backend's approximate path
-    /// (DESIGN.md §14); blocks until the result is ready.  `Ok(None)`
-    /// means the backend declined (no approximate estimator for this
-    /// pipeline/substrate) and the caller must fall back to
-    /// [`execute`](Self::execute).
+    /// (DESIGN.md §14); blocks until the result is ready.  The non-served
+    /// [`ApproxOffer`] outcomes distinguish *why* the backend passed —
+    /// `Unsupported` (this pipeline has no approximate estimator) vs
+    /// `Declined` (this backend has no approximate path at all) — and in
+    /// both cases the caller must fall back to [`execute`](Self::execute).
     pub fn execute_approx(
         &self,
         entry: &ArtifactEntry,
         inputs: Vec<Arc<HostTensor>>,
         params: ApproxParams,
-    ) -> Result<Option<ExecOutput>> {
+    ) -> Result<ApproxOffer> {
         let (reply, rx) = channel();
         self.tx
             .send(Job::ExecApprox {

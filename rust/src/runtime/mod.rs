@@ -18,7 +18,8 @@ pub mod tensor;
 
 pub use artifact::{ArtifactEntry, Manifest, TensorSpec};
 pub use backend::{
-    BackendKind, ExecBackend, ExecOutput, NativeFlash, PrepareCache, StoreStats,
+    ApproxOffer, BackendKind, ExecBackend, ExecOutput, NativeFlash,
+    PrepareCache, StoreStats,
 };
 pub use engine::Engine;
 #[cfg(feature = "pjrt")]

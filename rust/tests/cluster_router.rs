@@ -1,35 +1,46 @@
-//! In-process cluster harness (ISSUE 4): N loopback `serve` workers plus
-//! the consistent-hash router, all in one process — the entire multi-node
-//! topology is exercised by `cargo test -q` with **no artifacts and no
-//! real network setup** (everything binds ephemeral 127.0.0.1 ports), so
-//! it runs unconditionally on the no-XLA CI leg.
+//! In-process cluster harness (ISSUE 4, extended by ISSUE 7): N loopback
+//! `serve` workers plus the consistent-hash router, all in one process —
+//! the entire multi-node topology is exercised by `cargo test -q` with
+//! **no artifacts and no real network setup** (everything binds ephemeral
+//! 127.0.0.1 ports), so it runs unconditionally on the no-XLA CI leg.
 //!
 //! Coverage:
 //! * bitwise oracle equality: every eval/grad reply routed through the
 //!   cluster equals a single-node in-process coordinator bit-for-bit;
-//! * deterministic placement: each fit lands exactly on the rendezvous
-//!   owner of its model key, and nowhere else;
-//! * fan-out: `models` is the union, `stats` aggregates per-node docs;
-//! * failure: killing a worker mid-stream yields typed `unavailable`
-//!   errors (bounded, no hang), survivors keep serving, and a table
-//!   update + re-fit re-routes the orphaned keys onto survivors with the
-//!   epoch propagated to every remaining worker.
+//! * replicated placement: each fit lands on **both** top-2 rendezvous
+//!   owners of its model key, and nowhere else;
+//! * failover: killing the primary owner loses no reads — the router
+//!   serves from the replica, bitwise-equal, and counts the degradation;
+//! * self-healing: with the health loop on, a killed worker is detected
+//!   and removed (epoch bump), and a worker restarted on the same
+//!   address is re-enrolled and re-fit via journal replay — with **zero**
+//!   manual `remove_node`/`add_node` calls;
+//! * lineage safety: a router whose table shares the epoch but not the
+//!   membership digest gets a typed divergence rejection, never a
+//!   silently misrouted reply; a router whose epoch is simply behind
+//!   gets the typed stale-table error;
+//! * approx routing: `rel_err`/`seed` budgets survive `forward()`'s
+//!   epoch/digest re-stamping and are served bitwise-identically to the
+//!   single-node approx oracle, counted on the owning worker.
 //!
-//! Sizes are deliberately small (3 workers, tens of models, <=96 train
+//! Sizes are deliberately small (3 workers, tens of models, <=512 train
 //! points) so the whole file stays seconds in CI.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
+use std::time::{Duration, Instant};
 
 use flash_sdkde::config::{Config, RouterConfig};
+use flash_sdkde::coordinator::protocol::{Request, Response};
 use flash_sdkde::coordinator::router::{NodeTable, Router, RouterServer};
 use flash_sdkde::coordinator::server::{Client, Server};
-use flash_sdkde::coordinator::{Coordinator, FitSpec};
+use flash_sdkde::coordinator::{Coordinator, FitSpec, ModelHandle, QuerySpec};
 use flash_sdkde::data::mixture::by_dim;
 use flash_sdkde::estimator::EstimatorKind;
 use flash_sdkde::runtime::BackendKind;
 use flash_sdkde::util::json::Value;
 use flash_sdkde::util::rng::Pcg64;
+use flash_sdkde::Budget;
 
 fn native_config() -> Config {
     let mut cfg = Config::default();
@@ -42,8 +53,8 @@ fn native_config() -> Config {
 
 /// One loopback worker: a native coordinator behind a real TCP server on
 /// an ephemeral port.  Dropping it kills the node (acceptor + connection
-/// threads join, the listener closes), which is how the failure test
-/// "unplugs" a worker.
+/// threads join, the listener closes), which is how the failure tests
+/// "unplug" a worker.
 struct Worker {
     addr: String,
     server: Server,
@@ -56,17 +67,25 @@ fn spawn_worker() -> Worker {
     Worker { addr: server.local_addr().to_string(), server }
 }
 
-fn spawn_cluster(n: usize) -> (Vec<Worker>, RouterServer) {
+fn spawn_cluster_with(
+    n: usize,
+    tune: impl Fn(&mut RouterConfig),
+) -> (Vec<Worker>, RouterServer) {
     let workers: Vec<Worker> = (0..n).map(|_| spawn_worker()).collect();
     let mut cfg = RouterConfig::default();
     cfg.nodes = workers.iter().map(|w| w.addr.clone()).collect();
     cfg.connect_timeout_ms = 500;
     cfg.request_timeout_ms = 10_000;
     cfg.retries = 2;
+    tune(&mut cfg);
     let router = Router::new(cfg).expect("router");
     let router_server =
         RouterServer::start(router, "127.0.0.1", 0).expect("router server");
     (workers, router_server)
+}
+
+fn spawn_cluster(n: usize) -> (Vec<Worker>, RouterServer) {
+    spawn_cluster_with(n, |_| {})
 }
 
 /// Model names such that every node owns at least `per_node` of them.
@@ -92,6 +111,37 @@ fn names_covering(table: &NodeTable, per_node: usize) -> Vec<String> {
 
 fn stat_usize(stats: &Value, path: [&str; 2]) -> Option<usize> {
     stats.get(path[0]).and_then(|v| v.get(path[1])).and_then(Value::as_usize)
+}
+
+/// Poll `cond` every 20ms until it holds or `timeout_ms` elapses.
+fn wait_until(timeout_ms: u64, mut cond: impl FnMut() -> bool) -> bool {
+    let deadline = Instant::now() + Duration::from_millis(timeout_ms);
+    loop {
+        if cond() {
+            return true;
+        }
+        if Instant::now() >= deadline {
+            return false;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+/// Residency must match the top-2 rendezvous owners exactly: on both of
+/// them, on nobody else.
+fn assert_replicated(table: &NodeTable, workers: &[Worker], name: &str) {
+    let owners: Vec<String> =
+        table.top_owners(name).iter().map(|s| s.to_string()).collect();
+    assert_eq!(owners.len(), 2.min(table.len()), "{name}: owner set size");
+    for worker in workers {
+        let resident = worker.server.coordinator().handle(name).is_some();
+        assert_eq!(
+            resident,
+            owners.contains(&worker.addr),
+            "{name}: wrong residency on {}",
+            worker.addr
+        );
+    }
 }
 
 #[test]
@@ -136,29 +186,29 @@ fn cluster_replies_are_bitwise_equal_to_a_single_node_oracle() {
         let local_g = oracle.grad(&oracle_handle, queries).expect("oracle grad");
         assert_eq!(routed_g.values, local_g.values, "{name}: grad bits drifted");
 
-        // Placement: exactly the rendezvous owner holds the model.
-        let owner = table.owner(name).expect("owner");
-        for worker in &workers {
-            let resident = worker.server.coordinator().handle(name).is_some();
-            assert_eq!(
-                resident,
-                worker.addr == owner,
-                "{name}: wrong residency on {}",
-                worker.addr
-            );
-        }
+        // Placement: exactly the top-2 rendezvous owners hold the model.
+        assert_replicated(&table, &workers, name);
     }
 
-    // `models` fans out to the union of all three nodes.
+    // `models` fans out to the union (replication must not duplicate names).
     let mut expected = names.clone();
     expected.sort();
     assert_eq!(client.models().expect("models"), expected);
 
-    // `stats` aggregates one document over the fleet.
+    // `stats` aggregates one document over the fleet.  `totals.models`
+    // counts residencies, so top-2 replication doubles it.
     let stats = client.stats().expect("stats");
     assert_eq!(stat_usize(&stats, ["router", "nodes"]), Some(3));
+    assert_eq!(stat_usize(&stats, ["router", "known_nodes"]), Some(3));
     assert_eq!(stat_usize(&stats, ["router", "reachable"]), Some(3));
-    assert_eq!(stat_usize(&stats, ["totals", "models"]), Some(names.len()));
+    assert_eq!(stat_usize(&stats, ["totals", "models"]), Some(2 * names.len()));
+    assert_eq!(
+        stat_usize(&stats, ["router", "journaled_models"]),
+        Some(names.len())
+    );
+    let digest = stat_usize(&stats, ["router", "digest"]).expect("digest");
+    assert_eq!(digest as u64, table.digest());
+    assert!(digest >= 1, "digest 0 is the unset wire sentinel");
     let per_node = stats
         .get("nodes")
         .and_then(Value::as_object)
@@ -173,107 +223,264 @@ fn cluster_replies_are_bitwise_equal_to_a_single_node_oracle() {
         );
     }
 
-    // Routed deletes land on the owner too.
+    // Routed deletes clear every replica (the second delete is a no-op),
+    // and the journal forgets the model so it cannot be resurrected by a
+    // later rebalance.
     assert!(client.delete(&names[0]).expect("routed delete"));
+    for worker in &workers {
+        assert!(
+            worker.server.coordinator().handle(&names[0]).is_none(),
+            "{}: replica survived delete",
+            worker.addr
+        );
+    }
     assert!(!client.delete(&names[0]).expect("second delete is a no-op"));
+    let stats = client.stats().expect("stats after delete");
+    assert_eq!(
+        stat_usize(&stats, ["router", "journaled_models"]),
+        Some(names.len() - 1)
+    );
 }
 
 #[test]
-fn worker_death_is_typed_failover_then_reroutes_after_table_update() {
-    let (mut workers, router_server) = spawn_cluster(3);
+fn primary_death_fails_over_to_the_replica_bitwise() {
+    // Health loop OFF: this test isolates read failover — the table never
+    // changes, no membership call is made, and reads still lose nothing.
+    let (mut workers, router_server) = spawn_cluster_with(3, |cfg| {
+        cfg.connect_timeout_ms = 200;
+        cfg.retries = 1;
+    });
     let table = router_server.router().table();
-    let names = names_covering(&table, 2);
-    let d = 1usize;
-    let mix = by_dim(d);
-    let mut rng = Pcg64::seeded(7);
+    let names = names_covering(&table, 1);
 
+    let oracle = Coordinator::start(native_config()).expect("oracle coordinator");
     let mut client = Client::connect(router_server.local_addr()).expect("connect");
-    let mut train_sets: HashMap<String, Vec<f32>> = HashMap::new();
+
+    let d = 2usize;
+    let mix = by_dim(d);
+    let mut rng = Pcg64::seeded(21);
+    let mut handles: HashMap<String, ModelHandle> = HashMap::new();
     for name in &names {
         let train = mix.sample(64, &mut rng);
         client
             .fit(name, train.clone(), &FitSpec::new(EstimatorKind::Kde, d))
-            .expect("fit");
-        train_sets.insert(name.clone(), train);
+            .expect("routed fit");
+        let handle = oracle
+            .fit(name, train, &FitSpec::new(EstimatorKind::Kde, d))
+            .expect("oracle fit");
+        handles.insert(name.clone(), handle);
+        assert_replicated(&table, &workers, name);
     }
     let queries = mix.sample(4, &mut rng);
-    for name in &names {
-        client.eval(name, d, queries.clone()).expect("pre-kill eval");
-    }
 
-    // Unplug the worker owning names[0], mid-stream: the router still
+    // Unplug the primary owner of names[0] mid-stream: the router still
     // holds pooled connections to it, and the client keeps querying.
     let victim_addr = table.owner(&names[0]).expect("owner").to_string();
     let victim_idx =
         workers.iter().position(|w| w.addr == victim_addr).expect("victim");
     drop(workers.remove(victim_idx));
 
-    // Dead node: typed unavailable (bounded retries burned). Live nodes:
-    // still serving, bit-identical to before the failure.
+    // Every read still answers — models whose primary died are served
+    // from the replica — and every answer is bitwise the oracle's.
     for name in &names {
-        let owner = table.owner(name).expect("owner");
-        let result = client.eval(name, d, queries.clone());
-        if owner == victim_addr {
-            let err = format!("{:#}", result.expect_err("dead owner must fail"));
-            assert!(err.contains("unavailable"), "{err}");
-            assert!(err.contains(&victim_addr), "{err}");
-        } else {
-            result.expect("survivor must keep serving through the failure");
-        }
+        let routed = client.eval(name, d, queries.clone()).expect("failover eval");
+        let local = oracle
+            .eval(&handles[name], queries.clone())
+            .expect("oracle eval");
+        assert_eq!(routed.values, local.values, "{name}: failover bits drifted");
     }
 
-    // Operator failover: drop the dead node from the table.  Epoch bumps;
-    // surviving keys keep their owner (minimal disruption) and keep
-    // serving — the router transparently re-enrolls pooled connections
-    // at the new epoch under its bounded retry budget.
-    assert!(router_server.router().remove_node(&victim_addr));
-    let updated = router_server.router().table();
-    assert_eq!(updated.epoch(), table.epoch() + 1);
-    assert_eq!(updated.len(), 2);
+    // The degradation is typed and visible, not silent: the table is
+    // untouched (health loop off), the dead node is unreachable, and the
+    // router counted at least one replica-served read.
+    let stats = client.stats().expect("stats");
+    assert_eq!(stat_usize(&stats, ["router", "nodes"]), Some(3));
+    assert_eq!(stat_usize(&stats, ["router", "reachable"]), Some(2));
+    assert!(
+        stat_usize(&stats, ["router", "degraded_reads"]).unwrap_or(0) >= 1,
+        "replica reads must be counted as degraded"
+    );
+}
+
+#[test]
+fn health_loop_heals_the_fleet_with_no_operator_calls() {
+    // The ISSUE 7 acceptance test: kill a worker → the health loop
+    // detects it and bumps the epoch → reads fail over bitwise-equal to
+    // the oracle → a worker restarted on the same address is re-enrolled
+    // and re-fit via journal replay.  Zero manual remove_node/add_node.
+    let (mut workers, router_server) = spawn_cluster_with(3, |cfg| {
+        cfg.connect_timeout_ms = 100;
+        cfg.request_timeout_ms = 5_000;
+        cfg.retries = 1;
+        cfg.health_interval_ms = 50;
+        cfg.health_failures = 2;
+    });
+    let table = router_server.router().table();
+    let names = names_covering(&table, 1);
+    let epoch0 = table.epoch();
+
+    let oracle = Coordinator::start(native_config()).expect("oracle coordinator");
+    let mut client = Client::connect(router_server.local_addr()).expect("connect");
+
+    let d = 1usize;
+    let mix = by_dim(d);
+    let mut rng = Pcg64::seeded(77);
+    let mut handles: HashMap<String, ModelHandle> = HashMap::new();
     for name in &names {
-        if table.owner(name).expect("owner") != victim_addr {
-            assert_eq!(updated.owner(name), table.owner(name), "{name} moved");
-            client.eval(name, d, queries.clone()).expect("survivor after update");
-        }
+        let train = mix.sample(64, &mut rng);
+        client
+            .fit(name, train.clone(), &FitSpec::new(EstimatorKind::Kde, d))
+            .expect("routed fit");
+        let handle = oracle
+            .fit(name, train, &FitSpec::new(EstimatorKind::Kde, d))
+            .expect("oracle fit");
+        handles.insert(name.clone(), handle);
+    }
+    let queries = mix.sample(4, &mut rng);
+
+    let victim_addr = table.owner(&names[0]).expect("owner").to_string();
+    let victim_port: u16 = victim_addr
+        .rsplit(':')
+        .next()
+        .expect("addr has a port")
+        .parse()
+        .expect("port parses");
+    let victim_idx =
+        workers.iter().position(|w| w.addr == victim_addr).expect("victim");
+    drop(workers.remove(victim_idx));
+
+    // The health loop must notice on its own and remove the dead worker.
+    assert!(
+        wait_until(15_000, || router_server.router().epoch() > epoch0),
+        "health loop never removed the dead worker"
+    );
+    let shrunk = router_server.router().table();
+    assert_eq!(shrunk.len(), 2);
+    assert!(
+        !shrunk.nodes().contains(&victim_addr),
+        "dead worker still in the table"
+    );
+
+    // After auto-removal every model still answers, bitwise-equal to the
+    // oracle: models the victim owned were already replicated, and the
+    // removal rebalance re-replicated them onto the promoted owner.
+    for name in &names {
+        let routed =
+            client.eval(name, d, queries.clone()).expect("post-removal eval");
+        let local = oracle
+            .eval(&handles[name], queries.clone())
+            .expect("oracle eval");
+        assert_eq!(routed.values, local.values, "{name}: healed bits drifted");
     }
 
-    // Orphaned keys: re-fit through the router, which now lands them on a
-    // survivor; queries follow successfully.
+    // Restart a worker on the dead node's address (the std listener sets
+    // SO_REUSEADDR, so the port rebinds despite lingering TIME_WAITs).
+    let coordinator =
+        Coordinator::start(native_config()).expect("restarted coordinator");
+    let revived = Server::start(coordinator, "127.0.0.1", victim_port)
+        .expect("rebind the victim address");
+    assert_eq!(revived.local_addr().to_string(), victim_addr);
+
+    // The health loop must re-enroll it — again, no operator call — and
+    // the rebalance must replay the journal onto the re-entrant owner.
+    assert!(
+        wait_until(15_000, || {
+            router_server.router().table().nodes().contains(&victim_addr)
+        }),
+        "health loop never restored the revived worker"
+    );
+    assert!(
+        wait_until(15_000, || {
+            revived.coordinator().handle(&names[0]).is_some()
+        }),
+        "journal replay never re-fit the revived worker"
+    );
+
+    // The revived worker serves the replayed model bitwise like the
+    // oracle (the journal holds the original fit frame, and fits are
+    // deterministic).
     for name in &names {
-        if table.owner(name).expect("owner") == victim_addr {
-            let new_owner = updated.owner(name).expect("new owner").to_string();
-            assert_ne!(new_owner, victim_addr);
-            client
-                .fit(
-                    name,
-                    train_sets[name].clone(),
-                    &FitSpec::new(EstimatorKind::Kde, d),
-                )
-                .expect("re-fit after failover");
-            client.eval(name, d, queries.clone()).expect("re-routed eval");
-            let holder = workers.iter().find(|w| w.addr == new_owner).expect("holder");
-            assert!(
-                holder.server.coordinator().handle(name).is_some(),
-                "{name} did not land on its new owner"
-            );
-        }
+        let routed =
+            client.eval(name, d, queries.clone()).expect("post-restore eval");
+        let local = oracle
+            .eval(&handles[name], queries.clone())
+            .expect("oracle eval");
+        assert_eq!(routed.values, local.values, "{name}: restored bits drifted");
     }
 
-    // Every surviving worker served post-update traffic, so every one of
-    // them must have been re-enrolled at the new epoch.
-    for worker in &workers {
-        assert_eq!(
-            worker.server.coordinator().routing_epoch(),
-            updated.epoch(),
-            "{} was not re-enrolled",
-            worker.addr
+    let stats = client.stats().expect("stats");
+    assert_eq!(stat_usize(&stats, ["router", "nodes"]), Some(3));
+    assert!(stat_usize(&stats, ["router", "health_removed"]).unwrap_or(0) >= 1);
+    assert!(stat_usize(&stats, ["router", "health_restored"]).unwrap_or(0) >= 1);
+    assert!(stat_usize(&stats, ["router", "replayed_fits"]).unwrap_or(0) >= 1);
+    // Enrollment followed the healed table: the revived worker carries
+    // the router's current stamp, not the pre-failure one.
+    assert_eq!(
+        revived.coordinator().routing_epoch(),
+        router_server.router().epoch(),
+        "revived worker was not re-enrolled at the healed epoch"
+    );
+}
+
+#[test]
+fn routed_approx_budgets_survive_restamping_and_count_on_the_owner() {
+    let (workers, router_server) = spawn_cluster(3);
+    let table = router_server.router().table();
+    let oracle = Coordinator::start(native_config()).expect("oracle coordinator");
+    let mut client = Client::connect(router_server.local_addr()).expect("connect");
+
+    let d = 3usize;
+    let mix = by_dim(d);
+    let mut rng = Pcg64::seeded(33);
+    let name = "approx-model";
+    let train = mix.sample(512, &mut rng);
+    client
+        .fit(name, train.clone(), &FitSpec::new(EstimatorKind::Kde, d))
+        .expect("routed fit");
+    let handle = oracle
+        .fit(name, train, &FitSpec::new(EstimatorKind::Kde, d))
+        .expect("oracle fit");
+    let y = mix.sample(16, &mut rng);
+
+    // `forward()` rewrites the frame's epoch/digest stamp in place; the
+    // budget fields must ride through untouched, so the routed reply is
+    // bitwise the single-node approx answer for the same (rel_err, seed).
+    let budget = Budget::approx(0.2, Some(7)).expect("valid budget");
+    let routed = client
+        .query(name, d, QuerySpec::density(y.clone()).with_budget(budget))
+        .expect("routed approx query");
+    let local = oracle
+        .query(&handle, QuerySpec::density(y.clone()).with_budget(budget))
+        .expect("oracle approx query");
+    assert_eq!(routed.values, local.values, "approx bits drifted in routing");
+
+    // ... and the answers honor the budget against the exact oracle.
+    let exact = oracle.eval(&handle, y).expect("exact oracle eval");
+    for (i, (&a, &e)) in routed.values.iter().zip(&exact.values).enumerate() {
+        let (a, e) = (f64::from(a), f64::from(e));
+        let rel = (a - e).abs() / e.abs().max(1e-30);
+        assert!(
+            rel <= 0.2 + 1e-3,
+            "row {i}: routed approx {a} vs exact {e} (rel {rel:.3e})"
         );
     }
 
-    // The aggregated stats document reflects the shrunken fleet.
-    let stats = client.stats().expect("stats");
-    assert_eq!(stat_usize(&stats, ["router", "nodes"]), Some(2));
-    assert_eq!(stat_usize(&stats, ["router", "reachable"]), Some(2));
+    // The budgeted query executed on the owning worker — and only there
+    // (reads never touch the replica while the primary is healthy).
+    let owner = table.owner(name).expect("owner").to_string();
+    for worker in &workers {
+        let stats = worker.server.coordinator().stats_json();
+        let served = stat_usize(&stats, ["engine", "approx_queries"]).unwrap_or(0);
+        if worker.addr == owner {
+            assert!(served >= 1, "owning worker served no approx queries");
+        } else {
+            assert_eq!(
+                served, 0,
+                "{}: approx query leaked off the owner",
+                worker.addr
+            );
+        }
+    }
 }
 
 #[test]
@@ -294,7 +501,7 @@ fn router_rejects_stale_routers_after_a_table_update() {
     let make_router = |nodes: Vec<String>| {
         let mut cfg = RouterConfig::default();
         cfg.nodes = nodes;
-        cfg.connect_timeout_ms = 500;
+        cfg.connect_timeout_ms = 200;
         cfg.request_timeout_ms = 5_000;
         cfg.retries = 1;
         Router::new(cfg).expect("router")
@@ -312,16 +519,18 @@ fn router_rejects_stale_routers_after_a_table_update() {
         .into_iter()
         .find(|n| router_a.table().owner(n) == Some(worker.addr.as_str()))
         .expect("some key owned by the live worker");
-    let fit_line = flash_sdkde::coordinator::protocol::Request::Fit {
+    let fit_line = Request::Fit {
         model: name.clone(),
         spec: FitSpec::new(EstimatorKind::Kde, d),
         points: mix.sample(32, &mut rng),
         epoch: None,
+        digest: None,
     };
 
-    // Both routers serve at epoch 1.
+    // Both routers serve at epoch 1.  (The replica write to the dead
+    // placeholder degrades; the primary write is authoritative.)
     match router_a.handle_request(fit_line.clone()) {
-        flash_sdkde::coordinator::protocol::Response::FitOk { .. } => {}
+        Response::FitOk { .. } => {}
         other => panic!("router A fit failed: {other:?}"),
     }
     assert_eq!(worker.server.coordinator().routing_epoch(), 1);
@@ -329,7 +538,7 @@ fn router_rejects_stale_routers_after_a_table_update() {
     // A's table moves on (epoch 2) and A keeps serving...
     assert!(router_a.remove_node(&second_node));
     match router_a.handle_request(fit_line.clone()) {
-        flash_sdkde::coordinator::protocol::Response::FitOk { .. } => {}
+        Response::FitOk { .. } => {}
         other => panic!("router A post-update fit failed: {other:?}"),
     }
     assert_eq!(worker.server.coordinator().routing_epoch(), 2);
@@ -338,10 +547,98 @@ fn router_rejects_stale_routers_after_a_table_update() {
     // rejects its stamp and B reports the typed stale-table error rather
     // than retrying forever or misrouting.
     match router_b.handle_request(fit_line) {
-        flash_sdkde::coordinator::protocol::Response::Error { message } => {
+        Response::Error { message } => {
             assert!(message.contains("stale"), "{message}");
             assert!(message.contains(&worker.addr), "{message}");
         }
         other => panic!("stale router must fail typed, got {other:?}"),
+    }
+}
+
+#[test]
+fn equal_epoch_divergent_tables_are_rejected_not_misrouted() {
+    // Two independently-administered routers whose tables were built
+    // from different membership lists but sit at the SAME epoch: the
+    // epoch check alone cannot tell them apart, which before ISSUE 7
+    // meant silent misrouting.  The membership digest stamped next to
+    // the epoch must turn this into a typed, fatal divergence rejection.
+    let worker = spawn_worker();
+    let placeholder_addr = || {
+        let listener =
+            std::net::TcpListener::bind(("127.0.0.1", 0)).expect("bind");
+        let addr = listener.local_addr().expect("addr").to_string();
+        drop(listener);
+        addr
+    };
+    let p1 = placeholder_addr();
+    let p2 = placeholder_addr();
+    let make_router = |nodes: Vec<String>| {
+        let mut cfg = RouterConfig::default();
+        cfg.nodes = nodes;
+        cfg.connect_timeout_ms = 200;
+        cfg.request_timeout_ms = 5_000;
+        cfg.retries = 0;
+        Router::new(cfg).expect("router")
+    };
+    let router_a = make_router(vec![worker.addr.clone(), p1]);
+    let router_b = make_router(vec![worker.addr.clone(), p2]);
+    assert_eq!(router_a.epoch(), router_b.epoch(), "both fleets start at 1");
+    assert_ne!(
+        router_a.table().digest(),
+        router_b.table().digest(),
+        "different membership must yield different digests"
+    );
+
+    let d = 1usize;
+    let mix = by_dim(d);
+    let mut rng = Pcg64::seeded(13);
+    // A key primary-owned by the live worker under BOTH tables, so both
+    // routers would forward it to the same node.
+    let name = (0..10_000)
+        .map(|i| format!("model-{i}"))
+        .find(|n| {
+            router_a.table().owner(n) == Some(worker.addr.as_str())
+                && router_b.table().owner(n) == Some(worker.addr.as_str())
+        })
+        .expect("a key the live worker owns in both tables");
+
+    // Router A enrolls the worker with its (epoch, digest) stamp.
+    let fit = Request::Fit {
+        model: name.clone(),
+        spec: FitSpec::new(EstimatorKind::Kde, d),
+        points: mix.sample(32, &mut rng),
+        epoch: None,
+        digest: None,
+    };
+    match router_a.handle_request(fit) {
+        Response::FitOk { .. } => {}
+        other => panic!("router A fit failed: {other:?}"),
+    }
+
+    // Router B shares the epoch but not the lineage: the worker rejects
+    // its digest, and B surfaces the typed divergence error.  It must
+    // not serve as if the tables agreed, and it must not "win" by
+    // re-enrolling past A's stamp — that would just ping-pong the two
+    // fleets through each other.
+    let query = Request::Query {
+        model: name.clone(),
+        d,
+        spec: QuerySpec::density(mix.sample(2, &mut rng)),
+        epoch: None,
+        digest: None,
+    };
+    match router_b.handle_request(query.clone()) {
+        Response::Error { message } => {
+            assert!(message.contains("diverged"), "{message}");
+            assert!(message.contains("no lineage"), "{message}");
+            assert!(message.contains(&worker.addr), "{message}");
+        }
+        other => panic!("diverged router must fail typed, got {other:?}"),
+    }
+
+    // The worker's enrollment is untouched: router A keeps serving.
+    match router_a.handle_request(query) {
+        Response::QueryOk { .. } => {}
+        other => panic!("router A must keep serving, got {other:?}"),
     }
 }

@@ -149,7 +149,7 @@ fn coordinator_serves_budgets_and_keeps_exact_bitwise() {
         );
     }
     assert!(engine_counter(&coord, "approx_queries") >= 1);
-    assert_eq!(engine_counter(&coord, "exact_fallbacks"), 0);
+    assert_eq!(engine_counter(&coord, "unsupported_mode"), 0);
 
     // Same budget + seed => bitwise-identical answers, repeatably.
     let approx2 = coord
@@ -165,8 +165,11 @@ fn coordinator_serves_budgets_and_keeps_exact_bitwise() {
         .values;
     assert_eq!(exact1, exact2, "exact replies must stay bitwise identical");
 
-    // Non-density kernels decline the budget: the counted fallback serves
-    // exactly what the plain exact query serves.
+    // Non-density kernels have no approximate estimator: the counted
+    // unsupported-mode fallback serves exactly what the plain exact
+    // query serves (the native backend *recognises* the budget but the
+    // grad pipeline can't honor it — distinct from `engine.declined`,
+    // which counts backends with no approximate path at all).
     let grad_exact = coord
         .query(&handle, QuerySpec::grad(y.clone()))
         .expect("grad exact")
@@ -176,7 +179,10 @@ fn coordinator_serves_budgets_and_keeps_exact_bitwise() {
         .expect("grad with budget")
         .values;
     assert_eq!(grad_exact, grad_budgeted, "fallback must serve the exact result");
-    assert!(engine_counter(&coord, "exact_fallbacks") >= 1);
+    assert!(engine_counter(&coord, "unsupported_mode") >= 1);
+    // The native backend *supported* the density mode, so nothing was
+    // declined outright.
+    assert_eq!(engine_counter(&coord, "declined"), 0);
 }
 
 #[test]

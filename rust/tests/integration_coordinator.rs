@@ -385,6 +385,7 @@ fn pipelined_wire_queries_reply_in_order() {
                 d,
                 spec: QuerySpec::density(points.clone()),
                 epoch: None,
+                digest: None,
             })
             .expect("submit");
     }

@@ -403,8 +403,13 @@ fn prop_protocol_request_round_trip() {
         let d = 1 + rng.below(8) as usize;
         let k = 1 + rng.below(6) as usize;
         // Model-addressed frames optionally carry a routing-epoch stamp
-        // (multi-node serving); it must round-trip bit-for-bit too.
+        // and a table-digest stamp (multi-node serving); both must
+        // round-trip bit-for-bit too.
         let epoch = match rng.below(3) {
+            0 => None,
+            _ => Some(1 + rng.below(1 << 20)),
+        };
+        let digest = match rng.below(3) {
             0 => None,
             _ => Some(1 + rng.below(1 << 20)),
         };
@@ -415,6 +420,7 @@ fn prop_protocol_request_round_trip() {
             3 => Request::Delete {
                 model: format!("m{}", rng.below(100)),
                 epoch,
+                digest,
             },
             4 | 5 => {
                 let kind = EstimatorKind::ALL[rng.below(3) as usize];
@@ -433,9 +439,13 @@ fn prop_protocol_request_round_trip() {
                     spec,
                     points: gen_points(rng, k * d),
                     epoch,
+                    digest,
                 }
             }
-            6 => Request::SetEpoch { epoch: 1 + rng.below(1 << 20) },
+            6 => Request::SetEpoch {
+                epoch: 1 + rng.below(1 << 20),
+                digest,
+            },
             _ => Request::Query {
                 model: format!("q{}", rng.below(10)),
                 d,
@@ -444,6 +454,7 @@ fn prop_protocol_request_round_trip() {
                     OutputMode::ALL[rng.below(3) as usize],
                 ),
                 epoch,
+                digest,
             },
         };
         let line = req.to_line();
