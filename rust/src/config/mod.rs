@@ -53,6 +53,45 @@ pub struct Config {
     /// (wire `rel_err` / [`QuerySpec`](crate::coordinator::QuerySpec)),
     /// so this is a client-side convenience knob, not server state.
     pub approx_rel_err: Option<f64>,
+    /// Registry lock-domain count (power of two, `<= registry_capacity`).
+    /// The default 1 keeps the historical single-shard global-LRU
+    /// eviction order bitwise; higher values split the map and LRU clock
+    /// so concurrent multi-tenant fits stop serializing on one lock
+    /// (DESIGN.md §16).
+    pub registry_shards: usize,
+    /// Per-tenant admission quotas and fair-queueing weights, sorted by
+    /// tenant name.  Tenants absent from this table are admitted without
+    /// quotas at weight 1; requests that name no tenant run as
+    /// `"default"`.
+    pub tenants: Vec<(String, TenantQuota)>,
+}
+
+/// Per-tenant admission quotas and scheduling weight (DESIGN.md §16).
+///
+/// In the JSON config this is one entry in the `tenants` object:
+///
+/// ```json
+/// {"tenants": {"alpha": {"max_models": 4, "max_inflight": 8, "weight": 3}}}
+/// ```
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TenantQuota {
+    /// Maximum resident fitted models; `None` = unlimited.  A fit that
+    /// would exceed it is rejected with a typed over-quota error
+    /// (re-fitting an already-resident name never counts against it).
+    pub max_models: Option<usize>,
+    /// Maximum in-flight queries (admitted but not yet replied);
+    /// `None` = unlimited.  Excess queries are rejected typed, never
+    /// queued.
+    pub max_inflight: Option<usize>,
+    /// Deficit-round-robin weight (`>= 1`): relative share of scheduler
+    /// drains under contention.  Idle tenants' shares redistribute.
+    pub weight: usize,
+}
+
+impl Default for TenantQuota {
+    fn default() -> Self {
+        TenantQuota { max_models: None, max_inflight: None, weight: 1 }
+    }
 }
 
 impl Default for Config {
@@ -71,6 +110,8 @@ impl Default for Config {
             warm_dims: vec![],
             tuning_path: None,
             approx_rel_err: None,
+            registry_shards: 1,
+            tenants: Vec::new(),
         }
     }
 }
@@ -95,7 +136,7 @@ impl Config {
             "artifacts_dir", "backend", "host", "port", "queue_depth",
             "batch_wait_ms", "batch_max_queries", "default_variant",
             "registry_capacity", "engine_workers", "warm_dims", "tuning",
-            "approx_rel_err",
+            "approx_rel_err", "registry_shards", "tenants",
         ];
         for key in obj.keys() {
             if !known.contains(&key.as_str()) {
@@ -161,8 +202,55 @@ impl Config {
             cfg.approx_rel_err =
                 Some(x.as_f64().ok_or("approx_rel_err must be a number")?);
         }
+        if let Some(x) = obj.get("registry_shards") {
+            cfg.registry_shards =
+                x.as_usize().ok_or("registry_shards must be an integer")?;
+        }
+        if let Some(x) = obj.get("tenants") {
+            let table = x.as_object().ok_or(
+                "tenants must be an object mapping tenant name to a quota object",
+            )?;
+            let mut tenants = Vec::new();
+            // BTreeMap iteration keeps `tenants` sorted by name.
+            for (name, q) in table {
+                let qo = q.as_object().ok_or_else(|| {
+                    format!("tenant {name:?} quota must be an object")
+                })?;
+                let inner_known = ["max_models", "max_inflight", "weight"];
+                for key in qo.keys() {
+                    if !inner_known.contains(&key.as_str()) {
+                        return Err(format!(
+                            "unknown quota key {key:?} for tenant {name:?}"
+                        ));
+                    }
+                }
+                let mut quota = TenantQuota::default();
+                if let Some(v) = qo.get("max_models") {
+                    quota.max_models = Some(v.as_usize().ok_or_else(|| {
+                        format!("tenant {name:?}: max_models must be an integer")
+                    })?);
+                }
+                if let Some(v) = qo.get("max_inflight") {
+                    quota.max_inflight = Some(v.as_usize().ok_or_else(|| {
+                        format!("tenant {name:?}: max_inflight must be an integer")
+                    })?);
+                }
+                if let Some(v) = qo.get("weight") {
+                    quota.weight = v.as_usize().ok_or_else(|| {
+                        format!("tenant {name:?}: weight must be an integer")
+                    })?;
+                }
+                tenants.push((name.clone(), quota));
+            }
+            cfg.tenants = tenants;
+        }
         cfg.validate()?;
         Ok(cfg)
+    }
+
+    /// Configured quota for `name`, if any.
+    pub fn tenant_quota(&self, name: &str) -> Option<&TenantQuota> {
+        self.tenants.iter().find(|(n, _)| n == name).map(|(_, q)| q)
     }
 
     /// Sanity constraints shared by file and CLI construction.
@@ -190,6 +278,37 @@ impl Config {
             // Same contract as Budget::approx — validated here so a bad
             // config fails at load, before any request is built.
             crate::approx::Budget::approx(e, None)?;
+        }
+        if !self.registry_shards.is_power_of_two() {
+            return Err(format!(
+                "registry_shards must be a power of two >= 1, got {}",
+                self.registry_shards
+            ));
+        }
+        if self.registry_shards > self.registry_capacity {
+            return Err(format!(
+                "registry_shards ({}) must not exceed registry_capacity ({}): \
+                 every shard needs room for at least one model",
+                self.registry_shards, self.registry_capacity
+            ));
+        }
+        for (name, quota) in &self.tenants {
+            crate::coordinator::validate_tenant(name)?;
+            if quota.weight == 0 {
+                return Err(format!("tenant {name:?}: weight must be >= 1"));
+            }
+            if quota.max_models == Some(0) {
+                return Err(format!(
+                    "tenant {name:?}: max_models must be >= 1 when set \
+                     (omit the key for unlimited)"
+                ));
+            }
+            if quota.max_inflight == Some(0) {
+                return Err(format!(
+                    "tenant {name:?}: max_inflight must be >= 1 when set \
+                     (omit the key for unlimited)"
+                ));
+            }
         }
         Ok(())
     }
@@ -231,6 +350,25 @@ impl Config {
         }
         if let Some(e) = self.approx_rel_err {
             fields.push(("approx_rel_err", Value::Number(e)));
+        }
+        fields.push(("registry_shards", Value::from(self.registry_shards)));
+        if !self.tenants.is_empty() {
+            let entries: Vec<(&str, Value)> = self
+                .tenants
+                .iter()
+                .map(|(name, q)| {
+                    let mut f = Vec::new();
+                    if let Some(m) = q.max_models {
+                        f.push(("max_models", Value::from(m)));
+                    }
+                    if let Some(m) = q.max_inflight {
+                        f.push(("max_inflight", Value::from(m)));
+                    }
+                    f.push(("weight", Value::from(q.weight)));
+                    (name.as_str(), Value::object(f))
+                })
+                .collect();
+            fields.push(("tenants", Value::object(entries)));
         }
         Value::object(fields)
     }
@@ -460,6 +598,87 @@ mod tests {
         assert_eq!(cfg, back);
         let dump = json::to_string(&Config::default().to_json());
         assert!(!dump.contains("approx_rel_err"), "{dump}");
+    }
+
+    #[test]
+    fn registry_shards_parses_and_validates() {
+        let v = json::parse(r#"{"registry_shards": 4}"#).unwrap();
+        assert_eq!(Config::from_json(&v).unwrap().registry_shards, 4);
+        assert_eq!(Config::default().registry_shards, 1);
+        // Non-power-of-two, zero, and shards > capacity are all typed errors.
+        for bad in [
+            r#"{"registry_shards": 3}"#,
+            r#"{"registry_shards": 0}"#,
+            r#"{"registry_shards": 8, "registry_capacity": 4}"#,
+            r#"{"registry_shards": "two"}"#,
+        ] {
+            let v = json::parse(bad).unwrap();
+            assert!(Config::from_json(&v).is_err(), "accepted {bad}");
+        }
+    }
+
+    #[test]
+    fn tenants_parse_sorted_with_quotas() {
+        let v = json::parse(
+            r#"{"tenants": {
+                "beta": {"weight": 3},
+                "alpha": {"max_models": 2, "max_inflight": 8}
+            }}"#,
+        )
+        .unwrap();
+        let cfg = Config::from_json(&v).unwrap();
+        assert_eq!(cfg.tenants.len(), 2);
+        // Object iteration is sorted, so "alpha" leads regardless of
+        // spelling order in the file.
+        assert_eq!(cfg.tenants[0].0, "alpha");
+        assert_eq!(
+            cfg.tenants[0].1,
+            TenantQuota { max_models: Some(2), max_inflight: Some(8), weight: 1 }
+        );
+        assert_eq!(
+            cfg.tenants[1].1,
+            TenantQuota { max_models: None, max_inflight: None, weight: 3 }
+        );
+        assert_eq!(cfg.tenant_quota("beta").unwrap().weight, 3);
+        assert!(cfg.tenant_quota("gamma").is_none());
+    }
+
+    #[test]
+    fn tenants_reject_bad_shapes_names_and_zero_quotas() {
+        for bad in [
+            r#"{"tenants": [1, 2]}"#,
+            r#"{"tenants": {"alpha": 7}}"#,
+            r#"{"tenants": {"alpha": {"max_gpus": 1}}}"#,
+            r#"{"tenants": {"bad name": {"weight": 1}}}"#,
+            r#"{"tenants": {"alpha": {"weight": 0}}}"#,
+            r#"{"tenants": {"alpha": {"max_models": 0}}}"#,
+            r#"{"tenants": {"alpha": {"max_inflight": 0}}}"#,
+            r#"{"tenants": {"alpha": {"weight": "heavy"}}}"#,
+        ] {
+            let v = json::parse(bad).unwrap();
+            assert!(Config::from_json(&v).is_err(), "accepted {bad}");
+        }
+    }
+
+    #[test]
+    fn tenants_and_shards_round_trip() {
+        let mut cfg = Config::default();
+        cfg.registry_shards = 4;
+        cfg.tenants = vec![
+            (
+                "alpha".to_string(),
+                TenantQuota { max_models: Some(2), max_inflight: None, weight: 2 },
+            ),
+            (
+                "beta".to_string(),
+                TenantQuota { max_models: None, max_inflight: Some(4), weight: 1 },
+            ),
+        ];
+        let back = Config::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(cfg, back);
+        // The default dump carries no tenants key at all.
+        let dump = json::to_string(&Config::default().to_json());
+        assert!(!dump.contains("tenants"), "{dump}");
     }
 
     #[test]

@@ -1,9 +1,13 @@
-//! Serving metrics: lock-free counters and a log-bucketed latency
-//! histogram (an HdrHistogram-lite suitable for p50/p95/p99 reporting).
+//! Serving metrics: lock-free counters, a log-bucketed latency
+//! histogram (an HdrHistogram-lite suitable for p50/p95/p99 reporting),
+//! and the per-tenant admission table (DESIGN.md §16).
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
 use std::time::Duration;
 
+use crate::config::TenantQuota;
 use crate::util::json::Value;
 
 /// Log2-bucketed latency histogram, 1µs .. ~1h range.
@@ -186,6 +190,87 @@ impl Metrics {
     }
 }
 
+/// Per-tenant admission state: lock-free counters plus the tenant's
+/// static quota/weight snapshot (from [`TenantQuota`] at construction;
+/// unconfigured tenants get quota-free weight-1 entries lazily).
+#[derive(Debug)]
+pub struct TenantStat {
+    /// Requests (fits + queries) past the quota gate.
+    pub admitted: AtomicU64,
+    /// Requests rejected typed for exceeding a quota.
+    pub rejected_quota: AtomicU64,
+    /// Queries admitted but not yet replied (the `max_inflight` gauge).
+    pub inflight: AtomicU64,
+    /// Deficit-round-robin weight (static).
+    pub weight: usize,
+    /// Resident-model quota (static; `None` = unlimited).
+    pub max_models: Option<usize>,
+    /// In-flight-query quota (static; `None` = unlimited).
+    pub max_inflight: Option<usize>,
+}
+
+impl TenantStat {
+    fn from_quota(quota: &TenantQuota) -> Self {
+        TenantStat {
+            admitted: AtomicU64::new(0),
+            rejected_quota: AtomicU64::new(0),
+            inflight: AtomicU64::new(0),
+            weight: quota.weight,
+            max_models: quota.max_models,
+            max_inflight: quota.max_inflight,
+        }
+    }
+}
+
+/// Shared tenant table: configured tenants are pre-created from the
+/// config so their quotas bind from the first request; unknown tenants
+/// get a lazy quota-free entry on first contact (they still count and
+/// schedule at weight 1).
+#[derive(Debug, Default)]
+pub struct TenantTable {
+    tenants: RwLock<HashMap<String, Arc<TenantStat>>>,
+}
+
+impl TenantTable {
+    /// Table with the configured `(name, quota)` entries pre-created.
+    pub fn new(configured: &[(String, TenantQuota)]) -> Self {
+        let map = configured
+            .iter()
+            .map(|(name, q)| (name.clone(), Arc::new(TenantStat::from_quota(q))))
+            .collect();
+        TenantTable { tenants: RwLock::new(map) }
+    }
+
+    /// The tenant's stat entry, created quota-free on first sight.
+    pub fn stat(&self, tenant: &str) -> Arc<TenantStat> {
+        if let Some(s) = self
+            .tenants
+            .read()
+            .expect("tenant table poisoned")
+            .get(tenant)
+        {
+            return Arc::clone(s);
+        }
+        let mut map = self.tenants.write().expect("tenant table poisoned");
+        Arc::clone(map.entry(tenant.to_string()).or_insert_with(|| {
+            Arc::new(TenantStat::from_quota(&TenantQuota::default()))
+        }))
+    }
+
+    /// All known tenants, sorted by name (for the stats document).
+    pub fn snapshot(&self) -> Vec<(String, Arc<TenantStat>)> {
+        let mut all: Vec<(String, Arc<TenantStat>)> = self
+            .tenants
+            .read()
+            .expect("tenant table poisoned")
+            .iter()
+            .map(|(k, v)| (k.clone(), Arc::clone(v)))
+            .collect();
+        all.sort_by(|a, b| a.0.cmp(&b.0));
+        all
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -252,6 +337,27 @@ mod tests {
             assert!(j.get(k).is_some(), "missing {k}");
         }
         assert!(j.get("e2e_latency").unwrap().get("p99_us").is_some());
+    }
+
+    #[test]
+    fn tenant_table_precreates_and_lazily_defaults() {
+        let table = TenantTable::new(&[(
+            "alpha".to_string(),
+            TenantQuota { max_models: Some(2), max_inflight: Some(4), weight: 3 },
+        )]);
+        let alpha = table.stat("alpha");
+        assert_eq!(alpha.weight, 3);
+        assert_eq!(alpha.max_models, Some(2));
+        assert_eq!(alpha.max_inflight, Some(4));
+        // Unknown tenant: lazy quota-free entry, stable across calls.
+        let zed = table.stat("zed");
+        assert_eq!(zed.weight, 1);
+        assert_eq!(zed.max_models, None);
+        Metrics::inc(&zed.admitted);
+        assert_eq!(table.stat("zed").admitted.load(Ordering::Relaxed), 1);
+        let names: Vec<String> =
+            table.snapshot().into_iter().map(|(n, _)| n).collect();
+        assert_eq!(names, vec!["alpha", "zed"]);
     }
 
     #[test]

@@ -10,10 +10,10 @@
 //!                                            ▼
 //! client ── ModelHandle ◄──────────────  resolved h, h_score, bucket
 //!
-//! client ── query(QuerySpec) ─► BoundedQueue ─► dispatcher ─► dynamic batch
-//!     ▲      (backpressure)          (same-model, same-kernel    │
-//!     │                               coalescing)                │
-//!     └──── values (density | log-density | grad) ◄── Engine ◄──┘
+//! client ── query(QuerySpec) ─► FairQueue ──► dispatcher ─► dynamic batch
+//!     ▲      (quota gate +         (per-tenant lanes, DRR drain,  │
+//!     │       backpressure)         same-model coalescing)        │
+//!     └──── values (density | log-density | grad) ◄── Engine ◄───┘
 //! ```
 //!
 //! The public surface is typed end-to-end (DESIGN.md §2): [`FitSpec`]
@@ -27,6 +27,13 @@
 //! ("prefill"); query batches are O(n·m·d) sweeps ("decode").  Fitted
 //! models live in a bounded LRU registry padded to their artifact bucket,
 //! so the query hot path does no padding or copying of training data.
+//!
+//! Multi-tenant admission (DESIGN.md §16): every request resolves to a
+//! tenant ([`DEFAULT_TENANT`] when unnamed), model lookup is
+//! tenant-scoped, per-tenant quotas (`max_models`, `max_inflight`) are
+//! enforced at admission with typed [`QuotaExceeded`] rejections, and
+//! the scheduler drains per-tenant lanes by weighted deficit
+//! round-robin.
 
 pub mod batcher;
 pub mod metrics;
@@ -37,6 +44,8 @@ pub mod router;
 pub mod scheduler;
 pub mod server;
 
+use std::collections::BTreeMap;
+use std::sync::atomic::Ordering;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -51,11 +60,14 @@ use crate::runtime::{ApproxOffer, ArtifactEntry, Engine, HostTensor, Manifest};
 use crate::util::json::Value;
 use crate::{log_debug, log_info, log_warn};
 
-use metrics::Metrics;
+use metrics::{Metrics, TenantStat, TenantTable};
 use registry::{FittedModel, Registry};
-use scheduler::{BoundedQueue, PopTimeout, PushError};
+use scheduler::{FairQueue, PopTimeout, PushError};
 
-pub use request::{FitSpec, ModelHandle, OutputMode, QueryKernel, QuerySpec};
+pub use request::{
+    validate_tenant, FitSpec, ModelHandle, OutputMode, QueryKernel, QuerySpec,
+    DEFAULT_TENANT, TENANT_SEP,
+};
 
 /// Result of a query request (any [`OutputMode`]).
 #[derive(Debug, Clone, PartialEq)]
@@ -98,6 +110,32 @@ pub struct FitInfo {
     pub fit_ms: f64,
 }
 
+/// Typed over-quota rejection (DESIGN.md §16).  `fit`/`submit` keep
+/// their `anyhow::Result` signatures, so this rides inside the error
+/// (`anyhow::Error::new`) and the wire server downcasts it into the
+/// protocol's `over_quota` response instead of a generic error string.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct QuotaExceeded {
+    /// Tenant whose quota was exceeded.
+    pub tenant: String,
+    /// Which quota was hit: `"models"` or `"inflight"`.
+    pub resource: String,
+    /// The configured limit.
+    pub limit: usize,
+}
+
+impl std::fmt::Display for QuotaExceeded {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "tenant {:?} over quota: {} limit {} reached",
+            self.tenant, self.resource, self.limit
+        )
+    }
+}
+
+impl std::error::Error for QuotaExceeded {}
+
 /// One queued query (eval or grad — same queue, same batcher).
 struct QueryJob {
     model: Arc<FittedModel>,
@@ -107,6 +145,10 @@ struct QueryJob {
     budget: Budget,
     enqueued: Instant,
     reply: Sender<Result<QueryResult, String>>,
+    /// The issuing tenant's stat entry; `inflight` was incremented at
+    /// admission and is decremented exactly once when the reply is sent
+    /// (success or failure).
+    tenant: Arc<TenantStat>,
 }
 
 /// In-flight query: returned by [`Coordinator::submit`] so clients can
@@ -137,7 +179,8 @@ pub struct Coordinator {
     engine: Engine,
     registry: Arc<Registry>,
     metrics: Arc<Metrics>,
-    queue: Arc<BoundedQueue<QueryJob>>,
+    tenants: Arc<TenantTable>,
+    queue: Arc<FairQueue<QueryJob>>,
     dispatcher: Option<JoinHandle<()>>,
     /// Routing enrollment this worker holds: `(epoch, digest)` of the
     /// router table it was last enrolled under (multi-node serving,
@@ -217,9 +260,18 @@ impl Coordinator {
     /// Boot over an existing engine (tests inject small manifests).
     pub fn with_engine(cfg: Config, engine: Engine) -> Result<Coordinator> {
         cfg.validate().map_err(|e| anyhow!(e))?;
-        let registry = Arc::new(Registry::new(cfg.registry_capacity));
+        let registry = Arc::new(Registry::with_shards(
+            cfg.registry_capacity,
+            cfg.registry_shards,
+        ));
         let metrics = Arc::new(Metrics::new());
-        let queue = Arc::new(BoundedQueue::new(cfg.queue_depth));
+        let tenants = Arc::new(TenantTable::new(&cfg.tenants));
+        let weights: Vec<(String, usize)> = cfg
+            .tenants
+            .iter()
+            .map(|(name, q)| (name.clone(), q.weight))
+            .collect();
+        let queue = Arc::new(FairQueue::new(cfg.queue_depth, &weights));
 
         // Optional startup warming: pre-compile serving buckets.
         for &d in &cfg.warm_dims {
@@ -252,6 +304,7 @@ impl Coordinator {
             engine,
             registry,
             metrics,
+            tenants,
             queue,
             dispatcher: Some(dispatcher),
             routing: Mutex::new((0, 0)),
@@ -362,6 +415,35 @@ impl Coordinator {
         if n < 2 {
             bail!("need at least 2 training points, got {n}");
         }
+        if name.contains(TENANT_SEP) {
+            bail!(
+                "model name must not contain U+001F (reserved as the \
+                 tenant separator in registry keys)"
+            );
+        }
+        let tenant = spec.resolve_tenant().to_string();
+        validate_tenant(&tenant).map_err(|e| anyhow!(e))?;
+
+        // Admission: the resident-model quota gates before any engine
+        // work.  Re-fitting an already-resident name replaces in place
+        // and never counts against the quota.  The check is racy across
+        // concurrent fits of one tenant (count-then-insert), which keeps
+        // the hot path lock-free; a tenant racing its own fits can
+        // overshoot by at most the concurrency, never starve others.
+        let tstat = self.tenants.stat(&tenant);
+        if let Some(max) = tstat.max_models {
+            let key = registry::scoped_key(&tenant, name);
+            let already_resident = self.registry.peek(&key).is_some();
+            if !already_resident && self.registry.resident_for(&tenant) >= max {
+                Metrics::inc(&tstat.rejected_quota);
+                return Err(anyhow::Error::new(QuotaExceeded {
+                    tenant,
+                    resource: "models".to_string(),
+                    limit: max,
+                }));
+            }
+        }
+        Metrics::inc(&tstat.admitted);
         let variant = spec.resolve_variant(self.cfg.default_variant);
 
         // The train bucket must exist for the eval pipeline (and the fit
@@ -465,6 +547,7 @@ impl Coordinator {
         let fit_ms = start.elapsed().as_secs_f64() * 1e3;
         let model = FittedModel {
             name: name.to_string(),
+            tenant,
             kind,
             variant,
             d,
@@ -488,11 +571,21 @@ impl Coordinator {
         Ok(ModelHandle::new(model))
     }
 
-    /// Name-based handle lookup — the wire path's entry point (bumps the
-    /// LRU stamp).  In-process callers keep the handle `fit` returned and
+    /// Name-based handle lookup for the default tenant (bumps the LRU
+    /// stamp).  In-process callers keep the handle `fit` returned and
     /// never pay this lookup on the hot path.
     pub fn handle(&self, name: &str) -> Option<ModelHandle> {
-        self.registry.get(name).map(ModelHandle::new)
+        self.handle_for(DEFAULT_TENANT, name)
+    }
+
+    /// Tenant-scoped handle lookup — the wire path's entry point (bumps
+    /// the LRU stamp).  A tenant only ever resolves its own models:
+    /// registry keys are tenant-scoped, so tenant A's `"m"` and tenant
+    /// B's `"m"` are distinct entries and neither can see the other.
+    pub fn handle_for(&self, tenant: &str, name: &str) -> Option<ModelHandle> {
+        self.registry
+            .get(&registry::scoped_key(tenant, name))
+            .map(ModelHandle::new)
     }
 
     /// Enqueue a query without waiting for the reply.  Returns a
@@ -504,7 +597,19 @@ impl Coordinator {
         spec: QuerySpec,
     ) -> Result<QueryTicket> {
         let model = Arc::clone(handle.fitted());
-        let QuerySpec { points, mode, budget } = spec;
+        let QuerySpec { points, mode, budget, tenant } = spec;
+        // A spec naming a tenant must match the model's owner — the
+        // handle was resolved tenant-scoped, so a mismatch is caller
+        // confusion, not a lookup gap.  Unset rides as the model's.
+        if let Some(t) = &tenant {
+            if t != &model.tenant {
+                Metrics::inc(&self.metrics.errors);
+                bail!(
+                    "query tenant {t:?} does not match model tenant {:?}",
+                    model.tenant
+                );
+            }
+        }
         match mode.kernel() {
             QueryKernel::Density => Metrics::inc(&self.metrics.eval_requests),
             QueryKernel::Score => Metrics::inc(&self.metrics.grad_requests),
@@ -530,16 +635,48 @@ impl Coordinator {
             Metrics::add(&self.metrics.eval_points, k as u64);
         }
 
+        // Admission: the in-flight quota.  Increment-then-check keeps the
+        // gate race-free under concurrent submits (two racers cannot both
+        // sneak under the limit); the loser decrements and rejects typed.
+        let tenant_name = model.tenant.clone();
+        let tstat = self.tenants.stat(&tenant_name);
+        let inflight_now = tstat.inflight.fetch_add(1, Ordering::Relaxed) + 1;
+        if let Some(max) = tstat.max_inflight {
+            if inflight_now > max as u64 {
+                tstat.inflight.fetch_sub(1, Ordering::Relaxed);
+                Metrics::inc(&tstat.rejected_quota);
+                Metrics::inc(&self.metrics.rejected);
+                return Err(anyhow::Error::new(QuotaExceeded {
+                    tenant: tenant_name,
+                    resource: "inflight".to_string(),
+                    limit: max,
+                }));
+            }
+        }
+        Metrics::inc(&tstat.admitted);
+
         let (reply, rx) = channel();
-        let job =
-            QueryJob { model, points, k, mode, budget, enqueued: Instant::now(), reply };
-        match self.queue.push(job) {
+        let job = QueryJob {
+            model,
+            points,
+            k,
+            mode,
+            budget,
+            enqueued: Instant::now(),
+            reply,
+            tenant: Arc::clone(&tstat),
+        };
+        match self.queue.push(&tenant_name, job) {
             Ok(()) => {}
             Err((_, PushError::Full)) => {
+                tstat.inflight.fetch_sub(1, Ordering::Relaxed);
                 Metrics::inc(&self.metrics.rejected);
                 bail!("server overloaded: query queue full (backpressure)");
             }
-            Err((_, PushError::Closed)) => bail!("coordinator shutting down"),
+            Err((_, PushError::Closed)) => {
+                tstat.inflight.fetch_sub(1, Ordering::Relaxed);
+                bail!("coordinator shutting down");
+            }
         }
         Ok(QueryTicket { rx, metrics: Arc::clone(&self.metrics) })
     }
@@ -569,7 +706,8 @@ impl Coordinator {
     /// resident until the last `Arc` drops — but name-based lookup
     /// stops resolving.
     pub fn delete(&self, handle: &ModelHandle) -> bool {
-        self.registry.remove_if_same(handle.name(), handle.fitted())
+        self.registry
+            .remove_if_same(&handle.fitted().registry_key(), handle.fitted())
     }
 
     /// Stats document served by `{"op":"stats"}` and the CLI.
@@ -578,6 +716,33 @@ impl Coordinator {
             .engine
             .stats()
             .unwrap_or((Default::default(), 0));
+        // Per-tenant admission counters (DESIGN.md §16): every tenant the
+        // coordinator has seen, keyed by name, sorted by the BTreeMap.
+        let mut tenants = BTreeMap::new();
+        for (name, stat) in self.tenants.snapshot() {
+            let resident = self.registry.resident_for(&name);
+            let depth = self.queue.depth(&name);
+            tenants.insert(
+                name,
+                Value::object(vec![
+                    (
+                        "admitted",
+                        Value::from(stat.admitted.load(Ordering::Relaxed)),
+                    ),
+                    (
+                        "rejected_quota",
+                        Value::from(stat.rejected_quota.load(Ordering::Relaxed)),
+                    ),
+                    (
+                        "inflight",
+                        Value::from(stat.inflight.load(Ordering::Relaxed)),
+                    ),
+                    ("resident_models", Value::from(resident)),
+                    ("queue_depth", Value::from(depth)),
+                    ("weight", Value::from(stat.weight)),
+                ]),
+            );
+        }
         Value::object(vec![
             ("metrics", self.metrics.to_json()),
             (
@@ -585,8 +750,10 @@ impl Coordinator {
                 Value::object(vec![
                     ("models", Value::from(self.registry.len())),
                     ("evictions", Value::from(self.registry.evictions())),
+                    ("shards", Value::from(self.registry.shard_count())),
                 ]),
             ),
+            ("tenants", Value::Object(tenants)),
             (
                 "engine",
                 Value::object(vec![
@@ -661,7 +828,7 @@ impl Drop for Coordinator {
 fn dispatcher_loop(
     cfg: Config,
     engine: Engine,
-    queue: Arc<BoundedQueue<QueryJob>>,
+    queue: Arc<FairQueue<QueryJob>>,
     metrics: Arc<Metrics>,
 ) {
     log_info!("dispatch", "dispatcher up (batch budget {} queries, wait {}ms)",
@@ -739,6 +906,10 @@ fn execute_batch(engine: &Engine, metrics: &Metrics, batch: Vec<QueryJob>) {
                     }
                 }
                 let queue_ms = job.enqueued.elapsed().as_secs_f64() * 1e3 - exec_ms;
+                // Release the in-flight slot BEFORE the reply: a caller
+                // that has seen its result must never still be counted
+                // against the tenant's quota.
+                job.tenant.inflight.fetch_sub(1, Ordering::Relaxed);
                 let _ = job.reply.send(Ok(QueryResult {
                     values: vals,
                     mode: job.mode,
@@ -756,6 +927,8 @@ fn execute_batch(engine: &Engine, metrics: &Metrics, batch: Vec<QueryJob>) {
             let msg = format!("batch execution failed: {e:#}");
             log_warn!("dispatch", "{msg}");
             for job in batch {
+                // Slot release before the reply, as on the Ok path.
+                job.tenant.inflight.fetch_sub(1, Ordering::Relaxed);
                 let _ = job.reply.send(Err(msg.clone()));
             }
         }

@@ -50,6 +50,19 @@
 //! tables the way it reconciles a stale epoch).  Optional and additive
 //! like `"epoch"`.
 //!
+//! **Tenant identity** (DESIGN.md §16): the model-addressed frames
+//! (`fit`, `query`, `delete`) may carry an optional `"tenant": "name"`
+//! naming the tenant the request acts for.  An absent field means the
+//! shared `"default"` tenant — every pre-tenancy sender (v1 and v2
+//! alike) keeps working unchanged — so the field is optional and
+//! additive like `"epoch"` and the protocol version stays 2.  Tenant
+//! names are validated at parse time (1..=64 chars of
+//! `[A-Za-z0-9._-]`), mirroring the in-process boundary.  Admission
+//! rejections for a tenant over its configured quota come back as the
+//! typed [`Response::OverQuota`], not a bare error string, so clients
+//! and routers can react (back off, surface to the right tenant)
+//! without string-matching.
+//!
 //! **Approx budget** (DESIGN.md §14): query frames may carry an optional
 //! `"rel_err": e` (finite, > 0) requesting approximate evaluation within
 //! that relative-error budget, plus an optional `"seed": s` pinning the
@@ -66,7 +79,7 @@ use crate::approx::Budget;
 use crate::estimator::{EstimatorKind, Variant};
 use crate::util::json::{self, Value};
 
-use super::request::{FitSpec, OutputMode, QuerySpec};
+use super::request::{validate_tenant, FitSpec, OutputMode, QuerySpec};
 use super::{FitInfo, QueryResult};
 
 /// Highest protocol version this build speaks.
@@ -128,6 +141,9 @@ pub enum Request {
     Delete {
         /// Name of the model to delete.
         model: String,
+        /// Tenant the deletion acts for (`None` means the shared
+        /// `"default"` tenant).
+        tenant: Option<String>,
         /// Routing-epoch stamp (routers only; `None` for direct clients).
         epoch: Option<u64>,
         /// Node-table digest stamp (routers only; `None` for direct
@@ -212,6 +228,19 @@ pub enum Response {
         expected: u64,
         /// The digest the offending frame carried.
         got: u64,
+    },
+    /// Typed admission rejection: the requesting tenant is over one of
+    /// its configured quotas.  Quota pressure on one tenant surfaces as
+    /// this rejection to *that tenant only*; it never degrades another
+    /// tenant's service (DESIGN.md §16).  Mirrors the in-process
+    /// `QuotaExceeded` error bit for bit.
+    OverQuota {
+        /// The tenant that hit its quota.
+        tenant: String,
+        /// Which quota was exhausted: `"models"` or `"inflight"`.
+        resource: String,
+        /// The configured limit that was reached.
+        limit: usize,
     },
     /// Any failure, as a displayable message.
     Error {
@@ -328,6 +357,23 @@ fn parse_digest(v: &Value) -> Result<Option<u64>> {
     }
 }
 
+/// Extract the optional tenant name (`None` when absent, meaning the
+/// shared `"default"` tenant).  Names are validated here with the same
+/// rules as the in-process boundary ([`validate_tenant`]), so a
+/// malformed tenant is a parse-time error, never a registry key.
+fn parse_tenant(v: &Value) -> Result<Option<String>> {
+    match v.get("tenant") {
+        None => Ok(None),
+        Some(x) => {
+            let t = x
+                .as_str()
+                .ok_or_else(|| anyhow!("'tenant' must be a string"))?;
+            validate_tenant(t).map_err(|e| anyhow!(e))?;
+            Ok(Some(t.to_string()))
+        }
+    }
+}
+
 /// Extract the optional approx-budget fields (`"rel_err"` / `"seed"`);
 /// absent fields mean [`Budget::Exact`], exactly like legacy frames.
 /// Validation runs through [`Budget::resolve`], so the wire rejects the
@@ -406,6 +452,7 @@ impl Request {
             }
             "delete" => Ok(Request::Delete {
                 model: req_model(&v)?,
+                tenant: parse_tenant(&v)?,
                 epoch: parse_epoch(&v)?,
                 digest: parse_digest(&v)?,
             }),
@@ -444,6 +491,9 @@ impl Request {
                     let variant = Variant::parse(name)
                         .ok_or_else(|| anyhow!("unknown variant {name:?}"))?;
                     spec = spec.variant(variant);
+                }
+                if let Some(t) = parse_tenant(&v)? {
+                    spec = spec.tenant(t);
                 }
                 Ok(Request::Fit {
                     model: req_model(&v)?,
@@ -485,11 +535,15 @@ impl Request {
                     bail!("points rows must be non-empty");
                 }
                 let (points, _k) = parse_points(v.get("points").unwrap(), d)?;
+                let mut spec =
+                    QuerySpec::new(points, mode).with_budget(parse_budget(&v)?);
+                if let Some(t) = parse_tenant(&v)? {
+                    spec = spec.tenant(t);
+                }
                 Ok(Request::Query {
                     model,
                     d,
-                    spec: QuerySpec::new(points, mode)
-                        .with_budget(parse_budget(&v)?),
+                    spec,
                     epoch: parse_epoch(&v)?,
                     digest: parse_digest(&v)?,
                 })
@@ -529,14 +583,16 @@ impl Request {
                 }
                 versioned(fields)
             }
-            Request::Delete { model, epoch, digest } => versioned(stamped(
-                vec![
-                    ("op", "delete".into()),
+            Request::Delete { model, tenant, epoch, digest } => {
+                let mut fields = vec![
+                    ("op", Value::from("delete")),
                     ("model", model.as_str().into()),
-                ],
-                epoch,
-                digest,
-            )),
+                ];
+                if let Some(t) = tenant {
+                    fields.push(("tenant", t.as_str().into()));
+                }
+                versioned(stamped(fields, epoch, digest))
+            }
             Request::Fit { model, spec, points, epoch, digest } => {
                 let mut fields = vec![
                     ("op", Value::from("fit")),
@@ -554,6 +610,9 @@ impl Request {
                 if let Some(variant) = spec.variant {
                     fields.push(("variant", variant.as_str().into()));
                 }
+                if let Some(t) = &spec.tenant {
+                    fields.push(("tenant", t.as_str().into()));
+                }
                 versioned(stamped(fields, epoch, digest))
             }
             Request::Query { model, d, spec, epoch, digest } => {
@@ -568,6 +627,9 @@ impl Request {
                     if let Some(s) = seed {
                         fields.push(("seed", Value::from(s)));
                     }
+                }
+                if let Some(t) = &spec.tenant {
+                    fields.push(("tenant", t.as_str().into()));
                 }
                 versioned(stamped(fields, epoch, digest))
             }
@@ -683,6 +745,28 @@ impl Response {
                     ),
                 ])
             }
+            Response::OverQuota { tenant, resource, limit } => {
+                Value::object(vec![
+                    ("ok", false.into()),
+                    ("v", Value::from(PROTOCOL_VERSION)),
+                    (
+                        "error",
+                        format!(
+                            "tenant {tenant:?} over quota: {resource} limit \
+                             {limit} reached"
+                        )
+                        .into(),
+                    ),
+                    (
+                        "over_quota",
+                        Value::object(vec![
+                            ("tenant", tenant.as_str().into()),
+                            ("resource", resource.as_str().into()),
+                            ("limit", Value::from(*limit)),
+                        ]),
+                    ),
+                ])
+            }
             Response::Error { message } => Value::object(vec![
                 ("ok", false.into()),
                 ("v", Value::from(PROTOCOL_VERSION)),
@@ -723,6 +807,22 @@ impl Response {
                     epoch: field("epoch")?,
                     expected: field("expected")?,
                     got: field("got")?,
+                });
+            }
+            if let Some(oq) = v.get("over_quota") {
+                let field = |k: &str| -> Result<String> {
+                    oq.get(k)
+                        .and_then(Value::as_str)
+                        .map(str::to_string)
+                        .ok_or_else(|| anyhow!("over_quota missing '{k}'"))
+                };
+                return Ok(Response::OverQuota {
+                    tenant: field("tenant")?,
+                    resource: field("resource")?,
+                    limit: oq
+                        .get("limit")
+                        .and_then(Value::as_usize)
+                        .ok_or_else(|| anyhow!("over_quota missing 'limit'"))?,
                 });
             }
             let message = v
@@ -991,6 +1091,7 @@ mod tests {
             },
             Request::Delete {
                 model: "m".into(),
+                tenant: None,
                 epoch: Some(1),
                 digest: Some(MAX_DIGEST),
             },
@@ -1012,6 +1113,7 @@ mod tests {
         // Unstamped frames carry no epoch/digest field at all.
         let line = Request::Delete {
             model: "m".into(),
+            tenant: None,
             epoch: None,
             digest: None,
         }
@@ -1019,6 +1121,97 @@ mod tests {
         assert!(!line.contains("epoch") && !line.contains("digest"), "{line}");
         assert_eq!(Request::parse(&line).unwrap().epoch(), None);
         assert_eq!(Request::parse(&line).unwrap().digest(), None);
+    }
+
+    #[test]
+    fn tenant_round_trips_on_model_addressed_ops() {
+        // Stamped with a tenant: the field must survive the wire on
+        // every model-addressed op.
+        let cases = vec![
+            Request::Fit {
+                model: "m".into(),
+                spec: FitSpec::new(EstimatorKind::Kde, 1).tenant("alpha"),
+                points: vec![1.0, 2.0],
+                epoch: None,
+                digest: None,
+            },
+            Request::Query {
+                model: "m".into(),
+                d: 1,
+                spec: QuerySpec::density(vec![0.5]).tenant("b-2.c_d"),
+                epoch: Some(3),
+                digest: None,
+            },
+            Request::Delete {
+                model: "m".into(),
+                tenant: Some("alpha".into()),
+                epoch: None,
+                digest: None,
+            },
+        ];
+        for req in cases {
+            let line = req.to_line();
+            assert!(line.contains("\"tenant\":"), "{line}");
+            assert_eq!(Request::parse(&line).unwrap(), req, "{line}");
+        }
+        // Untenanted frames carry no tenant field at all (the wire stays
+        // byte-identical to the pre-tenancy dialect).
+        let line = Request::Query {
+            model: "m".into(),
+            d: 1,
+            spec: QuerySpec::density(vec![0.5]),
+            epoch: None,
+            digest: None,
+        }
+        .to_line();
+        assert!(!line.contains("tenant"), "{line}");
+    }
+
+    #[test]
+    fn malformed_tenants_rejected() {
+        let long = "t".repeat(65);
+        let cases = [
+            r#"{"v":2,"op":"delete","model":"m","tenant":""}"#.to_string(),
+            r#"{"v":2,"op":"delete","model":"m","tenant":"a b"}"#.to_string(),
+            r#"{"v":2,"op":"delete","model":"m","tenant":"a/b"}"#.to_string(),
+            r#"{"v":2,"op":"delete","model":"m","tenant":7}"#.to_string(),
+            format!(r#"{{"v":2,"op":"delete","model":"m","tenant":"{long}"}}"#),
+            r#"{"v":2,"op":"query","model":"m","points":[[1]],"tenant":[1]}"#
+                .to_string(),
+            r#"{"v":2,"op":"fit","model":"m","d":1,"points":[[1],[2]],"tenant":"x!"}"#
+                .to_string(),
+        ];
+        for bad in &cases {
+            assert!(Request::parse(bad).is_err(), "accepted: {bad}");
+        }
+        // The boundary values are accepted.
+        let max_len = "t".repeat(64);
+        for ok in [
+            r#"{"v":2,"op":"delete","model":"m","tenant":"default"}"#.to_string(),
+            format!(r#"{{"v":2,"op":"delete","model":"m","tenant":"{max_len}"}}"#),
+        ] {
+            assert!(Request::parse(&ok).is_ok(), "rejected: {ok}");
+        }
+    }
+
+    #[test]
+    fn over_quota_line_is_greppable_and_typed() {
+        let line = Response::OverQuota {
+            tenant: "beta".into(),
+            resource: "inflight".into(),
+            limit: 8,
+        }
+        .to_line();
+        // CI's serve smoke greps the error text for "over quota"; pin it.
+        assert!(line.contains("over quota"), "{line}");
+        assert!(line.contains("\"ok\":false"), "{line}");
+        match Response::parse(&line).unwrap() {
+            Response::OverQuota { tenant, resource, limit } => {
+                assert_eq!((tenant.as_str(), resource.as_str(), limit),
+                           ("beta", "inflight", 8));
+            }
+            other => panic!("{other:?}"),
+        }
     }
 
     #[test]
@@ -1040,8 +1233,13 @@ mod tests {
         };
         assert_eq!(q.model_key(), Some("b"));
         assert_eq!(
-            Request::Delete { model: "c".into(), epoch: None, digest: None }
-                .model_key(),
+            Request::Delete {
+                model: "c".into(),
+                tenant: None,
+                epoch: None,
+                digest: None,
+            }
+            .model_key(),
             Some("c")
         );
         for req in [Request::Ping, Request::Models, Request::Stats,
@@ -1121,7 +1319,12 @@ mod tests {
             Request::Ping,
             Request::Models,
             Request::Stats,
-            Request::Delete { model: "x".into(), epoch: None, digest: None },
+            Request::Delete {
+                model: "x".into(),
+                tenant: None,
+                epoch: None,
+                digest: None,
+            },
         ] {
             assert_eq!(Request::parse(&req.to_line()).unwrap(), req);
         }
@@ -1191,6 +1394,11 @@ mod tests {
             Response::EpochOk { epoch: 4 },
             Response::StaleEpoch { expected: 5, got: 3 },
             Response::DigestMismatch { epoch: 5, expected: 17, got: 23 },
+            Response::OverQuota {
+                tenant: "alpha".into(),
+                resource: "models".into(),
+                limit: 4,
+            },
             Response::Error { message: "boom".into() },
         ];
         for r in cases {

@@ -4,19 +4,45 @@
 //! artifact bucket, plus bandwidths and metadata.  The registry is the
 //! serving analogue of a KV-cache manager: bounded capacity with
 //! least-recently-used eviction, shared read-mostly access.
+//!
+//! # Sharding
+//!
+//! The map is split into a power-of-two number of shards, each with its
+//! own `RwLock`, LRU clock, and eviction counter; a registry key is
+//! dispatched to `fnv1a(key) & (shards - 1)`.  Capacity divides across
+//! shards (remainder to the first `capacity % shards` shards) and LRU
+//! eviction is *per shard*: a full shard evicts its own
+//! least-recently-used entry even if another shard has room.  With one
+//! shard (the default) this degenerates to exactly the historical
+//! global-LRU registry, so single-tenant deployments keep bitwise
+//! eviction behaviour; multi-shard layouts trade strict global LRU for
+//! uncontended concurrent fits (DESIGN.md §16).
+//!
+//! # Tenancy
+//!
+//! Models carry the tenant that fitted them and are keyed by
+//! [`FittedModel::registry_key`]: the bare model name for the default
+//! tenant (wire-compatible with pre-tenant deployments), otherwise
+//! `"{tenant}\u{1f}{name}"` — the unit-separator byte cannot appear in
+//! either part, so scoped keys never collide across tenants.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 
+use crate::coordinator::request::{DEFAULT_TENANT, TENANT_SEP};
 use crate::estimator::{EstimatorKind, Variant};
 use crate::runtime::HostTensor;
 
 /// An immutable fitted model (shared via Arc; eval never copies it).
 #[derive(Debug)]
 pub struct FittedModel {
-    /// Registry name the model was fitted under.
+    /// Registry name the model was fitted under (tenant-relative; the
+    /// map key is [`FittedModel::registry_key`]).
     pub name: String,
+    /// Tenant that owns the model ([`DEFAULT_TENANT`] when the request
+    /// carried no tenant).
+    pub tenant: String,
     /// Estimator kind the model serves.
     pub kind: EstimatorKind,
     /// Artifact variant the model was fitted with and will be served with.
@@ -41,37 +67,134 @@ pub struct FittedModel {
     pub fit_ms: f64,
 }
 
+impl FittedModel {
+    /// The key this model lives under in the registry: the bare name for
+    /// the default tenant, `"{tenant}\u{1f}{name}"` otherwise.
+    pub fn registry_key(&self) -> String {
+        scoped_key(&self.tenant, &self.name)
+    }
+}
+
+/// Build the registry key for `(tenant, name)`: the bare model name for
+/// [`DEFAULT_TENANT`] (pre-tenant wire compatibility), otherwise the
+/// tenant and name joined by the unit separator, which is rejected in
+/// both tenant and model names and therefore cannot collide.
+pub fn scoped_key(tenant: &str, name: &str) -> String {
+    if tenant == DEFAULT_TENANT {
+        name.to_string()
+    } else {
+        format!("{tenant}{TENANT_SEP}{name}")
+    }
+}
+
 struct Slot {
     model: Arc<FittedModel>,
     last_used: u64,
 }
 
-/// Bounded LRU registry.
-pub struct Registry {
+/// One lock domain: a map slice with its own LRU clock and counters.
+struct Shard {
     slots: RwLock<HashMap<String, Slot>>,
     capacity: usize,
     clock: AtomicU64,
     evictions: AtomicU64,
 }
 
-impl Registry {
-    /// Empty registry holding at most `capacity` models.
-    pub fn new(capacity: usize) -> Self {
-        assert!(capacity >= 1);
-        Registry {
-            slots: RwLock::new(HashMap::new()),
-            capacity,
-            clock: AtomicU64::new(0),
-            evictions: AtomicU64::new(0),
-        }
-    }
-
+impl Shard {
     fn tick(&self) -> u64 {
         self.clock.fetch_add(1, Ordering::Relaxed)
     }
+}
 
-    /// Insert (or replace) a model; evicts the least-recently-used entry
-    /// when at capacity.  Returns the evicted model name, if any.
+/// Bounded LRU registry, sharded by key hash (see module docs).
+pub struct Registry {
+    shards: Vec<Shard>,
+    mask: usize,
+}
+
+impl Registry {
+    /// Empty single-shard registry holding at most `capacity` models —
+    /// exactly the historical global-LRU behaviour.
+    pub fn new(capacity: usize) -> Self {
+        Self::with_shards(capacity, 1)
+    }
+
+    /// Empty registry with `shards` lock domains (power of two, at most
+    /// `capacity` so every shard holds at least one model).  Capacity
+    /// divides evenly; the remainder goes to the first
+    /// `capacity % shards` shards.
+    pub fn with_shards(capacity: usize, shards: usize) -> Self {
+        assert!(capacity >= 1, "registry capacity must be >= 1");
+        assert!(
+            shards >= 1 && shards.is_power_of_two(),
+            "shard count must be a power of two, got {shards}"
+        );
+        assert!(
+            shards <= capacity,
+            "shard count {shards} exceeds capacity {capacity}"
+        );
+        let base = capacity / shards;
+        let extra = capacity % shards;
+        let shards: Vec<Shard> = (0..shards)
+            .map(|i| Shard {
+                slots: RwLock::new(HashMap::new()),
+                capacity: base + usize::from(i < extra),
+                clock: AtomicU64::new(0),
+                evictions: AtomicU64::new(0),
+            })
+            .collect();
+        let mask = shards.len() - 1;
+        Registry { shards, mask }
+    }
+
+    /// FNV-1a shard dispatch — stable across runs (no `RandomState`), so
+    /// tests and oracle replays see deterministic placement.
+    fn shard_index(&self, key: &str) -> usize {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in key.as_bytes() {
+            h ^= u64::from(*b);
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        (h as usize) & self.mask
+    }
+
+    fn shard_for(&self, key: &str) -> &Shard {
+        &self.shards[self.shard_index(key)]
+    }
+
+    /// Number of lock domains.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The shard a registry key dispatches to (for tests and stats).
+    pub fn shard_of(&self, key: &str) -> usize {
+        self.shard_index(key)
+    }
+
+    /// Capacity of shard `i`.
+    pub fn shard_capacity(&self, i: usize) -> usize {
+        self.shards[i].capacity
+    }
+
+    /// Resident models in shard `i`.
+    pub fn shard_len(&self, i: usize) -> usize {
+        self.shards[i].slots.read().expect("registry poisoned").len()
+    }
+
+    /// Capacity evictions in shard `i` since construction.
+    pub fn shard_evictions(&self, i: usize) -> u64 {
+        self.shards[i].evictions.load(Ordering::Relaxed)
+    }
+
+    /// Total capacity across shards.
+    pub fn capacity(&self) -> usize {
+        self.shards.iter().map(|s| s.capacity).sum()
+    }
+
+    /// Insert (or replace) a model; evicts the shard's least-recently-
+    /// used entry when the shard is at capacity.  Returns the evicted
+    /// model's registry key, if any.
     pub fn insert(&self, model: FittedModel) -> Option<String> {
         self.insert_arc(Arc::new(model))
     }
@@ -79,84 +202,112 @@ impl Registry {
     /// Like [`Registry::insert`], but the caller keeps a share of the
     /// `Arc` (the coordinator hands it out as a `ModelHandle`).
     pub fn insert_arc(&self, model: Arc<FittedModel>) -> Option<String> {
-        let mut slots = self.slots.write().expect("registry poisoned");
-        let name = model.name.clone();
-        let stamp = self.tick();
+        let key = model.registry_key();
+        let shard = self.shard_for(&key);
+        let mut slots = shard.slots.write().expect("registry poisoned");
+        let stamp = shard.tick();
         let mut evicted = None;
-        if !slots.contains_key(&name) && slots.len() >= self.capacity {
+        if !slots.contains_key(&key) && slots.len() >= shard.capacity {
             if let Some(victim) = slots
                 .iter()
                 .min_by_key(|(_, s)| s.last_used)
                 .map(|(k, _)| k.clone())
             {
                 slots.remove(&victim);
-                self.evictions.fetch_add(1, Ordering::Relaxed);
+                shard.evictions.fetch_add(1, Ordering::Relaxed);
                 evicted = Some(victim);
             }
         }
-        slots.insert(name, Slot { model, last_used: stamp });
+        slots.insert(key, Slot { model, last_used: stamp });
         evicted
     }
 
-    /// Fetch a model and bump its LRU stamp.
-    pub fn get(&self, name: &str) -> Option<Arc<FittedModel>> {
-        let mut slots = self.slots.write().expect("registry poisoned");
-        let stamp = self.tick();
-        slots.get_mut(name).map(|slot| {
+    /// Fetch a model by registry key and bump its LRU stamp.
+    pub fn get(&self, key: &str) -> Option<Arc<FittedModel>> {
+        let shard = self.shard_for(key);
+        let mut slots = shard.slots.write().expect("registry poisoned");
+        let stamp = shard.tick();
+        slots.get_mut(key).map(|slot| {
             slot.last_used = stamp;
             Arc::clone(&slot.model)
         })
     }
 
     /// Read-only peek without LRU side effects (used by stats).
-    pub fn peek(&self, name: &str) -> Option<Arc<FittedModel>> {
-        self.slots
+    pub fn peek(&self, key: &str) -> Option<Arc<FittedModel>> {
+        self.shard_for(key)
+            .slots
             .read()
             .expect("registry poisoned")
-            .get(name)
+            .get(key)
             .map(|s| Arc::clone(&s.model))
     }
 
-    /// Remove by name; returns whether a model was resident.
-    pub fn remove(&self, name: &str) -> bool {
-        self.slots
+    /// Remove by registry key; returns whether a model was resident.
+    pub fn remove(&self, key: &str) -> bool {
+        self.shard_for(key)
+            .slots
             .write()
             .expect("registry poisoned")
-            .remove(name)
+            .remove(key)
             .is_some()
     }
 
-    /// Remove `name` only if it still resolves to exactly `model`
+    /// Remove `key` only if it still resolves to exactly `model`
     /// (pointer identity).  This is the handle-based delete: a stale
     /// handle whose name has since been re-fitted must not evict the
     /// newer model it never referred to.
-    pub fn remove_if_same(&self, name: &str, model: &Arc<FittedModel>) -> bool {
-        let mut slots = self.slots.write().expect("registry poisoned");
-        match slots.get(name) {
+    pub fn remove_if_same(&self, key: &str, model: &Arc<FittedModel>) -> bool {
+        let shard = self.shard_for(key);
+        let mut slots = shard.slots.write().expect("registry poisoned");
+        match slots.get(key) {
             Some(slot) if Arc::ptr_eq(&slot.model, model) => {
-                slots.remove(name);
+                slots.remove(key);
                 true
             }
             _ => false,
         }
     }
 
-    /// Resident model names, sorted.
+    /// Resident registry keys across all shards, sorted.
     pub fn names(&self) -> Vec<String> {
         let mut names: Vec<String> = self
-            .slots
-            .read()
-            .expect("registry poisoned")
-            .keys()
-            .cloned()
+            .shards
+            .iter()
+            .flat_map(|shard| {
+                shard
+                    .slots
+                    .read()
+                    .expect("registry poisoned")
+                    .keys()
+                    .cloned()
+                    .collect::<Vec<_>>()
+            })
             .collect();
         names.sort();
         names
     }
 
-    /// Resident model count.
+    /// Resident models owned by `tenant` (scans all shards; admission-
+    /// path cost is one read lock per shard, fine at registry scale).
+    pub fn resident_for(&self, tenant: &str) -> usize {
+        self.shards
+            .iter()
+            .map(|shard| {
+                shard
+                    .slots
+                    .read()
+                    .expect("registry poisoned")
+                    .values()
+                    .filter(|s| s.model.tenant == tenant)
+                    .count()
+            })
+            .sum()
+    }
+
+    /// Resident model count across all shards.
     pub fn len(&self) -> usize {
-        self.slots.read().expect("registry poisoned").len()
+        self.shards.iter().map(|s| s.slots.read().expect("registry poisoned").len()).sum()
     }
 
     /// Whether no models are resident.
@@ -164,9 +315,9 @@ impl Registry {
         self.len() == 0
     }
 
-    /// Capacity evictions since construction.
+    /// Capacity evictions since construction, summed across shards.
     pub fn evictions(&self) -> u64 {
-        self.evictions.load(Ordering::Relaxed)
+        self.shards.iter().map(|s| s.evictions.load(Ordering::Relaxed)).sum()
     }
 }
 
@@ -175,8 +326,13 @@ mod tests {
     use super::*;
 
     fn model(name: &str) -> FittedModel {
+        model_for(DEFAULT_TENANT, name)
+    }
+
+    fn model_for(tenant: &str, name: &str) -> FittedModel {
         FittedModel {
             name: name.to_string(),
+            tenant: tenant.to_string(),
             kind: EstimatorKind::Kde,
             variant: Variant::Flash,
             d: 1,
@@ -256,5 +412,97 @@ mod tests {
             r.insert(model(n));
         }
         assert_eq!(r.names(), vec!["alpha", "mid", "zeta"]);
+    }
+
+    #[test]
+    fn shard_layout_splits_capacity() {
+        let r = Registry::with_shards(8, 4);
+        assert_eq!(r.shard_count(), 4);
+        for i in 0..4 {
+            assert_eq!(r.shard_capacity(i), 2);
+        }
+        // Remainder goes to the leading shards.
+        let r = Registry::with_shards(7, 4);
+        let caps: Vec<usize> = (0..4).map(|i| r.shard_capacity(i)).collect();
+        assert_eq!(caps, vec![2, 2, 2, 1]);
+        assert_eq!(r.capacity(), 7);
+    }
+
+    #[test]
+    fn shard_dispatch_is_stable_and_in_range() {
+        let r = Registry::with_shards(16, 4);
+        for name in ["a", "bb", "model-17", "tenant\u{1f}m"] {
+            let s = r.shard_of(name);
+            assert!(s < 4);
+            assert_eq!(s, r.shard_of(name), "dispatch must be stable");
+        }
+    }
+
+    #[test]
+    fn sharded_ops_work_across_shards() {
+        let r = Registry::with_shards(16, 4);
+        let names: Vec<String> = (0..16).map(|i| format!("m{i}")).collect();
+        for n in &names {
+            assert!(r.insert(model(n)).is_none());
+        }
+        assert_eq!(r.len(), 16);
+        for n in &names {
+            assert!(r.get(n).is_some(), "lost {n}");
+        }
+        let mut sorted = names.clone();
+        sorted.sort();
+        assert_eq!(r.names(), sorted);
+        for n in &names {
+            assert!(r.remove(n));
+        }
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn per_shard_evictions_sum_to_global() {
+        let r = Registry::with_shards(4, 2);
+        let total = 32;
+        for i in 0..total {
+            r.insert(model(&format!("m{i}")));
+        }
+        // Every insert beyond a shard's capacity evicted exactly one
+        // entry from that shard, so the counts reconcile globally.
+        let per_shard: u64 = (0..r.shard_count()).map(|i| r.shard_evictions(i)).sum();
+        assert_eq!(per_shard, r.evictions());
+        assert_eq!(r.evictions(), total as u64 - r.len() as u64);
+        for i in 0..r.shard_count() {
+            assert!(r.shard_len(i) <= r.shard_capacity(i));
+        }
+    }
+
+    #[test]
+    fn tenant_scoped_keys_do_not_collide() {
+        let r = Registry::new(8);
+        let a = model_for("alpha", "m");
+        let b = model_for("beta", "m");
+        let d = model_for(DEFAULT_TENANT, "m");
+        assert_ne!(a.registry_key(), b.registry_key());
+        assert_eq!(d.registry_key(), "m");
+        let (ka, kb, kd) = (a.registry_key(), b.registry_key(), d.registry_key());
+        r.insert(a);
+        r.insert(b);
+        r.insert(d);
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.peek(&ka).unwrap().tenant, "alpha");
+        assert_eq!(r.peek(&kb).unwrap().tenant, "beta");
+        assert_eq!(r.peek(&kd).unwrap().tenant, DEFAULT_TENANT);
+    }
+
+    #[test]
+    fn resident_for_counts_per_tenant() {
+        let r = Registry::with_shards(8, 2);
+        r.insert(model_for("alpha", "m1"));
+        r.insert(model_for("alpha", "m2"));
+        r.insert(model_for("beta", "m1"));
+        r.insert(model("m1"));
+        assert_eq!(r.resident_for("alpha"), 2);
+        assert_eq!(r.resident_for("beta"), 1);
+        assert_eq!(r.resident_for(DEFAULT_TENANT), 1);
+        assert_eq!(r.resident_for("gamma"), 0);
     }
 }

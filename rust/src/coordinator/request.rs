@@ -29,6 +29,39 @@ use crate::estimator::{bandwidth, EstimatorKind, Variant};
 
 use super::registry::FittedModel;
 
+/// Tenant a request resolves to when it names none — exactly the
+/// pre-tenant behaviour, so legacy clients and configs are unaffected
+/// (DESIGN.md §16).
+pub const DEFAULT_TENANT: &str = "default";
+
+/// Separator joining tenant and model name into a registry key
+/// (`"{tenant}\u{1f}{name}"`).  The unit separator can appear in
+/// neither part — tenant names are validated to `[A-Za-z0-9._-]` and
+/// fit rejects model names containing it — so scoped keys never
+/// collide across tenants, even though `/` and other punctuation are
+/// legal in model names.
+pub const TENANT_SEP: char = '\u{1f}';
+
+/// Validate a tenant name: 1..=64 ASCII characters from `[A-Za-z0-9._-]`.
+pub fn validate_tenant(tenant: &str) -> Result<(), String> {
+    if tenant.is_empty() || tenant.len() > 64 {
+        return Err(format!(
+            "tenant name must be 1..=64 characters, got {}",
+            tenant.len()
+        ));
+    }
+    if let Some(c) = tenant
+        .chars()
+        .find(|c| !c.is_ascii_alphanumeric() && !matches!(c, '.' | '_' | '-'))
+    {
+        return Err(format!(
+            "tenant name {tenant:?} contains invalid character {c:?} \
+             (allowed: letters, digits, '.', '_', '-')"
+        ));
+    }
+    Ok(())
+}
+
 /// Typed fit request: what to fit and how, minus the training data.
 ///
 /// Built fluently; unset fields resolve to the published defaults at fit
@@ -63,13 +96,16 @@ pub struct FitSpec {
     pub h_score: Option<f64>,
     /// Execution-variant override; `None` serves the config default.
     pub variant: Option<Variant>,
+    /// Tenant issuing the fit; `None` resolves to [`DEFAULT_TENANT`].
+    /// Validated by [`validate_tenant`] at admission.
+    pub tenant: Option<String>,
 }
 
 impl FitSpec {
     /// Spec with no overrides: bandwidths and variant resolve to the
     /// estimator's rules / config default at fit time.
     pub fn new(estimator: EstimatorKind, d: usize) -> FitSpec {
-        FitSpec { estimator, d, h: None, h_score: None, variant: None }
+        FitSpec { estimator, d, h: None, h_score: None, variant: None, tenant: None }
     }
 
     /// Override the evaluation bandwidth.
@@ -88,6 +124,17 @@ impl FitSpec {
     pub fn variant(mut self, variant: Variant) -> FitSpec {
         self.variant = Some(variant);
         self
+    }
+
+    /// Fit on behalf of `tenant` instead of [`DEFAULT_TENANT`].
+    pub fn tenant(mut self, tenant: impl Into<String>) -> FitSpec {
+        self.tenant = Some(tenant.into());
+        self
+    }
+
+    /// The tenant this fit runs as ([`DEFAULT_TENANT`] when unset).
+    pub fn resolve_tenant(&self) -> &str {
+        self.tenant.as_deref().unwrap_or(DEFAULT_TENANT)
     }
 
     /// Resolve the evaluation bandwidth against training data: the
@@ -213,12 +260,16 @@ pub struct QuerySpec {
     /// relative-error bound (density kernels only — gradient queries
     /// fall back to exact; DESIGN.md §14).
     pub budget: Budget,
+    /// Tenant issuing the query; `None` resolves to [`DEFAULT_TENANT`].
+    /// Model lookup is tenant-scoped, so a query only sees its own
+    /// tenant's models.
+    pub tenant: Option<String>,
 }
 
 impl QuerySpec {
     /// Query with an explicit mode (and the default [`Budget::Exact`]).
     pub fn new(points: Vec<f32>, mode: OutputMode) -> QuerySpec {
-        QuerySpec { points, mode, budget: Budget::Exact }
+        QuerySpec { points, mode, budget: Budget::Exact, tenant: None }
     }
 
     /// Density query (`p̂(y)` per row).
@@ -242,6 +293,17 @@ impl QuerySpec {
         self.budget = budget;
         self
     }
+
+    /// Query on behalf of `tenant` instead of [`DEFAULT_TENANT`].
+    pub fn tenant(mut self, tenant: impl Into<String>) -> QuerySpec {
+        self.tenant = Some(tenant.into());
+        self
+    }
+
+    /// The tenant this query runs as ([`DEFAULT_TENANT`] when unset).
+    pub fn resolve_tenant(&self) -> &str {
+        self.tenant.as_deref().unwrap_or(DEFAULT_TENANT)
+    }
 }
 
 /// Handle to a fitted model: resolved fit parameters plus an `Arc` of the
@@ -262,9 +324,14 @@ impl ModelHandle {
         &self.model
     }
 
-    /// The registry name the model was fitted under.
+    /// The registry name the model was fitted under (tenant-relative).
     pub fn name(&self) -> &str {
         &self.model.name
+    }
+
+    /// The tenant that owns the model.
+    pub fn tenant(&self) -> &str {
+        &self.model.tenant
     }
 
     /// Estimator kind this model serves.
@@ -333,6 +400,8 @@ mod tests {
         assert_eq!(spec.h, None);
         assert_eq!(spec.h_score, None);
         assert_eq!(spec.variant, None);
+        assert_eq!(spec.tenant, None);
+        assert_eq!(spec.resolve_tenant(), DEFAULT_TENANT);
 
         let spec = spec.bandwidth(0.5).score_bandwidth(0.35).variant(Variant::Gemm);
         assert_eq!(spec.h, Some(0.5));
@@ -412,5 +481,30 @@ mod tests {
         let b = Budget::approx(0.25, Some(9)).expect("valid");
         let spec = QuerySpec::density(pts).with_budget(b);
         assert_eq!(spec.budget, Budget::Approx { rel_err: 0.25, seed: Some(9) });
+    }
+
+    #[test]
+    fn tenant_builder_and_resolution() {
+        let fit = FitSpec::new(EstimatorKind::Kde, 2).tenant("alpha");
+        assert_eq!(fit.tenant.as_deref(), Some("alpha"));
+        assert_eq!(fit.resolve_tenant(), "alpha");
+
+        let q = QuerySpec::density(vec![0.0, 1.0]);
+        assert_eq!(q.tenant, None);
+        assert_eq!(q.resolve_tenant(), DEFAULT_TENANT);
+        let q = q.tenant("beta");
+        assert_eq!(q.resolve_tenant(), "beta");
+    }
+
+    #[test]
+    fn tenant_validation_charset_and_length() {
+        let max_len = "t".repeat(64);
+        let too_long = "t".repeat(65);
+        for ok in ["default", "alpha", "a", "Team.7_x-9", max_len.as_str()] {
+            assert!(validate_tenant(ok).is_ok(), "{ok:?} should be valid");
+        }
+        for bad in ["", "has space", "slash/y", "uni\u{1f}sep", too_long.as_str()] {
+            assert!(validate_tenant(bad).is_err(), "{bad:?} should be rejected");
+        }
     }
 }

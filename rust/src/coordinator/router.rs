@@ -60,6 +60,12 @@
 //! journal.  Kill → detect → failover → rebalance happens with no
 //! operator in the loop; manual [`Router::remove_node`] stays for
 //! drains and also *forgets* the node, so the loop will not re-add it.
+//! Probes of a node that keeps failing **back off** exponentially
+//! ([`probe_backoff_ticks`]): once the failure count reaches the removal
+//! threshold, the loop skips 1, 2, 4, … ticks between probes, capped at
+//! [`MAX_PROBE_BACKOFF_TICKS`], so a long-dead node costs a vanishing
+//! fraction of the loop's connect timeouts instead of a full one every
+//! tick.  A single successful probe resets the schedule to full cadence.
 //!
 //! **Failure semantics.**  Connects and reads are timeout-bounded
 //! ([`RouterConfig`]), retries are capped, and node death surfaces as the
@@ -384,6 +390,38 @@ enum Round {
 /// per pooled socket for the router's lifetime.
 const POOL_CAP_PER_NODE: usize = 8;
 
+/// Ceiling on the health loop's probe backoff: a node can never be
+/// skipped for more than this many consecutive ticks, so recovery of a
+/// long-dead node is always noticed within a bounded (and small,
+/// relative to its downtime) number of intervals.
+pub const MAX_PROBE_BACKOFF_TICKS: u32 = 64;
+
+/// Per-node bookkeeping for the health loop's probe schedule: the
+/// consecutive-failure tally that drives removal, plus the remaining
+/// ticks to skip before probing the node again (the backoff).  One
+/// successful probe deletes the entry, resetting both.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ProbeState {
+    /// Consecutive failed probes (resets on any success).
+    pub failures: u32,
+    /// Ticks left to skip before the next probe of this node.
+    pub skip: u32,
+}
+
+/// The health loop's backoff schedule: full cadence (skip 0) while a
+/// node is under the removal threshold — detection speed is untouched —
+/// then exponentially decaying probes (skip 1, 2, 4, …) once it is past
+/// removal, capped at [`MAX_PROBE_BACKOFF_TICKS`].  Keeps a permanently
+/// dead node from burning a full connect timeout every tick forever,
+/// without giving up on its eventual recovery.
+pub fn probe_backoff_ticks(failures: u32, threshold: u32) -> u32 {
+    if failures < threshold {
+        return 0;
+    }
+    let exp = (failures - threshold).min(6);
+    (1u32 << exp).min(MAX_PROBE_BACKOFF_TICKS)
+}
+
 // ---------------------------------------------------------------------------
 // The router.
 // ---------------------------------------------------------------------------
@@ -519,27 +557,37 @@ impl Router {
     }
 
     /// One pass of the health loop (DESIGN.md §15), called periodically
-    /// by [`RouterServer`]'s probe thread.  `failures` is the loop's
-    /// consecutive-failure tally per address — loop-local so a router
-    /// used without the loop carries no dead state.  Probes every known
-    /// node with a `stats` frame: `cfg.health_failures` consecutive
-    /// misses remove a member (never the last one — an empty table would
-    /// turn a full-fleet outage into permanent amnesia), and a known
+    /// by [`RouterServer`]'s probe thread.  `probes` is the loop's
+    /// per-address probe bookkeeping — loop-local so a router used
+    /// without the loop carries no dead state.  Probes every known node
+    /// with a `stats` frame: `cfg.health_failures` consecutive misses
+    /// remove a member (never the last one — an empty table would turn
+    /// a full-fleet outage into permanent amnesia), and a known
     /// non-member that answers is re-added; both paths bump the epoch
-    /// and re-fit via the journal.
-    pub fn health_tick(&self, failures: &mut HashMap<String, u32>) {
+    /// and re-fit via the journal.  Nodes deep into failure are probed
+    /// on the decaying [`probe_backoff_ticks`] cadence; one successful
+    /// probe resets them to full cadence.
+    pub fn health_tick(&self, probes: &mut HashMap<String, ProbeState>) {
         let known: Vec<String> = self
             .known
             .lock()
             .expect("router known-node set poisoned")
             .clone();
         for node in known {
+            // Backoff gate: skip this node's probe while its schedule
+            // says so, burning no connect timeout on it this tick.
+            if let Some(state) = probes.get_mut(&node) {
+                if state.skip > 0 {
+                    state.skip -= 1;
+                    continue;
+                }
+            }
             let alive = matches!(
                 self.forward(&node, Request::Stats),
                 Ok(Response::Stats { .. })
             );
             if alive {
-                failures.remove(&node);
+                probes.remove(&node);
                 let member = self
                     .table
                     .read()
@@ -568,9 +616,12 @@ impl Router {
                 }
                 continue;
             }
-            let count = failures.entry(node.clone()).or_insert(0);
-            *count = count.saturating_add(1);
-            if *count < self.cfg.health_failures {
+            let state = probes.entry(node.clone()).or_default();
+            state.failures = state.failures.saturating_add(1);
+            state.skip =
+                probe_backoff_ticks(state.failures, self.cfg.health_failures);
+            let count = state.failures;
+            if count < self.cfg.health_failures {
                 continue;
             }
             // Membership and the last-member guard are checked under the
@@ -1356,12 +1407,14 @@ impl RouterServer {
             let handle = std::thread::Builder::new()
                 .name("router-health".into())
                 .spawn(move || {
-                    // Consecutive-failure tallies live on this thread:
-                    // the loop is the only prober, so the router itself
-                    // carries no health state when the loop is off.
-                    let mut failures: HashMap<String, u32> = HashMap::new();
+                    // Per-node probe state (failure tallies + backoff)
+                    // lives on this thread: the loop is the only prober,
+                    // so the router itself carries no health state when
+                    // the loop is off.
+                    let mut probes: HashMap<String, ProbeState> =
+                        HashMap::new();
                     while !stop.load(Ordering::Relaxed) {
-                        router.health_tick(&mut failures);
+                        router.health_tick(&mut probes);
                         // Sleep in short slices so shutdown stays prompt
                         // even under long probe intervals.
                         let mut slept = Duration::ZERO;
@@ -1418,6 +1471,68 @@ mod tests {
 
     fn table(names: &[&str]) -> NodeTable {
         NodeTable::new(names.iter().map(|s| s.to_string()).collect()).unwrap()
+    }
+
+    #[test]
+    fn probe_backoff_schedule_decays_and_caps() {
+        // Below the removal threshold: full cadence, so detection speed
+        // is untouched by the backoff.
+        assert_eq!(probe_backoff_ticks(0, 2), 0);
+        assert_eq!(probe_backoff_ticks(1, 2), 0);
+        // At and past the threshold: 1, 2, 4, ... up to the cap, then
+        // pinned there no matter how long the node stays dead.
+        assert_eq!(probe_backoff_ticks(2, 2), 1);
+        assert_eq!(probe_backoff_ticks(3, 2), 2);
+        assert_eq!(probe_backoff_ticks(4, 2), 4);
+        assert_eq!(probe_backoff_ticks(5, 2), 8);
+        assert_eq!(probe_backoff_ticks(6, 2), 16);
+        assert_eq!(probe_backoff_ticks(7, 2), 32);
+        assert_eq!(probe_backoff_ticks(8, 2), 64);
+        assert_eq!(probe_backoff_ticks(9, 2), MAX_PROBE_BACKOFF_TICKS);
+        assert_eq!(probe_backoff_ticks(u32::MAX, 2), MAX_PROBE_BACKOFF_TICKS);
+        // A threshold of 1 (remove on first miss) backs off immediately.
+        assert_eq!(probe_backoff_ticks(1, 1), 1);
+        // Recovery resets by deleting the entry, i.e. a fresh default.
+        assert_eq!(ProbeState::default(), ProbeState { failures: 0, skip: 0 });
+    }
+
+    #[test]
+    fn set_stamp_overwrites_stamps_and_preserves_tenant() {
+        // The router re-stamps epoch/digest per attempt but must forward
+        // the tenant field opaquely — it is the worker's to interpret.
+        let mut req = Request::Delete {
+            model: "m".into(),
+            tenant: Some("alpha".into()),
+            epoch: None,
+            digest: None,
+        };
+        Router::set_stamp(&mut req, 4, 99);
+        match req {
+            Request::Delete { tenant, epoch, digest, .. } => {
+                assert_eq!(tenant.as_deref(), Some("alpha"));
+                assert_eq!((epoch, digest), (Some(4), Some(99)));
+            }
+            other => panic!("{other:?}"),
+        }
+        let mut req = Request::Fit {
+            model: "m".into(),
+            spec: crate::coordinator::FitSpec::new(
+                crate::estimator::EstimatorKind::Kde,
+                1,
+            )
+            .tenant("beta"),
+            points: vec![0.0, 1.0],
+            epoch: Some(1),
+            digest: Some(1),
+        };
+        Router::set_stamp(&mut req, 7, 13);
+        match req {
+            Request::Fit { spec, epoch, digest, .. } => {
+                assert_eq!(spec.tenant.as_deref(), Some("beta"));
+                assert_eq!((epoch, digest), (Some(7), Some(13)));
+            }
+            other => panic!("{other:?}"),
+        }
     }
 
     #[test]

@@ -1,7 +1,14 @@
-//! Bounded request queue with backpressure — the admission-control half of
+//! Bounded request queues with backpressure — the admission-control half of
 //! the coordinator (the paper's serving framing: the fit/score pass is the
 //! expensive "prefill", eval batches are cheap "decodes"; a bounded queue
 //! keeps tail latency sane when eval load spikes).
+//!
+//! Two queues live here: [`BoundedQueue`], the original single-FIFO
+//! primitive (still the right tool for strictly ordered work), and
+//! [`FairQueue`], the multi-tenant deficit-round-robin queue the
+//! coordinator drains (DESIGN.md §16) — per-tenant sub-queues under one
+//! global capacity, weighted fair service, work-conserving when tenants
+//! idle.
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
@@ -137,6 +144,235 @@ impl<T> BoundedQueue<T> {
     }
 }
 
+/// One tenant's sub-queue plus its deficit-round-robin state.
+struct TenantLane<T> {
+    name: String,
+    weight: u64,
+    /// Remaining drains this tenant may take before the cursor moves on.
+    /// Refilled to `weight` when its turn starts; reset to zero when the
+    /// lane empties (an idle tenant banks nothing — work conservation).
+    deficit: u64,
+    queue: VecDeque<T>,
+}
+
+struct FairInner<T> {
+    lanes: Vec<TenantLane<T>>,
+    /// Index of the lane currently being served.
+    cursor: usize,
+    /// Total queued items across lanes (the global capacity bound).
+    len: usize,
+    closed: bool,
+}
+
+impl<T> FairInner<T> {
+    /// Index of `tenant`'s lane, creating an unconfigured (weight-1) lane
+    /// on first sight.  Linear scan: tenant counts are operator-scale.
+    fn lane_index(&mut self, tenant: &str) -> usize {
+        if let Some(i) = self.lanes.iter().position(|l| l.name == tenant) {
+            return i;
+        }
+        self.lanes.push(TenantLane {
+            name: tenant.to_string(),
+            weight: 1,
+            deficit: 0,
+            queue: VecDeque::new(),
+        });
+        self.lanes.len() - 1
+    }
+
+    /// Deficit-round-robin pop (unit job cost).  Caller guarantees
+    /// `len > 0`, which guarantees termination: some lane is non-empty
+    /// and empty lanes only advance the cursor.
+    fn pop_drr(&mut self) -> T {
+        debug_assert!(self.len > 0);
+        loop {
+            let n = self.lanes.len();
+            let i = self.cursor % n;
+            let lane = &mut self.lanes[i];
+            if lane.queue.is_empty() {
+                lane.deficit = 0;
+                self.cursor = (i + 1) % n;
+                continue;
+            }
+            if lane.deficit == 0 {
+                lane.deficit = lane.weight;
+            }
+            let item = lane.queue.pop_front().expect("lane non-empty");
+            lane.deficit -= 1;
+            self.len -= 1;
+            if lane.deficit == 0 || lane.queue.is_empty() {
+                if lane.queue.is_empty() {
+                    lane.deficit = 0;
+                }
+                self.cursor = (i + 1) % n;
+            }
+            return item;
+        }
+    }
+}
+
+/// MPMC bounded multi-tenant queue: per-tenant FIFO sub-queues drained
+/// by weighted deficit round-robin (DESIGN.md §16).
+///
+/// * One **global** capacity bounds the sum of all sub-queues, so the
+///   backpressure contract (`Err(Full)` sheds load) is unchanged from
+///   [`BoundedQueue`].
+/// * Each pop serves the cursor tenant until its per-round deficit
+///   (refilled to its weight) is spent, then moves on — under sustained
+///   two-tenant load with weights `(w1, w2)` drains converge to the
+///   `w1:w2` ratio.
+/// * Work-conserving: an empty lane forfeits its turn immediately (its
+///   deficit resets to zero), so an idle tenant's share redistributes
+///   and a lone tenant sees plain FIFO at full speed.
+/// * [`FairQueue::drain_matching`] scans lanes in creation order with
+///   the same keep-non-matches semantics as the single queue, so the
+///   batcher's same-model coalescing works unchanged (a model belongs
+///   to exactly one tenant, so matches never cross lanes).
+pub struct FairQueue<T> {
+    inner: Mutex<FairInner<T>>,
+    not_empty: Condvar,
+    capacity: usize,
+}
+
+impl<T> FairQueue<T> {
+    /// Empty queue admitting at most `capacity` items in total, with
+    /// configured `(tenant, weight)` lanes pre-created (weights must be
+    /// `>= 1`).  Tenants not listed get weight-1 lanes on first push.
+    pub fn new(capacity: usize, weights: &[(String, usize)]) -> Self {
+        assert!(capacity >= 1);
+        let lanes = weights
+            .iter()
+            .map(|(name, w)| {
+                assert!(*w >= 1, "tenant {name:?}: weight must be >= 1");
+                TenantLane {
+                    name: name.clone(),
+                    weight: *w as u64,
+                    deficit: 0,
+                    queue: VecDeque::new(),
+                }
+            })
+            .collect();
+        FairQueue {
+            inner: Mutex::new(FairInner {
+                lanes,
+                cursor: 0,
+                len: 0,
+                closed: false,
+            }),
+            not_empty: Condvar::new(),
+            capacity,
+        }
+    }
+
+    /// The global admission bound (shared across tenants).
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Items currently queued across all tenants.
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("queue poisoned").len
+    }
+
+    /// Whether nothing is queued.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Items queued for one tenant (zero for unknown tenants).
+    pub fn depth(&self, tenant: &str) -> usize {
+        let inner = self.inner.lock().expect("queue poisoned");
+        inner
+            .lanes
+            .iter()
+            .find(|l| l.name == tenant)
+            .map_or(0, |l| l.queue.len())
+    }
+
+    /// Non-blocking push into `tenant`'s lane; `Err(Full)` is the global
+    /// backpressure signal (capacity spans tenants — fair *service* is
+    /// the scheduler's job, admission fairness is the quota layer's).
+    pub fn push(&self, tenant: &str, item: T) -> Result<(), (T, PushError)> {
+        let mut inner = self.inner.lock().expect("queue poisoned");
+        if inner.closed {
+            return Err((item, PushError::Closed));
+        }
+        if inner.len >= self.capacity {
+            return Err((item, PushError::Full));
+        }
+        let i = inner.lane_index(tenant);
+        inner.lanes[i].queue.push_back(item);
+        inner.len += 1;
+        drop(inner);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking DRR pop with timeout.
+    pub fn pop_timeout(&self, timeout: Duration) -> Result<T, PopTimeout> {
+        let deadline = Instant::now() + timeout;
+        let mut inner = self.inner.lock().expect("queue poisoned");
+        loop {
+            if inner.len > 0 {
+                return Ok(inner.pop_drr());
+            }
+            if inner.closed {
+                return Err(PopTimeout::Closed);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(PopTimeout::TimedOut);
+            }
+            let (guard, _res) = self
+                .not_empty
+                .wait_timeout(inner, deadline - now)
+                .expect("queue poisoned");
+            inner = guard;
+        }
+    }
+
+    /// Remove and return up to `max` queued items matching `pred`,
+    /// scanning lanes in creation order and preserving FIFO order within
+    /// each lane; non-matches stay queued in order.  Same contract as
+    /// [`BoundedQueue::drain_matching`] per lane.
+    pub fn drain_matching<F>(&self, max: usize, mut pred: F) -> Vec<T>
+    where
+        F: FnMut(&T) -> bool,
+    {
+        let mut guard = self.inner.lock().expect("queue poisoned");
+        let inner = &mut *guard;
+        let mut matched = Vec::new();
+        for lane in &mut inner.lanes {
+            if matched.len() >= max {
+                break;
+            }
+            let mut kept = VecDeque::with_capacity(lane.queue.len());
+            while let Some(item) = lane.queue.pop_front() {
+                if matched.len() < max && pred(&item) {
+                    matched.push(item);
+                    inner.len -= 1;
+                } else {
+                    kept.push_back(item);
+                }
+            }
+            lane.queue = kept;
+        }
+        matched
+    }
+
+    /// Close the queue: pending items remain poppable, pushes fail, and
+    /// blocked poppers wake with `Closed` once drained.
+    pub fn close(&self) {
+        self.inner.lock().expect("queue poisoned").closed = true;
+        self.not_empty.notify_all();
+    }
+
+    /// Whether the queue has been closed.
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().expect("queue poisoned").closed
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -201,6 +437,115 @@ mod tests {
             rest.push(v);
         }
         assert_eq!(rest, vec![1, 3, 5, 6, 7, 8, 9]);
+    }
+
+    fn fair(capacity: usize, weights: &[(&str, usize)]) -> FairQueue<u32> {
+        let w: Vec<(String, usize)> =
+            weights.iter().map(|(n, w)| (n.to_string(), *w)).collect();
+        FairQueue::new(capacity, &w)
+    }
+
+    #[test]
+    fn fair_single_tenant_is_fifo() {
+        let q = fair(8, &[]);
+        for i in 0..5 {
+            q.push("solo", i).unwrap();
+        }
+        for i in 0..5 {
+            assert_eq!(q.pop_timeout(Duration::from_millis(10)).unwrap(), i);
+        }
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn fair_drains_match_weights_under_backlog() {
+        let q = fair(64, &[("a", 2), ("b", 1)]);
+        for i in 0..30 {
+            q.push("a", 100 + i).unwrap();
+            q.push("b", 200 + i).unwrap();
+        }
+        // Over any full rounds, drains follow the 2:1 weights exactly.
+        let mut from_a = 0;
+        for _ in 0..30 {
+            let v = q.pop_timeout(Duration::from_millis(10)).unwrap();
+            if v < 200 {
+                from_a += 1;
+            }
+        }
+        assert_eq!(from_a, 20, "weight-2 tenant gets 2/3 of drains");
+        // Per-tenant FIFO order is preserved within the interleave.
+        assert_eq!(q.depth("a"), 10);
+        assert_eq!(q.depth("b"), 20);
+    }
+
+    #[test]
+    fn fair_is_work_conserving_when_a_tenant_idles() {
+        let q = fair(16, &[("a", 3), ("b", 1)]);
+        for i in 0..6 {
+            q.push("b", i).unwrap();
+        }
+        // "a" (the heavy tenant) is idle: every drain goes to "b" with
+        // no timeouts and in FIFO order.
+        for i in 0..6 {
+            assert_eq!(q.pop_timeout(Duration::from_millis(10)).unwrap(), i);
+        }
+    }
+
+    #[test]
+    fn fair_capacity_is_global_across_tenants() {
+        let q = fair(3, &[]);
+        q.push("a", 1).unwrap();
+        q.push("b", 2).unwrap();
+        q.push("c", 3).unwrap();
+        let (item, err) = q.push("d", 4).unwrap_err();
+        assert_eq!((item, err), (4, PushError::Full));
+        assert_eq!(q.len(), 3);
+        q.pop_timeout(Duration::from_millis(10)).unwrap();
+        q.push("d", 4).unwrap();
+    }
+
+    #[test]
+    fn fair_close_drains_then_reports_closed() {
+        let q = fair(8, &[]);
+        q.push("a", 1).unwrap();
+        q.push("b", 2).unwrap();
+        q.close();
+        assert!(q.is_closed());
+        assert_eq!(q.push("a", 3).unwrap_err().1, PushError::Closed);
+        let mut drained = vec![
+            q.pop_timeout(Duration::from_millis(5)).unwrap(),
+            q.pop_timeout(Duration::from_millis(5)).unwrap(),
+        ];
+        drained.sort_unstable();
+        assert_eq!(drained, vec![1, 2]);
+        assert_eq!(
+            q.pop_timeout(Duration::from_millis(5)).unwrap_err(),
+            PopTimeout::Closed
+        );
+    }
+
+    #[test]
+    fn fair_drain_matching_spans_lanes_in_order() {
+        let q = fair(16, &[("a", 1), ("b", 1)]);
+        for i in 0..4 {
+            q.push("a", i).unwrap(); // 0 1 2 3
+            q.push("b", 10 + i).unwrap(); // 10 11 12 13
+        }
+        // Evens from every lane, bounded at 3, lane order then FIFO.
+        let evens = q.drain_matching(3, |x| x % 2 == 0);
+        assert_eq!(evens, vec![0, 2, 10]);
+        assert_eq!(q.len(), 5);
+        assert_eq!(q.depth("a"), 2);
+        assert_eq!(q.depth("b"), 3);
+    }
+
+    #[test]
+    fn fair_pop_timeout_on_empty() {
+        let q: FairQueue<u32> = FairQueue::new(2, &[]);
+        let start = Instant::now();
+        let err = q.pop_timeout(Duration::from_millis(20)).unwrap_err();
+        assert_eq!(err, PopTimeout::TimedOut);
+        assert!(start.elapsed() >= Duration::from_millis(20));
     }
 
     #[test]

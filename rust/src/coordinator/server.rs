@@ -28,8 +28,8 @@ use std::time::Duration;
 use anyhow::{anyhow, Context, Result};
 
 use super::protocol::{Request, Response, PROTOCOL_VERSION};
-use super::request::{FitSpec, QuerySpec};
-use super::{Coordinator, EnrollOutcome, FitInfo, QueryResult};
+use super::request::{FitSpec, QuerySpec, DEFAULT_TENANT};
+use super::{Coordinator, EnrollOutcome, FitInfo, QueryResult, QuotaExceeded};
 use crate::{log_info, log_warn};
 
 /// One wire line in, one response out — what a [`LineServer`] serves.
@@ -266,11 +266,16 @@ pub fn handle_request(coordinator: &Coordinator, request: Request) -> Response {
                 }
             }
         }
-        Request::Delete { model, epoch, digest } => {
+        Request::Delete { model, tenant, epoch, digest } => {
             if let Some(rejection) = epoch_gate(coordinator, epoch, digest) {
                 return rejection;
             }
-            let existed = coordinator.registry().remove(&model);
+            // Deletion is tenant-scoped: an untenanted frame can only
+            // remove a "default"-owned model, never another tenant's.
+            let tenant = tenant.as_deref().unwrap_or(DEFAULT_TENANT);
+            let existed = coordinator
+                .registry()
+                .remove(&super::registry::scoped_key(tenant, &model));
             Response::Deleted { model, existed }
         }
         Request::Fit { model, spec, points, epoch, digest } => {
@@ -279,14 +284,15 @@ pub fn handle_request(coordinator: &Coordinator, request: Request) -> Response {
             }
             match coordinator.fit(&model, points, &spec) {
                 Ok(handle) => Response::FitOk { info: handle.info() },
-                Err(e) => Response::Error { message: format!("{e:#}") },
+                Err(e) => quota_or_error(&e),
             }
         }
         Request::Query { model, d, spec, epoch, digest } => {
             if let Some(rejection) = epoch_gate(coordinator, epoch, digest) {
                 return rejection;
             }
-            let Some(handle) = coordinator.handle(&model) else {
+            let tenant = spec.resolve_tenant();
+            let Some(handle) = coordinator.handle_for(tenant, &model) else {
                 return Response::Error {
                     message: format!("unknown model {model:?}"),
                 };
@@ -304,9 +310,24 @@ pub fn handle_request(coordinator: &Coordinator, request: Request) -> Response {
             }
             match coordinator.query(&handle, spec) {
                 Ok(result) => Response::QueryOk { d: handle.d(), result },
-                Err(e) => Response::Error { message: format!("{e:#}") },
+                Err(e) => quota_or_error(&e),
             }
         }
+    }
+}
+
+/// Map a coordinator error onto the wire: the typed [`QuotaExceeded`]
+/// admission rejection becomes the structured [`Response::OverQuota`]
+/// (so clients react without string-matching); everything else stays a
+/// plain error string.
+fn quota_or_error(e: &anyhow::Error) -> Response {
+    match e.downcast_ref::<QuotaExceeded>() {
+        Some(q) => Response::OverQuota {
+            tenant: q.tenant.clone(),
+            resource: q.resource.clone(),
+            limit: q.limit,
+        },
+        None => Response::Error { message: format!("{e:#}") },
     }
 }
 
@@ -468,6 +489,9 @@ impl Client {
         };
         match self.request(&req)? {
             Response::FitOk { info } => Ok(info),
+            Response::OverQuota { tenant, resource, limit } => {
+                Err(over_quota_err(&tenant, &resource, limit))
+            }
             Response::Error { message } => Err(anyhow!(message)),
             other => Err(anyhow!("unexpected response {other:?}")),
         }
@@ -489,6 +513,9 @@ impl Client {
         };
         match self.request(&req)? {
             Response::QueryOk { result, .. } => Ok(result),
+            Response::OverQuota { tenant, resource, limit } => {
+                Err(over_quota_err(&tenant, &resource, limit))
+            }
             Response::Error { message } => Err(anyhow!(message)),
             other => Err(anyhow!("unexpected response {other:?}")),
         }
@@ -530,13 +557,31 @@ impl Client {
         }
     }
 
-    /// Delete a model by name; false if it was not resident.
+    /// Delete a model by name; false if it was not resident.  Deletes
+    /// under the shared `"default"` tenant — tenanted senders stamp the
+    /// frame themselves via [`Client::request`].
     pub fn delete(&mut self, model: &str) -> Result<bool> {
-        let req = Request::Delete { model: model.into(), epoch: None, digest: None };
+        let req = Request::Delete {
+            model: model.into(),
+            tenant: None,
+            epoch: None,
+            digest: None,
+        };
         match self.request(&req)? {
             Response::Deleted { existed, .. } => Ok(existed),
             Response::Error { message } => Err(anyhow!(message)),
             other => Err(anyhow!("unexpected response {other:?}")),
         }
     }
+}
+
+/// The client-side rendering of a wire [`Response::OverQuota`] — the
+/// same text the typed in-process `QuotaExceeded` displays, so CLI
+/// users see one message whichever path rejected them.
+fn over_quota_err(tenant: &str, resource: &str, limit: usize) -> anyhow::Error {
+    anyhow::Error::new(QuotaExceeded {
+        tenant: tenant.to_string(),
+        resource: resource.to_string(),
+        limit,
+    })
 }

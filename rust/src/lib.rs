@@ -65,9 +65,10 @@ pub mod tuner;
 pub mod util;
 
 pub use approx::Budget;
-pub use config::Config;
+pub use config::{Config, TenantQuota};
 pub use coordinator::{
     Coordinator, FitSpec, ModelHandle, OutputMode, QueryResult, QuerySpec,
+    QuotaExceeded, DEFAULT_TENANT,
 };
 pub use estimator::{EstimatorKind, Variant};
 pub use runtime::BackendKind;

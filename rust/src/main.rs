@@ -133,6 +133,9 @@ fn commands() -> Vec<Command> {
                 OptSpec::opt("h", "bandwidth override"),
                 OptSpec::opt("h-score", "score bandwidth override"),
                 OptSpec::opt("variant", "flash|gemm|stream|naive override"),
+                OptSpec::opt("tenant",
+                    "tenant to fit under (DESIGN.md §16); omit for the \
+                     shared \"default\" tenant"),
             ],
         },
         Command {
@@ -152,6 +155,9 @@ fn commands() -> Vec<Command> {
                      defaults deterministically from the model name)"),
                 OptSpec::opt("config",
                     "JSON config supplying the approx_rel_err default"),
+                OptSpec::opt("tenant",
+                    "tenant the model was fitted under (DESIGN.md §16); \
+                     omit for the shared \"default\" tenant"),
             ],
         },
         Command {
@@ -522,6 +528,9 @@ fn cmd_fit(p: &cli::Parsed) -> Result<()> {
             .ok_or_else(|| anyhow!("bad variant {name:?}"))?;
         spec = spec.variant(variant);
     }
+    if let Some(t) = p.get("tenant") {
+        spec = spec.tenant(t);
+    }
     let mut client = Client::connect(p.get_string("addr", "127.0.0.1:7474"))?;
     let info = client.fit(p.get("model").expect("required"), points, &spec)?;
     println!(
@@ -566,12 +575,12 @@ fn cmd_eval(p: &cli::Parsed) -> Result<()> {
     // with the wire's: `--seed` without `--rel-err` fails with the SAME
     // typed message a raw frame would get from the server.
     let budget = Budget::resolve(rel_err, seed).map_err(|e| anyhow!(e))?;
+    let mut spec = QuerySpec::new(points, mode).with_budget(budget);
+    if let Some(t) = p.get("tenant") {
+        spec = spec.tenant(t);
+    }
     let mut client = Client::connect(p.get_string("addr", "127.0.0.1:7474"))?;
-    let result = client.query(
-        p.get("model").expect("required"),
-        d,
-        QuerySpec::new(points, mode).with_budget(budget),
-    )?;
+    let result = client.query(p.get("model").expect("required"), d, spec)?;
     // One output row per line: a single value for densities, d
     // comma-separated values for gradients.
     let width = mode.width(d);

@@ -1,0 +1,468 @@
+//! Multi-tenant serving on the native backend (ISSUE 8): the sharded
+//! registry under concurrent cross-tenant load, tenant-scoped
+//! visibility, quota admission with typed rejections, weighted-fair
+//! drain, and bitwise isolation of one tenant's results from another
+//! tenant's quota pressure.  Zero artifacts, zero XLA — these run on a
+//! fresh checkout and in the no-XLA CI leg.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use flash_sdkde::config::{Config, TenantQuota};
+use flash_sdkde::coordinator::protocol::{Request, Response};
+use flash_sdkde::coordinator::scheduler::FairQueue;
+use flash_sdkde::coordinator::server::{Client, Server};
+use flash_sdkde::coordinator::{Coordinator, FitSpec, QuerySpec};
+use flash_sdkde::data::mixture::by_dim;
+use flash_sdkde::estimator::EstimatorKind;
+use flash_sdkde::runtime::BackendKind;
+use flash_sdkde::util::prop::{check, ensure};
+use flash_sdkde::util::rng::Pcg64;
+use flash_sdkde::{Budget, QuotaExceeded};
+
+fn native_config() -> Config {
+    let mut cfg = Config::default();
+    // Deliberately nonexistent: the manifest must be synthesized.
+    cfg.artifacts_dir = PathBuf::from("/nonexistent-flash-sdkde-artifacts");
+    cfg.backend = BackendKind::Native;
+    cfg.batch_wait_ms = 1;
+    cfg
+}
+
+fn tenant_stat(coord: &Coordinator, tenant: &str, key: &str) -> usize {
+    coord
+        .stats_json()
+        .get("tenants")
+        .and_then(|t| t.get(tenant))
+        .and_then(|t| t.get(key))
+        .and_then(|v| v.as_usize())
+        .unwrap_or_else(|| panic!("stats missing tenants.{tenant}.{key}"))
+}
+
+/// The interleaved stress drive: `threads` workers (two per tenant)
+/// fit/eval/delete tenant-scoped models against one coordinator.  Every
+/// random stream is keyed by the thread id alone, so the exact same
+/// byte-level work can be replayed single-threaded by the oracle.
+const STRESS_TENANTS: [&str; 3] = ["alpha", "beta", "gamma"];
+const STRESS_THREADS: usize = 6;
+const MODELS_PER_THREAD: usize = 4;
+const STRESS_QUERIES: [f32; 3] = [-0.5, 0.25, 1.5];
+
+fn stress_cfg() -> Config {
+    let mut cfg = native_config();
+    // 4 shards x 32 slots: at most 24 models are ever resident, so no
+    // shard can evict even if every key hashed into one shard — lost
+    // models in this test are bugs, never capacity.
+    cfg.registry_capacity = 128;
+    cfg.registry_shards = 4;
+    cfg
+}
+
+/// One thread's deterministic op sequence; returns (name -> eval values)
+/// for every model it fitted (including ones it later deleted).
+fn stress_ops(coord: &Coordinator, thread: usize) -> Vec<(String, Vec<f32>)> {
+    let tenant = STRESS_TENANTS[thread % STRESS_TENANTS.len()];
+    let mix = by_dim(1);
+    let mut rng = Pcg64::new(1000 + thread as u64, 0);
+    let mut out = Vec::new();
+    for j in 0..MODELS_PER_THREAD {
+        let name = format!("t{thread}-m{j}");
+        let train = mix.sample(32, &mut rng);
+        let handle = coord
+            .fit(&name, train, &FitSpec::new(EstimatorKind::Kde, 1).tenant(tenant))
+            .expect("stress fit");
+        assert_eq!(handle.tenant(), tenant);
+        let res = coord
+            .eval(&handle, STRESS_QUERIES.to_vec())
+            .expect("stress eval");
+        out.push((name, res.values));
+        // Odd-indexed models are deleted again — interleaved with the
+        // other threads' fits and evals across shard boundaries.
+        if j % 2 == 1 {
+            assert!(coord.delete(&handle), "own fresh handle must delete");
+        }
+    }
+    out
+}
+
+#[test]
+fn concurrent_tenant_stress_matches_single_threaded_oracle_bitwise() {
+    let coord = Arc::new(Coordinator::start(stress_cfg()).expect("coordinator"));
+    let handles: Vec<_> = (0..STRESS_THREADS)
+        .map(|t| {
+            let coord = Arc::clone(&coord);
+            std::thread::spawn(move || stress_ops(&coord, t))
+        })
+        .collect();
+    let mut concurrent: HashMap<String, Vec<f32>> = HashMap::new();
+    for h in handles {
+        for (name, values) in h.join().expect("stress thread") {
+            assert!(
+                concurrent.insert(name, values).is_none(),
+                "duplicate model name across threads"
+            );
+        }
+    }
+    assert_eq!(concurrent.len(), STRESS_THREADS * MODELS_PER_THREAD);
+
+    // No lost models: every even-indexed model survived, under its own
+    // tenant only; deleted ones are gone from every tenant's view.
+    let registry = coord.registry();
+    assert_eq!(registry.shard_count(), 4);
+    for t in 0..STRESS_THREADS {
+        let tenant = STRESS_TENANTS[t % STRESS_TENANTS.len()];
+        for j in 0..MODELS_PER_THREAD {
+            let name = format!("t{t}-m{j}");
+            let survives = j % 2 == 0;
+            assert_eq!(
+                coord.handle_for(tenant, &name).is_some(),
+                survives,
+                "{tenant}/{name}"
+            );
+            // Cross-tenant invisibility: no other tenant (nor the
+            // default namespace) can see the model.
+            for other in STRESS_TENANTS.iter().chain(["default"].iter()) {
+                if *other != tenant {
+                    assert!(
+                        coord.handle_for(other, &name).is_none(),
+                        "{other} sees {tenant}'s {name}"
+                    );
+                }
+            }
+        }
+    }
+    // Capacity was never under pressure, so per-shard eviction counters
+    // must sum to the global expectation: zero — and residency must be
+    // conserved shard by shard.
+    let shard_evictions: u64 =
+        (0..registry.shard_count()).map(|i| registry.shard_evictions(i)).sum();
+    assert_eq!(shard_evictions, registry.evictions());
+    assert_eq!(shard_evictions, 0, "unexpected eviction under stress");
+    let shard_len: usize =
+        (0..registry.shard_count()).map(|i| registry.shard_len(i)).sum();
+    assert_eq!(shard_len, registry.len());
+    assert_eq!(registry.len(), STRESS_THREADS * MODELS_PER_THREAD / 2);
+    for tenant in STRESS_TENANTS {
+        assert_eq!(registry.resident_for(tenant), 4, "{tenant}");
+    }
+
+    // Bitwise oracle: replay the identical per-thread op streams on a
+    // fresh coordinator, single-threaded, and compare every eval.
+    let oracle_coord = Coordinator::start(stress_cfg()).expect("oracle");
+    let mut oracle: HashMap<String, Vec<f32>> = HashMap::new();
+    for t in 0..STRESS_THREADS {
+        for (name, values) in stress_ops(&oracle_coord, t) {
+            oracle.insert(name, values);
+        }
+    }
+    assert_eq!(concurrent, oracle, "concurrent evals diverge from oracle");
+}
+
+#[test]
+fn shard_evictions_sum_to_global_under_churn() {
+    let mut cfg = native_config();
+    cfg.registry_capacity = 8;
+    cfg.registry_shards = 4;
+    let coord = Coordinator::start(cfg).expect("coordinator");
+    let mut rng = Pcg64::seeded(17);
+    let total = 40usize;
+    for i in 0..total {
+        let train = rng.normal_vec_f32(8);
+        coord
+            .fit(&format!("ev{i}"), train, &FitSpec::new(EstimatorKind::Kde, 1))
+            .expect("fit");
+    }
+    let registry = coord.registry();
+    assert!(registry.len() <= 8);
+    // Conservation: inserts that did not stay resident were evicted,
+    // and the per-shard counters account for every one of them.
+    assert_eq!(registry.evictions(), (total - registry.len()) as u64);
+    let per_shard: u64 =
+        (0..registry.shard_count()).map(|i| registry.shard_evictions(i)).sum();
+    assert_eq!(per_shard, registry.evictions());
+    let capacity: usize =
+        (0..registry.shard_count()).map(|i| registry.shard_capacity(i)).sum();
+    assert_eq!(capacity, 8);
+    // The resident set is exactly what the registry reports.
+    let names = registry.names();
+    assert_eq!(names.len(), registry.len());
+    for name in &names {
+        assert!(coord.handle(name).is_some(), "{name} listed but not resident");
+    }
+}
+
+/// Run the "calm" tenant's workload — one fit, one exact eval, one
+/// seed-pinned approximate eval — optionally next to a quota-saturating
+/// "noisy" neighbor.  Returns (exact values, approx values).
+fn calm_workload(with_noise: bool) -> (Vec<f32>, Vec<f32>) {
+    let mut cfg = native_config();
+    cfg.tenants = vec![(
+        "noisy".to_string(),
+        TenantQuota { max_models: Some(1), max_inflight: None, weight: 1 },
+    )];
+    let coord = Coordinator::start(cfg).expect("coordinator");
+    let mix = by_dim(1);
+    if with_noise {
+        let mut noise_rng = Pcg64::seeded(555);
+        let noisy = coord
+            .fit(
+                "n0",
+                mix.sample(64, &mut noise_rng),
+                &FitSpec::new(EstimatorKind::Kde, 1).tenant("noisy"),
+            )
+            .expect("noisy fit under quota");
+        // Saturate the model quota: the second fit must be the typed
+        // rejection, not a string.
+        let err = coord
+            .fit(
+                "n1",
+                mix.sample(64, &mut noise_rng),
+                &FitSpec::new(EstimatorKind::Kde, 1).tenant("noisy"),
+            )
+            .expect_err("second noisy fit must be over quota");
+        let quota = err
+            .downcast_ref::<QuotaExceeded>()
+            .expect("rejection must be the typed QuotaExceeded");
+        assert_eq!(quota.tenant, "noisy");
+        assert_eq!(quota.resource, "models");
+        assert_eq!(quota.limit, 1);
+        assert!(format!("{err:#}").contains("over quota"), "{err:#}");
+        // Keep the neighbor loud while calm runs.
+        for _ in 0..5 {
+            coord.eval(&noisy, STRESS_QUERIES.to_vec()).expect("noisy eval");
+        }
+        assert!(tenant_stat(&coord, "noisy", "rejected_quota") >= 1);
+        assert_eq!(tenant_stat(&coord, "noisy", "resident_models"), 1);
+    }
+    let mut rng = Pcg64::seeded(777);
+    let calm = coord
+        .fit(
+            "c0",
+            mix.sample(200, &mut rng),
+            &FitSpec::new(EstimatorKind::Kde, 1).bandwidth(0.4).tenant("calm"),
+        )
+        .expect("calm fit");
+    let queries = mix.sample(16, &mut rng);
+    let exact = coord.eval(&calm, queries.clone()).expect("calm exact").values;
+    let approx = coord
+        .query(
+            &calm,
+            QuerySpec::density(queries)
+                .with_budget(Budget::approx(0.25, Some(7)).expect("budget")),
+        )
+        .expect("calm approx")
+        .values;
+    (exact, approx)
+}
+
+#[test]
+fn calm_tenant_results_are_bitwise_immune_to_noisy_neighbor() {
+    // Isolation conformance: tenant quotas shape *admission*, never
+    // numerics.  Calm's exact and seed-pinned approximate results must
+    // be bit-for-bit identical with and without a quota-saturating
+    // neighbor sharing the coordinator.
+    let (exact_alone, approx_alone) = calm_workload(false);
+    let (exact_noisy, approx_noisy) = calm_workload(true);
+    assert_eq!(exact_alone, exact_noisy, "exact path perturbed by neighbor");
+    assert_eq!(approx_alone, approx_noisy, "approx path perturbed by neighbor");
+    // The approximate path really is distinct from the exact one.
+    assert_eq!(exact_alone.len(), approx_alone.len());
+}
+
+#[test]
+fn inflight_quota_rejects_typed_and_releases_on_reply() {
+    let mut cfg = native_config();
+    cfg.tenants = vec![(
+        "burst".to_string(),
+        TenantQuota { max_models: None, max_inflight: Some(1), weight: 1 },
+    )];
+    // Long co-batch window: the head query reliably holds its in-flight
+    // slot while the second submit races it.
+    cfg.batch_wait_ms = 200;
+    let coord = Coordinator::start(cfg).expect("coordinator");
+    let mix = by_dim(1);
+    let mut rng = Pcg64::seeded(99);
+    let model = coord
+        .fit(
+            "b0",
+            mix.sample(64, &mut rng),
+            &FitSpec::new(EstimatorKind::Kde, 1).tenant("burst"),
+        )
+        .expect("fit");
+
+    let head = coord
+        .submit(&model, QuerySpec::density(vec![0.1]))
+        .expect("head submit under quota");
+    let err = match coord.submit(&model, QuerySpec::density(vec![0.2])) {
+        Ok(_) => panic!("second in-flight query must be over quota"),
+        Err(e) => e,
+    };
+    let quota = err.downcast_ref::<QuotaExceeded>().expect("typed rejection");
+    assert_eq!(quota.tenant, "burst");
+    assert_eq!(quota.resource, "inflight");
+    assert_eq!(quota.limit, 1);
+    assert!(format!("{err:#}").contains("over quota"), "{err:#}");
+
+    // The reply releases the slot (release happens-before the reply),
+    // so the next submit is admitted deterministically.
+    head.wait().expect("head query served");
+    coord
+        .submit(&model, QuerySpec::density(vec![0.3]))
+        .expect("slot released after reply")
+        .wait()
+        .expect("follow-up served");
+
+    assert_eq!(tenant_stat(&coord, "burst", "rejected_quota"), 1);
+    assert!(tenant_stat(&coord, "burst", "admitted") >= 3); // fit + 2 queries
+    assert_eq!(tenant_stat(&coord, "burst", "inflight"), 0);
+    assert_eq!(tenant_stat(&coord, "burst", "queue_depth"), 0);
+}
+
+#[test]
+fn query_spec_tenant_must_match_model_owner() {
+    let coord = Coordinator::start(native_config()).expect("coordinator");
+    let mix = by_dim(1);
+    let mut rng = Pcg64::seeded(3);
+    let model = coord
+        .fit(
+            "m",
+            mix.sample(32, &mut rng),
+            &FitSpec::new(EstimatorKind::Kde, 1).tenant("alpha"),
+        )
+        .expect("fit");
+    // An untenanted spec follows the handle (the handle *is* the
+    // capability); an explicit mismatching tenant is rejected.
+    assert!(coord.query(&model, QuerySpec::density(vec![0.1])).is_ok());
+    let err = coord
+        .query(&model, QuerySpec::density(vec![0.1]).tenant("beta"))
+        .expect_err("cross-tenant spec must be rejected");
+    assert!(format!("{err:#}").contains("does not match"), "{err:#}");
+}
+
+#[test]
+fn prop_drr_drain_matches_weights_within_epsilon() {
+    // DESIGN.md §16 fairness: under full backlog on every lane, the DRR
+    // drain hands each tenant a share within one round's slack of its
+    // weight ratio w1:w2.
+    check("drr weighted shares", 60, |rng| {
+        let w1 = 1 + rng.below(5) as usize;
+        let w2 = 1 + rng.below(5) as usize;
+        let rounds = 2 + rng.below(6) as usize;
+        let pops = (w1 + w2) * rounds;
+        let backlog = pops; // each lane alone could satisfy every pop
+        let queue: FairQueue<u32> = FairQueue::new(
+            2 * backlog,
+            &[("a".to_string(), w1), ("b".to_string(), w2)],
+        );
+        for i in 0..backlog {
+            queue
+                .push("a", i as u32)
+                .map_err(|_| "push a failed".to_string())?;
+            queue
+                .push("b", (backlog + i) as u32)
+                .map_err(|_| "push b failed".to_string())?;
+        }
+        let mut from_a = 0usize;
+        for _ in 0..pops {
+            let item = queue
+                .pop_timeout(Duration::from_millis(100))
+                .map_err(|_| "pop timed out under backlog".to_string())?;
+            if (item as usize) < backlog {
+                from_a += 1;
+            }
+        }
+        let want = pops * w1 / (w1 + w2);
+        let eps = w1.max(w2); // at most one partial round of slack
+        ensure(
+            from_a.abs_diff(want) <= eps,
+            &format!("share off: {from_a} of {pops} vs {want} (w {w1}:{w2})"),
+        )?;
+        // FIFO within the winning lane.
+        ensure(from_a > 0, "weighted lane starved")?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_drr_is_work_conserving_when_a_tenant_idles() {
+    // An idle tenant's share redistributes immediately: with lane "b"
+    // empty, every pop drains "a" without waiting on b's turn.
+    check("drr work conserving", 40, |rng| {
+        let w1 = 1 + rng.below(5) as usize;
+        let w2 = 1 + rng.below(5) as usize;
+        let n = 1 + rng.below(24) as usize;
+        let queue: FairQueue<u32> = FairQueue::new(
+            n,
+            &[("a".to_string(), w1), ("b".to_string(), w2)],
+        );
+        for i in 0..n {
+            queue.push("a", i as u32).map_err(|_| "push failed".to_string())?;
+        }
+        for i in 0..n {
+            let item = queue
+                .pop_timeout(Duration::from_millis(100))
+                .map_err(|_| "pop stalled with work queued".to_string())?;
+            ensure(item == i as u32, "idle lane broke FIFO order")?;
+        }
+        ensure(queue.is_empty(), "queue not drained")?;
+        Ok(())
+    });
+}
+
+#[test]
+fn wire_tenancy_scopes_fit_query_delete_and_rejects_over_quota() {
+    let mut cfg = native_config();
+    cfg.tenants = vec![(
+        "beta".to_string(),
+        TenantQuota { max_models: Some(1), max_inflight: None, weight: 2 },
+    )];
+    let coord = Coordinator::start(cfg).expect("coordinator");
+    let mut server = Server::start(coord, "127.0.0.1", 0).expect("server");
+    let addr = server.local_addr();
+    let mut client = Client::connect(addr).expect("connect");
+
+    let mix = by_dim(1);
+    let mut rng = Pcg64::seeded(42);
+    let train = mix.sample(64, &mut rng);
+    let queries = mix.sample(5, &mut rng);
+
+    let spec = FitSpec::new(EstimatorKind::Kde, 1).tenant("beta");
+    client.fit("w1", train.clone(), &spec).expect("tenanted fit");
+    // Second model: over quota, surfaced as the typed error client-side.
+    let err = client.fit("w2", train, &spec).expect_err("over quota");
+    let quota = err.downcast_ref::<QuotaExceeded>().expect("typed over wire");
+    assert_eq!(
+        (quota.tenant.as_str(), quota.resource.as_str(), quota.limit),
+        ("beta", "models", 1)
+    );
+    assert!(format!("{err:#}").contains("over quota"), "{err:#}");
+
+    // Queries resolve in the tenant's namespace only.
+    let res = client
+        .query("w1", 1, QuerySpec::density(queries.clone()).tenant("beta"))
+        .expect("tenanted query");
+    assert_eq!(res.values.len(), 5);
+    let err = client
+        .query("w1", 1, QuerySpec::density(queries))
+        .expect_err("default tenant must not see beta's model");
+    assert!(format!("{err:#}").contains("unknown model"), "{err:#}");
+
+    // Deletes are tenant-scoped too: the default-namespace delete is a
+    // no-op, the tenanted frame removes the model.
+    assert!(!client.delete("w1").expect("default delete"), "cross-tenant delete");
+    let response = client
+        .request(&Request::Delete {
+            model: "w1".into(),
+            tenant: Some("beta".into()),
+            epoch: None,
+            digest: None,
+        })
+        .expect("tenanted delete");
+    assert_eq!(
+        response,
+        Response::Deleted { model: "w1".into(), existed: true }
+    );
+    server.shutdown();
+}

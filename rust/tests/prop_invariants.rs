@@ -318,6 +318,7 @@ fn prop_registry_lru_model_based() {
     fn model(name: &str) -> FittedModel {
         FittedModel {
             name: name.to_string(),
+            tenant: flash_sdkde::DEFAULT_TENANT.to_string(),
             kind: EstimatorKind::Kde,
             variant: Variant::Flash,
             d: 1,
@@ -413,12 +414,20 @@ fn prop_protocol_request_round_trip() {
             0 => None,
             _ => Some(1 + rng.below(1 << 20)),
         };
+        // Model-addressed frames may also carry an optional tenant
+        // (DESIGN.md §16) — additive like the stamps, so it must
+        // round-trip whenever present and be absent otherwise.
+        let tenant = match rng.below(3) {
+            0 => None,
+            _ => Some(format!("tenant-{}", rng.below(5))),
+        };
         let req = match rng.below(8) {
             0 => Request::Ping,
             1 => Request::Models,
             2 => Request::Stats,
             3 => Request::Delete {
                 model: format!("m{}", rng.below(100)),
+                tenant,
                 epoch,
                 digest,
             },
@@ -434,6 +443,9 @@ fn prop_protocol_request_round_trip() {
                 if rng.below(2) == 0 {
                     spec = spec.variant(Variant::ALL[rng.below(5) as usize]);
                 }
+                if let Some(t) = tenant {
+                    spec = spec.tenant(t);
+                }
                 Request::Fit {
                     model: format!("fit{}", rng.below(10)),
                     spec,
@@ -446,16 +458,22 @@ fn prop_protocol_request_round_trip() {
                 epoch: 1 + rng.below(1 << 20),
                 digest,
             },
-            _ => Request::Query {
-                model: format!("q{}", rng.below(10)),
-                d,
-                spec: QuerySpec::new(
+            _ => {
+                let mut spec = QuerySpec::new(
                     gen_points(rng, k * d),
                     OutputMode::ALL[rng.below(3) as usize],
-                ),
-                epoch,
-                digest,
-            },
+                );
+                if let Some(t) = tenant {
+                    spec = spec.tenant(t);
+                }
+                Request::Query {
+                    model: format!("q{}", rng.below(10)),
+                    d,
+                    spec,
+                    epoch,
+                    digest,
+                }
+            }
         };
         let line = req.to_line();
         ensure(
