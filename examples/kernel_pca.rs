@@ -1,0 +1,103 @@
+//! Kernel linear algebra over a fitted model: MatVec, kernel PCA, MMD
+//! (DESIGN.md §17).
+//!
+//! ```bash
+//! cargo run --release --no-default-features --example kernel_pca
+//! ```
+//!
+//! Fits a plain KDE model on a 3-d mixture and then drives the linalg
+//! pipeline family through the serving path: a raw `K·v` MatVec query
+//! (checked against the density identity `p̂ = normalizer/n · K·1`), the
+//! top kernel-PCA eigenpair by power iteration (cross-checked against
+//! the in-process `linalg::kernel_pca` on the same data), and the MMD
+//! two-sample statistic against a fresh draw and against a shifted one.
+
+use flash_sdkde::config::Config;
+use flash_sdkde::coordinator::{Coordinator, FitSpec};
+use flash_sdkde::data::mixture::by_dim;
+use flash_sdkde::estimator::{flash::TileConfig, EstimatorKind};
+use flash_sdkde::linalg::{self, PcaOpts};
+use flash_sdkde::util::rng::Pcg64;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = Config::default().auto_backend();
+    println!("booting coordinator (backend: {})...", cfg.backend);
+    let coordinator = Coordinator::start(cfg)?;
+
+    // 1. Fit a plain KDE model (no score shift, so the resident train set
+    //    is exactly the sampled one — the in-process cross-checks below
+    //    see the same data the server serves).
+    let d = 3;
+    let mix = by_dim(d);
+    let mut rng = Pcg64::seeded(17);
+    let n = 400;
+    let train = mix.sample(n, &mut rng);
+    let handle =
+        coordinator.fit("kpca", train.clone(), &FitSpec::new(EstimatorKind::Kde, d))?;
+    println!(
+        "fitted model {:?}: n={} bucket={} h={:.4}",
+        handle.name(),
+        handle.n(),
+        handle.bucket_n(),
+        handle.h()
+    );
+
+    // 2. MatVec: K·1 at the training rows relates to the served density
+    //    by p̂(y) = normalizer(h, d)/n · (K·1)(y) — check the identity.
+    let ones = vec![1.0f32; n];
+    let kv = coordinator.matvec(&handle, train.clone(), ones)?;
+    let dens = coordinator.eval(&handle, train.clone())?;
+    let h = handle.h();
+    let normalizer = (std::f64::consts::TAU).powf(-(d as f64) / 2.0) * h.powi(-(d as i32));
+    let max_rel = kv
+        .values
+        .iter()
+        .zip(&dens.values)
+        .map(|(&s, &p)| {
+            let implied = normalizer / n as f64 * s as f64;
+            ((implied - p as f64) / (p as f64).abs().max(1e-30)).abs()
+        })
+        .fold(0.0f64, f64::max);
+    println!("matvec identity p̂ = norm/n · K·1: max rel dev {max_rel:.2e}");
+    anyhow::ensure!(max_rel < 1e-3, "matvec diverges from the density identity");
+
+    // 3. Kernel PCA through the serving path (every sweep is a MatVec
+    //    query), cross-checked against the in-process implementation.
+    let opts = PcaOpts::default();
+    let served = coordinator.kernel_pca(&handle, &opts)?;
+    let local = linalg::kernel_pca(
+        &train,
+        &vec![1.0f32; n],
+        d,
+        h,
+        &TileConfig::default(),
+        &opts,
+    )?;
+    println!(
+        "kernel PCA: served λ={:.6} ({} sweeps, converged {}) vs local λ={:.6}",
+        served.eigenvalue, served.iters, served.converged, local.eigenvalue
+    );
+    let rel = (served.eigenvalue - local.eigenvalue).abs()
+        / local.eigenvalue.abs().max(1.0);
+    anyhow::ensure!(rel < 1e-3, "served eigenvalue diverges from local");
+
+    // 4. MMD: a fresh draw from the same mixture scores near zero, a
+    //    shifted copy scores high.
+    let fresh = mix.sample(n, &mut rng);
+    let shifted: Vec<f32> = fresh.iter().map(|&v| v + 4.0).collect();
+    let near = coordinator.mmd(&handle, fresh)?;
+    let far = coordinator.mmd(&handle, shifted)?;
+    println!("mmd vs fresh draw: {:.4e}; vs shifted draw: {:.4e}", near.mmd, far.mmd);
+    anyhow::ensure!(far.mmd2 > 10.0 * near.mmd2, "mmd failed to separate");
+
+    // 5. The engine counted every MatVec execution and PCA sweep.
+    let stats = coordinator.stats_json();
+    let engine = stats.get("engine").expect("engine stats");
+    println!(
+        "engine: matvec_queries={} power_iters={}",
+        engine.get("matvec_queries").and_then(|v| v.as_f64()).unwrap_or(0.0),
+        engine.get("power_iters").and_then(|v| v.as_f64()).unwrap_or(0.0),
+    );
+    println!("kernel_pca example OK");
+    Ok(())
+}

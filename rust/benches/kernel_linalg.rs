@@ -1,0 +1,42 @@
+//! `cargo bench --bench kernel_linalg` — the kernel-ops sweep
+//! (BENCHMARKS.md "Kernel ops"): MatVec / kernel PCA / MMD runtimes on
+//! the native flash tiles (DESIGN.md §17), one row per train size.
+//!
+//! Needs no artifacts or XLA — every series is compiled into this binary,
+//! so it runs on a fresh checkout and in the no-XLA CI leg.
+//!
+//! Knobs (argv after `--` wins; env var is the fallback): `--quick` /
+//! FLASH_SDKDE_QUICK=1 runs the CI-smoke sweep (tiny n, single
+//! iteration), `--sizes <a,b,...>` overrides the n sweep, `--iters <n>` /
+//! FLASH_SDKDE_BENCH_ITERS sets measured iterations.  Dangling flags
+//! (`--sizes` with no value, `--quick=1`) are errors, not silent no-ops.
+
+use anyhow::{anyhow, Result};
+
+use flash_sdkde::bench_harness::{linalg, RunSpec};
+use flash_sdkde::util::cli::{scan_raw_flag, scan_raw_option};
+
+fn main() -> Result<()> {
+    let args = || std::env::args().skip(1);
+    let quick = scan_raw_flag("quick", args()).map_err(anyhow::Error::msg)?
+        || std::env::var("FLASH_SDKDE_QUICK")
+            .map(|v| v == "1" || v.eq_ignore_ascii_case("true"))
+            .unwrap_or(false);
+    let mut spec = if quick { RunSpec::new(0, 1) } else { RunSpec::new(1, 3) };
+    if let Some(iters) = scan_raw_option("iters", args())
+        .map_err(anyhow::Error::msg)?
+        .or_else(|| std::env::var("FLASH_SDKDE_BENCH_ITERS").ok())
+    {
+        spec = RunSpec::new(spec.warmup, iters.parse()?);
+    }
+    let sizes = match scan_raw_option("sizes", args()).map_err(anyhow::Error::msg)? {
+        Some(list) => list
+            .split(',')
+            .map(|t| t.trim().parse::<usize>().map_err(|e| anyhow!("--sizes: {e}")))
+            .collect::<Result<Vec<_>>>()?,
+        None if quick => linalg::QUICK_SIZES.to_vec(),
+        None => linalg::DEFAULT_SIZES.to_vec(),
+    };
+    linalg::kernel_ops(spec, &sizes)?.emit("linalg");
+    Ok(())
+}

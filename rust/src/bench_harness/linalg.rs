@@ -1,0 +1,118 @@
+//! Kernel-ops benchmark — the linear-algebra pipeline family (MatVec,
+//! kernel PCA, MMD; DESIGN.md §17) on the native flash tiles, with
+//! **zero artifacts and zero XLA**: compiled into every build, like
+//! [`native_cmp`](super::native_cmp) and [`frontier`](super::frontier).
+//!
+//! Per train size on the paper's 16-d mixture the sweep measures:
+//!
+//! * `matvec` — one weighted `K·v` pass over `m = n/8` query rows,
+//!   against the same-shape `kde` pass.  Both ride the identical
+//!   `kernel_sum` tiles, so the `mv/kde` ratio should hover at ~1× —
+//!   drift is a regression in the effective-weights factoring.
+//! * `pca` — a fixed [`PCA_SWEEPS`]-sweep power iteration on the
+//!   centered kernel matrix (`tol` pinned far below f32 resolution so
+//!   every run does identical work: each sweep is one n-row MatVec).
+//! * `mmd` — the two-sample statistic against an equal-size fresh draw
+//!   (three kernel sums, n² + n·m + m² pairs).
+//!
+//! BENCHMARKS.md §"Kernel ops" tracks the largest-n row across PRs.
+
+use anyhow::Result;
+
+use crate::data::mixture::by_dim;
+use crate::estimator::bandwidth;
+use crate::estimator::flash::{self, PreparedTrain, TileConfig};
+use crate::linalg::{kernel_pca, mmd, PcaOpts};
+use crate::util::rng::Pcg64;
+
+use super::report::{fmt_ms, Table};
+use super::runner::{black_box, measure, RunSpec};
+
+/// Default n sweep.  PCA and MMD are O(n²d) *per sweep*, so the ceiling
+/// sits well below the density benches' (which pay n·m with m capped).
+pub const DEFAULT_SIZES: &[usize] = &[4_096, 16_384];
+
+/// CI-smoke sweep (`bench --experiment linalg --quick`).
+pub const QUICK_SIZES: &[usize] = &[1_024];
+
+/// Power-iteration sweeps measured per size — fixed (tolerance pinned
+/// unreachably low) so every run times identical work.
+pub const PCA_SWEEPS: usize = 8;
+
+/// Sweep the kernel-ops runtimes on the 16-d mixture: one row per train
+/// size.
+pub fn kernel_ops(spec: RunSpec, sizes: &[usize]) -> Result<Table> {
+    let d = 16;
+    let mix = by_dim(d);
+    let mut table = Table::new(
+        "Kernel ops — MatVec / kernel PCA / MMD runtime (ms), d=16, \
+         default threads",
+        &["n_train", "m", "matvec", "kde", "mv/kde", "pca", "mmd"],
+    );
+    table.note(
+        "matvec and kde share the kernel_sum tiles over the same [m, d] \
+         query block — their ratio is the factoring overhead (expect ~1x)",
+    );
+    table.note(&format!(
+        "pca = {PCA_SWEEPS} power-iteration sweeps (tol pinned below f32 \
+         resolution; each sweep is one n-row MatVec); mmd = biased \
+         V-statistic vs an equal-size fresh draw"
+    ));
+    let cfg = TileConfig::default();
+    for &n in sizes {
+        let m = (n / 8).max(1);
+        let mut rng = Pcg64::new(42, 88);
+        let x = mix.sample(n, &mut rng);
+        let y = mix.sample(m, &mut rng);
+        let x2 = mix.sample(n, &mut rng);
+        let w = vec![1.0f32; n];
+        let v: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let h = bandwidth::sdkde_rate(&x, n, d);
+        let train = PreparedTrain::new(&x, &w, d);
+
+        let matvec_ms = measure("matvec", spec, || {
+            black_box(flash::matvec_prepared(&train, &v, &y, h, &cfg));
+        })
+        .mean_ms();
+        let kde_ms = measure("kde", spec, || {
+            black_box(flash::kde_prepared(&train, &y, h, &cfg));
+        })
+        .mean_ms();
+        let pca_opts = PcaOpts { max_iters: PCA_SWEEPS, tol: 1e-300, ..PcaOpts::default() };
+        let pca_ms = measure("pca", spec, || {
+            black_box(kernel_pca(&x, &w, d, h, &cfg, &pca_opts).unwrap());
+        })
+        .mean_ms();
+        let mmd_ms = measure("mmd", spec, || {
+            black_box(mmd(&x, &x2, d, h, &cfg).unwrap());
+        })
+        .mean_ms();
+
+        table.row(vec![
+            n.to_string(),
+            m.to_string(),
+            fmt_ms(matvec_ms),
+            fmt_ms(kde_ms),
+            format!("{:.2}x", matvec_ms / kde_ms),
+            fmt_ms(pca_ms),
+            fmt_ms(mmd_ms),
+        ]);
+    }
+    table.notes.push(format!("iters={} warmup={}", spec.iters, spec.warmup));
+    Ok(table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kernel_ops_quick_sweep_runs() {
+        let t = kernel_ops(RunSpec::new(0, 1), QUICK_SIZES).unwrap();
+        assert_eq!(t.rows.len(), QUICK_SIZES.len());
+        assert_eq!(t.headers.len(), 7);
+        for row in &t.rows {
+            assert!(row[4].ends_with('x'), "{row:?}");
+        }
+    }
+}

@@ -10,6 +10,7 @@
 #[cfg(feature = "pjrt")]
 pub mod experiments;
 pub mod frontier;
+pub mod linalg;
 pub mod native_cmp;
 pub mod report;
 pub mod runner;

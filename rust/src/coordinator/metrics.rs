@@ -119,6 +119,13 @@ pub struct Metrics {
     /// Score-kernel queries (`OutputMode::Grad`) — routed through the same
     /// queue and batcher as densities, counted separately here.
     pub grad_requests: AtomicU64,
+    /// Kernel matrix–vector queries (`OutputMode::MatVec`) admitted —
+    /// same queue and dispatcher, never co-batched (DESIGN.md §17).
+    pub matvec_requests: AtomicU64,
+    /// Power-iteration sweeps run by the linalg layer (kernel PCA) on
+    /// top of this coordinator — each sweep is one MatVec pass over the
+    /// training rows, so `power_iters × n` bounds the spectral work.
+    pub power_iters: AtomicU64,
     /// Total query points across density evals.
     pub eval_points: AtomicU64,
     /// Failed requests (validation + execution).
@@ -178,6 +185,7 @@ impl Metrics {
             ("fit_requests", Value::from(self.fit_requests.load(Ordering::Relaxed))),
             ("eval_requests", Value::from(self.eval_requests.load(Ordering::Relaxed))),
             ("grad_requests", Value::from(self.grad_requests.load(Ordering::Relaxed))),
+            ("matvec_requests", Value::from(self.matvec_requests.load(Ordering::Relaxed))),
             ("eval_points", Value::from(self.eval_points.load(Ordering::Relaxed))),
             ("errors", Value::from(self.errors.load(Ordering::Relaxed))),
             ("rejected", Value::from(self.rejected.load(Ordering::Relaxed))),
@@ -332,8 +340,9 @@ mod tests {
         let m = Metrics::new();
         m.e2e_latency.record(Duration::from_millis(5));
         let j = m.to_json();
-        for k in ["fit_requests", "eval_requests", "grad_requests", "rejected",
-                  "batches", "queue_wait", "exec_latency", "e2e_latency"] {
+        for k in ["fit_requests", "eval_requests", "grad_requests",
+                  "matvec_requests", "rejected", "batches", "queue_wait",
+                  "exec_latency", "e2e_latency"] {
             assert!(j.get(k).is_some(), "missing {k}");
         }
         assert!(j.get("e2e_latency").unwrap().get("p99_us").is_some());

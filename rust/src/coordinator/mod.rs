@@ -143,6 +143,11 @@ struct QueryJob {
     k: usize,
     mode: OutputMode,
     budget: Budget,
+    /// MatVec only: the train-side vector `v` (`Some` iff `mode` is
+    /// [`OutputMode::MatVec`]; length == model.n, padded to the bucket at
+    /// execution).  MatVec jobs never co-batch, so the vector stays with
+    /// its job (DESIGN.md §17).
+    vec: Option<Vec<f32>>,
     enqueued: Instant,
     reply: Sender<Result<QueryResult, String>>,
     /// The issuing tenant's stat entry; `inflight` was incremented at
@@ -597,7 +602,7 @@ impl Coordinator {
         spec: QuerySpec,
     ) -> Result<QueryTicket> {
         let model = Arc::clone(handle.fitted());
-        let QuerySpec { points, mode, budget, tenant } = spec;
+        let QuerySpec { points, mode, budget, tenant, vec } = spec;
         // A spec naming a tenant must match the model's owner — the
         // handle was resolved tenant-scoped, so a mismatch is caller
         // confusion, not a lookup gap.  Unset rides as the model's.
@@ -613,6 +618,44 @@ impl Coordinator {
         match mode.kernel() {
             QueryKernel::Density => Metrics::inc(&self.metrics.eval_requests),
             QueryKernel::Score => Metrics::inc(&self.metrics.grad_requests),
+            QueryKernel::MatVec => Metrics::inc(&self.metrics.matvec_requests),
+        }
+        // MatVec carries a mandatory train-side vector; every other mode
+        // must not (a stray vector is caller confusion — reject it rather
+        // than silently dropping data).  The vector is sized against the
+        // model's *un-padded* n; padding to the bucket happens at
+        // execution (DESIGN.md §17).
+        match mode.kernel() {
+            QueryKernel::MatVec => {
+                let Some(v) = &vec else {
+                    Metrics::inc(&self.metrics.errors);
+                    bail!("matvec query requires a vector of length n={}", model.n);
+                };
+                if v.len() != model.n {
+                    Metrics::inc(&self.metrics.errors);
+                    bail!(
+                        "matvec vector has {} entries, model has n={} training rows",
+                        v.len(),
+                        model.n
+                    );
+                }
+                // Exact-only: the approximate path's estimators are
+                // density-shaped (DESIGN.md §14) and a silently-exact
+                // "approx" matvec would misreport what was served.
+                if !budget.is_exact() {
+                    Metrics::inc(&self.metrics.errors);
+                    bail!("matvec queries are exact-only: approx budgets are not supported");
+                }
+            }
+            _ => {
+                if vec.is_some() {
+                    Metrics::inc(&self.metrics.errors);
+                    bail!(
+                        "mode {:?} does not take a vector (only matvec does)",
+                        mode.as_str()
+                    );
+                }
+            }
         }
         // Re-validate the budget at the queue boundary: `Budget::Approx`
         // is constructible with raw fields, and a NaN/0 budget must be a
@@ -662,6 +705,7 @@ impl Coordinator {
             k,
             mode,
             budget,
+            vec,
             enqueued: Instant::now(),
             reply,
             tenant: Arc::clone(&tstat),
@@ -697,6 +741,86 @@ impl Coordinator {
     /// flat `[k, d]` buffer.
     pub fn grad(&self, handle: &ModelHandle, points: Vec<f32>) -> Result<QueryResult> {
         self.query(handle, QuerySpec::grad(points))
+    }
+
+    /// Weighted kernel matrix–vector product `(K·v)_i = Σ_j w_j v_j
+    /// exp(−‖y_i−x_j‖²/(2h²))` under a fitted model (DESIGN.md §17).
+    /// `v` must have exactly `n` entries (the model's un-padded training
+    /// count); `points` is row-major `[k, d]` and `values` comes back as
+    /// a flat `[k]` buffer.  Served through the same bounded queue and
+    /// dispatcher as densities, but never co-batched with them.
+    pub fn matvec(
+        &self,
+        handle: &ModelHandle,
+        points: Vec<f32>,
+        v: Vec<f32>,
+    ) -> Result<QueryResult> {
+        self.query(handle, QuerySpec::matvec(points, v))
+    }
+
+    /// Kernel PCA over a fitted model's resident training set: the top
+    /// eigenpair of the centered kernel matrix at the model's bandwidth,
+    /// by power iteration where every sweep is one MatVec query through
+    /// the serving path (queue, batcher, engine — `power_iters` counts
+    /// sweeps, `matvec_queries` counts executions).  For SD-KDE models
+    /// the resident set is the *debiased* (score-shifted) one —
+    /// DESIGN.md §17.
+    pub fn kernel_pca(
+        &self,
+        handle: &ModelHandle,
+        opts: &crate::linalg::PcaOpts,
+    ) -> Result<crate::linalg::PcaResult> {
+        let model = handle.fitted();
+        let (n, d) = (model.n, model.d);
+        let points: Vec<f32> = model.x.data()[..n * d].to_vec();
+        let active = vec![true; n];
+        crate::linalg::power_iteration(&active, opts, |v| {
+            Metrics::inc(&self.metrics.power_iters);
+            let res = self.query(
+                handle,
+                QuerySpec::matvec(points.clone(), v.to_vec()),
+            )?;
+            Ok(res.values.iter().map(|&x| x as f64).collect())
+        })
+    }
+
+    /// MMD between a fitted model's resident training set and a client
+    /// `sample` (row-major `[m, d]`), at the model's bandwidth.  The two
+    /// model-side kernel sums run as MatVec queries through the serving
+    /// path; the sample-side self-sum runs locally (there is no fitted
+    /// model to query it against).  For SD-KDE models the model side is
+    /// the *debiased* set — DESIGN.md §17.
+    pub fn mmd(
+        &self,
+        handle: &ModelHandle,
+        sample: Vec<f32>,
+    ) -> Result<crate::linalg::MmdResult> {
+        let model = handle.fitted();
+        let (n, d) = (model.n, model.d);
+        if sample.is_empty() || sample.len() % d != 0 {
+            bail!("sample must be a non-empty [m, {d}] row-major buffer");
+        }
+        let m = sample.len() / d;
+        let ones_n = vec![1.0f32; n];
+        let points: Vec<f32> = model.x.data()[..n * d].to_vec();
+        let sum64 = |r: QueryResult| -> f64 {
+            r.values.iter().map(|&x| x as f64).sum()
+        };
+        let s_xx = sum64(self.matvec(handle, points, ones_n.clone())?);
+        let s_xy = sum64(self.matvec(handle, sample.clone(), ones_n)?);
+        let ones_m = vec![1.0f32; m];
+        let s_yy: f64 = crate::estimator::flash::matvec(
+            &sample,
+            &ones_m,
+            &ones_m,
+            &sample,
+            d,
+            model.h,
+            &crate::estimator::flash::TileConfig::default(),
+        )
+        .iter()
+        .sum();
+        Ok(crate::linalg::mmd_from_sums(s_xx, s_xy, s_yy, n, m))
     }
 
     /// Drop the model this handle refers to from the registry.  Acts on
@@ -769,6 +893,21 @@ impl Coordinator {
                     // Native prepare cache (DESIGN.md §11); 0/0 on PJRT.
                     ("prepare_hits", Value::from(store_stats.prepare_hits)),
                     ("prepare_misses", Value::from(store_stats.prepare_misses)),
+                    // Kernel-matrix linear algebra (DESIGN.md §17).
+                    // `matvec_queries` is backend-counted (0 on PJRT,
+                    // which has no matvec artifacts); `power_iters` is
+                    // coordinator-counted — the linalg layer reports each
+                    // power-iteration sweep, and a sweep is one MatVec
+                    // pass over the training rows.
+                    ("matvec_queries", Value::from(store_stats.matvec_queries)),
+                    (
+                        "power_iters",
+                        Value::from(
+                            self.metrics
+                                .power_iters
+                                .load(std::sync::atomic::Ordering::Relaxed),
+                        ),
+                    ),
                     // Tile-tuning table behaviour (DESIGN.md §13); both 0
                     // when no table is loaded (and always 0 on PJRT).
                     ("tuned_lookups", Value::from(store_stats.tuned_lookups)),
@@ -852,10 +991,15 @@ fn dispatcher_loop(
         // keyed by its offset within the executed request (DESIGN.md
         // §14), and co-batching would make that offset depend on what
         // else happened to be queued, breaking bitwise reproducibility.
+        // MatVec jobs never co-batch either: each carries its own
+        // train-side vector, so two MatVec requests are different
+        // executions even against the same model (DESIGN.md §17) — the
+        // kernel-match predicate below rejects MatVec followers, and the
+        // head guard keeps a MatVec head from pulling any followers in.
         let mut budget = cfg.batch_max_queries.saturating_sub(head.k);
         let head_model = Arc::clone(&head.model);
         let head_kernel = head.mode.kernel();
-        let followers = if head.budget.is_exact() {
+        let followers = if head.budget.is_exact() && head_kernel != QueryKernel::MatVec {
             queue.drain_matching(usize::MAX, |j| {
                 if Arc::ptr_eq(&j.model, &head_model)
                     && j.mode.kernel() == head_kernel
@@ -965,12 +1109,29 @@ fn run_model_query(
     };
 
     // Gradient artifacts ship in flash (+gemm) only; serve flash
-    // regardless of the model's eval variant.
+    // regardless of the model's eval variant.  MatVec likewise: the
+    // kernel-matrix pipeline is flash-only (DESIGN.md §17).
     let (pipeline, variant, width) = match kernel {
         QueryKernel::Density => {
             (model.kind.eval_pipeline(), model.variant, 1usize)
         }
         QueryKernel::Score => ("score_eval", Variant::Flash, d),
+        QueryKernel::MatVec => ("matvec", Variant::Flash, 1usize),
+    };
+
+    // MatVec jobs never co-batch, so the batch is exactly the head and
+    // its vector is the batch's.  Pad it to the train bucket once, up
+    // front — every chunk of query rows shares the same train side.
+    let vec_input: Option<Arc<HostTensor>> = if kernel == QueryKernel::MatVec {
+        let v = batch[0]
+            .vec
+            .as_ref()
+            .ok_or_else(|| anyhow!("matvec job lost its vector"))?;
+        let mut padded = vec![0.0f32; model.bucket_n];
+        padded[..v.len()].copy_from_slice(v);
+        Some(Arc::new(HostTensor::vec1(padded)))
+    } else {
+        None
     };
     let manifest = engine.manifest();
     let m_buckets: Vec<usize> = manifest
@@ -1006,13 +1167,17 @@ fn run_model_query(
 
         // Resident tensors cross by Arc (no copy on the hot path).  The
         // score kernel takes the same inputs: bandwidth of the *fitted*
-        // density.
-        let inputs = vec![
+        // density.  MatVec inserts its padded train-side vector between
+        // the query rows and the bandwidth (the artifact signature).
+        let mut inputs = vec![
             Arc::clone(&model.x),
             Arc::clone(&model.w),
             Arc::new(y),
-            Arc::new(HostTensor::scalar(model.h as f32)),
         ];
+        if let Some(v) = &vec_input {
+            inputs.push(Arc::clone(v));
+        }
+        inputs.push(Arc::new(HostTensor::scalar(model.h as f32)));
         // Approx budget: offer the chunk to the backend's approximate
         // path with the chunk's global row offset (so chunking never
         // moves a result); either fallback outcome — an unsupported

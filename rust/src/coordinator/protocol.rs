@@ -15,8 +15,9 @@
 //!   {"v":2,"op":"ping"}
 //!   {"v":2,"op":"fit","model":"m1","estimator":"sdkde","d":16,
 //!    "points":[[...],...], "h":0.5?, "h_score":0.35?, "variant":"flash"?}
-//!   {"v":2,"op":"query","model":"m1","mode":"density|log_density|grad",
-//!    "points":[[...],...], "rel_err":0.1?, "seed":42?}
+//!   {"v":2,"op":"query","model":"m1",
+//!    "mode":"density|log_density|grad|matvec",
+//!    "points":[[...],...], "vec":[...]?, "rel_err":0.1?, "seed":42?}
 //!   {"v":2,"op":"models"} | {"v":2,"op":"stats"}
 //!   {"v":2,"op":"delete","model":"m1"}
 //!
@@ -72,6 +73,14 @@
 //! fields are optional and additive like `"epoch"` and the protocol
 //! version stays 2.  Invalid budgets are parse-time errors, mirroring the
 //! typed validation at every other boundary.
+//!
+//! **MatVec vector** (DESIGN.md §17): `mode: "matvec"` query frames carry
+//! a mandatory flat `"vec": [v_1 .. v_n]` — the train-side vector of the
+//! kernel matrix–vector product, one entry per (un-padded) training row.
+//! The field is rejected on every other mode, and frames without it parse
+//! exactly as before, so the addition is optional-and-additive in the
+//! same sense as `"epoch"`/`"tenant"`: every pre-MatVec line — v1 or v2 —
+//! is byte-identical on the wire, and the protocol version stays 2.
 
 use anyhow::{anyhow, bail, Result};
 
@@ -537,6 +546,28 @@ impl Request {
                 let (points, _k) = parse_points(v.get("points").unwrap(), d)?;
                 let mut spec =
                     QuerySpec::new(points, mode).with_budget(parse_budget(&v)?);
+                // MatVec (protocol v2, additive): a flat train-side
+                // vector rides in 'vec'.  Frames without it are parsed
+                // exactly as before, so every v1/v2 density or grad line
+                // round-trips byte-identically (DESIGN.md §17).
+                match (mode, v.get("vec")) {
+                    (OutputMode::MatVec, Some(raw)) => {
+                        let vec = raw
+                            .to_f32_vec()
+                            .map_err(|e| anyhow!("bad 'vec': {e}"))?;
+                        if vec.is_empty() {
+                            bail!("'vec' must not be empty");
+                        }
+                        spec.vec = Some(vec);
+                    }
+                    (OutputMode::MatVec, None) => {
+                        bail!("mode \"matvec\" requires a 'vec' array");
+                    }
+                    (_, Some(_)) => {
+                        bail!("'vec' is only valid with mode \"matvec\"");
+                    }
+                    (_, None) => {}
+                }
                 if let Some(t) = parse_tenant(&v)? {
                     spec = spec.tenant(t);
                 }
@@ -622,6 +653,9 @@ impl Request {
                     ("mode", spec.mode.as_str().into()),
                     ("points", points_to_json(&spec.points, *d)),
                 ];
+                if let Some(vec) = &spec.vec {
+                    fields.push(("vec", Value::from_f32_slice(vec)));
+                }
                 if let Budget::Approx { rel_err, seed } = spec.budget {
                     fields.push(("rel_err", Value::Number(rel_err)));
                     if let Some(s) = seed {
@@ -965,16 +999,85 @@ mod tests {
     #[test]
     fn query_request_round_trip_all_modes() {
         for mode in OutputMode::ALL {
+            // MatVec frames carry their mandatory train-side vector; the
+            // other modes must not.
+            let spec = if mode == OutputMode::MatVec {
+                QuerySpec::matvec(vec![0.5, -1.5, 2.0, 0.0], vec![1.0, -2.0, 0.5])
+            } else {
+                QuerySpec::new(vec![0.5, -1.5, 2.0, 0.0], mode)
+            };
             let req = Request::Query {
                 model: "m1".into(),
                 d: 2,
-                spec: QuerySpec::new(vec![0.5, -1.5, 2.0, 0.0], mode),
+                spec,
                 epoch: None,
                 digest: None,
             };
-            let back = Request::parse(&req.to_line()).unwrap();
+            let line = req.to_line();
+            assert_eq!(
+                line.contains("\"vec\":"),
+                mode == OutputMode::MatVec,
+                "{line}"
+            );
+            let back = Request::parse(&line).unwrap();
             assert_eq!(req, back, "mode {mode}");
         }
+    }
+
+    #[test]
+    fn matvec_vector_field_is_gated_to_its_mode() {
+        for bad in [
+            // MatVec without its vector, and with malformed ones.
+            r#"{"v":2,"op":"query","model":"m","mode":"matvec","points":[[1]]}"#,
+            r#"{"v":2,"op":"query","model":"m","mode":"matvec","points":[[1]],"vec":[]}"#,
+            r#"{"v":2,"op":"query","model":"m","mode":"matvec","points":[[1]],"vec":"x"}"#,
+            r#"{"v":2,"op":"query","model":"m","mode":"matvec","points":[[1]],"vec":[1,"x"]}"#,
+            // A stray vector on every non-matvec shape, v1 aliases included.
+            r#"{"v":2,"op":"query","model":"m","points":[[1]],"vec":[1.0]}"#,
+            r#"{"v":2,"op":"query","model":"m","mode":"grad","points":[[1]],"vec":[1.0]}"#,
+            r#"{"op":"eval","model":"m","points":[[1]],"vec":[1.0]}"#,
+        ] {
+            assert!(Request::parse(bad).is_err(), "accepted: {bad}");
+        }
+        // The well-formed frame parses into the typed spec.
+        let req = Request::parse(
+            r#"{"v":2,"op":"query","model":"m","mode":"matvec","points":[[1.0]],"vec":[2.0,3.0]}"#,
+        )
+        .unwrap();
+        match req {
+            Request::Query { spec, .. } => {
+                assert_eq!(spec.mode, OutputMode::MatVec);
+                assert_eq!(spec.vec.as_deref(), Some(&[2.0f32, 3.0][..]));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn pre_matvec_frames_are_byte_identical() {
+        // The 'vec' field is additive: a density line renders exactly the
+        // serialization the pre-MatVec emitter produced (same fields, no
+        // leakage), byte for byte.
+        let line = Request::Query {
+            model: "m".into(),
+            d: 1,
+            spec: QuerySpec::density(vec![0.5]),
+            epoch: None,
+            digest: None,
+        }
+        .to_line();
+        let expected = json::to_string(&Value::object(vec![
+            ("v", Value::from(PROTOCOL_VERSION)),
+            ("op", "query".into()),
+            ("model", "m".into()),
+            ("mode", "density".into()),
+            (
+                "points",
+                Value::Array(vec![Value::Array(vec![Value::Number(0.5)])]),
+            ),
+        ]));
+        assert_eq!(line, expected);
+        assert!(!line.contains("\"vec\""), "{line}");
     }
 
     #[test]

@@ -170,6 +170,10 @@ pub enum OutputMode {
     LogDensity,
     /// `∇ log p̂(y)` — `d` values per query row, from the score kernel.
     Grad,
+    /// Kernel matrix–vector product `(K·v)_q` — one value per query row.
+    /// The query carries the train-side vector `v` in
+    /// [`QuerySpec::vec`]; unnormalized kernel sums (DESIGN.md §17).
+    MatVec,
 }
 
 /// Which artifact family serves a mode; modes sharing a kernel co-batch.
@@ -179,6 +183,10 @@ pub enum QueryKernel {
     Density,
     /// The streaming score artifacts (serve `Grad`).
     Score,
+    /// The kernel matrix–vector artifacts (serve `MatVec`).  MatVec jobs
+    /// carry a per-request train-side vector, so they never co-batch —
+    /// not with density jobs and not with each other.
+    MatVec,
 }
 
 impl OutputMode {
@@ -188,6 +196,7 @@ impl OutputMode {
             "density" => Some(OutputMode::Density),
             "log_density" | "logdensity" | "log-density" => Some(OutputMode::LogDensity),
             "grad" | "gradient" | "score" => Some(OutputMode::Grad),
+            "matvec" | "mat_vec" | "mat-vec" => Some(OutputMode::MatVec),
             _ => None,
         }
     }
@@ -198,30 +207,37 @@ impl OutputMode {
             OutputMode::Density => "density",
             OutputMode::LogDensity => "log_density",
             OutputMode::Grad => "grad",
+            OutputMode::MatVec => "matvec",
         }
     }
 
     /// The kernel family that serves this mode.  `Density` and
     /// `LogDensity` share one execution (the log is a post-scatter
-    /// transform); `Grad` runs the score artifacts.
+    /// transform); `Grad` runs the score artifacts; `MatVec` runs the
+    /// kernel matrix–vector sweep.
     pub fn kernel(&self) -> QueryKernel {
         match self {
             OutputMode::Density | OutputMode::LogDensity => QueryKernel::Density,
             OutputMode::Grad => QueryKernel::Score,
+            OutputMode::MatVec => QueryKernel::MatVec,
         }
     }
 
     /// Output values per query row for a `d`-dimensional model.
     pub fn width(&self, d: usize) -> usize {
         match self.kernel() {
-            QueryKernel::Density => 1,
+            QueryKernel::Density | QueryKernel::MatVec => 1,
             QueryKernel::Score => d,
         }
     }
 
     /// Every output mode (protocol fuzzing, grid tests).
-    pub const ALL: [OutputMode; 3] =
-        [OutputMode::Density, OutputMode::LogDensity, OutputMode::Grad];
+    pub const ALL: [OutputMode; 4] = [
+        OutputMode::Density,
+        OutputMode::LogDensity,
+        OutputMode::Grad,
+        OutputMode::MatVec,
+    ];
 }
 
 impl std::fmt::Display for OutputMode {
@@ -264,12 +280,17 @@ pub struct QuerySpec {
     /// Model lookup is tenant-scoped, so a query only sees its own
     /// tenant's models.
     pub tenant: Option<String>,
+    /// Train-side vector for [`OutputMode::MatVec`] — length must equal
+    /// the model's un-padded sample count `n` at submit.  Must be `None`
+    /// for every other mode (submit rejects a stray vector rather than
+    /// silently ignoring it).
+    pub vec: Option<Vec<f32>>,
 }
 
 impl QuerySpec {
     /// Query with an explicit mode (and the default [`Budget::Exact`]).
     pub fn new(points: Vec<f32>, mode: OutputMode) -> QuerySpec {
-        QuerySpec { points, mode, budget: Budget::Exact, tenant: None }
+        QuerySpec { points, mode, budget: Budget::Exact, tenant: None, vec: None }
     }
 
     /// Density query (`p̂(y)` per row).
@@ -285,6 +306,13 @@ impl QuerySpec {
     /// Gradient query (`∇ log p̂(y)`, `d` values per row).
     pub fn grad(points: Vec<f32>) -> QuerySpec {
         QuerySpec::new(points, OutputMode::Grad)
+    }
+
+    /// Kernel matrix–vector query: `(K·v)_q` per row, where `v` has one
+    /// entry per (un-padded) train sample.  Exact-only: combining this
+    /// with an `Approx` budget is rejected at submit (DESIGN.md §17).
+    pub fn matvec(points: Vec<f32>, v: Vec<f32>) -> QuerySpec {
+        QuerySpec { vec: Some(v), ..QuerySpec::new(points, OutputMode::MatVec) }
     }
 
     /// Set the accuracy budget (validate `Approx` budgets through
@@ -451,6 +479,7 @@ mod tests {
             assert_eq!(OutputMode::parse(mode.as_str()), Some(mode));
         }
         assert_eq!(OutputMode::parse("gradient"), Some(OutputMode::Grad));
+        assert_eq!(OutputMode::parse("mat-vec"), Some(OutputMode::MatVec));
         assert_eq!(OutputMode::parse("warp"), None);
     }
 
@@ -459,9 +488,11 @@ mod tests {
         assert_eq!(OutputMode::Density.kernel(), QueryKernel::Density);
         assert_eq!(OutputMode::LogDensity.kernel(), QueryKernel::Density);
         assert_eq!(OutputMode::Grad.kernel(), QueryKernel::Score);
+        assert_eq!(OutputMode::MatVec.kernel(), QueryKernel::MatVec);
         assert_eq!(OutputMode::Density.width(16), 1);
         assert_eq!(OutputMode::LogDensity.width(16), 1);
         assert_eq!(OutputMode::Grad.width(16), 16);
+        assert_eq!(OutputMode::MatVec.width(16), 1);
     }
 
     #[test]
@@ -469,7 +500,18 @@ mod tests {
         let pts = vec![1.0f32, 2.0];
         assert_eq!(QuerySpec::density(pts.clone()).mode, OutputMode::Density);
         assert_eq!(QuerySpec::log_density(pts.clone()).mode, OutputMode::LogDensity);
-        assert_eq!(QuerySpec::grad(pts).mode, OutputMode::Grad);
+        assert_eq!(QuerySpec::grad(pts.clone()).mode, OutputMode::Grad);
+        for spec in [
+            QuerySpec::density(pts.clone()),
+            QuerySpec::log_density(pts.clone()),
+            QuerySpec::grad(pts.clone()),
+        ] {
+            assert_eq!(spec.vec, None);
+        }
+        let mv = QuerySpec::matvec(pts, vec![1.0, -2.0, 0.5]);
+        assert_eq!(mv.mode, OutputMode::MatVec);
+        assert_eq!(mv.vec.as_deref(), Some(&[1.0f32, -2.0, 0.5][..]));
+        assert!(mv.budget.is_exact());
     }
 
     #[test]

@@ -536,13 +536,39 @@ fn density(
     laplace_term: bool,
     cfg: &TileConfig,
 ) -> Vec<f64> {
+    assert!(train.count > 0.0, "no effective samples");
+    let norm = normalizer(h, train.d) / train.count;
+    kernel_sum(train, y, &train.wf, norm, h, laplace_term, cfg)
+}
+
+/// Core blocked sweep shared by the density kernels and [`matvec`]:
+///
+/// ```text
+/// out_q = scale · Σ_t  weff[t] · term(‖y_q − x_t‖² / (2h²))
+/// ```
+///
+/// where `term` is the Gaussian exponential (or its Laplace-corrected
+/// form) and `weff` is a per-train-row effective weight of length `n`.
+/// The density kernels pass `weff = train.wf` and `scale = normalizer /
+/// count` — byte-for-byte the historical loop, so densities are bitwise
+/// unaffected by this factoring.  MatVec passes `weff[t] = wf[t]·v[t]`
+/// and `scale = 1.0`, riding the identical tile/accumulate discipline
+/// (and therefore the same block-shape/thread invariance contract).
+fn kernel_sum(
+    train: &PreparedTrain,
+    y: &[f32],
+    weff: &[f64],
+    scale: f64,
+    h: f64,
+    laplace_term: bool,
+    cfg: &TileConfig,
+) -> Vec<f64> {
     let cfg = cfg.checked();
     let d = train.d;
     assert_eq!(y.len() % d, 0, "y must be [m, d] row-major");
+    assert_eq!(weff.len(), train.n, "weff must be [n]");
     let m = y.len() / d;
     let sq_y = sq_norms(y, m, d);
-    assert!(train.count > 0.0, "no effective samples");
-    let norm = normalizer(h, d) / train.count;
     let inv2h2 = 1.0 / (2.0 * h * h);
     let half_d = d as f64 / 2.0;
     let n = train.n;
@@ -564,7 +590,7 @@ fn density(
                         *a,
                         sq_y[q0 + q],
                         &train.sq_x[t0..t0 + bt],
-                        &train.wf[t0..t0 + bt],
+                        &weff[t0..t0 + bt],
                         &dots[q * bt..q * bt + bt],
                         inv2h2,
                         half_d,
@@ -574,12 +600,60 @@ fn density(
                 t0 += bt;
             }
             for q in 0..bq {
-                chunk[q0 + q - qa] = acc[q] * norm;
+                chunk[q0 + q - qa] = acc[q] * scale;
             }
             q0 += bq;
         }
     });
     out
+}
+
+/// Weighted kernel matrix–vector product over the Gaussian kernel:
+///
+/// ```text
+/// out_q = Σ_j  w_j · v_j · exp(−‖y_q − x_j‖² / (2h²))
+/// ```
+///
+/// i.e. `K·v` for the (masked, weighted) kernel matrix `K[q][j] =
+/// w_j·exp(−‖y_q−x_j‖²/(2h²))` — **unnormalized**: no `(2πh²)^{-d/2}` or
+/// `1/Σw` factor, because the linalg ops ([`crate::linalg`]) compose raw
+/// kernel sums and apply their own normalization.  Masked rows
+/// (`w_j == 0`) contribute nothing regardless of `v_j`, so a padded
+/// bucket with zeroed `v` tail is exactly the un-padded product.
+/// One-shot; see [`matvec_prepared`] for the cached-train entry point.
+pub fn matvec(
+    x: &[f32],
+    w: &[f32],
+    v: &[f32],
+    y: &[f32],
+    d: usize,
+    h: f64,
+    cfg: &TileConfig,
+) -> Vec<f64> {
+    matvec_prepared(&PreparedTrain::new(x, w, d), v, y, h, cfg)
+}
+
+/// [`matvec`] over an already-[`PreparedTrain`] train side.  `v` must be
+/// `[n]` (one entry per train row, masked rows included).  Runs the same
+/// blocked f32-dot / f64-accumulate sweep as the density kernels, so the
+/// result carries the identical invariance contract: bit-exact across
+/// `block_q`/`block_t`/`threads` on the auto-vec path, f64
+/// re-association noise (~1e-15) only under the `simd` flag.
+pub fn matvec_prepared(
+    train: &PreparedTrain,
+    v: &[f32],
+    y: &[f32],
+    h: f64,
+    cfg: &TileConfig,
+) -> Vec<f64> {
+    assert_eq!(v.len(), train.n, "v must be [n] (one entry per train row)");
+    let weff: Vec<f64> = train
+        .wf
+        .iter()
+        .zip(v)
+        .map(|(&wi, &vi)| wi * vi as f64)
+        .collect();
+    kernel_sum(train, y, &weff, 1.0, h, false, cfg)
 }
 
 /// Score of the weighted KDE of `x` at query rows `y` — the flash twin of
@@ -879,6 +953,135 @@ mod tests {
         }
     }
 
+    /// Dense scalar MatVec oracle: materialize K row by row, multiply.
+    fn matvec_oracle(
+        x: &[f32],
+        w: &[f32],
+        v: &[f32],
+        y: &[f32],
+        d: usize,
+        h: f64,
+    ) -> Vec<f64> {
+        let n = w.len();
+        let m = y.len() / d;
+        let inv2h2 = 1.0 / (2.0 * h * h);
+        let mut out = vec![0.0f64; m];
+        for (q, o) in out.iter_mut().enumerate() {
+            let yq = &y[q * d..(q + 1) * d];
+            for j in 0..n {
+                let mut d2 = 0.0f64;
+                for k in 0..d {
+                    let diff = (yq[k] - x[j * d + k]) as f64;
+                    d2 += diff * diff;
+                }
+                *o += w[j] as f64
+                    * v[j] as f64
+                    * (-d2 * inv2h2).exp();
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matvec_matches_dense_oracle() {
+        let (n, m, d) = (113, 19, 3);
+        let x = sample(n, d, 31);
+        let y = sample(m, d, 32);
+        let v = sample(n, 1, 33);
+        let mut w = vec![1.0f32; n];
+        w[4] = 0.0;
+        w[n - 1] = 0.0;
+        let got = matvec(&x, &w, &v, &y, d, 0.6, &TileConfig::default());
+        let want = matvec_oracle(&x, &w, &v, &y, d, 0.6);
+        assert_close(&got, &want, 1e-4);
+    }
+
+    #[test]
+    fn matvec_masked_rows_ignore_v() {
+        // A masked row contributes nothing no matter what v holds there —
+        // the padded-bucket contract the serving layer relies on.
+        let (n, m, d) = (40, 7, 2);
+        let x = sample(n, d, 34);
+        let y = sample(m, d, 35);
+        let mut w = vec![1.0f32; n];
+        w[10] = 0.0;
+        let v = vec![1.0f32; n];
+        let mut v_poison = v.clone();
+        v_poison[10] = 1.0e20;
+        let cfg = TileConfig::serial();
+        assert_eq!(
+            matvec(&x, &w, &v, &y, d, 0.5, &cfg),
+            matvec(&x, &w, &v_poison, &y, d, 0.5, &cfg),
+        );
+    }
+
+    #[test]
+    fn matvec_prepared_is_bitwise_identical_to_oneshot() {
+        let (n, m, d) = (90, 13, 4);
+        let x = sample(n, d, 36);
+        let y = sample(m, d, 37);
+        let v = sample(n, 1, 38);
+        let w = vec![1.0f32; n];
+        let cfg = TileConfig::default();
+        let train = PreparedTrain::new(&x, &w, d);
+        for _ in 0..2 {
+            assert_eq!(
+                matvec_prepared(&train, &v, &y, 0.5, &cfg),
+                matvec(&x, &w, &v, &y, d, 0.5, &cfg)
+            );
+        }
+    }
+
+    #[test]
+    fn matvec_block_shapes_are_bitwise_invariant_on_the_autovec_path() {
+        // MatVec rides the same kernel_sum sweep as the densities, so it
+        // inherits the tuner's invariance contract verbatim.
+        let (n, m, d) = (157, 29, 3);
+        let x = sample(n, d, 39);
+        let y = sample(m, d, 40);
+        let v = sample(n, 1, 41);
+        let mut w = vec![1.0f32; n];
+        w[5] = 0.0;
+        let base = TileConfig::scalar_tiles();
+        for (bq, bt) in [(1, 1), (5, 7), (64, 33), (256, 1024)] {
+            let cfg = TileConfig { block_q: bq, block_t: bt, ..base };
+            assert_eq!(
+                matvec(&x, &w, &v, &y, d, 0.5, &cfg),
+                matvec(&x, &w, &v, &y, d, 0.5, &base),
+                "matvec moved at blocks {bq}x{bt}"
+            );
+        }
+        // Threads split query rows only: bit-identical too.
+        let threaded = TileConfig { threads: 4, ..base };
+        assert_eq!(
+            matvec(&x, &w, &v, &y, d, 0.5, &threaded),
+            matvec(&x, &w, &v, &y, d, 0.5, &base),
+        );
+    }
+
+    #[test]
+    fn density_unchanged_by_kernel_sum_factoring() {
+        // The refactor guard: densities through the generalized
+        // kernel_sum must stay bitwise what the historical density()
+        // loop produced — cross-check against the scalar oracle at the
+        // established tolerance, and ones-vector MatVec against the
+        // unnormalized kde sum.
+        let (n, m, d) = (97, 23, 3);
+        let x = sample(n, d, 1);
+        let y = sample(m, d, 2);
+        let w = vec![1.0f32; n];
+        let cfg = TileConfig::scalar_tiles();
+        let dens = kde(&x, &w, &y, d, 0.6, &cfg);
+        let want = native::kde(&x, &w, &y, d, 0.6);
+        assert_close(&dens, &want, 1e-4);
+        // K·1 = count · density / normalizer.
+        let ones = vec![1.0f32; n];
+        let mv = matvec(&x, &w, &ones, &y, d, 0.6, &cfg);
+        let norm = super::normalizer(0.6, d) / n as f64;
+        let scaled: Vec<f64> = dens.iter().map(|v| v / norm).collect();
+        assert_close(&mv, &scaled, 1e-12);
+    }
+
     #[test]
     fn simd_flag_agrees_with_scalar_tiles() {
         // With the `simd` feature: the dot tile is bit-equal across the
@@ -910,6 +1113,15 @@ mod tests {
                 ((p - q) / scale).abs() < 1e-13,
                 "score moved across simd flag: {p} vs {q}"
             );
+        }
+
+        // MatVec rides the density accumulate: same re-association bound.
+        let v = sample(n, 1, 15);
+        let a = matvec(&x, &w, &v, &y, d, 0.6, &on);
+        let b = matvec(&x, &w, &v, &y, d, 0.6, &off);
+        for (p, q) in a.iter().zip(&b) {
+            let rel = (p - q).abs() / q.abs().max(1e-30);
+            assert!(rel < 1e-12, "matvec moved across simd flag: {p} vs {q}");
         }
     }
 }

@@ -60,6 +60,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod estimator;
+pub mod linalg;
 pub mod runtime;
 pub mod tuner;
 pub mod util;

@@ -1,0 +1,168 @@
+//! Maximum mean discrepancy: a two-sample kernel statistic from three
+//! kernel sums (DESIGN.md §17).
+//!
+//! The biased V-statistic at bandwidth `h`:
+//!
+//! ```text
+//! MMD²(X, Y) = S_XX/n² + S_YY/m² − 2·S_XY/(n·m)
+//!   S_AB = Σ_i Σ_j exp(−‖a_i − b_j‖²/(2h²))
+//! ```
+//!
+//! Each `S` is one MatVec sweep with an all-ones vector, summed — so the
+//! statistic inherits the flash path's tiling and determinism.  The
+//! Gaussian kernel is characteristic, so MMD² ≥ 0 with equality iff the
+//! empirical measures coincide; fp round-off can land a same-sample pair
+//! a hair below zero, which [`mmd_from_sums`] clamps.
+
+use anyhow::{bail, Result};
+
+use crate::estimator::flash::{self, PreparedTrain, TileConfig};
+
+/// A computed MMD statistic.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MmdResult {
+    /// Squared statistic (biased V-estimate), clamped at 0.
+    pub mmd2: f64,
+    /// `sqrt(mmd2)` — the distance on the RKHS mean embeddings.
+    pub mmd: f64,
+    /// Rows in the first sample.
+    pub n: usize,
+    /// Rows in the second sample.
+    pub m: usize,
+}
+
+/// Combine the three kernel sums into the biased V-statistic.  Split out
+/// so the serving path (`Coordinator::mmd`, which computes its sums
+/// through MatVec queries) and the local path share one formula.
+pub fn mmd_from_sums(s_xx: f64, s_xy: f64, s_yy: f64, n: usize, m: usize) -> MmdResult {
+    let (nf, mf) = (n as f64, m as f64);
+    let mmd2 = (s_xx / (nf * nf) + s_yy / (mf * mf) - 2.0 * s_xy / (nf * mf)).max(0.0);
+    MmdResult { mmd2, mmd: mmd2.sqrt(), n, m }
+}
+
+/// MMD between two row-major samples `x: [n, d]` and `y: [m, d]` under
+/// the Gaussian kernel at bandwidth `h`.
+pub fn mmd(x: &[f32], y: &[f32], d: usize, h: f64, cfg: &TileConfig) -> Result<MmdResult> {
+    if d == 0 || x.is_empty() || x.len() % d != 0 {
+        bail!("x must be a non-empty [n, {d}] row-major buffer");
+    }
+    if y.is_empty() || y.len() % d != 0 {
+        bail!("y must be a non-empty [m, {d}] row-major buffer");
+    }
+    if !(h > 0.0) {
+        bail!("bandwidth must be positive (got {h})");
+    }
+    let n = x.len() / d;
+    let m = y.len() / d;
+    let cfg = cfg.checked();
+    let ones_n = vec![1.0f32; n];
+    let ones_m = vec![1.0f32; m];
+    // The X-side prepared train serves both the XX and the XY sums.
+    let train_x = PreparedTrain::new(x, &ones_n, d);
+    let s_xx: f64 = flash::matvec_prepared(&train_x, &ones_n, x, h, &cfg)
+        .iter()
+        .sum();
+    let s_xy: f64 = flash::matvec_prepared(&train_x, &ones_n, y, h, &cfg)
+        .iter()
+        .sum();
+    let s_yy: f64 = flash::matvec(y, &ones_m, &ones_m, y, d, h, &cfg)
+        .iter()
+        .sum();
+    Ok(mmd_from_sums(s_xx, s_xy, s_yy, n, m))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn sample(n: usize, d: usize, seed: u64) -> Vec<f32> {
+        Pcg64::seeded(seed).normal_vec_f32(n * d)
+    }
+
+    #[test]
+    fn identical_samples_give_zero() {
+        let x = sample(80, 3, 5);
+        let res = mmd(&x, &x, 3, 0.7, &TileConfig::default()).unwrap();
+        // S_XX = S_XY = S_YY exactly, so the combination cancels to fp
+        // noise and the clamp pins it at 0 — but never negative.
+        assert!(res.mmd2 >= 0.0);
+        assert!(res.mmd2 < 1e-9, "mmd2 = {}", res.mmd2);
+    }
+
+    #[test]
+    fn matches_dense_oracle() {
+        let (n, m, d, h) = (37, 23, 2, 0.9);
+        let x = sample(n, d, 10);
+        let y = sample(m, d, 11);
+        let res = mmd(&x, &y, d, h, &TileConfig::default()).unwrap();
+        let k = |a: &[f32], b: &[f32]| -> f64 {
+            let sq: f64 = a
+                .iter()
+                .zip(b)
+                .map(|(&p, &q)| (p as f64 - q as f64) * (p as f64 - q as f64))
+                .sum();
+            (-sq / (2.0 * h * h)).exp()
+        };
+        let mut s_xx = 0.0;
+        let mut s_xy = 0.0;
+        let mut s_yy = 0.0;
+        for i in 0..n {
+            for j in 0..n {
+                s_xx += k(&x[i * d..(i + 1) * d], &x[j * d..(j + 1) * d]);
+            }
+            for j in 0..m {
+                s_xy += k(&x[i * d..(i + 1) * d], &y[j * d..(j + 1) * d]);
+            }
+        }
+        for i in 0..m {
+            for j in 0..m {
+                s_yy += k(&y[i * d..(i + 1) * d], &y[j * d..(j + 1) * d]);
+            }
+        }
+        let oracle = mmd_from_sums(s_xx, s_xy, s_yy, n, m);
+        let rel = (res.mmd2 - oracle.mmd2).abs() / oracle.mmd2.max(1e-12);
+        assert!(rel < 1e-4, "mmd2 {} vs oracle {}", res.mmd2, oracle.mmd2);
+    }
+
+    #[test]
+    fn shifted_distribution_scores_higher_than_fresh_draw() {
+        let (n, d, h) = (100, 2, 0.8);
+        let x = sample(n, d, 21);
+        let fresh = sample(n, d, 22);
+        let shifted: Vec<f32> = sample(n, d, 23).iter().map(|&v| v + 3.0).collect();
+        let cfg = TileConfig::default();
+        let near = mmd(&x, &fresh, d, h, &cfg).unwrap();
+        let far = mmd(&x, &shifted, d, h, &cfg).unwrap();
+        assert!(far.mmd2 > 0.1, "shifted mmd2 = {}", far.mmd2);
+        assert!(
+            far.mmd2 > 10.0 * near.mmd2,
+            "far {} vs near {}",
+            far.mmd2,
+            near.mmd2
+        );
+    }
+
+    #[test]
+    fn deterministic_and_symmetric_in_its_arguments() {
+        let x = sample(40, 3, 30);
+        let y = sample(55, 3, 31);
+        let cfg = TileConfig::default();
+        let a = mmd(&x, &y, 3, 0.6, &cfg).unwrap();
+        let b = mmd(&x, &y, 3, 0.6, &cfg).unwrap();
+        assert_eq!(a.mmd2.to_bits(), b.mmd2.to_bits());
+        // MMD(X, Y) == MMD(Y, X) up to fp re-association of the sums.
+        let c = mmd(&y, &x, 3, 0.6, &cfg).unwrap();
+        let rel = (a.mmd2 - c.mmd2).abs() / a.mmd2.max(1e-12);
+        assert!(rel < 1e-10, "{} vs {}", a.mmd2, c.mmd2);
+    }
+
+    #[test]
+    fn degenerate_inputs_are_typed_errors() {
+        let x = sample(4, 2, 1);
+        assert!(mmd(&x, &x, 0, 0.5, &TileConfig::default()).is_err());
+        assert!(mmd(&[], &x, 2, 0.5, &TileConfig::default()).is_err());
+        assert!(mmd(&x, &x[..3], 2, 0.5, &TileConfig::default()).is_err());
+        assert!(mmd(&x, &x, 2, 0.0, &TileConfig::default()).is_err());
+    }
+}

@@ -1,0 +1,25 @@
+//! Kernel-matrix linear algebra on top of the flash MatVec primitive
+//! (DESIGN.md §17).
+//!
+//! The estimators serve *pointwise* functionals of the kernel matrix
+//! (densities, scores); this layer serves *global* ones.  Everything here
+//! reduces to repeated weighted kernel matrix–vector products
+//! `(K·v)_i = Σ_j w_j v_j exp(−‖y_i−x_j‖²/(2h²))`, so it inherits the
+//! flash path's tiling, threading and determinism story wholesale —
+//! results are block-shape- and thread-count-inert exactly like
+//! densities, and every randomized start is seeded.
+//!
+//! Two consumers:
+//!
+//! * **In-process / CLI**: [`pca::kernel_pca`] and [`mmd::mmd`] take raw
+//!   row-major buffers and run against a local
+//!   [`PreparedTrain`](crate::estimator::flash::PreparedTrain).
+//! * **Serving path**: `Coordinator::kernel_pca` / `Coordinator::mmd`
+//!   drive the same algorithms through MatVec queries against a fitted
+//!   model (queue, batcher, metrics — `power_iters` counts sweeps).
+
+pub mod mmd;
+pub mod pca;
+
+pub use mmd::{mmd, mmd_from_sums, MmdResult};
+pub use pca::{kernel_pca, power_iteration, PcaOpts, PcaResult};

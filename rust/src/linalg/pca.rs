@@ -1,0 +1,409 @@
+//! Kernel PCA: top eigenpair of the centered kernel matrix by power
+//! iteration (DESIGN.md §17).
+//!
+//! The centered kernel matrix is `K̃ = H K H` with `H = I − 11ᵀ/|A|`
+//! taken over the *active* (unmasked) rows `A`; masked rows (`w == 0`)
+//! never contribute — their column is zeroed by the weight inside the
+//! MatVec, their row is zeroed here, and their component entry is pinned
+//! to 0.  The iterate stays centered over `A`, so `K̃u` reduces to one
+//! MatVec sweep plus one re-centering: `H K H u = H (K u)` when
+//! `H u = u`.
+//!
+//! Determinism: the start vector comes from a [`SplitMix64`] stream
+//! seeded by [`PcaOpts::seed`], each draw keyed by row index — equal
+//! seeds give bitwise-equal trajectories, and the MatVec sweeps inherit
+//! the flash path's block-shape/thread-count inertness.
+
+use anyhow::{bail, Result};
+
+use crate::estimator::flash::{self, PreparedTrain, TileConfig};
+use crate::util::rng::SplitMix64;
+
+/// Power-iteration knobs.  All defaults are deterministic.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PcaOpts {
+    /// Sweep cap; iteration stops here even without convergence (the
+    /// result reports `converged: false`).
+    pub max_iters: usize,
+    /// Relative eigenvalue-convergence tolerance:
+    /// `|λ_t − λ_{t−1}| ≤ tol · max(|λ_t|, 1)` stops the loop.  Sweeps
+    /// cross an f32 boundary, so tolerances far below ~1e-6 may never
+    /// trigger.
+    pub tol: f64,
+    /// Seed of the start-vector stream (equal seeds ⇒ bitwise-equal runs).
+    pub seed: u64,
+}
+
+impl Default for PcaOpts {
+    fn default() -> Self {
+        PcaOpts { max_iters: 200, tol: 1e-5, seed: 0x5EED }
+    }
+}
+
+/// Result of a power iteration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PcaResult {
+    /// Top eigenvalue of the centered kernel matrix (Rayleigh quotient at
+    /// the final iterate).
+    pub eigenvalue: f64,
+    /// Unit top eigenvector, one entry per train row; masked rows are
+    /// exactly 0.  The sign is an artifact of the seed — compare
+    /// components up to sign.
+    pub component: Vec<f32>,
+    /// Sweeps executed (each is one MatVec pass over the train rows).
+    pub iters: u64,
+    /// Whether the eigenvalue tolerance was met before `max_iters`.
+    pub converged: bool,
+}
+
+/// Power iteration over a caller-supplied MatVec sweep.
+///
+/// `active[i]` marks live rows; `sweep(v)` must return `K·v` (any
+/// convention where masked *columns* contribute 0 — the flash MatVec's
+/// `w == 0` does this); masked *rows* of the sweep output are discarded
+/// here.  Split out from [`kernel_pca`] so the serving path can drive the
+/// identical algorithm through MatVec queries (`Coordinator::kernel_pca`)
+/// and count sweeps.
+pub fn power_iteration<F>(
+    active: &[bool],
+    opts: &PcaOpts,
+    mut sweep: F,
+) -> Result<PcaResult>
+where
+    F: FnMut(&[f32]) -> Result<Vec<f64>>,
+{
+    let n = active.len();
+    let n_active = active.iter().filter(|&&a| a).count();
+    if n_active < 2 {
+        bail!("kernel PCA needs at least 2 active rows, got {n_active}");
+    }
+    if opts.max_iters == 0 {
+        bail!("max_iters must be >= 1");
+    }
+    if !(opts.tol > 0.0) {
+        bail!("tol must be positive (got {})", opts.tol);
+    }
+
+    // Seeded start: one draw per row index (masked rows draw and discard,
+    // so the stream alignment never depends on the mask), centered and
+    // normalized over the active set.
+    let mut stream = SplitMix64::new(opts.seed);
+    let mut u: Vec<f64> = (0..n)
+        .map(|i| {
+            let draw = stream.uniform() - 0.5;
+            if active[i] { draw } else { 0.0 }
+        })
+        .collect();
+    center(&mut u, active, n_active);
+    if !normalize(&mut u) {
+        // A uniform draw landing every active entry exactly on the mean is
+        // measure-zero but cheap to repair deterministically.
+        let first = active.iter().position(|&a| a).expect("n_active >= 2");
+        let second = active.iter().skip(first + 1).position(|&a| a).expect("n_active >= 2");
+        u[first] = 0.5f64.sqrt();
+        u[first + 1 + second] = -(0.5f64.sqrt());
+    }
+
+    let mut eigenvalue = 0.0f64;
+    let mut iters = 0u64;
+    let mut converged = false;
+    for _ in 0..opts.max_iters {
+        iters += 1;
+        let v32: Vec<f32> = u.iter().map(|&x| x as f32).collect();
+        let mut b = sweep(&v32)?;
+        if b.len() != n {
+            bail!("sweep returned {} entries for {n} rows", b.len());
+        }
+        for (bi, &a) in b.iter_mut().zip(active) {
+            if !a {
+                *bi = 0.0;
+            }
+        }
+        center(&mut b, active, n_active);
+        let prev = eigenvalue;
+        // Rayleigh quotient: u is unit, so λ = uᵀ K̃ u = uᵀ b.
+        eigenvalue = u.iter().zip(&b).map(|(&ui, &bi)| ui * bi).sum();
+        if !normalize(&mut b) {
+            // K̃ annihilated the iterate: the centered matrix is (numerically)
+            // zero on the current subspace.  λ = 0 is the honest answer.
+            eigenvalue = 0.0;
+            converged = true;
+            break;
+        }
+        u = b;
+        if iters > 1 && (eigenvalue - prev).abs() <= opts.tol * eigenvalue.abs().max(1.0) {
+            converged = true;
+            break;
+        }
+    }
+
+    Ok(PcaResult {
+        eigenvalue,
+        component: u.iter().map(|&x| x as f32).collect(),
+        iters,
+        converged,
+    })
+}
+
+/// Top eigenpair of the centered kernel matrix of a weighted train set:
+/// `x` row-major `[n, d]` with `n = w.len()`, `w == 0.0` masking rows
+/// exactly as in the estimators, Gaussian kernel at bandwidth `h`.
+pub fn kernel_pca(
+    x: &[f32],
+    w: &[f32],
+    d: usize,
+    h: f64,
+    cfg: &TileConfig,
+    opts: &PcaOpts,
+) -> Result<PcaResult> {
+    if d == 0 || x.len() != w.len() * d {
+        bail!("x must be [n, {d}] row-major with n = w.len()");
+    }
+    if !(h > 0.0) {
+        bail!("bandwidth must be positive (got {h})");
+    }
+    let active: Vec<bool> = w.iter().map(|&wi| wi != 0.0).collect();
+    let train = PreparedTrain::new(x, w, d);
+    let cfg = cfg.checked();
+    power_iteration(&active, opts, |v| {
+        Ok(flash::matvec_prepared(&train, v, x, h, &cfg))
+    })
+}
+
+/// Subtract the active-set mean from the active entries (masked entries
+/// are untouched — they are kept at exactly 0 by the callers).
+fn center(v: &mut [f64], active: &[bool], n_active: usize) {
+    let mean: f64 = v
+        .iter()
+        .zip(active)
+        .filter(|&(_, &a)| a)
+        .map(|(&x, _)| x)
+        .sum::<f64>()
+        / n_active as f64;
+    for (x, &a) in v.iter_mut().zip(active) {
+        if a {
+            *x -= mean;
+        }
+    }
+}
+
+/// Scale to unit 2-norm; returns false (leaving `v` untouched) when the
+/// norm is exactly 0.
+fn normalize(v: &mut [f64]) -> bool {
+    let norm = v.iter().map(|&x| x * x).sum::<f64>().sqrt();
+    if norm == 0.0 {
+        return false;
+    }
+    for x in v.iter_mut() {
+        *x /= norm;
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn sample(n: usize, d: usize, seed: u64) -> Vec<f32> {
+        Pcg64::seeded(seed).normal_vec_f32(n * d)
+    }
+
+    /// Dense centered kernel matrix over the active rows (f64 oracle).
+    fn dense_centered_k(x: &[f32], w: &[f32], d: usize, h: f64) -> Vec<f64> {
+        let n = w.len();
+        let inv = 1.0 / (2.0 * h * h);
+        let mut k = vec![0.0f64; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                if w[i] == 0.0 || w[j] == 0.0 {
+                    continue;
+                }
+                let mut sq = 0.0f64;
+                for t in 0..d {
+                    let diff = x[i * d + t] as f64 - x[j * d + t] as f64;
+                    sq += diff * diff;
+                }
+                k[i * n + j] = w[j] as f64 * (-sq * inv).exp();
+            }
+        }
+        // H K H over the active set.
+        let active: Vec<usize> =
+            (0..n).filter(|&i| w[i] != 0.0).collect();
+        let na = active.len() as f64;
+        let row_means: Vec<f64> = (0..n)
+            .map(|i| active.iter().map(|&j| k[i * n + j]).sum::<f64>() / na)
+            .collect();
+        let col_means: Vec<f64> = (0..n)
+            .map(|j| active.iter().map(|&i| k[i * n + j]).sum::<f64>() / na)
+            .collect();
+        let grand: f64 = active.iter().map(|&i| row_means[i]).sum::<f64>() / na;
+        for &i in &active {
+            for &j in &active {
+                k[i * n + j] += grand - row_means[i] - col_means[j];
+            }
+        }
+        k
+    }
+
+    /// f64 power iteration on a dense matrix — the conformance oracle.
+    fn dense_top_eigenpair(k: &[f64], n: usize, iters: usize) -> (f64, Vec<f64>) {
+        let mut u: Vec<f64> = (0..n).map(|i| ((i % 7) as f64) - 3.0).collect();
+        let norm = u.iter().map(|&x| x * x).sum::<f64>().sqrt();
+        u.iter_mut().for_each(|x| *x /= norm);
+        let mut lambda = 0.0;
+        for _ in 0..iters {
+            let b: Vec<f64> = (0..n)
+                .map(|i| (0..n).map(|j| k[i * n + j] * u[j]).sum())
+                .collect();
+            lambda = u.iter().zip(&b).map(|(&a, &c)| a * c).sum();
+            let norm = b.iter().map(|&x| x * x).sum::<f64>().sqrt();
+            if norm == 0.0 {
+                return (0.0, u);
+            }
+            u = b.iter().map(|&x| x / norm).collect();
+        }
+        (lambda, u)
+    }
+
+    #[test]
+    fn power_iteration_recovers_planted_top_eigenpair() {
+        // M = 5 q₁q₁ᵀ + 1 q₂q₂ᵀ on orthonormal q₁, q₂ — the sweep is a
+        // dense multiply, so this pins the iteration logic in isolation.
+        let n = 24;
+        let mut rng = Pcg64::seeded(31);
+        let mut q1: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        // Center q1 so it lives in the subspace the iteration preserves
+        // (the algorithm re-centers every sweep output).
+        let mean = q1.iter().sum::<f64>() / n as f64;
+        q1.iter_mut().for_each(|x| *x -= mean);
+        let norm = q1.iter().map(|&x| x * x).sum::<f64>().sqrt();
+        q1.iter_mut().for_each(|x| *x /= norm);
+        let mut q2: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mean = q2.iter().sum::<f64>() / n as f64;
+        q2.iter_mut().for_each(|x| *x -= mean);
+        let dot = q1.iter().zip(&q2).map(|(&a, &b)| a * b).sum::<f64>();
+        q2.iter_mut().zip(&q1).for_each(|(x, &q)| *x -= dot * q);
+        let norm = q2.iter().map(|&x| x * x).sum::<f64>().sqrt();
+        q2.iter_mut().for_each(|x| *x /= norm);
+
+        let m: Vec<f64> = (0..n * n)
+            .map(|idx| {
+                let (i, j) = (idx / n, idx % n);
+                5.0 * q1[i] * q1[j] + 1.0 * q2[i] * q2[j]
+            })
+            .collect();
+        let active = vec![true; n];
+        let res = power_iteration(&active, &PcaOpts::default(), |v| {
+            Ok((0..n)
+                .map(|i| (0..n).map(|j| m[i * n + j] * v[j] as f64).sum())
+                .collect())
+        })
+        .unwrap();
+        assert!(res.converged, "did not converge in {} iters", res.iters);
+        assert!(
+            (res.eigenvalue - 5.0).abs() < 1e-3,
+            "eigenvalue {} != 5",
+            res.eigenvalue
+        );
+        let cos: f64 = res
+            .component
+            .iter()
+            .zip(&q1)
+            .map(|(&c, &q)| c as f64 * q)
+            .sum();
+        assert!(cos.abs() > 0.999, "|cos(component, q1)| = {}", cos.abs());
+    }
+
+    #[test]
+    fn kernel_pca_matches_dense_oracle() {
+        let (n, d, h) = (90, 3, 0.8);
+        let x = sample(n, d, 101);
+        let mut w = vec![1.0f32; n];
+        w[7] = 0.0;
+        w[40] = 0.0;
+        let res = kernel_pca(&x, &w, d, h, &TileConfig::default(), &PcaOpts::default())
+            .unwrap();
+        assert!(res.converged);
+        let k = dense_centered_k(&x, &w, d, h);
+        let (lambda, vec) = dense_top_eigenpair(&k, n, 2000);
+        let rel = (res.eigenvalue - lambda).abs() / lambda.abs().max(1.0);
+        assert!(rel < 1e-3, "eigenvalue {} vs oracle {lambda}", res.eigenvalue);
+        let cos: f64 = res
+            .component
+            .iter()
+            .zip(&vec)
+            .map(|(&c, &v)| c as f64 * v)
+            .sum();
+        assert!(cos.abs() > 0.999, "|cos| = {}", cos.abs());
+        // Masked rows are pinned to exactly 0 in the component.
+        assert_eq!(res.component[7], 0.0);
+        assert_eq!(res.component[40], 0.0);
+    }
+
+    #[test]
+    fn kernel_pca_is_seed_deterministic_and_seed_insensitive_in_value() {
+        let (n, d, h) = (60, 2, 0.7);
+        let x = sample(n, d, 55);
+        let w = vec![1.0f32; n];
+        let cfg = TileConfig::default();
+        let a = kernel_pca(&x, &w, d, h, &cfg, &PcaOpts::default()).unwrap();
+        let b = kernel_pca(&x, &w, d, h, &cfg, &PcaOpts::default()).unwrap();
+        assert_eq!(a.eigenvalue.to_bits(), b.eigenvalue.to_bits());
+        assert_eq!(a.component, b.component);
+        assert_eq!(a.iters, b.iters);
+        // A different seed converges to the same eigenvalue (sign of the
+        // component may flip).
+        let c = kernel_pca(&x, &w, d, h, &cfg, &PcaOpts { seed: 999, ..PcaOpts::default() })
+            .unwrap();
+        let rel = (a.eigenvalue - c.eigenvalue).abs() / a.eigenvalue.abs().max(1.0);
+        assert!(rel < 1e-4, "{} vs {}", a.eigenvalue, c.eigenvalue);
+    }
+
+    #[test]
+    fn kernel_pca_masked_rows_match_compacted_subset() {
+        let (n, d, h) = (50, 3, 0.9);
+        let x = sample(n, d, 77);
+        let mut w = vec![1.0f32; n];
+        for i in [3usize, 11, 29, 48] {
+            w[i] = 0.0;
+        }
+        let masked =
+            kernel_pca(&x, &w, d, h, &TileConfig::default(), &PcaOpts::default()).unwrap();
+        // Physically drop the masked rows: the active submatrix is
+        // identical, so the eigenvalue must agree to fp noise.
+        let mut xs = Vec::new();
+        for i in 0..n {
+            if w[i] != 0.0 {
+                xs.extend_from_slice(&x[i * d..(i + 1) * d]);
+            }
+        }
+        let ws = vec![1.0f32; n - 4];
+        let compact =
+            kernel_pca(&xs, &ws, d, h, &TileConfig::default(), &PcaOpts::default()).unwrap();
+        let rel = (masked.eigenvalue - compact.eigenvalue).abs()
+            / compact.eigenvalue.abs().max(1.0);
+        assert!(rel < 1e-5, "{} vs {}", masked.eigenvalue, compact.eigenvalue);
+    }
+
+    #[test]
+    fn degenerate_inputs_are_typed_errors() {
+        let x = sample(8, 2, 1);
+        let w = vec![1.0f32; 8];
+        assert!(kernel_pca(&x, &w, 0, 0.5, &TileConfig::default(), &PcaOpts::default())
+            .is_err());
+        assert!(kernel_pca(&x, &w, 2, 0.0, &TileConfig::default(), &PcaOpts::default())
+            .is_err());
+        let mut w1 = vec![0.0f32; 8];
+        w1[0] = 1.0;
+        assert!(
+            kernel_pca(&x, &w1, 2, 0.5, &TileConfig::default(), &PcaOpts::default())
+                .is_err(),
+            "fewer than 2 active rows must be rejected"
+        );
+        assert!(power_iteration(&[true; 4], &PcaOpts { max_iters: 0, ..PcaOpts::default() }, |_| {
+            Ok(vec![0.0; 4])
+        })
+        .is_err());
+    }
+}

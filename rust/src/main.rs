@@ -12,7 +12,10 @@
 //!   fit    — client: fit a model on a running server from a CSV-ish file
 //!            (builds a typed FitSpec from the flags)
 //!   eval   — client: query points under a fitted model in any output
-//!            mode (density, log_density, grad)
+//!            mode (density, log_density, grad, matvec)
+//!   linalg — kernel-matrix linear algebra over local point files:
+//!            kernel PCA (power iteration) and the MMD two-sample
+//!            statistic (DESIGN.md §17)
 //!   stats  — client: dump server stats JSON (or the router's aggregated
 //!            fleet document when pointed at a router)
 
@@ -98,7 +101,7 @@ fn commands() -> Vec<Command> {
             opts: vec![
                 OptSpec::opt_required("experiment",
                     "fig1|table1|fig2|fig3|fig4|fig5|fig6|fig7|blocksweep|\
-                     headline|native|frontier|all"),
+                     headline|native|frontier|linalg|all"),
                 OptSpec::opt_default("artifacts", "artifact directory", "artifacts"),
                 OptSpec::opt_default("iters", "measured iterations", "3"),
                 OptSpec::opt_default("warmup", "warmup iterations", "1"),
@@ -110,7 +113,7 @@ fn commands() -> Vec<Command> {
                 OptSpec::opt("tuning",
                     "tile-tuning table for the native series/comparison"),
                 OptSpec::flag("quick",
-                    "frontier: tiny sweep + single iteration (CI smoke)"),
+                    "frontier/linalg: tiny sweep + single iteration (CI smoke)"),
             ],
         },
         Command {
@@ -146,7 +149,11 @@ fn commands() -> Vec<Command> {
                 OptSpec::opt_required("model", "model name"),
                 OptSpec::opt_required("data", "whitespace/comma separated point file"),
                 OptSpec::opt_required("d", "dimension"),
-                OptSpec::opt_default("mode", "density|log_density|grad", "density"),
+                OptSpec::opt_default("mode",
+                    "density|log_density|grad|matvec", "density"),
+                OptSpec::opt("vec",
+                    "matvec train-side vector file (one value per training \
+                     row; required with --mode matvec, DESIGN.md §17)"),
                 OptSpec::opt("rel-err",
                     "approximate query budget: relative density error \
                      (DESIGN.md §14); omit for an exact query"),
@@ -158,6 +165,26 @@ fn commands() -> Vec<Command> {
                 OptSpec::opt("tenant",
                     "tenant the model was fitted under (DESIGN.md §16); \
                      omit for the shared \"default\" tenant"),
+            ],
+        },
+        Command {
+            name: "linalg",
+            about: "kernel PCA / MMD over local point files (DESIGN.md §17)",
+            opts: vec![
+                OptSpec::opt_required("op", "pca | mmd"),
+                OptSpec::opt_required("data",
+                    "whitespace/comma separated point file (first sample)"),
+                OptSpec::opt_required("d", "dimension"),
+                OptSpec::opt("h",
+                    "kernel bandwidth (default: Silverman rule on --data)"),
+                OptSpec::opt("data2",
+                    "second sample file (required for --op mmd)"),
+                OptSpec::opt_default("iters",
+                    "pca: power-iteration sweep cap", "200"),
+                OptSpec::opt("tol",
+                    "pca: relative eigenvalue-convergence tolerance \
+                     (default 1e-5)"),
+                OptSpec::opt("seed", "pca: start-vector stream seed"),
             ],
         },
         Command {
@@ -211,6 +238,7 @@ fn run(args: &[String]) -> Result<()> {
         "info" => cmd_info(&parsed),
         "fit" => cmd_fit(&parsed),
         "eval" => cmd_eval(&parsed),
+        "linalg" => cmd_linalg(&parsed),
         "stats" => cmd_stats(&parsed),
         _ => unreachable!(),
     }
@@ -408,6 +436,31 @@ fn cmd_bench(p: &cli::Parsed) -> Result<()> {
         frontier::exact_vs_approx(spec, &sizes)?.emit("frontier");
         return Ok(());
     }
+    // Kernel linear algebra (MatVec / PCA / MMD) is served by the native
+    // flash tiles — artifact-free like `native` and `frontier`.
+    if which == "linalg" {
+        let quick = p.flag("quick");
+        let spec = if quick
+            && p.get_usize("iters").map_err(|e| anyhow!(e))?.is_none()
+            && p.get_usize("warmup").map_err(|e| anyhow!(e))?.is_none()
+        {
+            RunSpec::new(0, 1)
+        } else {
+            spec
+        };
+        let sizes = p
+            .get_usize_list("sizes")
+            .map_err(|e| anyhow!(e))?
+            .unwrap_or_else(|| {
+                if quick {
+                    bench_harness::linalg::QUICK_SIZES.to_vec()
+                } else {
+                    bench_harness::linalg::DEFAULT_SIZES.to_vec()
+                }
+            });
+        bench_harness::linalg::kernel_ops(spec, &sizes)?.emit("linalg");
+        return Ok(());
+    }
 
     #[cfg(feature = "pjrt")]
     {
@@ -576,6 +629,21 @@ fn cmd_eval(p: &cli::Parsed) -> Result<()> {
     // typed message a raw frame would get from the server.
     let budget = Budget::resolve(rel_err, seed).map_err(|e| anyhow!(e))?;
     let mut spec = QuerySpec::new(points, mode).with_budget(budget);
+    // MatVec rides its train-side vector (flat file, one value per
+    // training row); every other mode must not carry one.  Mirrors the
+    // wire boundary's gating so the error surfaces client-side.
+    match (mode, p.get("vec")) {
+        (OutputMode::MatVec, Some(path)) => {
+            spec.vec = Some(read_points(path, 1)?);
+        }
+        (OutputMode::MatVec, None) => {
+            bail!("--mode matvec requires --vec (train-side vector file)");
+        }
+        (_, Some(_)) => {
+            bail!("--vec is only valid with --mode matvec");
+        }
+        (_, None) => {}
+    }
     if let Some(t) = p.get("tenant") {
         spec = spec.tenant(t);
     }
@@ -597,6 +665,62 @@ fn cmd_eval(p: &cli::Parsed) -> Result<()> {
         result.batch_size
     );
     Ok(())
+}
+
+fn cmd_linalg(p: &cli::Parsed) -> Result<()> {
+    use flash_sdkde::estimator::{bandwidth, flash::TileConfig};
+    use flash_sdkde::linalg;
+
+    let d = p.get_usize("d").map_err(|e| anyhow!(e))?.expect("required");
+    let x = read_points(p.get("data").expect("required"), d)?;
+    let n = x.len() / d;
+    let h = match p.get_f64("h").map_err(|e| anyhow!(e))? {
+        Some(h) => h,
+        None => {
+            let h = bandwidth::silverman(&x, n, d);
+            eprintln!("(bandwidth: Silverman rule h={h:.5})");
+            h
+        }
+    };
+    let cfg = TileConfig::default();
+    match p.get("op").expect("required") {
+        "pca" => {
+            let mut opts = linalg::PcaOpts::default();
+            if let Some(iters) = p.get_usize("iters").map_err(|e| anyhow!(e))? {
+                opts.max_iters = iters;
+            }
+            if let Some(tol) = p.get_f64("tol").map_err(|e| anyhow!(e))? {
+                opts.tol = tol;
+            }
+            if let Some(seed) = p.get_usize("seed").map_err(|e| anyhow!(e))? {
+                opts.seed = seed as u64;
+            }
+            let w = vec![1.0f32; n];
+            let res = linalg::kernel_pca(&x, &w, d, h, &cfg, &opts)?;
+            for v in &res.component {
+                println!("{v}");
+            }
+            eprintln!(
+                "(eigenvalue {:.6}, {} sweeps, converged: {})",
+                res.eigenvalue, res.iters, res.converged
+            );
+            Ok(())
+        }
+        "mmd" => {
+            let path = p
+                .get("data2")
+                .ok_or_else(|| anyhow!("--op mmd requires --data2 (second sample)"))?;
+            let y = read_points(path, d)?;
+            let res = linalg::mmd(&x, &y, d, h, &cfg)?;
+            println!("{}", res.mmd);
+            eprintln!(
+                "(mmd2 {:.6e}, n={}, m={}, h={h:.5})",
+                res.mmd2, res.n, res.m
+            );
+            Ok(())
+        }
+        other => bail!("unknown linalg op {other:?} (pca | mmd)"),
+    }
 }
 
 fn cmd_stats(p: &cli::Parsed) -> Result<()> {

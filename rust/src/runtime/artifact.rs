@@ -282,6 +282,26 @@ impl Manifest {
                         inputs: eval_inputs(),
                         outputs: vec![spec("", vec![m, d])],
                     });
+                    // Kernel matrix–vector product: the eval signature
+                    // plus a per-request train-side vector v [n] between
+                    // y and h (DESIGN.md §17).
+                    entries.push(ArtifactEntry {
+                        pipeline: "matvec".to_string(),
+                        variant: "flash".to_string(),
+                        d,
+                        n,
+                        m,
+                        tiles: None,
+                        file: format!("native://matvec/flash/d{d}/n{n}/m{m}"),
+                        inputs: vec![
+                            spec("x", vec![n, d]),
+                            spec("w", vec![n]),
+                            spec("y", vec![m, d]),
+                            spec("v", vec![n]),
+                            spec("h", vec![]),
+                        ],
+                        outputs: vec![spec("", vec![m])],
+                    });
                 }
                 // Fit has no query axis; m = 0 marks it unused.
                 entries.push(ArtifactEntry {
@@ -622,7 +642,7 @@ mod tests {
         // Every pipeline the coordinator can route (SD-KDE evals run the
         // kde pipeline over the debiased set, so no sdkde_e2e needed).
         for d in [1, 5, 16, 31, 64] {
-            for pipeline in ["kde", "laplace", "score_eval", "sdkde_fit"] {
+            for pipeline in ["kde", "laplace", "score_eval", "sdkde_fit", "matvec"] {
                 assert!(
                     !m.buckets(pipeline, "flash", d).is_empty(),
                     "no {pipeline} buckets at d={d}"
@@ -686,7 +706,9 @@ mod tests {
         }
         // Bucket listings per routed group, plus groups that don't exist.
         for d in [0, 1, 16, 33, 64, 128, 129] {
-            for pipeline in ["kde", "laplace", "score_eval", "sdkde_fit", "warp"] {
+            for pipeline in
+                ["kde", "laplace", "score_eval", "sdkde_fit", "matvec", "warp"]
+            {
                 for variant in ["flash", "gemm", "nope"] {
                     assert_eq!(
                         m.buckets(pipeline, variant, d),

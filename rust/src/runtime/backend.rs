@@ -116,6 +116,10 @@ pub struct StoreStats {
     /// budgets — the bound is what keeps that sweep from growing backend
     /// memory without limit.  Engine-wide, like `prepare_hits`.
     pub sketch_evictions: u64,
+    /// Kernel matrix–vector executions served (the `matvec` pipeline,
+    /// DESIGN.md §17; native; 0 for PJRT, which has no matvec
+    /// artifacts).  Engine-wide, like `prepare_hits`.
+    pub matvec_queries: u64,
 }
 
 /// Outcome of offering an execution to a backend's approximate path
@@ -367,6 +371,7 @@ struct CacheInner {
     approx_queries: u64,
     unsupported_mode: u64,
     sketch_evictions: u64,
+    matvec_queries: u64,
 }
 
 impl CacheInner {
@@ -391,6 +396,7 @@ impl PrepareCache {
                 approx_queries: 0,
                 unsupported_mode: 0,
                 sketch_evictions: 0,
+                matvec_queries: 0,
             })),
         }
     }
@@ -794,6 +800,29 @@ impl ExecBackend for NativeFlash {
                     s.iter().map(|&v| v as f32).collect(),
                 )?
             }
+            // Kernel matrix–vector product K·v (DESIGN.md §17): the eval
+            // signature plus a train-side vector v [n] between y and h.
+            // Rides the same prepared form and tile choice as densities.
+            "matvec" => {
+                let y = Self::rows_input(inputs, 2, "y", d)?;
+                let v = Self::input(inputs, 3, "v")?;
+                let h = Self::scalar(inputs, 4, "h")?;
+                if v.len() != w.len() {
+                    bail!(
+                        "artifact {}: v has {} entries, train bucket has {} \
+                         rows",
+                        entry.key(),
+                        v.len(),
+                        w.len()
+                    );
+                }
+                let (train, tile) =
+                    self.prepared_for(x_arc, w_arc, d, y.len() / d)?;
+                let out =
+                    flash::matvec_prepared(&train, v.data(), y, h, &tile);
+                self.cache.lock().matvec_queries += 1;
+                HostTensor::vec1(out.iter().map(|&v| v as f32).collect())
+            }
             // Fit pipelines: the train set is one-shot (the registry
             // stores the *debiased* output, a different tensor), so
             // prepare inline and keep the cache for resident models; the
@@ -939,6 +968,7 @@ impl ExecBackend for NativeFlash {
             approx_queries: inner.approx_queries,
             unsupported_mode: inner.unsupported_mode,
             sketch_evictions: inner.sketch_evictions,
+            matvec_queries: inner.matvec_queries,
             ..self.stats
         }
     }
@@ -1004,6 +1034,26 @@ mod tests {
         }
     }
 
+    fn matvec_entry(n: usize, m: usize, d: usize) -> ArtifactEntry {
+        ArtifactEntry {
+            pipeline: "matvec".into(),
+            variant: "flash".into(),
+            d,
+            n,
+            m,
+            tiles: None,
+            file: format!("native://matvec/flash/d{d}/n{n}/m{m}"),
+            inputs: vec![
+                TensorSpec { name: "x".into(), shape: vec![n, d] },
+                TensorSpec { name: "w".into(), shape: vec![n] },
+                TensorSpec { name: "y".into(), shape: vec![m, d] },
+                TensorSpec { name: "v".into(), shape: vec![n] },
+                TensorSpec { name: "h".into(), shape: vec![] },
+            ],
+            outputs: vec![TensorSpec { name: "".into(), shape: vec![m] }],
+        }
+    }
+
     fn arcs(ts: Vec<HostTensor>) -> Vec<Arc<HostTensor>> {
         ts.into_iter().map(Arc::new).collect()
     }
@@ -1060,6 +1110,98 @@ mod tests {
         // Fresh tensors each call: that execution was a prepare miss.
         assert_eq!(backend.stats().prepare_misses, 1);
         assert_eq!(backend.stats().prepare_hits, 0);
+    }
+
+    #[test]
+    fn native_executes_matvec_entry_against_dense_oracle_and_counts() {
+        let (n, m, d) = (50, 7, 3);
+        let mut rng = Pcg64::seeded(53);
+        let x = rng.normal_vec_f32(n * d);
+        let y = rng.normal_vec_f32(m * d);
+        let v = rng.normal_vec_f32(n);
+        let mut w = vec![1.0f32; n];
+        w[2] = 0.0;
+        let h = 0.6f64;
+
+        let mut backend = NativeFlash::new();
+        let entry = matvec_entry(n, m, d);
+        let inputs = arcs(vec![
+            HostTensor::matrix(n, d, x.clone()).unwrap(),
+            HostTensor::vec1(w.clone()),
+            HostTensor::matrix(m, d, y.clone()).unwrap(),
+            HostTensor::vec1(v.clone()),
+            HostTensor::scalar(h as f32),
+        ]);
+        let out = backend.execute(&entry, &inputs).expect("execute");
+        assert_eq!(out.outputs[0].shape(), &[m]);
+        // Dense oracle: materialize K row by row, multiply naively.
+        let inv2h2 = 1.0 / (2.0 * h * h);
+        let mut want = vec![0.0f64; m];
+        for (q, o) in want.iter_mut().enumerate() {
+            for j in 0..n {
+                let d2: f64 = (0..d)
+                    .map(|k| {
+                        let diff =
+                            (y[q * d + k] - x[j * d + k]) as f64;
+                        diff * diff
+                    })
+                    .sum();
+                *o += w[j] as f64 * v[j] as f64 * (-d2 * inv2h2).exp();
+            }
+        }
+        for (a, b) in out.outputs[0].data().iter().zip(&want) {
+            let rel = (*a as f64 - b).abs() / b.abs().max(1e-30);
+            assert!(rel < 2e-3, "{a} vs {b} (rel {rel:.2e})");
+        }
+        assert_eq!(backend.stats().matvec_queries, 1);
+        assert_eq!(backend.stats().executions, 1);
+
+        // A v whose length disagrees with the train bucket is a typed
+        // error, never a kernel panic.
+        let mut bad = inputs.clone();
+        bad[3] = Arc::new(HostTensor::vec1(vec![1.0f32; n - 1]));
+        let mut torn = matvec_entry(n, m, d);
+        torn.inputs[3].shape = vec![n - 1];
+        let err = backend.execute(&torn, &bad).unwrap_err();
+        assert!(format!("{err:#}").contains("entries"), "{err:#}");
+        assert_eq!(
+            backend.stats().matvec_queries,
+            1,
+            "a rejected call must not count as served"
+        );
+    }
+
+    #[test]
+    fn matvec_shares_the_prepare_cache_with_density_pipelines() {
+        // A resident model prepared by a density query must be a prepare
+        // hit for a matvec query over the same tensors — one prepared
+        // form serves every pipeline family.
+        let (n, m, d) = (48, 5, 2);
+        let mut rng = Pcg64::seeded(59);
+        let x = Arc::new(
+            HostTensor::matrix(n, d, rng.normal_vec_f32(n * d)).unwrap(),
+        );
+        let w = Arc::new(HostTensor::full(vec![n], 1.0));
+        let y = Arc::new(
+            HostTensor::matrix(m, d, rng.normal_vec_f32(m * d)).unwrap(),
+        );
+        let v = Arc::new(HostTensor::vec1(rng.normal_vec_f32(n)));
+        let h = Arc::new(HostTensor::scalar(0.5));
+        let mut backend = NativeFlash::new();
+        backend
+            .execute(
+                &kde_entry(n, m, d),
+                &[Arc::clone(&x), Arc::clone(&w), Arc::clone(&y), Arc::clone(&h)],
+            )
+            .expect("kde");
+        backend
+            .execute(
+                &matvec_entry(n, m, d),
+                &[x, w, y, v, h],
+            )
+            .expect("matvec");
+        assert_eq!(backend.stats().prepare_misses, 1);
+        assert_eq!(backend.stats().prepare_hits, 1);
     }
 
     #[test]

@@ -34,7 +34,9 @@ use flash_sdkde::config::{Config, RouterConfig};
 use flash_sdkde::coordinator::protocol::{Request, Response};
 use flash_sdkde::coordinator::router::{NodeTable, Router, RouterServer};
 use flash_sdkde::coordinator::server::{Client, Server};
-use flash_sdkde::coordinator::{Coordinator, FitSpec, ModelHandle, QuerySpec};
+use flash_sdkde::coordinator::{
+    Coordinator, FitSpec, ModelHandle, OutputMode, QuerySpec,
+};
 use flash_sdkde::data::mixture::by_dim;
 use flash_sdkde::estimator::EstimatorKind;
 use flash_sdkde::runtime::BackendKind;
@@ -477,6 +479,72 @@ fn routed_approx_budgets_survive_restamping_and_count_on_the_owner() {
             assert_eq!(
                 served, 0,
                 "{}: approx query leaked off the owner",
+                worker.addr
+            );
+        }
+    }
+}
+
+#[test]
+fn routed_matvec_is_bitwise_equal_to_the_single_node_oracle() {
+    // ISSUE 9 satellite: the MatVec pipeline (DESIGN.md §17) through the
+    // full multi-node path — the per-request "vec" field survives
+    // `forward()`'s epoch/digest re-stamping, the reply is bitwise the
+    // single-node answer, and the execution lands on the owning worker
+    // only.
+    let (workers, router_server) = spawn_cluster(3);
+    let table = router_server.router().table();
+    let oracle = Coordinator::start(native_config()).expect("oracle coordinator");
+    let mut client = Client::connect(router_server.local_addr()).expect("connect");
+
+    let d = 2usize;
+    let mix = by_dim(d);
+    let mut rng = Pcg64::seeded(55);
+    let name = "matvec-model";
+    let n = 96;
+    let train = mix.sample(n, &mut rng);
+    client
+        .fit(name, train.clone(), &FitSpec::new(EstimatorKind::Kde, d))
+        .expect("routed fit");
+    let handle = oracle
+        .fit(name, train, &FitSpec::new(EstimatorKind::Kde, d))
+        .expect("oracle fit");
+    let y = mix.sample(7, &mut rng);
+    let v1: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+    let v2: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+
+    let routed = client
+        .query(name, d, QuerySpec::matvec(y.clone(), v1.clone()))
+        .expect("routed matvec");
+    assert_eq!(routed.mode, OutputMode::MatVec);
+    let local = oracle
+        .matvec(&handle, y.clone(), v1.clone())
+        .expect("oracle matvec");
+    assert_eq!(routed.values, local.values, "matvec bits drifted in routing");
+
+    // A different vector gives a different product (the vector is
+    // per-request state, never cached train-side)...
+    let routed2 = client
+        .query(name, d, QuerySpec::matvec(y.clone(), v2))
+        .expect("routed matvec v2");
+    assert_ne!(routed2.values, routed.values, "v2 served v1's product");
+    // ...and replaying the first vector replays its bits exactly.
+    let replay = client
+        .query(name, d, QuerySpec::matvec(y.clone(), v1))
+        .expect("routed matvec replay");
+    assert_eq!(replay.values, routed.values, "replayed matvec bits drifted");
+
+    // All three executions landed on the primary owner and nowhere else.
+    let owner = table.owner(name).expect("owner").to_string();
+    for worker in &workers {
+        let stats = worker.server.coordinator().stats_json();
+        let served = stat_usize(&stats, ["engine", "matvec_queries"]).unwrap_or(0);
+        if worker.addr == owner {
+            assert_eq!(served, 3, "owning worker missed matvec executions");
+        } else {
+            assert_eq!(
+                served, 0,
+                "{}: matvec query leaked off the owner",
                 worker.addr
             );
         }

@@ -372,6 +372,107 @@ fn router_rejects_corrupt_frames_and_bounds_dead_node_failures() {
 }
 
 #[test]
+fn matvec_frames_get_typed_errors_on_worker_and_router() {
+    // ISSUE 9 satellite: the v2 "vec" field (DESIGN.md §17) under the
+    // same frame-fuzz discipline as the epoch stamps — malformed,
+    // truncated and mis-moded MatVec frames are typed `Error` responses
+    // on both sides, never a panic, and never a silent wrong answer.
+    use flash_sdkde::coordinator::OutputMode;
+
+    let dir = temp_dir("matvec-worker");
+    let coord = Coordinator::start(config_for(&dir, BackendKind::Native))
+        .expect("native worker");
+    coord
+        .fit("m", vec![0.0, 0.5, 1.0, 1.5], &FitSpec::new(EstimatorKind::Kde, 1))
+        .expect("fit");
+
+    // Worker side: parse-level rejects (missing/empty/non-numeric vec,
+    // vec on the wrong mode, truncated mid-vec) and the submit-level
+    // wrong-length reject all come back as typed Error.
+    for bad in [
+        // missing mandatory vec
+        r#"{"v":2,"op":"query","model":"m","mode":"matvec","points":[[0.5]]}"#,
+        // empty vec
+        r#"{"v":2,"op":"query","model":"m","mode":"matvec","points":[[0.5]],"vec":[]}"#,
+        // non-array vec
+        r#"{"v":2,"op":"query","model":"m","mode":"matvec","points":[[0.5]],"vec":"x"}"#,
+        // non-numeric vec element
+        r#"{"v":2,"op":"query","model":"m","mode":"matvec","points":[[0.5]],"vec":[1,"x"]}"#,
+        // truncated mid-vec
+        r#"{"v":2,"op":"query","model":"m","mode":"matvec","points":[[0.5]],"vec":[1,2"#,
+        // vec on a non-matvec mode
+        r#"{"v":2,"op":"query","model":"m","mode":"density","points":[[0.5]],"vec":[1,2,3,4]}"#,
+        // vec on the v1 eval alias
+        r#"{"v":2,"op":"eval","model":"m","points":[[0.5]],"vec":[1,2,3,4]}"#,
+        // wrong length for the fitted n = 4 (parses, submit rejects)
+        r#"{"v":2,"op":"query","model":"m","mode":"matvec","points":[[0.5]],"vec":[1,2,3]}"#,
+    ] {
+        match handle_line(&coord, bad) {
+            Response::Error { message } => {
+                assert!(!message.is_empty(), "empty error for {bad:?}")
+            }
+            other => panic!("{bad:?} must be a typed Error, got {other:?}"),
+        }
+    }
+    // The connection handler survives the fuzz: a well-formed matvec
+    // frame on the same coordinator still serves.
+    match handle_line(
+        &coord,
+        r#"{"v":2,"op":"query","model":"m","mode":"matvec","points":[[0.5]],"vec":[1,2,3,4]}"#,
+    ) {
+        Response::QueryOk { result, .. } => {
+            assert_eq!(result.mode, OutputMode::MatVec);
+            assert_eq!(result.values.len(), 1);
+            assert!(result.values[0].is_finite() && result.values[0] > 0.0);
+        }
+        other => panic!("well-formed matvec frame must serve: {other:?}"),
+    }
+
+    // Router side: the same malformed frames are rejected before any
+    // forwarding; a well-formed one routes (and fails typed + bounded on
+    // the dead node, like every other query).
+    let dead = {
+        let listener = std::net::TcpListener::bind(("127.0.0.1", 0)).expect("bind");
+        let addr = listener.local_addr().expect("addr").to_string();
+        drop(listener);
+        addr
+    };
+    let mut cfg = RouterConfig::default();
+    cfg.nodes = vec![dead];
+    cfg.connect_timeout_ms = 200;
+    cfg.request_timeout_ms = 500;
+    cfg.retries = 1;
+    let router = Router::new(cfg).expect("router");
+    for bad in [
+        r#"{"v":2,"op":"query","model":"m","mode":"matvec","points":[[0.5]]}"#,
+        r#"{"v":2,"op":"query","model":"m","mode":"matvec","points":[[0.5]],"vec":[]}"#,
+        r#"{"v":2,"op":"query","model":"m","mode":"density","points":[[0.5]],"vec":[1]}"#,
+        r#"{"v":2,"op":"query","model":"m","mode":"matvec","points":[[0.5]],"vec":[1,2"#,
+    ] {
+        match router.handle_line(bad) {
+            Response::Error { message } => {
+                assert!(!message.is_empty(), "empty error for {bad:?}")
+            }
+            other => panic!("router: {bad:?} must be a typed Error, got {other:?}"),
+        }
+    }
+    let start = Instant::now();
+    match router.handle_line(
+        r#"{"v":2,"op":"query","model":"m","mode":"matvec","points":[[0.5]],"vec":[1,2,3,4]}"#,
+    ) {
+        Response::Error { message } => {
+            assert!(message.contains("unavailable"), "{message}")
+        }
+        other => panic!("expected typed unavailable, got {other:?}"),
+    }
+    assert!(
+        start.elapsed() < Duration::from_secs(10),
+        "dead-node matvec failure took {:?}",
+        start.elapsed()
+    );
+}
+
+#[test]
 fn manifest_schema_violations_name_the_entry() {
     let bad = r#"{"version": 1, "entries": [
         {"pipeline": "kde", "variant": "flash", "d": 1, "n": 8, "m": 2,

@@ -459,10 +459,15 @@ fn prop_protocol_request_round_trip() {
                 digest,
             },
             _ => {
-                let mut spec = QuerySpec::new(
-                    gen_points(rng, k * d),
-                    OutputMode::ALL[rng.below(3) as usize],
-                );
+                // All four output modes; matvec frames must carry their
+                // mandatory train-side vector (protocol.rs gates it).
+                let mode = OutputMode::ALL[rng.below(OutputMode::ALL.len() as u64) as usize];
+                let points = gen_points(rng, k * d);
+                let mut spec = if mode == OutputMode::MatVec {
+                    QuerySpec::matvec(points, gen_points(rng, 1 + rng.below(6) as usize))
+                } else {
+                    QuerySpec::new(points, mode)
+                };
                 if let Some(t) = tenant {
                     spec = spec.tenant(t);
                 }
@@ -513,7 +518,7 @@ fn prop_protocol_response_round_trip() {
                 },
             },
             2 | 3 => {
-                let mode = OutputMode::ALL[rng.below(3) as usize];
+                let mode = OutputMode::ALL[rng.below(OutputMode::ALL.len() as u64) as usize];
                 let len = k * mode.width(d);
                 Response::QueryOk {
                     d,
@@ -605,5 +610,189 @@ fn prop_config_json_round_trip_fuzz() {
         let back = Config::from_json(&json::parse(&text).map_err(|e| e.to_string())?)
             .map_err(|e| e.to_string())?;
         ensure(back == cfg, "config round trips")
+    });
+}
+
+/// Small-integer f32 vector: entries in [-8, 8).  Products and sums with
+/// small-integer coefficients stay exact in f32/f64, so algebraic laws
+/// over MatVec hold to f64 re-association noise, not f32 rounding.
+fn gen_int_vec(rng: &mut Pcg64, n: usize) -> Vec<f32> {
+    (0..n).map(|_| (rng.below(16) as f32) - 8.0).collect()
+}
+
+#[test]
+fn prop_matvec_is_linear_in_its_vector() {
+    // K·(αu + βv) = α·K·u + β·K·v (DESIGN.md §17).  With integer-valued
+    // u, v and integer α, β the combined input is exact, so only f64
+    // multiply/re-association noise separates the two sides.
+    use flash_sdkde::estimator::flash::{self, TileConfig};
+
+    check("matvec linearity", 60, |rng| {
+        let d = [1usize, 2, 3, 16][rng.below(4) as usize];
+        let n = 2 + rng.below(120) as usize;
+        let m = 1 + rng.below(30) as usize;
+        let mut data_rng = Pcg64::new(rng.next_u64(), 11);
+        let x = data_rng.normal_vec_f32(n * d);
+        let y = data_rng.normal_vec_f32(m * d);
+        let mut w = vec![1.0f32; n];
+        for wi in w.iter_mut().skip(1) {
+            if rng.below(4) == 0 {
+                *wi = 0.0;
+            }
+        }
+        let h = 0.3 + 0.1 * rng.below(8) as f64;
+        let cfg = TileConfig::default();
+        let u = gen_int_vec(&mut data_rng, n);
+        let v = gen_int_vec(&mut data_rng, n);
+        let alpha = (rng.below(7) as f32) - 3.0;
+        let beta = (rng.below(7) as f32) - 3.0;
+        let combined: Vec<f32> =
+            u.iter().zip(&v).map(|(&a, &b)| alpha * a + beta * b).collect();
+
+        let lhs = flash::matvec(&x, &w, &combined, &y, d, h, &cfg);
+        let ku = flash::matvec(&x, &w, &u, &y, d, h, &cfg);
+        let kv = flash::matvec(&x, &w, &v, &y, d, h, &cfg);
+        // Conditioning scale: the absolute-mass product K·(|α||u| + |β||v|).
+        let abs_in: Vec<f32> = u
+            .iter()
+            .zip(&v)
+            .map(|(&a, &b)| alpha.abs() * a.abs() + beta.abs() * b.abs())
+            .collect();
+        let mass = flash::matvec(&x, &w, &abs_in, &y, d, h, &cfg);
+        for q in 0..m {
+            let rhs = alpha as f64 * ku[q] + beta as f64 * kv[q];
+            ensure(
+                (lhs[q] - rhs).abs() <= 1e-12 * mass[q].max(1.0),
+                &format!("row {q}: K(au+bv) = {} vs aKu+bKv = {rhs}", lhs[q]),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_kernel_quadratic_form_is_symmetric() {
+    // uᵀKv = vᵀKu for the unit-weight kernel matrix over y = x (K is
+    // symmetric; weighted K = K·diag(w) is not, which is why the law is
+    // stated at w = 1).
+    use flash_sdkde::estimator::flash::{self, TileConfig};
+
+    check("kernel quadratic-form symmetry", 60, |rng| {
+        let d = [1usize, 2, 3, 16][rng.below(4) as usize];
+        let n = 2 + rng.below(100) as usize;
+        let mut data_rng = Pcg64::new(rng.next_u64(), 12);
+        let x = data_rng.normal_vec_f32(n * d);
+        let w = vec![1.0f32; n];
+        let h = 0.3 + 0.1 * rng.below(8) as f64;
+        let cfg = TileConfig::default();
+        let u = gen_int_vec(&mut data_rng, n);
+        let v = gen_int_vec(&mut data_rng, n);
+
+        let kv = flash::matvec(&x, &w, &v, &x, d, h, &cfg);
+        let ku = flash::matvec(&x, &w, &u, &x, d, h, &cfg);
+        let utkv: f64 = u.iter().zip(&kv).map(|(&a, &b)| a as f64 * b).sum();
+        let vtku: f64 = v.iter().zip(&ku).map(|(&a, &b)| a as f64 * b).sum();
+        let abs_u: Vec<f32> = u.iter().map(|a| a.abs()).collect();
+        let abs_v: Vec<f32> = v.iter().map(|a| a.abs()).collect();
+        let k_abs_v = flash::matvec(&x, &w, &abs_v, &x, d, h, &cfg);
+        let mass: f64 =
+            abs_u.iter().zip(&k_abs_v).map(|(&a, &b)| a as f64 * b).sum();
+        ensure(
+            (utkv - vtku).abs() <= 1e-10 * mass.max(1.0),
+            &format!("uᵀKv = {utkv} vs vᵀKu = {vtku} (mass {mass:.3e})"),
+        )
+    });
+}
+
+#[test]
+fn prop_power_iteration_recovers_planted_eigenpairs() {
+    // For any planted spectrum λ₁ > λ₂ on centered orthonormal
+    // directions, the pipeline's power iteration must recover (λ₁, q₁).
+    use flash_sdkde::linalg::{power_iteration, PcaOpts};
+
+    check("planted eigenpair recovery", 25, |rng| {
+        let n = 8 + rng.below(40) as usize;
+        let l1 = 3.0 + rng.uniform() * 5.0;
+        let l2 = 1.0;
+        let mut data_rng = Pcg64::new(rng.next_u64(), 13);
+        // Centered, orthonormalized q1, q2.
+        let mut q1: Vec<f64> = (0..n).map(|_| data_rng.normal()).collect();
+        let mean = q1.iter().sum::<f64>() / n as f64;
+        q1.iter_mut().for_each(|c| *c -= mean);
+        let norm = q1.iter().map(|&c| c * c).sum::<f64>().sqrt();
+        q1.iter_mut().for_each(|c| *c /= norm);
+        let mut q2: Vec<f64> = (0..n).map(|_| data_rng.normal()).collect();
+        let mean = q2.iter().sum::<f64>() / n as f64;
+        q2.iter_mut().for_each(|c| *c -= mean);
+        let dot: f64 = q1.iter().zip(&q2).map(|(&a, &b)| a * b).sum();
+        q2.iter_mut().zip(&q1).for_each(|(c, &q)| *c -= dot * q);
+        let norm = q2.iter().map(|&c| c * c).sum::<f64>().sqrt();
+        q2.iter_mut().for_each(|c| *c /= norm);
+
+        let opts = PcaOpts { seed: rng.next_u64(), ..PcaOpts::default() };
+        let res = power_iteration(&vec![true; n], &opts, |v| {
+            Ok((0..n)
+                .map(|i| {
+                    (0..n)
+                        .map(|j| {
+                            (l1 * q1[i] * q1[j] + l2 * q2[i] * q2[j]) * v[j] as f64
+                        })
+                        .sum()
+                })
+                .collect())
+        })
+        .map_err(|e| format!("power_iteration: {e:#}"))?;
+        ensure(res.converged, &format!("no convergence in {} iters", res.iters))?;
+        ensure(
+            (res.eigenvalue - l1).abs() < 1e-3 * l1,
+            &format!("eigenvalue {} vs planted {l1}", res.eigenvalue),
+        )?;
+        let cos: f64 = res
+            .component
+            .iter()
+            .zip(&q1)
+            .map(|(&c, &q)| c as f64 * q)
+            .sum();
+        ensure(cos.abs() > 0.999, &format!("|cos| = {}", cos.abs()))
+    });
+}
+
+#[test]
+fn prop_mmd_nonnegative_zero_on_self_and_deterministic() {
+    use flash_sdkde::estimator::flash::TileConfig;
+    use flash_sdkde::linalg::mmd;
+
+    check("mmd laws", 40, |rng| {
+        let d = [1usize, 2, 3, 16][rng.below(4) as usize];
+        let n = 2 + rng.below(60) as usize;
+        let m = 2 + rng.below(60) as usize;
+        let mut data_rng = Pcg64::new(rng.next_u64(), 14);
+        let x = data_rng.normal_vec_f32(n * d);
+        let y = data_rng.normal_vec_f32(m * d);
+        let h = 0.3 + 0.1 * rng.below(8) as f64;
+        let cfg = TileConfig::default();
+
+        // Identical samples: the V-statistic is exactly the zero of its
+        // own cancellation, bounded by f64 noise on ~n² kernel terms.
+        let self_mmd = mmd(&x, &x, d, h, &cfg).map_err(|e| format!("{e:#}"))?;
+        ensure(
+            self_mmd.mmd2 >= 0.0 && self_mmd.mmd2 < 1e-9,
+            &format!("mmd²(x, x) = {}", self_mmd.mmd2),
+        )?;
+        // Nonnegative (clamped) and deterministic for distinct samples.
+        let a = mmd(&x, &y, d, h, &cfg).map_err(|e| format!("{e:#}"))?;
+        ensure(a.mmd2 >= 0.0, "mmd² clamped nonnegative")?;
+        ensure(a.mmd >= 0.0, "mmd nonnegative")?;
+        let b = mmd(&x, &y, d, h, &cfg).map_err(|e| format!("{e:#}"))?;
+        ensure(
+            a.mmd2.to_bits() == b.mmd2.to_bits(),
+            "mmd is bitwise deterministic",
+        )?;
+        // Symmetric in its arguments to f64 re-association noise.
+        let swapped = mmd(&y, &x, d, h, &cfg).map_err(|e| format!("{e:#}"))?;
+        ensure(
+            (a.mmd2 - swapped.mmd2).abs() <= 1e-10 * a.mmd2.abs().max(1e-12),
+            &format!("mmd²(x,y) = {} vs mmd²(y,x) = {}", a.mmd2, swapped.mmd2),
+        )
     });
 }
