@@ -64,6 +64,19 @@ pub struct Config {
     /// quotas at weight 1; requests that name no tenant run as
     /// `"default"`.
     pub tenants: Vec<(String, TenantQuota)>,
+    /// Slow-query threshold in milliseconds (DESIGN.md §18): requests
+    /// whose queue+batch+prepare+execute total meets or exceeds it get
+    /// their full stage breakdown journaled.  `None` (the default)
+    /// disables the slow-query log; `Some(0)` journals every request
+    /// (smoke tests).
+    pub slow_query_ms: Option<u64>,
+    /// Event-journal capacity: the bounded ring keeps this many most
+    /// recent observability events, overwriting the oldest (>= 1).
+    pub trace_events: usize,
+    /// Optional deterministic trace-ID seed: equal seeds produce equal
+    /// ID sequences (test pinning).  `None` (the default) seeds from
+    /// entropy so concurrent workers do not collide ID streams.
+    pub trace_seed: Option<u64>,
 }
 
 /// Per-tenant admission quotas and scheduling weight (DESIGN.md §16).
@@ -112,6 +125,9 @@ impl Default for Config {
             approx_rel_err: None,
             registry_shards: 1,
             tenants: Vec::new(),
+            slow_query_ms: None,
+            trace_events: 256,
+            trace_seed: None,
         }
     }
 }
@@ -137,6 +153,7 @@ impl Config {
             "batch_wait_ms", "batch_max_queries", "default_variant",
             "registry_capacity", "engine_workers", "warm_dims", "tuning",
             "approx_rel_err", "registry_shards", "tenants",
+            "slow_query_ms", "trace_events", "trace_seed",
         ];
         for key in obj.keys() {
             if !known.contains(&key.as_str()) {
@@ -205,6 +222,18 @@ impl Config {
         if let Some(x) = obj.get("registry_shards") {
             cfg.registry_shards =
                 x.as_usize().ok_or("registry_shards must be an integer")?;
+        }
+        if let Some(x) = obj.get("slow_query_ms") {
+            cfg.slow_query_ms =
+                Some(x.as_usize().ok_or("slow_query_ms must be an integer")? as u64);
+        }
+        if let Some(x) = obj.get("trace_events") {
+            cfg.trace_events =
+                x.as_usize().ok_or("trace_events must be an integer")?;
+        }
+        if let Some(x) = obj.get("trace_seed") {
+            cfg.trace_seed =
+                Some(x.as_usize().ok_or("trace_seed must be an integer")? as u64);
         }
         if let Some(x) = obj.get("tenants") {
             let table = x.as_object().ok_or(
@@ -285,6 +314,12 @@ impl Config {
                 self.registry_shards
             ));
         }
+        if self.trace_events == 0 {
+            return Err(
+                "trace_events must be >= 1 (the journal ring cannot be empty)"
+                    .to_string(),
+            );
+        }
         if self.registry_shards > self.registry_capacity {
             return Err(format!(
                 "registry_shards ({}) must not exceed registry_capacity ({}): \
@@ -352,6 +387,13 @@ impl Config {
             fields.push(("approx_rel_err", Value::Number(e)));
         }
         fields.push(("registry_shards", Value::from(self.registry_shards)));
+        if let Some(ms) = self.slow_query_ms {
+            fields.push(("slow_query_ms", Value::from(ms as usize)));
+        }
+        fields.push(("trace_events", Value::from(self.trace_events)));
+        if let Some(seed) = self.trace_seed {
+            fields.push(("trace_seed", Value::from(seed as usize)));
+        }
         if !self.tenants.is_empty() {
             let entries: Vec<(&str, Value)> = self
                 .tenants
@@ -679,6 +721,42 @@ mod tests {
         // The default dump carries no tenants key at all.
         let dump = json::to_string(&Config::default().to_json());
         assert!(!dump.contains("tenants"), "{dump}");
+    }
+
+    #[test]
+    fn observability_keys_parse_validate_and_round_trip() {
+        let v = json::parse(
+            r#"{"slow_query_ms": 25, "trace_events": 64, "trace_seed": 42}"#,
+        )
+        .unwrap();
+        let cfg = Config::from_json(&v).unwrap();
+        assert_eq!(cfg.slow_query_ms, Some(25));
+        assert_eq!(cfg.trace_events, 64);
+        assert_eq!(cfg.trace_seed, Some(42));
+        // Defaults: slow-query log off, 256-event ring, entropy seed.
+        assert_eq!(Config::default().slow_query_ms, None);
+        assert_eq!(Config::default().trace_events, 256);
+        assert_eq!(Config::default().trace_seed, None);
+        // Threshold 0 journals everything — valid (smoke tests use it).
+        let v = json::parse(r#"{"slow_query_ms": 0}"#).unwrap();
+        assert_eq!(Config::from_json(&v).unwrap().slow_query_ms, Some(0));
+        // Typed rejections: empty ring, non-integer fields.
+        for bad in [
+            r#"{"trace_events": 0}"#,
+            r#"{"trace_events": "lots"}"#,
+            r#"{"slow_query_ms": "fast"}"#,
+            r#"{"trace_seed": "entropy"}"#,
+        ] {
+            let v = json::parse(bad).unwrap();
+            assert!(Config::from_json(&v).is_err(), "accepted {bad}");
+        }
+        // Set → emitted → parsed back; unset optionals stay absent.
+        let back = Config::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(cfg, back);
+        let dump = json::to_string(&Config::default().to_json());
+        assert!(!dump.contains("slow_query_ms"), "{dump}");
+        assert!(!dump.contains("trace_seed"), "{dump}");
+        assert!(dump.contains("trace_events"), "{dump}");
     }
 
     #[test]

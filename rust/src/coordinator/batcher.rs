@@ -77,6 +77,20 @@ pub fn scatter_rows(values: &[f32], ks: &[usize], width: usize) -> Vec<Vec<f32>>
     scatter(values, &lens)
 }
 
+/// Split one job's total pre-execution wait into its `(queue_wait,
+/// batch)` stages (DESIGN.md §18): the batch-forming window (head pop →
+/// batch sealed) is shared by the whole batch, so a job's own queueing
+/// is whatever it waited *beyond* that window.  A follower that enqueued
+/// mid-window waited less than the window itself — its wait is all
+/// `batch`, never a negative queue stage.
+pub fn split_wait(
+    total_wait: std::time::Duration,
+    batch_window: std::time::Duration,
+) -> (std::time::Duration, std::time::Duration) {
+    let batch = batch_window.min(total_wait);
+    (total_wait - batch, batch)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -127,6 +141,24 @@ mod tests {
         assert_eq!(parts[1], vec![6.0, 7.0, 8.0]);
         // Width 1 degenerates to plain scatter.
         assert_eq!(scatter_rows(&vals, &[9], 1), scatter(&vals, &[9]));
+    }
+
+    #[test]
+    fn split_wait_attributes_window_then_queue() {
+        use std::time::Duration;
+        let ms = Duration::from_millis;
+        // Head waited 10ms before pop, window was 4ms: 6ms queue, 4ms batch.
+        assert_eq!(split_wait(ms(10), ms(4)), (ms(6), ms(4)));
+        // Follower enqueued mid-window: all its wait is batch.
+        assert_eq!(split_wait(ms(3), ms(4)), (ms(0), ms(3)));
+        // Exact boundary and zero window.
+        assert_eq!(split_wait(ms(4), ms(4)), (ms(0), ms(4)));
+        assert_eq!(split_wait(ms(7), ms(0)), (ms(7), ms(0)));
+        // Stages always re-sum to the total wait.
+        for (t, w) in [(0u64, 5u64), (5, 0), (12, 7), (7, 12)] {
+            let (q, b) = split_wait(ms(t), ms(w));
+            assert_eq!(q + b, ms(t));
+        }
     }
 
     // ---- property tests -------------------------------------------------

@@ -13,9 +13,14 @@ use crate::util::json::Value;
 /// Log2-bucketed latency histogram, 1µs .. ~1h range.
 ///
 /// Bucket i covers [2^i, 2^{i+1}) microseconds; recording and reading are
-/// wait-free atomics so the hot path never takes a lock.  Quantiles are
-/// bucket-resolution approximations (±50% of the value, which is fine for
-/// serving dashboards; exact latencies go to the bench harness instead).
+/// wait-free atomics so the hot path never takes a lock.  Quantiles
+/// interpolate linearly within the covering bucket (so the error is one
+/// interpolation step inside a 2× bucket, not the former ±50% upper-edge
+/// answer), and the bucket array itself serializes through
+/// [`LatencyHistogram::to_json`] / merges back via
+/// [`LatencyHistogram::merge_value`] so a router can combine per-node
+/// histograms into true fleet-wide quantiles (DESIGN.md §18).  Exact
+/// latencies go to the bench harness instead.
 #[derive(Debug)]
 pub struct LatencyHistogram {
     buckets: [AtomicU64; Self::NUM_BUCKETS],
@@ -50,6 +55,17 @@ impl LatencyHistogram {
         idx.min(Self::NUM_BUCKETS - 1)
     }
 
+    /// Inclusive lower edge of bucket `i` in microseconds (bucket 0
+    /// starts at 0 because it also absorbs sub-microsecond samples).
+    fn bucket_lo(i: usize) -> u64 {
+        if i == 0 { 0 } else { 1u64 << i }
+    }
+
+    /// Exclusive upper edge of bucket `i` in microseconds.
+    fn bucket_hi(i: usize) -> u64 {
+        1u64 << (i + 1)
+    }
+
     /// Record one latency sample (lock-free).
     pub fn record(&self, d: Duration) {
         let us = d.as_micros().min(u128::from(u64::MAX)) as u64;
@@ -78,7 +94,11 @@ impl LatencyHistogram {
         Duration::from_micros(self.max_us.load(Ordering::Relaxed))
     }
 
-    /// Approximate quantile (upper edge of the covering bucket).
+    /// Approximate quantile with within-bucket linear interpolation: the
+    /// rank is located in its covering bucket, then positioned linearly
+    /// between the bucket edges.  The result is clamped to the recorded
+    /// maximum so a lone sample in the (half-open) top of a bucket never
+    /// reports past anything actually observed.
     pub fn quantile(&self, q: f64) -> Duration {
         assert!((0.0..=1.0).contains(&q));
         let total = self.count();
@@ -88,16 +108,92 @@ impl LatencyHistogram {
         let target = ((total as f64) * q).ceil().max(1.0) as u64;
         let mut seen = 0u64;
         for (i, b) in self.buckets.iter().enumerate() {
-            seen += b.load(Ordering::Relaxed);
-            if seen >= target {
-                return Duration::from_micros(1u64 << (i + 1));
+            let c = b.load(Ordering::Relaxed);
+            if c > 0 && seen + c >= target {
+                let frac = (target - seen) as f64 / c as f64;
+                let lo = Self::bucket_lo(i) as f64;
+                let hi = Self::bucket_hi(i) as f64;
+                let us = (lo + frac * (hi - lo)).round() as u64;
+                return Duration::from_micros(
+                    us.min(self.max_us.load(Ordering::Relaxed)),
+                );
             }
+            seen += c;
         }
         self.max()
     }
 
-    /// Render for the stats endpoint.
+    /// Fold `other` into `self` (lossless at bucket resolution): bucket
+    /// counts, sample count, and sum add; max takes the larger.  Both
+    /// sides stay usable — recording may continue concurrently on either.
+    pub fn merge(&self, other: &LatencyHistogram) {
+        for (mine, theirs) in self.buckets.iter().zip(other.buckets.iter()) {
+            let c = theirs.load(Ordering::Relaxed);
+            if c > 0 {
+                mine.fetch_add(c, Ordering::Relaxed);
+            }
+        }
+        self.count.fetch_add(other.count.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.sum_us.fetch_add(other.sum_us.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.max_us.fetch_max(other.max_us.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
+    /// Fold a serialized histogram document (the [`Self::to_json`] form)
+    /// into `self`.  Returns `false` — and merges nothing — when the
+    /// document lacks the mergeable `buckets` array (an error body, or a
+    /// node predating the bucket form); the caller can then fall back to
+    /// scalar totals.
+    pub fn merge_value(&self, v: &Value) -> bool {
+        let Some(buckets) = v.get("buckets").and_then(|b| b.as_array()) else {
+            return false;
+        };
+        if buckets.len() != Self::NUM_BUCKETS {
+            return false;
+        }
+        let mut parsed = [0u64; Self::NUM_BUCKETS];
+        for (slot, b) in parsed.iter_mut().zip(buckets.iter()) {
+            match b.as_f64() {
+                Some(c) if c >= 0.0 => *slot = c as u64,
+                _ => return false,
+            }
+        }
+        let field = |k: &str| v.get(k).and_then(|x| x.as_f64()).map(|x| x as u64);
+        let (Some(count), Some(sum_us), Some(max_us)) =
+            (field("count"), field("sum_us"), field("max_us"))
+        else {
+            return false;
+        };
+        for (mine, c) in self.buckets.iter().zip(parsed.iter()) {
+            if *c > 0 {
+                mine.fetch_add(*c, Ordering::Relaxed);
+            }
+        }
+        self.count.fetch_add(count, Ordering::Relaxed);
+        self.sum_us.fetch_add(sum_us, Ordering::Relaxed);
+        self.max_us.fetch_max(max_us, Ordering::Relaxed);
+        true
+    }
+
+    /// Snapshot of the raw bucket counts (index i = samples in
+    /// [2^i, 2^{i+1}) µs), for exposition renderers.
+    pub fn bucket_counts(&self) -> [u64; Self::NUM_BUCKETS] {
+        std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed))
+    }
+
+    /// Total recorded microseconds (the Prometheus `_sum` numerator).
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us.load(Ordering::Relaxed)
+    }
+
+    /// Render for the stats endpoint.  The summary fields are for humans;
+    /// the `buckets` array + `sum_us` are the mergeable form a router
+    /// folds back through [`Self::merge_value`].
     pub fn to_json(&self) -> Value {
+        let buckets: Vec<Value> = self
+            .bucket_counts()
+            .iter()
+            .map(|&c| Value::from(c))
+            .collect();
         Value::object(vec![
             ("count", Value::from(self.count())),
             ("mean_us", Value::from(self.mean().as_micros() as u64)),
@@ -105,6 +201,8 @@ impl LatencyHistogram {
             ("p95_us", Value::from(self.quantile(0.95).as_micros() as u64)),
             ("p99_us", Value::from(self.quantile(0.99).as_micros() as u64)),
             ("max_us", Value::from(self.max().as_micros() as u64)),
+            ("sum_us", Value::from(self.sum_us())),
+            ("buckets", Value::from(buckets)),
         ])
     }
 }
@@ -291,6 +389,85 @@ mod tests {
         assert_eq!(LatencyHistogram::bucket_of(3), 1);
         assert_eq!(LatencyHistogram::bucket_of(1024), 10);
         assert_eq!(LatencyHistogram::bucket_of(u64::MAX), 31);
+    }
+
+    #[test]
+    fn bucket_boundaries_land_exactly() {
+        // 2^k - 1 stays in bucket k-1; 2^k opens bucket k — for every
+        // power up to the saturating top bucket.
+        for k in 1..=31usize {
+            assert_eq!(LatencyHistogram::bucket_of((1u64 << k) - 1), k - 1, "below 2^{k}");
+            assert_eq!(LatencyHistogram::bucket_of(1u64 << k), k, "at 2^{k}");
+        }
+        // Past the last bucket's lower edge everything saturates into 31.
+        assert_eq!(LatencyHistogram::bucket_of(1u64 << 32), 31);
+        assert_eq!(LatencyHistogram::bucket_of((1u64 << 40) + 7), 31);
+        assert_eq!(LatencyHistogram::bucket_of(u64::MAX - 1), 31);
+        // Edges round-trip through the lo/hi helpers the interpolator uses.
+        assert_eq!(LatencyHistogram::bucket_lo(0), 0);
+        assert_eq!(LatencyHistogram::bucket_hi(0), 2);
+        assert_eq!(LatencyHistogram::bucket_lo(10), 1024);
+        assert_eq!(LatencyHistogram::bucket_hi(10), 2048);
+    }
+
+    #[test]
+    fn quantile_interpolates_within_bucket() {
+        // 2 samples in bucket 11 ([2048, 4096)): the median rank is the
+        // first of the two, so interpolation puts p50 at lo + (1/2)·span
+        // = 3072 µs — strictly inside the bucket, not at its upper edge.
+        let h = LatencyHistogram::new();
+        for ms in [1u64, 2, 3, 4, 100] {
+            h.record(Duration::from_millis(ms));
+        }
+        assert_eq!(h.quantile(0.5), Duration::from_micros(3072));
+        // The covering bucket for p99 is the 100ms outlier's; the clamp
+        // keeps the answer at the recorded max rather than the bucket edge.
+        assert_eq!(h.quantile(0.99), Duration::from_millis(100));
+    }
+
+    #[test]
+    fn merge_is_lossless_at_bucket_resolution() {
+        let a = LatencyHistogram::new();
+        let b = LatencyHistogram::new();
+        let whole = LatencyHistogram::new();
+        for us in [10u64, 100, 1000, 10_000] {
+            a.record(Duration::from_micros(us));
+            whole.record(Duration::from_micros(us));
+        }
+        for us in [5u64, 50_000, 500_000] {
+            b.record(Duration::from_micros(us));
+            whole.record(Duration::from_micros(us));
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        assert_eq!(a.sum_us(), whole.sum_us());
+        assert_eq!(a.max(), whole.max());
+        assert_eq!(a.bucket_counts(), whole.bucket_counts());
+        for q in [0.5, 0.95, 0.99] {
+            assert_eq!(a.quantile(q), whole.quantile(q), "q={q}");
+        }
+    }
+
+    #[test]
+    fn merge_value_round_trips_to_json() {
+        let src = LatencyHistogram::new();
+        for us in [3u64, 333, 33_333] {
+            src.record(Duration::from_micros(us));
+        }
+        let doc = src.to_json();
+        let dst = LatencyHistogram::new();
+        assert!(dst.merge_value(&doc));
+        assert_eq!(dst.count(), src.count());
+        assert_eq!(dst.sum_us(), src.sum_us());
+        assert_eq!(dst.max(), src.max());
+        assert_eq!(dst.bucket_counts(), src.bucket_counts());
+        // Non-mergeable documents are rejected atomically: nothing folds in.
+        assert!(!dst.merge_value(&Value::object(vec![("count", Value::from(9u64))])));
+        assert!(!dst.merge_value(&Value::object(vec![(
+            "buckets",
+            Value::from(vec![Value::from(1u64); 3]),
+        )])));
+        assert_eq!(dst.count(), src.count());
     }
 
     #[test]

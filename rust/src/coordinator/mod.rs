@@ -34,6 +34,16 @@
 //! enforced at admission with typed [`QuotaExceeded`] rejections, and
 //! the scheduler drains per-tenant lanes by weighted deficit
 //! round-robin.
+//!
+//! Observability (DESIGN.md §18): requests may carry a trace ID
+//! (attached at submit via [`Coordinator::submit_traced`] /
+//! [`Coordinator::fit_traced`]), every request's
+//! `queue_wait / batch / prepare / execute / reply` stages are recorded
+//! into per-(pipeline, mode, tenant) span histograms, and slow queries,
+//! evictions and quota rejections land in a bounded event journal.
+//! Recording on the hot path is wait-free atomics through `Arc`s
+//! resolved at admission — the dispatcher allocates nothing for tracing,
+//! and replies are bitwise identical with tracing on or off.
 
 pub mod batcher;
 pub mod metrics;
@@ -56,6 +66,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::approx::{default_seed, ApproxParams, Budget};
 use crate::config::Config;
 use crate::estimator::{EstimatorKind, Variant};
+use crate::obs::{Obs, SpanSet, Stage, StageClock};
 use crate::runtime::{ApproxOffer, ArtifactEntry, Engine, HostTensor, Manifest};
 use crate::util::json::Value;
 use crate::{log_debug, log_info, log_warn};
@@ -84,6 +95,11 @@ pub struct QueryResult {
     /// Number of requests co-batched into the execution that served this
     /// one (gradients report it exactly like densities).
     pub batch_size: usize,
+    /// End-to-end trace ID of the request this result answers (0 =
+    /// untraced; DESIGN.md §18).  Carried beside the payload — never
+    /// inside it — so traced and untraced replies are bitwise identical
+    /// in `values`.
+    pub trace_id: u64,
 }
 
 /// Result of a fit request — the resolved parameters the wire `FitOk`
@@ -149,28 +165,46 @@ struct QueryJob {
     /// its job (DESIGN.md §17).
     vec: Option<Vec<f32>>,
     enqueued: Instant,
-    reply: Sender<Result<QueryResult, String>>,
+    reply: Sender<Reply>,
     /// The issuing tenant's stat entry; `inflight` was incremented at
     /// admission and is decremented exactly once when the reply is sent
     /// (success or failure).
     tenant: Arc<TenantStat>,
+    /// End-to-end trace ID (0 = untraced; DESIGN.md §18).
+    trace_id: u64,
+    /// Span histograms for this job's (pipeline, mode, tenant) cell —
+    /// resolved once at admission so the dispatcher records stages with
+    /// plain atomics, no lookups or allocation.
+    spans: Arc<SpanSet>,
+}
+
+/// Dispatcher → ticket channel message: the result plus the instant it
+/// was sent, so [`QueryTicket::wait`] can attribute the handoff latency
+/// to the `reply` stage (DESIGN.md §18).
+struct Reply {
+    result: Result<QueryResult, String>,
+    sent: Instant,
 }
 
 /// In-flight query: returned by [`Coordinator::submit`] so clients can
 /// pipeline requests; [`QueryTicket::wait`] blocks for the reply.
 pub struct QueryTicket {
-    rx: Receiver<Result<QueryResult, String>>,
+    rx: Receiver<Reply>,
     metrics: Arc<Metrics>,
+    spans: Arc<SpanSet>,
 }
 
 impl QueryTicket {
     /// Block until the dispatcher serves the request.
     pub fn wait(self) -> Result<QueryResult> {
-        let result = self
+        let reply = self
             .rx
             .recv()
-            .map_err(|_| anyhow!("dispatcher dropped request"))?
-            .map_err(|e| anyhow!(e))?;
+            .map_err(|_| anyhow!("dispatcher dropped request"))?;
+        // Reply-stage span: dispatcher send → caller receipt.  Recorded
+        // for errors too — a slow handoff is a slow handoff either way.
+        self.spans.record(Stage::Reply, reply.sent.elapsed());
+        let result = reply.result.map_err(|e| anyhow!(e))?;
         self.metrics.e2e_latency.record(Duration::from_secs_f64(
             (result.queue_ms + result.exec_ms) / 1e3,
         ));
@@ -186,6 +220,9 @@ pub struct Coordinator {
     metrics: Arc<Metrics>,
     tenants: Arc<TenantTable>,
     queue: Arc<FairQueue<QueryJob>>,
+    /// Observability bundle: trace-ID generator, per-stage span
+    /// histograms, bounded event journal (DESIGN.md §18).
+    obs: Arc<Obs>,
     dispatcher: Option<JoinHandle<()>>,
     /// Routing enrollment this worker holds: `(epoch, digest)` of the
     /// router table it was last enrolled under (multi-node serving,
@@ -277,6 +314,11 @@ impl Coordinator {
             .map(|(name, q)| (name.clone(), q.weight))
             .collect();
         let queue = Arc::new(FairQueue::new(cfg.queue_depth, &weights));
+        let obs = Arc::new(Obs::new(
+            cfg.trace_events,
+            cfg.trace_seed,
+            cfg.slow_query_ms,
+        ));
 
         // Optional startup warming: pre-compile serving buckets.
         for &d in &cfg.warm_dims {
@@ -296,11 +338,12 @@ impl Coordinator {
         let dispatcher = {
             let queue = Arc::clone(&queue);
             let metrics = Arc::clone(&metrics);
+            let obs = Arc::clone(&obs);
             let engine = engine.clone();
             let cfg = cfg.clone();
             std::thread::Builder::new()
                 .name("dispatcher".into())
-                .spawn(move || dispatcher_loop(cfg, engine, queue, metrics))
+                .spawn(move || dispatcher_loop(cfg, engine, queue, metrics, obs))
                 .context("spawning dispatcher")?
         };
 
@@ -311,6 +354,7 @@ impl Coordinator {
             metrics,
             tenants,
             queue,
+            obs,
             dispatcher: Some(dispatcher),
             routing: Mutex::new((0, 0)),
         })
@@ -394,6 +438,18 @@ impl Coordinator {
         &self.registry
     }
 
+    /// Observability bundle: trace-ID generator, span histograms and the
+    /// event journal (DESIGN.md §18).
+    pub fn obs(&self) -> &Obs {
+        &self.obs
+    }
+
+    /// Journal document served by `{"op":"trace"}` and the CLI (`limit`
+    /// 0 = all retained events, oldest first).
+    pub fn trace_json(&self, limit: usize) -> Value {
+        self.obs.journal.to_json(limit)
+    }
+
     /// The artifact manifest the engine serves (bucket routing source).
     pub fn manifest(&self) -> &Manifest {
         self.engine.manifest()
@@ -409,6 +465,21 @@ impl Coordinator {
         points: Vec<f32>,
         spec: &FitSpec,
     ) -> Result<ModelHandle> {
+        self.fit_traced(name, points, spec, None)
+    }
+
+    /// [`fit`](Self::fit) with an explicit trace ID (`None` assigns a
+    /// fresh one).  The ID lands in the journal's `fit` event, so a
+    /// routed fit and its journal replays on replicas share one ID
+    /// (DESIGN.md §18).
+    pub fn fit_traced(
+        &self,
+        name: &str,
+        points: Vec<f32>,
+        spec: &FitSpec,
+        trace_id: Option<u64>,
+    ) -> Result<ModelHandle> {
+        let trace_id = trace_id.unwrap_or_else(|| self.obs.tracer.next());
         Metrics::inc(&self.metrics.fit_requests);
         let start = Instant::now();
         let d = spec.d;
@@ -441,6 +512,15 @@ impl Coordinator {
             let already_resident = self.registry.peek(&key).is_some();
             if !already_resident && self.registry.resident_for(&tenant) >= max {
                 Metrics::inc(&tstat.rejected_quota);
+                self.obs.journal.record(
+                    "quota_reject",
+                    trace_id,
+                    Value::object(vec![
+                        ("tenant", Value::from(tenant.as_str())),
+                        ("resource", Value::from("models")),
+                        ("limit", Value::from(max)),
+                    ]),
+                );
                 return Err(anyhow::Error::new(QuotaExceeded {
                     tenant,
                     resource: "models".to_string(),
@@ -567,11 +647,28 @@ impl Coordinator {
         let model = Arc::new(model);
         if let Some(evicted) = self.registry.insert_arc(Arc::clone(&model)) {
             log_warn!("coord", "registry full: evicted model {evicted:?}");
+            self.obs.journal.record(
+                "evict",
+                trace_id,
+                Value::object(vec![("model", Value::String(evicted))]),
+            );
         }
         log_info!(
             "coord",
             "fitted {name:?} kind={} n={n} d={d} bucket={bucket_n} h={h:.4} ({fit_ms:.1}ms)",
             kind.as_str()
+        );
+        self.obs.journal.record(
+            "fit",
+            trace_id,
+            Value::object(vec![
+                ("model", Value::from(name)),
+                ("tenant", Value::String(model.tenant.clone())),
+                ("n", Value::from(n)),
+                ("d", Value::from(d)),
+                ("bucket_n", Value::from(bucket_n)),
+                ("fit_ms", Value::Number(fit_ms)),
+            ]),
         );
         Ok(ModelHandle::new(model))
     }
@@ -601,6 +698,21 @@ impl Coordinator {
         handle: &ModelHandle,
         spec: QuerySpec,
     ) -> Result<QueryTicket> {
+        self.submit_traced(handle, spec, None)
+    }
+
+    /// [`submit`](Self::submit) with an explicit trace ID.  `None` means
+    /// untraced (recorded as 0) — in-process callers pay nothing; the
+    /// wire server attaches the frame's ID (or mints one) here, so router
+    /// retries and replica failovers carry one ID end to end
+    /// (DESIGN.md §18).
+    pub fn submit_traced(
+        &self,
+        handle: &ModelHandle,
+        spec: QuerySpec,
+        trace_id: Option<u64>,
+    ) -> Result<QueryTicket> {
+        let trace_id = trace_id.unwrap_or(0);
         let model = Arc::clone(handle.fitted());
         let QuerySpec { points, mode, budget, tenant, vec } = spec;
         // A spec naming a tenant must match the model's owner — the
@@ -689,6 +801,15 @@ impl Coordinator {
                 tstat.inflight.fetch_sub(1, Ordering::Relaxed);
                 Metrics::inc(&tstat.rejected_quota);
                 Metrics::inc(&self.metrics.rejected);
+                self.obs.journal.record(
+                    "quota_reject",
+                    trace_id,
+                    Value::object(vec![
+                        ("tenant", Value::from(tenant_name.as_str())),
+                        ("resource", Value::from("inflight")),
+                        ("limit", Value::from(max)),
+                    ]),
+                );
                 return Err(anyhow::Error::new(QuotaExceeded {
                     tenant: tenant_name,
                     resource: "inflight".to_string(),
@@ -697,6 +818,15 @@ impl Coordinator {
             }
         }
         Metrics::inc(&tstat.admitted);
+
+        // The span-set Arc resolves here, beside the tenant lookup
+        // admission already did — the dispatcher then records stages
+        // through it with plain atomics (DESIGN.md §18).
+        let spans = self.obs.spans.set(
+            kernel_label(mode.kernel()),
+            mode.as_str(),
+            &tenant_name,
+        );
 
         let (reply, rx) = channel();
         let job = QueryJob {
@@ -709,6 +839,8 @@ impl Coordinator {
             enqueued: Instant::now(),
             reply,
             tenant: Arc::clone(&tstat),
+            trace_id,
+            spans: Arc::clone(&spans),
         };
         match self.queue.push(&tenant_name, job) {
             Ok(()) => {}
@@ -722,7 +854,7 @@ impl Coordinator {
                 bail!("coordinator shutting down");
             }
         }
-        Ok(QueryTicket { rx, metrics: Arc::clone(&self.metrics) })
+        Ok(QueryTicket { rx, metrics: Arc::clone(&self.metrics), spans })
     }
 
     /// Run a query to completion: enqueue, batch, execute, reply.
@@ -843,9 +975,13 @@ impl Coordinator {
         // Per-tenant admission counters (DESIGN.md §16): every tenant the
         // coordinator has seen, keyed by name, sorted by the BTreeMap.
         let mut tenants = BTreeMap::new();
+        // One lock hold for every lane's depth (scheduler snapshot)
+        // instead of a per-tenant lock acquisition.
+        let depths: std::collections::HashMap<String, usize> =
+            self.queue.depths().into_iter().collect();
         for (name, stat) in self.tenants.snapshot() {
             let resident = self.registry.resident_for(&name);
-            let depth = self.queue.depth(&name);
+            let depth = depths.get(&name).copied().unwrap_or(0);
             tenants.insert(
                 name,
                 Value::object(vec![
@@ -942,6 +1078,19 @@ impl Coordinator {
                 ]),
             ),
             ("queue_depth", Value::from(self.queue.len())),
+            // Per-(pipeline, mode, tenant) stage histograms and the event
+            // journal's counters (DESIGN.md §18).  Journal *events* are
+            // not in stats — they are served by the `trace` op, so a
+            // metrics scrape never drags the full ring over the wire.
+            ("spans", self.obs.spans.to_json()),
+            (
+                "journal",
+                Value::object(vec![
+                    ("capacity", Value::from(self.obs.journal.capacity())),
+                    ("recorded", Value::from(self.obs.journal.recorded())),
+                    ("dropped", Value::from(self.obs.journal.dropped())),
+                ]),
+            ),
         ])
     }
 
@@ -969,6 +1118,7 @@ fn dispatcher_loop(
     engine: Engine,
     queue: Arc<FairQueue<QueryJob>>,
     metrics: Arc<Metrics>,
+    obs: Arc<Obs>,
 ) {
     log_info!("dispatch", "dispatcher up (batch budget {} queries, wait {}ms)",
         cfg.batch_max_queries, cfg.batch_wait_ms);
@@ -978,6 +1128,9 @@ fn dispatcher_loop(
             Err(PopTimeout::TimedOut) => continue,
             Err(PopTimeout::Closed) => break,
         };
+        // Head-pop stamp: everything between here and batch dispatch is
+        // the batch-forming window (the `batch` stage, DESIGN.md §18).
+        let popped = Instant::now();
 
         // Co-batching window: give followers a brief chance to arrive.
         if cfg.batch_wait_ms > 0 && queue.is_empty() {
@@ -1020,29 +1173,55 @@ fn dispatcher_loop(
 
         Metrics::inc(&metrics.batches);
         Metrics::add(&metrics.batched_requests, batch.len() as u64);
-        execute_batch(&engine, &metrics, batch);
+        execute_batch(&engine, &metrics, &obs, batch, popped);
     }
     log_info!("dispatch", "dispatcher down");
 }
 
-fn execute_batch(engine: &Engine, metrics: &Metrics, batch: Vec<QueryJob>) {
+/// Stable pipeline label for span keys: the kernel family actually
+/// executed.  Density modes share the model's eval pipeline (labelled
+/// `kde` regardless of estimator), grad and matvec always run their
+/// flash pipelines — so the label is known at submit without touching
+/// the model's variant.
+fn kernel_label(kernel: QueryKernel) -> &'static str {
+    match kernel {
+        QueryKernel::Density => "kde",
+        QueryKernel::Score => "score_eval",
+        QueryKernel::MatVec => "matvec",
+    }
+}
+
+fn execute_batch(
+    engine: &Engine,
+    metrics: &Metrics,
+    obs: &Obs,
+    batch: Vec<QueryJob>,
+    popped: Instant,
+) {
     let model = Arc::clone(&batch[0].model);
     let kernel = batch[0].mode.kernel();
     let batch_size = batch.len();
+    // The batch-forming window (head pop → batch sealed: the co-batch
+    // sleep plus the coalescing drain) is shared by every job in the
+    // batch; each job's pre-pop queueing is its own.  Saturating: a
+    // follower can enqueue *after* the head was popped.
+    let batch_formed = Instant::now();
+    let batch_window = batch_formed.saturating_duration_since(popped);
     let queue_wait = batch
         .iter()
-        .map(|j| j.enqueued.elapsed())
+        .map(|j| batch_formed.saturating_duration_since(j.enqueued))
         .max()
         .unwrap_or_default();
     metrics.queue_wait.record(queue_wait);
 
     let result = run_model_query(engine, metrics, &model, &batch, kernel);
     match result {
-        Ok((values, exec_ms)) => {
+        Ok((values, exec_ms, prepare_ms)) => {
             // All jobs in a batch share a kernel, hence one output width.
             let width = batch[0].mode.width(model.d);
             let ks: Vec<usize> = batch.iter().map(|j| j.k).collect();
             let parts = batcher::scatter_rows(&values, &ks, width);
+            let execute_ms = (exec_ms - prepare_ms).max(0.0);
             for (job, mut vals) in batch.into_iter().zip(parts) {
                 if job.mode == OutputMode::LogDensity {
                     for v in &mut vals {
@@ -1050,17 +1229,63 @@ fn execute_batch(engine: &Engine, metrics: &Metrics, batch: Vec<QueryJob>) {
                     }
                 }
                 let queue_ms = job.enqueued.elapsed().as_secs_f64() * 1e3 - exec_ms;
+                // Stage attribution (DESIGN.md §18): the wait splits into
+                // pre-pop queueing and the shared batch window; execute
+                // is the engine time minus its prepare phase.  Recording
+                // is plain atomic stores into the span Arc resolved at
+                // admission — no locks, no allocation on this path.
+                let total_wait =
+                    batch_formed.saturating_duration_since(job.enqueued);
+                let (queue_stage, batch_stage) =
+                    batcher::split_wait(total_wait, batch_window);
+                let mut clock = StageClock::new();
+                clock.set(Stage::QueueWait, queue_stage);
+                clock.set(Stage::Batch, batch_stage);
+                clock.set(
+                    Stage::Prepare,
+                    Duration::from_secs_f64(prepare_ms / 1e3),
+                );
+                clock.set(
+                    Stage::Execute,
+                    Duration::from_secs_f64(execute_ms / 1e3),
+                );
+                job.spans.observe(&clock);
+                // Slow-query journal: the detail document only allocates
+                // once the threshold has fired.
+                if let Some(thr) = obs.slow_query_us {
+                    if clock.total() >= Duration::from_micros(thr) {
+                        obs.journal.record(
+                            "slow_query",
+                            job.trace_id,
+                            Value::object(vec![
+                                ("model", Value::from(job.model.name.as_str())),
+                                (
+                                    "tenant",
+                                    Value::from(job.model.tenant.as_str()),
+                                ),
+                                ("mode", Value::from(job.mode.as_str())),
+                                ("k", Value::from(job.k)),
+                                ("batch_size", Value::from(batch_size)),
+                                ("stages", clock.to_json()),
+                            ]),
+                        );
+                    }
+                }
                 // Release the in-flight slot BEFORE the reply: a caller
                 // that has seen its result must never still be counted
                 // against the tenant's quota.
                 job.tenant.inflight.fetch_sub(1, Ordering::Relaxed);
-                let _ = job.reply.send(Ok(QueryResult {
-                    values: vals,
-                    mode: job.mode,
-                    queue_ms: queue_ms.max(0.0),
-                    exec_ms,
-                    batch_size,
-                }));
+                let _ = job.reply.send(Reply {
+                    result: Ok(QueryResult {
+                        values: vals,
+                        mode: job.mode,
+                        queue_ms: queue_ms.max(0.0),
+                        exec_ms,
+                        batch_size,
+                        trace_id: job.trace_id,
+                    }),
+                    sent: Instant::now(),
+                });
             }
             metrics
                 .exec_latency
@@ -1073,7 +1298,10 @@ fn execute_batch(engine: &Engine, metrics: &Metrics, batch: Vec<QueryJob>) {
             for job in batch {
                 // Slot release before the reply, as on the Ok path.
                 job.tenant.inflight.fetch_sub(1, Ordering::Relaxed);
-                let _ = job.reply.send(Err(msg.clone()));
+                let _ = job.reply.send(Reply {
+                    result: Err(msg.clone()),
+                    sent: Instant::now(),
+                });
             }
         }
     }
@@ -1083,13 +1311,18 @@ fn execute_batch(engine: &Engine, metrics: &Metrics, batch: Vec<QueryJob>) {
 /// against the available m-buckets of the kernel's pipeline, execute, and
 /// concatenate outputs.  The density kernel returns one value per query
 /// row; the score kernel returns `d` values per row.
+///
+/// Returns `(values, exec_ms, prepare_ms)`: total engine wall time and
+/// the backend's `prepare` phase within it (0 when the backend records
+/// no prepare phase — PJRT, or a prepare-cache hit), so the dispatcher
+/// can attribute `prepare` vs `execute` stages (DESIGN.md §18).
 fn run_model_query(
     engine: &Engine,
     metrics: &Metrics,
     model: &FittedModel,
     batch: &[QueryJob],
     kernel: QueryKernel,
-) -> Result<(Vec<f32>, f64)> {
+) -> Result<(Vec<f32>, f64, f64)> {
     let d = model.d;
     let total_k: usize = batch.iter().map(|j| j.k).sum();
     let mut all_points = Vec::with_capacity(total_k * d);
@@ -1150,6 +1383,7 @@ fn run_model_query(
 
     let mut values = vec![0.0f32; total_k * width];
     let mut exec_ms = 0.0f64;
+    let mut prepare_ms = 0.0f64;
     for (start, end) in batcher::chunk_rows(total_k, max_m) {
         let rows = end - start;
         let m_bucket = batcher::pick_m_bucket(&m_buckets, rows)
@@ -1200,6 +1434,9 @@ fn run_model_query(
             None => engine.execute(&entry, inputs)?,
         };
         exec_ms += out.timings.total().as_secs_f64() * 1e3;
+        if let Some(p) = out.timings.get("prepare") {
+            prepare_ms += p.as_secs_f64() * 1e3;
+        }
         let output = out
             .outputs
             .into_iter()
@@ -1213,5 +1450,5 @@ fn run_model_query(
             out.timings.render()
         );
     }
-    Ok((values, exec_ms))
+    Ok((values, exec_ms, prepare_ms))
 }

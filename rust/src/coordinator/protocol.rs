@@ -18,8 +18,8 @@
 //!   {"v":2,"op":"query","model":"m1",
 //!    "mode":"density|log_density|grad|matvec",
 //!    "points":[[...],...], "vec":[...]?, "rel_err":0.1?, "seed":42?}
-//!   {"v":2,"op":"models"} | {"v":2,"op":"stats"}
-//!   {"v":2,"op":"delete","model":"m1"}
+//!   {"v":2,"op":"models"} | {"v":2,"op":"stats","format":"prometheus"?}
+//!   {"v":2,"op":"trace"} | {"v":2,"op":"delete","model":"m1"}
 //!
 //! Legacy (v1) aliases `{"op":"eval",...}` and `{"op":"grad",...}` parse
 //! into `Query` with the corresponding mode.  This request-side
@@ -81,11 +81,28 @@
 //! exactly as before, so the addition is optional-and-additive in the
 //! same sense as `"epoch"`/`"tenant"`: every pre-MatVec line — v1 or v2 —
 //! is byte-identical on the wire, and the protocol version stays 2.
+//!
+//! **Trace ID** (DESIGN.md §18): the model-addressed frames (`fit`,
+//! `query`, `delete`) may carry an optional `"trace_id": T`
+//! (1 ..= 2^52-1; 0 is the "untraced" sentinel and never valid on the
+//! wire) identifying the request across every hop: a router stamps one
+//! at ingress (unless the client already sent its own), and because
+//! retries, replica failovers, and journal replays all re-send the same
+//! frame, they all share that one ID.  Query replies echo it back as
+//! `"trace_id"` (omitted when untraced), and the worker's slow-query
+//! journal records it, so a client-held ID can be joined against every
+//! worker's `trace` output.  Optional and additive like `"epoch"` —
+//! pre-trace frames stay byte-identical and the protocol version
+//! stays 2.  Two observability ops ride along: `stats` accepts an
+//! optional `"format"` (`"json"` default, `"prometheus"` for text
+//! exposition returned in a `"text"` field), and `trace` returns the
+//! receiver's event journal.
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::approx::Budget;
 use crate::estimator::{EstimatorKind, Variant};
+use crate::obs::MAX_TRACE_ID;
 use crate::util::json::{self, Value};
 
 use super::request::{validate_tenant, FitSpec, OutputMode, QuerySpec};
@@ -108,6 +125,38 @@ pub const MAX_EPOCH: u64 = 1 << 52;
 /// JSON layer's f64 integers; 0 is reserved as the "unset" sentinel.
 pub const MAX_DIGEST: u64 = (1 << 52) - 1;
 
+/// Requested rendering of the stats document (`"format"` on the `stats`
+/// op; absent means JSON, so pre-observability stats frames stay
+/// byte-identical on the wire).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum StatsFormat {
+    /// The structured stats document (the only pre-§18 behavior).
+    #[default]
+    Json,
+    /// Prometheus text exposition (version 0.0.4), returned as a
+    /// `"text"` field.
+    Prometheus,
+}
+
+impl StatsFormat {
+    /// Parse a wire/CLI format name.
+    pub fn parse(name: &str) -> Option<StatsFormat> {
+        match name {
+            "json" => Some(StatsFormat::Json),
+            "prometheus" => Some(StatsFormat::Prometheus),
+            _ => None,
+        }
+    }
+
+    /// The wire/CLI name.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            StatsFormat::Json => "json",
+            StatsFormat::Prometheus => "prometheus",
+        }
+    }
+}
+
 /// Parsed client request — a thin envelope around the shared typed specs.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Request {
@@ -126,6 +175,9 @@ pub enum Request {
         /// Node-table digest stamp (routers only; `None` for direct
         /// clients and pre-digest routers).
         digest: Option<u64>,
+        /// End-to-end trace ID (`None` = untraced; routers stamp one at
+        /// ingress, set-once, so every retry/failover/replay shares it).
+        trace_id: Option<u64>,
     },
     /// Evaluate a fitted model (any output mode).
     Query {
@@ -141,11 +193,21 @@ pub enum Request {
         /// Node-table digest stamp (routers only; `None` for direct
         /// clients and pre-digest routers).
         digest: Option<u64>,
+        /// End-to-end trace ID (`None` = untraced; routers stamp one at
+        /// ingress, set-once, so every retry/failover/replay shares it).
+        trace_id: Option<u64>,
     },
     /// List resident model names.
     Models,
     /// Fetch the server stats document.
-    Stats,
+    Stats {
+        /// Requested rendering: structured JSON (the default) or
+        /// Prometheus text exposition.
+        format: StatsFormat,
+    },
+    /// Fetch the receiver's observability event journal (slow queries,
+    /// evictions, quota rejections, membership transitions).
+    Trace,
     /// Delete a model by name.
     Delete {
         /// Name of the model to delete.
@@ -158,6 +220,9 @@ pub enum Request {
         /// Node-table digest stamp (routers only; `None` for direct
         /// clients and pre-digest routers).
         digest: Option<u64>,
+        /// End-to-end trace ID (`None` = untraced; routers stamp one at
+        /// ingress, set-once, so every retry/failover/replay shares it).
+        trace_id: Option<u64>,
     },
     /// Enroll the receiving worker at a routing-table epoch (router →
     /// worker; epochs only advance — see `Coordinator::set_routing_epoch`).
@@ -200,6 +265,19 @@ pub enum Response {
     /// The stats document.
     Stats {
         /// Same JSON the in-process `stats_json` renders.
+        body: Value,
+    },
+    /// The stats document rendered as Prometheus text exposition (reply
+    /// to `stats` with `format: "prometheus"`).
+    MetricsText {
+        /// The exposition body (newline-separated metric lines).
+        text: String,
+    },
+    /// The receiver's observability event journal (reply to
+    /// [`Request::Trace`]).
+    Trace {
+        /// The journal document: `capacity`/`recorded`/`dropped`
+        /// counters plus the retained `events`, oldest first.
         body: Value,
     },
     /// Reply to [`Request::Delete`].
@@ -366,6 +444,29 @@ fn parse_digest(v: &Value) -> Result<Option<u64>> {
     }
 }
 
+/// Extract the optional trace-ID stamp (`None` when absent; 0 is the
+/// "untraced" sentinel and never valid on the wire; values above
+/// [`MAX_TRACE_ID`] cannot come from [`crate::obs::TraceIdGen`] and are
+/// rejected so wire integers stay f64-exact).
+fn parse_trace_id(v: &Value) -> Result<Option<u64>> {
+    match v.get("trace_id") {
+        None => Ok(None),
+        Some(x) => {
+            let t = x
+                .as_usize()
+                .ok_or_else(|| anyhow!("'trace_id' must be a non-negative integer"))?
+                as u64;
+            if t == 0 {
+                bail!("'trace_id' must be >= 1 (0 means untraced)");
+            }
+            if t > MAX_TRACE_ID {
+                bail!("'trace_id' {t} exceeds the maximum {MAX_TRACE_ID}");
+            }
+            Ok(Some(t))
+        }
+    }
+}
+
 /// Extract the optional tenant name (`None` when absent, meaning the
 /// shared `"default"` tenant).  Names are validated here with the same
 /// rules as the in-process boundary ([`validate_tenant`]), so a
@@ -442,6 +543,33 @@ impl Request {
         }
     }
 
+    /// The trace ID this frame carries, if any.
+    pub fn trace_id(&self) -> Option<u64> {
+        match self {
+            Request::Fit { trace_id, .. }
+            | Request::Query { trace_id, .. }
+            | Request::Delete { trace_id, .. } => *trace_id,
+            _ => None,
+        }
+    }
+
+    /// Stamp a trace ID onto a model-addressed frame **if it has none**
+    /// (set-once: a client-supplied ID is never overwritten, and a
+    /// router re-sending the same frame on retry/failover keeps the ID
+    /// it stamped at ingress).  No-op on connection-scoped ops.
+    pub fn ensure_trace_id(&mut self, id: u64) {
+        match self {
+            Request::Fit { trace_id, .. }
+            | Request::Query { trace_id, .. }
+            | Request::Delete { trace_id, .. } => {
+                if trace_id.is_none() {
+                    *trace_id = Some(id);
+                }
+            }
+            _ => {}
+        }
+    }
+
     /// Parse one wire line (any supported version).
     pub fn parse(line: &str) -> Result<Request> {
         let v = json::parse(line).map_err(|e| anyhow!("bad json: {e}"))?;
@@ -453,7 +581,20 @@ impl Request {
         match op {
             "ping" => Ok(Request::Ping),
             "models" => Ok(Request::Models),
-            "stats" => Ok(Request::Stats),
+            "stats" => {
+                let format = match v.get("format") {
+                    None => StatsFormat::Json,
+                    Some(x) => {
+                        let name = x
+                            .as_str()
+                            .ok_or_else(|| anyhow!("'format' must be a string"))?;
+                        StatsFormat::parse(name)
+                            .ok_or_else(|| anyhow!("unknown format {name:?}"))?
+                    }
+                };
+                Ok(Request::Stats { format })
+            }
+            "trace" => Ok(Request::Trace),
             "set_epoch" => {
                 let epoch = parse_epoch(&v)?
                     .ok_or_else(|| anyhow!("missing 'epoch'"))?;
@@ -464,6 +605,7 @@ impl Request {
                 tenant: parse_tenant(&v)?,
                 epoch: parse_epoch(&v)?,
                 digest: parse_digest(&v)?,
+                trace_id: parse_trace_id(&v)?,
             }),
             "fit" => {
                 let estimator = v
@@ -510,6 +652,7 @@ impl Request {
                     points,
                     epoch: parse_epoch(&v)?,
                     digest: parse_digest(&v)?,
+                    trace_id: parse_trace_id(&v)?,
                 })
             }
             "query" | "eval" | "grad" => {
@@ -577,6 +720,7 @@ impl Request {
                     spec,
                     epoch: parse_epoch(&v)?,
                     digest: parse_digest(&v)?,
+                    trace_id: parse_trace_id(&v)?,
                 })
             }
             other => bail!("unknown op {other:?}"),
@@ -591,19 +735,32 @@ impl Request {
         };
         let stamped = |mut fields: Vec<(&str, Value)>,
                        epoch: &Option<u64>,
-                       digest: &Option<u64>| {
+                       digest: &Option<u64>,
+                       trace_id: &Option<u64>| {
             if let Some(e) = epoch {
                 fields.push(("epoch", Value::from(*e)));
             }
             if let Some(g) = digest {
                 fields.push(("digest", Value::from(*g)));
             }
+            if let Some(t) = trace_id {
+                fields.push(("trace_id", Value::from(*t)));
+            }
             fields
         };
         let v = match self {
             Request::Ping => versioned(vec![("op", "ping".into())]),
             Request::Models => versioned(vec![("op", "models".into())]),
-            Request::Stats => versioned(vec![("op", "stats".into())]),
+            Request::Stats { format } => {
+                let mut fields = vec![("op", Value::from("stats"))];
+                // The default (JSON) format is omitted so plain stats
+                // frames stay byte-identical to the pre-§18 dialect.
+                if *format != StatsFormat::Json {
+                    fields.push(("format", format.as_str().into()));
+                }
+                versioned(fields)
+            }
+            Request::Trace => versioned(vec![("op", "trace".into())]),
             Request::SetEpoch { epoch, digest } => {
                 let mut fields = vec![
                     ("op", Value::from("set_epoch")),
@@ -614,7 +771,7 @@ impl Request {
                 }
                 versioned(fields)
             }
-            Request::Delete { model, tenant, epoch, digest } => {
+            Request::Delete { model, tenant, epoch, digest, trace_id } => {
                 let mut fields = vec![
                     ("op", Value::from("delete")),
                     ("model", model.as_str().into()),
@@ -622,9 +779,9 @@ impl Request {
                 if let Some(t) = tenant {
                     fields.push(("tenant", t.as_str().into()));
                 }
-                versioned(stamped(fields, epoch, digest))
+                versioned(stamped(fields, epoch, digest, trace_id))
             }
-            Request::Fit { model, spec, points, epoch, digest } => {
+            Request::Fit { model, spec, points, epoch, digest, trace_id } => {
                 let mut fields = vec![
                     ("op", Value::from("fit")),
                     ("model", model.as_str().into()),
@@ -644,9 +801,9 @@ impl Request {
                 if let Some(t) = &spec.tenant {
                     fields.push(("tenant", t.as_str().into()));
                 }
-                versioned(stamped(fields, epoch, digest))
+                versioned(stamped(fields, epoch, digest, trace_id))
             }
-            Request::Query { model, d, spec, epoch, digest } => {
+            Request::Query { model, d, spec, epoch, digest, trace_id } => {
                 let mut fields = vec![
                     ("op", Value::from("query")),
                     ("model", model.as_str().into()),
@@ -665,7 +822,7 @@ impl Request {
                 if let Some(t) = &spec.tenant {
                     fields.push(("tenant", t.as_str().into()));
                 }
-                versioned(stamped(fields, epoch, digest))
+                versioned(stamped(fields, epoch, digest, trace_id))
             }
         };
         json::to_string(&v)
@@ -705,7 +862,7 @@ impl Response {
                 } else {
                     points_to_json(&result.values, width)
                 };
-                versioned(vec![
+                let mut fields = vec![
                     ("op", "query".into()),
                     ("mode", result.mode.as_str().into()),
                     ("d", Value::from(*d)),
@@ -713,7 +870,13 @@ impl Response {
                     ("queue_ms", Value::Number(result.queue_ms)),
                     ("exec_ms", Value::Number(result.exec_ms)),
                     ("batch_size", Value::from(result.batch_size)),
-                ])
+                ];
+                // Echoed only when traced, so untraced replies stay
+                // byte-identical to the pre-§18 dialect.
+                if result.trace_id != 0 {
+                    fields.push(("trace_id", Value::from(result.trace_id)));
+                }
+                versioned(fields)
             }
             Response::Models { names } => versioned(vec![
                 ("op", "models".into()),
@@ -727,6 +890,14 @@ impl Response {
             Response::Stats { body } => versioned(vec![
                 ("op", "stats".into()),
                 ("stats", body.clone()),
+            ]),
+            Response::MetricsText { text } => versioned(vec![
+                ("op", "metrics".into()),
+                ("text", text.as_str().into()),
+            ]),
+            Response::Trace { body } => versioned(vec![
+                ("op", "trace".into()),
+                ("trace", body.clone()),
             ]),
             Response::Deleted { model, existed } => versioned(vec![
                 ("op", "delete".into()),
@@ -928,6 +1099,10 @@ impl Response {
                         queue_ms: field_f64(&v, "queue_ms")?,
                         exec_ms: field_f64(&v, "exec_ms")?,
                         batch_size: field_usize(&v, "batch_size")?,
+                        trace_id: v
+                            .get("trace_id")
+                            .and_then(Value::as_usize)
+                            .unwrap_or(0) as u64,
                     },
                 })
             }
@@ -947,6 +1122,16 @@ impl Response {
             }
             Some("stats") => Ok(Response::Stats {
                 body: v.get("stats").cloned().unwrap_or(Value::Null),
+            }),
+            Some("metrics") => Ok(Response::MetricsText {
+                text: v
+                    .get("text")
+                    .and_then(Value::as_str)
+                    .ok_or_else(|| anyhow!("missing 'text'"))?
+                    .to_string(),
+            }),
+            Some("trace") => Ok(Response::Trace {
+                body: v.get("trace").cloned().unwrap_or(Value::Null),
             }),
             Some("delete") => Ok(Response::Deleted {
                 model: req_model(&v)?,
@@ -989,6 +1174,7 @@ mod tests {
             points: vec![1.0, 2.0, 3.0, 4.0],
             epoch: None,
             digest: None,
+            trace_id: None,
         };
         let line = req.to_line();
         assert!(line.contains("\"v\":2"), "{line}");
@@ -1012,6 +1198,7 @@ mod tests {
                 spec,
                 epoch: None,
                 digest: None,
+                trace_id: None,
             };
             let line = req.to_line();
             assert_eq!(
@@ -1064,6 +1251,7 @@ mod tests {
             spec: QuerySpec::density(vec![0.5]),
             epoch: None,
             digest: None,
+            trace_id: None,
         }
         .to_line();
         let expected = json::to_string(&Value::object(vec![
@@ -1091,6 +1279,7 @@ mod tests {
                     .with_budget(Budget::approx(0.1, seed).unwrap()),
                 epoch: Some(2),
                 digest: Some(777),
+                trace_id: None,
             };
             let line = req.to_line();
             assert!(line.contains("\"rel_err\":0.1"), "{line}");
@@ -1108,6 +1297,7 @@ mod tests {
             spec: QuerySpec::density(vec![0.5]),
             epoch: None,
             digest: None,
+            trace_id: None,
         }
         .to_line();
         assert!(!line.contains("rel_err") && !line.contains("seed"), "{line}");
@@ -1174,6 +1364,160 @@ mod tests {
     }
 
     #[test]
+    fn trace_id_round_trips_on_model_addressed_ops() {
+        let cases = vec![
+            Request::Fit {
+                model: "m".into(),
+                spec: FitSpec::new(EstimatorKind::Kde, 1),
+                points: vec![1.0, 2.0],
+                epoch: None,
+                digest: None,
+                trace_id: Some(99),
+            },
+            Request::Query {
+                model: "m".into(),
+                d: 1,
+                spec: QuerySpec::density(vec![0.5]),
+                epoch: Some(3),
+                digest: Some(17),
+                trace_id: Some(MAX_TRACE_ID),
+            },
+            Request::Delete {
+                model: "m".into(),
+                tenant: None,
+                epoch: None,
+                digest: None,
+                trace_id: Some(1),
+            },
+        ];
+        for req in cases {
+            let line = req.to_line();
+            assert!(line.contains("\"trace_id\":"), "{line}");
+            assert_eq!(Request::parse(&line).unwrap(), req, "{line}");
+            assert_eq!(Request::parse(&line).unwrap().trace_id(), req.trace_id());
+        }
+        // Untraced frames carry no trace_id field at all.
+        let line = Request::Query {
+            model: "m".into(),
+            d: 1,
+            spec: QuerySpec::density(vec![0.5]),
+            epoch: None,
+            digest: None,
+            trace_id: None,
+        }
+        .to_line();
+        assert!(!line.contains("trace_id"), "{line}");
+        assert_eq!(Request::parse(&line).unwrap().trace_id(), None);
+    }
+
+    #[test]
+    fn ensure_trace_id_is_set_once_and_model_addressed_only() {
+        let mut q = Request::Query {
+            model: "m".into(),
+            d: 1,
+            spec: QuerySpec::density(vec![0.5]),
+            epoch: None,
+            digest: None,
+            trace_id: None,
+        };
+        q.ensure_trace_id(5);
+        assert_eq!(q.trace_id(), Some(5));
+        // A second stamp (a retry re-send) must not replace the first.
+        q.ensure_trace_id(6);
+        assert_eq!(q.trace_id(), Some(5));
+        // Connection-scoped ops never carry one.
+        let mut s = Request::Stats { format: StatsFormat::Json };
+        s.ensure_trace_id(7);
+        assert_eq!(s.trace_id(), None);
+    }
+
+    #[test]
+    fn malformed_trace_ids_rejected_typed() {
+        for bad in [
+            r#"{"v":2,"op":"query","model":"m","points":[[1]],"trace_id":0}"#
+                .to_string(),
+            r#"{"v":2,"op":"query","model":"m","points":[[1]],"trace_id":-4}"#
+                .to_string(),
+            r#"{"v":2,"op":"query","model":"m","points":[[1]],"trace_id":1.5}"#
+                .to_string(),
+            r#"{"v":2,"op":"query","model":"m","points":[[1]],"trace_id":"x"}"#
+                .to_string(),
+            r#"{"v":2,"op":"delete","model":"m","trace_id":0}"#.to_string(),
+            r#"{"v":2,"op":"fit","model":"m","d":1,"points":[[1],[2]],"trace_id":[]}"#
+                .to_string(),
+            // Above MAX_TRACE_ID (= 2^52 - 1): no TraceIdGen can emit it.
+            format!(
+                r#"{{"v":2,"op":"query","model":"m","points":[[1]],"trace_id":{}}}"#,
+                MAX_TRACE_ID + 1
+            ),
+        ] {
+            let err = Request::parse(&bad).unwrap_err();
+            assert!(format!("{err:#}").contains("trace_id"), "{bad}: {err:#}");
+        }
+        // The ceiling itself is accepted.
+        assert!(Request::parse(&format!(
+            r#"{{"v":2,"op":"query","model":"m","points":[[1]],"trace_id":{MAX_TRACE_ID}}}"#
+        ))
+        .is_ok());
+    }
+
+    #[test]
+    fn pre_trace_frames_are_byte_identical() {
+        // The trace_id field is additive: an untraced query line renders
+        // exactly the pre-§18 serialization, and the plain stats op stays
+        // the bare two-field frame.
+        let line = Request::Query {
+            model: "m".into(),
+            d: 1,
+            spec: QuerySpec::density(vec![0.5]),
+            epoch: None,
+            digest: None,
+            trace_id: None,
+        }
+        .to_line();
+        assert_eq!(line, r#"{"v":2,"op":"query","model":"m","mode":"density","points":[[0.5]]}"#);
+        assert_eq!(
+            Request::Stats { format: StatsFormat::Json }.to_line(),
+            r#"{"v":2,"op":"stats"}"#
+        );
+        // The non-default format is the only thing that adds a field.
+        assert_eq!(
+            Request::Stats { format: StatsFormat::Prometheus }.to_line(),
+            r#"{"v":2,"op":"stats","format":"prometheus"}"#
+        );
+        // Untraced replies also stay byte-stable: no trace_id leaks.
+        let reply = Response::QueryOk {
+            d: 1,
+            result: QueryResult {
+                values: vec![0.5],
+                mode: OutputMode::Density,
+                queue_ms: 0.0,
+                exec_ms: 0.0,
+                batch_size: 1,
+                trace_id: 0,
+            },
+        }
+        .to_line();
+        assert!(!reply.contains("trace_id"), "{reply}");
+    }
+
+    #[test]
+    fn stats_format_parses_and_rejects_unknown() {
+        match Request::parse(r#"{"v":2,"op":"stats"}"#).unwrap() {
+            Request::Stats { format } => assert_eq!(format, StatsFormat::Json),
+            other => panic!("{other:?}"),
+        }
+        match Request::parse(r#"{"v":2,"op":"stats","format":"prometheus"}"#).unwrap() {
+            Request::Stats { format } => {
+                assert_eq!(format, StatsFormat::Prometheus);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(Request::parse(r#"{"v":2,"op":"stats","format":"xml"}"#).is_err());
+        assert!(Request::parse(r#"{"v":2,"op":"stats","format":7}"#).is_err());
+    }
+
+    #[test]
     fn epoch_stamped_requests_round_trip() {
         // Routed frames: the optional routing epoch must survive the wire
         // on every model-addressed op, and stay absent when unset.
@@ -1184,6 +1528,7 @@ mod tests {
                 points: vec![1.0, 2.0],
                 epoch: Some(7),
                 digest: Some(41),
+                trace_id: None,
             },
             Request::Query {
                 model: "m".into(),
@@ -1191,12 +1536,14 @@ mod tests {
                 spec: QuerySpec::density(vec![0.5]),
                 epoch: Some(3),
                 digest: None,
+                trace_id: None,
             },
             Request::Delete {
                 model: "m".into(),
                 tenant: None,
                 epoch: Some(1),
                 digest: Some(MAX_DIGEST),
+                trace_id: None,
             },
             Request::SetEpoch { epoch: 9, digest: Some(13) },
             Request::SetEpoch { epoch: 9, digest: None },
@@ -1219,6 +1566,7 @@ mod tests {
             tenant: None,
             epoch: None,
             digest: None,
+            trace_id: None,
         }
         .to_line();
         assert!(!line.contains("epoch") && !line.contains("digest"), "{line}");
@@ -1237,6 +1585,7 @@ mod tests {
                 points: vec![1.0, 2.0],
                 epoch: None,
                 digest: None,
+                trace_id: None,
             },
             Request::Query {
                 model: "m".into(),
@@ -1244,12 +1593,14 @@ mod tests {
                 spec: QuerySpec::density(vec![0.5]).tenant("b-2.c_d"),
                 epoch: Some(3),
                 digest: None,
+                trace_id: None,
             },
             Request::Delete {
                 model: "m".into(),
                 tenant: Some("alpha".into()),
                 epoch: None,
                 digest: None,
+                trace_id: None,
             },
         ];
         for req in cases {
@@ -1265,6 +1616,7 @@ mod tests {
             spec: QuerySpec::density(vec![0.5]),
             epoch: None,
             digest: None,
+            trace_id: None,
         }
         .to_line();
         assert!(!line.contains("tenant"), "{line}");
@@ -1325,6 +1677,7 @@ mod tests {
             points: vec![0.0, 1.0],
             epoch: None,
             digest: None,
+            trace_id: None,
         };
         assert_eq!(fit.model_key(), Some("a"));
         let q = Request::Query {
@@ -1333,6 +1686,7 @@ mod tests {
             spec: QuerySpec::density(vec![0.0]),
             epoch: None,
             digest: None,
+            trace_id: None,
         };
         assert_eq!(q.model_key(), Some("b"));
         assert_eq!(
@@ -1341,11 +1695,14 @@ mod tests {
                 tenant: None,
                 epoch: None,
                 digest: None,
+                trace_id: None,
             }
             .model_key(),
             Some("c")
         );
-        for req in [Request::Ping, Request::Models, Request::Stats,
+        for req in [Request::Ping, Request::Models,
+                    Request::Stats { format: StatsFormat::Json },
+                    Request::Trace,
                     Request::SetEpoch { epoch: 1, digest: None }] {
             assert_eq!(req.model_key(), None, "{req:?}");
         }
@@ -1390,6 +1747,7 @@ mod tests {
                 spec: QuerySpec::density(vec![1.0, 2.0]),
                 epoch: None,
                 digest: None,
+                trace_id: None,
             }
         );
         let req = Request::parse(
@@ -1404,6 +1762,7 @@ mod tests {
                 spec: QuerySpec::grad(vec![1.0]),
                 epoch: None,
                 digest: None,
+                trace_id: None,
             }
         );
     }
@@ -1421,12 +1780,15 @@ mod tests {
         for req in [
             Request::Ping,
             Request::Models,
-            Request::Stats,
+            Request::Stats { format: StatsFormat::Json },
+            Request::Stats { format: StatsFormat::Prometheus },
+            Request::Trace,
             Request::Delete {
                 model: "x".into(),
                 tenant: None,
                 epoch: None,
                 digest: None,
+                trace_id: None,
             },
         ] {
             assert_eq!(Request::parse(&req.to_line()).unwrap(), req);
@@ -1480,6 +1842,7 @@ mod tests {
                     queue_ms: 0.5,
                     exec_ms: 2.0,
                     batch_size: 3,
+                    trace_id: 0,
                 },
             },
             Response::QueryOk {
@@ -1490,9 +1853,29 @@ mod tests {
                     queue_ms: 0.0,
                     exec_ms: 1.0,
                     batch_size: 1,
+                    trace_id: 0,
+                },
+            },
+            Response::QueryOk {
+                d: 1,
+                result: QueryResult {
+                    values: vec![0.25],
+                    mode: OutputMode::Density,
+                    queue_ms: 0.1,
+                    exec_ms: 0.4,
+                    batch_size: 1,
+                    trace_id: 987_654_321,
                 },
             },
             Response::Models { names: vec!["a".into(), "b".into()] },
+            Response::MetricsText {
+                text: "# TYPE flash_sdkde_requests_total counter\n\
+                       flash_sdkde_requests_total{kind=\"eval\"} 5\n"
+                    .into(),
+            },
+            Response::Trace {
+                body: Value::object(vec![("events", Value::Array(vec![]))]),
+            },
             Response::Deleted { model: "m".into(), existed: true },
             Response::EpochOk { epoch: 4 },
             Response::StaleEpoch { expected: 5, got: 3 },
@@ -1539,6 +1922,7 @@ mod tests {
                 queue_ms: 0.0,
                 exec_ms: 0.0,
                 batch_size: 1,
+                trace_id: 0,
             },
         };
         assert!(!r.to_line().contains('\n'));

@@ -70,6 +70,16 @@
 //! **Failure semantics.**  Connects and reads are timeout-bounded
 //! ([`RouterConfig`]), retries are capped, and node death surfaces as the
 //! typed [`RouteError::NodeUnavailable`] — never a hang, never a panic.
+//!
+//! **Observability (DESIGN.md §18).**  The router is the fleet's trace
+//! ingress: a model-addressed frame arriving without a `trace_id` gets
+//! one stamped set-once here, so the primary attempt, replica failover,
+//! synchronous replication and any later journal replay of the same
+//! frame all share a single ID end to end.  Membership changes and fit
+//! replays land in a bounded ring of events served by the `trace` wire
+//! op, and the `stats` fan-out merges each worker's per-stage latency
+//! histograms bucket-wise into `totals.stages` — true fleet-wide
+//! quantiles, not averages of per-node quantiles.
 
 use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -80,12 +90,14 @@ use std::time::Duration;
 use anyhow::{anyhow, Result};
 
 use crate::config::RouterConfig;
+use crate::obs::{EventJournal, TraceIdGen};
 use crate::util::json::Value;
 use crate::util::rng::splitmix64;
 use crate::{log_info, log_warn};
 
+use super::metrics::LatencyHistogram;
 use super::protocol::{
-    Request, Response, MAX_DIGEST, MAX_EPOCH, PROTOCOL_VERSION,
+    Request, Response, StatsFormat, MAX_DIGEST, MAX_EPOCH, PROTOCOL_VERSION,
 };
 use super::server::{Client, LineHandler, LineServer};
 
@@ -390,6 +402,12 @@ enum Round {
 /// per pooled socket for the router's lifetime.
 const POOL_CAP_PER_NODE: usize = 8;
 
+/// Capacity of the router's membership/replay event ring (DESIGN.md
+/// §18).  Membership churn is orders of magnitude rarer than queries, so
+/// a small fixed ring holds the recent history; overflow overwrites the
+/// oldest events and is counted, never blocking the mutating path.
+const ROUTER_EVENT_CAPACITY: usize = 256;
+
 /// Ceiling on the health loop's probe backoff: a node can never be
 /// skipped for more than this many consecutive ticks, so recovery of a
 /// long-dead node is always noticed within a bounded (and small,
@@ -442,8 +460,16 @@ pub struct Router {
     /// Manual `remove_node` (a drain) deletes from here too.
     known: Mutex<Vec<String>>,
     /// model key → the unstamped `fit` frame that created it, replayed
-    /// to new top-2 owners on membership changes (DESIGN.md §15).
+    /// to new top-2 owners on membership changes (DESIGN.md §15).  The
+    /// journaled copy keeps its ingress `trace_id`, so replayed fits are
+    /// attributable to the request that created the model.
     journal: Mutex<HashMap<String, Request>>,
+    /// Bounded ring of membership and replay events (DESIGN.md §18),
+    /// served by the `trace` wire op.
+    events: EventJournal,
+    /// Mints ingress trace IDs for model-addressed frames arriving
+    /// without one (set-once; client-supplied IDs win).
+    tracer: TraceIdGen,
     routed: AtomicU64,
     retried: AtomicU64,
     node_errors: AtomicU64,
@@ -477,6 +503,8 @@ impl Router {
             pools: Mutex::new(HashMap::new()),
             known: Mutex::new(known),
             journal: Mutex::new(HashMap::new()),
+            events: EventJournal::new(ROUTER_EVENT_CAPACITY),
+            tracer: TraceIdGen::from_entropy(),
             routed: AtomicU64::new(0),
             retried: AtomicU64::new(0),
             node_errors: AtomicU64::new(0),
@@ -525,6 +553,15 @@ impl Router {
                 .expect("router known-node set poisoned")
                 .retain(|n| n != node);
             log_info!("router", "removed node {node}; epoch {}", new.epoch());
+            self.events.record(
+                "member_remove",
+                0,
+                Value::object(vec![
+                    ("node", Value::from(node)),
+                    ("epoch", Value::from(new.epoch())),
+                    ("reason", Value::from("drain")),
+                ]),
+            );
             self.rebalance(&old, &new);
         }
         removed
@@ -551,6 +588,14 @@ impl Router {
             }
             drop(known);
             log_info!("router", "added node {node}; epoch {}", new.epoch());
+            self.events.record(
+                "member_add",
+                0,
+                Value::object(vec![
+                    ("node", Value::from(node.as_str())),
+                    ("epoch", Value::from(new.epoch())),
+                ]),
+            );
             self.rebalance(&old, &new);
         }
         added
@@ -583,7 +628,10 @@ impl Router {
                 }
             }
             let alive = matches!(
-                self.forward(&node, Request::Stats),
+                self.forward(
+                    &node,
+                    Request::Stats { format: StatsFormat::Json },
+                ),
                 Ok(Response::Stats { .. })
             );
             if alive {
@@ -610,6 +658,14 @@ impl Router {
                             "health: node {node} answered again; re-added at \
                              epoch {}",
                             new.epoch()
+                        );
+                        self.events.record(
+                            "member_restore",
+                            0,
+                            Value::object(vec![
+                                ("node", Value::from(node.as_str())),
+                                ("epoch", Value::from(new.epoch())),
+                            ]),
                         );
                         self.rebalance(&old, &new);
                     }
@@ -649,6 +705,16 @@ impl Router {
                      recovery)",
                     new.epoch()
                 );
+                self.events.record(
+                    "member_remove",
+                    0,
+                    Value::object(vec![
+                        ("node", Value::from(node.as_str())),
+                        ("epoch", Value::from(new.epoch())),
+                        ("reason", Value::from("health")),
+                        ("failures", Value::from(u64::from(count))),
+                    ]),
+                );
                 self.rebalance(&old, &new);
             }
         }
@@ -681,6 +747,18 @@ impl Router {
                             "router",
                             "replayed fit for model {model:?} to new owner \
                              {node}"
+                        );
+                        // The replay carries the originating fit's trace
+                        // ID, so the whole lineage of a model — client
+                        // fit, replication, every later re-fit — greps
+                        // as one trace.
+                        self.events.record(
+                            "journal_replay",
+                            fit.trace_id().unwrap_or(0),
+                            Value::object(vec![
+                                ("model", Value::from(model.as_str())),
+                                ("node", Value::from(node)),
+                            ]),
                         );
                     }
                     Ok(other) => {
@@ -748,10 +826,19 @@ impl Router {
                     .to_string(),
             },
             Request::Models => self.fanout_models(),
-            Request::Stats => self.fanout_stats(),
+            Request::Stats { format } => self.fanout_stats(format),
+            Request::Trace => Response::Trace { body: self.events.to_json(0) },
             request @ (Request::Fit { .. }
             | Request::Query { .. }
             | Request::Delete { .. }) => {
+                // Trace ingress (DESIGN.md §18): stamp an ID set-once so
+                // retries, replica failover, synchronous replication and
+                // journal replay of this frame all share it.  A
+                // client-supplied ID is kept as-is.
+                let mut request = request;
+                if request.trace_id().is_none() {
+                    request.ensure_trace_id(self.tracer.next());
+                }
                 let key = request
                     .model_key()
                     .expect("model-addressed op")
@@ -1241,15 +1328,26 @@ impl Router {
     /// `stats` fan-out: one JSON document aggregating the router's own
     /// counters, each node's full stats body (or its error — an
     /// unreachable node must be visible, not omitted) and fleet totals
-    /// summed over the reachable nodes.
-    fn fanout_stats(&self) -> Response {
+    /// summed over the reachable nodes.  Per-stage latency histograms
+    /// are merged **bucket-wise** ([`LatencyHistogram::merge_value`])
+    /// into `totals.stages`, so the quantiles reported there are true
+    /// fleet-wide quantiles — merging serialized buckets is lossless,
+    /// unlike any combination of per-node p99s (DESIGN.md §18).  With
+    /// `format = prometheus` the merged document renders as one
+    /// text-exposition scrape for the whole fleet.
+    fn fanout_stats(&self, format: StatsFormat) -> Response {
         let table = self.table();
         let mut per_node: BTreeMap<String, Value> = BTreeMap::new();
         let mut reachable = 0usize;
         let mut models = 0usize;
         let mut queue_depth = 0usize;
         let mut executions = 0usize;
-        let results = self.fanout(table.nodes(), &Request::Stats);
+        let mut stage_latency: BTreeMap<String, LatencyHistogram> =
+            BTreeMap::new();
+        // Workers always answer in JSON; the router renders Prometheus
+        // itself from the merged document.
+        let probe = Request::Stats { format: StatsFormat::Json };
+        let results = self.fanout(table.nodes(), &probe);
         for (node, result) in table.nodes().iter().zip(results) {
             match result {
                 Ok(Response::Stats { body }) => {
@@ -1266,6 +1364,29 @@ impl Router {
                         .get("queue_depth")
                         .and_then(Value::as_usize)
                         .unwrap_or(0);
+                    for entry in body
+                        .get("spans")
+                        .and_then(Value::as_array)
+                        .unwrap_or(&[])
+                    {
+                        let Some(stages) =
+                            entry.get("stages").and_then(Value::as_object)
+                        else {
+                            continue;
+                        };
+                        for (stage, doc) in stages {
+                            let merged = stage_latency
+                                .entry(stage.clone())
+                                .or_insert_with(LatencyHistogram::new);
+                            if !merged.merge_value(doc) {
+                                log_warn!(
+                                    "router",
+                                    "node {node}: stage {stage:?} histogram \
+                                     not mergeable; fleet totals exclude it"
+                                );
+                            }
+                        }
+                    }
                     per_node.insert(node.clone(), body);
                 }
                 Ok(other) => {
@@ -1295,7 +1416,7 @@ impl Router {
             .lock()
             .expect("router known-node set poisoned")
             .len();
-        Response::Stats {
+        let response = Response::Stats {
             body: Value::object(vec![
                 (
                     "router",
@@ -1345,6 +1466,11 @@ impl Router {
                                 self.replayed_fits.load(Ordering::Relaxed),
                             ),
                         ),
+                        (
+                            "events_recorded",
+                            Value::from(self.events.recorded()),
+                        ),
+                        ("events_dropped", Value::from(self.events.dropped())),
                     ]),
                 ),
                 ("nodes", Value::Object(per_node)),
@@ -1359,9 +1485,32 @@ impl Router {
                         ("models", Value::from(models)),
                         ("queue_depth", Value::from(queue_depth)),
                         ("executions", Value::from(executions)),
+                        (
+                            // Fleet-wide per-stage latency: bucket-wise
+                            // merge of every reachable node's span
+                            // histograms, so count sums exactly and
+                            // quantiles interpolate over the union.
+                            "stages",
+                            Value::object(
+                                stage_latency
+                                    .iter()
+                                    .map(|(stage, h)| {
+                                        (stage.as_str(), h.to_json())
+                                    })
+                                    .collect(),
+                            ),
+                        ),
                     ]),
                 ),
             ]),
+        };
+        match response {
+            Response::Stats { body } if format == StatsFormat::Prometheus => {
+                Response::MetricsText {
+                    text: crate::obs::prometheus::render(&body),
+                }
+            }
+            other => other,
         }
     }
 }
@@ -1505,6 +1654,7 @@ mod tests {
             tenant: Some("alpha".into()),
             epoch: None,
             digest: None,
+            trace_id: None,
         };
         Router::set_stamp(&mut req, 4, 99);
         match req {
@@ -1524,6 +1674,7 @@ mod tests {
             points: vec![0.0, 1.0],
             epoch: Some(1),
             digest: Some(1),
+            trace_id: None,
         };
         Router::set_stamp(&mut req, 7, 13);
         match req {

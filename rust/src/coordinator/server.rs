@@ -27,7 +27,7 @@ use std::time::Duration;
 
 use anyhow::{anyhow, Context, Result};
 
-use super::protocol::{Request, Response, PROTOCOL_VERSION};
+use super::protocol::{Request, Response, StatsFormat, PROTOCOL_VERSION};
 use super::request::{FitSpec, QuerySpec, DEFAULT_TENANT};
 use super::{Coordinator, EnrollOutcome, FitInfo, QueryResult, QuotaExceeded};
 use crate::{log_info, log_warn};
@@ -250,7 +250,16 @@ pub fn handle_request(coordinator: &Coordinator, request: Request) -> Response {
     match request {
         Request::Ping => Response::Pong { version: PROTOCOL_VERSION },
         Request::Models => Response::Models { names: coordinator.registry().names() },
-        Request::Stats => Response::Stats { body: coordinator.stats_json() },
+        Request::Stats { format } => {
+            let body = coordinator.stats_json();
+            match format {
+                StatsFormat::Json => Response::Stats { body },
+                StatsFormat::Prometheus => Response::MetricsText {
+                    text: crate::obs::prometheus::render(&body),
+                },
+            }
+        }
+        Request::Trace => Response::Trace { body: coordinator.trace_json(0) },
         Request::SetEpoch { epoch, digest } => {
             match coordinator.enroll_routing(epoch, digest) {
                 EnrollOutcome::Enrolled(epoch) => Response::EpochOk { epoch },
@@ -266,7 +275,7 @@ pub fn handle_request(coordinator: &Coordinator, request: Request) -> Response {
                 }
             }
         }
-        Request::Delete { model, tenant, epoch, digest } => {
+        Request::Delete { model, tenant, epoch, digest, trace_id: _ } => {
             if let Some(rejection) = epoch_gate(coordinator, epoch, digest) {
                 return rejection;
             }
@@ -278,16 +287,20 @@ pub fn handle_request(coordinator: &Coordinator, request: Request) -> Response {
                 .remove(&super::registry::scoped_key(tenant, &model));
             Response::Deleted { model, existed }
         }
-        Request::Fit { model, spec, points, epoch, digest } => {
+        Request::Fit { model, spec, points, epoch, digest, trace_id } => {
             if let Some(rejection) = epoch_gate(coordinator, epoch, digest) {
                 return rejection;
             }
-            match coordinator.fit(&model, points, &spec) {
+            // Trace-ID attachment point (DESIGN.md §18): keep the
+            // frame's ID if it carries one (router-stamped — retries and
+            // replays then share it), mint one otherwise.
+            let tid = trace_id.unwrap_or_else(|| coordinator.obs().tracer.next());
+            match coordinator.fit_traced(&model, points, &spec, Some(tid)) {
                 Ok(handle) => Response::FitOk { info: handle.info() },
                 Err(e) => quota_or_error(&e),
             }
         }
-        Request::Query { model, d, spec, epoch, digest } => {
+        Request::Query { model, d, spec, epoch, digest, trace_id } => {
             if let Some(rejection) = epoch_gate(coordinator, epoch, digest) {
                 return rejection;
             }
@@ -308,7 +321,14 @@ pub fn handle_request(coordinator: &Coordinator, request: Request) -> Response {
                     ),
                 };
             }
-            match coordinator.query(&handle, spec) {
+            // Same attachment rule as fit: a frame-carried ID survives
+            // the hop; an untraced wire query still gets a fresh ID so
+            // its reply and any slow-query journal entry correlate.
+            let tid = trace_id.unwrap_or_else(|| coordinator.obs().tracer.next());
+            let outcome = coordinator
+                .submit_traced(&handle, spec, Some(tid))
+                .and_then(super::QueryTicket::wait);
+            match outcome {
                 Ok(result) => Response::QueryOk { d: handle.d(), result },
                 Err(e) => quota_or_error(&e),
             }
@@ -486,6 +506,7 @@ impl Client {
             points,
             epoch: None,
             digest: None,
+            trace_id: None,
         };
         match self.request(&req)? {
             Response::FitOk { info } => Ok(info),
@@ -510,6 +531,7 @@ impl Client {
             spec,
             epoch: None,
             digest: None,
+            trace_id: None,
         };
         match self.request(&req)? {
             Response::QueryOk { result, .. } => Ok(result),
@@ -551,8 +573,26 @@ impl Client {
 
     /// Fetch the server's stats document.
     pub fn stats(&mut self) -> Result<crate::util::json::Value> {
-        match self.request(&Request::Stats)? {
+        match self.request(&Request::Stats { format: StatsFormat::Json })? {
             Response::Stats { body } => Ok(body),
+            other => Err(anyhow!("unexpected response {other:?}")),
+        }
+    }
+
+    /// Fetch the server's stats as Prometheus text exposition
+    /// (`stats --format prometheus`; DESIGN.md §18).
+    pub fn stats_prometheus(&mut self) -> Result<String> {
+        let req = Request::Stats { format: StatsFormat::Prometheus };
+        match self.request(&req)? {
+            Response::MetricsText { text } => Ok(text),
+            other => Err(anyhow!("unexpected response {other:?}")),
+        }
+    }
+
+    /// Fetch the server's event journal (`trace`; DESIGN.md §18).
+    pub fn trace(&mut self) -> Result<crate::util::json::Value> {
+        match self.request(&Request::Trace)? {
+            Response::Trace { body } => Ok(body),
             other => Err(anyhow!("unexpected response {other:?}")),
         }
     }
@@ -566,6 +606,7 @@ impl Client {
             tenant: None,
             epoch: None,
             digest: None,
+            trace_id: None,
         };
         match self.request(&req)? {
             Response::Deleted { existed, .. } => Ok(existed),

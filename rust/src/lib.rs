@@ -61,6 +61,7 @@ pub mod coordinator;
 pub mod data;
 pub mod estimator;
 pub mod linalg;
+pub mod obs;
 pub mod runtime;
 pub mod tuner;
 pub mod util;

@@ -17,7 +17,11 @@
 //!            kernel PCA (power iteration) and the MMD two-sample
 //!            statistic (DESIGN.md §17)
 //!   stats  — client: dump server stats JSON (or the router's aggregated
-//!            fleet document when pointed at a router)
+//!            fleet document when pointed at a router); `--format
+//!            prometheus` renders the text exposition instead
+//!   trace  — client: dump (or follow) the server's bounded event
+//!            journal — slow queries, evictions, quota rejections,
+//!            membership changes (DESIGN.md §18)
 
 use std::path::{Path, PathBuf};
 
@@ -50,6 +54,9 @@ fn commands() -> Vec<Command> {
                 OptSpec::opt("host", "bind host override"),
                 OptSpec::opt("tuning",
                     "tile-tuning table override (written by `tune`)"),
+                OptSpec::opt("slow-query-ms",
+                    "journal queries slower than this threshold (ms; 0 \
+                     journals every query, omit to disable — DESIGN.md §18)"),
                 OptSpec::flag("once", "exit after binding (smoke test)"),
             ],
         },
@@ -190,7 +197,24 @@ fn commands() -> Vec<Command> {
         Command {
             name: "stats",
             about: "client: dump server stats",
-            opts: vec![OptSpec::opt_default("addr", "server address", "127.0.0.1:7474")],
+            opts: vec![
+                OptSpec::opt_default("addr", "server address", "127.0.0.1:7474"),
+                OptSpec::opt_default("format",
+                    "json | prometheus (text exposition)", "json"),
+            ],
+        },
+        Command {
+            name: "trace",
+            about: "client: dump or follow the server's event journal",
+            opts: vec![
+                OptSpec::opt_default("addr", "server address", "127.0.0.1:7474"),
+                OptSpec::opt("limit",
+                    "print only the newest N events (omit or 0 for all)"),
+                OptSpec::opt_default("interval-ms",
+                    "poll interval when following", "1000"),
+                OptSpec::flag("once",
+                    "print one snapshot and exit instead of following"),
+            ],
         },
     ]
 }
@@ -240,6 +264,7 @@ fn run(args: &[String]) -> Result<()> {
         "eval" => cmd_eval(&parsed),
         "linalg" => cmd_linalg(&parsed),
         "stats" => cmd_stats(&parsed),
+        "trace" => cmd_trace(&parsed),
         _ => unreachable!(),
     }
 }
@@ -264,6 +289,9 @@ fn cmd_serve(p: &cli::Parsed) -> Result<()> {
     }
     if let Some(path) = p.get("tuning") {
         cfg.tuning_path = Some(PathBuf::from(path));
+    }
+    if let Some(ms) = p.get_usize("slow-query-ms").map_err(|e| anyhow!(e))? {
+        cfg.slow_query_ms = Some(ms as u64);
     }
     cfg.validate().map_err(|e| anyhow!(e))?;
 
@@ -725,6 +753,60 @@ fn cmd_linalg(p: &cli::Parsed) -> Result<()> {
 
 fn cmd_stats(p: &cli::Parsed) -> Result<()> {
     let mut client = Client::connect(p.get_string("addr", "127.0.0.1:7474"))?;
-    println!("{}", json::to_string(&client.stats()?));
+    match p.get_string("format", "json").as_str() {
+        "json" => println!("{}", json::to_string(&client.stats()?)),
+        // Text exposition ends with its own newline; print! avoids a
+        // trailing blank line in scrapes.
+        "prometheus" => print!("{}", client.stats_prometheus()?),
+        other => bail!("unknown stats format {other:?} (json | prometheus)"),
+    }
     Ok(())
+}
+
+fn cmd_trace(p: &cli::Parsed) -> Result<()> {
+    let limit = p.get_usize("limit").map_err(|e| anyhow!(e))?.unwrap_or(0);
+    let interval = p
+        .get_usize("interval-ms")
+        .map_err(|e| anyhow!(e))?
+        .unwrap_or(1000)
+        .max(10);
+    let mut client = Client::connect(p.get_string("addr", "127.0.0.1:7474"))?;
+    // Follow mode re-polls and prints only events newer than the last
+    // printed sequence number; `--once` prints one snapshot and exits.
+    let mut last_seq: Option<u64> = None;
+    loop {
+        let body = client.trace()?;
+        let events = body.get("events").and_then(|v| v.as_array()).unwrap_or(&[]);
+        let newest_first_cut = if limit > 0 && last_seq.is_none() {
+            events.len().saturating_sub(limit)
+        } else {
+            0
+        };
+        for event in &events[newest_first_cut..] {
+            let seq = event
+                .get("seq")
+                .and_then(|v| v.as_f64())
+                .map(|s| s as u64);
+            if let (Some(seq), Some(last)) = (seq, last_seq) {
+                if seq <= last {
+                    continue;
+                }
+            }
+            println!("{}", json::to_string(event));
+            if let Some(seq) = seq {
+                last_seq = Some(last_seq.map_or(seq, |l| l.max(seq)));
+            }
+        }
+        if p.flag("once") {
+            let dropped = body
+                .get("dropped")
+                .and_then(|v| v.as_f64())
+                .unwrap_or(0.0);
+            if dropped > 0.0 {
+                eprintln!("({dropped:.0} older events overwritten)");
+            }
+            return Ok(());
+        }
+        std::thread::sleep(std::time::Duration::from_millis(interval as u64));
+    }
 }

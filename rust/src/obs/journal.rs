@@ -1,0 +1,184 @@
+//! Bounded ring-buffer event journal (DESIGN.md §18).
+//!
+//! A fixed-capacity, overwrite-oldest ring of observability events:
+//! slow-query stage breakdowns, registry evictions, quota rejections,
+//! and (on the router) membership transitions.  Recording takes one
+//! short mutex hold and never allocates beyond the event's own detail
+//! document, which callers build *only* once they have decided the
+//! event is worth journaling — the fast path for a sub-threshold
+//! request touches nothing here.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::json::Value;
+
+/// One journaled event.
+#[derive(Debug, Clone)]
+pub struct Event {
+    /// Monotone sequence number (never reused, survives overwrites).
+    pub seq: u64,
+    /// Wall-clock milliseconds since the Unix epoch at record time.
+    pub unix_ms: u64,
+    /// Stable event kind: `"slow_query"`, `"fit"`, `"evict"`,
+    /// `"quota_reject"`, `"member_add"`, `"member_remove"`,
+    /// `"member_restore"`, `"journal_replay"`.
+    pub kind: &'static str,
+    /// The trace ID this event belongs to (0 = none).
+    pub trace_id: u64,
+    /// Kind-specific detail document (e.g. the stage breakdown).
+    pub detail: Value,
+}
+
+impl Event {
+    /// Render as a wire/CLI document.
+    pub fn to_json(&self) -> Value {
+        Value::object(vec![
+            ("seq", Value::from(self.seq)),
+            ("unix_ms", Value::from(self.unix_ms)),
+            ("kind", Value::from(self.kind)),
+            ("trace_id", Value::from(self.trace_id)),
+            ("detail", self.detail.clone()),
+        ])
+    }
+}
+
+/// Fixed-capacity overwrite-oldest event ring.
+///
+/// When full, recording a new event drops the oldest and bumps the
+/// `dropped` counter — readers can tell how much history they missed.
+/// Capacity is fixed at construction (`trace_events` config key).
+#[derive(Debug)]
+pub struct EventJournal {
+    ring: Mutex<VecDeque<Event>>,
+    capacity: usize,
+    next_seq: AtomicU64,
+    dropped: AtomicU64,
+}
+
+impl EventJournal {
+    /// Journal holding at most `capacity` events (min 1).
+    pub fn new(capacity: usize) -> Self {
+        EventJournal {
+            ring: Mutex::new(VecDeque::with_capacity(capacity.max(1))),
+            capacity: capacity.max(1),
+            next_seq: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// Maximum number of retained events.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Events overwritten so far.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Events recorded so far (including overwritten ones).
+    pub fn recorded(&self) -> u64 {
+        self.next_seq.load(Ordering::Relaxed)
+    }
+
+    /// Append an event, overwriting the oldest if full.  Returns the
+    /// event's sequence number.
+    pub fn record(&self, kind: &'static str, trace_id: u64, detail: Value) -> u64 {
+        let seq = self.next_seq.fetch_add(1, Ordering::Relaxed);
+        let unix_ms = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_millis() as u64)
+            .unwrap_or(0);
+        let event = Event { seq, unix_ms, kind, trace_id, detail };
+        let mut ring = self.ring.lock().expect("event journal poisoned");
+        if ring.len() == self.capacity {
+            ring.pop_front();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        ring.push_back(event);
+        seq
+    }
+
+    /// Up to `limit` most recent events, oldest first (0 = all retained).
+    pub fn snapshot(&self, limit: usize) -> Vec<Event> {
+        let ring = self.ring.lock().expect("event journal poisoned");
+        let take = if limit == 0 { ring.len() } else { limit.min(ring.len()) };
+        ring.iter().skip(ring.len() - take).cloned().collect()
+    }
+
+    /// Render the journal state (events oldest-first plus counters).
+    pub fn to_json(&self, limit: usize) -> Value {
+        Value::object(vec![
+            ("capacity", Value::from(self.capacity)),
+            ("recorded", Value::from(self.recorded())),
+            ("dropped", Value::from(self.dropped())),
+            (
+                "events",
+                Value::Array(
+                    self.snapshot(limit).iter().map(Event::to_json).collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_overwrites_oldest_and_counts_drops() {
+        let j = EventJournal::new(3);
+        for i in 0..5u64 {
+            j.record("slow_query", i + 1, Value::object(vec![("i", Value::from(i))]));
+        }
+        assert_eq!(j.capacity(), 3);
+        assert_eq!(j.recorded(), 5);
+        assert_eq!(j.dropped(), 2);
+        let events = j.snapshot(0);
+        assert_eq!(events.len(), 3);
+        // Oldest two (seq 0, 1) were overwritten; order is oldest-first.
+        assert_eq!(events[0].seq, 2);
+        assert_eq!(events[2].seq, 4);
+        assert_eq!(events[2].trace_id, 5);
+    }
+
+    #[test]
+    fn snapshot_limit_takes_most_recent() {
+        let j = EventJournal::new(8);
+        for i in 0..4u64 {
+            j.record("fit", 0, Value::from(i));
+        }
+        let last_two = j.snapshot(2);
+        assert_eq!(last_two.len(), 2);
+        assert_eq!(last_two[0].seq, 2);
+        assert_eq!(last_two[1].seq, 3);
+        assert_eq!(j.dropped(), 0);
+    }
+
+    #[test]
+    fn json_form_has_counters_and_events() {
+        let j = EventJournal::new(2);
+        j.record("evict", 7, Value::object(vec![("model", Value::from("m0"))]));
+        let doc = j.to_json(0);
+        assert_eq!(doc.get("capacity").unwrap().as_usize(), Some(2));
+        assert_eq!(doc.get("recorded").unwrap().as_usize(), Some(1));
+        let events = doc.get("events").unwrap().as_array().unwrap();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].get("kind").unwrap().as_str(), Some("evict"));
+        assert_eq!(events[0].get("trace_id").unwrap().as_f64(), Some(7.0));
+        assert!(events[0].get("detail").unwrap().get("model").is_some());
+    }
+
+    #[test]
+    fn zero_capacity_clamps_to_one() {
+        let j = EventJournal::new(0);
+        assert_eq!(j.capacity(), 1);
+        j.record("fit", 0, Value::Null);
+        j.record("fit", 0, Value::Null);
+        assert_eq!(j.snapshot(0).len(), 1);
+        assert_eq!(j.dropped(), 1);
+    }
+}

@@ -1,0 +1,401 @@
+//! Crate-wide observability: trace IDs, per-stage latency spans, the
+//! bounded event journal and Prometheus text exposition (DESIGN.md §18).
+//!
+//! The paper's headline claims are wall-clock numbers, so the serving
+//! stack has to be able to say *where* a request spent its time — not
+//! just report one aggregate latency.  This module provides the three
+//! primitives the coordinator, router and CLI compose:
+//!
+//! * **Trace IDs** ([`TraceIdGen`]) — splitmix64-generated 52-bit IDs
+//!   attached at submit and carried as the additive optional `trace_id`
+//!   field on every v2 frame, so router retries, replica failovers and
+//!   journal replays all share one ID.  Deterministic under a configured
+//!   `trace_seed` (tests), entropy-seeded otherwise.
+//! * **Per-stage spans** ([`Stage`], [`StageClock`], [`SpanTable`]) —
+//!   each request's `queue_wait / batch / prepare / execute / reply`
+//!   stage durations recorded into per-(pipeline, output-mode, tenant)
+//!   [`LatencyHistogram`] sets.  Hot-path discipline: the span set `Arc`
+//!   is resolved once at submit (admission already takes that lock), and
+//!   recording itself is wait-free atomics — the dispatcher allocates
+//!   nothing for tracing.
+//! * **The event journal** ([`journal::EventJournal`]) — a bounded
+//!   overwrite-oldest ring of slow-query breakdowns and
+//!   membership/eviction/quota events, readable via the `trace` wire op.
+//!
+//! [`prometheus::render`] turns any stats document (worker or
+//! router-merged) into Prometheus text exposition for
+//! `stats --format prometheus`.
+//!
+//! [`LatencyHistogram`]: crate::coordinator::metrics::LatencyHistogram
+
+pub mod journal;
+pub mod prometheus;
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+use std::time::Duration;
+
+use crate::coordinator::metrics::LatencyHistogram;
+use crate::util::json::Value;
+use crate::util::rng::splitmix64;
+
+pub use journal::EventJournal;
+
+/// Ceiling on trace IDs accepted from the wire: IDs are masked into
+/// `1 ..= 2^52 - 1` at the generator so they stay exactly representable
+/// through the JSON layer's f64 integers (same discipline as
+/// `MAX_DIGEST`); 0 is reserved as the "untraced" sentinel and never
+/// valid on the wire.
+pub const MAX_TRACE_ID: u64 = (1 << 52) - 1;
+
+/// Wait-free trace-ID generator: a Weyl counter pushed through the
+/// [`splitmix64`] finalizer, masked to [`MAX_TRACE_ID`].  Equal seeds
+/// produce equal ID sequences (the `trace_seed` config knob pins test
+/// runs); the default seed mixes wall-clock entropy with the process ID
+/// so two workers booted together do not collide streams.
+#[derive(Debug)]
+pub struct TraceIdGen {
+    seed: u64,
+    counter: AtomicU64,
+}
+
+impl TraceIdGen {
+    /// Generator with a pinned seed (deterministic ID sequence).
+    pub fn new(seed: u64) -> Self {
+        TraceIdGen { seed, counter: AtomicU64::new(0) }
+    }
+
+    /// Generator seeded from wall-clock entropy and the process ID.
+    pub fn from_entropy() -> Self {
+        let nanos = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0);
+        Self::new(nanos ^ u64::from(std::process::id()).rotate_left(32))
+    }
+
+    /// Next trace ID: nonzero, `<=` [`MAX_TRACE_ID`], wait-free.
+    pub fn next(&self) -> u64 {
+        let n = self.counter.fetch_add(1, Ordering::Relaxed);
+        let id = splitmix64(self.seed.wrapping_add(n)) & MAX_TRACE_ID;
+        if id == 0 { 1 } else { id }
+    }
+}
+
+/// The five attributed stages of a request's life (DESIGN.md §18).
+///
+/// `QueueWait` is time from enqueue to the dispatcher pulling the head;
+/// `Batch` is the co-batching window (head pop to batch dispatch);
+/// `Prepare` is backend per-model preparation (tile/deann/sketch derivation
+/// or cache hit); `Execute` is the kernel sweep itself; `Reply` is the
+/// handoff from the dispatcher back to the waiting caller.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// Enqueue → dispatcher pop.
+    QueueWait,
+    /// Dispatcher pop → batch dispatched (the co-batching window).
+    Batch,
+    /// Backend per-model preparation inside the execution.
+    Prepare,
+    /// Kernel execution proper.
+    Execute,
+    /// Dispatcher reply → caller receipt.
+    Reply,
+}
+
+impl Stage {
+    /// Number of stages (the span-set array width).
+    pub const COUNT: usize = 5;
+
+    /// Every stage, in pipeline order.
+    pub const ALL: [Stage; Stage::COUNT] = [
+        Stage::QueueWait,
+        Stage::Batch,
+        Stage::Prepare,
+        Stage::Execute,
+        Stage::Reply,
+    ];
+
+    /// Stable wire/exposition name.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Stage::QueueWait => "queue_wait",
+            Stage::Batch => "batch",
+            Stage::Prepare => "prepare",
+            Stage::Execute => "execute",
+            Stage::Reply => "reply",
+        }
+    }
+
+    /// Index into a span-set's stage array.
+    pub fn index(self) -> usize {
+        match self {
+            Stage::QueueWait => 0,
+            Stage::Batch => 1,
+            Stage::Prepare => 2,
+            Stage::Execute => 3,
+            Stage::Reply => 4,
+        }
+    }
+}
+
+/// One request's per-stage stamps, in microseconds (0 = not recorded).
+///
+/// A plain fixed array owned by the job — setting a stamp is a store,
+/// reading is a load, and the whole clock lives inline in the queued job
+/// so the dispatcher allocates nothing to carry it.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StageClock {
+    stamps: [u64; Stage::COUNT],
+}
+
+impl StageClock {
+    /// All-zero clock (no stage recorded yet).
+    pub const fn new() -> Self {
+        StageClock { stamps: [0; Stage::COUNT] }
+    }
+
+    /// Record a stage duration (saturating to microseconds).
+    pub fn set(&mut self, stage: Stage, d: Duration) {
+        self.stamps[stage.index()] =
+            d.as_micros().min(u128::from(u64::MAX)) as u64;
+    }
+
+    /// The recorded duration for `stage` (`None` if unrecorded).
+    pub fn get(&self, stage: Stage) -> Option<Duration> {
+        match self.stamps[stage.index()] {
+            0 => None,
+            us => Some(Duration::from_micros(us)),
+        }
+    }
+
+    /// Sum of all recorded stages.
+    pub fn total(&self) -> Duration {
+        Duration::from_micros(self.stamps.iter().sum())
+    }
+
+    /// Render the breakdown as `{stage: micros, ...}` (recorded stages
+    /// only) — the slow-query journal detail body.
+    pub fn to_json(&self) -> Value {
+        let mut fields = Vec::new();
+        for stage in Stage::ALL {
+            let us = self.stamps[stage.index()];
+            if us > 0 {
+                fields.push((stage.as_str(), Value::from(us)));
+            }
+        }
+        Value::object(fields)
+    }
+}
+
+/// One (pipeline, output-mode, tenant) cell: a [`LatencyHistogram`] per
+/// stage.  Recording is wait-free — callers hold the `Arc` resolved at
+/// submit and only touch atomics.
+#[derive(Debug)]
+pub struct SpanSet {
+    stages: [LatencyHistogram; Stage::COUNT],
+}
+
+impl SpanSet {
+    fn new() -> Self {
+        SpanSet { stages: std::array::from_fn(|_| LatencyHistogram::new()) }
+    }
+
+    /// Record one stage sample.
+    pub fn record(&self, stage: Stage, d: Duration) {
+        self.stages[stage.index()].record(d);
+    }
+
+    /// Fold every recorded stamp of `clock` into the stage histograms.
+    pub fn observe(&self, clock: &StageClock) {
+        for stage in Stage::ALL {
+            if let Some(d) = clock.get(stage) {
+                self.record(stage, d);
+            }
+        }
+    }
+
+    /// The histogram backing `stage` (exposition and tests).
+    pub fn stage(&self, stage: Stage) -> &LatencyHistogram {
+        &self.stages[stage.index()]
+    }
+
+    /// Render as `{stage: histogram-doc, ...}` (recorded stages only).
+    pub fn to_json(&self) -> Value {
+        let mut fields = Vec::new();
+        for stage in Stage::ALL {
+            let h = self.stage(stage);
+            if h.count() > 0 {
+                fields.push((stage.as_str(), h.to_json()));
+            }
+        }
+        Value::object(fields)
+    }
+}
+
+/// The span-set key: which pipeline/mode/tenant a request ran under.
+type SpanKey = (String, String, String);
+
+/// Per-(pipeline, output-mode, tenant) span sets.  The map is behind an
+/// `RwLock` that only the *submit* path touches (one read-mostly lookup,
+/// beside the tenant-table lookup admission already does); the recording
+/// path holds the resolved `Arc` and never locks.
+#[derive(Debug, Default)]
+pub struct SpanTable {
+    sets: RwLock<HashMap<SpanKey, Arc<SpanSet>>>,
+}
+
+impl SpanTable {
+    /// Empty table.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The span set for `(pipeline, mode, tenant)`, created on first
+    /// sight.  Resolve once at submit; record through the returned `Arc`.
+    pub fn set(&self, pipeline: &str, mode: &str, tenant: &str) -> Arc<SpanSet> {
+        let key = (pipeline.to_string(), mode.to_string(), tenant.to_string());
+        if let Some(s) = self.sets.read().expect("span table poisoned").get(&key) {
+            return Arc::clone(s);
+        }
+        let mut map = self.sets.write().expect("span table poisoned");
+        Arc::clone(map.entry(key).or_insert_with(|| Arc::new(SpanSet::new())))
+    }
+
+    /// All span sets, sorted by key (for the stats document).
+    pub fn snapshot(&self) -> Vec<(SpanKey, Arc<SpanSet>)> {
+        let mut all: Vec<(SpanKey, Arc<SpanSet>)> = self
+            .sets
+            .read()
+            .expect("span table poisoned")
+            .iter()
+            .map(|(k, v)| (k.clone(), Arc::clone(v)))
+            .collect();
+        all.sort_by(|a, b| a.0.cmp(&b.0));
+        all
+    }
+
+    /// Render as an array of `{pipeline, mode, tenant, stages}` docs.
+    pub fn to_json(&self) -> Value {
+        Value::Array(
+            self.snapshot()
+                .into_iter()
+                .map(|((pipeline, mode, tenant), set)| {
+                    Value::object(vec![
+                        ("pipeline", Value::from(pipeline.as_str())),
+                        ("mode", Value::from(mode.as_str())),
+                        ("tenant", Value::from(tenant.as_str())),
+                        ("stages", set.to_json()),
+                    ])
+                })
+                .collect(),
+        )
+    }
+}
+
+/// The coordinator's (or router's) observability bundle: span table,
+/// event journal, trace-ID generator and the slow-query threshold.
+#[derive(Debug)]
+pub struct Obs {
+    /// Per-(pipeline, mode, tenant) stage histograms.
+    pub spans: SpanTable,
+    /// Bounded ring of slow-query / membership / quota / eviction events.
+    pub journal: EventJournal,
+    /// Trace-ID source for requests arriving without one.
+    pub tracer: TraceIdGen,
+    /// Requests whose queue+batch+prepare+execute total meets or exceeds
+    /// this many microseconds get their full stage breakdown journaled;
+    /// `None` disables the slow-query log (`Some(0)` journals everything).
+    pub slow_query_us: Option<u64>,
+}
+
+impl Obs {
+    /// Bundle with a `capacity`-event journal, optional deterministic
+    /// trace seed, and optional slow-query threshold in milliseconds.
+    pub fn new(
+        capacity: usize,
+        trace_seed: Option<u64>,
+        slow_query_ms: Option<u64>,
+    ) -> Self {
+        Obs {
+            spans: SpanTable::new(),
+            journal: EventJournal::new(capacity),
+            tracer: match trace_seed {
+                Some(seed) => TraceIdGen::new(seed),
+                None => TraceIdGen::from_entropy(),
+            },
+            slow_query_us: slow_query_ms.map(|ms| ms.saturating_mul(1000)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_ids_are_nonzero_bounded_and_seed_deterministic() {
+        let a = TraceIdGen::new(42);
+        let b = TraceIdGen::new(42);
+        let c = TraceIdGen::new(43);
+        let sa: Vec<u64> = (0..64).map(|_| a.next()).collect();
+        let sb: Vec<u64> = (0..64).map(|_| b.next()).collect();
+        let sc: Vec<u64> = (0..64).map(|_| c.next()).collect();
+        assert_eq!(sa, sb, "equal seeds give equal streams");
+        assert_ne!(sa, sc, "different seeds diverge");
+        for id in &sa {
+            assert!(*id >= 1 && *id <= MAX_TRACE_ID, "{id}");
+        }
+        // No duplicates in a short prefix (splitmix64 avalanches).
+        let mut dedup = sa.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), sa.len());
+    }
+
+    #[test]
+    fn stage_clock_records_and_totals() {
+        let mut clock = StageClock::new();
+        assert_eq!(clock.get(Stage::Execute), None);
+        clock.set(Stage::QueueWait, Duration::from_micros(100));
+        clock.set(Stage::Execute, Duration::from_micros(250));
+        assert_eq!(clock.get(Stage::QueueWait), Some(Duration::from_micros(100)));
+        assert_eq!(clock.total(), Duration::from_micros(350));
+        let j = clock.to_json();
+        assert!(j.get("queue_wait").is_some());
+        assert!(j.get("execute").is_some());
+        assert!(j.get("batch").is_none(), "unrecorded stages stay absent");
+    }
+
+    #[test]
+    fn span_table_resolves_stable_sets_and_observes_clocks() {
+        let table = SpanTable::new();
+        let set = table.set("kde", "density", "default");
+        let again = table.set("kde", "density", "default");
+        assert!(Arc::ptr_eq(&set, &again), "same key, same set");
+        let other = table.set("score_eval", "grad", "default");
+        assert!(!Arc::ptr_eq(&set, &other));
+
+        let mut clock = StageClock::new();
+        clock.set(Stage::QueueWait, Duration::from_micros(10));
+        clock.set(Stage::Execute, Duration::from_micros(500));
+        set.observe(&clock);
+        assert_eq!(set.stage(Stage::QueueWait).count(), 1);
+        assert_eq!(set.stage(Stage::Execute).count(), 1);
+        assert_eq!(set.stage(Stage::Batch).count(), 0);
+
+        let doc = table.to_json();
+        let arr = doc.as_array().unwrap();
+        assert_eq!(arr.len(), 2);
+        // Sorted by key: "kde" before "score_eval".
+        assert_eq!(arr[0].get("pipeline").unwrap().as_str(), Some("kde"));
+        assert!(arr[0]
+            .get("stages")
+            .unwrap()
+            .get("execute")
+            .unwrap()
+            .get("buckets")
+            .is_some());
+    }
+}

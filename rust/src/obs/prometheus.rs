@@ -1,0 +1,485 @@
+//! Prometheus text exposition (version 0.0.4) for stats documents.
+//!
+//! [`render`] turns a stats JSON document — a worker's `stats_json()` or
+//! the router's merged fan-out body — into the standard `# TYPE` text
+//! format: counters for request/error totals, histograms (cumulative
+//! `_bucket{le="..."}` series in seconds) for every latency and
+//! per-stage span histogram, and per-tenant gauges.  The renderer is
+//! tolerant by construction: it walks the sections it knows and skips
+//! anything absent, so worker and router documents share one code path.
+//!
+//! Format stability promise (DESIGN.md §18): metric families emitted
+//! here are append-only — names, label keys, and bucket edges (powers of
+//! two in microseconds, rendered in seconds) do not change meaning
+//! across versions; new families may appear.
+
+use crate::util::json::Value;
+
+/// Prefix shared by every emitted metric family.
+const PREFIX: &str = "flash_sdkde";
+
+/// Render a stats document as Prometheus text exposition.
+pub fn render(stats: &Value) -> String {
+    let mut out = String::new();
+
+    if let Some(m) = stats.get("metrics") {
+        // Request totals as one labeled counter family.
+        family(&mut out, "requests_total", "counter");
+        for (kind, key) in [
+            ("fit", "fit_requests"),
+            ("eval", "eval_requests"),
+            ("grad", "grad_requests"),
+            ("matvec", "matvec_requests"),
+        ] {
+            if let Some(v) = num(m, key) {
+                sample(&mut out, "requests_total", &[("kind", kind)], v);
+            }
+        }
+        for (name, key) in [
+            ("eval_points_total", "eval_points"),
+            ("errors_total", "errors"),
+            ("rejected_total", "rejected"),
+            ("batches_total", "batches"),
+        ] {
+            if let Some(v) = num(m, key) {
+                family(&mut out, name, "counter");
+                sample(&mut out, name, &[], v);
+            }
+        }
+        for key in ["queue_wait", "exec_latency", "e2e_latency"] {
+            if let Some(h) = m.get(key) {
+                let name = format!("{key}_seconds");
+                family(&mut out, &name, "histogram");
+                histogram_series(&mut out, &name, &[], h);
+            }
+        }
+    }
+
+    if let Some(r) = stats.get("registry") {
+        if let Some(v) = num(r, "models") {
+            family(&mut out, "resident_models", "gauge");
+            sample(&mut out, "resident_models", &[], v);
+        }
+        if let Some(v) = num(r, "evictions") {
+            family(&mut out, "evictions_total", "counter");
+            sample(&mut out, "evictions_total", &[], v);
+        }
+    }
+
+    if let Some(v) = stats.get("queue_depth").and_then(Value::as_f64) {
+        family(&mut out, "queue_depth", "gauge");
+        sample(&mut out, "queue_depth", &[], v);
+    }
+
+    if let Some(e) = stats.get("engine").and_then(Value::as_object) {
+        for (key, val) in e {
+            if let Some(v) = val.as_f64() {
+                let name = format!("engine_{key}");
+                family(&mut out, &name, "gauge");
+                sample(&mut out, &name, &[], v);
+            }
+        }
+    }
+
+    if let Some(tenants) = stats.get("tenants").and_then(Value::as_object) {
+        // Field-major so each family's TYPE line precedes all its series.
+        for (name, key, ty) in [
+            ("tenant_admitted_total", "admitted", "counter"),
+            ("tenant_rejected_quota_total", "rejected_quota", "counter"),
+            ("tenant_inflight", "inflight", "gauge"),
+            ("tenant_resident_models", "resident_models", "gauge"),
+            ("tenant_queue_depth", "queue_depth", "gauge"),
+        ] {
+            let mut emitted = false;
+            for (tenant, doc) in tenants {
+                if let Some(v) = num(doc, key) {
+                    if !emitted {
+                        family(&mut out, name, ty);
+                        emitted = true;
+                    }
+                    sample(&mut out, name, &[("tenant", tenant.as_str())], v);
+                }
+            }
+        }
+    }
+
+    if let Some(spans) = stats.get("spans").and_then(Value::as_array) {
+        if !spans.is_empty() {
+            family(&mut out, "stage_seconds", "histogram");
+            for span in spans {
+                let (Some(pipeline), Some(mode), Some(tenant)) = (
+                    span.get("pipeline").and_then(Value::as_str),
+                    span.get("mode").and_then(Value::as_str),
+                    span.get("tenant").and_then(Value::as_str),
+                ) else {
+                    continue;
+                };
+                let Some(stages) = span.get("stages").and_then(Value::as_object)
+                else {
+                    continue;
+                };
+                for (stage, h) in stages {
+                    histogram_series(
+                        &mut out,
+                        "stage_seconds",
+                        &[
+                            ("pipeline", pipeline),
+                            ("mode", mode),
+                            ("tenant", tenant),
+                            ("stage", stage.as_str()),
+                        ],
+                        h,
+                    );
+                }
+            }
+        }
+    }
+
+    if let Some(j) = stats.get("journal") {
+        for (name, key, ty) in [
+            ("journal_events_total", "recorded", "counter"),
+            ("journal_dropped_total", "dropped", "counter"),
+        ] {
+            if let Some(v) = num(j, key) {
+                family(&mut out, name, ty);
+                sample(&mut out, name, &[], v);
+            }
+        }
+    }
+
+    // Router-merged documents: per-fleet counters plus merged histograms.
+    if let Some(r) = stats.get("router").and_then(Value::as_object) {
+        for (key, val) in r {
+            if let Some(v) = val.as_f64() {
+                let name = format!("router_{key}");
+                family(&mut out, &name, "gauge");
+                sample(&mut out, &name, &[], v);
+            }
+        }
+    }
+    if let Some(t) = stats.get("totals").and_then(Value::as_object) {
+        for (key, val) in t {
+            if val.get("buckets").is_some() {
+                let name = format!("fleet_{key}_seconds");
+                family(&mut out, &name, "histogram");
+                histogram_series(&mut out, &name, &[], val);
+            } else if let Some(v) = val.as_f64() {
+                let name = format!("fleet_{key}");
+                family(&mut out, &name, "gauge");
+                sample(&mut out, &name, &[], v);
+            }
+        }
+    }
+
+    out
+}
+
+/// Numeric field accessor.
+fn num(doc: &Value, key: &str) -> Option<f64> {
+    doc.get(key).and_then(Value::as_f64)
+}
+
+/// Emit a `# TYPE` header.
+fn family(out: &mut String, name: &str, ty: &str) {
+    out.push_str("# TYPE ");
+    out.push_str(PREFIX);
+    out.push('_');
+    out.push_str(name);
+    out.push(' ');
+    out.push_str(ty);
+    out.push('\n');
+}
+
+/// Emit one sample line with optional labels.
+fn sample(out: &mut String, name: &str, labels: &[(&str, &str)], v: f64) {
+    out.push_str(PREFIX);
+    out.push('_');
+    out.push_str(name);
+    push_labels(out, labels);
+    out.push(' ');
+    out.push_str(&fmt_num(v));
+    out.push('\n');
+}
+
+/// Emit the cumulative `_bucket`/`_sum`/`_count` series for one
+/// histogram document (the `LatencyHistogram::to_json` form).  Documents
+/// without the mergeable `buckets` array emit nothing.
+fn histogram_series(out: &mut String, name: &str, labels: &[(&str, &str)], h: &Value) {
+    let Some(buckets) = h.get("buckets").and_then(Value::as_array) else {
+        return;
+    };
+    let count = num(h, "count").unwrap_or(0.0);
+    let sum_us = num(h, "sum_us").unwrap_or(0.0);
+    let mut cumulative = 0.0f64;
+    for (i, b) in buckets.iter().enumerate() {
+        cumulative += b.as_f64().unwrap_or(0.0);
+        // Bucket i covers [2^i, 2^{i+1}) µs; `le` is its upper edge in
+        // seconds, so cumulative counts line up with Prometheus semantics.
+        let le = (1u64 << (i + 1)) as f64 / 1e6;
+        bucket_line(out, name, labels, &fmt_num(le), cumulative);
+    }
+    bucket_line(out, name, labels, "+Inf", count);
+    out.push_str(PREFIX);
+    out.push('_');
+    out.push_str(name);
+    out.push_str("_sum");
+    push_labels(out, labels);
+    out.push(' ');
+    out.push_str(&fmt_num(sum_us / 1e6));
+    out.push('\n');
+    out.push_str(PREFIX);
+    out.push('_');
+    out.push_str(name);
+    out.push_str("_count");
+    push_labels(out, labels);
+    out.push(' ');
+    out.push_str(&fmt_num(count));
+    out.push('\n');
+}
+
+fn bucket_line(out: &mut String, name: &str, labels: &[(&str, &str)], le: &str, v: f64) {
+    out.push_str(PREFIX);
+    out.push('_');
+    out.push_str(name);
+    out.push_str("_bucket{");
+    for (k, val) in labels {
+        out.push_str(k);
+        out.push_str("=\"");
+        out.push_str(&escape_label(val));
+        out.push_str("\",");
+    }
+    out.push_str("le=\"");
+    out.push_str(le);
+    out.push_str("\"} ");
+    out.push_str(&fmt_num(v));
+    out.push('\n');
+}
+
+fn push_labels(out: &mut String, labels: &[(&str, &str)]) {
+    if labels.is_empty() {
+        return;
+    }
+    out.push('{');
+    for (i, (k, v)) in labels.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(k);
+        out.push_str("=\"");
+        out.push_str(&escape_label(v));
+        out.push('"');
+    }
+    out.push('}');
+}
+
+/// Escape a label value per the exposition format (backslash, quote,
+/// newline).
+fn escape_label(v: &str) -> String {
+    let mut s = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => s.push_str("\\\\"),
+            '"' => s.push_str("\\\""),
+            '\n' => s.push_str("\\n"),
+            c => s.push(c),
+        }
+    }
+    s
+}
+
+/// Integer-exact sample formatting: whole numbers print without a
+/// fractional part, everything else via the shortest f64 form.
+fn fmt_num(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 9.0e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::metrics::LatencyHistogram;
+    use std::time::Duration;
+
+    /// Minimal exposition-grammar check: every line is a `# TYPE` header
+    /// or `name[{k="v",...}] value`.  Shared with tests/observability.rs
+    /// in spirit; kept simple and strict here.
+    fn assert_grammar(text: &str) {
+        for line in text.lines() {
+            if let Some(rest) = line.strip_prefix("# TYPE ") {
+                let mut parts = rest.split(' ');
+                let name = parts.next().unwrap();
+                let ty = parts.next().unwrap();
+                assert!(parts.next().is_none(), "trailing: {line}");
+                assert!(valid_name(name), "bad name: {line}");
+                assert!(
+                    matches!(ty, "counter" | "gauge" | "histogram"),
+                    "bad type: {line}"
+                );
+                continue;
+            }
+            let (series, value) =
+                line.rsplit_once(' ').unwrap_or_else(|| panic!("no value: {line}"));
+            assert!(value.parse::<f64>().is_ok(), "bad value: {line}");
+            let name = match series.split_once('{') {
+                Some((n, labels)) => {
+                    let labels = labels.strip_suffix('}')
+                        .unwrap_or_else(|| panic!("unclosed labels: {line}"));
+                    for pair in labels.split(',') {
+                        let (k, v) = pair
+                            .split_once('=')
+                            .unwrap_or_else(|| panic!("bad label: {line}"));
+                        assert!(valid_name(k) || k == "le", "bad key: {line}");
+                        assert!(
+                            v.starts_with('"') && v.ends_with('"') && v.len() >= 2,
+                            "unquoted: {line}"
+                        );
+                    }
+                    n
+                }
+                None => series,
+            };
+            assert!(valid_name(name), "bad name: {line}");
+        }
+    }
+
+    fn valid_name(n: &str) -> bool {
+        !n.is_empty()
+            && n.chars().next().unwrap().is_ascii_alphabetic()
+            && n.chars().all(|c| c.is_ascii_alphanumeric() || c == '_')
+    }
+
+    fn sample_stats() -> Value {
+        let h = LatencyHistogram::new();
+        h.record(Duration::from_micros(100));
+        h.record(Duration::from_millis(3));
+        let hist = h.to_json();
+        Value::object(vec![
+            (
+                "metrics",
+                Value::object(vec![
+                    ("fit_requests", Value::from(2u64)),
+                    ("eval_requests", Value::from(5u64)),
+                    ("grad_requests", Value::from(0u64)),
+                    ("matvec_requests", Value::from(1u64)),
+                    ("eval_points", Value::from(640u64)),
+                    ("errors", Value::from(0u64)),
+                    ("rejected", Value::from(0u64)),
+                    ("batches", Value::from(4u64)),
+                    ("queue_wait", hist.clone()),
+                    ("exec_latency", hist.clone()),
+                    ("e2e_latency", hist.clone()),
+                ]),
+            ),
+            (
+                "registry",
+                Value::object(vec![
+                    ("models", Value::from(3u64)),
+                    ("evictions", Value::from(1u64)),
+                ]),
+            ),
+            (
+                "tenants",
+                Value::object(vec![(
+                    "acme",
+                    Value::object(vec![
+                        ("admitted", Value::from(7u64)),
+                        ("rejected_quota", Value::from(1u64)),
+                        ("inflight", Value::from(0u64)),
+                        ("resident_models", Value::from(2u64)),
+                        ("queue_depth", Value::from(0u64)),
+                    ]),
+                )]),
+            ),
+            (
+                "spans",
+                Value::Array(vec![Value::object(vec![
+                    ("pipeline", Value::from("kde")),
+                    ("mode", Value::from("density")),
+                    ("tenant", Value::from("acme")),
+                    ("stages", Value::object(vec![("execute", hist)])),
+                ])]),
+            ),
+            ("queue_depth", Value::from(0u64)),
+        ])
+    }
+
+    #[test]
+    fn render_matches_exposition_grammar() {
+        let text = render(&sample_stats());
+        assert!(!text.is_empty());
+        assert_grammar(&text);
+        assert!(text.contains("# TYPE flash_sdkde_requests_total counter"));
+        assert!(text.contains("flash_sdkde_requests_total{kind=\"eval\"} 5"));
+        assert!(text.contains("# TYPE flash_sdkde_e2e_latency_seconds histogram"));
+        assert!(text.contains("flash_sdkde_tenant_admitted_total{tenant=\"acme\"} 7"));
+        assert!(text.contains(
+            "flash_sdkde_stage_seconds_bucket{pipeline=\"kde\",mode=\"density\",\
+             tenant=\"acme\",stage=\"execute\",le=\"+Inf\"} 2"
+        ));
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_and_inf_equals_count() {
+        let text = render(&sample_stats());
+        let mut last = 0.0f64;
+        let mut inf = None;
+        for line in text.lines() {
+            if line.starts_with("flash_sdkde_e2e_latency_seconds_bucket") {
+                let v: f64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+                assert!(v >= last, "non-monotone: {line}");
+                last = v;
+                if line.contains("le=\"+Inf\"") {
+                    inf = Some(v);
+                }
+            }
+            if line.starts_with("flash_sdkde_e2e_latency_seconds_count") {
+                let c: f64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+                assert_eq!(Some(c), inf, "+Inf bucket must equal _count");
+            }
+        }
+        assert_eq!(inf, Some(2.0));
+    }
+
+    #[test]
+    fn router_documents_render_fleet_families() {
+        let h = LatencyHistogram::new();
+        h.record(Duration::from_millis(1));
+        let doc = Value::object(vec![
+            (
+                "router",
+                Value::object(vec![
+                    ("routed", Value::from(9u64)),
+                    ("retries", Value::from(1u64)),
+                ]),
+            ),
+            (
+                "totals",
+                Value::object(vec![
+                    ("models", Value::from(4u64)),
+                    ("e2e_latency", h.to_json()),
+                ]),
+            ),
+        ]);
+        let text = render(&doc);
+        assert_grammar(&text);
+        assert!(text.contains("flash_sdkde_router_routed 9"));
+        assert!(text.contains("flash_sdkde_fleet_models 4"));
+        assert!(text.contains("# TYPE flash_sdkde_fleet_e2e_latency_seconds histogram"));
+        assert!(text.contains("flash_sdkde_fleet_e2e_latency_seconds_count 1"));
+    }
+
+    #[test]
+    fn label_values_are_escaped() {
+        assert_eq!(escape_label("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+    }
+
+    #[test]
+    fn numbers_format_integer_exact() {
+        assert_eq!(fmt_num(5.0), "5");
+        assert_eq!(fmt_num(0.000002), "0.000002");
+        assert_eq!(fmt_num(2147.483648), "2147.483648");
+    }
+}

@@ -775,24 +775,30 @@ impl ExecBackend for NativeFlash {
             "kde" => {
                 let y = Self::rows_input(inputs, 2, "y", d)?;
                 let h = Self::scalar(inputs, 3, "h")?;
+                let prep_start = Instant::now();
                 let (train, tile) =
                     self.prepared_for(x_arc, w_arc, d, y.len() / d)?;
+                timer.add("prepare", prep_start.elapsed());
                 let dens = flash::kde_prepared(&train, y, h, &tile);
                 HostTensor::vec1(dens.iter().map(|&v| v as f32).collect())
             }
             "laplace" => {
                 let y = Self::rows_input(inputs, 2, "y", d)?;
                 let h = Self::scalar(inputs, 3, "h")?;
+                let prep_start = Instant::now();
                 let (train, tile) =
                     self.prepared_for(x_arc, w_arc, d, y.len() / d)?;
+                timer.add("prepare", prep_start.elapsed());
                 let dens = flash::laplace_prepared(&train, y, h, &tile);
                 HostTensor::vec1(dens.iter().map(|&v| v as f32).collect())
             }
             "score_eval" => {
                 let y = Self::rows_input(inputs, 2, "y", d)?;
                 let h = Self::scalar(inputs, 3, "h")?;
+                let prep_start = Instant::now();
                 let (train, tile) =
                     self.prepared_for(x_arc, w_arc, d, y.len() / d)?;
+                timer.add("prepare", prep_start.elapsed());
                 let s = flash::score_at_prepared(&train, y, h, &tile);
                 HostTensor::matrix(
                     y.len() / d,
@@ -816,8 +822,10 @@ impl ExecBackend for NativeFlash {
                         w.len()
                     );
                 }
+                let prep_start = Instant::now();
                 let (train, tile) =
                     self.prepared_for(x_arc, w_arc, d, y.len() / d)?;
+                timer.add("prepare", prep_start.elapsed());
                 let out =
                     flash::matvec_prepared(&train, v.data(), y, h, &tile);
                 self.cache.lock().matvec_queries += 1;
@@ -913,8 +921,10 @@ impl ExecBackend for NativeFlash {
         let h = Self::scalar(inputs, 3, "h")?;
         let m = y.len() / d;
 
+        let prep_start = Instant::now();
         let (deann, sketch) =
             self.approx_for(x_arc, w_arc, d, m, h, params.rel_err)?;
+        timer.add("prepare", prep_start.elapsed());
         // Per row: the sketch when it accepts (n-independent), DEANN
         // otherwise.  Acceptance is deterministic, so the split — and
         // therefore the result — is bitwise-stable per (query, seed).

@@ -21,7 +21,10 @@
 //!   gets the typed stale-table error;
 //! * approx routing: `rel_err`/`seed` budgets survive `forward()`'s
 //!   epoch/digest re-stamping and are served bitwise-identically to the
-//!   single-node approx oracle, counted on the owning worker.
+//!   single-node approx oracle, counted on the owning worker;
+//! * observability: one trace ID rides a request across replication,
+//!   replica failover and journal replay, and the router's `stats`
+//!   fan-out merges per-node stage histograms into exact fleet totals.
 //!
 //! Sizes are deliberately small (3 workers, tens of models, <=512 train
 //! points) so the whole file stays seconds in CI.
@@ -593,6 +596,7 @@ fn router_rejects_stale_routers_after_a_table_update() {
         points: mix.sample(32, &mut rng),
         epoch: None,
         digest: None,
+        trace_id: None,
     };
 
     // Both routers serve at epoch 1.  (The replica write to the dead
@@ -677,6 +681,7 @@ fn equal_epoch_divergent_tables_are_rejected_not_misrouted() {
         points: mix.sample(32, &mut rng),
         epoch: None,
         digest: None,
+        trace_id: None,
     };
     match router_a.handle_request(fit) {
         Response::FitOk { .. } => {}
@@ -694,6 +699,7 @@ fn equal_epoch_divergent_tables_are_rejected_not_misrouted() {
         spec: QuerySpec::density(mix.sample(2, &mut rng)),
         epoch: None,
         digest: None,
+        trace_id: None,
     };
     match router_b.handle_request(query.clone()) {
         Response::Error { message } => {
@@ -708,5 +714,161 @@ fn equal_epoch_divergent_tables_are_rejected_not_misrouted() {
     match router_a.handle_request(query) {
         Response::QueryOk { .. } => {}
         other => panic!("router A must keep serving, got {other:?}"),
+    }
+}
+
+#[test]
+fn trace_ids_ride_the_fleet_and_stats_merge_stage_histograms() {
+    // ISSUE 10: one trace ID per request across the whole fleet — the
+    // ingress stamp survives replication, replica failover and journal
+    // replay — and the router's `stats` fan-out merges per-node stage
+    // histograms bucket-wise, so fleet counts are exact sums, never a
+    // lossy average of pre-baked quantiles.
+    let (mut workers, router_server) = spawn_cluster_with(3, |cfg| {
+        cfg.connect_timeout_ms = 200;
+        cfg.retries = 1;
+    });
+    let table = router_server.router().table();
+    let names = names_covering(&table, 1);
+    let router = router_server.router();
+    let mut client = Client::connect(router_server.local_addr()).expect("connect");
+
+    let d = 1usize;
+    let mix = by_dim(d);
+    let mut rng = Pcg64::seeded(91);
+
+    // The first fit carries a client-supplied trace ID; the router must
+    // keep it (the stamp is set-once) rather than minting over it.
+    let fit_tid = 0xF17u64;
+    match router.handle_request(Request::Fit {
+        model: names[0].clone(),
+        spec: FitSpec::new(EstimatorKind::Kde, d),
+        points: mix.sample(64, &mut rng),
+        epoch: None,
+        digest: None,
+        trace_id: Some(fit_tid),
+    }) {
+        Response::FitOk { .. } => {}
+        other => panic!("traced fit failed: {other:?}"),
+    }
+    for name in &names[1..] {
+        client
+            .fit(name, mix.sample(64, &mut rng), &FitSpec::new(EstimatorKind::Kde, d))
+            .expect("routed fit");
+    }
+    let queries = mix.sample(4, &mut rng);
+    for name in &names {
+        client.eval(name, d, queries.clone()).expect("routed eval");
+    }
+
+    // Fleet merge: `totals.stages.<stage>.count` must equal the sum of
+    // that stage's count over every span cell on every worker.
+    let mut per_node: HashMap<String, u64> = HashMap::new();
+    for worker in &workers {
+        let stats = worker.server.coordinator().stats_json();
+        let spans = stats.get("spans").and_then(Value::as_array).unwrap_or(&[]);
+        for entry in spans {
+            let Some(stages) = entry.get("stages").and_then(Value::as_object) else {
+                continue;
+            };
+            for (stage, doc) in stages {
+                let count =
+                    doc.get("count").and_then(Value::as_usize).unwrap_or(0);
+                *per_node.entry(stage.clone()).or_insert(0) += count as u64;
+            }
+        }
+    }
+    assert!(
+        per_node.get("execute").copied().unwrap_or(0) >= names.len() as u64,
+        "every routed eval must leave an execute sample: {per_node:?}"
+    );
+    let stats = client.stats().expect("fleet stats");
+    let merged = stats
+        .get("totals")
+        .and_then(|t| t.get("stages"))
+        .and_then(Value::as_object)
+        .expect("fleet stats must merge stage histograms");
+    assert_eq!(
+        merged.len(),
+        per_node.len(),
+        "merged stage set must be the union of per-node stages"
+    );
+    for (stage, sum) in &per_node {
+        let count = merged
+            .get(stage)
+            .and_then(|doc| doc.get("count"))
+            .and_then(Value::as_usize)
+            .unwrap_or(0) as u64;
+        assert_eq!(
+            count, *sum,
+            "{stage}: merged count must equal the sum over nodes"
+        );
+    }
+
+    // A client-supplied query trace ID is echoed back — and the reply
+    // after the primary dies carries the *same* ID with the same bits:
+    // failover continues the trace, it never starts a new one.
+    let qid = 0xABCDEFu64;
+    let traced_query = || Request::Query {
+        model: names[0].clone(),
+        d,
+        spec: QuerySpec::density(queries.clone()),
+        epoch: None,
+        digest: None,
+        trace_id: Some(qid),
+    };
+    let healthy = match router.handle_request(traced_query()) {
+        Response::QueryOk { result, .. } => {
+            assert_eq!(result.trace_id, qid, "ingress trace id must be echoed");
+            result.values
+        }
+        other => panic!("traced query failed: {other:?}"),
+    };
+
+    let victim_addr = table.owner(&names[0]).expect("owner").to_string();
+    let victim_idx =
+        workers.iter().position(|w| w.addr == victim_addr).expect("victim");
+    drop(workers.remove(victim_idx));
+
+    match router.handle_request(traced_query()) {
+        Response::QueryOk { result, .. } => {
+            assert_eq!(
+                result.trace_id, qid,
+                "failover must keep the ingress trace id"
+            );
+            assert_eq!(result.values, healthy, "failover bits drifted");
+        }
+        other => panic!("failover traced query failed: {other:?}"),
+    }
+
+    // Removing the dead node rebalances: the journaled fit frame — which
+    // kept its ingress trace ID — replays onto the promoted owner, and
+    // the router's own event journal records the whole lineage.
+    assert!(router.remove_node(&victim_addr));
+    match router.handle_request(Request::Trace) {
+        Response::Trace { body } => {
+            let events =
+                body.get("events").and_then(Value::as_array).unwrap_or(&[]);
+            assert!(
+                events.iter().any(|e| {
+                    e.get("kind").and_then(Value::as_str) == Some("member_remove")
+                }),
+                "member_remove must be journaled: {body:?}"
+            );
+            let replayed: Vec<u64> = events
+                .iter()
+                .filter(|e| {
+                    e.get("kind").and_then(Value::as_str)
+                        == Some("journal_replay")
+                })
+                .filter_map(|e| e.get("trace_id").and_then(Value::as_f64))
+                .map(|t| t as u64)
+                .collect();
+            assert!(
+                replayed.contains(&fit_tid),
+                "replayed fit must reuse the originating trace id: {replayed:?}"
+            );
+        }
+        other => panic!("trace op failed: {other:?}"),
     }
 }

@@ -473,6 +473,86 @@ fn matvec_frames_get_typed_errors_on_worker_and_router() {
 }
 
 #[test]
+fn malformed_trace_id_frames_are_typed_errors_on_worker_and_router() {
+    // ISSUE 10 satellite: the additive `trace_id` field (DESIGN.md §18)
+    // under the same frame-fuzz discipline as epoch stamps and MatVec
+    // vectors — 0 (the untraced sentinel), beyond-2^52, negative,
+    // fractional and non-numeric IDs are typed `Error` responses on both
+    // sides, never a panic, and never a silently-dropped trace.
+    let dir = temp_dir("trace-id");
+    let coord = Coordinator::start(config_for(&dir, BackendKind::Native))
+        .expect("native worker");
+    match handle_line(
+        &coord,
+        r#"{"v":2,"op":"fit","model":"m","d":1,"points":[[0.1],[0.4],[0.9],[1.3]]}"#,
+    ) {
+        Response::FitOk { .. } => {}
+        other => panic!("fit failed: {other:?}"),
+    }
+
+    let bad_frames = [
+        // 0 is reserved as the "untraced" sentinel: never valid on the wire.
+        r#"{"v":2,"op":"query","model":"m","points":[[0.5]],"trace_id":0}"#,
+        // 2^52 exceeds MAX_TRACE_ID (= 2^52 - 1, the f64-exact ceiling).
+        r#"{"v":2,"op":"query","model":"m","points":[[0.5]],"trace_id":4503599627370496}"#,
+        // Negative, fractional and non-numeric IDs.
+        r#"{"v":2,"op":"delete","model":"m","trace_id":-1}"#,
+        r#"{"v":2,"op":"query","model":"m","points":[[0.5]],"trace_id":1.5}"#,
+        r#"{"v":2,"op":"fit","model":"m","d":1,"points":[[0.5]],"trace_id":"abc"}"#,
+        r#"{"v":2,"op":"query","model":"m","points":[[0.5]],"trace_id":[7]}"#,
+    ];
+    for bad in bad_frames {
+        match handle_line(&coord, bad) {
+            Response::Error { message } => {
+                assert!(!message.is_empty(), "empty error for {bad:?}")
+            }
+            other => panic!("{bad:?} must be a typed Error, got {other:?}"),
+        }
+    }
+
+    // The handler survives the fuzz: a well-formed traced frame serves,
+    // and the reply carries the client's ID back.
+    match handle_line(
+        &coord,
+        r#"{"v":2,"op":"query","model":"m","points":[[0.5]],"trace_id":4503599627370495}"#,
+    ) {
+        Response::QueryOk { result, .. } => {
+            assert_eq!(result.trace_id, 4_503_599_627_370_495);
+            assert_eq!(result.values.len(), 1);
+        }
+        other => panic!("well-formed traced frame must serve: {other:?}"),
+    }
+
+    // Router side: the same malformed IDs are parse-level rejects before
+    // any forwarding (the lone node is dead, so a forward would show up
+    // as an "unavailable" error instead).
+    let dead = {
+        let listener = std::net::TcpListener::bind(("127.0.0.1", 0)).expect("bind");
+        let addr = listener.local_addr().expect("addr").to_string();
+        drop(listener);
+        addr
+    };
+    let mut cfg = RouterConfig::default();
+    cfg.nodes = vec![dead];
+    cfg.connect_timeout_ms = 200;
+    cfg.request_timeout_ms = 500;
+    cfg.retries = 1;
+    let router = Router::new(cfg).expect("router");
+    for bad in bad_frames {
+        match router.handle_line(bad) {
+            Response::Error { message } => {
+                assert!(
+                    !message.contains("unavailable"),
+                    "router forwarded a malformed trace_id: {bad:?}"
+                );
+                assert!(!message.is_empty(), "empty error for {bad:?}");
+            }
+            other => panic!("router: {bad:?} must be a typed Error, got {other:?}"),
+        }
+    }
+}
+
+#[test]
 fn manifest_schema_violations_name_the_entry() {
     let bad = r#"{"version": 1, "entries": [
         {"pipeline": "kde", "variant": "flash", "d": 1, "n": 8, "m": 2,

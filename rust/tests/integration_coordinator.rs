@@ -386,6 +386,7 @@ fn pipelined_wire_queries_reply_in_order() {
                 spec: QuerySpec::density(points.clone()),
                 epoch: None,
                 digest: None,
+                trace_id: None,
             })
             .expect("submit");
     }

@@ -458,6 +458,7 @@ fn wire_tenancy_scopes_fit_query_delete_and_rejects_over_quota() {
             tenant: Some("beta".into()),
             epoch: None,
             digest: None,
+            trace_id: None,
         })
         .expect("tenanted delete");
     assert_eq!(

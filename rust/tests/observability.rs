@@ -1,0 +1,401 @@
+//! End-to-end observability (ISSUE 10, DESIGN.md §18): request tracing,
+//! per-stage latency attribution and metrics exposition exercised through
+//! the real serving stack — native backend, no artifacts, no XLA — so the
+//! whole file runs unconditionally on the no-XLA CI leg.
+//!
+//! Coverage:
+//! * conformance: replies are **bitwise identical** with tracing fully on
+//!   (slow-query journal at 0 ms, pinned trace seed) and fully off —
+//!   observability must never perturb computed values;
+//! * slow-query gating: `slow_query_ms = None` journals nothing,
+//!   `Some(0)` journals every query with its stage breakdown;
+//! * trace IDs: seed-pinned minting is deterministic across workers,
+//!   client-supplied IDs are echoed in the reply and stamped on the
+//!   journaled events of the same request;
+//! * stage spans: served queries populate the per-(pipeline, mode,
+//!   tenant) stage histograms surfaced by `stats`;
+//! * histogram merging: the fleet-merge path (`merge` / `merge_value`
+//!   over the serialized bucket form) is lossless — bucket counts and
+//!   interpolated quantiles equal a single histogram fed every sample;
+//! * exposition: a live `stats --format prometheus` scrape over the wire
+//!   parses under the Prometheus 0.0.4 text grammar and names the
+//!   promised families.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::time::Duration;
+
+use flash_sdkde::config::Config;
+use flash_sdkde::coordinator::metrics::LatencyHistogram;
+use flash_sdkde::coordinator::protocol::Response;
+use flash_sdkde::coordinator::server::{handle_line, Client, Server};
+use flash_sdkde::coordinator::{Coordinator, FitSpec};
+use flash_sdkde::data::mixture::by_dim;
+use flash_sdkde::estimator::EstimatorKind;
+use flash_sdkde::runtime::BackendKind;
+use flash_sdkde::util::json::Value;
+use flash_sdkde::util::rng::Pcg64;
+
+fn native_config() -> Config {
+    let mut cfg = Config::default();
+    // Deliberately nonexistent: the manifest must be synthesized.
+    cfg.artifacts_dir = PathBuf::from("/nonexistent-flash-sdkde-artifacts");
+    cfg.backend = BackendKind::Native;
+    cfg.batch_wait_ms = 1;
+    cfg
+}
+
+/// Events of one kind, from a `trace_json` / `trace` document.
+fn events_of<'a>(doc: &'a Value, kind: &str) -> Vec<&'a Value> {
+    doc.get("events")
+        .and_then(Value::as_array)
+        .unwrap_or(&[])
+        .iter()
+        .filter(|e| e.get("kind").and_then(Value::as_str) == Some(kind))
+        .collect()
+}
+
+fn event_trace_id(event: &Value) -> u64 {
+    event.get("trace_id").and_then(Value::as_f64).unwrap_or(-1.0) as u64
+}
+
+#[test]
+fn replies_are_bitwise_identical_with_tracing_on_and_off() {
+    // The tentpole conformance gate: the traced coordinator journals
+    // every query (0 ms threshold) under a pinned seed, the plain one
+    // has the slow-query log disabled — and every computed value must
+    // be bit-for-bit the same.  Observability is carried *beside* the
+    // payload, never inside it.
+    let plain = Coordinator::start(native_config()).expect("plain coordinator");
+    let mut cfg = native_config();
+    cfg.slow_query_ms = Some(0);
+    cfg.trace_seed = Some(7);
+    cfg.trace_events = 64;
+    let traced = Coordinator::start(cfg).expect("traced coordinator");
+
+    let d = 2usize;
+    // Large enough that the execute stage is honestly multi-microsecond,
+    // so the journaled breakdowns below always carry it.
+    let n = 2048usize;
+    let mix = by_dim(d);
+    let mut rng = Pcg64::seeded(1234);
+    let train = mix.sample(n, &mut rng);
+    let y = mix.sample(64, &mut rng);
+    let vec: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+
+    let spec = FitSpec::new(EstimatorKind::Kde, d);
+    let h_plain = plain.fit("conf", train.clone(), &spec).expect("plain fit");
+    let h_traced = traced.fit("conf", train, &spec).expect("traced fit");
+    assert_eq!(h_plain.h(), h_traced.h(), "bandwidth selection drifted");
+
+    let e_plain = plain.eval(&h_plain, y.clone()).expect("plain eval");
+    let e_traced = traced.eval(&h_traced, y.clone()).expect("traced eval");
+    assert_eq!(e_plain.values, e_traced.values, "density bits drifted");
+
+    let g_plain = plain.grad(&h_plain, y.clone()).expect("plain grad");
+    let g_traced = traced.grad(&h_traced, y.clone()).expect("traced grad");
+    assert_eq!(g_plain.values, g_traced.values, "grad bits drifted");
+
+    let m_plain = plain.matvec(&h_plain, y.clone(), vec.clone()).expect("plain matvec");
+    let m_traced = traced.matvec(&h_traced, y, vec).expect("traced matvec");
+    assert_eq!(m_plain.values, m_traced.values, "matvec bits drifted");
+
+    // The traced side actually traced: every one of the three queries is
+    // in the journal with a stage breakdown.  The plain side journaled
+    // none (its only events are the unconditional fit record).
+    let traced_doc = traced.trace_json(0);
+    let slow = events_of(&traced_doc, "slow_query");
+    assert_eq!(slow.len(), 3, "0ms threshold must journal every query");
+    for event in &slow {
+        let stages = event
+            .get("detail")
+            .and_then(|det| det.get("stages"))
+            .expect("slow_query events carry the stage breakdown");
+        assert!(
+            stages.get("execute").is_some(),
+            "stage breakdown missing execute: {stages:?}"
+        );
+    }
+    let plain_doc = plain.trace_json(0);
+    assert!(
+        events_of(&plain_doc, "slow_query").is_empty(),
+        "disabled slow-query log must journal nothing"
+    );
+    assert_eq!(events_of(&plain_doc, "fit").len(), 1, "fits always journal");
+}
+
+#[test]
+fn trace_seed_pins_minted_ids_and_journal_lineage() {
+    // Two workers booted with the same trace seed mint the same ID
+    // stream for unlabelled frames; a client-supplied trace_id is echoed
+    // in the reply and stamped on the journaled slow-query event.
+    let spawn = || {
+        let mut cfg = native_config();
+        cfg.slow_query_ms = Some(0);
+        cfg.trace_seed = Some(5);
+        Coordinator::start(cfg).expect("seeded coordinator")
+    };
+    let a = spawn();
+    let b = spawn();
+
+    let fit = r#"{"v":2,"op":"fit","model":"m","d":1,"points":[[0.1],[0.4],[0.9],[1.3]]}"#;
+    let query = r#"{"v":2,"op":"query","model":"m","points":[[0.5]]}"#;
+    for coord in [&a, &b] {
+        match handle_line(coord, fit) {
+            Response::FitOk { .. } => {}
+            other => panic!("fit failed: {other:?}"),
+        }
+    }
+    let tid = |coord: &Coordinator| match handle_line(coord, query) {
+        Response::QueryOk { result, .. } => result.trace_id,
+        other => panic!("query failed: {other:?}"),
+    };
+    let (ta, tb) = (tid(&a), tid(&b));
+    assert_ne!(ta, 0, "minted trace id must be nonzero");
+    assert_eq!(ta, tb, "equal seeds must mint equal id streams");
+
+    // The fit (first mint) carries the same ID on both journals too.
+    let fit_a = events_of(&a.trace_json(0), "fit")[0].clone();
+    let fit_b = events_of(&b.trace_json(0), "fit")[0].clone();
+    assert_eq!(event_trace_id(&fit_a), event_trace_id(&fit_b));
+    assert_ne!(event_trace_id(&fit_a), 0);
+
+    // A client-supplied ID wins over minting: echoed in the reply,
+    // stamped on the journaled event of that same request.
+    let traced_query =
+        r#"{"v":2,"op":"query","model":"m","points":[[0.5]],"trace_id":777}"#;
+    match handle_line(&a, traced_query) {
+        Response::QueryOk { result, .. } => {
+            assert_eq!(result.trace_id, 777, "client id must be echoed")
+        }
+        other => panic!("traced query failed: {other:?}"),
+    }
+    let doc = a.trace_json(0);
+    assert!(
+        events_of(&doc, "slow_query")
+            .iter()
+            .any(|e| event_trace_id(e) == 777),
+        "journal must stamp the request's trace id: {doc:?}"
+    );
+}
+
+#[test]
+fn slow_query_threshold_gates_the_journal() {
+    // None disables the log outright; Some(0) journals every query.  An
+    // unreachable threshold behaves like None for this workload.
+    let run = |slow_query_ms: Option<u64>| {
+        let mut cfg = native_config();
+        cfg.slow_query_ms = slow_query_ms;
+        let coord = Coordinator::start(cfg).expect("coordinator");
+        let handle = coord
+            .fit("g", vec![0.0, 0.3, 0.7, 1.1], &FitSpec::new(EstimatorKind::Kde, 1))
+            .expect("fit");
+        for _ in 0..4 {
+            coord.eval(&handle, vec![0.5, 0.6]).expect("eval");
+        }
+        events_of(&coord.trace_json(0), "slow_query").len()
+    };
+    assert_eq!(run(None), 0, "disabled log must stay empty");
+    assert_eq!(run(Some(0)), 4, "0ms threshold must journal every query");
+    assert_eq!(run(Some(3_600_000)), 0, "1h threshold must journal nothing");
+}
+
+#[test]
+fn served_queries_populate_stage_span_histograms() {
+    // A real workload must leave per-(pipeline, mode, tenant) stage
+    // histograms behind, and the stats document must carry them with
+    // the journal's counters beside.
+    let mut cfg = native_config();
+    cfg.trace_events = 32;
+    let coord = Coordinator::start(cfg).expect("coordinator");
+    let d = 2usize;
+    let mix = by_dim(d);
+    let mut rng = Pcg64::seeded(9);
+    let handle = coord
+        .fit("spans", mix.sample(512, &mut rng), &FitSpec::new(EstimatorKind::Kde, d))
+        .expect("fit");
+    let y = mix.sample(128, &mut rng);
+    for _ in 0..3 {
+        coord.eval(&handle, y.clone()).expect("eval");
+    }
+    coord.grad(&handle, y).expect("grad");
+
+    let stats = coord.stats_json();
+    let spans = stats
+        .get("spans")
+        .and_then(Value::as_array)
+        .expect("stats must carry the spans array");
+    assert!(!spans.is_empty(), "served queries must populate spans");
+
+    // Sum the execute-stage counts over every cell: one per query.  The
+    // execute stage is always recorded for a served query (a 128x512
+    // sweep takes far more than the 1us stamp floor); sub-microsecond
+    // stages (queue_wait on an idle queue) may legitimately be absent.
+    let mut execute_count = 0u64;
+    let mut density_cells = 0usize;
+    for entry in spans {
+        if entry.get("mode").and_then(Value::as_str) == Some("density") {
+            density_cells += 1;
+        }
+        let stages = entry.get("stages").and_then(Value::as_object).expect("stages");
+        for (stage, doc) in stages {
+            let count =
+                doc.get("count").and_then(Value::as_usize).unwrap_or(0) as u64;
+            assert!(count > 0, "{stage}: zero-count stages must be elided");
+            if stage == "execute" {
+                execute_count += count;
+            }
+        }
+    }
+    assert_eq!(execute_count, 4, "one execute sample per served query");
+    assert_eq!(density_cells, 1, "density queries share one span cell");
+
+    let journal = stats.get("journal").expect("journal counters in stats");
+    assert_eq!(journal.get("capacity").and_then(Value::as_usize), Some(32));
+    assert!(
+        journal.get("recorded").and_then(Value::as_f64).unwrap_or(0.0) >= 1.0,
+        "the fit event must be counted"
+    );
+}
+
+#[test]
+fn histogram_merge_is_lossless_against_a_single_recorder_oracle() {
+    // The fleet-stats path merges per-node histograms bucket-wise, both
+    // in-memory (`merge`) and from the serialized form (`merge_value`).
+    // Identical samples split across nodes must reproduce the oracle's
+    // buckets exactly, so merged quantiles equal single-node quantiles.
+    let node_a = LatencyHistogram::new();
+    let node_b = LatencyHistogram::new();
+    let oracle = LatencyHistogram::new();
+    let mut rng = Pcg64::seeded(77);
+    for i in 0..2_000u64 {
+        let us = 1 + rng.below(1 << 14) * (1 + i % 3);
+        let d = Duration::from_micros(us);
+        oracle.record(d);
+        if i % 2 == 0 {
+            node_a.record(d);
+        } else {
+            node_b.record(d);
+        }
+    }
+
+    let merged = LatencyHistogram::new();
+    merged.merge(&node_a);
+    // Node B arrives the way the router sees it: serialized buckets.
+    assert!(merged.merge_value(&node_b.to_json()), "wire form must merge");
+
+    assert_eq!(merged.count(), oracle.count());
+    assert_eq!(merged.bucket_counts(), oracle.bucket_counts());
+    assert_eq!(merged.sum_us(), oracle.sum_us());
+    for q in [0.5, 0.95, 0.99] {
+        assert_eq!(
+            merged.quantile(q),
+            oracle.quantile(q),
+            "q{q}: merged quantile drifted off the single-node oracle"
+        );
+    }
+
+    // Malformed wire docs are refused without corrupting the histogram.
+    let before = merged.bucket_counts();
+    assert!(!merged.merge_value(&Value::Null));
+    assert!(!merged.merge_value(&Value::object(vec![("buckets", Value::from(3u64))])));
+    assert_eq!(merged.bucket_counts(), before);
+}
+
+/// Minimal Prometheus 0.0.4 text-format grammar check: every sample line
+/// is `name[{labels}] value`, every family is TYPE'd exactly once before
+/// its first sample, and histogram suffixes resolve to their family.
+fn assert_prometheus_grammar(text: &str) -> HashMap<String, String> {
+    let mut typed: HashMap<String, String> = HashMap::new();
+    for line in text.lines() {
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut parts = rest.split_whitespace();
+            let family = parts.next().expect("TYPE names a family");
+            let kind = parts.next().expect("TYPE names a kind");
+            assert!(
+                matches!(kind, "counter" | "gauge" | "histogram" | "summary" | "untyped"),
+                "bad TYPE kind: {line}"
+            );
+            assert!(
+                typed.insert(family.to_string(), kind.to_string()).is_none(),
+                "duplicate TYPE for {family}"
+            );
+            continue;
+        }
+        if line.starts_with('#') {
+            continue;
+        }
+        let (series, value) = line.rsplit_once(' ').unwrap_or_else(|| {
+            panic!("sample line without a value: {line:?}")
+        });
+        assert!(value.parse::<f64>().is_ok(), "unparseable value: {line:?}");
+        let name = match series.find('{') {
+            Some(i) => {
+                assert!(series.ends_with('}'), "unclosed label set: {line:?}");
+                &series[..i]
+            }
+            None => series,
+        };
+        assert!(
+            !name.is_empty()
+                && !name.starts_with(|c: char| c.is_ascii_digit())
+                && name
+                    .chars()
+                    .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':'),
+            "bad metric name: {line:?}"
+        );
+        let family = name
+            .strip_suffix("_bucket")
+            .or_else(|| name.strip_suffix("_sum"))
+            .or_else(|| name.strip_suffix("_count"))
+            .filter(|f| typed.contains_key(*f))
+            .unwrap_or(name);
+        assert!(typed.contains_key(family), "sample without TYPE: {line:?}");
+    }
+    assert!(!typed.is_empty(), "exposition must carry at least one family");
+    typed
+}
+
+#[test]
+fn prometheus_scrape_over_the_wire_parses_and_names_known_families() {
+    // Boot a real worker, serve a workload, scrape `stats` in Prometheus
+    // format over TCP like the CI smoke does, and hold the output to the
+    // text-format grammar plus the families DESIGN.md §18 promises.
+    let mut cfg = native_config();
+    cfg.slow_query_ms = Some(0);
+    let coord = Coordinator::start(cfg).expect("coordinator");
+    let server = Server::start(coord, "127.0.0.1", 0).expect("server");
+    let mut client = Client::connect(server.local_addr()).expect("connect");
+
+    let mix = by_dim(1);
+    let mut rng = Pcg64::seeded(3);
+    client
+        .fit("pm", mix.sample(64, &mut rng), &FitSpec::new(EstimatorKind::Kde, 1))
+        .expect("fit");
+    client.eval("pm", 1, mix.sample(8, &mut rng)).expect("eval");
+
+    let text = client.stats_prometheus().expect("prometheus scrape");
+    let typed = assert_prometheus_grammar(&text);
+    assert_eq!(
+        typed.get("flash_sdkde_e2e_latency_seconds").map(String::as_str),
+        Some("histogram"),
+        "families seen: {:?}",
+        typed.keys().collect::<Vec<_>>()
+    );
+    assert!(
+        typed.contains_key("flash_sdkde_stage_seconds"),
+        "per-stage span family missing"
+    );
+    assert!(text.contains("le=\"+Inf\""), "histograms need the +Inf bucket");
+
+    // The JSON scrape and the trace op still serve beside the text form,
+    // and the journal carries both the fit and the traced query.
+    let stats = client.stats().expect("json stats");
+    assert!(stats.get("spans").is_some());
+    let trace = client.trace().expect("trace op");
+    assert_eq!(events_of(&trace, "fit").len(), 1);
+    assert_eq!(events_of(&trace, "slow_query").len(), 1);
+}

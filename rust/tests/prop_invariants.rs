@@ -392,7 +392,9 @@ fn prop_protocol_request_round_trip() {
     // Every request variant — including Query in all three output modes —
     // must survive to_line -> parse exactly, and every emitted line must
     // carry the protocol version.
-    use flash_sdkde::coordinator::protocol::{Request, PROTOCOL_VERSION};
+    use flash_sdkde::coordinator::protocol::{
+        Request, StatsFormat, PROTOCOL_VERSION,
+    };
     use flash_sdkde::coordinator::{FitSpec, OutputMode, QuerySpec};
     use flash_sdkde::estimator::{EstimatorKind, Variant};
 
@@ -421,15 +423,29 @@ fn prop_protocol_request_round_trip() {
             0 => None,
             _ => Some(format!("tenant-{}", rng.below(5))),
         };
+        // Model-addressed frames may carry an additive trace ID
+        // (DESIGN.md §18): round-trips whenever present, absent
+        // otherwise — exactly like the stamps and the tenant.
+        let trace_id = match rng.below(3) {
+            0 => None,
+            _ => Some(1 + rng.below(1 << 50)),
+        };
         let req = match rng.below(8) {
             0 => Request::Ping,
             1 => Request::Models,
-            2 => Request::Stats,
+            2 => Request::Stats {
+                format: if rng.below(2) == 0 {
+                    StatsFormat::Json
+                } else {
+                    StatsFormat::Prometheus
+                },
+            },
             3 => Request::Delete {
                 model: format!("m{}", rng.below(100)),
                 tenant,
                 epoch,
                 digest,
+                trace_id,
             },
             4 | 5 => {
                 let kind = EstimatorKind::ALL[rng.below(3) as usize];
@@ -452,6 +468,7 @@ fn prop_protocol_request_round_trip() {
                     points: gen_points(rng, k * d),
                     epoch,
                     digest,
+                    trace_id,
                 }
             }
             6 => Request::SetEpoch {
@@ -477,6 +494,7 @@ fn prop_protocol_request_round_trip() {
                     spec,
                     epoch,
                     digest,
+                    trace_id,
                 }
             }
         };
@@ -528,6 +546,9 @@ fn prop_protocol_response_round_trip() {
                         queue_ms: rng.uniform() * 10.0,
                         exec_ms: rng.uniform() * 10.0,
                         batch_size: 1 + rng.below(32) as usize,
+                        // 0 is the "untraced" sentinel and stays off the
+                        // wire; nonzero IDs round-trip (DESIGN.md §18).
+                        trace_id: rng.below(2) * (1 + rng.below(1 << 50)),
                     },
                 }
             }
